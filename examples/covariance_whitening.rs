@@ -1,0 +1,125 @@
+//! ML-pipeline workload: precision-matrix computation and Mahalanobis
+//! scoring over a feature covariance.
+//!
+//! Draw samples from a correlated Gaussian-ish model, estimate the feature
+//! covariance Σ, invert it **distributedly with SPIN** to get the precision
+//! matrix P = Σ⁻¹, then use P for Mahalanobis distances — inliers drawn
+//! from the model must score lower than planted outliers, and the
+//! P-whitened covariance must be ≈ identity (`Σ·P ≈ I` checked too).
+//!
+//! Run: `cargo run --release --example covariance_whitening`
+
+use spin::algos::spin_inverse;
+use spin::blockmatrix::BlockMatrix;
+use spin::cluster::Cluster;
+use spin::config::{ClusterConfig, JobConfig};
+use spin::linalg::{inverse_residual, matmul, Matrix};
+use spin::runtime::NativeBackend;
+use spin::util::Rng;
+
+fn mahalanobis2(p: &Matrix, x: &[f64], mu: &[f64]) -> f64 {
+    let d = x.len();
+    let diff = Matrix::from_fn(d, 1, |i, _| x[i] - mu[i]);
+    matmul(&matmul(&diff.transpose(), p), &diff).get(0, 0)
+}
+
+fn main() -> spin::Result<()> {
+    spin::util::logger::init();
+    let dim = 256usize; // features (power of two for the block recursion)
+    let samples = 2048usize;
+    let block = 32usize;
+    let mut rng = Rng::new(0xC01);
+
+    // --- correlated data: x = A·z with a banded mixing matrix.
+    let mixing = Matrix::from_fn(dim, dim, |i, j| {
+        if i == j {
+            1.0
+        } else if i.abs_diff(j) <= 3 {
+            0.35 / (1 + i.abs_diff(j)) as f64
+        } else {
+            0.0
+        }
+    });
+    let mut data = Matrix::zeros(samples, dim);
+    for s in 0..samples {
+        let z = Matrix::from_fn(dim, 1, |_, _| rng.normal());
+        let x = matmul(&mixing, &z);
+        for f in 0..dim {
+            data.set(s, f, x.get(f, 0));
+        }
+    }
+
+    // --- empirical covariance (+ small ridge to keep it comfortably SPD).
+    let mut mu = vec![0.0f64; dim];
+    for f in 0..dim {
+        for s in 0..samples {
+            mu[f] += data.get(s, f);
+        }
+        mu[f] /= samples as f64;
+    }
+    let mut sigma = Matrix::zeros(dim, dim);
+    for s in 0..samples {
+        for i in 0..dim {
+            let di = data.get(s, i) - mu[i];
+            for j in i..dim {
+                let dj = data.get(s, j) - mu[j];
+                sigma.add_assign_at(i, j, di * dj);
+            }
+        }
+    }
+    for i in 0..dim {
+        for j in i..dim {
+            let v = sigma.get(i, j) / (samples - 1) as f64;
+            sigma.set(i, j, v);
+            sigma.set(j, i, v);
+        }
+        sigma.add_assign_at(i, i, 1e-3);
+    }
+
+    // --- distributed inversion: P = Σ⁻¹ via SPIN.
+    let cluster = Cluster::new(ClusterConfig::paper());
+    let job = JobConfig::new(dim, block);
+    let sigma_b = BlockMatrix::from_dense(&sigma, block)?;
+    let p_b = spin_inverse(&cluster, &NativeBackend, &sigma_b, &job)?;
+    let p = p_b.to_dense()?;
+    let resid = inverse_residual(&sigma, &p);
+    println!(
+        "Σ ({dim}x{dim}, b = {}) inverted with SPIN: residual {resid:.3e}, virtual {:.1} ms",
+        job.num_splits(),
+        cluster.virtual_secs() * 1e3
+    );
+    assert!(resid < 1e-8);
+
+    // --- whitening sanity: Σ·P ≈ I.
+    let eye_err = matmul(&sigma, &p).max_abs_diff(&Matrix::identity(dim));
+    println!("‖Σ·P − I‖∞ = {eye_err:.3e}");
+    assert!(eye_err < 1e-6);
+
+    // --- Mahalanobis outlier scoring.
+    let inlier_scores: Vec<f64> = (0..16)
+        .map(|s| {
+            let x: Vec<f64> = (0..dim).map(|f| data.get(s, f)).collect();
+            mahalanobis2(&p, &x, &mu)
+        })
+        .collect();
+    let outlier_scores: Vec<f64> = (0..16)
+        .map(|i| {
+            // planted outlier: shift 8 features by 6σ-ish.
+            let s = i * 7 % samples;
+            let mut x: Vec<f64> = (0..dim).map(|f| data.get(s, f)).collect();
+            for f in 0..8 {
+                x[(f * 31 + i) % dim] += 6.0;
+            }
+            mahalanobis2(&p, &x, &mu)
+        })
+        .collect();
+    let in_mean = inlier_scores.iter().sum::<f64>() / inlier_scores.len() as f64;
+    let out_mean = outlier_scores.iter().sum::<f64>() / outlier_scores.len() as f64;
+    println!("mean Mahalanobis²: inliers {in_mean:.1}, planted outliers {out_mean:.1}");
+    assert!(
+        out_mean > 2.0 * in_mean,
+        "outliers should score far above inliers"
+    );
+    println!("covariance_whitening OK");
+    Ok(())
+}

@@ -1,0 +1,149 @@
+"""AOT compile path: lower every L2 op at every block size to HLO text.
+
+Runs ONCE at build time (``make artifacts``); the Rust coordinator loads the
+results through PJRT and Python never appears on the request path again.
+
+Interchange format is HLO **text**, not a serialized ``HloModuleProto``:
+jax ≥ 0.5 emits protos with 64-bit instruction ids which the ``xla`` crate's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids and round-trips cleanly.
+
+Outputs::
+
+    artifacts/<op>_b<block_size>.hlo.txt   one XLA program per (op, size)
+    artifacts/manifest.json                index the Rust runtime loads
+
+Usage::
+
+    python -m compile.aot --out ../artifacts [--block-sizes 16,32,64]
+                          [--ops matmul,leaf_inverse] [--check]
+"""
+
+import argparse
+import json
+import os
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+
+jax.config.update("jax_enable_x64", True)
+
+from jax._src.lib import xla_client as xc
+
+from compile import model
+
+DEFAULT_BLOCK_SIZES = (16, 32, 64, 128, 256)
+DTYPE = "float64"
+
+MANIFEST_VERSION = 2
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (see module docstring)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_op(op_name: str, block_size: int) -> str:
+    fn, n_blocks, n_scalars = model.OPS[op_name]
+    dtype = jnp.dtype(DTYPE)
+    block = jax.ShapeDtypeStruct((block_size, block_size), dtype)
+    scalar = jax.ShapeDtypeStruct((), dtype)
+    specs = [block] * n_blocks + [scalar] * n_scalars
+    lowered = jax.jit(fn).lower(*specs)
+    return to_hlo_text(lowered)
+
+
+def n_outputs(op_name: str) -> int:
+    return {"strassen_2x2": 4, "lu_factor": 2}.get(op_name, 1)
+
+
+def build(out_dir: str, block_sizes, ops, check: bool = False) -> dict:
+    os.makedirs(out_dir, exist_ok=True)
+    entries = []
+    for op_name in ops:
+        fn, n_blocks, n_scalars = model.OPS[op_name]
+        for bs in block_sizes:
+            t0 = time.time()
+            hlo = lower_op(op_name, bs)
+            fname = f"{op_name}_b{bs}.hlo.txt"
+            path = os.path.join(out_dir, fname)
+            with open(path, "w") as f:
+                f.write(hlo)
+            if check:
+                _check_artifact(hlo, op_name, bs)
+            entries.append(
+                {
+                    "op": op_name,
+                    "block_size": bs,
+                    "file": fname,
+                    "num_block_inputs": n_blocks,
+                    "num_scalar_inputs": n_scalars,
+                    "num_outputs": n_outputs(op_name),
+                    "dtype": DTYPE,
+                }
+            )
+            print(
+                f"  lowered {op_name:>16} b={bs:<4} "
+                f"({len(hlo) / 1024:.0f} KiB, {time.time() - t0:.2f}s)",
+                file=sys.stderr,
+            )
+    manifest = {
+        "version": MANIFEST_VERSION,
+        "dtype": DTYPE,
+        "block_sizes": list(block_sizes),
+        "entries": entries,
+    }
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    return manifest
+
+
+def _check_artifact(hlo: str, op_name: str, bs: int) -> None:
+    """Sanity constraints every artifact must satisfy for the CPU PJRT path."""
+    if "ENTRY" not in hlo:
+        raise RuntimeError(f"{op_name} b={bs}: HLO text has no ENTRY computation")
+    if "custom-call" in hlo:
+        # interpret=True must have lowered Pallas to plain HLO; a Mosaic
+        # custom-call would be unloadable on the CPU client.
+        raise RuntimeError(f"{op_name} b={bs}: unexpected custom-call in HLO")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="output directory")
+    ap.add_argument(
+        "--block-sizes",
+        default=",".join(str(b) for b in DEFAULT_BLOCK_SIZES),
+        help="comma-separated block sizes to lower",
+    )
+    ap.add_argument(
+        "--ops",
+        default=",".join(model.OPS),
+        help="comma-separated op subset (default: all)",
+    )
+    ap.add_argument("--check", action="store_true", help="validate artifacts")
+    args = ap.parse_args()
+
+    block_sizes = [int(b) for b in args.block_sizes.split(",") if b]
+    ops = [o for o in args.ops.split(",") if o]
+    unknown = [o for o in ops if o not in model.OPS]
+    if unknown:
+        ap.error(f"unknown ops: {unknown}; available: {list(model.OPS)}")
+
+    t0 = time.time()
+    manifest = build(args.out, block_sizes, ops, check=args.check)
+    print(
+        f"wrote {len(manifest['entries'])} artifacts + manifest.json "
+        f"to {args.out} in {time.time() - t0:.1f}s",
+        file=sys.stderr,
+    )
+
+
+if __name__ == "__main__":
+    main()

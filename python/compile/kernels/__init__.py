@@ -1,0 +1,27 @@
+"""Layer-1 Pallas kernels for SPIN's block algebra.
+
+Every kernel here is the TPU-shaped rethink of what the paper delegated to
+JBlas on a Spark executor: one Spark block-task = one Pallas grid program.
+Kernels are lowered with ``interpret=True`` (CPU PJRT cannot execute Mosaic
+custom-calls); correctness is asserted against the pure-jnp oracles in
+:mod:`ref` by the pytest suite.
+"""
+
+from compile.kernels.matmul import matmul, matmul_acc, neg_matmul_sub
+from compile.kernels.gauss_jordan import gauss_jordan_inverse
+from compile.kernels.elementwise import subtract, scale, axpy, negate
+from compile.kernels.triangular import lu_factor, invert_lower, invert_upper
+
+__all__ = [
+    "matmul",
+    "matmul_acc",
+    "neg_matmul_sub",
+    "gauss_jordan_inverse",
+    "subtract",
+    "scale",
+    "axpy",
+    "negate",
+    "lu_factor",
+    "invert_lower",
+    "invert_upper",
+]

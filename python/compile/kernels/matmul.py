@@ -1,0 +1,109 @@
+"""Tiled Pallas matmul kernels — the paper's ``multiply`` hot-spot.
+
+The paper's distributed ``multiply`` co-groups blocks onto an executor and
+calls JBlas DGEMM per block pair.  Here the per-block GEMM is a Pallas grid
+program: the grid iterates ``(mi, ni, ki)`` with ``ki`` innermost so the
+output tile stays resident in VMEM and is revisited across the contraction —
+the TPU analogue of a threadblock accumulating in shared memory/registers.
+
+VMEM budget per grid step (f64): ``(tm*tk + tk*tn + tm*tn) * 8`` bytes; the
+default 128³ tiles use 384 KiB, far under the ~16 MiB/core VMEM, leaving
+headroom for double-buffered HBM→VMEM prefetch on real hardware.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+jax.config.update("jax_enable_x64", True)
+
+# Default tile edge.  MXU-friendly (multiple of 8x128 lanes for f32; f64 is
+# emulated on TPU, see DESIGN.md §Hardware-Adaptation) and small enough that
+# three tiles + accumulator fit comfortably in VMEM.
+DEFAULT_TILE = 128
+
+
+def _pick_tile(dim: int, tile: int) -> int:
+    """Largest divisor of ``dim`` that is <= ``tile`` (block sizes are powers
+    of two throughout SPIN, so this normally returns ``min(dim, tile)``)."""
+    t = min(dim, tile)
+    while dim % t != 0:
+        t -= 1
+    return t
+
+
+def _matmul_kernel(x_ref, y_ref, o_ref):
+    """o[mi,ni] += x[mi,ki] @ y[ki,ni]; init on the first k step."""
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(x_ref[...], y_ref[...], precision="highest")
+
+
+def _matmul_acc_kernel(x_ref, y_ref, d_ref, o_ref):
+    """o = d + x @ y (fused epilogue add; d is loaded on the first k step)."""
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        o_ref[...] = d_ref[...]
+
+    o_ref[...] += jnp.dot(x_ref[...], y_ref[...], precision="highest")
+
+
+def _neg_matmul_sub_kernel(x_ref, y_ref, d_ref, o_ref):
+    """o = x @ y - d — SPIN's Schur-complement step ``V = IV - A22`` fused
+    with the producing multiplication ``IV = A21 . III``."""
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        o_ref[...] = -d_ref[...]
+
+    o_ref[...] += jnp.dot(x_ref[...], y_ref[...], precision="highest")
+
+
+def _grid_call(kernel, n_in, x, y, *rest, tile):
+    m, k = x.shape
+    k2, n = y.shape
+    if k != k2:
+        raise ValueError(f"matmul shape mismatch: {x.shape} @ {y.shape}")
+    tm, tk, tn = _pick_tile(m, tile), _pick_tile(k, tile), _pick_tile(n, tile)
+    grid = (m // tm, n // tn, k // tk)
+    in_specs = [
+        pl.BlockSpec((tm, tk), lambda mi, ni, ki: (mi, ki)),
+        pl.BlockSpec((tk, tn), lambda mi, ni, ki: (ki, ni)),
+    ]
+    # Trailing operands (the fused addend) are tiled like the output.
+    in_specs += [pl.BlockSpec((tm, tn), lambda mi, ni, ki: (mi, ni))] * (n_in - 2)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((tm, tn), lambda mi, ni, ki: (mi, ni)),
+        out_shape=jax.ShapeDtypeStruct((m, n), x.dtype),
+        interpret=True,
+    )(x, y, *rest)
+
+
+@functools.partial(jax.jit, static_argnames=("tile",))
+def matmul(x, y, *, tile: int = DEFAULT_TILE):
+    """C = X @ Y via the tiled Pallas kernel."""
+    return _grid_call(_matmul_kernel, 2, x, y, tile=tile)
+
+
+@functools.partial(jax.jit, static_argnames=("tile",))
+def matmul_acc(x, y, d, *, tile: int = DEFAULT_TILE):
+    """C = D + X @ Y (fused multiply-accumulate over whole blocks)."""
+    return _grid_call(_matmul_acc_kernel, 3, x, y, d, tile=tile)
+
+
+@functools.partial(jax.jit, static_argnames=("tile",))
+def neg_matmul_sub(x, y, d, *, tile: int = DEFAULT_TILE):
+    """C = X @ Y - D (SPIN step V = IV - A22 with IV fused in)."""
+    return _grid_call(_neg_matmul_sub_kernel, 3, x, y, d, tile=tile)

@@ -1,0 +1,87 @@
+"""Pure-jnp oracles for the Pallas kernels — the correctness ground truth.
+
+Each function mirrors one kernel in this package with straight-line jnp so
+pytest can ``assert_allclose`` kernel-vs-oracle over shape/dtype sweeps.
+"""
+
+import jax
+import jax.numpy as jnp
+
+jax.config.update("jax_enable_x64", True)
+
+
+def matmul(x, y):
+    return jnp.matmul(x, y, precision="highest")
+
+
+def matmul_acc(x, y, d):
+    return d + jnp.matmul(x, y, precision="highest")
+
+
+def neg_matmul_sub(x, y, d):
+    return jnp.matmul(x, y, precision="highest") - d
+
+
+def gauss_jordan_inverse(a):
+    return jnp.linalg.inv(a)
+
+
+def subtract(x, y):
+    return x - y
+
+
+def scale(x, s):
+    return x * jnp.asarray(s, dtype=x.dtype)
+
+
+def axpy(x, y, s):
+    return x * jnp.asarray(s, dtype=x.dtype) + y
+
+
+def negate(x):
+    return -x
+
+
+def lu_factor(a):
+    """Pivot-free LU reference: plain-Python Doolittle elimination."""
+    n = a.shape[0]
+    lu = a
+    for k in range(n):
+        pivot = lu[k, k]
+        rows = jnp.arange(n)
+        factors = jnp.where(rows > k, lu[:, k] / pivot, 0.0)
+        u_row = jnp.where(jnp.arange(n) >= k, lu[k, :], 0.0)
+        eliminated = lu - factors[:, None] * u_row[None, :]
+        col_k = jnp.where(rows > k, factors, lu[:, k])
+        lu = jnp.where((jnp.arange(n) == k)[None, :], col_k[:, None], eliminated)
+    l = jnp.tril(lu, -1) + jnp.eye(n, dtype=a.dtype)
+    u = jnp.triu(lu)
+    return l, u
+
+
+def invert_lower(a):
+    return jnp.linalg.inv(a)
+
+
+def invert_upper(a):
+    return jnp.linalg.inv(a)
+
+
+def strassen_2x2_inverse(a11, a12, a21, a22):
+    """One full Strassen inversion step over four leaf blocks (Algorithm 1).
+
+    Reference for the fused L2 op: given the 2x2 block partition of A,
+    return (C11, C12, C21, C22) of A⁻¹.
+    """
+    i = jnp.linalg.inv(a11)                       # I    = A11⁻¹
+    ii = matmul(a21, i)                           # II   = A21·I
+    iii = matmul(i, a12)                          # III  = I·A12
+    iv = matmul(a21, iii)                         # IV   = A21·III
+    v = iv - a22                                  # V    = IV − A22
+    vi = jnp.linalg.inv(v)                        # VI   = V⁻¹
+    c12 = matmul(iii, vi)                         # C12  = III·VI
+    c21 = matmul(vi, ii)                          # C21  = VI·II
+    vii = matmul(iii, c21)                        # VII  = III·C21
+    c11 = i - vii                                 # C11  = I − VII
+    c22 = -vi                                     # C22  = −VI
+    return c11, c12, c21, c22

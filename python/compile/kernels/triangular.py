@@ -1,0 +1,104 @@
+"""Leaf kernels for the LU baseline (Liu et al. 2016): pivot-free LU
+factorization and triangular inversion, as Pallas programs.
+
+The block-recursive LU baseline cannot pivot across blocks, so its leaf
+factorization is pivot-free (the workload generators guarantee nonsingular
+principal minors).  Triangular inversion reuses the Gauss-Jordan elimination
+structure without pivoting — for a triangular input the eliminations only
+touch one side, so the inverse stays triangular in exact arithmetic.
+
+These exist so the *baseline* pays the same PJRT execution path as SPIN in
+the XLA backend — without them the comparison would hand LU free native
+leaves (see DESIGN.md §3).
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+jax.config.update("jax_enable_x64", True)
+
+
+def _lu_body(k, lu):
+    """One elimination step of pivot-free LU, keeping multipliers in the
+    strictly-lower part (packed LU form)."""
+    n = lu.shape[0]
+    rows = jax.lax.iota(jnp.int32, n)
+    cols = jax.lax.iota(jnp.int32, n)
+    pivot = lu[k, k]
+    factors = jnp.where(rows > k, lu[:, k] / pivot, 0.0)
+    u_row = jnp.where(cols >= k, lu[k, :], 0.0)
+    eliminated = lu - factors[:, None] * u_row[None, :]
+    # Restore the multipliers into column k (the update zeroed them).
+    col_k = jnp.where(rows > k, factors, lu[:, k])
+    return jnp.where((cols == k)[None, :], col_k[:, None], eliminated)
+
+
+def _lu_factor_kernel(a_ref, l_ref, u_ref):
+    a = a_ref[...]
+    n = a.shape[0]
+    lu = jax.lax.fori_loop(0, n, _lu_body, a)
+    rows = jax.lax.iota(jnp.int32, n)[:, None]
+    cols = jax.lax.iota(jnp.int32, n)[None, :]
+    eye = jnp.eye(n, dtype=a.dtype)
+    l_ref[...] = jnp.where(rows > cols, lu, 0.0) + eye
+    u_ref[...] = jnp.where(rows <= cols, lu, 0.0)
+
+
+@jax.jit
+def lu_factor(a):
+    """Pivot-free LU: A = L·U with L unit-lower, U upper. Returns (L, U)."""
+    n, n2 = a.shape
+    if n != n2:
+        raise ValueError(f"lu_factor needs a square block, got {a.shape}")
+    return pl.pallas_call(
+        _lu_factor_kernel,
+        out_shape=(
+            jax.ShapeDtypeStruct((n, n), a.dtype),
+            jax.ShapeDtypeStruct((n, n), a.dtype),
+        ),
+        interpret=True,
+    )(a)
+
+
+def _gj_nopivot_body(k, aug):
+    """Gauss-Jordan elimination step without row exchange (valid whenever
+    every leading pivot is nonzero — e.g. triangular inputs)."""
+    n = aug.shape[0]
+    rows = jax.lax.iota(jnp.int32, n)
+    pivot = aug[k, k]
+    norm_row = aug[k, :] / pivot
+    factors = jnp.where(rows == k, 0.0, aug[:, k])
+    aug = aug - factors[:, None] * norm_row[None, :]
+    return jnp.where((rows == k)[:, None], norm_row[None, :], aug)
+
+
+def _tri_inverse_kernel(a_ref, o_ref):
+    a = a_ref[...]
+    n = a.shape[0]
+    aug = jnp.concatenate([a, jnp.eye(n, dtype=a.dtype)], axis=1)
+    aug = jax.lax.fori_loop(0, n, _gj_nopivot_body, aug)
+    o_ref[...] = aug[:, n:]
+
+
+def _tri_inverse(a):
+    n, n2 = a.shape
+    if n != n2:
+        raise ValueError(f"triangular inverse needs a square block, got {a.shape}")
+    return pl.pallas_call(
+        _tri_inverse_kernel,
+        out_shape=jax.ShapeDtypeStruct((n, n), a.dtype),
+        interpret=True,
+    )(a)
+
+
+@jax.jit
+def invert_lower(a):
+    """L⁻¹ for a lower-triangular block (nonzero diagonal)."""
+    return _tri_inverse(a)
+
+
+@jax.jit
+def invert_upper(a):
+    """U⁻¹ for an upper-triangular block (nonzero diagonal)."""
+    return _tri_inverse(a)

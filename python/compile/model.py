@@ -1,0 +1,121 @@
+"""Layer-2 JAX model: SPIN's block-algebra ops, composed from the L1 kernels.
+
+These are the functions the Rust coordinator executes through PJRT — one HLO
+executable per (op, block_size), lowered once by :mod:`compile.aot`.  The
+recursion itself (Algorithm 2) lives in Rust; this layer is the complete
+vocabulary of block-level compute the recursion needs:
+
+==================  =========================================  =============
+op                  computes                                   SPIN step
+==================  =========================================  =============
+``leaf_inverse``    A⁻¹ (Pallas Gauss-Jordan)                  leaf node
+``matmul``          X·Y                                        II, III, IV,
+                                                               C12, C21, VII
+``matmul_acc``      D + X·Y                                    block-matmul
+                                                               reduce step
+``neg_matmul_sub``  X·Y − D                                    V = IV − A22
+``subtract``        X − Y                                      C11 = I − VII
+``scale``           s·X                                        C22 = −VI
+``negate``          −X                                         C22 = −VI
+``axpy``            s·X + Y                                    utility
+``strassen_2x2``    full Algorithm-1 step over 4 blocks        fused leaf
+                                                               pair (n/bs=2)
+==================  =========================================  =============
+
+``strassen_2x2`` is the fusion opportunity the paper leaves on the table:
+when the recursion reaches a 2×2 block grid, the entire level — two leaf
+inversions, six multiplies, two subtractions, one negation — lowers into a
+single XLA program, eliminating seven scheduler round-trips.
+"""
+
+import jax
+import jax.numpy as jnp
+
+jax.config.update("jax_enable_x64", True)
+
+from compile import kernels
+from compile.kernels import gauss_jordan
+
+
+def leaf_inverse(a):
+    """Invert one leaf block on a single worker (paper's ``if`` branch)."""
+    return kernels.gauss_jordan_inverse(a)
+
+
+def matmul(x, y):
+    return kernels.matmul(x, y)
+
+
+def matmul_acc(x, y, d):
+    return kernels.matmul_acc(x, y, d)
+
+
+def neg_matmul_sub(x, y, d):
+    return kernels.neg_matmul_sub(x, y, d)
+
+
+def subtract(x, y):
+    return kernels.subtract(x, y)
+
+
+def scale(x, s):
+    return kernels.scale(x, s)
+
+
+def axpy(x, y, s):
+    return kernels.axpy(x, y, s)
+
+
+def negate(x):
+    return kernels.negate(x)
+
+
+def lu_factor(a):
+    """Pivot-free leaf LU for the baseline: returns (L, U)."""
+    return kernels.lu_factor(a)
+
+
+def invert_lower(a):
+    """L⁻¹ for a lower-triangular leaf block (baseline leaf)."""
+    return kernels.invert_lower(a)
+
+
+def invert_upper(a):
+    """U⁻¹ for an upper-triangular leaf block (baseline leaf)."""
+    return kernels.invert_upper(a)
+
+
+def strassen_2x2(a11, a12, a21, a22):
+    """Fused Strassen inversion step over a 2×2 grid of leaf blocks.
+
+    Exactly Algorithm 1 with both sub-inversions at the leaf, built from the
+    L1 kernels so the whole level is one HLO module.
+    """
+    i = kernels.gauss_jordan_inverse(a11)          # I
+    ii = kernels.matmul(a21, i)                    # II
+    iii = kernels.matmul(i, a12)                   # III
+    v = kernels.neg_matmul_sub(a21, iii, a22)      # V = A21·III − A22
+    vi = kernels.gauss_jordan_inverse(v)           # VI
+    c12 = kernels.matmul(iii, vi)                  # C12
+    c21 = kernels.matmul(vi, ii)                   # C21
+    c11 = kernels.neg_matmul_sub(iii, c21, i)      # III·C21 − I = −C11
+    c11 = kernels.negate(c11)                      # C11 = I − VII
+    c22 = kernels.negate(vi)                       # C22
+    return c11, c12, c21, c22
+
+
+#: op name -> (callable, number of square-block args, number of scalar args)
+OPS = {
+    "leaf_inverse": (leaf_inverse, 1, 0),
+    "matmul": (matmul, 2, 0),
+    "matmul_acc": (matmul_acc, 3, 0),
+    "neg_matmul_sub": (neg_matmul_sub, 3, 0),
+    "subtract": (subtract, 2, 0),
+    "scale": (scale, 1, 1),
+    "axpy": (axpy, 2, 1),
+    "negate": (negate, 1, 0),
+    "strassen_2x2": (strassen_2x2, 4, 0),
+    "lu_factor": (lu_factor, 1, 0),
+    "invert_lower": (invert_lower, 1, 0),
+    "invert_upper": (invert_upper, 1, 0),
+}

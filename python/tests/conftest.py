@@ -1,0 +1,32 @@
+import os
+import sys
+
+import jax
+import numpy as np
+import pytest
+
+jax.config.update("jax_enable_x64", True)
+
+# Make `compile.*` importable when pytest is launched from python/ or repo root.
+_HERE = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+if _HERE not in sys.path:
+    sys.path.insert(0, _HERE)
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0xC0FFEE)
+
+
+def make_diag_dominant(rng, n, dtype=np.float64):
+    """Random strictly diagonally dominant matrix — always invertible and
+    Strassen-recursion safe (every principal minor is nonsingular)."""
+    a = rng.uniform(-1.0, 1.0, size=(n, n)).astype(dtype)
+    a += np.diag(np.sign(np.diag(a)) * (np.abs(a).sum(axis=1) + 1.0))
+    return a
+
+
+def make_spd(rng, n, dtype=np.float64):
+    """Random symmetric positive definite matrix (paper's stated scope)."""
+    b = rng.uniform(-1.0, 1.0, size=(n, n)).astype(dtype)
+    return b @ b.T + n * np.eye(n, dtype=dtype)

@@ -1,0 +1,67 @@
+"""AOT pipeline: artifacts lower, validate, and the manifest is complete."""
+
+import json
+import os
+
+import pytest
+
+from compile import aot, model
+
+
+@pytest.fixture(scope="module")
+def built(tmp_path_factory):
+    out = tmp_path_factory.mktemp("artifacts")
+    ops = ["matmul", "leaf_inverse", "subtract", "scale", "strassen_2x2"]
+    manifest = aot.build(str(out), block_sizes=[8, 16], ops=ops, check=True)
+    return out, manifest, ops
+
+
+class TestAot:
+    def test_manifest_entries(self, built):
+        out, manifest, ops = built
+        assert manifest["version"] == aot.MANIFEST_VERSION
+        assert manifest["dtype"] == "float64"
+        assert len(manifest["entries"]) == len(ops) * 2
+        for e in manifest["entries"]:
+            assert e["op"] in ops
+            assert e["block_size"] in (8, 16)
+            assert os.path.exists(os.path.join(out, e["file"]))
+
+    def test_manifest_file_round_trip(self, built):
+        out, manifest, _ = built
+        with open(os.path.join(out, "manifest.json")) as f:
+            assert json.load(f) == manifest
+
+    def test_hlo_text_is_parseable_shape(self, built):
+        out, manifest, _ = built
+        for e in manifest["entries"]:
+            text = open(os.path.join(out, e["file"])).read()
+            assert "HloModule" in text
+            assert "ENTRY" in text
+            # f64 programs: entry params must be f64
+            assert "f64[" in text
+
+    def test_no_mosaic_custom_calls(self, built):
+        """interpret=True must lower Pallas to plain HLO for the CPU client."""
+        out, manifest, _ = built
+        for e in manifest["entries"]:
+            text = open(os.path.join(out, e["file"])).read()
+            assert "custom-call" not in text, e["file"]
+
+    def test_output_arity(self, built):
+        _, manifest, _ = built
+        by_op = {e["op"]: e for e in manifest["entries"]}
+        assert by_op["strassen_2x2"]["num_outputs"] == 4
+        assert by_op["matmul"]["num_outputs"] == 1
+        assert by_op["scale"]["num_scalar_inputs"] == 1
+        assert by_op["strassen_2x2"]["num_block_inputs"] == 4
+
+    def test_lower_unknown_op_raises(self):
+        with pytest.raises(KeyError):
+            aot.lower_op("nonexistent", 8)
+
+    def test_check_rejects_custom_call(self):
+        with pytest.raises(RuntimeError):
+            aot._check_artifact("ENTRY main { custom-call }", "x", 8)
+        with pytest.raises(RuntimeError):
+            aot._check_artifact("no entry here", "x", 8)

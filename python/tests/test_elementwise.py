@@ -1,0 +1,85 @@
+"""L1 elementwise kernels (subtract / scalarMul / axpy / negate) vs oracle."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+from numpy.testing import assert_allclose
+
+from compile import kernels
+from compile.kernels import ref
+
+DIMS = st.sampled_from([1, 2, 7, 16, 33, 64, 128, 256, 300])
+
+
+def _rand(rng, *shape, dtype=np.float64):
+    return rng.uniform(-10.0, 10.0, size=shape).astype(dtype)
+
+
+class TestElementwise:
+    @pytest.mark.parametrize("shape", [(1, 1), (16, 16), (64, 128), (256, 256), (5, 300)])
+    def test_subtract(self, rng, shape):
+        x, y = _rand(rng, *shape), _rand(rng, *shape)
+        assert_allclose(kernels.subtract(x, y), ref.subtract(x, y))
+
+    @pytest.mark.parametrize("s", [-1.0, 0.0, 0.5, 3.25])
+    def test_scale(self, rng, s):
+        x = _rand(rng, 64, 64)
+        assert_allclose(kernels.scale(x, s), ref.scale(x, s))
+
+    def test_scale_minus_one_is_negate(self, rng):
+        """C22 = −VI is computed as scalarMul(VI, −1) in the paper."""
+        x = _rand(rng, 32, 32)
+        assert_allclose(kernels.scale(x, -1.0), kernels.negate(x))
+
+    @pytest.mark.parametrize("s", [-2.0, 1.0, 0.125])
+    def test_axpy(self, rng, s):
+        x, y = _rand(rng, 48, 48), _rand(rng, 48, 48)
+        assert_allclose(kernels.axpy(x, y, s), ref.axpy(x, y, s))
+
+    def test_negate(self, rng):
+        x = _rand(rng, 128, 128)
+        assert_allclose(kernels.negate(x), -x)
+
+    @pytest.mark.parametrize("dtype", [np.float32, np.float64])
+    def test_dtypes(self, rng, dtype):
+        x, y = _rand(rng, 32, 32, dtype=dtype), _rand(rng, 32, 32, dtype=dtype)
+        assert kernels.subtract(x, y).dtype == dtype
+        assert kernels.scale(x, 2.0).dtype == dtype
+        assert kernels.negate(x).dtype == dtype
+
+    def test_subtract_shape_mismatch_raises(self, rng):
+        with pytest.raises(ValueError):
+            kernels.subtract(_rand(rng, 4, 4), _rand(rng, 8, 8))
+
+    @pytest.mark.parametrize("tile", [8, 64, 256, 1024])
+    def test_tile_invariance(self, rng, tile):
+        x, y = _rand(rng, 128, 128), _rand(rng, 128, 128)
+        assert_allclose(kernels.subtract(x, y, tile=tile), x - y)
+        assert_allclose(kernels.scale(x, 2.5, tile=tile), x * 2.5)
+
+    @settings(max_examples=25, deadline=None)
+    @given(
+        m=DIMS,
+        n=DIMS,
+        s=st.floats(-1e3, 1e3, allow_nan=False),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_hypothesis_algebra(self, m, n, s, seed):
+        r = np.random.default_rng(seed)
+        x, y = _rand(r, m, n), _rand(r, m, n)
+        # subtract(x, x) = 0
+        assert_allclose(kernels.subtract(x, x), np.zeros_like(x))
+        # scale distributes over subtract
+        assert_allclose(
+            kernels.scale(kernels.subtract(x, y), s),
+            kernels.subtract(kernels.scale(x, s), kernels.scale(y, s)),
+            rtol=1e-12,
+            atol=1e-9,
+        )
+        # axpy(x, y, s) = scale(x, s) + y
+        assert_allclose(
+            kernels.axpy(x, y, s),
+            np.asarray(kernels.scale(x, s)) + y,
+            rtol=1e-12,
+            atol=1e-9,
+        )

@@ -1,0 +1,102 @@
+"""L1 Gauss-Jordan leaf-inversion kernel vs jnp.linalg.inv."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+from numpy.testing import assert_allclose
+
+from compile import kernels
+from compile.kernels import ref
+from tests.conftest import make_diag_dominant, make_spd
+
+
+class TestGaussJordan:
+    @pytest.mark.parametrize("n", [1, 2, 3, 4, 8, 16, 32, 64, 128])
+    def test_diag_dominant(self, rng, n):
+        a = make_diag_dominant(rng, n)
+        assert_allclose(
+            kernels.gauss_jordan_inverse(a),
+            ref.gauss_jordan_inverse(a),
+            rtol=1e-9,
+            atol=1e-11,
+        )
+
+    @pytest.mark.parametrize("n", [4, 16, 64])
+    def test_spd(self, rng, n):
+        a = make_spd(rng, n)
+        inv = np.asarray(kernels.gauss_jordan_inverse(a))
+        assert_allclose(inv @ a, np.eye(n), atol=1e-8)
+
+    def test_residual_is_tight(self, rng):
+        """‖A·A⁻¹ − I‖∞ small relative to cond — the acceptance criterion the
+        Rust integration tests reuse."""
+        n = 64
+        a = make_diag_dominant(rng, n)
+        inv = np.asarray(kernels.gauss_jordan_inverse(a))
+        resid = np.abs(a @ inv - np.eye(n)).max()
+        assert resid < 1e-10
+
+    def test_identity(self):
+        assert_allclose(kernels.gauss_jordan_inverse(np.eye(16)), np.eye(16), atol=1e-14)
+
+    def test_diagonal(self):
+        d = np.diag(np.arange(1.0, 17.0))
+        assert_allclose(
+            kernels.gauss_jordan_inverse(d), np.diag(1.0 / np.arange(1.0, 17.0)), atol=1e-14
+        )
+
+    def test_needs_pivoting(self):
+        """Zero leading pivot: fails without row exchanges, so this proves the
+        in-kernel partial pivoting actually engages."""
+        a = np.array(
+            [
+                [0.0, 1.0, 2.0],
+                [1.0, 0.0, 3.0],
+                [4.0, 5.0, 0.0],
+            ]
+        )
+        assert_allclose(
+            kernels.gauss_jordan_inverse(a), np.linalg.inv(a), rtol=1e-10, atol=1e-12
+        )
+
+    def test_permutation_matrix(self):
+        p = np.eye(8)[::-1].copy()  # anti-diagonal permutation, all pivots off-diagonal
+        assert_allclose(kernels.gauss_jordan_inverse(p), np.linalg.inv(p), atol=1e-12)
+
+    def test_ill_conditioned_hilbert(self):
+        """Small Hilbert matrix — loose tolerance scaled by condition number."""
+        n = 6
+        h = np.array([[1.0 / (i + j + 1) for j in range(n)] for i in range(n)])
+        inv = np.asarray(kernels.gauss_jordan_inverse(h))
+        # cond(H_6) ~ 1.5e7; expect ~cond * eps accuracy.
+        assert_allclose(inv @ h, np.eye(n), atol=1e-6)
+
+    @pytest.mark.parametrize("dtype", [np.float32, np.float64])
+    def test_dtypes(self, rng, dtype):
+        a = make_diag_dominant(rng, 32).astype(dtype)
+        out = kernels.gauss_jordan_inverse(a)
+        assert out.dtype == dtype
+        atol = 1e-4 if dtype == np.float32 else 1e-11
+        assert_allclose(np.asarray(out) @ a, np.eye(32, dtype=dtype), atol=atol)
+
+    def test_non_square_raises(self, rng):
+        with pytest.raises(ValueError):
+            kernels.gauss_jordan_inverse(rng.uniform(size=(4, 8)))
+
+    @settings(max_examples=20, deadline=None)
+    @given(n=st.sampled_from([2, 3, 5, 8, 17, 33, 64]), seed=st.integers(0, 2**31 - 1))
+    def test_hypothesis_inverse_roundtrip(self, n, seed):
+        r = np.random.default_rng(seed)
+        a = make_diag_dominant(r, n)
+        inv = np.asarray(kernels.gauss_jordan_inverse(a))
+        assert_allclose(a @ inv, np.eye(n), atol=1e-9)
+        assert_allclose(inv @ a, np.eye(n), atol=1e-9)
+
+    @settings(max_examples=10, deadline=None)
+    @given(seed=st.integers(0, 2**31 - 1))
+    def test_hypothesis_involution(self, seed):
+        """inv(inv(A)) ≈ A."""
+        r = np.random.default_rng(seed)
+        a = make_diag_dominant(r, 24)
+        twice = kernels.gauss_jordan_inverse(kernels.gauss_jordan_inverse(a))
+        assert_allclose(twice, a, rtol=1e-8, atol=1e-9)

@@ -1,0 +1,100 @@
+"""L1 matmul kernels vs pure-jnp oracle."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+from numpy.testing import assert_allclose
+
+from compile import kernels
+from compile.kernels import ref
+
+DIMS = st.sampled_from([1, 2, 3, 4, 8, 16, 24, 32, 48, 64, 96, 128, 160, 256])
+
+
+def _rand(rng, *shape, dtype=np.float64):
+    return rng.uniform(-1.0, 1.0, size=shape).astype(dtype)
+
+
+class TestMatmul:
+    @pytest.mark.parametrize("n", [1, 2, 4, 16, 64, 128, 256])
+    def test_square(self, rng, n):
+        x, y = _rand(rng, n, n), _rand(rng, n, n)
+        assert_allclose(kernels.matmul(x, y), ref.matmul(x, y), rtol=1e-11, atol=1e-12)
+
+    @pytest.mark.parametrize("m,k,n", [(8, 16, 32), (128, 64, 32), (256, 128, 64), (3, 5, 7)])
+    def test_rectangular(self, rng, m, k, n):
+        x, y = _rand(rng, m, k), _rand(rng, k, n)
+        assert_allclose(kernels.matmul(x, y), ref.matmul(x, y), rtol=1e-11, atol=1e-12)
+
+    @pytest.mark.parametrize("tile", [8, 32, 64, 128])
+    def test_tile_invariance(self, rng, tile):
+        """Result must not depend on the VMEM tile decomposition."""
+        x, y = _rand(rng, 128, 128), _rand(rng, 128, 128)
+        assert_allclose(
+            kernels.matmul(x, y, tile=tile), ref.matmul(x, y), rtol=1e-10, atol=1e-12
+        )
+
+    @pytest.mark.parametrize("dtype", [np.float32, np.float64])
+    def test_dtypes(self, rng, dtype):
+        x, y = _rand(rng, 64, 64, dtype=dtype), _rand(rng, 64, 64, dtype=dtype)
+        out = kernels.matmul(x, y)
+        assert out.dtype == dtype
+        tol = 1e-5 if dtype == np.float32 else 1e-12
+        assert_allclose(out, ref.matmul(x, y), rtol=tol, atol=tol)
+
+    def test_identity(self, rng):
+        x = _rand(rng, 64, 64)
+        assert_allclose(kernels.matmul(x, np.eye(64)), x, rtol=1e-14)
+
+    def test_zeros(self):
+        z = np.zeros((32, 32))
+        assert_allclose(kernels.matmul(z, z), z)
+
+    @settings(max_examples=25, deadline=None)
+    @given(m=DIMS, k=DIMS, n=DIMS, seed=st.integers(0, 2**31 - 1))
+    def test_hypothesis_shapes(self, m, k, n, seed):
+        r = np.random.default_rng(seed)
+        x, y = _rand(r, m, k), _rand(r, k, n)
+        assert_allclose(kernels.matmul(x, y), ref.matmul(x, y), rtol=1e-11, atol=1e-12)
+
+    def test_shape_mismatch_raises(self, rng):
+        with pytest.raises(ValueError):
+            kernels.matmul(_rand(rng, 4, 8), _rand(rng, 4, 8))
+
+
+class TestFusedMatmul:
+    @pytest.mark.parametrize("n", [16, 64, 128])
+    def test_matmul_acc(self, rng, n):
+        x, y, d = _rand(rng, n, n), _rand(rng, n, n), _rand(rng, n, n)
+        assert_allclose(
+            kernels.matmul_acc(x, y, d), ref.matmul_acc(x, y, d), rtol=1e-12
+        )
+
+    @pytest.mark.parametrize("n", [16, 64, 128])
+    def test_neg_matmul_sub(self, rng, n):
+        x, y, d = _rand(rng, n, n), _rand(rng, n, n), _rand(rng, n, n)
+        assert_allclose(
+            kernels.neg_matmul_sub(x, y, d), ref.neg_matmul_sub(x, y, d), rtol=1e-12
+        )
+
+    def test_matmul_acc_is_schur_building_block(self, rng):
+        """V = A21·III − A22 must equal the composed form exactly enough."""
+        a21, iii, a22 = _rand(rng, 64, 64), _rand(rng, 64, 64), _rand(rng, 64, 64)
+        fused = kernels.neg_matmul_sub(a21, iii, a22)
+        composed = kernels.subtract(kernels.matmul(a21, iii), a22)
+        assert_allclose(fused, composed, rtol=1e-12, atol=1e-13)
+
+    @settings(max_examples=15, deadline=None)
+    @given(n=st.sampled_from([8, 32, 96, 128]), seed=st.integers(0, 2**31 - 1))
+    def test_hypothesis_fused(self, n, seed):
+        r = np.random.default_rng(seed)
+        x, y, d = _rand(r, n, n), _rand(r, n, n), _rand(r, n, n)
+        assert_allclose(
+            kernels.matmul_acc(x, y, d), ref.matmul_acc(x, y, d), rtol=1e-11, atol=1e-12
+        )
+        assert_allclose(
+            kernels.neg_matmul_sub(x, y, d),
+            ref.neg_matmul_sub(x, y, d),
+            rtol=1e-11,
+            atol=1e-12,
+        )

@@ -1,0 +1,84 @@
+"""L2 model ops: contracts, fused strassen_2x2 vs Algorithm-1 composition."""
+
+import numpy as np
+import pytest
+from numpy.testing import assert_allclose
+
+from compile import model
+from compile.kernels import ref
+from tests.conftest import make_diag_dominant, make_spd
+
+
+class TestModelOps:
+    def test_ops_table_is_complete(self):
+        """Every op the Rust runtime expects must be lowered."""
+        expected = {
+            "leaf_inverse",
+            "matmul",
+            "matmul_acc",
+            "neg_matmul_sub",
+            "subtract",
+            "scale",
+            "axpy",
+            "negate",
+            "strassen_2x2",
+            "lu_factor",
+            "invert_lower",
+            "invert_upper",
+        }
+        assert set(model.OPS) == expected
+
+    @pytest.mark.parametrize("op", sorted(model.OPS))
+    def test_op_arity_metadata(self, rng, op):
+        fn, n_blocks, n_scalars = model.OPS[op]
+        bs = 16
+        blocks = [
+            make_diag_dominant(rng, bs) for _ in range(n_blocks)
+        ]  # dominant => invertible where inversion happens
+        scalars = [1.5] * n_scalars
+        out = fn(*blocks, *scalars)
+        outs = out if isinstance(out, tuple) else (out,)
+        for o in outs:
+            assert o.shape == (bs, bs)
+            assert o.dtype == np.float64
+
+    def test_leaf_inverse(self, rng):
+        a = make_spd(rng, 32)
+        assert_allclose(np.asarray(model.leaf_inverse(a)) @ a, np.eye(32), atol=1e-8)
+
+    def test_strassen_2x2_vs_reference(self, rng):
+        bs = 32
+        a11 = make_diag_dominant(rng, bs)
+        a22 = make_diag_dominant(rng, bs)
+        a12 = rng.uniform(-0.1, 0.1, size=(bs, bs))
+        a21 = rng.uniform(-0.1, 0.1, size=(bs, bs))
+        got = model.strassen_2x2(a11, a12, a21, a22)
+        want = ref.strassen_2x2_inverse(a11, a12, a21, a22)
+        for g, w, name in zip(got, want, ["C11", "C12", "C21", "C22"]):
+            assert_allclose(g, w, rtol=1e-8, atol=1e-9, err_msg=name)
+
+    def test_strassen_2x2_inverts_full_matrix(self, rng):
+        """Assembled [Cij] must equal inv of assembled [Aij] — end-to-end check
+        of the fused leaf-pair op against numpy on the full 2bs×2bs system."""
+        bs = 24
+        a = make_spd(rng, 2 * bs)
+        a11, a12 = a[:bs, :bs], a[:bs, bs:]
+        a21, a22 = a[bs:, :bs], a[bs:, bs:]
+        c11, c12, c21, c22 = [np.asarray(x) for x in model.strassen_2x2(a11, a12, a21, a22)]
+        c = np.block([[c11, c12], [c21, c22]])
+        assert_allclose(c @ a, np.eye(2 * bs), atol=1e-7)
+
+    def test_fused_ops_match_composition(self, rng):
+        x, y, d = (rng.uniform(-1, 1, (48, 48)) for _ in range(3))
+        assert_allclose(
+            model.matmul_acc(x, y, d),
+            np.asarray(model.matmul(x, y)) + d,
+            rtol=1e-12,
+            atol=1e-13,
+        )
+        assert_allclose(
+            model.neg_matmul_sub(x, y, d),
+            np.asarray(model.matmul(x, y)) - d,
+            rtol=1e-12,
+            atol=1e-13,
+        )

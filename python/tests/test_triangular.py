@@ -1,0 +1,88 @@
+"""L1 triangular/LU leaf kernels (the baseline's leaves) vs oracles."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+from numpy.testing import assert_allclose
+
+from compile import kernels
+from tests.conftest import make_diag_dominant
+
+
+def rand_lower(rng, n):
+    l = np.tril(rng.uniform(-1.0, 1.0, size=(n, n)))
+    np.fill_diagonal(l, 2.0 + rng.uniform(0.0, 1.0, size=n))
+    return l
+
+
+class TestLuFactor:
+    @pytest.mark.parametrize("n", [1, 2, 4, 16, 64, 128])
+    def test_reconstructs(self, rng, n):
+        a = make_diag_dominant(rng, n)
+        l, u = kernels.lu_factor(a)
+        l, u = np.asarray(l), np.asarray(u)
+        assert_allclose(l @ u, a, rtol=1e-10, atol=1e-11)
+
+    def test_l_unit_lower_u_upper(self, rng):
+        a = make_diag_dominant(rng, 32)
+        l, u = kernels.lu_factor(a)
+        l, u = np.asarray(l), np.asarray(u)
+        assert_allclose(np.triu(l, 1), 0.0, atol=1e-14)
+        assert_allclose(np.diag(l), 1.0, atol=1e-14)
+        assert_allclose(np.tril(u, -1), 0.0, atol=1e-14)
+
+    def test_identity(self):
+        l, u = kernels.lu_factor(np.eye(8))
+        assert_allclose(l, np.eye(8), atol=1e-14)
+        assert_allclose(u, np.eye(8), atol=1e-14)
+
+    @settings(max_examples=15, deadline=None)
+    @given(n=st.sampled_from([2, 3, 8, 17, 33]), seed=st.integers(0, 2**31 - 1))
+    def test_hypothesis_reconstruction(self, n, seed):
+        r = np.random.default_rng(seed)
+        a = make_diag_dominant(r, n)
+        l, u = kernels.lu_factor(a)
+        assert_allclose(np.asarray(l) @ np.asarray(u), a, rtol=1e-9, atol=1e-10)
+
+    def test_non_square_raises(self, rng):
+        with pytest.raises(ValueError):
+            kernels.lu_factor(rng.uniform(size=(4, 6)))
+
+
+class TestTriangularInverse:
+    @pytest.mark.parametrize("n", [1, 2, 8, 32, 128])
+    def test_lower(self, rng, n):
+        l = rand_lower(rng, n)
+        inv = np.asarray(kernels.invert_lower(l))
+        assert_allclose(inv @ l, np.eye(n), atol=1e-9)
+        # stays lower-triangular
+        assert_allclose(np.triu(inv, 1), 0.0, atol=1e-11)
+
+    @pytest.mark.parametrize("n", [1, 2, 8, 32, 128])
+    def test_upper(self, rng, n):
+        u = rand_lower(rng, n).T.copy()
+        inv = np.asarray(kernels.invert_upper(u))
+        assert_allclose(u @ inv, np.eye(n), atol=1e-9)
+        assert_allclose(np.tril(inv, -1), 0.0, atol=1e-11)
+
+    def test_matches_numpy(self, rng):
+        l = rand_lower(rng, 24)
+        assert_allclose(
+            kernels.invert_lower(l), np.linalg.inv(l), rtol=1e-9, atol=1e-10
+        )
+
+    def test_lu_plus_triangular_is_full_inverse(self, rng):
+        """U⁻¹·L⁻¹ == A⁻¹ — the identity the LU baseline's leaves rely on."""
+        a = make_diag_dominant(rng, 48)
+        l, u = kernels.lu_factor(a)
+        li = np.asarray(kernels.invert_lower(np.asarray(l)))
+        ui = np.asarray(kernels.invert_upper(np.asarray(u)))
+        assert_allclose((ui @ li) @ a, np.eye(48), atol=1e-8)
+
+    @settings(max_examples=10, deadline=None)
+    @given(n=st.sampled_from([2, 5, 16, 40]), seed=st.integers(0, 2**31 - 1))
+    def test_hypothesis_lower_roundtrip(self, n, seed):
+        r = np.random.default_rng(seed)
+        l = rand_lower(r, n)
+        inv = np.asarray(kernels.invert_lower(l))
+        assert_allclose(l @ inv, np.eye(n), atol=1e-8)

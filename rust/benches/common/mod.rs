@@ -1,0 +1,34 @@
+//! Shared bench-harness plumbing (criterion is not in the offline vendor
+//! set; each bench is a `harness = false` binary using the experiment
+//! drivers).
+
+use spin::config::ClusterConfig;
+use spin::experiments::Scale;
+
+/// Scale from `SPIN_BENCH_SCALE` (smoke|default|full), default `default`.
+pub fn scale_from_env() -> Scale {
+    match std::env::var("SPIN_BENCH_SCALE").as_deref() {
+        Ok("smoke") => Scale::smoke(),
+        Ok("full") => Scale::full(),
+        _ => Scale::default_scale(),
+    }
+}
+
+/// The paper's cluster topology, with backend/threads overridable via
+/// `SPIN_BENCH_BACKEND` (native|xla).
+pub fn cluster_from_env() -> ClusterConfig {
+    let mut cfg = ClusterConfig::paper();
+    if let Ok(be) = std::env::var("SPIN_BENCH_BACKEND") {
+        let _ = cfg.apply_override(&format!("backend={be}"));
+    }
+    cfg
+}
+
+pub fn banner(name: &str, what: &str) {
+    eprintln!("\n==== bench: {name} — {what} ====");
+    eprintln!(
+        "scale: SPIN_BENCH_SCALE={} backend: SPIN_BENCH_BACKEND={}\n",
+        std::env::var("SPIN_BENCH_SCALE").unwrap_or_else(|_| "default".into()),
+        std::env::var("SPIN_BENCH_BACKEND").unwrap_or_else(|_| "native".into()),
+    );
+}

@@ -1,0 +1,17 @@
+//! Bench: regenerate the paper's Figure 2 — fastest wall time over block
+//! sizes, SPIN vs LU, per matrix size. Writes `bench_results/figure2.csv`.
+
+mod common;
+
+fn main() {
+    spin::util::logger::init();
+    common::banner("figure2", "fastest time over b: SPIN vs LU");
+    let cluster = common::cluster_from_env();
+    let scale = common::scale_from_env();
+    let rows = spin::experiments::figure2::run(&cluster, &scale, 42).expect("figure2 run");
+    print!("{}", spin::experiments::figure2::render(&rows).expect("render"));
+    match spin::experiments::figure2::check_shape(&rows) {
+        Ok(()) => println!("shape check: OK — SPIN ≤ LU everywhere, gap grows with n"),
+        Err(e) => println!("shape check: DEVIATION — {e}"),
+    }
+}

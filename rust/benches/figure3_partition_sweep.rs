@@ -1,0 +1,18 @@
+//! Bench: regenerate the paper's Figure 3 — wall time vs partition count b
+//! (the U-shape), SPIN vs LU, per matrix size. Writes
+//! `bench_results/figure3.csv`.
+
+mod common;
+
+fn main() {
+    spin::util::logger::init();
+    common::banner("figure3", "U-shaped time vs partition count");
+    let cluster = common::cluster_from_env();
+    let scale = common::scale_from_env();
+    let rows = spin::experiments::figure3::run(&cluster, &scale, 43).expect("figure3 run");
+    print!("{}", spin::experiments::figure3::render(&rows).expect("render"));
+    match spin::experiments::figure3::check_shape(&rows, true) {
+        Ok(()) => println!("shape check: OK — SPIN wins pointwise; U-shape present"),
+        Err(e) => println!("shape check: DEVIATION — {e}"),
+    }
+}

@@ -1,0 +1,19 @@
+//! Bench: regenerate the paper's Figure 4 — calibrated Lemma 4.1 cost
+//! model vs measured SPIN wall clock, per (n, b). Writes
+//! `bench_results/figure4.csv`.
+
+mod common;
+
+fn main() {
+    spin::util::logger::init();
+    common::banner("figure4", "theoretical vs experimental SPIN time");
+    let cluster = common::cluster_from_env();
+    let scale = common::scale_from_env();
+    let (rows, k) = spin::experiments::figure4::run(&cluster, &scale, 44).expect("figure4 run");
+    print!("{}", spin::experiments::figure4::render(&rows).expect("render"));
+    println!("calibrated constants: {k:?}");
+    match spin::experiments::figure4::check_shape(&rows) {
+        Ok(()) => println!("shape check: OK — model within an order of magnitude pointwise"),
+        Err(e) => println!("shape check: DEVIATION — {e}"),
+    }
+}

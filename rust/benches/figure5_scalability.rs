@@ -1,0 +1,17 @@
+//! Bench: regenerate the paper's Figure 5 — SPIN wall time vs executor
+//! count with the ideal T(1)/k line. Writes `bench_results/figure5.csv`.
+
+mod common;
+
+fn main() {
+    spin::util::logger::init();
+    common::banner("figure5", "scalability vs executors + ideal line");
+    let cluster = common::cluster_from_env();
+    let scale = common::scale_from_env();
+    let rows = spin::experiments::figure5::run(&cluster, &scale, 45).expect("figure5 run");
+    print!("{}", spin::experiments::figure5::render(&rows).expect("render"));
+    match spin::experiments::figure5::check_shape(&rows) {
+        Ok(()) => println!("shape check: OK — time monotone in executors"),
+        Err(e) => println!("shape check: DEVIATION — {e}"),
+    }
+}

@@ -1,0 +1,97 @@
+//! Microbench: per-block kernel timings (native vs XLA/PJRT) across block
+//! sizes — the §Perf instrumentation for the hot path. Writes
+//! `bench_results/microbench.csv`.
+
+mod common;
+
+use spin::config::LeafMethod;
+use spin::linalg::{self, Matrix};
+use spin::runtime::{BlockKernels, NativeBackend, XlaBackend};
+use spin::util::fmt;
+use spin::util::timer::min_time_of;
+use spin::util::Rng;
+
+fn bench_backend(name: &str, be: &dyn BlockKernels, sizes: &[usize], csv: &mut fmt::Table) {
+    let mut rng = Rng::new(0xBEEF);
+    for &bs in sizes {
+        let a = linalg::diag_dominant(bs, &mut rng);
+        let b = Matrix::random_uniform(bs, bs, -1.0, 1.0, &mut rng);
+        let d = Matrix::random_uniform(bs, bs, -1.0, 1.0, &mut rng);
+        let reps = if bs <= 64 { 20 } else { 5 };
+
+        let t_mm = min_time_of(reps, || be.matmul(&a, &b).unwrap());
+        let t_acc = min_time_of(reps, || be.matmul_acc(&a, &b, &d).unwrap());
+        let t_sub = min_time_of(reps, || be.subtract(&a, &b).unwrap());
+        let t_inv = min_time_of(reps, || be.leaf_inverse(&a, LeafMethod::GaussJordan).unwrap());
+
+        let gemm_flops = linalg::gemm_flops(bs);
+        println!(
+            "{name:>7} bs={bs:<4} matmul {:>10} ({:>10})  acc {:>10}  sub {:>10}  inverse {:>10}",
+            fmt::secs(t_mm),
+            fmt::gflops(gemm_flops, t_mm),
+            fmt::secs(t_acc),
+            fmt::secs(t_sub),
+            fmt::secs(t_inv),
+        );
+        for (op, t) in [
+            ("matmul", t_mm),
+            ("matmul_acc", t_acc),
+            ("subtract", t_sub),
+            ("leaf_inverse", t_inv),
+        ] {
+            csv.row(vec![
+                name.to_string(),
+                op.to_string(),
+                bs.to_string(),
+                format!("{t}"),
+            ]);
+        }
+    }
+}
+
+fn main() {
+    spin::util::logger::init();
+    common::banner("microbench", "block kernels: native vs XLA");
+    let sizes = [16usize, 32, 64, 128, 256];
+    let mut csv = fmt::Table::new(vec!["backend", "op", "block_size", "secs"]);
+
+    bench_backend("native", &NativeBackend, &sizes, &mut csv);
+
+    match XlaBackend::new(std::path::PathBuf::from("artifacts")) {
+        Ok(xla) => {
+            bench_backend("xla", &xla, &sizes, &mut csv);
+            println!(
+                "xla ops executed={} fallbacks={}",
+                xla.executed_count(),
+                xla.fallback_count()
+            );
+        }
+        Err(e) => println!("xla backend unavailable ({e}); run `make artifacts`"),
+    }
+
+    // Naive-vs-blocked GEMM (the §Perf before/after pair).
+    let mut rng = Rng::new(1);
+    for bs in [64usize, 128, 256] {
+        let a = Matrix::random_uniform(bs, bs, -1.0, 1.0, &mut rng);
+        let b = Matrix::random_uniform(bs, bs, -1.0, 1.0, &mut rng);
+        let t_naive = min_time_of(3, || linalg::matmul_naive(&a, &b));
+        let t_blocked = min_time_of(3, || linalg::matmul(&a, &b));
+        println!(
+            "gemm bs={bs:<4} naive {:>10} ({:>10})  blocked {:>10} ({:>10})  speedup {:.2}x",
+            fmt::secs(t_naive),
+            fmt::gflops(linalg::gemm_flops(bs), t_naive),
+            fmt::secs(t_blocked),
+            fmt::gflops(linalg::gemm_flops(bs), t_blocked),
+            t_naive / t_blocked
+        );
+        csv.row(vec![
+            "native".into(),
+            "matmul_naive".into(),
+            bs.to_string(),
+            format!("{t_naive}"),
+        ]);
+    }
+
+    let path = spin::experiments::report::write_csv("microbench", &csv).expect("csv");
+    println!("csv: {}", path.display());
+}

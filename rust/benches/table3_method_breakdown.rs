@@ -1,0 +1,19 @@
+//! Bench: regenerate the paper's Table 3 — per-method wall-clock breakdown
+//! of SPIN over split counts. Writes `bench_results/table3.csv`.
+
+mod common;
+
+fn main() {
+    spin::util::logger::init();
+    common::banner("table3", "per-method breakdown over b");
+    let cluster = common::cluster_from_env();
+    let scale = common::scale_from_env();
+    // Paper uses n = 4096; we use the middle of the configured sweep.
+    let n = scale.sizes[scale.sizes.len() / 2];
+    let cols = spin::experiments::table3::run(&cluster, n, scale.max_b, 46).expect("table3 run");
+    print!("{}", spin::experiments::table3::render(n, &cols).expect("render"));
+    match spin::experiments::table3::check_shape(&cols) {
+        Ok(()) => println!("shape check: OK — leafNode falls with b, multiply rises"),
+        Err(e) => println!("shape check: DEVIATION — {e}"),
+    }
+}

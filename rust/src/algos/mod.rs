@@ -1,0 +1,59 @@
+//! The inversion algorithms: SPIN (the paper's contribution), the
+//! LU-decomposition baseline it is evaluated against (Liu et al. 2016),
+//! and single-node serial references used by tests.
+
+mod lu;
+mod serial;
+mod spin;
+
+pub use lu::lu_inverse_distributed;
+pub use serial::{lu_inverse_serial, strassen_inverse_serial};
+pub use spin::spin_inverse;
+
+use crate::blockmatrix::BlockMatrix;
+use crate::cluster::Cluster;
+use crate::config::JobConfig;
+use crate::error::Result;
+use crate::runtime::BlockKernels;
+
+/// Which distributed inversion algorithm to run.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Algorithm {
+    /// Strassen-scheme recursion (the paper's SPIN, Algorithm 2).
+    Spin,
+    /// Block-recursive LU baseline (Liu et al. 2016).
+    Lu,
+}
+
+impl Algorithm {
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "spin" => Ok(Algorithm::Spin),
+            "lu" => Ok(Algorithm::Lu),
+            other => Err(crate::error::SpinError::config(format!(
+                "unknown algorithm `{other}` (expected spin|lu)"
+            ))),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Algorithm::Spin => "spin",
+            Algorithm::Lu => "lu",
+        }
+    }
+
+    /// Dispatch to the distributed implementation.
+    pub fn invert(
+        &self,
+        cluster: &Cluster,
+        kernels: &dyn BlockKernels,
+        a: &BlockMatrix,
+        job: &JobConfig,
+    ) -> Result<BlockMatrix> {
+        match self {
+            Algorithm::Spin => spin_inverse(cluster, kernels, a, job),
+            Algorithm::Lu => lu_inverse_distributed(cluster, kernels, a, job),
+        }
+    }
+}

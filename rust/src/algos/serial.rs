@@ -1,0 +1,110 @@
+//! Single-node serial reference implementations — Algorithm 1 (Strassen's
+//! serial inversion scheme) on dense matrices, plus an LU-based serial
+//! inverse. Used as test oracles and by the cost-model calibration probes.
+
+use crate::error::{Result, SpinError};
+use crate::linalg::{lu_inverse, matmul, Matrix};
+
+/// Strassen's serial inversion (Algorithm 1): recursive 2×2 splitting down
+/// to `threshold`, below which the block is inverted by LU.
+pub fn strassen_inverse_serial(a: &Matrix, threshold: usize) -> Result<Matrix> {
+    if !a.is_square() {
+        return Err(SpinError::shape("inversion needs a square matrix"));
+    }
+    let n = a.rows();
+    if n <= threshold || n % 2 != 0 {
+        return lu_inverse(a);
+    }
+    let h = n / 2;
+    let a11 = a.submatrix(0, 0, h, h)?;
+    let a12 = a.submatrix(0, h, h, h)?;
+    let a21 = a.submatrix(h, 0, h, h)?;
+    let a22 = a.submatrix(h, h, h, h)?;
+
+    let i = strassen_inverse_serial(&a11, threshold)?; // I   = A11⁻¹
+    let ii = matmul(&a21, &i); //                         II  = A21·I
+    let iii = matmul(&i, &a12); //                        III = I·A12
+    let iv = matmul(&a21, &iii); //                       IV  = A21·III
+    let v = iv.sub(&a22)?; //                             V   = IV − A22
+    let vi = strassen_inverse_serial(&v, threshold)?; //  VI  = V⁻¹
+    let c12 = matmul(&iii, &vi); //                       C12 = III·VI
+    let c21 = matmul(&vi, &ii); //                        C21 = VI·II
+    let vii = matmul(&iii, &c21); //                      VII = III·C21
+    let c11 = i.sub(&vii)?; //                            C11 = I − VII
+    let c22 = vi.neg(); //                                C22 = −VI
+
+    let mut out = Matrix::zeros(n, n);
+    out.set_submatrix(0, 0, &c11)?;
+    out.set_submatrix(0, h, &c12)?;
+    out.set_submatrix(h, 0, &c21)?;
+    out.set_submatrix(h, h, &c22)?;
+    Ok(out)
+}
+
+/// Serial LU-based inversion (re-export shape for symmetry with the
+/// distributed API).
+pub fn lu_inverse_serial(a: &Matrix) -> Result<Matrix> {
+    lu_inverse(a)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::{diag_dominant, inverse_residual, spd};
+    use crate::util::check::forall;
+    use crate::util::Rng;
+
+    #[test]
+    fn strassen_serial_matches_lu() {
+        let mut rng = Rng::new(1);
+        for n in [4usize, 8, 16, 32, 64] {
+            let a = diag_dominant(n, &mut rng);
+            let s = strassen_inverse_serial(&a, 4).unwrap();
+            let l = lu_inverse_serial(&a).unwrap();
+            let diff = s.max_abs_diff(&l);
+            assert!(diff < 1e-8, "n={n} diff={diff}");
+        }
+    }
+
+    #[test]
+    fn threshold_equal_n_degenerates_to_lu() {
+        let mut rng = Rng::new(2);
+        let a = diag_dominant(16, &mut rng);
+        let s = strassen_inverse_serial(&a, 16).unwrap();
+        assert!(s.max_abs_diff(&lu_inverse_serial(&a).unwrap()) < 1e-14);
+    }
+
+    #[test]
+    fn odd_size_falls_back_to_lu() {
+        let mut rng = Rng::new(3);
+        let a = diag_dominant(15, &mut rng);
+        let s = strassen_inverse_serial(&a, 2).unwrap();
+        assert!(inverse_residual(&a, &s) < 1e-11);
+    }
+
+    #[test]
+    fn property_strassen_serial_residual() {
+        forall(
+            "serial strassen inverts",
+            0xAA,
+            12,
+            |r| {
+                let n = 1usize << (2 + r.next_usize(4)); // 4..32
+                if r.next_f64() < 0.5 {
+                    diag_dominant(n, r)
+                } else {
+                    spd(n, r)
+                }
+            },
+            |a| {
+                let inv = strassen_inverse_serial(a, 2).map_err(|e| e.to_string())?;
+                let resid = inverse_residual(a, &inv);
+                if resid < 1e-9 {
+                    Ok(())
+                } else {
+                    Err(format!("residual {resid}"))
+                }
+            },
+        );
+    }
+}

@@ -1,0 +1,224 @@
+//! SPIN — Algorithm 2: the distributed Strassen-scheme inversion.
+//!
+//! Per recursion level (grid edge `b` → `b/2`): 1 `breakMat`, 4 `xy`,
+//! 2 recursive inversions (A11 and the Schur complement V), 6 distributed
+//! `multiply`, 2 `subtract` (one fused into the Schur step in the paper's
+//! table as part of multiply accounting), 1 `scalarMul`, 1 `arrange`.
+//! At `b = 1` the single block is inverted serially on one worker (the
+//! `leafNode` map).
+//!
+//! Our extension (off by default, `JobConfig::fuse_leaf_2x2`): when the
+//! recursion reaches a 2×2 grid, run the whole Algorithm-1 step as one
+//! fused kernel (`strassen_2x2` artifact) — eliminating seven distributed
+//! stages at the recursion base.
+
+use crate::blockmatrix::{Block, BlockMatrix};
+use crate::blockmatrix::ops_method as method;
+use crate::cluster::{Cluster, Rdd};
+use crate::config::JobConfig;
+use crate::error::{Result, SpinError};
+use crate::runtime::BlockKernels;
+
+/// Invert a distributed matrix with the SPIN recursion.
+///
+/// `a` must be a power-of-two grid of square blocks; the input must be
+/// invertible with invertible leading principal quadrants (guaranteed for
+/// the diagonally-dominant / SPD generator families).
+pub fn spin_inverse(
+    cluster: &Cluster,
+    kernels: &dyn BlockKernels,
+    a: &BlockMatrix,
+    job: &JobConfig,
+) -> Result<BlockMatrix> {
+    if !a.nblocks().is_power_of_two() {
+        return Err(SpinError::shape(format!(
+            "SPIN needs a power-of-two block grid, got {}",
+            a.nblocks()
+        )));
+    }
+    let inv = inverse_rec(cluster, kernels, a, job)?;
+    if job.residual_check {
+        let resid = crate::linalg::inverse_residual(&a.to_dense()?, &inv.to_dense()?);
+        if resid > 1e-8 {
+            return Err(SpinError::numerical(format!(
+                "SPIN residual check failed: {resid:.3e}"
+            )));
+        }
+    }
+    Ok(inv)
+}
+
+fn inverse_rec(
+    cluster: &Cluster,
+    kernels: &dyn BlockKernels,
+    a: &BlockMatrix,
+    job: &JobConfig,
+) -> Result<BlockMatrix> {
+    let b = a.nblocks();
+
+    // ---- leaf: one block, inverted serially on a worker (paper's if-part).
+    if b == 1 {
+        return a.map_blocks_try(cluster, method::LEAF_NODE, |m| {
+            kernels.leaf_inverse(m, job.leaf)
+        });
+    }
+
+    // ---- optional fused 2×2 base (our extension).
+    if b == 2 && job.fuse_leaf_2x2 {
+        return fused_2x2(cluster, kernels, a, job);
+    }
+
+    // ---- else-part: one Strassen level.
+    let (a11, a12, a21, a22) = a.split(cluster)?;
+
+    let i = inverse_rec(cluster, kernels, &a11, job)?; //  I  = A11⁻¹
+    let ii = a21.multiply(cluster, kernels, &i)?; //        II  = A21·I
+    let iii = i.multiply(cluster, kernels, &a12)?; //       III = I·A12
+    let iv = a21.multiply(cluster, kernels, &iii)?; //      IV  = A21·III
+    let v = iv.subtract(cluster, kernels, &a22)?; //        V   = IV − A22
+    let vi = inverse_rec(cluster, kernels, &v, job)?; //    VI  = V⁻¹
+    let c12 = iii.multiply(cluster, kernels, &vi)?; //      C12 = III·VI
+    let c21 = vi.multiply(cluster, kernels, &ii)?; //       C21 = VI·II
+    let vii = iii.multiply(cluster, kernels, &c21)?; //     VII = III·C21
+    let c11 = i.subtract(cluster, kernels, &vii)?; //       C11 = I − VII
+    let c22 = vi.scalar_mul(cluster, kernels, -1.0)?; //    C22 = −VI
+
+    BlockMatrix::arrange(cluster, c11, c12, c21, c22)
+}
+
+/// Collect the four leaf blocks and run the fused Algorithm-1 step as one
+/// task (`leafNode` attribution: it replaces the two leaf inversions plus
+/// every intermediate stage of that level).
+fn fused_2x2(
+    cluster: &Cluster,
+    kernels: &dyn BlockKernels,
+    a: &BlockMatrix,
+    job: &JobConfig,
+) -> Result<BlockMatrix> {
+    let find = |r: usize, c: usize| -> Result<crate::linalg::Matrix> {
+        a.get_block(r, c)
+            .map(|b| b.matrix.clone())
+            .ok_or_else(|| SpinError::shape(format!("missing block ({r},{c})")))
+    };
+    let (a11, a12, a21, a22) = (find(0, 0)?, find(0, 1)?, find(1, 0)?, find(1, 1)?);
+    let leaf = job.leaf;
+    let fused = cluster.run_single(method::LEAF_NODE, move || {
+        kernels.strassen_2x2(&a11, &a12, &a21, &a22, leaf)
+    })?;
+    let (c11, c12, c21, c22) = fused;
+    let bs = a.block_size();
+    let blocks = vec![
+        Block::new(0, 0, c11),
+        Block::new(0, 1, c12),
+        Block::new(1, 0, c21),
+        Block::new(1, 1, c22),
+    ];
+    let n = blocks.len();
+    Ok(BlockMatrix::from_rdd(Rdd::from_items(blocks, n), 2, bs))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{ClusterConfig, GeneratorKind, LeafMethod};
+    use crate::linalg::{inverse_residual, lu_inverse};
+    use crate::runtime::NativeBackend;
+
+    fn cluster() -> Cluster {
+        Cluster::new(ClusterConfig::local(4))
+    }
+
+    fn invert_and_check(n: usize, bs: usize, job_mut: impl FnOnce(&mut JobConfig)) {
+        let c = cluster();
+        let mut job = JobConfig::new(n, bs);
+        job_mut(&mut job);
+        let a = BlockMatrix::random(&job).unwrap();
+        let inv = spin_inverse(&c, &NativeBackend, &a, &job).unwrap();
+        let resid = inverse_residual(&a.to_dense().unwrap(), &inv.to_dense().unwrap());
+        assert!(resid < 1e-10, "n={n} bs={bs}: residual {resid:.3e}");
+    }
+
+    #[test]
+    fn single_block_leaf() {
+        invert_and_check(8, 8, |_| {});
+    }
+
+    #[test]
+    fn two_by_two_grid() {
+        invert_and_check(16, 8, |_| {});
+    }
+
+    #[test]
+    fn deeper_recursion() {
+        invert_and_check(32, 4, |_| {});
+        invert_and_check(64, 8, |_| {});
+    }
+
+    #[test]
+    fn spd_generator() {
+        invert_and_check(32, 8, |j| j.generator = GeneratorKind::Spd);
+    }
+
+    #[test]
+    fn gauss_jordan_leaf() {
+        invert_and_check(16, 4, |j| j.leaf = LeafMethod::GaussJordan);
+    }
+
+    #[test]
+    fn fused_2x2_matches_unfused() {
+        let c1 = cluster();
+        let c2 = cluster();
+        let mut job = JobConfig::new(16, 8);
+        let a = BlockMatrix::random(&job).unwrap();
+        let plain = spin_inverse(&c1, &NativeBackend, &a, &job).unwrap();
+        job.fuse_leaf_2x2 = true;
+        let fused = spin_inverse(&c2, &NativeBackend, &a, &job).unwrap();
+        let diff = plain
+            .to_dense()
+            .unwrap()
+            .max_abs_diff(&fused.to_dense().unwrap());
+        assert!(diff < 1e-9, "fused vs plain diff {diff}");
+    }
+
+    #[test]
+    fn matches_serial_lu_inverse() {
+        let c = cluster();
+        let job = JobConfig::new(32, 8);
+        let a = BlockMatrix::random(&job).unwrap();
+        let inv = spin_inverse(&c, &NativeBackend, &a, &job).unwrap();
+        let want = lu_inverse(&a.to_dense().unwrap()).unwrap();
+        let diff = inv.to_dense().unwrap().max_abs_diff(&want);
+        assert!(diff < 1e-8, "diff {diff}");
+    }
+
+    #[test]
+    fn residual_check_passes_for_good_input() {
+        invert_and_check(16, 4, |j| j.residual_check = true);
+    }
+
+    #[test]
+    fn rejects_non_pow2_grid() {
+        let c = cluster();
+        let job = JobConfig::new(16, 4);
+        // Build a 3x3 grid manually (n=12, bs=4).
+        let dense = crate::linalg::diag_dominant(12, &mut crate::util::Rng::new(1));
+        let a = BlockMatrix::from_dense(&dense, 4).unwrap();
+        assert!(spin_inverse(&c, &NativeBackend, &a, &job).is_err());
+    }
+
+    #[test]
+    fn metrics_cover_all_paper_methods() {
+        let c = cluster();
+        let job = JobConfig::new(32, 4); // b = 8: multi-level recursion
+        let a = BlockMatrix::random(&job).unwrap();
+        let _ = spin_inverse(&c, &NativeBackend, &a, &job).unwrap();
+        let snap = c.metrics();
+        for m in [
+            "leafNode", "breakMat", "xy", "multiply", "subtract", "scalar", "arrange",
+        ] {
+            assert!(snap.method(m).is_some(), "missing method metric {m}");
+        }
+        // leafNode count: recursion tree has 2^depth leaves for b=8 -> 8.
+        assert_eq!(snap.method("leafNode").unwrap().calls, 8);
+    }
+}

@@ -1,0 +1,100 @@
+//! The distribution unit: one `((rowIndex, colIndex), Matrix)` tuple,
+//! exactly the paper's MLLib `MatrixBlock` (§3.2).
+
+use crate::cluster::Bytes;
+use crate::linalg::Matrix;
+
+/// Grid coordinates of a block.
+pub type BlockIdx = (usize, usize);
+
+/// One block of a distributed matrix.
+#[derive(Debug, Clone)]
+pub struct Block {
+    pub row: usize,
+    pub col: usize,
+    pub matrix: Matrix,
+}
+
+impl Block {
+    pub fn new(row: usize, col: usize, matrix: Matrix) -> Self {
+        Block { row, col, matrix }
+    }
+
+    pub fn idx(&self) -> BlockIdx {
+        (self.row, self.col)
+    }
+}
+
+impl Bytes for Block {
+    fn size_bytes(&self) -> u64 {
+        16 + self.matrix.size_bytes()
+    }
+}
+
+impl Bytes for Matrix {
+    fn size_bytes(&self) -> u64 {
+        Matrix::size_bytes(self)
+    }
+}
+
+impl Bytes for std::sync::Arc<Matrix> {
+    fn size_bytes(&self) -> u64 {
+        // The shuffle still ships the full payload across executors even
+        // when the in-process representation is shared.
+        Matrix::size_bytes(self)
+    }
+}
+
+/// Quadrant tag produced by `breakMat` (paper: "A11"… strings; a fieldless
+/// enum shuffles cheaper and hashes identically well).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Quadrant {
+    Q11,
+    Q12,
+    Q21,
+    Q22,
+}
+
+impl Quadrant {
+    /// Tag for a block at `(ri, ci)` in a grid split at `half` —
+    /// the paper's `ri/size` / `ci/size` test in Algorithm 3.
+    pub fn of(ri: usize, ci: usize, half: usize) -> Quadrant {
+        match (ri / half, ci / half) {
+            (0, 0) => Quadrant::Q11,
+            (0, _) => Quadrant::Q12,
+            (_, 0) => Quadrant::Q21,
+            _ => Quadrant::Q22,
+        }
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            Quadrant::Q11 => "A11",
+            Quadrant::Q12 => "A12",
+            Quadrant::Q21 => "A21",
+            Quadrant::Q22 => "A22",
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quadrant_tagging_matches_paper() {
+        // 4x4 grid split at half=2.
+        assert_eq!(Quadrant::of(0, 0, 2), Quadrant::Q11);
+        assert_eq!(Quadrant::of(1, 3, 2), Quadrant::Q12);
+        assert_eq!(Quadrant::of(2, 0, 2), Quadrant::Q21);
+        assert_eq!(Quadrant::of(3, 3, 2), Quadrant::Q22);
+        assert_eq!(Quadrant::Q21.label(), "A21");
+    }
+
+    #[test]
+    fn block_size_accounting() {
+        let b = Block::new(0, 1, Matrix::zeros(4, 4));
+        assert_eq!(Bytes::size_bytes(&b), 16 + 128);
+        assert_eq!(b.idx(), (0, 1));
+    }
+}

@@ -1,0 +1,301 @@
+//! The distributed matrix: an RDD of `((row, col), block)` over the
+//! cluster substrate — MLLib's `BlockMatrix` (paper §3.2), plus the six
+//! distributed methods of §3.3 (in [`ops`]).
+
+mod block;
+mod ops;
+
+pub use block::{Block, BlockIdx, Quadrant};
+pub use ops::method as ops_method;
+
+use crate::cluster::{Cluster, Rdd};
+use crate::config::{GeneratorKind, JobConfig};
+use crate::error::{Result, SpinError};
+use crate::linalg::{self, Matrix};
+use crate::util::Rng;
+
+/// A square matrix distributed as an `nblocks × nblocks` grid of square
+/// `block_size × block_size` blocks.
+#[derive(Debug, Clone)]
+pub struct BlockMatrix {
+    rdd: Rdd<Block>,
+    nblocks: usize,
+    block_size: usize,
+}
+
+impl BlockMatrix {
+    // ---------- constructors ----------
+
+    /// Wrap blocks; validates the grid is complete and uniformly sized.
+    /// Partitioning: one block per partition (a block is the task unit in
+    /// the paper's cost model).
+    pub fn from_blocks(blocks: Vec<Block>, nblocks: usize, block_size: usize) -> Result<Self> {
+        if blocks.len() != nblocks * nblocks {
+            return Err(SpinError::shape(format!(
+                "expected {}x{} = {} blocks, got {}",
+                nblocks,
+                nblocks,
+                nblocks * nblocks,
+                blocks.len()
+            )));
+        }
+        let mut seen = vec![false; nblocks * nblocks];
+        for b in &blocks {
+            if b.row >= nblocks || b.col >= nblocks {
+                return Err(SpinError::shape(format!(
+                    "block index ({},{}) outside {nblocks}x{nblocks} grid",
+                    b.row, b.col
+                )));
+            }
+            if b.matrix.rows() != block_size || b.matrix.cols() != block_size {
+                return Err(SpinError::shape(format!(
+                    "block ({},{}) is {}x{}, expected {block_size}x{block_size}",
+                    b.row,
+                    b.col,
+                    b.matrix.rows(),
+                    b.matrix.cols()
+                )));
+            }
+            let slot = b.row * nblocks + b.col;
+            if seen[slot] {
+                return Err(SpinError::shape(format!(
+                    "duplicate block index ({},{})",
+                    b.row, b.col
+                )));
+            }
+            seen[slot] = true;
+        }
+        let nparts = blocks.len();
+        Ok(BlockMatrix {
+            rdd: Rdd::from_items(blocks, nparts),
+            nblocks,
+            block_size,
+        })
+    }
+
+    /// Internal: wrap an already-partitioned RDD (ops preserve invariants).
+    pub(crate) fn from_rdd(rdd: Rdd<Block>, nblocks: usize, block_size: usize) -> Self {
+        BlockMatrix {
+            rdd,
+            nblocks,
+            block_size,
+        }
+    }
+
+    /// Split a driver-side dense matrix into blocks (HDFS load stand-in).
+    pub fn from_dense(dense: &Matrix, block_size: usize) -> Result<Self> {
+        if !dense.is_square() {
+            return Err(SpinError::shape("BlockMatrix requires a square matrix"));
+        }
+        let n = dense.rows();
+        if n % block_size != 0 {
+            return Err(SpinError::shape(format!(
+                "block_size {block_size} does not divide n {n}"
+            )));
+        }
+        let nblocks = n / block_size;
+        let mut blocks = Vec::with_capacity(nblocks * nblocks);
+        for bi in 0..nblocks {
+            for bj in 0..nblocks {
+                let m =
+                    dense.submatrix(bi * block_size, bj * block_size, block_size, block_size)?;
+                blocks.push(Block::new(bi, bj, m));
+            }
+        }
+        BlockMatrix::from_blocks(blocks, nblocks, block_size)
+    }
+
+    /// Assemble back into one dense matrix on the driver.
+    pub fn to_dense(&self) -> Result<Matrix> {
+        let n = self.n();
+        let mut out = Matrix::zeros(n, n);
+        let mut seen = 0usize;
+        for b in self.rdd.iter() {
+            out.set_submatrix(b.row * self.block_size, b.col * self.block_size, &b.matrix)?;
+            seen += 1;
+        }
+        if seen != self.nblocks * self.nblocks {
+            return Err(SpinError::shape(format!(
+                "grid incomplete: {seen} of {} blocks",
+                self.nblocks * self.nblocks
+            )));
+        }
+        Ok(out)
+    }
+
+    /// Generate a distributed test matrix per the job's generator family.
+    pub fn random(job: &JobConfig) -> Result<Self> {
+        job.validate()?;
+        let mut rng = Rng::new(job.seed);
+        let dense = linalg::generate(job.generator, job.n, &mut rng);
+        BlockMatrix::from_dense(&dense, job.block_size)
+    }
+
+    /// Convenience for examples: a random SPD distributed matrix.
+    pub fn random_spd(n: usize, block_size: usize, seed: u64) -> Result<Self> {
+        let mut job = JobConfig::new(n, block_size);
+        job.generator = GeneratorKind::Spd;
+        job.seed = seed;
+        BlockMatrix::random(&job)
+    }
+
+    /// Distributed identity.
+    pub fn identity(n: usize, block_size: usize) -> Result<Self> {
+        let eye = Matrix::identity(n);
+        BlockMatrix::from_dense(&eye, block_size)
+    }
+
+    /// All-zero distributed matrix of the given grid shape.
+    pub fn zeros(nblocks: usize, block_size: usize) -> Result<Self> {
+        let blocks = (0..nblocks)
+            .flat_map(|i| (0..nblocks).map(move |j| (i, j)))
+            .map(|(i, j)| Block::new(i, j, Matrix::zeros(block_size, block_size)))
+            .collect();
+        BlockMatrix::from_blocks(blocks, nblocks, block_size)
+    }
+
+    // ---------- accessors ----------
+
+    /// Grid edge — the paper's number of splits `b` at this recursion level.
+    pub fn nblocks(&self) -> usize {
+        self.nblocks
+    }
+
+    pub fn block_size(&self) -> usize {
+        self.block_size
+    }
+
+    /// Full matrix order `n`.
+    pub fn n(&self) -> usize {
+        self.nblocks * self.block_size
+    }
+
+    #[allow(dead_code)] // used by unit tests; benches build without cfg(test)
+    pub(crate) fn rdd(&self) -> &Rdd<Block> {
+        &self.rdd
+    }
+
+    pub(crate) fn rdd_clone(&self) -> Rdd<Block> {
+        self.rdd.clone()
+    }
+
+    /// Driver-side block lookup (test helper; O(blocks)).
+    pub fn get_block(&self, row: usize, col: usize) -> Option<&Block> {
+        self.rdd.iter().find(|b| b.row == row && b.col == col)
+    }
+
+    /// Shape/grid compatibility check for binary ops.
+    pub(crate) fn check_same_grid(&self, other: &BlockMatrix, op: &str) -> Result<()> {
+        if self.nblocks != other.nblocks || self.block_size != other.block_size {
+            return Err(SpinError::shape(format!(
+                "{op}: grid mismatch {}x{} (bs {}) vs {}x{} (bs {})",
+                self.nblocks,
+                self.nblocks,
+                self.block_size,
+                other.nblocks,
+                other.nblocks,
+                other.block_size
+            )));
+        }
+        Ok(())
+    }
+
+    /// Map every block's payload through a fallible kernel, as one
+    /// distributed stage attributed to `method`.
+    pub fn map_blocks_try(
+        &self,
+        cluster: &Cluster,
+        method: &str,
+        f: impl Fn(&Matrix) -> Result<Matrix> + Sync,
+    ) -> Result<BlockMatrix> {
+        let out = cluster.map(method, self.rdd_clone(), |blk: Block| {
+            f(&blk.matrix).map(|m| Block::new(blk.row, blk.col, m))
+        });
+        let parts = out.into_partitions();
+        let mut ok_parts = Vec::with_capacity(parts.len());
+        for part in parts {
+            let mut ok = Vec::with_capacity(part.len());
+            for r in part {
+                ok.push(r?);
+            }
+            ok_parts.push(ok);
+        }
+        Ok(BlockMatrix::from_rdd(
+            Rdd::from_partitions(ok_parts),
+            self.nblocks,
+            self.block_size,
+        ))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn from_dense_round_trip() {
+        let mut rng = Rng::new(1);
+        let dense = Matrix::random_uniform(8, 8, -1.0, 1.0, &mut rng);
+        let bm = BlockMatrix::from_dense(&dense, 2).unwrap();
+        assert_eq!(bm.nblocks(), 4);
+        assert_eq!(bm.n(), 8);
+        assert!(bm.to_dense().unwrap().max_abs_diff(&dense) < 1e-15);
+    }
+
+    #[test]
+    fn block_payload_matches_quadrant() {
+        let dense = Matrix::from_fn(4, 4, |i, j| (i * 4 + j) as f64);
+        let bm = BlockMatrix::from_dense(&dense, 2).unwrap();
+        let b01 = bm.get_block(0, 1).unwrap();
+        assert_eq!(b01.matrix.get(0, 0), dense.get(0, 2));
+        assert_eq!(b01.matrix.get(1, 1), dense.get(1, 3));
+    }
+
+    #[test]
+    fn from_blocks_validates() {
+        // wrong count
+        assert!(BlockMatrix::from_blocks(vec![], 1, 4).is_err());
+        // bad index
+        let blocks = vec![Block::new(2, 0, Matrix::zeros(4, 4))];
+        assert!(BlockMatrix::from_blocks(blocks, 1, 4).is_err());
+        // bad size
+        let blocks = vec![Block::new(0, 0, Matrix::zeros(3, 4))];
+        assert!(BlockMatrix::from_blocks(blocks, 1, 4).is_err());
+        // duplicate
+        let blocks = vec![
+            Block::new(0, 0, Matrix::zeros(2, 2)),
+            Block::new(0, 0, Matrix::zeros(2, 2)),
+        ];
+        assert!(BlockMatrix::from_blocks(blocks, 1, 2).is_err());
+    }
+
+    #[test]
+    fn from_dense_rejects_bad_shapes() {
+        let m = Matrix::zeros(4, 6);
+        assert!(BlockMatrix::from_dense(&m, 2).is_err()); // not square
+        let m = Matrix::zeros(6, 6);
+        assert!(BlockMatrix::from_dense(&m, 4).is_err()); // 4 ∤ 6
+    }
+
+    #[test]
+    fn identity_and_zeros() {
+        let i = BlockMatrix::identity(8, 4).unwrap();
+        assert!(i.to_dense().unwrap().max_abs_diff(&Matrix::identity(8)) < 1e-15);
+        let z = BlockMatrix::zeros(2, 4).unwrap();
+        assert_eq!(z.to_dense().unwrap().max_abs(), 0.0);
+    }
+
+    #[test]
+    fn one_block_per_partition() {
+        let bm = BlockMatrix::identity(8, 2).unwrap();
+        assert_eq!(bm.rdd().num_partitions(), 16);
+    }
+
+    #[test]
+    fn random_is_seed_deterministic() {
+        let job = JobConfig::new(16, 4);
+        let a = BlockMatrix::random(&job).unwrap().to_dense().unwrap();
+        let b = BlockMatrix::random(&job).unwrap().to_dense().unwrap();
+        assert_eq!(a.max_abs_diff(&b), 0.0);
+    }
+}

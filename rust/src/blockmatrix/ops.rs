@@ -1,0 +1,425 @@
+//! The six distributed methods of paper §3.3 — `breakMat`, `xy`,
+//! `multiply`, `subtract`, `scalarMul`, `arrange` — plus `transpose`.
+//!
+//! Method-name strings match the paper's Table 3 rows so the metrics
+//! registry regenerates that table directly.
+
+use crate::blockmatrix::block::{Block, Quadrant};
+use crate::blockmatrix::BlockMatrix;
+use crate::cluster::{Cluster, Rdd};
+use crate::error::{Result, SpinError};
+
+use crate::runtime::BlockKernels;
+
+/// Metric names (Table 3 rows).
+pub mod method {
+    pub const LEAF_NODE: &str = "leafNode";
+    pub const BREAK_MAT: &str = "breakMat";
+    pub const XY: &str = "xy";
+    pub const MULTIPLY: &str = "multiply";
+    pub const SUBTRACT: &str = "subtract";
+    pub const SCALAR_MUL: &str = "scalar";
+    pub const ARRANGE: &str = "arrange";
+}
+
+impl BlockMatrix {
+    /// Algorithm 3: tag every block with its quadrant and remap indices into
+    /// the half-grid (`ri % size`, `ci % size`). One `mapToPair` pass.
+    pub fn break_mat(&self, cluster: &Cluster) -> Result<Rdd<(Quadrant, Block)>> {
+        if self.nblocks() % 2 != 0 {
+            return Err(SpinError::shape(format!(
+                "cannot break a {}x{} block grid in half",
+                self.nblocks(),
+                self.nblocks()
+            )));
+        }
+        let half = self.nblocks() / 2;
+        Ok(cluster.map(method::BREAK_MAT, self.rdd_clone(), move |mut blk: Block| {
+            let tag = Quadrant::of(blk.row, blk.col, half);
+            blk.row %= half;
+            blk.col %= half;
+            (tag, blk)
+        }))
+    }
+
+    /// Algorithm 4 (`xy`): filter one quadrant out of a broken pair-RDD and
+    /// strip the tags. The paper runs `_11`…`_22` as four filter+map passes
+    /// over the same RDD; `quadrant` is one such pass.
+    pub fn quadrant(
+        cluster: &Cluster,
+        broken: &Rdd<(Quadrant, Block)>,
+        which: Quadrant,
+        half: usize,
+        block_size: usize,
+    ) -> BlockMatrix {
+        let filtered = cluster.filter(method::XY, broken.clone(), move |(tag, _)| *tag == which);
+        let rdd = cluster.map(method::XY, filtered, |(_, blk)| blk);
+        // Re-partition: one block per partition for downstream task counts.
+        let blocks = rdd.into_items();
+        let nparts = blocks.len().max(1);
+        BlockMatrix::from_rdd(Rdd::from_items(blocks, nparts), half, block_size)
+    }
+
+    /// Break into the four half-grid quadrants (breakMat + 4 × xy).
+    pub fn split(
+        &self,
+        cluster: &Cluster,
+    ) -> Result<(BlockMatrix, BlockMatrix, BlockMatrix, BlockMatrix)> {
+        let broken = self.break_mat(cluster)?;
+        let half = self.nblocks() / 2;
+        let bs = self.block_size();
+        let a11 = BlockMatrix::quadrant(cluster, &broken, Quadrant::Q11, half, bs);
+        let a12 = BlockMatrix::quadrant(cluster, &broken, Quadrant::Q12, half, bs);
+        let a21 = BlockMatrix::quadrant(cluster, &broken, Quadrant::Q21, half, bs);
+        let a22 = BlockMatrix::quadrant(cluster, &broken, Quadrant::Q22, half, bs);
+        Ok((a11, a12, a21, a22))
+    }
+
+    /// Paper §3.3 `multiply`: naive replicated block matmul. Every A block
+    /// `(i,k)` is replicated to all `(i,j,k)` keys, every B block `(k,j)` to
+    /// all `(i,j,k)`; a co-group brings each pair to one reducer, which
+    /// multiplies; a reduce-by-key sums over `k`.
+    pub fn multiply(
+        &self,
+        cluster: &Cluster,
+        kernels: &dyn BlockKernels,
+        other: &BlockMatrix,
+    ) -> Result<BlockMatrix> {
+        self.check_same_grid(other, "multiply")?;
+        let b = self.nblocks();
+        let bs = self.block_size();
+        let nparts = b * b;
+
+        // Replicate (map-side, narrow). §Perf: payloads are shared via
+        // `Arc` — Spark replicates references into shuffle files, not b
+        // deep copies in executor memory; deep-cloning here dominated the
+        // replication stage at large b (EXPERIMENTS.md §Perf, L3-2).
+        let a_rep = cluster.flat_map(method::MULTIPLY, self.rdd_clone(), move |blk: Block| {
+            let m = std::sync::Arc::new(blk.matrix);
+            (0..b)
+                .map(move |j| ((blk.row, j, blk.col), std::sync::Arc::clone(&m)))
+                .collect::<Vec<_>>()
+        });
+        let b_rep = cluster.flat_map(method::MULTIPLY, other.rdd_clone(), move |blk: Block| {
+            let m = std::sync::Arc::new(blk.matrix);
+            (0..b)
+                .map(move |i| ((i, blk.col, blk.row), std::sync::Arc::clone(&m)))
+                .collect::<Vec<_>>()
+        });
+
+        // Co-group on (i, j, k): exactly one A and one B block per key.
+        let paired = cluster.cogroup(method::MULTIPLY, a_rep, b_rep, nparts);
+
+        // Per-key block GEMM.
+        let products = cluster.map(method::MULTIPLY, paired, |((i, j, _k), (avs, bvs))| {
+            debug_assert_eq!(avs.len(), 1);
+            debug_assert_eq!(bvs.len(), 1);
+            let prod = kernels
+                .matmul(&avs[0], &bvs[0])
+                .expect("block matmul kernel failed");
+            ((i, j), prod)
+        });
+
+        // Sum the k partial products per output block.
+        let summed = cluster.reduce_by_key(method::MULTIPLY, products, nparts, |acc, m| {
+            acc.add(&m).expect("partial product shapes agree")
+        });
+
+        let blocks = cluster.map(method::MULTIPLY, summed, |((i, j), m)| Block::new(i, j, m));
+        let items = blocks.into_items();
+        if items.len() != b * b {
+            return Err(SpinError::cluster(format!(
+                "multiply produced {} blocks, expected {}",
+                items.len(),
+                b * b
+            )));
+        }
+        let n = items.len();
+        Ok(BlockMatrix::from_rdd(Rdd::from_items(items, n), b, bs))
+    }
+
+    /// Paper §3.3 `subtract`: align blocks by index, C = A − B.
+    pub fn subtract(
+        &self,
+        cluster: &Cluster,
+        kernels: &dyn BlockKernels,
+        other: &BlockMatrix,
+    ) -> Result<BlockMatrix> {
+        self.check_same_grid(other, "subtract")?;
+        self.binary_elementwise(cluster, kernels, other, method::SUBTRACT, false)
+    }
+
+    /// Fused C = A·B − D used for SPIN's Schur step when enabled; kept
+    /// separate so the ablation bench can compare fused vs composed.
+    pub fn multiply_sub(
+        &self,
+        cluster: &Cluster,
+        kernels: &dyn BlockKernels,
+        other: &BlockMatrix,
+        d: &BlockMatrix,
+    ) -> Result<BlockMatrix> {
+        let prod = self.multiply(cluster, kernels, other)?;
+        prod.subtract(cluster, kernels, d)
+    }
+
+    fn binary_elementwise(
+        &self,
+        cluster: &Cluster,
+        kernels: &dyn BlockKernels,
+        other: &BlockMatrix,
+        name: &str,
+        _add: bool,
+    ) -> Result<BlockMatrix> {
+        let b = self.nblocks();
+        let bs = self.block_size();
+        let nparts = b * b;
+        let left = cluster.map(name, self.rdd_clone(), |blk: Block| (blk.idx(), blk.matrix));
+        let right = cluster.map(name, other.rdd_clone(), |blk: Block| (blk.idx(), blk.matrix));
+        let paired = cluster.cogroup(name, left, right, nparts);
+        let out = cluster.map(name, paired, |((i, j), (ls, rs))| {
+            debug_assert_eq!(ls.len(), 1);
+            debug_assert_eq!(rs.len(), 1);
+            let m = kernels
+                .subtract(&ls[0], &rs[0])
+                .expect("subtract kernel failed");
+            Block::new(i, j, m)
+        });
+        let items = out.into_items();
+        let n = items.len();
+        Ok(BlockMatrix::from_rdd(Rdd::from_items(items, n), b, bs))
+    }
+
+    /// Paper §3.3 / Algorithm 5 `scalarMul`: one map over blocks.
+    pub fn scalar_mul(
+        &self,
+        cluster: &Cluster,
+        kernels: &dyn BlockKernels,
+        s: f64,
+    ) -> Result<BlockMatrix> {
+        self.map_blocks_try(cluster, method::SCALAR_MUL, |m| kernels.scale(m, s))
+    }
+
+    /// Algorithm 6 `arrange`: re-index the four quadrants into the full
+    /// grid (three shifting maps — C11 keeps its indices) and union.
+    pub fn arrange(
+        cluster: &Cluster,
+        c11: BlockMatrix,
+        c12: BlockMatrix,
+        c21: BlockMatrix,
+        c22: BlockMatrix,
+    ) -> Result<BlockMatrix> {
+        c11.check_same_grid(&c12, "arrange")?;
+        c11.check_same_grid(&c21, "arrange")?;
+        c11.check_same_grid(&c22, "arrange")?;
+        let half = c11.nblocks();
+        let bs = c11.block_size();
+
+        let r12 = cluster.map(method::ARRANGE, c12.rdd_clone(), move |mut b: Block| {
+            b.col += half;
+            b
+        });
+        let r21 = cluster.map(method::ARRANGE, c21.rdd_clone(), move |mut b: Block| {
+            b.row += half;
+            b
+        });
+        let r22 = cluster.map(method::ARRANGE, c22.rdd_clone(), move |mut b: Block| {
+            b.row += half;
+            b.col += half;
+            b
+        });
+        let unioned = c11
+            .rdd_clone()
+            .union(r12)
+            .union(r21)
+            .union(r22);
+        let items = unioned.into_items();
+        let n = items.len();
+        Ok(BlockMatrix::from_rdd(
+            Rdd::from_items(items, n),
+            2 * half,
+            bs,
+        ))
+    }
+
+    /// Distributed transpose (one map: swap indices + transpose payloads).
+    pub fn transpose(&self, cluster: &Cluster) -> BlockMatrix {
+        let out = cluster.map("transpose", self.rdd_clone(), |blk: Block| {
+            Block::new(blk.col, blk.row, blk.matrix.transpose())
+        });
+        let items = out.into_items();
+        let n = items.len();
+        BlockMatrix::from_rdd(
+            Rdd::from_items(items, n),
+            self.nblocks(),
+            self.block_size(),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ClusterConfig;
+    use crate::linalg::{self, matmul, Matrix};
+    use crate::runtime::NativeBackend;
+    use crate::util::check::forall;
+    use crate::util::Rng;
+
+    fn cluster() -> Cluster {
+        Cluster::new(ClusterConfig::local(4))
+    }
+
+    fn rand_bm(n: usize, bs: usize, seed: u64) -> (Matrix, BlockMatrix) {
+        let mut rng = Rng::new(seed);
+        let dense = Matrix::random_uniform(n, n, -1.0, 1.0, &mut rng);
+        let bm = BlockMatrix::from_dense(&dense, bs).unwrap();
+        (dense, bm)
+    }
+
+    #[test]
+    fn break_then_quadrants_match_dense() {
+        let c = cluster();
+        let (dense, bm) = rand_bm(8, 2, 1);
+        let (a11, a12, a21, a22) = bm.split(&c).unwrap();
+        assert_eq!(a11.nblocks(), 2);
+        assert!(a11.to_dense().unwrap().max_abs_diff(&dense.submatrix(0, 0, 4, 4).unwrap()) < 1e-15);
+        assert!(a12.to_dense().unwrap().max_abs_diff(&dense.submatrix(0, 4, 4, 4).unwrap()) < 1e-15);
+        assert!(a21.to_dense().unwrap().max_abs_diff(&dense.submatrix(4, 0, 4, 4).unwrap()) < 1e-15);
+        assert!(a22.to_dense().unwrap().max_abs_diff(&dense.submatrix(4, 4, 4, 4).unwrap()) < 1e-15);
+    }
+
+    #[test]
+    fn split_arrange_round_trip() {
+        let c = cluster();
+        let (dense, bm) = rand_bm(8, 2, 2);
+        let (a11, a12, a21, a22) = bm.split(&c).unwrap();
+        let back = BlockMatrix::arrange(&c, a11, a12, a21, a22).unwrap();
+        assert!(back.to_dense().unwrap().max_abs_diff(&dense) < 1e-15);
+    }
+
+    #[test]
+    fn break_mat_rejects_odd_grids() {
+        let bm = BlockMatrix::identity(6, 2).unwrap(); // 3x3 grid
+        assert!(bm.break_mat(&cluster()).is_err());
+    }
+
+    #[test]
+    fn multiply_matches_serial() {
+        let c = cluster();
+        for (n, bs) in [(4usize, 2usize), (8, 2), (8, 4), (16, 4)] {
+            let (da, a) = rand_bm(n, bs, 10 + n as u64);
+            let (db, b) = rand_bm(n, bs, 20 + n as u64);
+            let got = a.multiply(&c, &NativeBackend, &b).unwrap();
+            let want = matmul(&da, &db);
+            let diff = got.to_dense().unwrap().max_abs_diff(&want);
+            assert!(diff < 1e-11, "n={n} bs={bs} diff={diff}");
+        }
+    }
+
+    #[test]
+    fn multiply_single_block_grid() {
+        let c = cluster();
+        let (da, a) = rand_bm(4, 4, 30);
+        let (db, b) = rand_bm(4, 4, 31);
+        let got = a.multiply(&c, &NativeBackend, &b).unwrap();
+        assert!(got.to_dense().unwrap().max_abs_diff(&matmul(&da, &db)) < 1e-12);
+    }
+
+    #[test]
+    fn multiply_grid_mismatch_errors() {
+        let c = cluster();
+        let a = BlockMatrix::identity(8, 2).unwrap();
+        let b = BlockMatrix::identity(8, 4).unwrap();
+        assert!(a.multiply(&c, &NativeBackend, &b).is_err());
+    }
+
+    #[test]
+    fn subtract_matches_dense() {
+        let c = cluster();
+        let (da, a) = rand_bm(8, 4, 40);
+        let (db, b) = rand_bm(8, 4, 41);
+        let got = a.subtract(&c, &NativeBackend, &b).unwrap();
+        assert!(got.to_dense().unwrap().max_abs_diff(&da.sub(&db).unwrap()) < 1e-15);
+    }
+
+    #[test]
+    fn scalar_mul_matches_dense() {
+        let c = cluster();
+        let (d, a) = rand_bm(8, 2, 50);
+        let got = a.scalar_mul(&c, &NativeBackend, -2.5).unwrap();
+        assert!(got.to_dense().unwrap().max_abs_diff(&d.scale(-2.5)) < 1e-15);
+    }
+
+    #[test]
+    fn transpose_matches_dense() {
+        let c = cluster();
+        let (d, a) = rand_bm(8, 4, 60);
+        let got = a.transpose(&c);
+        assert!(got.to_dense().unwrap().max_abs_diff(&d.transpose()) < 1e-15);
+    }
+
+    #[test]
+    fn multiply_by_identity_is_noop() {
+        let c = cluster();
+        let (d, a) = rand_bm(8, 2, 70);
+        let eye = BlockMatrix::identity(8, 2).unwrap();
+        let got = a.multiply(&c, &NativeBackend, &eye).unwrap();
+        assert!(got.to_dense().unwrap().max_abs_diff(&d) < 1e-14);
+    }
+
+    #[test]
+    fn metrics_use_paper_method_names() {
+        let c = cluster();
+        let (_, a) = rand_bm(8, 2, 80);
+        let (_, b) = rand_bm(8, 2, 81);
+        let _ = a.multiply(&c, &NativeBackend, &b).unwrap();
+        let _ = a.split(&c).unwrap();
+        let _ = a.scalar_mul(&c, &NativeBackend, 2.0).unwrap();
+        let snap = c.metrics();
+        for name in ["multiply", "breakMat", "xy", "scalar"] {
+            assert!(snap.method(name).is_some(), "missing metric {name}");
+        }
+    }
+
+    #[test]
+    fn property_distributed_ops_match_dense() {
+        forall(
+            "blockmatrix ≡ dense algebra",
+            0xB0,
+            8,
+            |r| {
+                let pow = 2 + r.next_usize(2); // n = 4 or 8
+                let n = 1usize << pow;
+                let bs = 1usize << (1 + r.next_usize(pow - 1));
+                (n, bs, r.next_u64())
+            },
+            |&(n, bs, seed)| {
+                let c = cluster();
+                let mut rng = Rng::new(seed);
+                let da = Matrix::random_uniform(n, n, -1.0, 1.0, &mut rng);
+                let db = Matrix::random_uniform(n, n, -1.0, 1.0, &mut rng);
+                let a = BlockMatrix::from_dense(&da, bs).unwrap();
+                let b = BlockMatrix::from_dense(&db, bs).unwrap();
+                let prod = a
+                    .multiply(&c, &NativeBackend, &b)
+                    .map_err(|e| e.to_string())?
+                    .to_dense()
+                    .unwrap();
+                let want = linalg::matmul(&da, &db);
+                let diff = prod.max_abs_diff(&want);
+                if diff > 1e-10 {
+                    return Err(format!("multiply diff {diff} (n={n} bs={bs})"));
+                }
+                let sub = a
+                    .subtract(&c, &NativeBackend, &b)
+                    .map_err(|e| e.to_string())?
+                    .to_dense()
+                    .unwrap();
+                if sub.max_abs_diff(&da.sub(&db).unwrap()) > 1e-14 {
+                    return Err("subtract mismatch".into());
+                }
+                Ok(())
+            },
+        );
+    }
+}

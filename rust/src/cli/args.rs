@@ -1,0 +1,138 @@
+//! Tiny argv parser: positionals, `--flag`, `--flag value`, repeatable
+//! flags, and strict "no unknown flags" finishing.
+
+use crate::error::{Result, SpinError};
+
+/// Mutable view over the remaining argv tokens.
+pub struct Args {
+    tokens: Vec<Option<String>>,
+}
+
+impl Args {
+    pub fn new(argv: Vec<String>) -> Self {
+        Args {
+            tokens: argv.into_iter().map(Some).collect(),
+        }
+    }
+
+    /// Consume the next unconsumed positional (non-`--`) token.
+    pub fn positional(&mut self) -> Option<String> {
+        for slot in self.tokens.iter_mut() {
+            if let Some(tok) = slot {
+                if !tok.starts_with("--") {
+                    return slot.take();
+                }
+            }
+        }
+        None
+    }
+
+    /// Consume a boolean flag; true if present.
+    pub fn flag(&mut self, name: &str) -> bool {
+        for slot in self.tokens.iter_mut() {
+            if slot.as_deref() == Some(name) {
+                *slot = None;
+                return true;
+            }
+        }
+        false
+    }
+
+    /// Consume `--name value` (or `--name=value`); errors if the value is
+    /// missing.
+    pub fn flag_value(&mut self, name: &str) -> Result<Option<String>> {
+        let eq_prefix = format!("{name}=");
+        for i in 0..self.tokens.len() {
+            let Some(tok) = self.tokens[i].as_deref() else {
+                continue;
+            };
+            if let Some(v) = tok.strip_prefix(&eq_prefix) {
+                let v = v.to_string();
+                self.tokens[i] = None;
+                return Ok(Some(v));
+            }
+            if tok == name {
+                self.tokens[i] = None;
+                let val = self
+                    .tokens
+                    .get_mut(i + 1)
+                    .and_then(Option::take)
+                    .ok_or_else(|| SpinError::config(format!("flag {name} needs a value")))?;
+                if val.starts_with("--") {
+                    return Err(SpinError::config(format!("flag {name} needs a value")));
+                }
+                return Ok(Some(val));
+            }
+        }
+        Ok(None)
+    }
+
+    /// Consume every occurrence of `--name value`.
+    pub fn flag_values(&mut self, name: &str) -> Result<Vec<String>> {
+        let mut out = Vec::new();
+        while let Some(v) = self.flag_value(name)? {
+            out.push(v);
+        }
+        Ok(out)
+    }
+
+    /// Error if any tokens were not consumed (catches typos).
+    pub fn finish(self) -> Result<()> {
+        let leftovers: Vec<String> = self.tokens.into_iter().flatten().collect();
+        if leftovers.is_empty() {
+            Ok(())
+        } else {
+            Err(SpinError::config(format!(
+                "unrecognized arguments: {}",
+                leftovers.join(" ")
+            )))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn args(s: &str) -> Args {
+        Args::new(s.split_whitespace().map(String::from).collect())
+    }
+
+    #[test]
+    fn positional_and_flags() {
+        let mut a = args("invert --n 64 --residual-check --set x=1 --set y=2");
+        assert_eq!(a.positional().as_deref(), Some("invert"));
+        assert_eq!(a.flag_value("--n").unwrap().as_deref(), Some("64"));
+        assert!(a.flag("--residual-check"));
+        assert_eq!(a.flag_values("--set").unwrap(), vec!["x=1", "y=2"]);
+        a.finish().unwrap();
+    }
+
+    #[test]
+    fn equals_syntax() {
+        let mut a = args("--n=128");
+        assert_eq!(a.flag_value("--n").unwrap().as_deref(), Some("128"));
+        a.finish().unwrap();
+    }
+
+    #[test]
+    fn missing_value_errors() {
+        let mut a = args("--n");
+        assert!(a.flag_value("--n").is_err());
+        let mut b = args("--n --other");
+        assert!(b.flag_value("--n").is_err());
+    }
+
+    #[test]
+    fn leftover_tokens_error() {
+        let a = args("--typo-flag");
+        assert!(a.finish().is_err());
+    }
+
+    #[test]
+    fn absent_flag_is_none_or_false() {
+        let mut a = args("cmd");
+        assert_eq!(a.flag_value("--missing").unwrap(), None);
+        assert!(!a.flag("--missing"));
+    }
+}

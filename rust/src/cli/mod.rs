@@ -1,0 +1,379 @@
+//! Command-line launcher (no `clap` in the offline vendor set — a small
+//! hand-rolled parser).
+//!
+//! ```text
+//! spin invert  --n 1024 --block-size 128 [--algo spin|lu] [--backend native|xla]
+//!              [--generator diag-dominant|spd] [--seed N] [--fuse-leaf-2x2]
+//!              [--residual-check] [--set cluster.key=value]...
+//! spin gen     --n 512 --block-size 64 --out DIR [--generator …] [--seed N]
+//! spin cost    [--n 4096] [--b 8] [--cores 30] [--calibrate]
+//! spin exp     figure2|figure3|figure4|figure5|table3|all [--smoke|--full]
+//! spin info
+//! ```
+
+mod args;
+
+pub use args::Args;
+
+use std::path::PathBuf;
+
+use crate::algos::Algorithm;
+use crate::blockmatrix::BlockMatrix;
+use crate::cluster::Cluster;
+use crate::config::{ClusterConfig, GeneratorKind, JobConfig};
+use crate::costmodel::{self, CostConstants};
+use crate::error::{Result, SpinError};
+use crate::experiments::{self, Scale};
+use crate::linalg::inverse_residual;
+use crate::runtime::{make_backend, Manifest};
+use crate::ser::bin;
+use crate::util::fmt;
+
+/// Entry point for the `spin` binary; returns the process exit code.
+pub fn run(argv: Vec<String>) -> i32 {
+    crate::util::logger::init();
+    match dispatch(argv) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e}");
+            1
+        }
+    }
+}
+
+fn dispatch(argv: Vec<String>) -> Result<()> {
+    let mut args = Args::new(argv);
+    let cmd = args.positional().unwrap_or_else(|| "help".to_string());
+    match cmd.as_str() {
+        "invert" => cmd_invert(args),
+        "gen" => cmd_gen(args),
+        "cost" => cmd_cost(args),
+        "exp" => cmd_exp(args),
+        "info" => cmd_info(args),
+        "help" | "--help" | "-h" => {
+            print!("{}", usage());
+            Ok(())
+        }
+        other => Err(SpinError::config(format!(
+            "unknown command `{other}`\n{}",
+            usage()
+        ))),
+    }
+}
+
+pub fn usage() -> String {
+    "SPIN — Strassen-based distributed matrix inversion (ICDCN '18 reproduction)\n\
+     \n\
+     USAGE: spin <command> [flags]\n\
+     \n\
+     COMMANDS:\n\
+     \x20 invert   invert a generated matrix on the simulated cluster\n\
+     \x20 gen      generate a matrix and write it as a block store\n\
+     \x20 cost     print the Table-1 cost model (optionally calibrated)\n\
+     \x20 exp      run a paper experiment: figure2|figure3|figure4|figure5|table3|all\n\
+     \x20 info     show cluster config and artifact status\n\
+     \n\
+     COMMON FLAGS:\n\
+     \x20 --n N --block-size S --algo spin|lu --backend native|xla\n\
+     \x20 --generator diag-dominant|spd --seed N --fuse-leaf-2x2\n\
+     \x20 --residual-check --set key=value (cluster overrides, repeatable)\n\
+     \x20 --smoke | --full (experiment scale)\n"
+        .to_string()
+}
+
+fn cluster_config(args: &mut Args) -> Result<ClusterConfig> {
+    let mut cfg = match args.flag_value("--cluster-config")? {
+        Some(path) => ClusterConfig::from_file(std::path::Path::new(&path))?,
+        None => ClusterConfig::paper(),
+    };
+    if let Some(backend) = args.flag_value("--backend")? {
+        cfg.apply_override(&format!("backend={backend}"))?;
+    }
+    for kv in args.flag_values("--set")? {
+        cfg.apply_override(&kv)?;
+    }
+    Ok(cfg)
+}
+
+fn job_config(args: &mut Args) -> Result<JobConfig> {
+    let n = args
+        .flag_value("--n")?
+        .map(|v| v.parse::<usize>().map_err(|_| SpinError::config("--n needs an integer")))
+        .transpose()?
+        .unwrap_or(256);
+    let bs = args
+        .flag_value("--block-size")?
+        .map(|v| {
+            v.parse::<usize>()
+                .map_err(|_| SpinError::config("--block-size needs an integer"))
+        })
+        .transpose()?
+        .unwrap_or_else(|| (n / 4).max(1));
+    let mut job = JobConfig::new(n, bs);
+    if let Some(s) = args.flag_value("--seed")? {
+        job.seed = s
+            .parse()
+            .map_err(|_| SpinError::config("--seed needs an integer"))?;
+    }
+    if let Some(g) = args.flag_value("--generator")? {
+        job.generator = GeneratorKind::parse(&g)?;
+    }
+    if args.flag("--fuse-leaf-2x2") {
+        job.fuse_leaf_2x2 = true;
+    }
+    if args.flag("--residual-check") {
+        job.residual_check = true;
+    }
+    for kv in args.flag_values("--job")? {
+        job.apply_override(&kv)?;
+    }
+    job.validate()?;
+    Ok(job)
+}
+
+fn cmd_invert(mut args: Args) -> Result<()> {
+    let cfg = cluster_config(&mut args)?;
+    let job = job_config(&mut args)?;
+    let algo = match args.flag_value("--algo")? {
+        Some(a) => Algorithm::parse(&a)?,
+        None => Algorithm::Spin,
+    };
+    args.finish()?;
+
+    println!(
+        "inverting {}x{} (b = {}, block {}x{}) with {} on {} executors × {} cores [{} backend]",
+        job.n,
+        job.n,
+        job.num_splits(),
+        job.block_size,
+        job.block_size,
+        algo.name(),
+        cfg.total_executors(),
+        cfg.cores_per_executor,
+        cfg.backend.name(),
+    );
+    let cluster = Cluster::new(cfg.clone());
+    let kernels = make_backend(&cfg)?;
+    let a = BlockMatrix::random(&job)?;
+    let a_dense = a.to_dense()?;
+    let inv = algo.invert(&cluster, kernels.as_ref(), &a, &job)?;
+    let resid = inverse_residual(&a_dense, &inv.to_dense()?);
+
+    println!("\nper-method breakdown:\n{}", cluster.metrics().render_table());
+    println!(
+        "virtual wall clock: {}   residual: {resid:.3e}",
+        fmt::secs(cluster.virtual_secs())
+    );
+    Ok(())
+}
+
+fn cmd_gen(mut args: Args) -> Result<()> {
+    let job = job_config(&mut args)?;
+    let out = args
+        .flag_value("--out")?
+        .ok_or_else(|| SpinError::config("gen requires --out DIR"))?;
+    args.finish()?;
+    let a = BlockMatrix::random(&job)?;
+    let nblocks = a.nblocks();
+    let blocks = a
+        .to_dense()?; // materialize once, then re-split for the store
+    let bm = BlockMatrix::from_dense(&blocks, job.block_size)?;
+    let iter = (0..nblocks)
+        .flat_map(|i| (0..nblocks).map(move |j| (i, j)))
+        .map(|(i, j)| ((i, j), bm.get_block(i, j).unwrap().matrix.clone()));
+    bin::write_block_store(std::path::Path::new(&out), nblocks, job.block_size, iter)?;
+    println!(
+        "wrote {}x{} block store ({} blocks of {}x{}) to {out}",
+        job.n, job.n, nblocks * nblocks, job.block_size, job.block_size
+    );
+    Ok(())
+}
+
+fn cmd_cost(mut args: Args) -> Result<()> {
+    let cfg = cluster_config(&mut args)?;
+    let n = args
+        .flag_value("--n")?
+        .map(|v| v.parse().unwrap_or(4096))
+        .unwrap_or(4096);
+    let b = args
+        .flag_value("--b")?
+        .map(|v| v.parse().unwrap_or(8))
+        .unwrap_or(8);
+    let cores = args
+        .flag_value("--cores")?
+        .map(|v| v.parse().unwrap_or(cfg.total_cores()))
+        .unwrap_or_else(|| cfg.total_cores());
+    let constants = if args.flag("--calibrate") {
+        let rep = costmodel::calibrate(128, &cfg.network);
+        println!(
+            "calibrated on this host: leaf {:.2} GF/s, gemm {:.2} GF/s\n",
+            rep.leaf_gflops, rep.gemm_gflops
+        );
+        rep.constants
+    } else {
+        CostConstants::default()
+    };
+    args.finish()?;
+    print!("{}", costmodel::render_table1(n, b, cores, &constants));
+    Ok(())
+}
+
+fn cmd_exp(mut args: Args) -> Result<()> {
+    let which = args
+        .positional()
+        .ok_or_else(|| SpinError::config("exp requires a target: figure2|figure3|figure4|figure5|table3|all"))?;
+    let cfg = cluster_config(&mut args)?;
+    let scale = if args.flag("--smoke") {
+        Scale::smoke()
+    } else if args.flag("--full") {
+        Scale::full()
+    } else {
+        Scale::default_scale()
+    };
+    let seed = args
+        .flag_value("--seed")?
+        .map(|v| v.parse().unwrap_or(42))
+        .unwrap_or(42);
+    args.finish()?;
+
+    let run_one = |name: &str| -> Result<()> {
+        match name {
+            "figure2" => {
+                let rows = experiments::figure2::run(&cfg, &scale, seed)?;
+                print!("{}", experiments::figure2::render(&rows)?);
+                match experiments::figure2::check_shape(&rows) {
+                    Ok(()) => println!("shape check: OK (SPIN ≤ LU, gap grows with n)"),
+                    Err(e) => println!("shape check: DEVIATION — {e}"),
+                }
+            }
+            "figure3" => {
+                let rows = experiments::figure3::run(&cfg, &scale, seed)?;
+                print!("{}", experiments::figure3::render(&rows)?);
+                match experiments::figure3::check_shape(&rows, true) {
+                    Ok(()) => println!("shape check: OK (SPIN wins pointwise, U-shape present)"),
+                    Err(e) => println!("shape check: DEVIATION — {e}"),
+                }
+            }
+            "figure4" => {
+                let (rows, _) = experiments::figure4::run(&cfg, &scale, seed)?;
+                print!("{}", experiments::figure4::render(&rows)?);
+                match experiments::figure4::check_shape(&rows) {
+                    Ok(()) => println!("shape check: OK (model within 10x pointwise)"),
+                    Err(e) => println!("shape check: DEVIATION — {e}"),
+                }
+            }
+            "figure5" => {
+                let rows = experiments::figure5::run(&cfg, &scale, seed)?;
+                print!("{}", experiments::figure5::render(&rows)?);
+                match experiments::figure5::check_shape(&rows) {
+                    Ok(()) => println!("shape check: OK (monotone scaling)"),
+                    Err(e) => println!("shape check: DEVIATION — {e}"),
+                }
+            }
+            "table3" => {
+                let n = scale.sizes[scale.sizes.len() / 2];
+                let cols = experiments::table3::run(&cfg, n, scale.max_b, seed)?;
+                print!("{}", experiments::table3::render(n, &cols)?);
+                match experiments::table3::check_shape(&cols) {
+                    Ok(()) => println!("shape check: OK (leaf falls, multiply rises)"),
+                    Err(e) => println!("shape check: DEVIATION — {e}"),
+                }
+            }
+            other => {
+                return Err(SpinError::config(format!("unknown experiment `{other}`")));
+            }
+        }
+        Ok(())
+    };
+
+    if which == "all" {
+        for name in ["figure2", "figure3", "figure4", "figure5", "table3"] {
+            println!("\n=== {name} ===");
+            run_one(name)?;
+        }
+        Ok(())
+    } else {
+        run_one(&which)
+    }
+}
+
+fn cmd_info(mut args: Args) -> Result<()> {
+    let cfg = cluster_config(&mut args)?;
+    args.finish()?;
+    println!("cluster config:\n{}", cfg.to_json().pretty());
+    let dir: PathBuf = cfg.artifacts_dir.clone();
+    match Manifest::load(&dir) {
+        Ok(m) => println!(
+            "artifacts: {} programs in {} (dtype {}, block sizes {:?})",
+            m.len(),
+            dir.display(),
+            m.dtype,
+            m.block_sizes
+        ),
+        Err(e) => println!("artifacts: unavailable ({e})"),
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &str) -> Vec<String> {
+        s.split_whitespace().map(String::from).collect()
+    }
+
+    #[test]
+    fn help_runs() {
+        assert_eq!(run(argv("help")), 0);
+    }
+
+    #[test]
+    fn unknown_command_fails() {
+        assert_eq!(run(argv("frobnicate")), 1);
+    }
+
+    #[test]
+    fn invert_small_native() {
+        assert_eq!(
+            run(argv(
+                "invert --n 32 --block-size 8 --backend native --residual-check"
+            )),
+            0
+        );
+    }
+
+    #[test]
+    fn invert_lu_algo() {
+        assert_eq!(
+            run(argv("invert --n 16 --block-size 4 --algo lu")),
+            0
+        );
+    }
+
+    #[test]
+    fn invert_rejects_bad_flags() {
+        assert_eq!(run(argv("invert --n 33 --block-size 8")), 1); // non-pow2
+        assert_eq!(run(argv("invert --bogus-flag")), 1);
+    }
+
+    #[test]
+    fn cost_renders() {
+        assert_eq!(run(argv("cost --n 1024 --b 8 --cores 30")), 0);
+    }
+
+    #[test]
+    fn gen_writes_store() {
+        let dir = std::env::temp_dir().join(format!("spin_cli_gen_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let cmd = format!("gen --n 16 --block-size 4 --out {}", dir.display());
+        assert_eq!(run(argv(&cmd)), 0);
+        let meta = crate::ser::bin::read_block_store_meta(&dir).unwrap();
+        assert_eq!(meta.nblocks, 4);
+    }
+
+    #[test]
+    fn info_runs() {
+        assert_eq!(run(argv("info")), 0);
+    }
+}

@@ -1,0 +1,254 @@
+//! Per-method metrics registry — regenerates the paper's Table 3
+//! ("Experimental results of wall clock execution time of different
+//! methods in SPIN").
+
+use std::collections::BTreeMap;
+use std::sync::Mutex;
+
+use crate::ser::json::Json;
+use crate::util::fmt;
+
+/// One executed stage (narrow pass or shuffle exchange).
+#[derive(Debug, Clone)]
+pub struct StageReport {
+    /// Method attribution (breakMat, xy, multiply, subtract, scalarMul,
+    /// arrange, leafNode, …).
+    pub method: String,
+    /// Tasks in the stage (0 for pure shuffle exchanges).
+    pub tasks: usize,
+    /// Total CPU seconds across tasks (measured, real).
+    pub compute_secs: f64,
+    /// Virtual wall-clock seconds after list scheduling onto slots.
+    pub makespan_secs: f64,
+    /// Bytes that crossed a simulated executor boundary.
+    pub shuffle_bytes: u64,
+    /// Bytes relocated to a different partition (upper bound on
+    /// cross-executor traffic at any executor count) — used by replay.
+    pub shuffle_total_bytes: u64,
+    /// Simulated interconnect seconds for those bytes.
+    pub shuffle_secs: f64,
+    /// Measured per-task durations (empty for pure shuffle exchanges) —
+    /// lets experiments replay the schedule on a different topology
+    /// without re-running the compute (noise-free scaling curves).
+    pub task_durations: Vec<f64>,
+}
+
+/// Accumulated per-method totals.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct MethodStats {
+    pub calls: usize,
+    pub tasks: usize,
+    pub compute_secs: f64,
+    /// Virtual seconds (makespan + shuffle) — the paper's per-method
+    /// "wall clock execution time".
+    pub virtual_secs: f64,
+    pub shuffle_bytes: u64,
+}
+
+/// Thread-safe metrics registry owned by a [`crate::cluster::Cluster`].
+pub struct Metrics {
+    inner: Mutex<MetricsInner>,
+}
+
+#[derive(Default)]
+struct MetricsInner {
+    methods: BTreeMap<String, MethodStats>,
+    stages: Vec<StageReport>,
+}
+
+impl Metrics {
+    pub fn new() -> Self {
+        Metrics {
+            inner: Mutex::new(MetricsInner::default()),
+        }
+    }
+
+    pub fn record_stage(&self, report: StageReport) {
+        let mut inner = self.inner.lock().unwrap();
+        let stats = inner.methods.entry(report.method.clone()).or_default();
+        stats.calls += 1;
+        stats.tasks += report.tasks;
+        stats.compute_secs += report.compute_secs;
+        stats.virtual_secs += report.makespan_secs + report.shuffle_secs;
+        stats.shuffle_bytes += report.shuffle_bytes;
+        inner.stages.push(report);
+    }
+
+    pub fn reset(&self) {
+        let mut inner = self.inner.lock().unwrap();
+        inner.methods.clear();
+        inner.stages.clear();
+    }
+
+    pub fn snapshot(&self) -> MetricsSnapshot {
+        let inner = self.inner.lock().unwrap();
+        MetricsSnapshot {
+            methods: inner.methods.clone(),
+            stages: inner.stages.clone(),
+        }
+    }
+}
+
+impl Default for Metrics {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Immutable view of the registry at a point in time.
+#[derive(Debug, Clone)]
+pub struct MetricsSnapshot {
+    methods: BTreeMap<String, MethodStats>,
+    stages: Vec<StageReport>,
+}
+
+impl MetricsSnapshot {
+    pub fn method(&self, name: &str) -> Option<&MethodStats> {
+        self.methods.get(name)
+    }
+
+    pub fn methods(&self) -> impl Iterator<Item = (&String, &MethodStats)> {
+        self.methods.iter()
+    }
+
+    pub fn stages(&self) -> &[StageReport] {
+        &self.stages
+    }
+
+    /// Sum of per-method virtual seconds.
+    pub fn total_virtual_secs(&self) -> f64 {
+        self.methods.values().map(|s| s.virtual_secs).sum()
+    }
+
+    pub fn total_shuffle_bytes(&self) -> u64 {
+        self.methods.values().map(|s| s.shuffle_bytes).sum()
+    }
+
+    /// Render the Table-3-shaped per-method breakdown.
+    pub fn render_table(&self) -> String {
+        let mut t = fmt::Table::new(vec![
+            "method",
+            "calls",
+            "tasks",
+            "compute",
+            "virtual",
+            "shuffled",
+        ]);
+        for (name, s) in &self.methods {
+            t.row(vec![
+                name.clone(),
+                s.calls.to_string(),
+                s.tasks.to_string(),
+                fmt::secs(s.compute_secs),
+                fmt::secs(s.virtual_secs),
+                fmt::bytes(s.shuffle_bytes),
+            ]);
+        }
+        t.render()
+    }
+
+    pub fn to_json(&self) -> Json {
+        let methods: std::collections::BTreeMap<String, Json> = self
+            .methods
+            .iter()
+            .map(|(k, s)| {
+                (
+                    k.clone(),
+                    Json::object(vec![
+                        ("calls", Json::num(s.calls as f64)),
+                        ("tasks", Json::num(s.tasks as f64)),
+                        ("compute_secs", Json::num(s.compute_secs)),
+                        ("virtual_secs", Json::num(s.virtual_secs)),
+                        ("shuffle_bytes", Json::num(s.shuffle_bytes as f64)),
+                    ]),
+                )
+            })
+            .collect();
+        Json::Object(methods)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn stage(method: &str, tasks: usize, compute: f64, makespan: f64) -> StageReport {
+        StageReport {
+            method: method.into(),
+            tasks,
+            compute_secs: compute,
+            makespan_secs: makespan,
+            shuffle_bytes: 0,
+            shuffle_total_bytes: 0,
+            shuffle_secs: 0.0,
+            task_durations: vec![compute / tasks.max(1) as f64; tasks],
+        }
+    }
+
+    #[test]
+    fn accumulates_per_method() {
+        let m = Metrics::new();
+        m.record_stage(stage("multiply", 4, 2.0, 0.5));
+        m.record_stage(stage("multiply", 8, 4.0, 1.0));
+        m.record_stage(stage("subtract", 2, 0.2, 0.1));
+        let snap = m.snapshot();
+        let mult = snap.method("multiply").unwrap();
+        assert_eq!(mult.calls, 2);
+        assert_eq!(mult.tasks, 12);
+        assert!((mult.compute_secs - 6.0).abs() < 1e-12);
+        assert!((mult.virtual_secs - 1.5).abs() < 1e-12);
+        assert_eq!(snap.stages().len(), 3);
+    }
+
+    #[test]
+    fn shuffle_time_counts_into_virtual() {
+        let m = Metrics::new();
+        m.record_stage(StageReport {
+            method: "multiply".into(),
+            tasks: 0,
+            compute_secs: 0.0,
+            makespan_secs: 0.0,
+            shuffle_bytes: 1024,
+            shuffle_total_bytes: 2048,
+            shuffle_secs: 0.25,
+            task_durations: Vec::new(),
+        });
+        let snap = m.snapshot();
+        let s = snap.method("multiply").unwrap();
+        assert_eq!(s.shuffle_bytes, 1024);
+        assert!((s.virtual_secs - 0.25).abs() < 1e-12);
+        assert_eq!(snap.total_shuffle_bytes(), 1024);
+    }
+
+    #[test]
+    fn reset_clears() {
+        let m = Metrics::new();
+        m.record_stage(stage("x", 1, 0.1, 0.1));
+        m.reset();
+        let snap = m.snapshot();
+        assert!(snap.method("x").is_none());
+        assert!(snap.stages().is_empty());
+    }
+
+    #[test]
+    fn render_and_json() {
+        let m = Metrics::new();
+        m.record_stage(stage("breakMat", 3, 0.5, 0.2));
+        let snap = m.snapshot();
+        let table = snap.render_table();
+        assert!(table.contains("breakMat"));
+        let j = snap.to_json();
+        assert_eq!(
+            j.get("breakMat").unwrap().get("tasks").unwrap().as_i64(),
+            Some(3)
+        );
+    }
+
+    #[test]
+    fn total_virtual_sums_methods() {
+        let m = Metrics::new();
+        m.record_stage(stage("a", 1, 0.0, 1.0));
+        m.record_stage(stage("b", 1, 0.0, 2.0));
+        assert!((m.snapshot().total_virtual_secs() - 3.0).abs() < 1e-12);
+    }
+}

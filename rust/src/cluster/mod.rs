@@ -1,0 +1,459 @@
+//! The Spark stand-in: a partitioned dataflow substrate with measured task
+//! execution and **virtual-time** accounting.
+//!
+//! Why virtual time: the paper ran on 3 nodes × 30 task slots; this testbed
+//! has one physical core. The paper's own wall-clock analysis (§4) is a
+//! makespan model — per-method compute divided by the parallelization
+//! factor `min(tasks, cores)`, plus shuffle. So the substrate executes every
+//! task *for real* (measuring its CPU cost), then derives the cluster wall
+//! clock by list-scheduling those measured durations onto the configured
+//! `executors × cores` slots and charging shuffle bytes to the simulated
+//! interconnect. This reproduces the paper's parallelism effects (U-shaped
+//! block-size curves, executor scaling) faithfully on any host.
+//! See DESIGN.md §3.
+//!
+//! The API is deliberately Spark-shaped: [`Rdd`] (partitioned collection),
+//! narrow ops (`map`, `filter`, `union`), wide ops (`group_by_key`,
+//! `cogroup`, `reduce_by_key`) that shuffle with byte accounting, and a
+//! per-method [`Metrics`] registry that regenerates the paper's Table 3.
+
+mod executor;
+mod metrics;
+mod rdd;
+mod scheduler;
+mod shuffle;
+
+pub use executor::WorkerPool;
+pub use metrics::{MethodStats, Metrics, MetricsSnapshot, StageReport};
+pub use rdd::Rdd;
+pub use scheduler::{list_schedule_makespan, VirtualClock};
+pub use shuffle::{executor_of_partition, hash_partition, Bytes};
+
+use std::sync::Mutex;
+
+use crate::config::ClusterConfig;
+
+/// A simulated Spark cluster: topology + task execution + virtual clock +
+/// metrics. One `Cluster` corresponds to one Spark application context.
+pub struct Cluster {
+    config: ClusterConfig,
+    metrics: Metrics,
+    vclock: Mutex<VirtualClock>,
+    pool: WorkerPool,
+    /// Interconnect time of the most recent shuffle exchange, not yet
+    /// charged to the clock: Spark overlaps shuffle fetch with reduce-side
+    /// execution, so it is folded into the next narrow stage as
+    /// `max(compute, transfer)` rather than summed.
+    pending_shuffle: Mutex<f64>,
+}
+
+impl Cluster {
+    pub fn new(config: ClusterConfig) -> Self {
+        let pool = WorkerPool::new(config.worker_threads);
+        Cluster {
+            config,
+            metrics: Metrics::new(),
+            vclock: Mutex::new(VirtualClock::new()),
+            pool,
+            pending_shuffle: Mutex::new(0.0),
+        }
+    }
+
+    pub fn config(&self) -> &ClusterConfig {
+        &self.config
+    }
+
+    /// Total simulated task slots (the paper's `cores`).
+    pub fn slots(&self) -> usize {
+        self.config.total_cores()
+    }
+
+    /// Current virtual wall-clock seconds consumed by this cluster.
+    pub fn virtual_secs(&self) -> f64 {
+        self.vclock.lock().unwrap().now()
+    }
+
+    /// Reset the virtual clock and metrics (new measurement window).
+    pub fn reset(&self) {
+        self.vclock.lock().unwrap().reset();
+        *self.pending_shuffle.lock().unwrap() = 0.0;
+        self.metrics.reset();
+    }
+
+    pub fn metrics(&self) -> MetricsSnapshot {
+        self.metrics.snapshot()
+    }
+
+    // ---------- RDD creation ----------
+
+    /// Distribute `items` across `nparts` partitions round-robin
+    /// (Spark `parallelize`).
+    pub fn parallelize<T>(&self, items: Vec<T>, nparts: usize) -> Rdd<T> {
+        Rdd::from_items(items, nparts.max(1))
+    }
+
+    // ---------- narrow transformations ----------
+
+    /// Per-element map; one task per partition; no shuffle.
+    pub fn map<T: Send, U: Send>(
+        &self,
+        method: &str,
+        input: Rdd<T>,
+        f: impl Fn(T) -> U + Sync,
+    ) -> Rdd<U> {
+        self.run_narrow(method, input, |part| {
+            part.into_iter().map(&f).collect()
+        })
+    }
+
+    /// Per-element filter; one task per partition; no shuffle.
+    pub fn filter<T: Send>(
+        &self,
+        method: &str,
+        input: Rdd<T>,
+        pred: impl Fn(&T) -> bool + Sync,
+    ) -> Rdd<T> {
+        self.run_narrow(method, input, |part| {
+            part.into_iter().filter(|x| pred(x)).collect()
+        })
+    }
+
+    /// Per-element flat map; one task per partition; no shuffle.
+    pub fn flat_map<T: Send, U: Send, I: IntoIterator<Item = U>>(
+        &self,
+        method: &str,
+        input: Rdd<T>,
+        f: impl Fn(T) -> I + Sync,
+    ) -> Rdd<U> {
+        self.run_narrow(method, input, |part| {
+            part.into_iter().flat_map(&f).collect()
+        })
+    }
+
+    /// Concatenate two RDDs' partition lists (Spark `union` — free).
+    pub fn union<T>(&self, a: Rdd<T>, b: Rdd<T>) -> Rdd<T> {
+        a.union(b)
+    }
+
+    /// Materialize all elements on the driver (Spark `collect`).
+    pub fn collect<T>(&self, rdd: Rdd<T>) -> Vec<T> {
+        rdd.into_items()
+    }
+
+    // ---------- wide transformations (shuffle) ----------
+
+    /// Group values by key into `nparts` output partitions.
+    pub fn group_by_key<K, V>(
+        &self,
+        method: &str,
+        input: Rdd<(K, V)>,
+        nparts: usize,
+    ) -> Rdd<(K, Vec<V>)>
+    where
+        K: std::hash::Hash + Eq + Clone + Send,
+        V: Send + Bytes,
+    {
+        let buckets = self.shuffle_exchange(method, input, nparts);
+        self.run_narrow(method, buckets, |part| {
+            shuffle::group_pairs(part).into_iter().collect()
+        })
+    }
+
+    /// Co-group two keyed RDDs (the paper's `multiply` uses this to bring
+    /// matching A/B blocks to the same reducer).
+    pub fn cogroup<K, V, W>(
+        &self,
+        method: &str,
+        left: Rdd<(K, V)>,
+        right: Rdd<(K, W)>,
+        nparts: usize,
+    ) -> Rdd<(K, (Vec<V>, Vec<W>))>
+    where
+        K: std::hash::Hash + Eq + Clone + Send,
+        V: Send + Bytes,
+        W: Send + Bytes,
+    {
+        let tagged_l = self.map("cogroup-tag", left, |(k, v)| (k, shuffle::Either::L(v)));
+        let tagged_r = self.map("cogroup-tag", right, |(k, w)| (k, shuffle::Either::R(w)));
+        let both = self.union(tagged_l, tagged_r);
+        let grouped = self.group_by_key(method, both, nparts);
+        self.run_narrow(method, grouped, |part| {
+            part.into_iter()
+                .map(|(k, vals)| {
+                    let mut ls = Vec::new();
+                    let mut rs = Vec::new();
+                    for v in vals {
+                        match v {
+                            shuffle::Either::L(v) => ls.push(v),
+                            shuffle::Either::R(w) => rs.push(w),
+                        }
+                    }
+                    (k, (ls, rs))
+                })
+                .collect()
+        })
+    }
+
+    /// Shuffle + per-key reduction (used by block-matmul's sum stage).
+    pub fn reduce_by_key<K, V>(
+        &self,
+        method: &str,
+        input: Rdd<(K, V)>,
+        nparts: usize,
+        reduce: impl Fn(V, V) -> V + Sync,
+    ) -> Rdd<(K, V)>
+    where
+        K: std::hash::Hash + Eq + Clone + Send,
+        V: Send + Bytes,
+    {
+        let buckets = self.shuffle_exchange(method, input, nparts);
+        self.run_narrow(method, buckets, |part| {
+            shuffle::group_pairs(part)
+                .into_iter()
+                .map(|(k, vals)| {
+                    let mut it = vals.into_iter();
+                    let first = it.next().expect("group is non-empty");
+                    (k, it.fold(first, &reduce))
+                })
+                .collect()
+        })
+    }
+
+    // ---------- internals ----------
+
+    /// Execute one narrow stage: one task per partition, real execution on
+    /// the worker pool, measured durations list-scheduled onto the simulated
+    /// slots, metrics attributed to `method`.
+    fn run_narrow<T: Send, U: Send>(
+        &self,
+        method: &str,
+        input: Rdd<T>,
+        per_partition: impl Fn(Vec<T>) -> Vec<U> + Sync,
+    ) -> Rdd<U> {
+        let parts = input.into_partitions();
+        let ntasks = parts.len();
+        let (outputs, durations) = self.pool.run_tasks(parts, &per_partition);
+        let makespan = list_schedule_makespan(&durations, self.slots());
+        // Overlap any pending shuffle transfer with this stage's execution.
+        let pending = std::mem::take(&mut *self.pending_shuffle.lock().unwrap());
+        self.vclock.lock().unwrap().advance(makespan.max(pending));
+        self.metrics.record_stage(StageReport {
+            method: method.to_string(),
+            tasks: ntasks,
+            compute_secs: durations.iter().sum(),
+            makespan_secs: makespan,
+            shuffle_bytes: 0,
+            shuffle_total_bytes: 0,
+            shuffle_secs: 0.0,
+            task_durations: durations,
+        });
+        Rdd::from_partitions(outputs)
+    }
+
+    /// Exchange phase of a wide op: hash-partition elements into `nparts`
+    /// buckets, counting bytes that cross simulated executor boundaries and
+    /// charging them to the interconnect.
+    fn shuffle_exchange<K, V>(
+        &self,
+        method: &str,
+        input: Rdd<(K, V)>,
+        nparts: usize,
+    ) -> Rdd<(K, V)>
+    where
+        K: std::hash::Hash + Eq + Clone + Send,
+        V: Send + Bytes,
+    {
+        let executors = self.config.total_executors();
+        let (buckets, moved_bytes, total_bytes) = shuffle::exchange(input, nparts, executors);
+        // Transfers happen in parallel across executor pairs; charge the
+        // aggregate volume spread over the executor count, plus one latency.
+        let secs = if moved_bytes == 0 {
+            0.0
+        } else {
+            self.config
+                .network
+                .transfer_secs((moved_bytes / executors.max(1) as u64).max(1))
+        };
+        // Deferred: folded into the next narrow stage (fetch/execute overlap).
+        *self.pending_shuffle.lock().unwrap() += secs;
+        self.metrics.record_stage(StageReport {
+            method: method.to_string(),
+            tasks: 0,
+            compute_secs: 0.0,
+            makespan_secs: 0.0,
+            shuffle_bytes: moved_bytes,
+            shuffle_total_bytes: total_bytes,
+            shuffle_secs: secs,
+            task_durations: Vec::new(),
+        });
+        Rdd::from_partitions(buckets)
+    }
+
+    /// Run an arbitrary closure as a single named task on the pool —
+    /// used for driver-side serial steps that still cost virtual time
+    /// (e.g. the paper's single-block leaf inversion when b = 1).
+    pub fn run_single<T: Send>(&self, method: &str, f: impl FnOnce() -> T + Send) -> T {
+        let t0 = std::time::Instant::now();
+        let out = f();
+        let dt = t0.elapsed().as_secs_f64();
+        self.vclock.lock().unwrap().advance(dt);
+        self.metrics.record_stage(StageReport {
+            method: method.to_string(),
+            tasks: 1,
+            compute_secs: dt,
+            makespan_secs: dt,
+            shuffle_bytes: 0,
+            shuffle_total_bytes: 0,
+            shuffle_secs: 0.0,
+            task_durations: vec![dt],
+        });
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ClusterConfig;
+
+    fn cluster(cores: usize) -> Cluster {
+        Cluster::new(ClusterConfig::local(cores))
+    }
+
+    #[test]
+    fn map_preserves_all_elements() {
+        let c = cluster(4);
+        let rdd = c.parallelize((0..100).collect(), 8);
+        let out = c.map("test", rdd, |x: i32| x * 2);
+        let mut v = c.collect(out);
+        v.sort_unstable();
+        assert_eq!(v, (0..100).map(|x| x * 2).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn filter_keeps_matching() {
+        let c = cluster(2);
+        let rdd = c.parallelize((0..50).collect(), 4);
+        let out = c.filter("test", rdd, |x: &i32| x % 5 == 0);
+        let mut v = c.collect(out);
+        v.sort_unstable();
+        assert_eq!(v, vec![0, 5, 10, 15, 20, 25, 30, 35, 40, 45]);
+    }
+
+    #[test]
+    fn flat_map_expands() {
+        let c = cluster(2);
+        let rdd = c.parallelize(vec![1, 2, 3], 2);
+        let out = c.flat_map("test", rdd, |x: i32| vec![x; x as usize]);
+        let mut v = c.collect(out);
+        v.sort_unstable();
+        assert_eq!(v, vec![1, 2, 2, 3, 3, 3]);
+    }
+
+    #[test]
+    fn union_concatenates() {
+        let c = cluster(2);
+        let a = c.parallelize(vec![1, 2], 1);
+        let b = c.parallelize(vec![3], 1);
+        let mut v = c.collect(c.union(a, b));
+        v.sort_unstable();
+        assert_eq!(v, vec![1, 2, 3]);
+    }
+
+    #[test]
+    fn group_by_key_groups_everything() {
+        let c = cluster(4);
+        let pairs: Vec<(u32, i32)> = (0..40).map(|i| (i % 4, i as i32)).collect();
+        let rdd = c.parallelize(pairs, 8);
+        let grouped = c.group_by_key("test", rdd, 4);
+        let out = c.collect(grouped);
+        assert_eq!(out.len(), 4);
+        for (k, vals) in out {
+            assert_eq!(vals.len(), 10, "key {k}");
+            for v in vals {
+                assert_eq!(v as u32 % 4, k);
+            }
+        }
+    }
+
+    #[test]
+    fn cogroup_aligns_keys() {
+        let c = cluster(4);
+        let left = c.parallelize(vec![(1u32, 10), (2, 20), (1, 11)], 2);
+        let right = c.parallelize(vec![(1u32, -1), (3, -3)], 2);
+        let mut out = c.collect(c.cogroup("test", left, right, 3));
+        out.sort_by_key(|(k, _)| *k);
+        assert_eq!(out.len(), 3);
+        let (k1, (mut l1, r1)) = out[0].clone();
+        l1.sort_unstable();
+        assert_eq!((k1, l1, r1), (1, vec![10, 11], vec![-1]));
+        assert_eq!(out[1], (2, (vec![20], vec![])));
+        assert_eq!(out[2], (3, (vec![], vec![-3])));
+    }
+
+    #[test]
+    fn reduce_by_key_sums() {
+        let c = cluster(4);
+        let pairs: Vec<(u32, i32)> = (0..30).map(|i| (i % 3, 1)).collect();
+        let rdd = c.parallelize(pairs, 5);
+        let mut out = c.collect(c.reduce_by_key("test", rdd, 3, |a, b| a + b));
+        out.sort_by_key(|(k, _)| *k);
+        assert_eq!(out, vec![(0, 10), (1, 10), (2, 10)]);
+    }
+
+    #[test]
+    fn virtual_clock_advances_and_resets() {
+        let c = cluster(2);
+        assert_eq!(c.virtual_secs(), 0.0);
+        let rdd = c.parallelize((0..1000).collect(), 4);
+        let _ = c.collect(c.map("test", rdd, |x: i64| x * x));
+        assert!(c.virtual_secs() > 0.0);
+        c.reset();
+        assert_eq!(c.virtual_secs(), 0.0);
+    }
+
+    #[test]
+    fn metrics_attribute_methods() {
+        let c = cluster(2);
+        let rdd = c.parallelize((0..10).collect(), 2);
+        let out = c.map("alpha", rdd, |x: i32| x + 1);
+        let _ = c.collect(c.filter("beta", out, |_| true));
+        let snap = c.metrics();
+        assert!(snap.method("alpha").is_some());
+        assert!(snap.method("beta").is_some());
+        assert_eq!(snap.method("alpha").unwrap().tasks, 2);
+    }
+
+    #[test]
+    fn run_single_counts_as_task() {
+        let c = cluster(1);
+        let out = c.run_single("leafNode", || 7 * 6);
+        assert_eq!(out, 42);
+        assert_eq!(c.metrics().method("leafNode").unwrap().calls, 1);
+        assert!(c.virtual_secs() > 0.0);
+    }
+
+    #[test]
+    fn shuffle_records_bytes() {
+        // 2 executors so some data must cross the boundary.
+        let mut cfg = ClusterConfig::local(2);
+        cfg.executors_per_node = 2;
+        let c = Cluster::new(cfg);
+        let pairs: Vec<(u32, i32)> = (0..64).map(|i| (i, i as i32)).collect();
+        let rdd = c.parallelize(pairs, 4);
+        let _ = c.collect(c.group_by_key("shufl", rdd, 4));
+        let snap = c.metrics();
+        assert!(snap.method("shufl").unwrap().shuffle_bytes > 0);
+    }
+
+    #[test]
+    fn multithreaded_pool_same_results() {
+        let mut cfg = ClusterConfig::local(4);
+        cfg.worker_threads = 3;
+        let c = Cluster::new(cfg);
+        let rdd = c.parallelize((0..1000).collect(), 16);
+        let mut v = c.collect(c.map("mt", rdd, |x: i64| x * 3));
+        v.sort_unstable();
+        assert_eq!(v, (0..1000).map(|x| x * 3).collect::<Vec<_>>());
+    }
+}

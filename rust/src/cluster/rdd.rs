@@ -1,0 +1,109 @@
+//! Partitioned collection — the RDD stand-in.
+//!
+//! Unlike Spark's lazy lineage graph, this RDD is eager and materialized:
+//! the recursion driver (Algorithm 2) forces evaluation at every step
+//! anyway, and eager execution is what lets the substrate measure real
+//! per-task durations for the virtual-time model.
+
+/// A collection split into partitions; one partition = one task.
+#[derive(Debug, Clone)]
+pub struct Rdd<T> {
+    partitions: Vec<Vec<T>>,
+}
+
+impl<T> Rdd<T> {
+    /// Round-robin distribute items over `nparts` partitions.
+    pub fn from_items(items: Vec<T>, nparts: usize) -> Self {
+        assert!(nparts > 0, "need at least one partition");
+        let mut partitions: Vec<Vec<T>> = (0..nparts).map(|_| Vec::new()).collect();
+        for (i, item) in items.into_iter().enumerate() {
+            partitions[i % nparts].push(item);
+        }
+        Rdd { partitions }
+    }
+
+    pub fn from_partitions(partitions: Vec<Vec<T>>) -> Self {
+        assert!(!partitions.is_empty(), "need at least one partition");
+        Rdd { partitions }
+    }
+
+    pub fn num_partitions(&self) -> usize {
+        self.partitions.len()
+    }
+
+    pub fn len(&self) -> usize {
+        self.partitions.iter().map(Vec::len).sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn partitions(&self) -> &[Vec<T>] {
+        &self.partitions
+    }
+
+    pub fn into_partitions(self) -> Vec<Vec<T>> {
+        self.partitions
+    }
+
+    /// Flatten to a single Vec (driver-side `collect`).
+    pub fn into_items(self) -> Vec<T> {
+        self.partitions.into_iter().flatten().collect()
+    }
+
+    /// Concatenate partition lists (Spark `union` keeps both lineages'
+    /// partitioning).
+    pub fn union(mut self, other: Rdd<T>) -> Rdd<T> {
+        self.partitions.extend(other.partitions);
+        self
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = &T> {
+        self.partitions.iter().flatten()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn round_robin_distribution() {
+        let rdd = Rdd::from_items((0..10).collect::<Vec<i32>>(), 3);
+        assert_eq!(rdd.num_partitions(), 3);
+        assert_eq!(rdd.len(), 10);
+        assert_eq!(rdd.partitions()[0], vec![0, 3, 6, 9]);
+        assert_eq!(rdd.partitions()[1], vec![1, 4, 7]);
+    }
+
+    #[test]
+    fn empty_partitions_allowed() {
+        let rdd = Rdd::from_items(vec![1], 4);
+        assert_eq!(rdd.num_partitions(), 4);
+        assert_eq!(rdd.len(), 1);
+        assert!(!rdd.is_empty());
+        assert!(Rdd::<i32>::from_items(vec![], 2).is_empty());
+    }
+
+    #[test]
+    fn union_keeps_partitions() {
+        let a = Rdd::from_items(vec![1, 2], 2);
+        let b = Rdd::from_items(vec![3], 1);
+        let u = a.union(b);
+        assert_eq!(u.num_partitions(), 3);
+        assert_eq!(u.len(), 3);
+    }
+
+    #[test]
+    fn into_items_flattens_in_partition_order() {
+        let rdd = Rdd::from_partitions(vec![vec![1, 2], vec![3]]);
+        assert_eq!(rdd.into_items(), vec![1, 2, 3]);
+    }
+
+    #[test]
+    #[should_panic(expected = "at least one partition")]
+    fn zero_partitions_panics() {
+        let _ = Rdd::from_items(vec![1], 0);
+    }
+}

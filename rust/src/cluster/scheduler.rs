@@ -1,0 +1,153 @@
+//! Virtual-time core: FIFO list scheduling of measured task durations onto
+//! simulated slots, and the monotone virtual clock.
+//!
+//! This is exactly the model behind the paper's parallelization factor
+//! `min(tasks, cores)`: a stage with `t` equal tasks on `s` slots takes
+//! `ceil(t/s)` waves. Real task durations are unequal, so we schedule them
+//! FIFO onto the earliest-free slot, like Spark's task scheduler within a
+//! stage.
+
+/// FIFO list scheduling: assign each duration (in submission order) to the
+/// earliest-free slot; return the makespan.
+pub fn list_schedule_makespan(durations: &[f64], slots: usize) -> f64 {
+    assert!(slots > 0, "need at least one slot");
+    if durations.is_empty() {
+        return 0.0;
+    }
+    let mut slot_free = vec![0.0f64; slots.min(durations.len())];
+    for &d in durations {
+        // earliest-free slot
+        let (idx, _) = slot_free
+            .iter()
+            .enumerate()
+            .min_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .unwrap();
+        slot_free[idx] += d;
+    }
+    slot_free.into_iter().fold(0.0, f64::max)
+}
+
+/// Monotone virtual clock accumulating simulated seconds.
+#[derive(Debug, Default)]
+pub struct VirtualClock {
+    now: f64,
+}
+
+impl VirtualClock {
+    pub fn new() -> Self {
+        VirtualClock { now: 0.0 }
+    }
+
+    pub fn now(&self) -> f64 {
+        self.now
+    }
+
+    pub fn advance(&mut self, secs: f64) {
+        debug_assert!(secs >= 0.0, "clock cannot run backwards");
+        self.now += secs.max(0.0);
+    }
+
+    pub fn reset(&mut self) {
+        self.now = 0.0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::check::forall;
+
+    #[test]
+    fn single_slot_is_serial() {
+        assert_eq!(list_schedule_makespan(&[1.0, 2.0, 3.0], 1), 6.0);
+    }
+
+    #[test]
+    fn enough_slots_is_max() {
+        assert_eq!(list_schedule_makespan(&[1.0, 2.0, 3.0], 8), 3.0);
+    }
+
+    #[test]
+    fn equal_tasks_make_waves() {
+        // 6 unit tasks on 2 slots -> 3 waves.
+        let d = vec![1.0; 6];
+        assert!((list_schedule_makespan(&d, 2) - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn empty_and_degenerate() {
+        assert_eq!(list_schedule_makespan(&[], 4), 0.0);
+        assert_eq!(list_schedule_makespan(&[5.0], 4), 5.0);
+    }
+
+    #[test]
+    fn clock_accumulates() {
+        let mut c = VirtualClock::new();
+        c.advance(1.5);
+        c.advance(0.5);
+        assert_eq!(c.now(), 2.0);
+        c.reset();
+        assert_eq!(c.now(), 0.0);
+    }
+
+    #[test]
+    fn property_makespan_bounds() {
+        // serial/slots <= makespan <= serial, and makespan >= max task.
+        forall(
+            "makespan bounds",
+            0x5C,
+            64,
+            |r| {
+                let n = 1 + r.next_usize(40);
+                let slots = 1 + r.next_usize(16);
+                let d: Vec<f64> = (0..n).map(|_| r.uniform(0.01, 2.0)).collect();
+                (d, slots)
+            },
+            |(d, slots)| {
+                let m = list_schedule_makespan(d, *slots);
+                let serial: f64 = d.iter().sum();
+                let longest = d.iter().fold(0.0f64, |a, &b| a.max(b));
+                let lower = (serial / *slots as f64).max(longest);
+                // list scheduling is within 2x of optimal; and optimal >= lower
+                if m + 1e-12 < lower {
+                    return Err(format!("makespan {m} below lower bound {lower}"));
+                }
+                if m > serial + 1e-12 {
+                    return Err(format!("makespan {m} exceeds serial {serial}"));
+                }
+                // Graham bound: m <= lower_serial/slots + longest
+                if m > serial / *slots as f64 + longest + 1e-12 {
+                    return Err(format!("makespan {m} violates Graham bound"));
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn property_more_slots_never_slower() {
+        forall(
+            "monotone in slots",
+            0x5D,
+            32,
+            |r| {
+                let n = 1 + r.next_usize(30);
+                let d: Vec<f64> = (0..n).map(|_| r.uniform(0.01, 1.0)).collect();
+                let s = 1 + r.next_usize(8);
+                (d, s)
+            },
+            |(d, s)| {
+                let m1 = list_schedule_makespan(d, *s);
+                let m2 = list_schedule_makespan(d, s + 1);
+                // FIFO list scheduling is not strictly monotone in general,
+                // but within a factor-of-2 envelope it is; check the sane
+                // envelope rather than strict monotonicity.
+                if m2 <= m1 * 2.0 + 1e-12 {
+                    Ok(())
+                } else {
+                    Err(format!("slots {s}->{} regressed {m1} -> {m2}", s + 1))
+                }
+            },
+        );
+    }
+}

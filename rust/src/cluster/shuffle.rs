@@ -1,0 +1,239 @@
+//! Shuffle machinery: hash partitioning, executor placement, and the byte
+//! accounting that feeds the simulated interconnect.
+
+use std::collections::hash_map::DefaultHasher;
+use std::collections::HashMap;
+use std::hash::{Hash, Hasher};
+
+use crate::cluster::rdd::Rdd;
+
+/// Payload size estimation for shuffle-cost accounting.
+pub trait Bytes {
+    fn size_bytes(&self) -> u64;
+}
+
+impl Bytes for i32 {
+    fn size_bytes(&self) -> u64 {
+        4
+    }
+}
+
+impl Bytes for i64 {
+    fn size_bytes(&self) -> u64 {
+        8
+    }
+}
+
+impl Bytes for u64 {
+    fn size_bytes(&self) -> u64 {
+        8
+    }
+}
+
+impl Bytes for f64 {
+    fn size_bytes(&self) -> u64 {
+        8
+    }
+}
+
+impl Bytes for usize {
+    fn size_bytes(&self) -> u64 {
+        8
+    }
+}
+
+impl Bytes for String {
+    fn size_bytes(&self) -> u64 {
+        self.len() as u64
+    }
+}
+
+impl<A: Bytes, B: Bytes> Bytes for (A, B) {
+    fn size_bytes(&self) -> u64 {
+        self.0.size_bytes() + self.1.size_bytes()
+    }
+}
+
+impl<T: Bytes> Bytes for Vec<T> {
+    fn size_bytes(&self) -> u64 {
+        self.iter().map(Bytes::size_bytes).sum()
+    }
+}
+
+/// Internal tag for cogroup's two sides.
+#[derive(Debug, Clone)]
+pub enum Either<V, W> {
+    L(V),
+    R(W),
+}
+
+impl<V: Bytes, W: Bytes> Bytes for Either<V, W> {
+    fn size_bytes(&self) -> u64 {
+        match self {
+            Either::L(v) => v.size_bytes(),
+            Either::R(w) => w.size_bytes(),
+        }
+    }
+}
+
+/// Deterministic hash partitioner (Spark `HashPartitioner` equivalent).
+pub fn hash_partition<K: Hash>(key: &K, nparts: usize) -> usize {
+    let mut h = DefaultHasher::new();
+    key.hash(&mut h);
+    (h.finish() % nparts as u64) as usize
+}
+
+/// Static partition→executor placement (round-robin, like Spark's
+/// locality-free assignment).
+pub fn executor_of_partition(partition: usize, executors: usize) -> usize {
+    partition % executors.max(1)
+}
+
+/// Exchange phase: scatter `(K, V)` pairs into `nparts` hash buckets.
+/// Returns the buckets, the payload bytes that crossed a simulated
+/// executor boundary (same-executor moves are free, like Spark's local
+/// shuffle reads), and the total bytes that changed partition (an
+/// executor-count-independent upper bound used by topology replays).
+pub fn exchange<K, V>(
+    input: Rdd<(K, V)>,
+    nparts: usize,
+    executors: usize,
+) -> (Vec<Vec<(K, V)>>, u64, u64)
+where
+    K: Hash + Eq + Clone,
+    V: Bytes,
+{
+    let nparts = nparts.max(1);
+    let mut buckets: Vec<Vec<(K, V)>> = (0..nparts).map(|_| Vec::new()).collect();
+    let mut moved = 0u64;
+    let mut total = 0u64;
+    for (src_part, part) in input.into_partitions().into_iter().enumerate() {
+        let src_exec = executor_of_partition(src_part, executors);
+        for (k, v) in part {
+            let dst_part = hash_partition(&k, nparts);
+            let dst_exec = executor_of_partition(dst_part, executors);
+            if dst_part != src_part {
+                total += v.size_bytes();
+            }
+            if dst_exec != src_exec {
+                moved += v.size_bytes();
+            }
+            buckets[dst_part].push((k, v));
+        }
+    }
+    (buckets, moved, total)
+}
+
+/// Group a partition's pairs by key, preserving first-seen key order.
+pub fn group_pairs<K: Hash + Eq + Clone, V>(pairs: Vec<(K, V)>) -> Vec<(K, Vec<V>)> {
+    let mut order: Vec<K> = Vec::new();
+    let mut groups: HashMap<K, Vec<V>> = HashMap::new();
+    for (k, v) in pairs {
+        groups
+            .entry(k.clone())
+            .or_insert_with(|| {
+                order.push(k.clone());
+                Vec::new()
+            })
+            .push(v);
+    }
+    order
+        .into_iter()
+        .map(|k| {
+            let vs = groups.remove(&k).unwrap();
+            (k, vs)
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::check::forall;
+
+    #[test]
+    fn hash_partition_is_deterministic_and_in_range() {
+        for k in 0..1000u64 {
+            let p = hash_partition(&k, 7);
+            assert!(p < 7);
+            assert_eq!(p, hash_partition(&k, 7));
+        }
+    }
+
+    #[test]
+    fn executor_placement_round_robin() {
+        assert_eq!(executor_of_partition(0, 3), 0);
+        assert_eq!(executor_of_partition(4, 3), 1);
+        assert_eq!(executor_of_partition(5, 0), 0); // degenerate: 1 executor
+    }
+
+    #[test]
+    fn exchange_routes_all_pairs_by_hash() {
+        let pairs: Vec<(u64, i32)> = (0..100).map(|i| (i, i as i32)).collect();
+        let rdd = Rdd::from_items(pairs, 4);
+        let (buckets, _, _) = exchange(rdd, 5, 2);
+        assert_eq!(buckets.iter().map(Vec::len).sum::<usize>(), 100);
+        for (p, bucket) in buckets.iter().enumerate() {
+            for (k, _) in bucket {
+                assert_eq!(hash_partition(k, 5), p);
+            }
+        }
+    }
+
+    #[test]
+    fn exchange_single_executor_moves_nothing() {
+        let pairs: Vec<(u64, i32)> = (0..50).map(|i| (i, 1)).collect();
+        let rdd = Rdd::from_items(pairs, 4);
+        let (_, moved, total) = exchange(rdd, 8, 1);
+        assert!(total >= moved);
+        assert_eq!(moved, 0);
+    }
+
+    #[test]
+    fn exchange_counts_cross_executor_bytes() {
+        let pairs: Vec<(u64, i32)> = (0..64).map(|i| (i, 1)).collect();
+        let rdd = Rdd::from_items(pairs, 4);
+        let (_, moved, total) = exchange(rdd, 4, 4);
+        assert!(total >= moved);
+        assert!(moved > 0);
+        assert_eq!(moved % 4, 0); // multiples of the i32 payload
+    }
+
+    #[test]
+    fn group_pairs_collects_all() {
+        let pairs = vec![("a", 1), ("b", 2), ("a", 3)];
+        let grouped = group_pairs(pairs);
+        assert_eq!(grouped, vec![("a", vec![1, 3]), ("b", vec![2])]);
+    }
+
+    #[test]
+    fn property_exchange_conserves_elements_and_bytes_bounded() {
+        forall(
+            "shuffle conservation",
+            0xA5,
+            48,
+            |r| {
+                let n = r.next_usize(200);
+                let pairs: Vec<(u64, i64)> =
+                    (0..n).map(|_| (r.next_u64() % 32, r.next_u64() as i64)).collect();
+                let nparts = 1 + r.next_usize(8);
+                let execs = 1 + r.next_usize(6);
+                let srcparts = 1 + r.next_usize(8);
+                (pairs, nparts, execs, srcparts)
+            },
+            |(pairs, nparts, execs, srcparts)| {
+                let total_bytes: u64 = pairs.iter().map(|(_, v)| v.size_bytes()).sum();
+                let rdd = Rdd::from_items(pairs.clone(), *srcparts);
+                let (buckets, moved, total) = exchange(rdd, *nparts, *execs);
+                let count: usize = buckets.iter().map(Vec::len).sum();
+                if count != pairs.len() {
+                    return Err(format!("lost elements: {count} vs {}", pairs.len()));
+                }
+                if moved > total || total > total_bytes {
+                    return Err(format!("moved {moved} > total {total_bytes}"));
+                }
+                Ok(())
+            },
+        );
+    }
+}

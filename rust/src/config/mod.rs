@@ -1,0 +1,540 @@
+//! Configuration system: cluster topology, job parameters, presets, JSON
+//! loading and `key=value` CLI overrides.
+//!
+//! Mirrors a Spark deployment's split between *cluster* resources (paper
+//! Table 2 / §5.1 "Resource Utilization Plan") and per-*job* parameters
+//! (matrix size, block size, algorithm toggles).
+
+use std::path::{Path, PathBuf};
+
+use crate::error::{Result, SpinError};
+use crate::ser::json::Json;
+
+/// Which block-kernel backend executes leaf/block compute.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BackendKind {
+    /// Pure-Rust kernels (`linalg`) — the JBlas stand-in, always available.
+    Native,
+    /// AOT JAX/Pallas programs executed through the PJRT CPU client.
+    Xla,
+}
+
+impl BackendKind {
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "native" => Ok(BackendKind::Native),
+            "xla" => Ok(BackendKind::Xla),
+            other => Err(SpinError::config(format!(
+                "unknown backend `{other}` (expected native|xla)"
+            ))),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            BackendKind::Native => "native",
+            BackendKind::Xla => "xla",
+        }
+    }
+}
+
+/// Simulated interconnect (paper: 14 Gb/s InfiniBand).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct NetworkConfig {
+    /// Point-to-point bandwidth in gigabits per second.
+    pub bandwidth_gbps: f64,
+    /// Per-transfer latency in microseconds.
+    pub latency_us: f64,
+}
+
+impl NetworkConfig {
+    /// Seconds to move `bytes` across the simulated fabric.
+    pub fn transfer_secs(&self, bytes: u64) -> f64 {
+        self.latency_us * 1e-6 + bytes as f64 * 8.0 / (self.bandwidth_gbps * 1e9)
+    }
+}
+
+/// Cluster topology + runtime knobs.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ClusterConfig {
+    /// Physical nodes in the simulated cluster.
+    pub nodes: usize,
+    /// Spark executors per node (paper: 2).
+    pub executors_per_node: usize,
+    /// Task slots (cores) per executor (paper: 5).
+    pub cores_per_executor: usize,
+    /// Simulated interconnect between nodes.
+    pub network: NetworkConfig,
+    /// Which backend executes block kernels.
+    pub backend: BackendKind,
+    /// Where `manifest.json` + HLO artifacts live (Xla backend).
+    pub artifacts_dir: PathBuf,
+    /// Real worker threads used to chew through tasks on this machine
+    /// (orthogonal to the *simulated* slot count above).
+    pub worker_threads: usize,
+    /// Report virtual (discrete-event) time instead of raw wall clock.
+    /// See DESIGN.md §3 — this is the single-core testbed substitution.
+    pub virtual_time: bool,
+}
+
+impl ClusterConfig {
+    /// Single-node local "cluster" with `cores` slots — unit-test topology.
+    pub fn local(cores: usize) -> Self {
+        ClusterConfig {
+            nodes: 1,
+            executors_per_node: 1,
+            cores_per_executor: cores,
+            network: NetworkConfig {
+                bandwidth_gbps: 100.0,
+                latency_us: 1.0,
+            },
+            backend: BackendKind::Native,
+            artifacts_dir: PathBuf::from("artifacts"),
+            worker_threads: 1,
+            virtual_time: true,
+        }
+    }
+
+    /// The paper's testbed (Table 2 + §5.1): 3 nodes, 2 executors each,
+    /// 5 cores per executor, 14 Gb/s InfiniBand.
+    pub fn paper() -> Self {
+        ClusterConfig {
+            nodes: 3,
+            executors_per_node: 2,
+            cores_per_executor: 5,
+            network: NetworkConfig {
+                bandwidth_gbps: 14.0,
+                latency_us: 50.0,
+            },
+            backend: BackendKind::Native,
+            artifacts_dir: PathBuf::from("artifacts"),
+            worker_threads: 1,
+            virtual_time: true,
+        }
+    }
+
+    pub fn total_executors(&self) -> usize {
+        self.nodes * self.executors_per_node
+    }
+
+    /// Total task slots — the paper's `cores` in `min[tasks, cores]`.
+    pub fn total_cores(&self) -> usize {
+        self.total_executors() * self.cores_per_executor
+    }
+
+    /// Same cluster with a different executor count (Figure 5 sweeps this,
+    /// keeping cores-per-executor fixed).
+    pub fn with_executors(&self, executors: usize) -> Self {
+        let mut c = self.clone();
+        c.nodes = 1;
+        c.executors_per_node = executors;
+        c
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if self.nodes == 0 || self.executors_per_node == 0 || self.cores_per_executor == 0 {
+            return Err(SpinError::config("cluster dimensions must be positive"));
+        }
+        if self.worker_threads == 0 {
+            return Err(SpinError::config("worker_threads must be positive"));
+        }
+        if !(self.network.bandwidth_gbps > 0.0) || self.network.latency_us < 0.0 {
+            return Err(SpinError::config("invalid network parameters"));
+        }
+        Ok(())
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::object(vec![
+            ("nodes", Json::num(self.nodes as f64)),
+            ("executors_per_node", Json::num(self.executors_per_node as f64)),
+            ("cores_per_executor", Json::num(self.cores_per_executor as f64)),
+            ("bandwidth_gbps", Json::num(self.network.bandwidth_gbps)),
+            ("latency_us", Json::num(self.network.latency_us)),
+            ("backend", Json::str(self.backend.name())),
+            (
+                "artifacts_dir",
+                Json::str(self.artifacts_dir.to_string_lossy().to_string()),
+            ),
+            ("worker_threads", Json::num(self.worker_threads as f64)),
+            ("virtual_time", Json::Bool(self.virtual_time)),
+        ])
+    }
+
+    pub fn from_json(v: &Json) -> Result<Self> {
+        let base = ClusterConfig::paper();
+        let get_usize = |key: &str, dflt: usize| -> Result<usize> {
+            match v.get(key) {
+                None => Ok(dflt),
+                Some(j) => j
+                    .as_usize()
+                    .ok_or_else(|| SpinError::config(format!("`{key}` must be a non-negative integer"))),
+            }
+        };
+        let get_f64 = |key: &str, dflt: f64| -> Result<f64> {
+            match v.get(key) {
+                None => Ok(dflt),
+                Some(j) => j
+                    .as_f64()
+                    .ok_or_else(|| SpinError::config(format!("`{key}` must be a number"))),
+            }
+        };
+        let cfg = ClusterConfig {
+            nodes: get_usize("nodes", base.nodes)?,
+            executors_per_node: get_usize("executors_per_node", base.executors_per_node)?,
+            cores_per_executor: get_usize("cores_per_executor", base.cores_per_executor)?,
+            network: NetworkConfig {
+                bandwidth_gbps: get_f64("bandwidth_gbps", base.network.bandwidth_gbps)?,
+                latency_us: get_f64("latency_us", base.network.latency_us)?,
+            },
+            backend: match v.get("backend") {
+                None => base.backend,
+                Some(j) => BackendKind::parse(
+                    j.as_str()
+                        .ok_or_else(|| SpinError::config("`backend` must be a string"))?,
+                )?,
+            },
+            artifacts_dir: match v.get("artifacts_dir") {
+                None => base.artifacts_dir,
+                Some(j) => PathBuf::from(
+                    j.as_str()
+                        .ok_or_else(|| SpinError::config("`artifacts_dir` must be a string"))?,
+                ),
+            },
+            worker_threads: get_usize("worker_threads", base.worker_threads)?,
+            virtual_time: match v.get("virtual_time") {
+                None => base.virtual_time,
+                Some(j) => j
+                    .as_bool()
+                    .ok_or_else(|| SpinError::config("`virtual_time` must be a bool"))?,
+            },
+        };
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    pub fn from_file(path: &Path) -> Result<Self> {
+        Self::from_json(&Json::from_file(path)?)
+    }
+
+    /// Apply a `key=value` override (CLI `--set`).
+    pub fn apply_override(&mut self, kv: &str) -> Result<()> {
+        let (key, value) = kv
+            .split_once('=')
+            .ok_or_else(|| SpinError::config(format!("override `{kv}` is not key=value")))?;
+        let parse_usize = |v: &str| {
+            v.parse::<usize>()
+                .map_err(|_| SpinError::config(format!("`{key}` needs an integer, got `{v}`")))
+        };
+        let parse_f64 = |v: &str| {
+            v.parse::<f64>()
+                .map_err(|_| SpinError::config(format!("`{key}` needs a number, got `{v}`")))
+        };
+        match key {
+            "nodes" => self.nodes = parse_usize(value)?,
+            "executors_per_node" => self.executors_per_node = parse_usize(value)?,
+            "cores_per_executor" => self.cores_per_executor = parse_usize(value)?,
+            "bandwidth_gbps" => self.network.bandwidth_gbps = parse_f64(value)?,
+            "latency_us" => self.network.latency_us = parse_f64(value)?,
+            "backend" => self.backend = BackendKind::parse(value)?,
+            "artifacts_dir" => self.artifacts_dir = PathBuf::from(value),
+            "worker_threads" => self.worker_threads = parse_usize(value)?,
+            "virtual_time" => {
+                self.virtual_time = value
+                    .parse::<bool>()
+                    .map_err(|_| SpinError::config("virtual_time needs true|false"))?
+            }
+            other => {
+                return Err(SpinError::config(format!("unknown cluster key `{other}`")));
+            }
+        }
+        self.validate()
+    }
+}
+
+/// Test-matrix generator families (all invertible by construction).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum GeneratorKind {
+    /// Strictly diagonally dominant — Strassen-safe, well conditioned.
+    DiagDominant,
+    /// Symmetric positive definite `B·Bᵀ + n·I` (the paper's stated scope).
+    Spd,
+}
+
+impl GeneratorKind {
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "diag-dominant" => Ok(GeneratorKind::DiagDominant),
+            "spd" => Ok(GeneratorKind::Spd),
+            other => Err(SpinError::config(format!(
+                "unknown generator `{other}` (expected diag-dominant|spd)"
+            ))),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            GeneratorKind::DiagDominant => "diag-dominant",
+            GeneratorKind::Spd => "spd",
+        }
+    }
+}
+
+/// Serial method used on leaf blocks (paper: "any approach").
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LeafMethod {
+    /// LU decomposition with partial pivoting, then back-substitution.
+    Lu,
+    /// Gauss-Jordan with partial pivoting (matches the Pallas kernel).
+    GaussJordan,
+}
+
+impl LeafMethod {
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "lu" => Ok(LeafMethod::Lu),
+            "gauss-jordan" => Ok(LeafMethod::GaussJordan),
+            other => Err(SpinError::config(format!(
+                "unknown leaf method `{other}` (expected lu|gauss-jordan)"
+            ))),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            LeafMethod::Lu => "lu",
+            LeafMethod::GaussJordan => "gauss-jordan",
+        }
+    }
+}
+
+/// Per-job parameters.
+#[derive(Debug, Clone, PartialEq)]
+pub struct JobConfig {
+    /// Matrix order `n` (power of two, as in the paper's analysis).
+    pub n: usize,
+    /// Block edge (`n / b`); paper's `2^q`.
+    pub block_size: usize,
+    /// Workload seed.
+    pub seed: u64,
+    /// Test-matrix family.
+    pub generator: GeneratorKind,
+    /// Serial leaf inversion method.
+    pub leaf: LeafMethod,
+    /// Fuse the 2×2-grid recursion base into one XLA program
+    /// (`strassen_2x2` artifact) — our extension, off by default.
+    pub fuse_leaf_2x2: bool,
+    /// Verify ‖A·A⁻¹ − I‖∞ after inversion.
+    pub residual_check: bool,
+}
+
+impl JobConfig {
+    pub fn new(n: usize, block_size: usize) -> Self {
+        JobConfig {
+            n,
+            block_size,
+            seed: 0x5710_2018,
+            generator: GeneratorKind::DiagDominant,
+            leaf: LeafMethod::Lu,
+            fuse_leaf_2x2: false,
+            residual_check: false,
+        }
+    }
+
+    /// Number of splits per dimension — the paper's `b`.
+    pub fn num_splits(&self) -> usize {
+        self.n / self.block_size
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if !self.n.is_power_of_two() {
+            return Err(SpinError::config(format!(
+                "matrix size n={} must be a power of two (paper §4)",
+                self.n
+            )));
+        }
+        if !self.block_size.is_power_of_two() {
+            return Err(SpinError::config(format!(
+                "block_size {} must be a power of two",
+                self.block_size
+            )));
+        }
+        if self.block_size > self.n {
+            return Err(SpinError::config(format!(
+                "block_size {} exceeds n {}",
+                self.block_size, self.n
+            )));
+        }
+        Ok(())
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::object(vec![
+            ("n", Json::num(self.n as f64)),
+            ("block_size", Json::num(self.block_size as f64)),
+            ("seed", Json::num(self.seed as f64)),
+            ("generator", Json::str(self.generator.name())),
+            ("leaf", Json::str(self.leaf.name())),
+            ("fuse_leaf_2x2", Json::Bool(self.fuse_leaf_2x2)),
+            ("residual_check", Json::Bool(self.residual_check)),
+        ])
+    }
+
+    pub fn from_json(v: &Json) -> Result<Self> {
+        let n = v
+            .req("n")?
+            .as_usize()
+            .ok_or_else(|| SpinError::config("`n` must be a positive integer"))?;
+        let block_size = v
+            .req("block_size")?
+            .as_usize()
+            .ok_or_else(|| SpinError::config("`block_size` must be a positive integer"))?;
+        let mut job = JobConfig::new(n, block_size);
+        if let Some(j) = v.get("seed") {
+            job.seed = j
+                .as_i64()
+                .ok_or_else(|| SpinError::config("`seed` must be an integer"))? as u64;
+        }
+        if let Some(j) = v.get("generator") {
+            job.generator = GeneratorKind::parse(
+                j.as_str()
+                    .ok_or_else(|| SpinError::config("`generator` must be a string"))?,
+            )?;
+        }
+        if let Some(j) = v.get("leaf") {
+            job.leaf = LeafMethod::parse(
+                j.as_str()
+                    .ok_or_else(|| SpinError::config("`leaf` must be a string"))?,
+            )?;
+        }
+        if let Some(j) = v.get("fuse_leaf_2x2") {
+            job.fuse_leaf_2x2 = j
+                .as_bool()
+                .ok_or_else(|| SpinError::config("`fuse_leaf_2x2` must be a bool"))?;
+        }
+        if let Some(j) = v.get("residual_check") {
+            job.residual_check = j
+                .as_bool()
+                .ok_or_else(|| SpinError::config("`residual_check` must be a bool"))?;
+        }
+        job.validate()?;
+        Ok(job)
+    }
+
+    /// Apply a `key=value` override (CLI `--job`).
+    pub fn apply_override(&mut self, kv: &str) -> Result<()> {
+        let (key, value) = kv
+            .split_once('=')
+            .ok_or_else(|| SpinError::config(format!("override `{kv}` is not key=value")))?;
+        match key {
+            "n" => {
+                self.n = value
+                    .parse()
+                    .map_err(|_| SpinError::config("n needs an integer"))?
+            }
+            "block_size" => {
+                self.block_size = value
+                    .parse()
+                    .map_err(|_| SpinError::config("block_size needs an integer"))?
+            }
+            "seed" => {
+                self.seed = value
+                    .parse()
+                    .map_err(|_| SpinError::config("seed needs an integer"))?
+            }
+            "generator" => self.generator = GeneratorKind::parse(value)?,
+            "leaf" => self.leaf = LeafMethod::parse(value)?,
+            "fuse_leaf_2x2" => {
+                self.fuse_leaf_2x2 = value
+                    .parse()
+                    .map_err(|_| SpinError::config("fuse_leaf_2x2 needs true|false"))?
+            }
+            "residual_check" => {
+                self.residual_check = value
+                    .parse()
+                    .map_err(|_| SpinError::config("residual_check needs true|false"))?
+            }
+            other => return Err(SpinError::config(format!("unknown job key `{other}`"))),
+        }
+        self.validate()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_cluster_dimensions() {
+        let c = ClusterConfig::paper();
+        assert_eq!(c.total_executors(), 6);
+        assert_eq!(c.total_cores(), 30);
+        c.validate().unwrap();
+    }
+
+    #[test]
+    fn local_preset() {
+        let c = ClusterConfig::local(4);
+        assert_eq!(c.total_cores(), 4);
+        assert!(c.virtual_time);
+    }
+
+    #[test]
+    fn network_transfer_time() {
+        let net = NetworkConfig {
+            bandwidth_gbps: 8.0,
+            latency_us: 0.0,
+        };
+        // 1 GB over 8 Gb/s = 1 second.
+        assert!((net.transfer_secs(1_000_000_000) - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn cluster_json_round_trip() {
+        let mut c = ClusterConfig::paper();
+        c.backend = BackendKind::Xla;
+        c.worker_threads = 3;
+        let back = ClusterConfig::from_json(&c.to_json()).unwrap();
+        assert_eq!(back, c);
+    }
+
+    #[test]
+    fn job_json_round_trip() {
+        let mut j = JobConfig::new(512, 64);
+        j.generator = GeneratorKind::Spd;
+        j.fuse_leaf_2x2 = true;
+        let back = JobConfig::from_json(&j.to_json()).unwrap();
+        assert_eq!(back, j);
+    }
+
+    #[test]
+    fn job_validation() {
+        assert!(JobConfig::new(100, 10).validate().is_err()); // not pow2
+        assert!(JobConfig::new(64, 128).validate().is_err()); // block > n
+        assert!(JobConfig::new(256, 64).validate().is_ok());
+        assert_eq!(JobConfig::new(256, 64).num_splits(), 4);
+    }
+
+    #[test]
+    fn overrides() {
+        let mut c = ClusterConfig::paper();
+        c.apply_override("nodes=5").unwrap();
+        assert_eq!(c.nodes, 5);
+        c.apply_override("backend=xla").unwrap();
+        assert_eq!(c.backend, BackendKind::Xla);
+        assert!(c.apply_override("bogus=1").is_err());
+        assert!(c.apply_override("no-equals").is_err());
+
+        let mut j = JobConfig::new(256, 64);
+        j.apply_override("block_size=32").unwrap();
+        assert_eq!(j.num_splits(), 8);
+        assert!(j.apply_override("block_size=7").is_err());
+    }
+
+    #[test]
+    fn with_executors_scales() {
+        let c = ClusterConfig::paper().with_executors(4);
+        assert_eq!(c.total_executors(), 4);
+        assert_eq!(c.total_cores(), 20);
+    }
+}

@@ -1,0 +1,118 @@
+//! Calibration: fit the cost model's machine constants from measured
+//! probes on this host, so Figure 4 compares theory and measurement on the
+//! same footing (the paper implicitly calibrates by running on one fixed
+//! testbed).
+
+use std::time::Instant;
+
+use super::CostConstants;
+use crate::config::NetworkConfig;
+use crate::linalg::{self, diag_dominant, Matrix};
+use crate::util::Rng;
+
+/// What the probes measured.
+#[derive(Debug, Clone)]
+pub struct CalibrationReport {
+    pub constants: CostConstants,
+    /// Measured serial leaf-inversion GFLOP/s.
+    pub leaf_gflops: f64,
+    /// Measured block-GEMM GFLOP/s.
+    pub gemm_gflops: f64,
+    /// Probe block size used.
+    pub probe_size: usize,
+}
+
+/// Run the probes (a leaf inversion and a GEMM at `probe_size`, plus a
+/// block-metadata pass) and fit [`CostConstants`].
+pub fn calibrate(probe_size: usize, network: &NetworkConfig) -> CalibrationReport {
+    let mut rng = Rng::new(0xCA11B);
+    let s = probe_size;
+    let a = diag_dominant(s, &mut rng);
+    let b = Matrix::random_uniform(s, s, -1.0, 1.0, &mut rng);
+
+    // --- leaf inversion probe (LU + solve ≈ 8/3·s³ flops).
+    let reps = 3;
+    let mut leaf_best = f64::INFINITY;
+    for _ in 0..reps {
+        let t0 = Instant::now();
+        let inv = linalg::lu_inverse(&a).expect("probe matrix invertible");
+        std::hint::black_box(&inv);
+        leaf_best = leaf_best.min(t0.elapsed().as_secs_f64());
+    }
+    let leaf_flops = (8.0 / 3.0) * (s as f64).powi(3);
+    let sec_per_leaf_flop = leaf_best / leaf_flops;
+
+    // --- GEMM probe (2·s³ flops).
+    let mut gemm_best = f64::INFINITY;
+    for _ in 0..reps {
+        let t0 = Instant::now();
+        let c = linalg::matmul(&a, &b);
+        std::hint::black_box(&c);
+        gemm_best = gemm_best.min(t0.elapsed().as_secs_f64());
+    }
+    let gemm_flops = 2.0 * (s as f64).powi(3);
+    let sec_per_gemm_flop = gemm_best / gemm_flops;
+
+    // --- block-metadata probe: clone + retag a block, amortized.
+    let blocks: Vec<Matrix> = (0..64)
+        .map(|i| Matrix::random_uniform(16, 16, 0.0, 1.0, &mut rng.fork(i)))
+        .collect();
+    let t0 = Instant::now();
+    let mut acc = 0.0;
+    for blk in &blocks {
+        let copy = blk.clone();
+        acc += copy.get(0, 0);
+    }
+    std::hint::black_box(acc);
+    let sec_per_block_op = (t0.elapsed().as_secs_f64() / blocks.len() as f64).max(1e-8);
+
+    // --- communication constant from the configured interconnect.
+    let sec_per_element_comm = network.transfer_secs(8) - network.latency_us * 1e-6;
+
+    let constants = CostConstants {
+        sec_per_leaf_flop,
+        sec_per_gemm_flop,
+        sec_per_block_op,
+        sec_per_element_comm: sec_per_element_comm.max(1e-12),
+        sec_per_stage: 1e-4,
+    };
+    CalibrationReport {
+        leaf_gflops: 1e-9 / sec_per_leaf_flop,
+        gemm_gflops: 1e-9 / sec_per_gemm_flop,
+        probe_size: s,
+        constants,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn calibration_produces_sane_constants() {
+        let net = NetworkConfig {
+            bandwidth_gbps: 14.0,
+            latency_us: 50.0,
+        };
+        let rep = calibrate(96, &net);
+        let k = &rep.constants;
+        // One core does between 0.01 and 100 GFLOP/s, generously.
+        assert!(rep.gemm_gflops > 0.01 && rep.gemm_gflops < 100.0, "{rep:?}");
+        assert!(rep.leaf_gflops > 0.001 && rep.leaf_gflops < 100.0);
+        assert!(k.sec_per_block_op > 0.0);
+        assert!(k.sec_per_element_comm > 0.0);
+        // 8 bytes over 14 Gb/s ≈ 4.6e-9 s.
+        assert!((k.sec_per_element_comm - 8.0 * 8.0 / 14e9).abs() < 1e-9);
+    }
+
+    #[test]
+    fn calibrated_model_is_finite_and_positive() {
+        let net = NetworkConfig {
+            bandwidth_gbps: 14.0,
+            latency_us: 50.0,
+        };
+        let rep = calibrate(64, &net);
+        let c = super::super::spin_cost(512, 8, 30, &rep.constants);
+        assert!(c.total().is_finite() && c.total() > 0.0);
+    }
+}

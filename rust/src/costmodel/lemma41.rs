@@ -1,0 +1,183 @@
+//! Lemma 4.1 — SPIN's wall-clock cost model.
+//!
+//! Per level `i ∈ [0, m)` with `m = log2 b`, the recursion has `2^i` nodes,
+//! each holding a `(b/2^i)²`-block matrix of `(n/b)²`-element blocks:
+//!
+//! * `breakMat`  — scans `b²/4^i` blocks,        PF `min(b²/4^i, cores)`
+//! * `xy`        — 4 filters over `b²/4^i` plus 4 maps over `b²/4^(i+1)`
+//! * `multiply`  — 6 products of half-grid `h = b/2^(i+1)`:
+//!                 `6·h³` block GEMMs of `2·(n/b)³` flops,
+//!                 PF `min(n²/4^(i+1), cores)`; plus replication traffic of
+//!                 `2·h³` blocks per product, PF `min(b²/4^(i+1), cores)`
+//! * `subtract`  — 2 maps over `(n/2^(i+1))²` elements
+//! * `scalarMul` — 1 map over `b²/4^(i+1)` blocks
+//! * `arrange`   — re-index maps over `4·(b²/4^(i+1))` blocks
+//!
+//! Leaves: `b` blocks inverted serially (`~2/3·(n/b)³` flops each), no PF —
+//! the recursion sequences them (the paper's eq. 2, `n³/b²`).
+//!
+//! Summed over levels with constant PF this reproduces the paper's closed
+//! forms (eqs. 3–11); machine constants come from [`super::CostConstants`].
+
+use super::{pf, CostBreakdown, CostConstants};
+
+/// Evaluate the SPIN cost model (seconds).
+pub fn spin_cost(n: usize, b: usize, cores: usize, k: &CostConstants) -> CostBreakdown {
+    assert!(b.is_power_of_two() && n % b == 0, "need pow2 splits dividing n");
+    let nb = (n / b) as f64; // block edge
+    let m = b.trailing_zeros() as usize; // recursion depth
+    let mut out = CostBreakdown::default();
+
+    // ---- leaves: b serial inversions of nb×nb, sequenced by recursion.
+    let leaf_flops = (2.0 / 3.0) * nb.powi(3) + 2.0 * nb.powi(3); // LU + solve
+    out.leaf_node = b as f64 * leaf_flops * k.sec_per_leaf_flop + b as f64 * k.sec_per_stage;
+
+    for i in 0..m {
+        let nodes = (1u64 << i) as f64;
+        let blocks_in = (b as f64 / 2f64.powi(i as i32)).powi(2); // b²/4^i
+        let blocks_half = blocks_in / 4.0; // b²/4^(i+1)
+        let h = b as f64 / 2f64.powi(i as i32 + 1); // half-grid edge
+
+        // breakMat: one pass over the node's blocks.
+        out.break_mat += nodes * (blocks_in * k.sec_per_block_op + k.sec_per_stage)
+            / pf(blocks_in, cores);
+
+        // xy: 4 filters (full scan) + 4 maps (quarter scan).
+        out.xy += nodes * 4.0 * (blocks_in * k.sec_per_block_op + k.sec_per_stage)
+            / pf(blocks_in, cores);
+        out.xy += nodes * 4.0 * (blocks_half * k.sec_per_block_op + k.sec_per_stage)
+            / pf(blocks_half, cores);
+
+        // multiply: 6 half-grid products, h³ block-GEMM tasks each.
+        //
+        // The paper's PF here is `min(n²/4^(i+1), cores)` — element count —
+        // which saturates to `cores` even when a product has a single block
+        // task. We use the task count `h³` (what a Spark stage actually
+        // schedules), which matches the measured substrate; for large grids
+        // the two coincide.
+        let gemm_flops_per_product = 2.0 * h.powi(3) * nb.powi(3) * 2.0; // h³ GEMMs + adds
+        out.multiply += nodes * 6.0
+            * (gemm_flops_per_product * k.sec_per_gemm_flop + k.sec_per_stage)
+            / pf(h.powi(3), cores);
+
+        // multiply replication traffic: each product replicates both
+        // operands b-fold at its grid size: 2·h³ blocks of nb² elements.
+        let comm_elems = 2.0 * h.powi(3) * nb * nb;
+        out.communication += nodes * 6.0 * comm_elems * k.sec_per_element_comm
+            / pf(blocks_half, cores);
+
+        // subtract: 2 per level over half-size matrices (h² block tasks).
+        let elems_half = (n as f64 / 2f64.powi(i as i32 + 1)).powi(2); // n²/4^(i+1)
+        out.subtract += nodes * 2.0
+            * (elems_half * k.sec_per_leaf_flop + k.sec_per_stage)
+            / pf(h * h, cores);
+
+        // scalarMul: 1 per level over the half grid.
+        out.scalar_mul += nodes * (blocks_half * k.sec_per_block_op + k.sec_per_stage)
+            / pf(blocks_half, cores);
+
+        // arrange: 4 re-index maps over quarter grids.
+        out.arrange += nodes * 4.0 * (blocks_half * k.sec_per_block_op + k.sec_per_stage)
+            / pf(blocks_half, cores);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::check::forall;
+
+    fn k() -> CostConstants {
+        CostConstants::default()
+    }
+
+    #[test]
+    fn b1_is_pure_leaf() {
+        let c = spin_cost(512, 1, 30, &k());
+        assert!(c.leaf_node > 0.0);
+        assert_eq!(c.multiply, 0.0);
+        assert_eq!(c.break_mat, 0.0);
+        assert!((c.total() - c.leaf_node).abs() < 1e-15);
+    }
+
+    #[test]
+    fn leaf_term_matches_eq2_scaling() {
+        // leafNode ∝ n³/b²: quadrupling b should cut leaf time ~16x.
+        let c2 = spin_cost(1024, 2, 30, &k());
+        let c8 = spin_cost(1024, 8, 30, &k());
+        let ratio = c2.leaf_node / c8.leaf_node;
+        assert!((ratio - 16.0).abs() / 16.0 < 0.05, "ratio {ratio}");
+    }
+
+    #[test]
+    fn multiply_work_grows_with_b() {
+        // With PF forced to 1 (cores=1) the multiply term is pure compute,
+        // which grows with recursion depth: Σ 2^i·6·(b/2^(i+1))³ block GEMMs.
+        let k = k();
+        let c2 = spin_cost(1024, 2, 1, &k);
+        let c16 = spin_cost(1024, 16, 1, &k);
+        assert!(c16.multiply > c2.multiply);
+        // Total replication traffic (PF=1) grows ≈ linearly with b.
+        assert!(c16.communication > c2.communication);
+    }
+
+    #[test]
+    fn u_shape_has_interior_minimum() {
+        // The paper's headline analytic behaviour (Fig. 3/4).
+        let k = k();
+        let n = 4096;
+        let bs: Vec<usize> = (1..=8).map(|e| 1usize << e).collect(); // 2..256
+        let costs: Vec<f64> = bs.iter().map(|&b| spin_cost(n, b, 30, &k).total()).collect();
+        let (argmin, _) = costs
+            .iter()
+            .enumerate()
+            .min_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .unwrap();
+        assert!(
+            argmin > 0 && argmin < bs.len() - 1,
+            "minimum at edge: b={} costs={costs:?}",
+            bs[argmin]
+        );
+    }
+
+    #[test]
+    fn more_cores_never_slower() {
+        forall(
+            "cost monotone in cores",
+            0x41,
+            24,
+            |r| {
+                let n = 1usize << (8 + r.next_usize(4)); // 256..2048
+                let b = 1usize << (1 + r.next_usize(4)); // 2..16
+                let cores = 1 + r.next_usize(64);
+                (n, b, cores)
+            },
+            |&(n, b, cores)| {
+                let k = CostConstants::default();
+                let c1 = spin_cost(n, b, cores, &k).total();
+                let c2 = spin_cost(n, b, cores + 8, &k).total();
+                if c2 <= c1 + 1e-12 {
+                    Ok(())
+                } else {
+                    Err(format!("cores {cores}->{}: {c1} -> {c2}", cores + 8))
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn cost_scales_cubically_in_n_for_fixed_b() {
+        let k = k();
+        let c1 = spin_cost(512, 4, 30, &k).total();
+        let c2 = spin_cost(1024, 4, 30, &k).total();
+        let ratio = c2 / c1;
+        assert!(ratio > 6.0 && ratio < 10.0, "n-doubling ratio {ratio}");
+    }
+
+    #[test]
+    #[should_panic(expected = "pow2")]
+    fn rejects_non_pow2_b() {
+        spin_cost(512, 3, 30, &k());
+    }
+}

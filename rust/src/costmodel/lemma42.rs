@@ -1,0 +1,199 @@
+//! Lemma 4.2 — the LU baseline's wall-clock cost model.
+//!
+//! Mirrors the structure of `algos::lu` (which follows Liu et al. 2016):
+//!
+//! * recursive block LU — per level: 3 half-grid multiplies, 1 subtract,
+//!   and (recursively) two block-triangular inversions of the level's
+//!   leading quadrant factors;
+//! * block-triangular inversion — per level: 2 half-grid multiplies,
+//!   1 scalarMul, plus 2 recursive calls;
+//! * leaves — the paper's "9 O((n/b)³) operations": LU factorization plus
+//!   two triangular inversions per leaf position across the trees
+//!   (vs. SPIN's single inversion);
+//! * the "Additional Cost" — the final full-grid product `U⁻¹·L⁻¹`
+//!   (the paper's `7·(n/2)³` term).
+//!
+//! The same [`super::CostConstants`] are used for both lemmas, so the
+//! SPIN-vs-LU comparison depends only on algorithm structure.
+
+use super::{pf, CostBreakdown, CostConstants};
+
+/// Evaluate the LU-baseline cost model (seconds).
+pub fn lu_cost(n: usize, b: usize, cores: usize, k: &CostConstants) -> CostBreakdown {
+    assert!(b.is_power_of_two() && n % b == 0, "need pow2 splits dividing n");
+    let mut out = CostBreakdown::default();
+    // Full-grid product U⁻¹·L⁻¹ — the paper's Additional Cost: b³ block
+    // GEMMs at the top grid size.
+    add_multiply(&mut out, n, b, b, 1.0, cores, k);
+    lu_rec(&mut out, n, b, b, 1.0, cores, k);
+    tri_rec(&mut out, n, b, b, 1.0, cores, k); // L⁻¹ tree
+    tri_rec(&mut out, n, b, b, 1.0, cores, k); // U⁻¹ tree
+    out
+}
+
+/// Cost of `count` distributed multiplies on a `g×g` grid of `(n/b)`-blocks.
+fn add_multiply(
+    out: &mut CostBreakdown,
+    n: usize,
+    b: usize,
+    g: usize,
+    count: f64,
+    cores: usize,
+    k: &CostConstants,
+) {
+    let nb = (n / b) as f64;
+    let gf = g as f64;
+    // Task-based PF (g³ block GEMMs), matching lemma41's convention.
+    let gemm_flops = 2.0 * gf.powi(3) * nb.powi(3) * 2.0;
+    out.multiply += count * (gemm_flops * k.sec_per_gemm_flop + k.sec_per_stage)
+        / pf(gf.powi(3), cores);
+    let comm_elems = 2.0 * gf.powi(3) * nb * nb;
+    out.communication +=
+        count * comm_elems * k.sec_per_element_comm / pf(gf * gf, cores);
+}
+
+/// breakMat + xy + arrange bookkeeping for one recursion node on a `g` grid.
+fn add_bookkeeping(out: &mut CostBreakdown, g: usize, count: f64, cores: usize, k: &CostConstants) {
+    let blocks = (g * g) as f64;
+    let blocks_half = blocks / 4.0;
+    out.break_mat += count * (blocks * k.sec_per_block_op + k.sec_per_stage) / pf(blocks, cores);
+    out.xy += count * 4.0 * (blocks * k.sec_per_block_op + k.sec_per_stage) / pf(blocks, cores);
+    out.xy +=
+        count * 4.0 * (blocks_half * k.sec_per_block_op + k.sec_per_stage) / pf(blocks_half, cores);
+    out.arrange +=
+        count * 4.0 * (blocks_half * k.sec_per_block_op + k.sec_per_stage) / pf(blocks_half, cores);
+}
+
+/// Recursive block-LU cost on a `g×g` grid (`count` concurrent nodes).
+fn lu_rec(
+    out: &mut CostBreakdown,
+    n: usize,
+    b: usize,
+    g: usize,
+    count: f64,
+    cores: usize,
+    k: &CostConstants,
+) {
+    let nb = (n / b) as f64;
+    if g == 1 {
+        // Leaf: serial pivot-free LU (~2/3·nb³ flops) emitted twice in the
+        // implementation (L pass + U pass).
+        let flops = 2.0 * (2.0 / 3.0) * nb.powi(3);
+        out.leaf_node += count * (flops * k.sec_per_leaf_flop + 2.0 * k.sec_per_stage);
+        return;
+    }
+    add_bookkeeping(out, g, count, cores, k);
+    let h = g / 2;
+    // Two recursive LU calls (A11 and the Schur complement)…
+    lu_rec(out, n, b, h, 2.0 * count, cores, k);
+    // …two triangular inversions of the half-grid factors…
+    tri_rec(out, n, b, h, count, cores, k);
+    tri_rec(out, n, b, h, count, cores, k);
+    // …3 multiplies + 1 subtract at the half grid.
+    add_multiply(out, n, b, h, 3.0 * count, cores, k);
+    let elems_half = ((h as f64) * nb).powi(2);
+    out.subtract += count * (elems_half * k.sec_per_leaf_flop + k.sec_per_stage)
+        / pf((h * h) as f64, cores);
+}
+
+/// Recursive block-triangular inversion cost on a `g×g` grid.
+fn tri_rec(
+    out: &mut CostBreakdown,
+    n: usize,
+    b: usize,
+    g: usize,
+    count: f64,
+    cores: usize,
+    k: &CostConstants,
+) {
+    let nb = (n / b) as f64;
+    if g == 1 {
+        // Serial triangular inversion ≈ nb³/3 flops.
+        let flops = nb.powi(3) / 3.0;
+        out.leaf_node += count * (flops * k.sec_per_leaf_flop + k.sec_per_stage);
+        return;
+    }
+    add_bookkeeping(out, g, count, cores, k);
+    let h = g / 2;
+    tri_rec(out, n, b, h, 2.0 * count, cores, k);
+    add_multiply(out, n, b, h, 2.0 * count, cores, k);
+    let blocks_half = ((h * h) as f64).max(1.0);
+    out.scalar_mul +=
+        count * (blocks_half * k.sec_per_block_op + k.sec_per_stage) / pf(blocks_half, cores);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::costmodel::spin_cost;
+
+    fn k() -> CostConstants {
+        CostConstants::default()
+    }
+
+    #[test]
+    fn lu_leaf_work_comparable_but_stage_heavy() {
+        // Paper counts 9 uniform O((n/b)³) leaf ops for LU vs 1 for SPIN.
+        // In this formulation LU's leaves are cheaper *kernels*
+        // (factorizations / triangular inverses, ~nb³·14/3 flops total at
+        // b=2) but 4–7× more *stages*; the flop totals stay within 2× of
+        // SPIN's full inversions while LU's multiply side explodes — which
+        // is where the measured gap comes from (see EXPERIMENTS.md).
+        for b in [2usize, 4, 8, 16] {
+            let lu = lu_cost(1024, b, 30, &k());
+            let spin = spin_cost(1024, b, 30, &k());
+            let ratio = lu.leaf_node / spin.leaf_node;
+            assert!(
+                (0.4..4.0).contains(&ratio),
+                "b={b}: LU/SPIN leaf ratio {ratio}"
+            );
+        }
+    }
+
+    #[test]
+    fn lu_total_exceeds_spin_everywhere() {
+        // The paper's headline (Figs. 2–3): SPIN wins at every (n, b).
+        for n in [512usize, 1024, 4096] {
+            for b in [2usize, 4, 8, 16] {
+                let lu = lu_cost(n, b, 30, &k()).total();
+                let spin = spin_cost(n, b, 30, &k()).total();
+                assert!(lu > spin, "n={n} b={b}: LU {lu} <= SPIN {spin}");
+            }
+        }
+    }
+
+    #[test]
+    fn gap_grows_with_n() {
+        // Figure 2: the SPIN-LU gap widens monotonically with matrix size.
+        let k = k();
+        let gap = |n: usize| {
+            let b = 8;
+            lu_cost(n, b, 30, &k).total() - spin_cost(n, b, 30, &k).total()
+        };
+        assert!(gap(1024) > gap(512));
+        assert!(gap(2048) > gap(1024));
+    }
+
+    #[test]
+    fn lu_also_u_shaped() {
+        let k = k();
+        let costs: Vec<f64> = (1..=7)
+            .map(|e| lu_cost(4096, 1 << e, 30, &k).total())
+            .collect();
+        let (argmin, _) = costs
+            .iter()
+            .enumerate()
+            .min_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .unwrap();
+        assert!(argmin > 0 && argmin < costs.len() - 1, "costs={costs:?}");
+    }
+
+    #[test]
+    fn b1_has_no_distributed_work() {
+        let c = lu_cost(256, 1, 30, &k());
+        assert_eq!(c.break_mat, 0.0);
+        assert!(c.leaf_node > 0.0);
+        // b=1 still pays the final U⁻¹·L⁻¹ product of the single block.
+        assert!(c.multiply > 0.0);
+    }
+}

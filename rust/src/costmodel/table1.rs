@@ -1,0 +1,130 @@
+//! Table 1 — "Summary of the cost analysis of LU and SPIN": the paper's
+//! symbolic per-method computation costs and parallelization factors,
+//! plus a numeric evaluation column from our calibrated model.
+
+use super::{lu_cost, spin_cost, CostConstants};
+use crate::util::fmt::{self, Table};
+
+/// Render the paper's Table 1 (symbolic) with numeric totals for a given
+/// configuration appended.
+pub fn render_table1(n: usize, b: usize, cores: usize, k: &CostConstants) -> String {
+    let mut t = Table::new(vec!["Method", "LU cost", "SPIN cost", "LU PF", "SPIN PF"]);
+    t.row(vec![
+        "leafNode",
+        "9·n³/b²",
+        "n³/b²",
+        "—",
+        "—",
+    ]);
+    t.row(vec![
+        "breakMat",
+        "2/3·(b²−3b+2)",
+        "2b²−2b",
+        "min[b²/4^i, cores]",
+        "min[b²/4^i, cores]",
+    ]);
+    t.row(vec![
+        "xy (filter)",
+        "2/3·(b²−3b+2)",
+        "8b²−4b",
+        "min[b²/4^(i+1), cores]",
+        "min[b²/4^i, cores]",
+    ]);
+    t.row(vec![
+        "xy (map)",
+        "1/6·(b²−3b+2)",
+        "2b²−2b",
+        "min[b²/4^(i+2), cores]",
+        "min[b²/4^(i+1), cores]",
+    ]);
+    t.row(vec![
+        "multiply",
+        "16n³/21b³·(b³−7b+6)",
+        "n³/6b²·(b²−1)",
+        "min[n²/4^i, cores]",
+        "min[n²/4^(i+1), cores]",
+    ]);
+    t.row(vec![
+        "multiply comm.",
+        "8n²(b²−1)(8b²−112)/105b²",
+        "n²(b²−1)/6b",
+        "min[b²/4^i, cores]",
+        "min[b²/4^(i+1), cores]",
+    ]);
+    t.row(vec![
+        "subtract",
+        "2n²/3b²·(b²−3b+2)",
+        "n²/2b·(b−1)",
+        "min[n²/4^i, cores]",
+        "min[n²/4^(i+1), cores]",
+    ]);
+    t.row(vec![
+        "scalarMul",
+        "4/3·(b²−3b+2)",
+        "b/2·(b−1)",
+        "min[b²/4^i, cores]",
+        "min[b²/4^(i+1), cores]",
+    ]);
+    t.row(vec![
+        "arrange",
+        "—",
+        "b/2·(b−1)",
+        "—",
+        "min[b²/4^(i+1), cores]",
+    ]);
+    t.row(vec![
+        "Additional Cost",
+        "7·(n/2)³",
+        "—",
+        "min[n²/4, cores]",
+        "—",
+    ]);
+
+    let lu = lu_cost(n, b, cores, k);
+    let spin = spin_cost(n, b, cores, k);
+    let mut numeric = Table::new(vec!["Method", "LU (model)", "SPIN (model)"]);
+    for ((name, luv), (_, spinv)) in lu.rows().into_iter().zip(spin.rows()) {
+        numeric.row(vec![
+            name.to_string(),
+            fmt::secs(luv),
+            fmt::secs(spinv),
+        ]);
+    }
+    numeric.row(vec![
+        "TOTAL".to_string(),
+        fmt::secs(lu.total()),
+        fmt::secs(spin.total()),
+    ]);
+
+    format!(
+        "Table 1 — symbolic cost summary (paper, per level i):\n{}\n\
+         Numeric evaluation at n={n}, b={b}, cores={cores}:\n{}",
+        t.render(),
+        numeric.render()
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_all_methods() {
+        let s = render_table1(1024, 8, 30, &CostConstants::default());
+        for m in [
+            "leafNode",
+            "breakMat",
+            "xy (filter)",
+            "multiply",
+            "subtract",
+            "scalarMul",
+            "arrange",
+            "Additional Cost",
+            "TOTAL",
+        ] {
+            assert!(s.contains(m), "missing row {m}");
+        }
+        assert!(s.contains("n³/b²"));
+        assert!(s.contains("min[b²/4^i, cores]"));
+    }
+}

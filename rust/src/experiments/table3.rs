@@ -1,0 +1,147 @@
+//! Table 3 — "Experimental results of wall clock execution time of
+//! different methods in SPIN": per-method breakdown over split counts for
+//! one matrix size (paper: n = 4096, b ∈ {2, 4, 8, 16}).
+
+use crate::algos::Algorithm;
+use crate::config::{ClusterConfig, JobConfig};
+use crate::error::Result;
+use crate::experiments::{report, run_inversion, split_sweep};
+use crate::util::fmt::Table;
+
+/// Paper row order.
+pub const METHODS: [&str; 7] = [
+    "leafNode",
+    "breakMat",
+    "xy",
+    "multiply",
+    "subtract",
+    "scalar",
+    "arrange",
+];
+
+#[derive(Debug, Clone)]
+pub struct Table3Column {
+    pub b: usize,
+    /// Per-method virtual milliseconds, in [`METHODS`] order.
+    pub method_ms: Vec<f64>,
+    pub total_ms: f64,
+}
+
+/// Run SPIN for each split count and collect the per-method breakdown.
+pub fn run(cluster: &ClusterConfig, n: usize, max_b: usize, seed: u64) -> Result<Vec<Table3Column>> {
+    let mut cols = Vec::new();
+    for b in split_sweep(n, max_b) {
+        let mut job = JobConfig::new(n, n / b);
+        job.seed = seed ^ b as u64;
+        let r = run_inversion(cluster, &job, Algorithm::Spin)?;
+        let method_ms: Vec<f64> = METHODS
+            .iter()
+            .map(|m| {
+                r.metrics
+                    .method(m)
+                    .map(|s| s.virtual_secs * 1e3)
+                    .unwrap_or(0.0)
+            })
+            .collect();
+        let total_ms = r.virtual_secs * 1e3;
+        log::info!("table3 n={n} b={b}: total {total_ms:.1} ms");
+        cols.push(Table3Column {
+            b,
+            method_ms,
+            total_ms,
+        });
+    }
+    Ok(cols)
+}
+
+pub fn render(n: usize, cols: &[Table3Column]) -> Result<String> {
+    let mut header = vec!["Method".to_string()];
+    header.extend(cols.iter().map(|c| format!("b = {}", c.b)));
+    let mut t = Table::new(header.clone());
+    for (mi, m) in METHODS.iter().enumerate() {
+        let mut row = vec![m.to_string()];
+        row.extend(cols.iter().map(|c| format!("{:.0}", c.method_ms[mi])));
+        t.row(row);
+    }
+    let mut total = vec!["Total".to_string()];
+    total.extend(cols.iter().map(|c| format!("{:.0}", c.total_ms)));
+    t.row(total);
+
+    let mut csv = Table::new(header);
+    for (mi, m) in METHODS.iter().enumerate() {
+        let mut row = vec![m.to_string()];
+        row.extend(cols.iter().map(|c| format!("{}", c.method_ms[mi])));
+        csv.row(row);
+    }
+    let path = report::write_csv("table3", &csv)?;
+    Ok(format!(
+        "Table 3 analogue (n = {n}, virtual ms):\n{}\ncsv: {}\n",
+        t.render(),
+        path.display()
+    ))
+}
+
+/// Shape checks from the paper's discussion of Table 3:
+/// * leafNode decreases sharply with b (∝ n³/b²);
+/// * multiply becomes ever more dominant relative to leafNode and rises
+///   again at the tail of the sweep (its own U: serial products at tiny b,
+///   replication/overhead at large b);
+/// * the total is U-shaped.
+pub fn check_shape(cols: &[Table3Column]) -> std::result::Result<(), String> {
+    let leaf_i = 0;
+    let mult_i = 3;
+    for w in cols.windows(2) {
+        let (a, b) = (&w[0], &w[1]);
+        if b.method_ms[leaf_i] > a.method_ms[leaf_i] * 1.05 {
+            return Err(format!(
+                "leafNode rose with b: {:.0} -> {:.0} ms (b {} -> {})",
+                a.method_ms[leaf_i], b.method_ms[leaf_i], a.b, b.b
+            ));
+        }
+        // multiply / leafNode dominance must be non-decreasing.
+        let ra = a.method_ms[mult_i] / a.method_ms[leaf_i].max(1e-9);
+        let rb = b.method_ms[mult_i] / b.method_ms[leaf_i].max(1e-9);
+        if rb < ra * 0.9 {
+            return Err(format!(
+                "multiply/leaf dominance fell with b: {ra:.1} -> {rb:.1} (b {} -> {})",
+                a.b, b.b
+            ));
+        }
+    }
+    if let Some(last) = cols.last() {
+        if last.method_ms[leaf_i] > last.total_ms * 0.5 {
+            return Err("at the largest b, leafNode should no longer dominate".into());
+        }
+    }
+    if cols.len() >= 4 {
+        let totals: Vec<f64> = cols.iter().map(|c| c.total_ms).collect();
+        let argmin = totals
+            .iter()
+            .enumerate()
+            .min_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .unwrap()
+            .0;
+        if argmin == 0 || argmin == totals.len() - 1 {
+            return Err(format!("total not U-shaped: {totals:?}"));
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn smoke_breakdown_has_all_methods() {
+        let cluster = ClusterConfig::paper();
+        let cols = run(&cluster, 256, 8, 11).unwrap();
+        assert_eq!(cols.len(), 3); // b = 2, 4, 8
+        for c in &cols {
+            assert_eq!(c.method_ms.len(), METHODS.len());
+            assert!(c.total_ms > 0.0);
+        }
+        // leafNode falls with b.
+        assert!(cols[0].method_ms[0] > cols.last().unwrap().method_ms[0]);
+    }
+}

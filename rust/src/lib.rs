@@ -1,0 +1,33 @@
+//! # SPIN — Strassen-based distributed matrix inversion
+//!
+//! Reproduction of *SPIN: A Fast and Scalable Matrix Inversion Method in
+//! Apache Spark* (Misra et al., ICDCN '18) as a three-layer Rust + JAX +
+//! Pallas system:
+//!
+//! * **Layer 3 (this crate)** — the coordinator: a Spark-like dataflow
+//!   substrate ([`cluster`]), the distributed [`blockmatrix`] algebra, the
+//!   SPIN recursion and its LU baseline ([`algos`]), the paper's wall-clock
+//!   cost model ([`costmodel`]) and every experiment in the evaluation
+//!   section ([`experiments`]).
+//! * **Layer 2/1 (build-time Python)** — block-level compute lowered once
+//!   from JAX + Pallas to HLO text, loaded and executed from Rust through
+//!   the PJRT CPU client ([`runtime`]).
+//!
+//! Python never runs on the request path: after `make artifacts` the `spin`
+//! binary is self-contained.
+
+pub mod algos;
+pub mod blockmatrix;
+pub mod cli;
+pub mod cluster;
+pub mod config;
+pub mod costmodel;
+pub mod error;
+pub mod experiments;
+pub mod linalg;
+pub mod runtime;
+pub mod ser;
+pub mod util;
+
+pub use config::{ClusterConfig, JobConfig};
+pub use error::{Result, SpinError};

@@ -1,0 +1,409 @@
+//! LU factorization (partial pivoting) and serial inversion — leaf kernels.
+//!
+//! The paper's leaf step inverts one block "in any approach (e.g., LU, QR,
+//! SVD)"; the Liu et al. baseline additionally needs LU factors themselves
+//! at its leaves. Both live here.
+
+use crate::error::{Result, SpinError};
+use crate::linalg::Matrix;
+
+/// Packed LU factors: `lu` holds L (unit diagonal, below) and U (on/above),
+/// `perm[i]` is the source row of output row i, `sign` the permutation sign.
+pub struct LuFactors {
+    pub lu: Matrix,
+    pub perm: Vec<usize>,
+    pub sign: f64,
+}
+
+impl LuFactors {
+    /// Extract the unit-lower-triangular L.
+    pub fn l(&self) -> Matrix {
+        let n = self.lu.rows();
+        let mut l = Matrix::identity(n);
+        for j in 0..n {
+            for i in (j + 1)..n {
+                l.set(i, j, self.lu.get(i, j));
+            }
+        }
+        l
+    }
+
+    /// Extract the upper-triangular U.
+    pub fn u(&self) -> Matrix {
+        let n = self.lu.rows();
+        let mut u = Matrix::zeros(n, n);
+        for j in 0..n {
+            for i in 0..=j {
+                u.set(i, j, self.lu.get(i, j));
+            }
+        }
+        u
+    }
+
+    /// The permutation as a matrix P with P·A = L·U.
+    pub fn p(&self) -> Matrix {
+        let n = self.perm.len();
+        let mut p = Matrix::zeros(n, n);
+        for (i, &src) in self.perm.iter().enumerate() {
+            p.set(i, src, 1.0);
+        }
+        p
+    }
+
+    pub fn det(&self) -> f64 {
+        let n = self.lu.rows();
+        (0..n).fold(self.sign, |acc, i| acc * self.lu.get(i, i))
+    }
+}
+
+/// LU with partial pivoting: P·A = L·U. Errors on (numerically) singular A.
+pub fn lu_decompose(a: &Matrix) -> Result<LuFactors> {
+    if !a.is_square() {
+        return Err(SpinError::shape("LU needs a square matrix"));
+    }
+    let n = a.rows();
+    let mut lu = a.clone();
+    let mut perm: Vec<usize> = (0..n).collect();
+    let mut sign = 1.0;
+
+    for k in 0..n {
+        // pivot search in column k, rows k..n
+        let mut p = k;
+        let mut pmax = lu.get(k, k).abs();
+        for i in (k + 1)..n {
+            let v = lu.get(i, k).abs();
+            if v > pmax {
+                pmax = v;
+                p = i;
+            }
+        }
+        if pmax < f64::EPSILON * n as f64 {
+            return Err(SpinError::numerical(format!(
+                "singular pivot at column {k} (|pivot|={pmax:.3e})"
+            )));
+        }
+        if p != k {
+            // swap rows k and p
+            for j in 0..n {
+                let t = lu.get(k, j);
+                lu.set(k, j, lu.get(p, j));
+                lu.set(p, j, t);
+            }
+            perm.swap(k, p);
+            sign = -sign;
+        }
+        eliminate_column(&mut lu, k);
+    }
+    Ok(LuFactors { lu, perm, sign })
+}
+
+/// One Gaussian-elimination step on packed LU storage, column-oriented.
+///
+/// §Perf: computes the multiplier column once (contiguous scale of
+/// `lu[k+1.., k]`), then updates each trailing column with a contiguous
+/// axpy against it — the column-major-friendly `jki` form of the strided
+/// row update (EXPERIMENTS.md §Perf, L3-1).
+fn eliminate_column(lu: &mut Matrix, k: usize) {
+    let n = lu.rows();
+    let pivot = lu.get(k, k);
+    {
+        let ck = &mut lu.col_mut(k)[k + 1..n];
+        for v in ck.iter_mut() {
+            *v /= pivot;
+        }
+    }
+    for j in (k + 1)..n {
+        let ukj = lu.get(k, j);
+        if ukj == 0.0 {
+            continue;
+        }
+        // Columns k and j are disjoint slices of the backing buffer.
+        let data = lu.data_mut();
+        let (head, tail) = data.split_at_mut(j * n);
+        let ck = &head[k * n + k + 1..k * n + n];
+        let cj = &mut tail[k + 1..n];
+        for (cv, &fv) in cj.iter_mut().zip(ck) {
+            *cv -= fv * ukj;
+        }
+    }
+}
+
+/// Solve A·x = rhs (multiple right-hand sides) via the packed factors.
+///
+/// §Perf: column-sweep substitution. The packed factors are column-major,
+/// so the inner updates run over one contiguous factor column against one
+/// contiguous solution column (an axpy that auto-vectorizes) instead of a
+/// strided row walk (EXPERIMENTS.md §Perf, L3-1).
+pub fn solve(f: &LuFactors, rhs: &Matrix) -> Result<Matrix> {
+    let n = f.lu.rows();
+    if rhs.rows() != n {
+        return Err(SpinError::shape("solve: rhs row count mismatch"));
+    }
+    let m = rhs.cols();
+    let mut x = Matrix::zeros(n, m);
+    // apply permutation
+    for j in 0..m {
+        for i in 0..n {
+            x.set(i, j, rhs.get(f.perm[i], j));
+        }
+    }
+    for j in 0..m {
+        // forward substitution (L, unit diagonal), column-oriented:
+        // once x[p] is final, subtract x[p]·L[p+1.., p] from the rows below.
+        for p in 0..n {
+            let xp = x.get(p, j);
+            if xp != 0.0 {
+                let lu_col = &f.lu.col(p)[p + 1..n];
+                let x_col = &mut x.col_mut(j)[p + 1..n];
+                for (xi, &lv) in x_col.iter_mut().zip(lu_col) {
+                    *xi -= lv * xp;
+                }
+            }
+        }
+        // back substitution (U), column-oriented.
+        for p in (0..n).rev() {
+            let xp = x.get(p, j) / f.lu.get(p, p);
+            x.set(p, j, xp);
+            if xp != 0.0 {
+                let lu_col = &f.lu.col(p)[..p];
+                let x_col = &mut x.col_mut(j)[..p];
+                for (xi, &uv) in x_col.iter_mut().zip(lu_col) {
+                    *xi -= uv * xp;
+                }
+            }
+        }
+    }
+    Ok(x)
+}
+
+/// LU **without pivoting**: A = L·U with L unit-lower, U upper.
+///
+/// Block-recursive LU (the Liu et al. baseline) cannot permute rows across
+/// blocks, so its leaf kernel must be pivot-free; errors if a pivot
+/// (numerically) vanishes. Safe for the diagonally-dominant / SPD workload
+/// families whose principal minors never vanish.
+pub fn lu_decompose_nopivot(a: &Matrix) -> Result<(Matrix, Matrix)> {
+    if !a.is_square() {
+        return Err(SpinError::shape("LU needs a square matrix"));
+    }
+    let n = a.rows();
+    let mut lu = a.clone();
+    for k in 0..n {
+        let pivot = lu.get(k, k);
+        if pivot.abs() < f64::EPSILON * n as f64 {
+            return Err(SpinError::numerical(format!(
+                "zero pivot at column {k} in pivot-free LU (|pivot|={:.3e})",
+                pivot.abs()
+            )));
+        }
+        eliminate_column(&mut lu, k);
+    }
+    let mut l = Matrix::identity(n);
+    let mut u = Matrix::zeros(n, n);
+    for j in 0..n {
+        for i in 0..n {
+            if i > j {
+                l.set(i, j, lu.get(i, j));
+            } else {
+                u.set(i, j, lu.get(i, j));
+            }
+        }
+    }
+    Ok((l, u))
+}
+
+/// A⁻¹ via LU + n-column solve — the default leaf method.
+pub fn lu_inverse(a: &Matrix) -> Result<Matrix> {
+    let f = lu_decompose(a)?;
+    solve(&f, &Matrix::identity(a.rows()))
+}
+
+/// A⁻¹ via Gauss-Jordan with partial pivoting on the augmented [A | I] —
+/// mirrors the Pallas leaf kernel exactly (same algorithm, same pivoting).
+pub fn gauss_jordan_inverse(a: &Matrix) -> Result<Matrix> {
+    if !a.is_square() {
+        return Err(SpinError::shape("gauss_jordan needs a square matrix"));
+    }
+    let n = a.rows();
+    let mut aug = Matrix::zeros(n, 2 * n);
+    aug.set_submatrix(0, 0, a)?;
+    aug.set_submatrix(0, n, &Matrix::identity(n))?;
+
+    for k in 0..n {
+        let mut p = k;
+        let mut pmax = aug.get(k, k).abs();
+        for i in (k + 1)..n {
+            let v = aug.get(i, k).abs();
+            if v > pmax {
+                pmax = v;
+                p = i;
+            }
+        }
+        if pmax < f64::EPSILON * n as f64 {
+            return Err(SpinError::numerical(format!(
+                "singular pivot at column {k}"
+            )));
+        }
+        if p != k {
+            for j in 0..2 * n {
+                let t = aug.get(k, j);
+                aug.set(k, j, aug.get(p, j));
+                aug.set(p, j, t);
+            }
+        }
+        // §Perf: column-sweep elimination (see `eliminate_column`) — one
+        // multiplier vector, then a contiguous axpy per augmented column.
+        let pivot = aug.get(k, k);
+        for j in 0..2 * n {
+            let v = aug.get(k, j) / pivot;
+            aug.set(k, j, v);
+        }
+        let mut factors: Vec<f64> = aug.col(k).to_vec();
+        factors[k] = 0.0;
+        for j in 0..2 * n {
+            let akj = aug.get(k, j);
+            if akj == 0.0 {
+                continue;
+            }
+            let col = aug.col_mut(j);
+            for (cv, &fv) in col.iter_mut().zip(&factors) {
+                *cv -= fv * akj;
+            }
+        }
+    }
+    aug.submatrix(0, n, n, n)
+}
+
+/// Serial inversion dispatch used across the crate.
+pub fn inverse(a: &Matrix) -> Result<Matrix> {
+    lu_inverse(a)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::generate::{diag_dominant, spd};
+    use crate::linalg::matmul;
+    use crate::linalg::inverse_residual;
+    use crate::util::check::forall;
+    use crate::util::Rng;
+
+    #[test]
+    fn lu_reconstructs_pa() {
+        let mut rng = Rng::new(1);
+        let a = diag_dominant(16, &mut rng);
+        let f = lu_decompose(&a).unwrap();
+        let pa = matmul(&f.p(), &a);
+        let lu = matmul(&f.l(), &f.u());
+        assert!(pa.max_abs_diff(&lu) < 1e-10);
+    }
+
+    #[test]
+    fn lu_pivots_zero_leading_entry() {
+        let a = Matrix::from_vec(3, 3, vec![0.0, 1.0, 4.0, 1.0, 0.0, 5.0, 2.0, 3.0, 0.0]).unwrap();
+        let inv = lu_inverse(&a).unwrap();
+        assert!(inverse_residual(&a, &inv) < 1e-12);
+    }
+
+    #[test]
+    fn lu_rejects_singular() {
+        let a = Matrix::from_fn(4, 4, |i, _| i as f64); // rank 1
+        assert!(lu_decompose(&a).is_err());
+    }
+
+    #[test]
+    fn det_of_known_matrix() {
+        let a = Matrix::from_vec(2, 2, vec![3.0, 1.0, 2.0, 4.0]).unwrap();
+        // det = 3*4 - 2*1 = 10
+        let f = lu_decompose(&a).unwrap();
+        assert!((f.det() - 10.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn solve_matches_direct() {
+        let mut rng = Rng::new(2);
+        let a = diag_dominant(12, &mut rng);
+        let x_true = Matrix::random_uniform(12, 3, -2.0, 2.0, &mut rng);
+        let rhs = matmul(&a, &x_true);
+        let f = lu_decompose(&a).unwrap();
+        let x = solve(&f, &rhs).unwrap();
+        assert!(x.max_abs_diff(&x_true) < 1e-9);
+    }
+
+    #[test]
+    fn inverse_of_identity() {
+        let inv = lu_inverse(&Matrix::identity(8)).unwrap();
+        assert!(inv.max_abs_diff(&Matrix::identity(8)) < 1e-14);
+    }
+
+    #[test]
+    fn gauss_jordan_matches_lu() {
+        let mut rng = Rng::new(3);
+        for n in [1usize, 2, 5, 16, 40] {
+            let a = diag_dominant(n, &mut rng);
+            let gj = gauss_jordan_inverse(&a).unwrap();
+            let lu = lu_inverse(&a).unwrap();
+            assert!(gj.max_abs_diff(&lu) < 1e-9, "n={n}");
+        }
+    }
+
+    #[test]
+    fn gauss_jordan_needs_pivoting_case() {
+        let a = Matrix::from_vec(3, 3, vec![0.0, 1.0, 4.0, 1.0, 0.0, 5.0, 2.0, 3.0, 0.0]).unwrap();
+        let inv = gauss_jordan_inverse(&a).unwrap();
+        assert!(inverse_residual(&a, &inv) < 1e-12);
+    }
+
+    #[test]
+    fn spd_inversion_residual() {
+        let mut rng = Rng::new(4);
+        let a = spd(32, &mut rng);
+        let inv = lu_inverse(&a).unwrap();
+        assert!(inverse_residual(&a, &inv) < 1e-12);
+    }
+
+    #[test]
+    fn property_inverse_roundtrip() {
+        forall(
+            "inv(inv(A)) == A",
+            0xE1,
+            16,
+            |r| diag_dominant(4 + r.next_usize(28), r),
+            |a| {
+                let twice = lu_inverse(&lu_inverse(a).unwrap()).unwrap();
+                let d = twice.max_abs_diff(a);
+                if d < 1e-7 {
+                    Ok(())
+                } else {
+                    Err(format!("diff {d}"))
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn property_residuals_small() {
+        forall(
+            "‖A·A⁻¹−I‖ small",
+            0xE2,
+            16,
+            |r| {
+                let n = 2 + r.next_usize(48);
+                if r.next_f64() < 0.5 {
+                    diag_dominant(n, r)
+                } else {
+                    spd(n, r)
+                }
+            },
+            |a| {
+                let inv = lu_inverse(a).unwrap();
+                let resid = inverse_residual(a, &inv);
+                if resid < 1e-10 {
+                    Ok(())
+                } else {
+                    Err(format!("residual {resid}"))
+                }
+            },
+        );
+    }
+}

@@ -1,0 +1,112 @@
+//! Invertible test-matrix generators (replacing the paper's `java.util.Random`
+//! workload; see DESIGN.md §3 for why plain uniform random is not
+//! Strassen-safe in general).
+
+use crate::linalg::{matmul, Matrix};
+use crate::util::Rng;
+
+/// Strictly diagonally dominant: uniform(-1,1) off-diagonal, diagonal set to
+/// ±(row abs-sum + 1). Every principal minor is nonsingular, so the Strassen
+/// recursion never meets a singular A11 or Schur complement.
+pub fn diag_dominant(n: usize, rng: &mut Rng) -> Matrix {
+    let mut m = Matrix::random_uniform(n, n, -1.0, 1.0, rng);
+    for i in 0..n {
+        let mut row_sum = 0.0;
+        for j in 0..n {
+            if j != i {
+                row_sum += m.get(i, j).abs();
+            }
+        }
+        let sign = if m.get(i, i) >= 0.0 { 1.0 } else { -1.0 };
+        m.set(i, i, sign * (row_sum + 1.0));
+    }
+    m
+}
+
+/// Symmetric positive definite: `B·Bᵀ + n·I` — the paper's stated scope
+/// ("square positive definite and invertible matrices").
+pub fn spd(n: usize, rng: &mut Rng) -> Matrix {
+    let b = Matrix::random_uniform(n, n, -1.0, 1.0, rng);
+    let mut m = matmul(&b, &b.transpose());
+    for i in 0..n {
+        m.add_assign_at(i, i, n as f64);
+    }
+    m
+}
+
+/// Hilbert matrix H[i][j] = 1/(i+j+1) — notoriously ill-conditioned;
+/// used by numerical edge-case tests only.
+pub fn hilbert(n: usize) -> Matrix {
+    Matrix::from_fn(n, n, |i, j| 1.0 / (i + j + 1) as f64)
+}
+
+/// A generically invertible (not necessarily dominant) random matrix:
+/// uniform entries plus a small diagonal shift.
+pub fn random_invertible(n: usize, rng: &mut Rng) -> Matrix {
+    let mut m = Matrix::random_uniform(n, n, -1.0, 1.0, rng);
+    for i in 0..n {
+        m.add_assign_at(i, i, 2.0);
+    }
+    m
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::lu_inverse;
+    use crate::util::check::forall;
+
+    #[test]
+    fn diag_dominant_is_dominant() {
+        let mut rng = Rng::new(1);
+        let m = diag_dominant(32, &mut rng);
+        for i in 0..32 {
+            let mut off = 0.0;
+            for j in 0..32 {
+                if j != i {
+                    off += m.get(i, j).abs();
+                }
+            }
+            assert!(m.get(i, i).abs() > off, "row {i} not dominant");
+        }
+    }
+
+    #[test]
+    fn spd_is_symmetric_and_pd() {
+        let mut rng = Rng::new(2);
+        let m = spd(24, &mut rng);
+        assert!(m.max_abs_diff(&m.transpose()) < 1e-12);
+        // PD ⇒ xᵀMx > 0 for random x.
+        for _ in 0..8 {
+            let x = Matrix::random_uniform(24, 1, -1.0, 1.0, &mut rng);
+            let q = matmul(&matmul(&x.transpose(), &m), &x).get(0, 0);
+            assert!(q > 0.0);
+        }
+    }
+
+    #[test]
+    fn hilbert_values() {
+        let h = hilbert(3);
+        assert_eq!(h.get(0, 0), 1.0);
+        assert!((h.get(1, 2) - 0.25).abs() < 1e-15);
+        assert_eq!(h.get(2, 1), h.get(1, 2));
+    }
+
+    #[test]
+    fn property_generators_invertible() {
+        forall(
+            "generated matrices invert",
+            0xF1,
+            12,
+            |r| {
+                let n = 2 + r.next_usize(30);
+                match r.next_usize(3) {
+                    0 => diag_dominant(n, r),
+                    1 => spd(n, r),
+                    _ => random_invertible(n, r),
+                }
+            },
+            |a| lu_inverse(a).map(|_| ()).map_err(|e| e.to_string()),
+        );
+    }
+}

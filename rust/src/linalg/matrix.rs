@@ -1,0 +1,369 @@
+//! Column-major dense matrix (the paper stores block payloads column-major).
+
+use crate::error::{Result, SpinError};
+use crate::util::Rng;
+
+/// Dense f64 matrix, column-major storage: element `(i, j)` lives at
+/// `data[i + j * rows]`.
+#[derive(Clone, PartialEq)]
+pub struct Matrix {
+    rows: usize,
+    cols: usize,
+    data: Vec<f64>,
+}
+
+impl std::fmt::Debug for Matrix {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        writeln!(f, "Matrix {}x{} [", self.rows, self.cols)?;
+        let show_r = self.rows.min(6);
+        let show_c = self.cols.min(6);
+        for i in 0..show_r {
+            write!(f, "  ")?;
+            for j in 0..show_c {
+                write!(f, "{:>10.4} ", self.get(i, j))?;
+            }
+            writeln!(f, "{}", if self.cols > show_c { "…" } else { "" })?;
+        }
+        if self.rows > show_r {
+            writeln!(f, "  …")?;
+        }
+        write!(f, "]")
+    }
+}
+
+impl Matrix {
+    // ---------- constructors ----------
+
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Matrix {
+            rows,
+            cols,
+            data: vec![0.0; rows * cols],
+        }
+    }
+
+    pub fn identity(n: usize) -> Self {
+        let mut m = Matrix::zeros(n, n);
+        for i in 0..n {
+            m.set(i, i, 1.0);
+        }
+        m
+    }
+
+    /// Take ownership of a column-major buffer.
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f64>) -> Result<Self> {
+        if data.len() != rows * cols {
+            return Err(SpinError::shape(format!(
+                "buffer of {} elements cannot be a {rows}x{cols} matrix",
+                data.len()
+            )));
+        }
+        Ok(Matrix { rows, cols, data })
+    }
+
+    /// Build from a closure over (row, col).
+    pub fn from_fn(rows: usize, cols: usize, mut f: impl FnMut(usize, usize) -> f64) -> Self {
+        let mut m = Matrix::zeros(rows, cols);
+        for j in 0..cols {
+            for i in 0..rows {
+                m.set(i, j, f(i, j));
+            }
+        }
+        m
+    }
+
+    /// Uniform random entries in [lo, hi).
+    pub fn random_uniform(rows: usize, cols: usize, lo: f64, hi: f64, rng: &mut Rng) -> Self {
+        let mut m = Matrix::zeros(rows, cols);
+        rng.fill_uniform(&mut m.data, lo, hi);
+        m
+    }
+
+    // ---------- accessors ----------
+
+    #[inline(always)]
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    #[inline(always)]
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    pub fn is_square(&self) -> bool {
+        self.rows == self.cols
+    }
+
+    #[inline(always)]
+    pub fn get(&self, i: usize, j: usize) -> f64 {
+        debug_assert!(i < self.rows && j < self.cols);
+        self.data[i + j * self.rows]
+    }
+
+    #[inline(always)]
+    pub fn set(&mut self, i: usize, j: usize, v: f64) {
+        debug_assert!(i < self.rows && j < self.cols);
+        self.data[i + j * self.rows] = v;
+    }
+
+    #[inline(always)]
+    pub fn add_assign_at(&mut self, i: usize, j: usize, v: f64) {
+        debug_assert!(i < self.rows && j < self.cols);
+        self.data[i + j * self.rows] += v;
+    }
+
+    /// Raw column-major payload.
+    pub fn data(&self) -> &[f64] {
+        &self.data
+    }
+
+    pub fn data_mut(&mut self) -> &mut [f64] {
+        &mut self.data
+    }
+
+    pub fn into_data(self) -> Vec<f64> {
+        self.data
+    }
+
+    /// Column `j` as a slice (contiguous in column-major order).
+    #[inline(always)]
+    pub fn col(&self, j: usize) -> &[f64] {
+        &self.data[j * self.rows..(j + 1) * self.rows]
+    }
+
+    #[inline(always)]
+    pub fn col_mut(&mut self, j: usize) -> &mut [f64] {
+        let r = self.rows;
+        &mut self.data[j * r..(j + 1) * r]
+    }
+
+    /// Payload size in bytes — drives the shuffle cost accounting.
+    pub fn size_bytes(&self) -> u64 {
+        (self.data.len() * std::mem::size_of::<f64>()) as u64
+    }
+
+    // ---------- elementwise ----------
+
+    pub fn add(&self, other: &Matrix) -> Result<Matrix> {
+        self.zip_with(other, |a, b| a + b)
+    }
+
+    pub fn sub(&self, other: &Matrix) -> Result<Matrix> {
+        self.zip_with(other, |a, b| a - b)
+    }
+
+    pub fn scale(&self, s: f64) -> Matrix {
+        let mut out = self.clone();
+        for v in &mut out.data {
+            *v *= s;
+        }
+        out
+    }
+
+    pub fn neg(&self) -> Matrix {
+        self.scale(-1.0)
+    }
+
+    fn zip_with(&self, other: &Matrix, f: impl Fn(f64, f64) -> f64) -> Result<Matrix> {
+        if self.rows != other.rows || self.cols != other.cols {
+            return Err(SpinError::shape(format!(
+                "elementwise op on {}x{} vs {}x{}",
+                self.rows, self.cols, other.rows, other.cols
+            )));
+        }
+        let data = self
+            .data
+            .iter()
+            .zip(&other.data)
+            .map(|(&a, &b)| f(a, b))
+            .collect();
+        Ok(Matrix {
+            rows: self.rows,
+            cols: self.cols,
+            data,
+        })
+    }
+
+    pub fn transpose(&self) -> Matrix {
+        let mut out = Matrix::zeros(self.cols, self.rows);
+        for j in 0..self.cols {
+            for i in 0..self.rows {
+                out.set(j, i, self.get(i, j));
+            }
+        }
+        out
+    }
+
+    // ---------- norms / predicates ----------
+
+    /// ∞-norm: max absolute row sum.
+    pub fn inf_norm(&self) -> f64 {
+        let mut row_sums = vec![0.0f64; self.rows];
+        for j in 0..self.cols {
+            for (i, &v) in self.col(j).iter().enumerate() {
+                row_sums[i] += v.abs();
+            }
+        }
+        row_sums.into_iter().fold(0.0, f64::max)
+    }
+
+    pub fn fro_norm(&self) -> f64 {
+        self.data.iter().map(|v| v * v).sum::<f64>().sqrt()
+    }
+
+    pub fn max_abs(&self) -> f64 {
+        self.data.iter().fold(0.0f64, |m, v| m.max(v.abs()))
+    }
+
+    /// Max elementwise |self − other| (∞ if shapes differ).
+    pub fn max_abs_diff(&self, other: &Matrix) -> f64 {
+        if self.rows != other.rows || self.cols != other.cols {
+            return f64::INFINITY;
+        }
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f64::max)
+    }
+
+    pub fn all_finite(&self) -> bool {
+        self.data.iter().all(|v| v.is_finite())
+    }
+
+    // ---------- block extraction / assembly ----------
+
+    /// Copy the `rows×cols` submatrix whose top-left corner is `(r0, c0)`.
+    pub fn submatrix(&self, r0: usize, c0: usize, rows: usize, cols: usize) -> Result<Matrix> {
+        if r0 + rows > self.rows || c0 + cols > self.cols {
+            return Err(SpinError::shape(format!(
+                "submatrix ({r0},{c0})+{rows}x{cols} out of bounds for {}x{}",
+                self.rows, self.cols
+            )));
+        }
+        let mut out = Matrix::zeros(rows, cols);
+        for j in 0..cols {
+            let src = &self.col(c0 + j)[r0..r0 + rows];
+            out.col_mut(j).copy_from_slice(src);
+        }
+        Ok(out)
+    }
+
+    /// Paste `block` with its top-left corner at `(r0, c0)`.
+    pub fn set_submatrix(&mut self, r0: usize, c0: usize, block: &Matrix) -> Result<()> {
+        if r0 + block.rows > self.rows || c0 + block.cols > self.cols {
+            return Err(SpinError::shape(format!(
+                "set_submatrix ({r0},{c0})+{}x{} out of bounds for {}x{}",
+                block.rows, block.cols, self.rows, self.cols
+            )));
+        }
+        for j in 0..block.cols {
+            let dst_col = c0 + j;
+            let r = self.rows;
+            self.data[dst_col * r + r0..dst_col * r + r0 + block.rows]
+                .copy_from_slice(block.col(j));
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn storage_is_column_major() {
+        let m = Matrix::from_vec(2, 2, vec![1.0, 2.0, 3.0, 4.0]).unwrap();
+        // col 0 = [1,2], col 1 = [3,4]
+        assert_eq!(m.get(0, 0), 1.0);
+        assert_eq!(m.get(1, 0), 2.0);
+        assert_eq!(m.get(0, 1), 3.0);
+        assert_eq!(m.get(1, 1), 4.0);
+        assert_eq!(m.col(1), &[3.0, 4.0]);
+    }
+
+    #[test]
+    fn from_vec_validates_len() {
+        assert!(Matrix::from_vec(2, 3, vec![0.0; 5]).is_err());
+    }
+
+    #[test]
+    fn identity_and_elementwise() {
+        let i = Matrix::identity(3);
+        let two_i = i.add(&i).unwrap();
+        assert_eq!(two_i.get(1, 1), 2.0);
+        assert_eq!(two_i.sub(&i).unwrap(), i);
+        assert_eq!(i.scale(-4.0).get(2, 2), -4.0);
+        assert_eq!(i.neg().get(0, 0), -1.0);
+    }
+
+    #[test]
+    fn elementwise_shape_mismatch() {
+        let a = Matrix::zeros(2, 3);
+        let b = Matrix::zeros(3, 2);
+        assert!(a.add(&b).is_err());
+        assert!(a.sub(&b).is_err());
+        assert_eq!(a.max_abs_diff(&b), f64::INFINITY);
+    }
+
+    #[test]
+    fn transpose_involution() {
+        let mut rng = Rng::new(4);
+        let m = Matrix::random_uniform(5, 3, -1.0, 1.0, &mut rng);
+        assert_eq!(m.transpose().transpose(), m);
+        assert_eq!(m.transpose().get(2, 4), m.get(4, 2));
+    }
+
+    #[test]
+    fn norms() {
+        let m = Matrix::from_vec(2, 2, vec![1.0, -3.0, 2.0, 4.0]).unwrap();
+        // rows: [1, 2] sum 3; [-3, 4] sum 7
+        assert_eq!(m.inf_norm(), 7.0);
+        assert!((m.fro_norm() - (1.0f64 + 9.0 + 4.0 + 16.0).sqrt()).abs() < 1e-15);
+        assert_eq!(m.max_abs(), 4.0);
+    }
+
+    #[test]
+    fn submatrix_round_trip() {
+        let mut rng = Rng::new(5);
+        let m = Matrix::random_uniform(8, 8, -1.0, 1.0, &mut rng);
+        let sub = m.submatrix(2, 4, 3, 2).unwrap();
+        assert_eq!(sub.get(0, 0), m.get(2, 4));
+        assert_eq!(sub.get(2, 1), m.get(4, 5));
+        let mut copy = Matrix::zeros(8, 8);
+        copy.set_submatrix(2, 4, &sub).unwrap();
+        assert_eq!(copy.get(4, 5), m.get(4, 5));
+        assert_eq!(copy.get(0, 0), 0.0);
+    }
+
+    #[test]
+    fn submatrix_bounds_checked() {
+        let m = Matrix::zeros(4, 4);
+        assert!(m.submatrix(2, 2, 3, 1).is_err());
+        let mut m2 = Matrix::zeros(4, 4);
+        assert!(m2.set_submatrix(3, 3, &Matrix::zeros(2, 2)).is_err());
+    }
+
+    #[test]
+    fn quadrant_split_and_reassemble() {
+        let mut rng = Rng::new(6);
+        let m = Matrix::random_uniform(6, 6, -1.0, 1.0, &mut rng);
+        let h = 3;
+        let a11 = m.submatrix(0, 0, h, h).unwrap();
+        let a12 = m.submatrix(0, h, h, h).unwrap();
+        let a21 = m.submatrix(h, 0, h, h).unwrap();
+        let a22 = m.submatrix(h, h, h, h).unwrap();
+        let mut back = Matrix::zeros(6, 6);
+        back.set_submatrix(0, 0, &a11).unwrap();
+        back.set_submatrix(0, h, &a12).unwrap();
+        back.set_submatrix(h, 0, &a21).unwrap();
+        back.set_submatrix(h, h, &a22).unwrap();
+        assert_eq!(back, m);
+    }
+
+    #[test]
+    fn size_bytes() {
+        assert_eq!(Matrix::zeros(4, 8).size_bytes(), 4 * 8 * 8);
+    }
+}

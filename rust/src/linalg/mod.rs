@@ -1,0 +1,52 @@
+//! Dense f64 linear algebra substrate — the JBlas stand-in.
+//!
+//! Everything the distributed layers need from a serial BLAS/LAPACK:
+//! column-major [`Matrix`], GEMM ([`matmul`]), LU with partial pivoting,
+//! Gauss-Jordan and LU-based inversion, triangular kernels for the Liu et
+//! al. baseline, norms, and the invertible test-matrix generators.
+
+mod decomp;
+mod generate;
+mod matrix;
+mod multiply;
+mod triangular;
+
+pub use decomp::{
+    gauss_jordan_inverse, inverse, lu_decompose, lu_decompose_nopivot, lu_inverse, solve,
+    LuFactors,
+};
+pub use generate::{diag_dominant, hilbert, random_invertible, spd};
+pub use matrix::Matrix;
+pub use multiply::{matmul, matmul_acc, matmul_naive, MICRO_BLOCK};
+pub use triangular::{invert_lower, invert_upper, is_lower_triangular, is_upper_triangular};
+
+use crate::config::GeneratorKind;
+use crate::util::Rng;
+
+/// FLOP count of an `n×n` GEMM (2n³, the roofline denominator).
+pub fn gemm_flops(n: usize) -> f64 {
+    2.0 * (n as f64).powi(3)
+}
+
+/// Generate a test matrix of the given family.
+pub fn generate(kind: GeneratorKind, n: usize, rng: &mut Rng) -> Matrix {
+    match kind {
+        GeneratorKind::DiagDominant => diag_dominant(n, rng),
+        GeneratorKind::Spd => spd(n, rng),
+    }
+}
+
+/// Relative inversion residual ‖A·X − I‖∞ / (‖A‖∞‖X‖∞·n) — the acceptance
+/// metric used by integration tests and `--residual-check`.
+pub fn inverse_residual(a: &Matrix, x: &Matrix) -> f64 {
+    let prod = matmul(a, x);
+    let n = a.rows();
+    let mut resid: f64 = 0.0;
+    for j in 0..n {
+        for i in 0..n {
+            let expect = if i == j { 1.0 } else { 0.0 };
+            resid = resid.max((prod.get(i, j) - expect).abs());
+        }
+    }
+    resid / (a.inf_norm() * x.inf_norm() * n as f64)
+}

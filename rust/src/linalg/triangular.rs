@@ -1,0 +1,170 @@
+//! Triangular kernels for the LU-decomposition baseline (Liu et al. 2016).
+//!
+//! The baseline inverts A as U⁻¹·L⁻¹·P; its leaf step needs serial
+//! triangular inversions and its recursion needs block-triangular inverses.
+
+use crate::error::{Result, SpinError};
+use crate::linalg::Matrix;
+
+/// Invert a lower-triangular matrix by forward substitution.
+pub fn invert_lower(l: &Matrix) -> Result<Matrix> {
+    if !l.is_square() {
+        return Err(SpinError::shape("invert_lower needs a square matrix"));
+    }
+    let n = l.rows();
+    for i in 0..n {
+        if l.get(i, i).abs() < f64::EPSILON * n as f64 {
+            return Err(SpinError::numerical(format!(
+                "zero diagonal at {i} in lower-triangular inverse"
+            )));
+        }
+    }
+    // §Perf: column-sweep forward substitution — contiguous axpy against
+    // each factor column instead of a strided row walk (EXPERIMENTS.md
+    // §Perf, L3-1).
+    let mut inv = Matrix::zeros(n, n);
+    for j in 0..n {
+        inv.set(j, j, 1.0); // e_j
+        for p in j..n {
+            let xp = inv.get(p, j) / l.get(p, p);
+            inv.set(p, j, xp);
+            if xp != 0.0 && p + 1 < n {
+                let l_col = &l.col(p)[p + 1..n];
+                let x_col = &mut inv.col_mut(j)[p + 1..n];
+                for (xi, &lv) in x_col.iter_mut().zip(l_col) {
+                    *xi -= lv * xp;
+                }
+            }
+        }
+    }
+    Ok(inv)
+}
+
+/// Invert an upper-triangular matrix by back substitution.
+pub fn invert_upper(u: &Matrix) -> Result<Matrix> {
+    if !u.is_square() {
+        return Err(SpinError::shape("invert_upper needs a square matrix"));
+    }
+    let n = u.rows();
+    for i in 0..n {
+        if u.get(i, i).abs() < f64::EPSILON * n as f64 {
+            return Err(SpinError::numerical(format!(
+                "zero diagonal at {i} in upper-triangular inverse"
+            )));
+        }
+    }
+    // §Perf: column-sweep back substitution (see `invert_lower`).
+    let mut inv = Matrix::zeros(n, n);
+    for j in 0..n {
+        inv.set(j, j, 1.0); // e_j
+        for p in (0..=j).rev() {
+            let xp = inv.get(p, j) / u.get(p, p);
+            inv.set(p, j, xp);
+            if xp != 0.0 && p > 0 {
+                let u_col = &u.col(p)[..p];
+                let x_col = &mut inv.col_mut(j)[..p];
+                for (xi, &uv) in x_col.iter_mut().zip(u_col) {
+                    *xi -= uv * xp;
+                }
+            }
+        }
+    }
+    Ok(inv)
+}
+
+/// True if every element above the diagonal is (near) zero.
+pub fn is_lower_triangular(m: &Matrix, tol: f64) -> bool {
+    for j in 0..m.cols() {
+        for i in 0..j.min(m.rows()) {
+            if m.get(i, j).abs() > tol {
+                return false;
+            }
+        }
+    }
+    true
+}
+
+/// True if every element below the diagonal is (near) zero.
+pub fn is_upper_triangular(m: &Matrix, tol: f64) -> bool {
+    for j in 0..m.cols() {
+        for i in (j + 1)..m.rows() {
+            if m.get(i, j).abs() > tol {
+                return false;
+            }
+        }
+    }
+    true
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::{lu_decompose, matmul};
+    use crate::linalg::generate::diag_dominant;
+    use crate::util::Rng;
+
+    fn random_lower(n: usize, rng: &mut Rng) -> Matrix {
+        Matrix::from_fn(n, n, |i, j| {
+            if i > j {
+                rng.uniform(-1.0, 1.0)
+            } else if i == j {
+                2.0 + rng.next_f64()
+            } else {
+                0.0
+            }
+        })
+    }
+
+    #[test]
+    fn lower_inverse_correct() {
+        let mut rng = Rng::new(1);
+        for n in [1usize, 2, 8, 33] {
+            let l = random_lower(n, &mut rng);
+            let inv = invert_lower(&l).unwrap();
+            assert!(is_lower_triangular(&inv, 1e-14), "inverse stays lower");
+            let prod = matmul(&l, &inv);
+            assert!(prod.max_abs_diff(&Matrix::identity(n)) < 1e-10, "n={n}");
+        }
+    }
+
+    #[test]
+    fn upper_inverse_correct() {
+        let mut rng = Rng::new(2);
+        for n in [1usize, 3, 16, 40] {
+            let u = random_lower(n, &mut rng).transpose();
+            let inv = invert_upper(&u).unwrap();
+            assert!(is_upper_triangular(&inv, 1e-14));
+            let prod = matmul(&inv, &u);
+            assert!(prod.max_abs_diff(&Matrix::identity(n)) < 1e-10, "n={n}");
+        }
+    }
+
+    #[test]
+    fn rejects_zero_diagonal() {
+        let mut l = Matrix::identity(4);
+        l.set(2, 2, 0.0);
+        assert!(invert_lower(&l).is_err());
+        assert!(invert_upper(&l.transpose()).is_err());
+    }
+
+    #[test]
+    fn lu_factors_invert_to_full_inverse() {
+        // U⁻¹·L⁻¹·P == A⁻¹ — the identity the Liu baseline is built on.
+        let mut rng = Rng::new(3);
+        let a = diag_dominant(20, &mut rng);
+        let f = lu_decompose(&a).unwrap();
+        let li = invert_lower(&f.l()).unwrap();
+        let ui = invert_upper(&f.u()).unwrap();
+        let inv = matmul(&matmul(&ui, &li), &f.p());
+        let prod = matmul(&a, &inv);
+        assert!(prod.max_abs_diff(&Matrix::identity(20)) < 1e-9);
+    }
+
+    #[test]
+    fn triangular_predicates() {
+        let l = Matrix::from_vec(2, 2, vec![1.0, 5.0, 0.0, 2.0]).unwrap();
+        assert!(is_lower_triangular(&l, 1e-12));
+        assert!(!is_upper_triangular(&l, 1e-12));
+        assert!(is_upper_triangular(&l.transpose(), 1e-12));
+    }
+}

@@ -1,0 +1,6 @@
+//! `spin` — the coordinator binary. See `spin help`.
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    std::process::exit(spin::cli::run(argv));
+}

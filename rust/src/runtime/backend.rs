@@ -1,0 +1,179 @@
+//! The block-kernel abstraction: every per-block compute the distributed
+//! algorithms need, behind one trait so the same recursion can run on the
+//! pure-Rust kernels (the JBlas stand-in) or on the AOT JAX/Pallas programs
+//! via PJRT.
+
+use crate::config::LeafMethod;
+use crate::error::Result;
+use crate::linalg::{self, Matrix};
+
+/// Per-block compute vocabulary (mirrors `python/compile/model.py::OPS`).
+///
+/// Implementations must be `Sync`: kernels are called from worker-pool
+/// threads. Backends with thread-affine state (PJRT handles are `!Send`)
+/// keep it in thread-locals.
+pub trait BlockKernels: Sync {
+    /// Backend name for reports.
+    fn name(&self) -> &'static str;
+
+    /// C = A·B.
+    fn matmul(&self, a: &Matrix, b: &Matrix) -> Result<Matrix>;
+
+    /// C = D + A·B (block-matmul reduce step).
+    fn matmul_acc(&self, a: &Matrix, b: &Matrix, d: &Matrix) -> Result<Matrix>;
+
+    /// C = A·B − D (SPIN's fused Schur step `V = IV − A22`).
+    fn neg_matmul_sub(&self, a: &Matrix, b: &Matrix, d: &Matrix) -> Result<Matrix>;
+
+    /// C = A − B.
+    fn subtract(&self, a: &Matrix, b: &Matrix) -> Result<Matrix>;
+
+    /// C = s·A (the paper's scalarMul payload).
+    fn scale(&self, a: &Matrix, s: f64) -> Result<Matrix>;
+
+    /// A⁻¹ for one leaf block.
+    fn leaf_inverse(&self, a: &Matrix, method: LeafMethod) -> Result<Matrix>;
+
+    /// Pivot-free leaf LU: A = L·U (baseline's leaf; errors on zero pivot).
+    fn lu_factor(&self, a: &Matrix) -> Result<(Matrix, Matrix)>;
+
+    /// L⁻¹ for a lower-triangular leaf block (baseline's leaf).
+    fn invert_lower(&self, a: &Matrix) -> Result<Matrix>;
+
+    /// U⁻¹ for an upper-triangular leaf block (baseline's leaf).
+    fn invert_upper(&self, a: &Matrix) -> Result<Matrix>;
+
+    /// Fused Algorithm-1 step over a 2×2 grid of leaf blocks:
+    /// returns (C11, C12, C21, C22). Optional optimization; the default
+    /// composes the primitive kernels.
+    fn strassen_2x2(
+        &self,
+        a11: &Matrix,
+        a12: &Matrix,
+        a21: &Matrix,
+        a22: &Matrix,
+        method: LeafMethod,
+    ) -> Result<(Matrix, Matrix, Matrix, Matrix)> {
+        let i = self.leaf_inverse(a11, method)?;
+        let ii = self.matmul(a21, &i)?;
+        let iii = self.matmul(&i, a12)?;
+        let v = self.neg_matmul_sub(a21, &iii, a22)?;
+        let vi = self.leaf_inverse(&v, method)?;
+        let c12 = self.matmul(&iii, &vi)?;
+        let c21 = self.matmul(&vi, &ii)?;
+        let vii = self.matmul(&iii, &c21)?;
+        let c11 = self.subtract(&i, &vii)?;
+        let c22 = self.scale(&vi, -1.0)?;
+        Ok((c11, c12, c21, c22))
+    }
+}
+
+/// Pure-Rust backend over [`crate::linalg`] — always available, no
+/// artifacts required. This is the "JBlas on the executor" role.
+pub struct NativeBackend;
+
+impl BlockKernels for NativeBackend {
+    fn name(&self) -> &'static str {
+        "native"
+    }
+
+    fn matmul(&self, a: &Matrix, b: &Matrix) -> Result<Matrix> {
+        Ok(linalg::matmul(a, b))
+    }
+
+    fn matmul_acc(&self, a: &Matrix, b: &Matrix, d: &Matrix) -> Result<Matrix> {
+        Ok(linalg::matmul_acc(a, b, d))
+    }
+
+    fn neg_matmul_sub(&self, a: &Matrix, b: &Matrix, d: &Matrix) -> Result<Matrix> {
+        let prod = linalg::matmul(a, b);
+        prod.sub(d)
+    }
+
+    fn subtract(&self, a: &Matrix, b: &Matrix) -> Result<Matrix> {
+        a.sub(b)
+    }
+
+    fn scale(&self, a: &Matrix, s: f64) -> Result<Matrix> {
+        Ok(a.scale(s))
+    }
+
+    fn leaf_inverse(&self, a: &Matrix, method: LeafMethod) -> Result<Matrix> {
+        match method {
+            LeafMethod::Lu => linalg::lu_inverse(a),
+            LeafMethod::GaussJordan => linalg::gauss_jordan_inverse(a),
+        }
+    }
+
+    fn lu_factor(&self, a: &Matrix) -> Result<(Matrix, Matrix)> {
+        linalg::lu_decompose_nopivot(a)
+    }
+
+    fn invert_lower(&self, a: &Matrix) -> Result<Matrix> {
+        linalg::invert_lower(a)
+    }
+
+    fn invert_upper(&self, a: &Matrix) -> Result<Matrix> {
+        linalg::invert_upper(a)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::{diag_dominant, inverse_residual, matmul};
+    use crate::util::Rng;
+
+    #[test]
+    fn native_matmul_matches_linalg() {
+        let mut rng = Rng::new(1);
+        let a = Matrix::random_uniform(16, 16, -1.0, 1.0, &mut rng);
+        let b = Matrix::random_uniform(16, 16, -1.0, 1.0, &mut rng);
+        let got = NativeBackend.matmul(&a, &b).unwrap();
+        assert!(got.max_abs_diff(&matmul(&a, &b)) < 1e-14);
+    }
+
+    #[test]
+    fn native_fused_ops() {
+        let mut rng = Rng::new(2);
+        let a = Matrix::random_uniform(8, 8, -1.0, 1.0, &mut rng);
+        let b = Matrix::random_uniform(8, 8, -1.0, 1.0, &mut rng);
+        let d = Matrix::random_uniform(8, 8, -1.0, 1.0, &mut rng);
+        let acc = NativeBackend.matmul_acc(&a, &b, &d).unwrap();
+        let want = matmul(&a, &b).add(&d).unwrap();
+        assert!(acc.max_abs_diff(&want) < 1e-13);
+        let nms = NativeBackend.neg_matmul_sub(&a, &b, &d).unwrap();
+        let want2 = matmul(&a, &b).sub(&d).unwrap();
+        assert!(nms.max_abs_diff(&want2) < 1e-13);
+    }
+
+    #[test]
+    fn native_leaf_inverse_both_methods() {
+        let mut rng = Rng::new(3);
+        let a = diag_dominant(24, &mut rng);
+        for m in [LeafMethod::Lu, LeafMethod::GaussJordan] {
+            let inv = NativeBackend.leaf_inverse(&a, m).unwrap();
+            assert!(inverse_residual(&a, &inv) < 1e-12, "{m:?}");
+        }
+    }
+
+    #[test]
+    fn default_strassen_2x2_inverts() {
+        let mut rng = Rng::new(4);
+        let n = 16;
+        let full = diag_dominant(2 * n, &mut rng);
+        let a11 = full.submatrix(0, 0, n, n).unwrap();
+        let a12 = full.submatrix(0, n, n, n).unwrap();
+        let a21 = full.submatrix(n, 0, n, n).unwrap();
+        let a22 = full.submatrix(n, n, n, n).unwrap();
+        let (c11, c12, c21, c22) = NativeBackend
+            .strassen_2x2(&a11, &a12, &a21, &a22, LeafMethod::Lu)
+            .unwrap();
+        let mut inv = Matrix::zeros(2 * n, 2 * n);
+        inv.set_submatrix(0, 0, &c11).unwrap();
+        inv.set_submatrix(0, n, &c12).unwrap();
+        inv.set_submatrix(n, 0, &c21).unwrap();
+        inv.set_submatrix(n, n, &c22).unwrap();
+        assert!(inverse_residual(&full, &inv) < 1e-10);
+    }
+}

@@ -1,0 +1,263 @@
+//! PJRT execution engine: load AOT HLO text, compile once, execute many.
+//!
+//! One `Engine` owns a PJRT CPU client plus a compiled-executable cache
+//! keyed by `(op, block_size)`. PJRT handles wrap raw pointers and are
+//! `!Send`, so an `Engine` must live and die on one thread — the
+//! [`super::XlaBackend`] keeps one per worker thread in a thread-local.
+//!
+//! Data layout: [`crate::linalg::Matrix`] is column-major; XLA's default
+//! parameter/result layout for `f64[n,n]` is row-major (`{1,0}` minor-to-
+//! major), so payloads are transposed on the way in and out. This copy is
+//! O(bs²) against O(bs³) compute and is measured in the microbenches.
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use crate::error::{Result, SpinError};
+use crate::linalg::Matrix;
+use crate::runtime::manifest::Manifest;
+
+/// A PJRT CPU client + compiled executables for one artifacts directory.
+pub struct Engine {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    cache: RefCell<HashMap<(String, usize), xla::PjRtLoadedExecutable>>,
+}
+
+impl Engine {
+    /// Create a client and load the manifest (compilation is lazy).
+    pub fn new(artifacts_dir: &Path) -> Result<Self> {
+        let manifest = Manifest::load(artifacts_dir)?;
+        let client = xla::PjRtClient::cpu()?;
+        log::debug!(
+            "PJRT engine up: platform={} artifacts={} programs={}",
+            client.platform_name(),
+            artifacts_dir.display(),
+            manifest.len()
+        );
+        Ok(Engine {
+            client,
+            manifest,
+            cache: RefCell::new(HashMap::new()),
+        })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// True if an AOT program exists for `(op, block_size)`.
+    pub fn supports(&self, op: &str, block_size: usize) -> bool {
+        self.manifest.has(op, block_size)
+    }
+
+    fn compile(&self, op: &str, block_size: usize) -> Result<()> {
+        let entry = self.manifest.get(op, block_size).ok_or_else(|| {
+            SpinError::artifact(format!("no artifact for op `{op}` at block size {block_size}"))
+        })?;
+        let path: PathBuf = self.manifest.hlo_path(entry);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str()
+                .ok_or_else(|| SpinError::artifact("non-UTF8 artifact path"))?,
+        )?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp)?;
+        self.cache
+            .borrow_mut()
+            .insert((op.to_string(), block_size), exe);
+        Ok(())
+    }
+
+    /// Execute `(op, block_size)` on block payloads + scalars, returning the
+    /// output blocks. Compiles and caches the executable on first use.
+    pub fn run(
+        &self,
+        op: &str,
+        block_size: usize,
+        blocks: &[&Matrix],
+        scalars: &[f64],
+    ) -> Result<Vec<Matrix>> {
+        let (n_blocks, n_scalars, n_outputs) = {
+            let entry = self.manifest.get(op, block_size).ok_or_else(|| {
+                SpinError::artifact(format!(
+                    "no artifact for op `{op}` at block size {block_size}"
+                ))
+            })?;
+            (
+                entry.num_block_inputs,
+                entry.num_scalar_inputs,
+                entry.num_outputs,
+            )
+        };
+        if blocks.len() != n_blocks || scalars.len() != n_scalars {
+            return Err(SpinError::artifact(format!(
+                "op `{op}` expects {n_blocks} blocks + {n_scalars} scalars, \
+                 got {} + {}",
+                blocks.len(),
+                scalars.len()
+            )));
+        }
+        for m in blocks {
+            if m.rows() != block_size || m.cols() != block_size {
+                return Err(SpinError::shape(format!(
+                    "op `{op}` artifact is {block_size}x{block_size}, got {}x{}",
+                    m.rows(),
+                    m.cols()
+                )));
+            }
+        }
+
+        if !self.cache.borrow().contains_key(&(op.to_string(), block_size)) {
+            self.compile(op, block_size)?;
+        }
+
+        let mut args: Vec<xla::Literal> = Vec::with_capacity(blocks.len() + scalars.len());
+        for m in blocks {
+            args.push(matrix_to_literal(m)?);
+        }
+        for &s in scalars {
+            args.push(xla::Literal::scalar(s));
+        }
+
+        let cache = self.cache.borrow();
+        let exe = cache.get(&(op.to_string(), block_size)).expect("just compiled");
+        let result = exe.execute::<xla::Literal>(&args)?[0][0].to_literal_sync()?;
+        drop(cache);
+
+        // aot.py lowers with return_tuple=True: output is always a tuple.
+        let outs = result.to_tuple()?;
+        if outs.len() != n_outputs {
+            return Err(SpinError::Xla(format!(
+                "op `{op}` returned {} outputs, manifest says {n_outputs}",
+                outs.len()
+            )));
+        }
+        outs.into_iter()
+            .map(|lit| literal_to_matrix(&lit, block_size))
+            .collect()
+    }
+}
+
+/// Column-major Matrix -> row-major XLA literal of shape [n, n].
+fn matrix_to_literal(m: &Matrix) -> Result<xla::Literal> {
+    let (rows, cols) = (m.rows(), m.cols());
+    let mut rm = vec![0.0f64; rows * cols];
+    for j in 0..cols {
+        let col = m.col(j);
+        for i in 0..rows {
+            rm[i * cols + j] = col[i];
+        }
+    }
+    Ok(xla::Literal::vec1(&rm).reshape(&[rows as i64, cols as i64])?)
+}
+
+/// Row-major XLA literal -> column-major Matrix.
+fn literal_to_matrix(lit: &xla::Literal, block_size: usize) -> Result<Matrix> {
+    let rm = lit.to_vec::<f64>()?;
+    if rm.len() != block_size * block_size {
+        return Err(SpinError::Xla(format!(
+            "output literal has {} elements, expected {}",
+            rm.len(),
+            block_size * block_size
+        )));
+    }
+    let mut out = Matrix::zeros(block_size, block_size);
+    for i in 0..block_size {
+        for j in 0..block_size {
+            out.set(i, j, rm[i * block_size + j]);
+        }
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::{self, diag_dominant, inverse_residual};
+    use crate::util::Rng;
+
+    fn artifacts_dir() -> Option<PathBuf> {
+        let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        dir.join("manifest.json").exists().then_some(dir)
+    }
+
+    #[test]
+    fn layout_round_trip() {
+        let mut rng = Rng::new(1);
+        let m = Matrix::random_uniform(5, 5, -1.0, 1.0, &mut rng);
+        let lit = matrix_to_literal(&m).unwrap();
+        let back = literal_to_matrix(&lit, 5).unwrap();
+        assert_eq!(back.max_abs_diff(&m), 0.0);
+    }
+
+    // The remaining tests exercise the real PJRT path and only run after
+    // `make artifacts`.
+
+    #[test]
+    fn engine_matmul_matches_native() {
+        let Some(dir) = artifacts_dir() else { return };
+        let engine = Engine::new(&dir).unwrap();
+        let mut rng = Rng::new(2);
+        let a = Matrix::random_uniform(64, 64, -1.0, 1.0, &mut rng);
+        let b = Matrix::random_uniform(64, 64, -1.0, 1.0, &mut rng);
+        let out = engine.run("matmul", 64, &[&a, &b], &[]).unwrap();
+        assert_eq!(out.len(), 1);
+        let want = linalg::matmul(&a, &b);
+        assert!(out[0].max_abs_diff(&want) < 1e-10);
+    }
+
+    #[test]
+    fn engine_leaf_inverse_works() {
+        let Some(dir) = artifacts_dir() else { return };
+        let engine = Engine::new(&dir).unwrap();
+        let mut rng = Rng::new(3);
+        let a = diag_dominant(32, &mut rng);
+        let out = engine.run("leaf_inverse", 32, &[&a], &[]).unwrap();
+        assert!(inverse_residual(&a, &out[0]) < 1e-10);
+    }
+
+    #[test]
+    fn engine_scale_uses_scalar_input() {
+        let Some(dir) = artifacts_dir() else { return };
+        let engine = Engine::new(&dir).unwrap();
+        let mut rng = Rng::new(4);
+        let a = Matrix::random_uniform(16, 16, -1.0, 1.0, &mut rng);
+        let out = engine.run("scale", 16, &[&a], &[-2.0]).unwrap();
+        assert!(out[0].max_abs_diff(&a.scale(-2.0)) < 1e-14);
+    }
+
+    #[test]
+    fn engine_strassen_2x2_four_outputs() {
+        let Some(dir) = artifacts_dir() else { return };
+        let engine = Engine::new(&dir).unwrap();
+        let mut rng = Rng::new(5);
+        let n = 16;
+        let full = diag_dominant(2 * n, &mut rng);
+        let a11 = full.submatrix(0, 0, n, n).unwrap();
+        let a12 = full.submatrix(0, n, n, n).unwrap();
+        let a21 = full.submatrix(n, 0, n, n).unwrap();
+        let a22 = full.submatrix(n, n, n, n).unwrap();
+        let out = engine
+            .run("strassen_2x2", n, &[&a11, &a12, &a21, &a22], &[])
+            .unwrap();
+        assert_eq!(out.len(), 4);
+        let mut inv = Matrix::zeros(2 * n, 2 * n);
+        inv.set_submatrix(0, 0, &out[0]).unwrap();
+        inv.set_submatrix(0, n, &out[1]).unwrap();
+        inv.set_submatrix(n, 0, &out[2]).unwrap();
+        inv.set_submatrix(n, n, &out[3]).unwrap();
+        assert!(inverse_residual(&full, &inv) < 1e-9);
+    }
+
+    #[test]
+    fn engine_rejects_unknown_op_and_bad_shapes() {
+        let Some(dir) = artifacts_dir() else { return };
+        let engine = Engine::new(&dir).unwrap();
+        let a = Matrix::zeros(16, 16);
+        assert!(engine.run("nonexistent", 16, &[&a], &[]).is_err());
+        assert!(engine.run("matmul", 16, &[&a], &[]).is_err()); // arity
+        let b = Matrix::zeros(8, 8);
+        assert!(engine.run("matmul", 16, &[&b, &b], &[]).is_err()); // shape
+    }
+}

@@ -1,0 +1,214 @@
+//! `artifacts/manifest.json` loader — the contract between `make artifacts`
+//! (python, build time) and the Rust runtime (request time).
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use crate::error::{Result, SpinError};
+use crate::ser::json::Json;
+
+/// Manifest schema version this runtime understands.
+pub const SUPPORTED_VERSION: i64 = 2;
+
+/// One AOT-compiled (op, block_size) program.
+#[derive(Debug, Clone)]
+pub struct ManifestEntry {
+    pub op: String,
+    pub block_size: usize,
+    /// HLO text file, relative to the artifacts dir.
+    pub file: String,
+    pub num_block_inputs: usize,
+    pub num_scalar_inputs: usize,
+    pub num_outputs: usize,
+    pub dtype: String,
+}
+
+/// Parsed manifest with (op, block_size) lookup.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    dir: PathBuf,
+    pub dtype: String,
+    pub block_sizes: Vec<usize>,
+    entries: HashMap<(String, usize), ManifestEntry>,
+}
+
+impl Manifest {
+    /// Load `dir/manifest.json`.
+    pub fn load(dir: &Path) -> Result<Self> {
+        let path = dir.join("manifest.json");
+        if !path.exists() {
+            return Err(SpinError::artifact(format!(
+                "{} not found — run `make artifacts` first",
+                path.display()
+            )));
+        }
+        let json = Json::from_file(&path)?;
+        Self::from_json(dir, &json)
+    }
+
+    pub fn from_json(dir: &Path, json: &Json) -> Result<Self> {
+        let version = json
+            .req("version")?
+            .as_i64()
+            .ok_or_else(|| SpinError::artifact("manifest `version` must be an integer"))?;
+        if version != SUPPORTED_VERSION {
+            return Err(SpinError::artifact(format!(
+                "manifest version {version} unsupported (runtime expects {SUPPORTED_VERSION})"
+            )));
+        }
+        let dtype = json
+            .req("dtype")?
+            .as_str()
+            .ok_or_else(|| SpinError::artifact("manifest `dtype` must be a string"))?
+            .to_string();
+        let block_sizes = json
+            .req("block_sizes")?
+            .as_array()
+            .ok_or_else(|| SpinError::artifact("manifest `block_sizes` must be an array"))?
+            .iter()
+            .map(|v| {
+                v.as_usize()
+                    .ok_or_else(|| SpinError::artifact("block size must be a positive integer"))
+            })
+            .collect::<Result<Vec<_>>>()?;
+        let mut entries = HashMap::new();
+        for e in json
+            .req("entries")?
+            .as_array()
+            .ok_or_else(|| SpinError::artifact("manifest `entries` must be an array"))?
+        {
+            let entry = ManifestEntry {
+                op: e
+                    .req("op")?
+                    .as_str()
+                    .ok_or_else(|| SpinError::artifact("entry `op` must be a string"))?
+                    .to_string(),
+                block_size: e
+                    .req("block_size")?
+                    .as_usize()
+                    .ok_or_else(|| SpinError::artifact("entry `block_size` invalid"))?,
+                file: e
+                    .req("file")?
+                    .as_str()
+                    .ok_or_else(|| SpinError::artifact("entry `file` must be a string"))?
+                    .to_string(),
+                num_block_inputs: e
+                    .req("num_block_inputs")?
+                    .as_usize()
+                    .ok_or_else(|| SpinError::artifact("entry `num_block_inputs` invalid"))?,
+                num_scalar_inputs: e
+                    .req("num_scalar_inputs")?
+                    .as_usize()
+                    .ok_or_else(|| SpinError::artifact("entry `num_scalar_inputs` invalid"))?,
+                num_outputs: e
+                    .req("num_outputs")?
+                    .as_usize()
+                    .ok_or_else(|| SpinError::artifact("entry `num_outputs` invalid"))?,
+                dtype: dtype.clone(),
+            };
+            entries.insert((entry.op.clone(), entry.block_size), entry);
+        }
+        if entries.is_empty() {
+            return Err(SpinError::artifact("manifest has no entries"));
+        }
+        Ok(Manifest {
+            dir: dir.to_path_buf(),
+            dtype,
+            block_sizes,
+            entries,
+        })
+    }
+
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    pub fn get(&self, op: &str, block_size: usize) -> Option<&ManifestEntry> {
+        self.entries.get(&(op.to_string(), block_size))
+    }
+
+    pub fn has(&self, op: &str, block_size: usize) -> bool {
+        self.get(op, block_size).is_some()
+    }
+
+    /// Absolute path of an entry's HLO file.
+    pub fn hlo_path(&self, entry: &ManifestEntry) -> PathBuf {
+        self.dir.join(&entry.file)
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_json() -> Json {
+        Json::parse(
+            r#"{
+              "version": 2,
+              "dtype": "float64",
+              "block_sizes": [16, 32],
+              "entries": [
+                {"op": "matmul", "block_size": 16, "file": "matmul_b16.hlo.txt",
+                 "num_block_inputs": 2, "num_scalar_inputs": 0, "num_outputs": 1},
+                {"op": "scale", "block_size": 32, "file": "scale_b32.hlo.txt",
+                 "num_block_inputs": 1, "num_scalar_inputs": 1, "num_outputs": 1}
+              ]
+            }"#,
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn parses_entries() {
+        let m = Manifest::from_json(Path::new("/tmp/a"), &sample_json()).unwrap();
+        assert_eq!(m.len(), 2);
+        assert_eq!(m.dtype, "float64");
+        assert_eq!(m.block_sizes, vec![16, 32]);
+        let e = m.get("matmul", 16).unwrap();
+        assert_eq!(e.num_block_inputs, 2);
+        assert!(m.has("scale", 32));
+        assert!(!m.has("matmul", 32));
+        assert_eq!(m.hlo_path(e), PathBuf::from("/tmp/a/matmul_b16.hlo.txt"));
+    }
+
+    #[test]
+    fn rejects_wrong_version() {
+        let mut j = sample_json();
+        if let Json::Object(ref mut map) = j {
+            map.insert("version".into(), Json::Number(1.0));
+        }
+        assert!(Manifest::from_json(Path::new("/tmp"), &j).is_err());
+    }
+
+    #[test]
+    fn rejects_missing_fields() {
+        let j = Json::parse(r#"{"version": 2}"#).unwrap();
+        assert!(Manifest::from_json(Path::new("/tmp"), &j).is_err());
+    }
+
+    #[test]
+    fn missing_file_is_artifact_error() {
+        let err = Manifest::load(Path::new("/nonexistent-dir-xyz")).unwrap_err();
+        assert!(err.to_string().contains("make artifacts"));
+    }
+
+    #[test]
+    fn loads_real_manifest_when_built() {
+        // Integration-ish: only runs when `make artifacts` has been executed.
+        let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if dir.join("manifest.json").exists() {
+            let m = Manifest::load(&dir).unwrap();
+            assert!(m.has("matmul", 64));
+            assert!(m.has("leaf_inverse", 128));
+            assert!(m.has("strassen_2x2", 32));
+        }
+    }
+}

@@ -1,0 +1,24 @@
+//! Runtime layer: the block-kernel abstraction and its two backends —
+//! pure-Rust (`native`) and the AOT JAX/Pallas programs executed through
+//! the PJRT CPU client (`xla`), plus the artifact manifest loader.
+
+mod backend;
+mod engine;
+mod manifest;
+mod xla_backend;
+
+pub use backend::{BlockKernels, NativeBackend};
+pub use engine::Engine;
+pub use manifest::{Manifest, ManifestEntry};
+pub use xla_backend::XlaBackend;
+
+use crate::config::{BackendKind, ClusterConfig};
+use crate::error::Result;
+
+/// Instantiate the configured backend.
+pub fn make_backend(config: &ClusterConfig) -> Result<Box<dyn BlockKernels>> {
+    match config.backend {
+        BackendKind::Native => Ok(Box::new(NativeBackend)),
+        BackendKind::Xla => Ok(Box::new(XlaBackend::new(config.artifacts_dir.clone())?)),
+    }
+}

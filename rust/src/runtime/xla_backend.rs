@@ -1,0 +1,292 @@
+//! [`BlockKernels`] backend executing the AOT JAX/Pallas programs via PJRT.
+//!
+//! PJRT handles are `!Send`, so each worker thread lazily builds its own
+//! [`Engine`] (client + executable cache) in a thread-local, keyed by the
+//! artifacts directory. Block sizes without an AOT program fall back to the
+//! native kernels with a warning (counted, so experiments can report purity).
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::PathBuf;
+use std::rc::Rc;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use crate::config::LeafMethod;
+use crate::error::Result;
+use crate::linalg::Matrix;
+use crate::runtime::backend::{BlockKernels, NativeBackend};
+use crate::runtime::engine::Engine;
+use crate::runtime::manifest::Manifest;
+
+thread_local! {
+    /// One engine per (thread, artifacts dir).
+    static ENGINES: RefCell<HashMap<PathBuf, Rc<Engine>>> = RefCell::new(HashMap::new());
+}
+
+/// PJRT-backed block kernels.
+pub struct XlaBackend {
+    artifacts_dir: PathBuf,
+    /// Ops satisfied natively because no artifact matched.
+    fallbacks: AtomicU64,
+    /// Ops executed through PJRT.
+    executed: AtomicU64,
+}
+
+impl XlaBackend {
+    /// Validates the manifest eagerly (fail fast on a missing
+    /// `make artifacts`), then hands out thread-local engines on demand.
+    pub fn new(artifacts_dir: PathBuf) -> Result<Self> {
+        let _ = Manifest::load(&artifacts_dir)?;
+        Ok(XlaBackend {
+            artifacts_dir,
+            fallbacks: AtomicU64::new(0),
+            executed: AtomicU64::new(0),
+        })
+    }
+
+    /// Number of block ops that fell back to the native kernels.
+    pub fn fallback_count(&self) -> u64 {
+        self.fallbacks.load(Ordering::Relaxed)
+    }
+
+    /// Number of block ops executed through PJRT.
+    pub fn executed_count(&self) -> u64 {
+        self.executed.load(Ordering::Relaxed)
+    }
+
+    fn with_engine<T>(&self, f: impl FnOnce(&Engine) -> Result<T>) -> Result<T> {
+        ENGINES.with(|cell| {
+            let mut map = cell.borrow_mut();
+            let engine = match map.get(&self.artifacts_dir) {
+                Some(e) => Rc::clone(e),
+                None => {
+                    let e = Rc::new(Engine::new(&self.artifacts_dir)?);
+                    map.insert(self.artifacts_dir.clone(), Rc::clone(&e));
+                    e
+                }
+            };
+            drop(map);
+            f(&engine)
+        })
+    }
+
+    /// Run `(op, bs)` through PJRT if an artifact exists, else fall back.
+    fn run_or_fallback(
+        &self,
+        op: &str,
+        bs: usize,
+        blocks: &[&Matrix],
+        scalars: &[f64],
+        native: impl FnOnce() -> Result<Matrix>,
+    ) -> Result<Matrix> {
+        let supported = self.with_engine(|e| Ok(e.supports(op, bs)))?;
+        if supported {
+            self.executed.fetch_add(1, Ordering::Relaxed);
+            self.with_engine(|e| Ok(e.run(op, bs, blocks, scalars)?.remove(0)))
+        } else {
+            log::warn!("no artifact for `{op}` b={bs}; using native fallback");
+            self.fallbacks.fetch_add(1, Ordering::Relaxed);
+            native()
+        }
+    }
+}
+
+impl BlockKernels for XlaBackend {
+    fn name(&self) -> &'static str {
+        "xla"
+    }
+
+    fn matmul(&self, a: &Matrix, b: &Matrix) -> Result<Matrix> {
+        let bs = a.rows();
+        if a.is_square() && b.is_square() && a.rows() == b.rows() {
+            self.run_or_fallback("matmul", bs, &[a, b], &[], || NativeBackend.matmul(a, b))
+        } else {
+            self.fallbacks.fetch_add(1, Ordering::Relaxed);
+            NativeBackend.matmul(a, b)
+        }
+    }
+
+    fn matmul_acc(&self, a: &Matrix, b: &Matrix, d: &Matrix) -> Result<Matrix> {
+        let bs = a.rows();
+        self.run_or_fallback("matmul_acc", bs, &[a, b, d], &[], || {
+            NativeBackend.matmul_acc(a, b, d)
+        })
+    }
+
+    fn neg_matmul_sub(&self, a: &Matrix, b: &Matrix, d: &Matrix) -> Result<Matrix> {
+        let bs = a.rows();
+        self.run_or_fallback("neg_matmul_sub", bs, &[a, b, d], &[], || {
+            NativeBackend.neg_matmul_sub(a, b, d)
+        })
+    }
+
+    fn subtract(&self, a: &Matrix, b: &Matrix) -> Result<Matrix> {
+        let bs = a.rows();
+        self.run_or_fallback("subtract", bs, &[a, b], &[], || NativeBackend.subtract(a, b))
+    }
+
+    fn scale(&self, a: &Matrix, s: f64) -> Result<Matrix> {
+        let bs = a.rows();
+        self.run_or_fallback("scale", bs, &[a], &[s], || NativeBackend.scale(a, s))
+    }
+
+    fn leaf_inverse(&self, a: &Matrix, method: LeafMethod) -> Result<Matrix> {
+        // The AOT leaf kernel implements Gauss-Jordan; honor an explicit LU
+        // request via the native path.
+        let bs = a.rows();
+        match method {
+            LeafMethod::GaussJordan => self.run_or_fallback("leaf_inverse", bs, &[a], &[], || {
+                NativeBackend.leaf_inverse(a, method)
+            }),
+            LeafMethod::Lu => {
+                self.fallbacks.fetch_add(1, Ordering::Relaxed);
+                NativeBackend.leaf_inverse(a, method)
+            }
+        }
+    }
+
+    fn lu_factor(&self, a: &Matrix) -> Result<(Matrix, Matrix)> {
+        let bs = a.rows();
+        let supported = self.with_engine(|e| Ok(e.supports("lu_factor", bs)))?;
+        if supported {
+            self.executed.fetch_add(1, Ordering::Relaxed);
+            let mut outs = self.with_engine(|e| e.run("lu_factor", bs, &[a], &[]))?;
+            let u = outs.remove(1);
+            let l = outs.remove(0);
+            Ok((l, u))
+        } else {
+            log::warn!("no artifact for `lu_factor` b={bs}; using native fallback");
+            self.fallbacks.fetch_add(1, Ordering::Relaxed);
+            NativeBackend.lu_factor(a)
+        }
+    }
+
+    fn invert_lower(&self, a: &Matrix) -> Result<Matrix> {
+        let bs = a.rows();
+        self.run_or_fallback("invert_lower", bs, &[a], &[], || {
+            NativeBackend.invert_lower(a)
+        })
+    }
+
+    fn invert_upper(&self, a: &Matrix) -> Result<Matrix> {
+        let bs = a.rows();
+        self.run_or_fallback("invert_upper", bs, &[a], &[], || {
+            NativeBackend.invert_upper(a)
+        })
+    }
+
+    fn strassen_2x2(
+        &self,
+        a11: &Matrix,
+        a12: &Matrix,
+        a21: &Matrix,
+        a22: &Matrix,
+        method: LeafMethod,
+    ) -> Result<(Matrix, Matrix, Matrix, Matrix)> {
+        let bs = a11.rows();
+        let supported = self.with_engine(|e| Ok(e.supports("strassen_2x2", bs)))?;
+        if supported {
+            self.executed.fetch_add(1, Ordering::Relaxed);
+            let mut outs =
+                self.with_engine(|e| e.run("strassen_2x2", bs, &[a11, a12, a21, a22], &[]))?;
+            let c22 = outs.remove(3);
+            let c21 = outs.remove(2);
+            let c12 = outs.remove(1);
+            let c11 = outs.remove(0);
+            Ok((c11, c12, c21, c22))
+        } else {
+            log::warn!("no artifact for `strassen_2x2` b={bs}; composing natively");
+            self.fallbacks.fetch_add(1, Ordering::Relaxed);
+            NativeBackend.strassen_2x2(a11, a12, a21, a22, method)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::{self, diag_dominant, inverse_residual};
+    use crate::util::Rng;
+    use std::path::Path;
+
+    fn backend() -> Option<XlaBackend> {
+        let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        dir.join("manifest.json")
+            .exists()
+            .then(|| XlaBackend::new(dir).unwrap())
+    }
+
+    #[test]
+    fn missing_artifacts_dir_fails_fast() {
+        assert!(XlaBackend::new(PathBuf::from("/no/such/dir")).is_err());
+    }
+
+    #[test]
+    fn xla_matmul_matches_native() {
+        let Some(be) = backend() else { return };
+        let mut rng = Rng::new(1);
+        let a = Matrix::random_uniform(64, 64, -1.0, 1.0, &mut rng);
+        let b = Matrix::random_uniform(64, 64, -1.0, 1.0, &mut rng);
+        let got = be.matmul(&a, &b).unwrap();
+        assert!(got.max_abs_diff(&linalg::matmul(&a, &b)) < 1e-10);
+        assert_eq!(be.executed_count(), 1);
+        assert_eq!(be.fallback_count(), 0);
+    }
+
+    #[test]
+    fn xla_leaf_inverse_gj() {
+        let Some(be) = backend() else { return };
+        let mut rng = Rng::new(2);
+        let a = diag_dominant(128, &mut rng);
+        let inv = be.leaf_inverse(&a, LeafMethod::GaussJordan).unwrap();
+        assert!(inverse_residual(&a, &inv) < 1e-10);
+    }
+
+    #[test]
+    fn unsupported_block_size_falls_back() {
+        let Some(be) = backend() else { return };
+        let mut rng = Rng::new(3);
+        // 8 is not among the default lowered block sizes {16,32,64,128,256}.
+        let a = Matrix::random_uniform(8, 8, -1.0, 1.0, &mut rng);
+        let b = Matrix::random_uniform(8, 8, -1.0, 1.0, &mut rng);
+        let got = be.matmul(&a, &b).unwrap();
+        assert!(got.max_abs_diff(&linalg::matmul(&a, &b)) < 1e-12);
+        assert!(be.fallback_count() > 0);
+    }
+
+    #[test]
+    fn xla_scale_and_subtract() {
+        let Some(be) = backend() else { return };
+        let mut rng = Rng::new(4);
+        let a = Matrix::random_uniform(32, 32, -1.0, 1.0, &mut rng);
+        let b = Matrix::random_uniform(32, 32, -1.0, 1.0, &mut rng);
+        assert!(be.scale(&a, 3.0).unwrap().max_abs_diff(&a.scale(3.0)) < 1e-14);
+        assert!(be
+            .subtract(&a, &b)
+            .unwrap()
+            .max_abs_diff(&a.sub(&b).unwrap())
+            < 1e-14);
+    }
+
+    #[test]
+    fn xla_strassen_2x2_matches_native_composition() {
+        let Some(be) = backend() else { return };
+        let mut rng = Rng::new(5);
+        let n = 32;
+        let full = diag_dominant(2 * n, &mut rng);
+        let a11 = full.submatrix(0, 0, n, n).unwrap();
+        let a12 = full.submatrix(0, n, n, n).unwrap();
+        let a21 = full.submatrix(n, 0, n, n).unwrap();
+        let a22 = full.submatrix(n, n, n, n).unwrap();
+        let (c11, c12, c21, c22) = be
+            .strassen_2x2(&a11, &a12, &a21, &a22, LeafMethod::GaussJordan)
+            .unwrap();
+        let (n11, n12, n21, n22) = NativeBackend
+            .strassen_2x2(&a11, &a12, &a21, &a22, LeafMethod::GaussJordan)
+            .unwrap();
+        assert!(c11.max_abs_diff(&n11) < 1e-8);
+        assert!(c12.max_abs_diff(&n12) < 1e-8);
+        assert!(c21.max_abs_diff(&n21) < 1e-8);
+        assert!(c22.max_abs_diff(&n22) < 1e-8);
+    }
+}

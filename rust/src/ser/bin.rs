@@ -1,0 +1,182 @@
+//! Binary on-disk matrix format — the HDFS stand-in.
+//!
+//! A *dense file* holds one matrix: magic `SPINMAT1`, u64 rows, u64 cols,
+//! then `rows*cols` little-endian f64 in column-major order (the paper's
+//! `BlockMatrix` stores block payloads column-major).
+//!
+//! A *block store* is a directory with `meta.json` (grid shape) and one
+//! dense file per block, `block_<row>_<col>.mat` — the unit of distribution.
+
+use std::fs;
+use std::io::{BufReader, BufWriter, Read, Write};
+use std::path::Path;
+
+use crate::error::{Result, SpinError};
+use crate::linalg::Matrix;
+use crate::ser::json::Json;
+
+const MAGIC: &[u8; 8] = b"SPINMAT1";
+
+/// Write one dense matrix to `path`.
+pub fn write_matrix(path: &Path, m: &Matrix) -> Result<()> {
+    let file = fs::File::create(path)?;
+    let mut w = BufWriter::new(file);
+    w.write_all(MAGIC)?;
+    w.write_all(&(m.rows() as u64).to_le_bytes())?;
+    w.write_all(&(m.cols() as u64).to_le_bytes())?;
+    for &v in m.data() {
+        w.write_all(&v.to_le_bytes())?;
+    }
+    w.flush()?;
+    Ok(())
+}
+
+/// Read one dense matrix from `path`.
+pub fn read_matrix(path: &Path) -> Result<Matrix> {
+    let file = fs::File::open(path)?;
+    let mut r = BufReader::new(file);
+    let mut magic = [0u8; 8];
+    r.read_exact(&mut magic)?;
+    if &magic != MAGIC {
+        return Err(SpinError::artifact(format!(
+            "{}: bad magic (not a SPINMAT1 file)",
+            path.display()
+        )));
+    }
+    let mut u64buf = [0u8; 8];
+    r.read_exact(&mut u64buf)?;
+    let rows = u64::from_le_bytes(u64buf) as usize;
+    r.read_exact(&mut u64buf)?;
+    let cols = u64::from_le_bytes(u64buf) as usize;
+    let count = rows
+        .checked_mul(cols)
+        .ok_or_else(|| SpinError::artifact("matrix dims overflow"))?;
+    let mut bytes = vec![0u8; count * 8];
+    r.read_exact(&mut bytes)?;
+    let data: Vec<f64> = bytes
+        .chunks_exact(8)
+        .map(|c| f64::from_le_bytes(c.try_into().unwrap()))
+        .collect();
+    Matrix::from_vec(rows, cols, data)
+}
+
+/// Write a block grid (row-major iteration of an `nblocks × nblocks` grid of
+/// equally sized square blocks) into a block-store directory.
+pub fn write_block_store(
+    dir: &Path,
+    nblocks: usize,
+    block_size: usize,
+    blocks: impl Iterator<Item = ((usize, usize), Matrix)>,
+) -> Result<()> {
+    fs::create_dir_all(dir)?;
+    let meta = Json::object(vec![
+        ("format", Json::str("spin-block-store-v1")),
+        ("nblocks", Json::num(nblocks as f64)),
+        ("block_size", Json::num(block_size as f64)),
+    ]);
+    meta.to_file(&dir.join("meta.json"))?;
+    for ((bi, bj), m) in blocks {
+        if m.rows() != block_size || m.cols() != block_size {
+            return Err(SpinError::shape(format!(
+                "block ({bi},{bj}) is {}x{}, store expects {block_size}",
+                m.rows(),
+                m.cols()
+            )));
+        }
+        write_matrix(&dir.join(format!("block_{bi}_{bj}.mat")), &m)?;
+    }
+    Ok(())
+}
+
+/// Block-store metadata.
+pub struct BlockStoreMeta {
+    pub nblocks: usize,
+    pub block_size: usize,
+}
+
+/// Read block-store metadata.
+pub fn read_block_store_meta(dir: &Path) -> Result<BlockStoreMeta> {
+    let meta = Json::from_file(&dir.join("meta.json"))?;
+    if meta.req("format")?.as_str() != Some("spin-block-store-v1") {
+        return Err(SpinError::artifact(format!(
+            "{}: not a spin block store",
+            dir.display()
+        )));
+    }
+    Ok(BlockStoreMeta {
+        nblocks: meta
+            .req("nblocks")?
+            .as_usize()
+            .ok_or_else(|| SpinError::artifact("bad nblocks"))?,
+        block_size: meta
+            .req("block_size")?
+            .as_usize()
+            .ok_or_else(|| SpinError::artifact("bad block_size"))?,
+    })
+}
+
+/// Read one block from a block store.
+pub fn read_block(dir: &Path, bi: usize, bj: usize) -> Result<Matrix> {
+    read_matrix(&dir.join(format!("block_{bi}_{bj}.mat")))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn tmpdir(tag: &str) -> std::path::PathBuf {
+        let d = std::env::temp_dir().join(format!("spin_bin_test_{tag}_{}", std::process::id()));
+        let _ = fs::remove_dir_all(&d);
+        fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    #[test]
+    fn matrix_round_trip() {
+        let d = tmpdir("rt");
+        let mut rng = Rng::new(1);
+        let m = Matrix::random_uniform(7, 5, -3.0, 3.0, &mut rng);
+        let path = d.join("m.mat");
+        write_matrix(&path, &m).unwrap();
+        let back = read_matrix(&path).unwrap();
+        assert_eq!(back.rows(), 7);
+        assert_eq!(back.cols(), 5);
+        assert_eq!(back.data(), m.data());
+    }
+
+    #[test]
+    fn rejects_bad_magic() {
+        let d = tmpdir("magic");
+        let path = d.join("bad.mat");
+        fs::write(&path, b"NOTAMATRIX______").unwrap();
+        assert!(read_matrix(&path).is_err());
+    }
+
+    #[test]
+    fn block_store_round_trip() {
+        let d = tmpdir("store");
+        let mut rng = Rng::new(2);
+        let blocks: Vec<((usize, usize), Matrix)> = (0..2)
+            .flat_map(|i| (0..2).map(move |j| (i, j)))
+            .map(|(i, j)| ((i, j), Matrix::random_uniform(4, 4, 0.0, 1.0, &mut rng.fork((i * 2 + j) as u64))))
+            .collect();
+        let expect = blocks.clone();
+        write_block_store(&d.join("s"), 2, 4, blocks.into_iter()).unwrap();
+        let meta = read_block_store_meta(&d.join("s")).unwrap();
+        assert_eq!(meta.nblocks, 2);
+        assert_eq!(meta.block_size, 4);
+        for ((i, j), m) in expect {
+            let back = read_block(&d.join("s"), i, j).unwrap();
+            assert_eq!(back.data(), m.data(), "block {i},{j}");
+        }
+    }
+
+    #[test]
+    fn block_store_rejects_wrong_size() {
+        let d = tmpdir("wrong");
+        let m = Matrix::zeros(3, 3);
+        let r = write_block_store(&d.join("s"), 1, 4, vec![((0usize, 0usize), m)].into_iter());
+        assert!(r.is_err());
+    }
+}

@@ -1,0 +1,8 @@
+//! Serialization substrates: a hand-rolled JSON parser/writer (the offline
+//! vendor set has no `serde`) and the binary on-disk matrix format that
+//! stands in for the paper's HDFS block storage.
+
+pub mod bin;
+pub mod json;
+
+pub use json::Json;

@@ -1,0 +1,102 @@
+//! Mini property-testing harness (`proptest` is not in the offline vendor
+//! set).  Runs a property over N randomly generated cases from an explicit
+//! base seed; on failure, reports the exact per-case seed so the
+//! counterexample is one `case_seed` away from reproduction.
+
+use crate::util::rng::Rng;
+
+/// Number of cases for a default property run.
+pub const DEFAULT_CASES: usize = 32;
+
+/// Run `prop` over `cases` inputs drawn by `gen` from a seeded RNG.
+///
+/// `gen` receives a fresh, deterministic RNG per case. `prop` returns
+/// `Err(description)` to fail. Panics with the case index, seed and
+/// description on the first failure.
+pub fn forall<T: std::fmt::Debug>(
+    name: &str,
+    base_seed: u64,
+    cases: usize,
+    mut gen: impl FnMut(&mut Rng) -> T,
+    mut prop: impl FnMut(&T) -> std::result::Result<(), String>,
+) {
+    for case in 0..cases {
+        let case_seed = base_seed
+            .wrapping_mul(0x9E37_79B9_7F4A_7C15)
+            .wrapping_add(case as u64);
+        let mut rng = Rng::new(case_seed);
+        let input = gen(&mut rng);
+        if let Err(msg) = prop(&input) {
+            panic!(
+                "property `{name}` failed at case {case}/{cases} \
+                 (case_seed={case_seed:#x}): {msg}\ninput: {input:?}"
+            );
+        }
+    }
+}
+
+/// Assert two f64s agree to a relative-or-absolute tolerance.
+pub fn close(a: f64, b: f64, rtol: f64, atol: f64) -> std::result::Result<(), String> {
+    let diff = (a - b).abs();
+    let bound = atol + rtol * b.abs().max(a.abs());
+    if diff <= bound || (a.is_nan() && b.is_nan()) {
+        Ok(())
+    } else {
+        Err(format!("{a} vs {b} differ by {diff} > {bound}"))
+    }
+}
+
+/// Max elementwise |a-b| over two slices (∞-norm distance).
+pub fn max_abs_diff(a: &[f64], b: &[f64]) -> f64 {
+    assert_eq!(a.len(), b.len());
+    a.iter()
+        .zip(b)
+        .map(|(x, y)| (x - y).abs())
+        .fold(0.0, f64::max)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn forall_passes_trivially() {
+        forall(
+            "square non-negative",
+            1,
+            DEFAULT_CASES,
+            |r| r.uniform(-10.0, 10.0),
+            |x| {
+                if x * x >= 0.0 {
+                    Ok(())
+                } else {
+                    Err("negative square".into())
+                }
+            },
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "property `always-fails`")]
+    fn forall_reports_failure_with_seed() {
+        forall(
+            "always-fails",
+            2,
+            4,
+            |r| r.next_u64(),
+            |_| Err("nope".into()),
+        );
+    }
+
+    #[test]
+    fn close_tolerances() {
+        assert!(close(1.0, 1.0 + 1e-12, 1e-9, 0.0).is_ok());
+        assert!(close(1.0, 1.1, 1e-9, 0.0).is_err());
+        assert!(close(0.0, 1e-12, 0.0, 1e-9).is_ok());
+    }
+
+    #[test]
+    fn max_abs_diff_works() {
+        assert_eq!(max_abs_diff(&[1.0, 2.0], &[1.0, 4.5]), 2.5);
+    }
+}

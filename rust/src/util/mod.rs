@@ -1,0 +1,15 @@
+//! Small shared utilities: deterministic RNG, timing, logging, a
+//! mini property-testing harness, and human-readable formatting.
+//!
+//! These exist because the offline vendor set has no `rand`, `env_logger`,
+//! `criterion` or `proptest`; each module is a purpose-built replacement
+//! scoped to what this crate needs.
+
+pub mod check;
+pub mod fmt;
+pub mod logger;
+pub mod rng;
+pub mod timer;
+
+pub use rng::Rng;
+pub use timer::Stopwatch;
