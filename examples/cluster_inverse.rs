@@ -5,71 +5,64 @@
 //! * **XLA backend**: every block kernel is an AOT-lowered JAX/Pallas
 //!   program executed through the PJRT CPU client (falls back to native
 //!   kernels with a notice if `make artifacts` hasn't been run),
-//! * SPIN vs the LU baseline, per-method breakdown, residual check.
+//! * SPIN vs the LU baseline through the algorithm registry, per-method
+//!   breakdown, residual check.
 //!
 //! Run: `make artifacts && cargo run --release --example cluster_inverse`
 //! Recorded in EXPERIMENTS.md §End-to-end.
 
-use spin::algos::Algorithm;
-use spin::blockmatrix::BlockMatrix;
-use spin::cluster::Cluster;
-use spin::config::{BackendKind, ClusterConfig, JobConfig, LeafMethod};
-use spin::linalg::inverse_residual;
-use spin::runtime::{make_backend, XlaBackend};
+use spin::config::{BackendKind, LeafMethod};
+use spin::session::{SessionBuilder, SpinSession};
 use spin::util::fmt;
+
+fn builder() -> SessionBuilder {
+    SpinSession::builder()
+        .paper_cluster()
+        .leaf(LeafMethod::GaussJordan) // matches the Pallas leaf kernel
+        .seed(2018)
+}
 
 fn main() -> spin::Result<()> {
     spin::util::logger::init();
 
-    let mut cfg = ClusterConfig::paper();
-    cfg.backend = BackendKind::Xla;
-    let kernels = match make_backend(&cfg) {
-        Ok(k) => k,
+    // Prefer the XLA backend; fall back to native with a notice. The
+    // builder instantiates the backend, so a missing `make artifacts`
+    // fails here — not mid-job.
+    let session = match builder().backend(BackendKind::Xla).build() {
+        Ok(s) => s,
         Err(e) => {
             eprintln!("XLA backend unavailable ({e}); falling back to native kernels");
-            cfg.backend = BackendKind::Native;
-            make_backend(&cfg)?
+            builder().backend(BackendKind::Native).build()?
         }
     };
 
-    let mut job = JobConfig::new(1024, 128); // b = 8
-    job.leaf = LeafMethod::GaussJordan; // matches the Pallas leaf kernel
-    job.seed = 2018;
-
+    let (n, block) = (1024usize, 128usize); // b = 8
     println!(
         "cluster: {} nodes × {} executors × {} cores — backend {}",
-        cfg.nodes,
-        cfg.executors_per_node,
-        cfg.cores_per_executor,
-        kernels.name()
+        session.config().nodes,
+        session.config().executors_per_node,
+        session.config().cores_per_executor,
+        session.backend_name()
     );
-    println!(
-        "job: n = {}, block {}×{}, b = {}\n",
-        job.n,
-        job.block_size,
-        job.block_size,
-        job.num_splits()
-    );
+    println!("job: n = {n}, block {block}×{block}, b = {}\n", n / block);
 
-    let a = BlockMatrix::random(&job)?;
-    let a_dense = a.to_dense()?;
+    let a = session.random(n, block)?;
 
     let mut summary: Vec<(String, f64, f64)> = Vec::new();
-    for algo in [Algorithm::Spin, Algorithm::Lu] {
-        let cluster = Cluster::new(cfg.clone());
+    for algo in ["spin", "lu"] {
+        session.reset_clock(); // fresh measurement window per algorithm
         let t0 = std::time::Instant::now();
-        let inv = algo.invert(&cluster, kernels.as_ref(), &a, &job)?;
+        let inv = a.inverse_with(algo)?;
         let real = t0.elapsed().as_secs_f64();
-        let resid = inverse_residual(&a_dense, &inv.to_dense()?);
+        let resid = a.inverse_residual(&inv)?;
         println!(
-            "== {} ==\nvirtual wall clock: {}   host compute: {}   residual {resid:.3e}",
-            algo.name(),
-            fmt::secs(cluster.virtual_secs()),
+            "== {algo} ==\nvirtual wall clock: {}   host compute: {}   residual {resid:.3e}",
+            fmt::secs(session.virtual_secs()),
             fmt::secs(real),
         );
-        println!("{}", cluster.metrics().render_table());
-        assert!(resid < 1e-8, "{} residual too large: {resid}", algo.name());
-        summary.push((algo.name().to_string(), cluster.virtual_secs(), real));
+        println!("{}", session.metrics().render_table());
+        assert!(resid < 1e-8, "{algo} residual too large: {resid}");
+        summary.push((algo.to_string(), session.virtual_secs(), real));
     }
 
     let (spin_v, lu_v) = (summary[0].1, summary[1].1);
@@ -81,11 +74,7 @@ fn main() -> spin::Result<()> {
     );
     assert!(spin_v < lu_v, "paper headline violated: SPIN not faster");
 
-    // Report PJRT execution purity when running the XLA backend.
-    if cfg.backend == BackendKind::Xla {
-        if let Ok(x) = XlaBackend::new(cfg.artifacts_dir.clone()) {
-            drop(x); // counts live on the backend actually used above
-        }
+    if session.backend_name() == "xla" {
         println!("(block kernels executed via PJRT CPU client from AOT JAX/Pallas HLO)");
     }
     println!("cluster_inverse OK");

@@ -2,19 +2,16 @@
 //! scoring over a feature covariance.
 //!
 //! Draw samples from a correlated Gaussian-ish model, estimate the feature
-//! covariance Σ, invert it **distributedly with SPIN** to get the precision
-//! matrix P = Σ⁻¹, then use P for Mahalanobis distances — inliers drawn
-//! from the model must score lower than planted outliers, and the
-//! P-whitened covariance must be ≈ identity (`Σ·P ≈ I` checked too).
+//! covariance Σ, invert it **distributedly with SPIN** through the session
+//! API to get the precision matrix P = Σ⁻¹, then use P for Mahalanobis
+//! distances — inliers drawn from the model must score lower than planted
+//! outliers, and the P-whitened covariance must be ≈ identity
+//! (`Σ·P ≈ I` checked too).
 //!
 //! Run: `cargo run --release --example covariance_whitening`
 
-use spin::algos::spin_inverse;
-use spin::blockmatrix::BlockMatrix;
-use spin::cluster::Cluster;
-use spin::config::{ClusterConfig, JobConfig};
-use spin::linalg::{inverse_residual, matmul, Matrix};
-use spin::runtime::NativeBackend;
+use spin::linalg::{matmul, Matrix};
+use spin::session::SpinSession;
 use spin::util::Rng;
 
 fn mahalanobis2(p: &Matrix, x: &[f64], mu: &[f64]) -> f64 {
@@ -76,17 +73,16 @@ fn main() -> spin::Result<()> {
         sigma.add_assign_at(i, i, 1e-3);
     }
 
-    // --- distributed inversion: P = Σ⁻¹ via SPIN.
-    let cluster = Cluster::new(ClusterConfig::paper());
-    let job = JobConfig::new(dim, block);
-    let sigma_b = BlockMatrix::from_dense(&sigma, block)?;
-    let p_b = spin_inverse(&cluster, &NativeBackend, &sigma_b, &job)?;
+    // --- distributed inversion: P = Σ⁻¹ via the session (SPIN default).
+    let session = SpinSession::builder().paper_cluster().build()?;
+    let sigma_b = session.from_dense(&sigma, block)?;
+    let p_b = sigma_b.inverse()?;
     let p = p_b.to_dense()?;
-    let resid = inverse_residual(&sigma, &p);
+    let resid = sigma_b.inverse_residual(&p_b)?;
     println!(
         "Σ ({dim}x{dim}, b = {}) inverted with SPIN: residual {resid:.3e}, virtual {:.1} ms",
-        job.num_splits(),
-        cluster.virtual_secs() * 1e3
+        sigma_b.nblocks(),
+        session.virtual_secs() * 1e3
     );
     assert!(resid < 1e-8);
 

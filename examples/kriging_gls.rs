@@ -2,19 +2,18 @@
 //! least squares over a spatial covariance.
 //!
 //! We sample station locations on a unit square, build an exponential
-//! covariance matrix `K[i][j] = σ²·exp(−‖xᵢ−xⱼ‖/ℓ) + τ²·δᵢⱼ` (SPD), invert
-//! it **distributedly with SPIN**, and solve the GLS problem
-//! `β̂ = (Xᵀ K⁻¹ X)⁻¹ Xᵀ K⁻¹ y` for a linear spatial trend — recovering the
-//! known coefficients from noisy observations.
+//! covariance matrix `K[i][j] = σ²·exp(−‖xᵢ−xⱼ‖/ℓ) + τ²·δᵢⱼ` (SPD), and
+//! solve the GLS problem `β̂ = (Xᵀ K⁻¹ X)⁻¹ Xᵀ K⁻¹ y` for a linear spatial
+//! trend — recovering the known coefficients from noisy observations.
+//!
+//! The heavy step — K⁻¹ applied to the design matrix — is one call:
+//! `k.solve_dense(&x)` runs the SPIN inversion distributedly on the
+//! session's cluster and finishes with a thin driver-side product.
 //!
 //! Run: `cargo run --release --example kriging_gls`
 
-use spin::algos::spin_inverse;
-use spin::blockmatrix::BlockMatrix;
-use spin::cluster::Cluster;
-use spin::config::{ClusterConfig, JobConfig};
-use spin::linalg::{inverse_residual, lu_inverse, matmul, Matrix};
-use spin::runtime::NativeBackend;
+use spin::linalg::{lu_inverse, matmul, Matrix};
+use spin::session::SpinSession;
 use spin::util::Rng;
 
 fn main() -> spin::Result<()> {
@@ -49,24 +48,25 @@ fn main() -> spin::Result<()> {
             + 0.01 * (k.get(i, (i + 1) % n) - k.get(i, (i + 7) % n))
     });
 
-    // --- distributed inversion of K with SPIN.
-    let cluster = Cluster::new(ClusterConfig::paper());
-    let job = JobConfig::new(n, block);
-    let kb = BlockMatrix::from_dense(&k, block)?;
-    let kinv_b = spin_inverse(&cluster, &NativeBackend, &kb, &job)?;
-    let kinv = kinv_b.to_dense()?;
-    let resid = inverse_residual(&k, &kinv);
+    // --- session on the paper's cluster topology; K lives distributed.
+    let session = SpinSession::builder().paper_cluster().build()?;
+    let kb = session.from_dense(&k, block)?;
+
+    // K⁻¹·[X | y] in one shot via the session solver (one distributed SPIN
+    // inversion, thin driver-side product).
+    let xy = Matrix::from_fn(n, 4, |i, j| if j < 3 { x.get(i, j) } else { y.get(i, 0) });
+    let kinv_xy = kb.solve_dense(&xy)?; // n×4
+    let kinv_x = Matrix::from_fn(n, 3, |i, j| kinv_xy.get(i, j));
+    let kinv_y = Matrix::from_fn(n, 1, |i, _| kinv_xy.get(i, 3));
     println!(
-        "K ({n}x{n}, b = {}) inverted with SPIN: residual {resid:.3e}, virtual {:.1} ms",
-        job.num_splits(),
-        cluster.virtual_secs() * 1e3
+        "K ({n}x{n}, b = {}) solved with SPIN: virtual {:.1} ms",
+        kb.nblocks(),
+        session.virtual_secs() * 1e3
     );
-    assert!(resid < 1e-8);
 
     // --- GLS solve (driver-side small algebra).
-    let xt_kinv = matmul(&x.transpose(), &kinv); // 3×n
-    let normal = matmul(&xt_kinv, &x); // 3×3
-    let rhs = matmul(&xt_kinv, &y); // 3×1
+    let normal = matmul(&x.transpose(), &kinv_x); // 3×3
+    let rhs = matmul(&x.transpose(), &kinv_y); // 3×1
     let beta_hat = matmul(&lu_inverse(&normal)?, &rhs);
 
     println!("\nGLS estimates (true → estimated):");

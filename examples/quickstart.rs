@@ -1,41 +1,39 @@
 //! Quickstart: the smallest end-to-end path through the public API —
-//! build a cluster, generate a distributed SPD matrix, invert it with
-//! SPIN, verify the residual.
+//! build a session, generate a distributed SPD matrix, invert it with
+//! SPIN, verify the residual. No `Cluster` / `BlockKernels` plumbing:
+//! the session owns all of it.
 //!
 //! Run: `cargo run --release --example quickstart`
 
-use spin::algos::spin_inverse;
-use spin::blockmatrix::BlockMatrix;
-use spin::cluster::Cluster;
-use spin::config::{ClusterConfig, GeneratorKind, JobConfig};
-use spin::linalg::inverse_residual;
-use spin::runtime::NativeBackend;
+use spin::session::SpinSession;
 
 fn main() -> spin::Result<()> {
     spin::util::logger::init();
 
     // A local 4-slot "cluster" with the native (pure-Rust) block kernels.
-    let cluster = Cluster::new(ClusterConfig::local(4));
+    let session = SpinSession::builder().cores(4).seed(7).build()?;
 
     // 256x256 SPD matrix split into a 4x4 grid of 64x64 blocks.
-    let mut job = JobConfig::new(256, 64);
-    job.generator = GeneratorKind::Spd;
-    job.seed = 7;
-    let a = BlockMatrix::random(&job)?;
+    let a = session.random_spd(256, 64)?;
 
-    // Invert with the SPIN recursion (Algorithm 2).
-    let inv = spin_inverse(&cluster, &NativeBackend, &a, &job)?;
+    // Invert with the SPIN recursion (Algorithm 2) — the session default.
+    let inv = a.inverse()?;
 
     // Check ‖A·A⁻¹ − I‖.
-    let resid = inverse_residual(&a.to_dense()?, &inv.to_dense()?);
+    let resid = a.inverse_residual(&inv)?;
     println!(
         "inverted {0}x{0} (b = {1}): residual = {resid:.3e}, virtual wall clock = {2:.1} ms",
-        job.n,
-        job.num_splits(),
-        cluster.virtual_secs() * 1e3,
+        a.n(),
+        a.nblocks(),
+        session.virtual_secs() * 1e3,
     );
-    println!("\nper-method breakdown:\n{}", cluster.metrics().render_table());
+    println!("\nper-method breakdown:\n{}", session.metrics().render_table());
     assert!(resid < 1e-10);
+
+    // Any registered algorithm resolves by name — here the LU baseline.
+    let lu = session.invert_with("lu", &a)?;
+    assert!(a.inverse_residual(&lu)? < 1e-10);
+    println!("registered algorithms: {}", session.algorithms().join(", "));
     println!("quickstart OK");
     Ok(())
 }

@@ -5,35 +5,31 @@
 
 mod common;
 
-use spin::algos::spin_inverse;
-use spin::blockmatrix::BlockMatrix;
-use spin::cluster::Cluster;
-use spin::config::{JobConfig, LeafMethod};
+use spin::config::LeafMethod;
 use spin::experiments::report;
-use spin::runtime::make_backend;
 use spin::util::fmt::{self, Table};
 
 fn main() {
     spin::util::logger::init();
     common::banner("ablation_fusion", "fused strassen_2x2 base vs plain recursion");
-    let cfg = common::cluster_from_env();
-    let kernels = make_backend(&cfg).expect("backend");
 
     let mut csv = Table::new(vec!["n", "block", "fused", "virtual_secs", "stages"]);
     let mut t = Table::new(vec!["n", "block", "plain", "fused", "delta", "stages plain→fused"]);
     for (n, bs) in [(256usize, 128usize), (512, 256), (1024, 128), (1024, 64)] {
-        let mut job = JobConfig::new(n, bs);
-        job.leaf = LeafMethod::GaussJordan;
-        job.seed = 0xF05E ^ n as u64;
-        let a = BlockMatrix::random(&job).expect("gen");
-
-        let mut arm = |fuse: bool| {
-            let cluster = Cluster::new(cfg.clone());
-            job.fuse_leaf_2x2 = fuse;
-            let inv = spin_inverse(&cluster, kernels.as_ref(), &a, &job).expect("invert");
-            std::hint::black_box(&inv);
-            let stages = cluster.metrics().stages().len();
-            (cluster.virtual_secs(), stages)
+        let arm = |fuse: bool| {
+            // One session per arm: each owns a fresh cluster (clean clock +
+            // stage counts) and carries the fusion toggle as a job default.
+            let session = common::session_from_env()
+                .leaf(LeafMethod::GaussJordan)
+                .seed(0xF05E ^ n as u64)
+                .fuse_leaf_2x2(fuse)
+                .build()
+                .expect("session");
+            let a = session.random(n, bs).expect("gen");
+            let inv = a.inverse().expect("invert");
+            std::hint::black_box(inv.block_matrix());
+            let stages = session.metrics().stages().len();
+            (session.virtual_secs(), stages)
         };
         let (plain_s, plain_stages) = arm(false);
         let (fused_s, fused_stages) = arm(true);

@@ -4,8 +4,10 @@
 
 use spin::config::ClusterConfig;
 use spin::experiments::Scale;
+use spin::session::{SessionBuilder, SpinSession};
 
 /// Scale from `SPIN_BENCH_SCALE` (smoke|default|full), default `default`.
+#[allow(dead_code)] // not every bench binary links every helper
 pub fn scale_from_env() -> Scale {
     match std::env::var("SPIN_BENCH_SCALE").as_deref() {
         Ok("smoke") => Scale::smoke(),
@@ -16,12 +18,20 @@ pub fn scale_from_env() -> Scale {
 
 /// The paper's cluster topology, with backend/threads overridable via
 /// `SPIN_BENCH_BACKEND` (native|xla).
+#[allow(dead_code)] // not every bench binary links every helper
 pub fn cluster_from_env() -> ClusterConfig {
     let mut cfg = ClusterConfig::paper();
     if let Ok(be) = std::env::var("SPIN_BENCH_BACKEND") {
         let _ = cfg.apply_override(&format!("backend={be}"));
     }
     cfg
+}
+
+/// A session builder over [`cluster_from_env`] — benches layer their own
+/// seeds/leaf/fusion defaults on top and call `.build()`.
+#[allow(dead_code)] // not every bench binary links every helper
+pub fn session_from_env() -> SessionBuilder {
+    SpinSession::builder().cluster_config(cluster_from_env())
 }
 
 pub fn banner(name: &str, what: &str) {

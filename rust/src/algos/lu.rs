@@ -28,7 +28,26 @@ use crate::error::{Result, SpinError};
 use crate::runtime::BlockKernels;
 
 /// Invert a distributed matrix via block-recursive LU (the baseline).
+///
+/// Deprecated shim over the algorithm registry entry: build a
+/// [`crate::session::SpinSession`] and call
+/// `session.invert_with("lu", &m)` instead.
+#[deprecated(
+    since = "0.2.0",
+    note = "use SpinSession::invert_with(\"lu\", …) or register algos::LuAlgorithm in an AlgorithmRegistry"
+)]
 pub fn lu_inverse_distributed(
+    cluster: &Cluster,
+    kernels: &dyn BlockKernels,
+    a: &BlockMatrix,
+    job: &JobConfig,
+) -> Result<BlockMatrix> {
+    lu_inverse_distributed_impl(cluster, kernels, a, job)
+}
+
+/// Block-recursive LU inversion implementation entry — reached through
+/// [`crate::algos::LuAlgorithm`] in the registry.
+pub(crate) fn lu_inverse_distributed_impl(
     cluster: &Cluster,
     kernels: &dyn BlockKernels,
     a: &BlockMatrix,
@@ -159,7 +178,7 @@ mod tests {
         let mut job = JobConfig::new(n, bs);
         job.generator = gen;
         let a = BlockMatrix::random(&job).unwrap();
-        let inv = lu_inverse_distributed(&c, &NativeBackend, &a, &job).unwrap();
+        let inv = lu_inverse_distributed_impl(&c, &NativeBackend, &a, &job).unwrap();
         let resid = inverse_residual(&a.to_dense().unwrap(), &inv.to_dense().unwrap());
         assert!(resid < 1e-9, "n={n} bs={bs}: residual {resid:.3e}");
     }
@@ -215,8 +234,8 @@ mod tests {
         let c2 = cluster();
         let job = JobConfig::new(32, 8);
         let a = BlockMatrix::random(&job).unwrap();
-        let lu = lu_inverse_distributed(&c1, &NativeBackend, &a, &job).unwrap();
-        let spin = crate::algos::spin_inverse(&c2, &NativeBackend, &a, &job).unwrap();
+        let lu = lu_inverse_distributed_impl(&c1, &NativeBackend, &a, &job).unwrap();
+        let spin = crate::algos::spin::spin_inverse_impl(&c2, &NativeBackend, &a, &job).unwrap();
         let diff = lu.to_dense().unwrap().max_abs_diff(&spin.to_dense().unwrap());
         assert!(diff < 1e-8, "LU vs SPIN diff {diff}");
     }
@@ -229,8 +248,8 @@ mod tests {
         let c2 = cluster();
         let job = JobConfig::new(16, 4);
         let a = BlockMatrix::random(&job).unwrap();
-        let _ = lu_inverse_distributed(&c1, &NativeBackend, &a, &job).unwrap();
-        let _ = crate::algos::spin_inverse(&c2, &NativeBackend, &a, &job).unwrap();
+        let _ = lu_inverse_distributed_impl(&c1, &NativeBackend, &a, &job).unwrap();
+        let _ = crate::algos::spin::spin_inverse_impl(&c2, &NativeBackend, &a, &job).unwrap();
         let lu_leaf = c1.metrics().method("leafNode").unwrap().calls;
         let spin_leaf = c2.metrics().method("leafNode").unwrap().calls;
         assert!(

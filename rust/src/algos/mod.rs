@@ -1,14 +1,25 @@
 //! The inversion algorithms: SPIN (the paper's contribution), the
 //! LU-decomposition baseline it is evaluated against (Liu et al. 2016),
-//! and single-node serial references used by tests.
+//! single-node serial references used by tests — and the open
+//! [`InversionAlgorithm`] registry new schemes plug into.
+//!
+//! Dispatch goes through a name-keyed [`AlgorithmRegistry`] (default
+//! entries: `spin`, `lu`); the old closed [`Algorithm`] enum and the free
+//! functions remain as `#[deprecated]` shims.
 
 mod lu;
+mod registry;
 mod serial;
 mod spin;
 
+#[allow(deprecated)]
 pub use lu::lu_inverse_distributed;
+use lu::lu_inverse_distributed_impl;
+pub use registry::{AlgorithmRegistry, InversionAlgorithm, LuAlgorithm, SpinAlgorithm};
 pub use serial::{lu_inverse_serial, strassen_inverse_serial};
+#[allow(deprecated)]
 pub use spin::spin_inverse;
+use spin::spin_inverse_impl;
 
 use crate::blockmatrix::BlockMatrix;
 use crate::cluster::Cluster;
@@ -17,6 +28,14 @@ use crate::error::Result;
 use crate::runtime::BlockKernels;
 
 /// Which distributed inversion algorithm to run.
+///
+/// Deprecated shim: the closed enum cannot express externally registered
+/// schemes. Use [`AlgorithmRegistry`] / [`crate::session::SpinSession`]
+/// instead; `--algo` on the CLI already resolves through the registry.
+#[deprecated(
+    since = "0.2.0",
+    note = "use AlgorithmRegistry (algos::registry) or SpinSession::invert_with; the enum cannot name externally registered algorithms"
+)]
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Algorithm {
     /// Strassen-scheme recursion (the paper's SPIN, Algorithm 2).
@@ -25,6 +44,7 @@ pub enum Algorithm {
     Lu,
 }
 
+#[allow(deprecated)]
 impl Algorithm {
     pub fn parse(s: &str) -> Result<Self> {
         match s {
@@ -52,8 +72,8 @@ impl Algorithm {
         job: &JobConfig,
     ) -> Result<BlockMatrix> {
         match self {
-            Algorithm::Spin => spin_inverse(cluster, kernels, a, job),
-            Algorithm::Lu => lu_inverse_distributed(cluster, kernels, a, job),
+            Algorithm::Spin => spin_inverse_impl(cluster, kernels, a, job),
+            Algorithm::Lu => lu_inverse_distributed_impl(cluster, kernels, a, job),
         }
     }
 }

@@ -1,0 +1,243 @@
+//! Open algorithm dispatch: the [`InversionAlgorithm`] trait and a
+//! name-keyed [`AlgorithmRegistry`].
+//!
+//! This replaces the old closed two-variant `Algorithm` enum: new inversion
+//! schemes (e.g. iterative inverse approximations, Newton–Schulz, straggler-
+//! robust coded variants) plug in by implementing the trait and registering
+//! under a unique name — no dispatch site needs to change. The CLI's
+//! `--algo` flag, [`crate::session::SpinSession::invert_with`], and the
+//! experiment harness all resolve through a registry.
+
+use std::collections::BTreeMap;
+use std::sync::Arc;
+
+use crate::blockmatrix::BlockMatrix;
+use crate::cluster::Cluster;
+use crate::config::JobConfig;
+use crate::error::{Result, SpinError};
+use crate::runtime::BlockKernels;
+
+/// One distributed inversion scheme.
+///
+/// Implementations must be stateless w.r.t. a single call (they may cache
+/// internally behind synchronization): the same object is shared across
+/// sessions via `Arc` and may be invoked from several jobs.
+pub trait InversionAlgorithm: Send + Sync {
+    /// Registry key (`"spin"`, `"lu"`, …). Lower-case, no whitespace.
+    fn name(&self) -> &str;
+
+    /// Short human description for `spin info` and docs.
+    fn description(&self) -> &str {
+        ""
+    }
+
+    /// Invert `a` on `cluster` using `kernels` for block compute.
+    fn invert(
+        &self,
+        cluster: &Cluster,
+        kernels: &dyn BlockKernels,
+        a: &BlockMatrix,
+        job: &JobConfig,
+    ) -> Result<BlockMatrix>;
+}
+
+/// The paper's SPIN recursion (Algorithm 2).
+pub struct SpinAlgorithm;
+
+impl InversionAlgorithm for SpinAlgorithm {
+    fn name(&self) -> &str {
+        "spin"
+    }
+
+    fn description(&self) -> &str {
+        "Strassen-scheme recursion (the paper's SPIN, Algorithm 2)"
+    }
+
+    fn invert(
+        &self,
+        cluster: &Cluster,
+        kernels: &dyn BlockKernels,
+        a: &BlockMatrix,
+        job: &JobConfig,
+    ) -> Result<BlockMatrix> {
+        super::spin::spin_inverse_impl(cluster, kernels, a, job)
+    }
+}
+
+/// The block-recursive LU baseline (Liu et al. 2016).
+pub struct LuAlgorithm;
+
+impl InversionAlgorithm for LuAlgorithm {
+    fn name(&self) -> &str {
+        "lu"
+    }
+
+    fn description(&self) -> &str {
+        "block-recursive LU baseline (Liu et al. 2016)"
+    }
+
+    fn invert(
+        &self,
+        cluster: &Cluster,
+        kernels: &dyn BlockKernels,
+        a: &BlockMatrix,
+        job: &JobConfig,
+    ) -> Result<BlockMatrix> {
+        super::lu::lu_inverse_distributed_impl(cluster, kernels, a, job)
+    }
+}
+
+/// Name-keyed set of inversion algorithms.
+///
+/// `BTreeMap` keeps `names()` sorted, so error messages and `spin info`
+/// output are deterministic.
+#[derive(Clone, Default)]
+pub struct AlgorithmRegistry {
+    algos: BTreeMap<String, Arc<dyn InversionAlgorithm>>,
+}
+
+impl AlgorithmRegistry {
+    /// Empty registry (no algorithms).
+    pub fn new() -> Self {
+        AlgorithmRegistry::default()
+    }
+
+    /// Registry pre-loaded with the built-in schemes: `spin` and `lu`.
+    pub fn with_defaults() -> Self {
+        let mut r = AlgorithmRegistry::new();
+        r.register(Arc::new(SpinAlgorithm))
+            .expect("empty registry accepts spin");
+        r.register(Arc::new(LuAlgorithm))
+            .expect("fresh registry accepts lu");
+        r
+    }
+
+    /// Register a scheme under its `name()`. Rejects duplicates — shadowing
+    /// a built-in silently would make `--algo` results ambiguous.
+    pub fn register(&mut self, algo: Arc<dyn InversionAlgorithm>) -> Result<()> {
+        let name = algo.name().to_string();
+        if name.is_empty() || name.contains(char::is_whitespace) {
+            return Err(SpinError::config(format!(
+                "invalid algorithm name `{name}` (must be non-empty, no whitespace)"
+            )));
+        }
+        if self.algos.contains_key(&name) {
+            return Err(SpinError::config(format!(
+                "algorithm `{name}` is already registered"
+            )));
+        }
+        self.algos.insert(name, algo);
+        Ok(())
+    }
+
+    /// Look up by name; the error lists what is available.
+    pub fn get(&self, name: &str) -> Result<Arc<dyn InversionAlgorithm>> {
+        self.algos.get(name).cloned().ok_or_else(|| {
+            SpinError::config(format!(
+                "unknown algorithm `{name}` (registered: {})",
+                self.names().join("|")
+            ))
+        })
+    }
+
+    pub fn contains(&self, name: &str) -> bool {
+        self.algos.contains_key(name)
+    }
+
+    /// Sorted registered names.
+    pub fn names(&self) -> Vec<String> {
+        self.algos.keys().cloned().collect()
+    }
+
+    pub fn len(&self) -> usize {
+        self.algos.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.algos.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ClusterConfig;
+    use crate::linalg::inverse_residual;
+    use crate::runtime::NativeBackend;
+
+    #[test]
+    fn defaults_contain_spin_and_lu() {
+        let r = AlgorithmRegistry::with_defaults();
+        assert_eq!(r.names(), vec!["lu".to_string(), "spin".to_string()]);
+        assert!(r.contains("spin"));
+        assert!(!r.contains("newton"));
+    }
+
+    #[test]
+    fn duplicate_registration_rejected() {
+        let mut r = AlgorithmRegistry::with_defaults();
+        let err = r.register(Arc::new(SpinAlgorithm)).unwrap_err();
+        assert!(err.to_string().contains("already registered"), "{err}");
+    }
+
+    #[test]
+    fn unknown_name_lists_available() {
+        let r = AlgorithmRegistry::with_defaults();
+        let err = r.get("cholesky").unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains("cholesky") && msg.contains("lu|spin"), "{msg}");
+    }
+
+    #[test]
+    fn invalid_names_rejected() {
+        struct Bad;
+        impl InversionAlgorithm for Bad {
+            fn name(&self) -> &str {
+                "has space"
+            }
+            fn invert(
+                &self,
+                _cluster: &Cluster,
+                _kernels: &dyn BlockKernels,
+                _a: &BlockMatrix,
+                _job: &JobConfig,
+            ) -> Result<BlockMatrix> {
+                unreachable!()
+            }
+        }
+        let mut r = AlgorithmRegistry::new();
+        assert!(r.register(Arc::new(Bad)).is_err());
+    }
+
+    #[test]
+    fn custom_algorithm_plugs_in() {
+        /// Toy scheme: delegate to SPIN (stands in for e.g. Newton–Schulz).
+        struct Delegating;
+        impl InversionAlgorithm for Delegating {
+            fn name(&self) -> &str {
+                "delegating"
+            }
+            fn invert(
+                &self,
+                cluster: &Cluster,
+                kernels: &dyn BlockKernels,
+                a: &BlockMatrix,
+                job: &JobConfig,
+            ) -> Result<BlockMatrix> {
+                SpinAlgorithm.invert(cluster, kernels, a, job)
+            }
+        }
+        let mut r = AlgorithmRegistry::with_defaults();
+        r.register(Arc::new(Delegating)).unwrap();
+        let cluster = Cluster::new(ClusterConfig::local(2));
+        let job = JobConfig::new(16, 4);
+        let a = BlockMatrix::random(&job).unwrap();
+        let inv = r
+            .get("delegating")
+            .unwrap()
+            .invert(&cluster, &NativeBackend, &a, &job)
+            .unwrap();
+        let resid = inverse_residual(&a.to_dense().unwrap(), &inv.to_dense().unwrap());
+        assert!(resid < 1e-10, "residual {resid:.3e}");
+    }
+}

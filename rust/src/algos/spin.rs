@@ -21,10 +21,29 @@ use crate::runtime::BlockKernels;
 
 /// Invert a distributed matrix with the SPIN recursion.
 ///
+/// Deprecated shim over the algorithm registry entry: build a
+/// [`crate::session::SpinSession`] and call `matrix.inverse()` /
+/// `session.invert_with("spin", &m)` instead.
+#[deprecated(
+    since = "0.2.0",
+    note = "use SpinSession::invert_with(\"spin\", …) or register algos::SpinAlgorithm in an AlgorithmRegistry"
+)]
+pub fn spin_inverse(
+    cluster: &Cluster,
+    kernels: &dyn BlockKernels,
+    a: &BlockMatrix,
+    job: &JobConfig,
+) -> Result<BlockMatrix> {
+    spin_inverse_impl(cluster, kernels, a, job)
+}
+
+/// SPIN (Algorithm 2) implementation entry — reached through
+/// [`crate::algos::SpinAlgorithm`] in the registry.
+///
 /// `a` must be a power-of-two grid of square blocks; the input must be
 /// invertible with invertible leading principal quadrants (guaranteed for
 /// the diagonally-dominant / SPD generator families).
-pub fn spin_inverse(
+pub(crate) fn spin_inverse_impl(
     cluster: &Cluster,
     kernels: &dyn BlockKernels,
     a: &BlockMatrix,
@@ -133,7 +152,7 @@ mod tests {
         let mut job = JobConfig::new(n, bs);
         job_mut(&mut job);
         let a = BlockMatrix::random(&job).unwrap();
-        let inv = spin_inverse(&c, &NativeBackend, &a, &job).unwrap();
+        let inv = spin_inverse_impl(&c, &NativeBackend, &a, &job).unwrap();
         let resid = inverse_residual(&a.to_dense().unwrap(), &inv.to_dense().unwrap());
         assert!(resid < 1e-10, "n={n} bs={bs}: residual {resid:.3e}");
     }
@@ -170,9 +189,9 @@ mod tests {
         let c2 = cluster();
         let mut job = JobConfig::new(16, 8);
         let a = BlockMatrix::random(&job).unwrap();
-        let plain = spin_inverse(&c1, &NativeBackend, &a, &job).unwrap();
+        let plain = spin_inverse_impl(&c1, &NativeBackend, &a, &job).unwrap();
         job.fuse_leaf_2x2 = true;
-        let fused = spin_inverse(&c2, &NativeBackend, &a, &job).unwrap();
+        let fused = spin_inverse_impl(&c2, &NativeBackend, &a, &job).unwrap();
         let diff = plain
             .to_dense()
             .unwrap()
@@ -185,7 +204,7 @@ mod tests {
         let c = cluster();
         let job = JobConfig::new(32, 8);
         let a = BlockMatrix::random(&job).unwrap();
-        let inv = spin_inverse(&c, &NativeBackend, &a, &job).unwrap();
+        let inv = spin_inverse_impl(&c, &NativeBackend, &a, &job).unwrap();
         let want = lu_inverse(&a.to_dense().unwrap()).unwrap();
         let diff = inv.to_dense().unwrap().max_abs_diff(&want);
         assert!(diff < 1e-8, "diff {diff}");
@@ -203,7 +222,7 @@ mod tests {
         // Build a 3x3 grid manually (n=12, bs=4).
         let dense = crate::linalg::diag_dominant(12, &mut crate::util::Rng::new(1));
         let a = BlockMatrix::from_dense(&dense, 4).unwrap();
-        assert!(spin_inverse(&c, &NativeBackend, &a, &job).is_err());
+        assert!(spin_inverse_impl(&c, &NativeBackend, &a, &job).is_err());
     }
 
     #[test]
@@ -211,7 +230,7 @@ mod tests {
         let c = cluster();
         let job = JobConfig::new(32, 4); // b = 8: multi-level recursion
         let a = BlockMatrix::random(&job).unwrap();
-        let _ = spin_inverse(&c, &NativeBackend, &a, &job).unwrap();
+        let _ = spin_inverse_impl(&c, &NativeBackend, &a, &job).unwrap();
         let snap = c.metrics();
         for m in [
             "leafNode", "breakMat", "xy", "multiply", "subtract", "scalar", "arrange",

@@ -17,16 +17,14 @@ pub use args::Args;
 
 use std::path::PathBuf;
 
-use crate::algos::Algorithm;
 use crate::blockmatrix::BlockMatrix;
-use crate::cluster::Cluster;
 use crate::config::{ClusterConfig, GeneratorKind, JobConfig};
 use crate::costmodel::{self, CostConstants};
 use crate::error::{Result, SpinError};
 use crate::experiments::{self, Scale};
-use crate::linalg::inverse_residual;
-use crate::runtime::{make_backend, Manifest};
+use crate::runtime::Manifest;
 use crate::ser::bin;
+use crate::session::SpinSession;
 use crate::util::fmt;
 
 /// Entry point for the `spin` binary; returns the process exit code.
@@ -74,7 +72,8 @@ pub fn usage() -> String {
      \x20 info     show cluster config and artifact status\n\
      \n\
      COMMON FLAGS:\n\
-     \x20 --n N --block-size S --algo spin|lu --backend native|xla\n\
+     \x20 --n N --block-size S --algo NAME (any registered algorithm; built-in: spin|lu)\n\
+     \x20 --backend native|xla\n\
      \x20 --generator diag-dominant|spd --seed N --fuse-leaf-2x2\n\
      \x20 --residual-check --set key=value (cluster overrides, repeatable)\n\
      \x20 --smoke | --full (experiment scale)\n"
@@ -95,6 +94,49 @@ fn cluster_config(args: &mut Args) -> Result<ClusterConfig> {
     Ok(cfg)
 }
 
+/// Valid `--block-size` values for a power-of-two `n`: every power of two
+/// up to `n` (these are exactly the sizes giving a power-of-two grid).
+fn valid_block_sizes(n: usize) -> Vec<usize> {
+    let mut out = Vec::new();
+    let mut bs = 1usize;
+    while bs <= n {
+        out.push(bs);
+        bs *= 2;
+    }
+    out
+}
+
+/// Up-front geometry validation with actionable messages. The old flow let
+/// a bad default (`n/4` for non-power-of-two `n`) reach the job validator,
+/// whose error never named a usable value.
+fn validate_geometry(n: usize, block_size: usize) -> Result<()> {
+    if n == 0 {
+        return Err(SpinError::config("--n must be positive"));
+    }
+    if !n.is_power_of_two() {
+        let hi = n.next_power_of_two();
+        let lo = (hi / 2).max(1);
+        return Err(SpinError::config(format!(
+            "--n {n} is not a power of two (the SPIN recursion needs n = 2^k, \
+             paper §4); nearest valid sizes: {lo} or {hi}"
+        )));
+    }
+    if block_size == 0
+        || block_size > n
+        || n % block_size != 0
+        || !block_size.is_power_of_two()
+        || !(n / block_size).is_power_of_two()
+    {
+        let valid: Vec<String> = valid_block_sizes(n).iter().map(|b| b.to_string()).collect();
+        return Err(SpinError::config(format!(
+            "--block-size {block_size} does not give a power-of-two block grid \
+             for n = {n}; valid block sizes: {}",
+            valid.join(", ")
+        )));
+    }
+    Ok(())
+}
+
 fn job_config(args: &mut Args) -> Result<JobConfig> {
     let n = args
         .flag_value("--n")?
@@ -109,6 +151,7 @@ fn job_config(args: &mut Args) -> Result<JobConfig> {
         })
         .transpose()?
         .unwrap_or_else(|| (n / 4).max(1));
+    validate_geometry(n, bs)?;
     let mut job = JobConfig::new(n, bs);
     if let Some(s) = args.flag_value("--seed")? {
         job.seed = s
@@ -127,6 +170,9 @@ fn job_config(args: &mut Args) -> Result<JobConfig> {
     for kv in args.flag_values("--job")? {
         job.apply_override(&kv)?;
     }
+    // Overrides may change the geometry — re-check with the actionable
+    // messages before the generic validator.
+    validate_geometry(job.n, job.block_size)?;
     job.validate()?;
     Ok(job)
 }
@@ -134,11 +180,20 @@ fn job_config(args: &mut Args) -> Result<JobConfig> {
 fn cmd_invert(mut args: Args) -> Result<()> {
     let cfg = cluster_config(&mut args)?;
     let job = job_config(&mut args)?;
-    let algo = match args.flag_value("--algo")? {
-        Some(a) => Algorithm::parse(&a)?,
-        None => Algorithm::Spin,
-    };
+    let algo = args
+        .flag_value("--algo")?
+        .unwrap_or_else(|| "spin".to_string());
     args.finish()?;
+
+    // One session owns the cluster, backend, and job defaults; `--algo`
+    // resolves through its algorithm registry.
+    let session = SpinSession::builder()
+        .cluster_config(cfg)
+        .job_defaults(&job)
+        .build()?;
+    // Fail before the banner on an unknown name (the registry's error
+    // already lists what is registered).
+    session.registry().get(&algo)?;
 
     println!(
         "inverting {}x{} (b = {}, block {}x{}) with {} on {} executors × {} cores [{} backend]",
@@ -147,22 +202,19 @@ fn cmd_invert(mut args: Args) -> Result<()> {
         job.num_splits(),
         job.block_size,
         job.block_size,
-        algo.name(),
-        cfg.total_executors(),
-        cfg.cores_per_executor,
-        cfg.backend.name(),
+        algo,
+        session.config().total_executors(),
+        session.config().cores_per_executor,
+        session.backend_name(),
     );
-    let cluster = Cluster::new(cfg.clone());
-    let kernels = make_backend(&cfg)?;
-    let a = BlockMatrix::random(&job)?;
-    let a_dense = a.to_dense()?;
-    let inv = algo.invert(&cluster, kernels.as_ref(), &a, &job)?;
-    let resid = inverse_residual(&a_dense, &inv.to_dense()?);
+    let a = session.random(job.n, job.block_size)?;
+    let inv = a.inverse_with(&algo)?;
+    let resid = a.inverse_residual(&inv)?;
 
-    println!("\nper-method breakdown:\n{}", cluster.metrics().render_table());
+    println!("\nper-method breakdown:\n{}", session.metrics().render_table());
     println!(
         "virtual wall clock: {}   residual: {resid:.3e}",
-        fmt::secs(cluster.virtual_secs())
+        fmt::secs(session.virtual_secs())
     );
     Ok(())
 }
@@ -301,6 +353,12 @@ fn cmd_info(mut args: Args) -> Result<()> {
     let cfg = cluster_config(&mut args)?;
     args.finish()?;
     println!("cluster config:\n{}", cfg.to_json().pretty());
+    let registry = crate::algos::AlgorithmRegistry::with_defaults();
+    println!("inversion algorithms:");
+    for name in registry.names() {
+        let desc = registry.get(&name)?.description().to_string();
+        println!("  {name:<8} {desc}");
+    }
     let dir: PathBuf = cfg.artifacts_dir.clone();
     match Manifest::load(&dir) {
         Ok(m) => println!(
@@ -355,6 +413,41 @@ mod tests {
     fn invert_rejects_bad_flags() {
         assert_eq!(run(argv("invert --n 33 --block-size 8")), 1); // non-pow2
         assert_eq!(run(argv("invert --bogus-flag")), 1);
+    }
+
+    #[test]
+    fn invert_rejects_unknown_algo_via_registry() {
+        assert_eq!(run(argv("invert --n 16 --block-size 4 --algo cholesky")), 1);
+    }
+
+    #[test]
+    fn non_pow2_n_rejected_up_front_even_with_default_block_size() {
+        // The old default `(n/4).max(1)` deferred to the generic validator;
+        // now the geometry check fires first, with an actionable message.
+        assert_eq!(run(argv("invert --n 48")), 1);
+        let err = validate_geometry(48, 12).unwrap_err().to_string();
+        assert!(err.contains("not a power of two"), "{err}");
+        assert!(err.contains("32") && err.contains("64"), "{err}");
+    }
+
+    #[test]
+    fn bad_block_size_error_names_valid_sizes() {
+        let err = validate_geometry(256, 100).unwrap_err().to_string();
+        assert!(err.contains("valid block sizes"), "{err}");
+        for b in ["1", "2", "4", "8", "16", "32", "64", "128", "256"] {
+            assert!(err.contains(b), "missing {b} in: {err}");
+        }
+        assert!(validate_geometry(256, 0).is_err());
+        assert!(validate_geometry(256, 512).is_err());
+        assert!(validate_geometry(0, 1).is_err());
+        assert!(validate_geometry(256, 64).is_ok());
+        assert_eq!(valid_block_sizes(8), vec![1, 2, 4, 8]);
+    }
+
+    #[test]
+    fn job_override_geometry_also_validated() {
+        // `--job n=...` can smuggle bad geometry past the flag parsing.
+        assert_eq!(run(argv("invert --n 16 --block-size 4 --job n=48")), 1);
     }
 
     #[test]

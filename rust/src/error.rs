@@ -1,41 +1,66 @@
-//! Crate-wide error type.
+//! Crate-wide error type (hand-rolled `Display`/`Error` impls — `thiserror`
+//! is not in the offline vendor set).
 
-use thiserror::Error;
+use std::fmt;
 
 /// Unified error for every layer of the stack.
-#[derive(Error, Debug)]
+#[derive(Debug)]
 pub enum SpinError {
     /// Configuration file / CLI flag problems.
-    #[error("config error: {0}")]
     Config(String),
 
     /// Filesystem and serialization I/O.
-    #[error("io error: {0}")]
-    Io(#[from] std::io::Error),
+    Io(std::io::Error),
 
     /// JSON syntax or schema violations (hand-rolled parser in `ser::json`).
-    #[error("json error at line {line}, col {col}: {msg}")]
     Json { msg: String, line: usize, col: usize },
 
     /// Matrix dimension / block-grid mismatches.
-    #[error("shape error: {0}")]
     Shape(String),
 
     /// Singular pivots, non-finite values, failed residual checks.
-    #[error("numerical error: {0}")]
     Numerical(String),
 
     /// Missing or malformed AOT artifacts (`artifacts/manifest.json`).
-    #[error("artifact error: {0}")]
     Artifact(String),
 
     /// PJRT / XLA runtime failures.
-    #[error("xla error: {0}")]
     Xla(String),
 
     /// Scheduler / executor / shuffle failures in the cluster substrate.
-    #[error("cluster error: {0}")]
     Cluster(String),
+}
+
+impl fmt::Display for SpinError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            SpinError::Config(msg) => write!(f, "config error: {msg}"),
+            SpinError::Io(e) => write!(f, "io error: {e}"),
+            SpinError::Json { msg, line, col } => {
+                write!(f, "json error at line {line}, col {col}: {msg}")
+            }
+            SpinError::Shape(msg) => write!(f, "shape error: {msg}"),
+            SpinError::Numerical(msg) => write!(f, "numerical error: {msg}"),
+            SpinError::Artifact(msg) => write!(f, "artifact error: {msg}"),
+            SpinError::Xla(msg) => write!(f, "xla error: {msg}"),
+            SpinError::Cluster(msg) => write!(f, "cluster error: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for SpinError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            SpinError::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for SpinError {
+    fn from(e: std::io::Error) -> Self {
+        SpinError::Io(e)
+    }
 }
 
 impl From<xla::Error> for SpinError {

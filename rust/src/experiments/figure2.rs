@@ -2,7 +2,6 @@
 //! among different block sizes": for each matrix size, sweep the split
 //! count b for both algorithms and report each algorithm's best time.
 
-use crate::algos::Algorithm;
 use crate::config::{ClusterConfig, JobConfig};
 use crate::error::Result;
 use crate::experiments::{report, run_inversion, split_sweep, Scale};
@@ -26,11 +25,10 @@ pub fn run(cluster: &ClusterConfig, scale: &Scale, seed: u64) -> Result<Vec<Figu
         for b in split_sweep(n, scale.max_b) {
             let mut job = JobConfig::new(n, n / b);
             job.seed = seed ^ n as u64;
-            for (slot, algo) in [Algorithm::Spin, Algorithm::Lu].into_iter().enumerate() {
+            for (slot, algo) in ["spin", "lu"].into_iter().enumerate() {
                 let r = run_inversion(cluster, &job, algo)?;
                 log::info!(
-                    "figure2 n={n} b={b} {}: {:.3}s (virtual)",
-                    algo.name(),
+                    "figure2 n={n} b={b} {algo}: {:.3}s (virtual)",
                     r.virtual_secs
                 );
                 if r.virtual_secs < best[slot].0 {

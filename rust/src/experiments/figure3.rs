@@ -2,7 +2,6 @@
 //! partition size": the U-shaped wall-clock curve over split count b, per
 //! matrix size, for both algorithms.
 
-use crate::algos::Algorithm;
 use crate::config::{ClusterConfig, JobConfig};
 use crate::error::Result;
 use crate::experiments::{report, run_inversion, split_sweep, Scale};
@@ -30,8 +29,8 @@ pub fn run(cluster: &ClusterConfig, scale: &Scale, seed: u64) -> Result<Vec<Figu
             let b = swept[i];
             let mut job = JobConfig::new(n, n / b);
             job.seed = seed ^ (n as u64) << 8 ^ b as u64;
-            let spin = run_inversion(cluster, &job, Algorithm::Spin)?;
-            let lu = run_inversion(cluster, &job, Algorithm::Lu)?;
+            let spin = run_inversion(cluster, &job, "spin")?;
+            let lu = run_inversion(cluster, &job, "lu")?;
             log::info!(
                 "figure3 n={n} b={b}: spin {:.3}s lu {:.3}s",
                 spin.virtual_secs,

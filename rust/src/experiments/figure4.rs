@@ -2,7 +2,6 @@
 //! SPIN": evaluate the calibrated Lemma 4.1 model on the same (n, b) grid
 //! as the measurement and report both series.
 
-use crate::algos::Algorithm;
 use crate::config::{ClusterConfig, JobConfig};
 use crate::costmodel::{calibrate, spin_cost, CostConstants};
 use crate::error::Result;
@@ -35,7 +34,7 @@ pub fn run(
         for b in split_sweep(n, scale.max_b) {
             let mut job = JobConfig::new(n, n / b);
             job.seed = seed ^ (n as u64) << 4 ^ b as u64;
-            let measured = run_inversion(cluster, &job, Algorithm::Spin)?;
+            let measured = run_inversion(cluster, &job, "spin")?;
             let model = spin_cost(n, b, cores, &cal.constants).total();
             log::info!(
                 "figure4 n={n} b={b}: measured {:.3}s model {:.3}s",

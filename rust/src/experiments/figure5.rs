@@ -2,7 +2,6 @@
 //! scalability": wall time vs executor count, with the ideal `T(1)/k` line
 //! overplotted.
 
-use crate::algos::Algorithm;
 use crate::cluster::{list_schedule_makespan, StageReport};
 use crate::config::{ClusterConfig, JobConfig, NetworkConfig};
 use crate::error::Result;
@@ -68,7 +67,7 @@ pub fn run(cluster: &ClusterConfig, scale: &Scale, seed: u64) -> Result<Vec<Figu
         let b = (n / 256).clamp(2, scale.max_b);
         let mut job = JobConfig::new(n, n / b);
         job.seed = seed ^ n as u64;
-        let measured = run_inversion(cluster, &job, Algorithm::Spin)?;
+        let measured = run_inversion(cluster, &job, "spin")?;
         let stages = measured.metrics.stages();
         let k0 = scale.executor_sweep[0];
         let t1 = replay_virtual_secs(stages, k0, cluster.cores_per_executor, &cluster.network)

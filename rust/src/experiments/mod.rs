@@ -21,7 +21,7 @@ pub mod figure5;
 pub mod report;
 pub mod table3;
 
-use crate::algos::Algorithm;
+use crate::algos::AlgorithmRegistry;
 use crate::blockmatrix::BlockMatrix;
 use crate::cluster::{Cluster, MetricsSnapshot};
 use crate::config::{ClusterConfig, JobConfig};
@@ -33,7 +33,8 @@ use crate::util::timer::time_it;
 /// One measured inversion run.
 #[derive(Debug, Clone)]
 pub struct RunResult {
-    pub algo: Algorithm,
+    /// Registry name of the algorithm that ran (`"spin"`, `"lu"`, …).
+    pub algo: String,
     pub n: usize,
     pub b: usize,
     /// Simulated cluster wall clock (the paper's reported quantity).
@@ -45,25 +46,27 @@ pub struct RunResult {
     pub metrics: MetricsSnapshot,
 }
 
-/// Execute one inversion job on a fresh simulated cluster.
+/// Execute one inversion job on a fresh simulated cluster. `algo` is a
+/// registry name resolved against the built-in [`AlgorithmRegistry`].
 pub fn run_inversion(
     cluster_cfg: &ClusterConfig,
     job: &JobConfig,
-    algo: Algorithm,
+    algo: &str,
 ) -> Result<RunResult> {
     job.validate()?;
+    let scheme = AlgorithmRegistry::with_defaults().get(algo)?;
     let cluster = Cluster::new(cluster_cfg.clone());
     let kernels = make_backend(cluster_cfg)?;
     let a = BlockMatrix::random(job)?;
     let a_dense = a.to_dense()?;
 
     cluster.reset();
-    let (inv, real_secs) = time_it(|| algo.invert(&cluster, kernels.as_ref(), &a, job));
+    let (inv, real_secs) = time_it(|| scheme.invert(&cluster, kernels.as_ref(), &a, job));
     let inv = inv?;
     let virtual_secs = cluster.virtual_secs();
     let residual = inverse_residual(&a_dense, &inv.to_dense()?);
     Ok(RunResult {
-        algo,
+        algo: algo.to_string(),
         n: job.n,
         b: job.num_splits(),
         virtual_secs,
@@ -147,7 +150,8 @@ mod tests {
     fn run_inversion_smoke() {
         let cfg = ClusterConfig::local(4);
         let job = JobConfig::new(32, 8);
-        let r = run_inversion(&cfg, &job, Algorithm::Spin).unwrap();
+        let r = run_inversion(&cfg, &job, "spin").unwrap();
+        assert_eq!(r.algo, "spin");
         assert!(r.residual < 1e-10, "residual {}", r.residual);
         assert!(r.virtual_secs > 0.0);
         assert!(r.real_secs > 0.0);
@@ -159,8 +163,16 @@ mod tests {
     fn spin_and_lu_agree_in_harness() {
         let cfg = ClusterConfig::local(4);
         let job = JobConfig::new(32, 8);
-        let s = run_inversion(&cfg, &job, Algorithm::Spin).unwrap();
-        let l = run_inversion(&cfg, &job, Algorithm::Lu).unwrap();
+        let s = run_inversion(&cfg, &job, "spin").unwrap();
+        let l = run_inversion(&cfg, &job, "lu").unwrap();
         assert!(s.residual < 1e-9 && l.residual < 1e-9);
+    }
+
+    #[test]
+    fn run_inversion_rejects_unknown_algorithm() {
+        let cfg = ClusterConfig::local(2);
+        let job = JobConfig::new(16, 4);
+        let err = run_inversion(&cfg, &job, "cholesky").unwrap_err();
+        assert!(err.to_string().contains("unknown algorithm"), "{err}");
     }
 }

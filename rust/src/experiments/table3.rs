@@ -2,7 +2,6 @@
 //! different methods in SPIN": per-method breakdown over split counts for
 //! one matrix size (paper: n = 4096, b ∈ {2, 4, 8, 16}).
 
-use crate::algos::Algorithm;
 use crate::config::{ClusterConfig, JobConfig};
 use crate::error::Result;
 use crate::experiments::{report, run_inversion, split_sweep};
@@ -33,7 +32,7 @@ pub fn run(cluster: &ClusterConfig, n: usize, max_b: usize, seed: u64) -> Result
     for b in split_sweep(n, max_b) {
         let mut job = JobConfig::new(n, n / b);
         job.seed = seed ^ b as u64;
-        let r = run_inversion(cluster, &job, Algorithm::Spin)?;
+        let r = run_inversion(cluster, &job, "spin")?;
         let method_ms: Vec<f64> = METHODS
             .iter()
             .map(|m| {

@@ -2,11 +2,47 @@
 //!
 //! Reproduction of *SPIN: A Fast and Scalable Matrix Inversion Method in
 //! Apache Spark* (Misra et al., ICDCN '18) as a three-layer Rust + JAX +
-//! Pallas system:
+//! Pallas system.
+//!
+//! ## Public API: sessions and matrix handles
+//!
+//! The front door is [`session::SpinSession`]: a builder-configured context
+//! that owns the simulated cluster, the block-kernel backend, and the job
+//! defaults, and hands out [`session::DistMatrix`] handles with methods —
+//! no more threading `Cluster` + `&dyn BlockKernels` + `JobConfig` through
+//! free functions.
+//!
+//! ```no_run
+//! use spin::session::SpinSession;
+//!
+//! fn main() -> spin::Result<()> {
+//!     let session = SpinSession::builder().cores(4).build()?;
+//!     let a = session.random_spd(256, 64)?;     // 4×4 grid of 64×64 blocks
+//!     let inv = a.inverse()?;                   // SPIN recursion
+//!     assert!(a.inverse_residual(&inv)? < 1e-10);
+//!
+//!     let b = session.random_seeded(256, 64, 7)?;
+//!     let x = a.solve(&b)?;                     // X = A⁻¹·B
+//!     let pinv = a.pseudo_inverse()?;           // (AᵀA)⁻¹·Aᵀ
+//!     let lu = session.invert_with("lu", &a)?;  // any registered algorithm
+//!     # let _ = (x, pinv, lu);
+//!     Ok(())
+//! }
+//! ```
+//!
+//! Inversion schemes are open-ended: implement
+//! [`algos::InversionAlgorithm`] and register it in the session builder (or
+//! an [`algos::AlgorithmRegistry`]) under a new name — the CLI's `--algo`
+//! flag and the experiment harness resolve through the same registry. The
+//! old closed `algos::Algorithm` enum and the `spin_inverse` /
+//! `lu_inverse_distributed` free functions remain as `#[deprecated]` shims.
+//!
+//! ## Layers
 //!
 //! * **Layer 3 (this crate)** — the coordinator: a Spark-like dataflow
 //!   substrate ([`cluster`]), the distributed [`blockmatrix`] algebra, the
-//!   SPIN recursion and its LU baseline ([`algos`]), the paper's wall-clock
+//!   SPIN recursion and its LU baseline behind the algorithm registry
+//!   ([`algos`]), the session API ([`session`]), the paper's wall-clock
 //!   cost model ([`costmodel`]) and every experiment in the evaluation
 //!   section ([`experiments`]).
 //! * **Layer 2/1 (build-time Python)** — block-level compute lowered once
@@ -27,7 +63,9 @@ pub mod experiments;
 pub mod linalg;
 pub mod runtime;
 pub mod ser;
+pub mod session;
 pub mod util;
 
 pub use config::{ClusterConfig, JobConfig};
 pub use error::{Result, SpinError};
+pub use session::{AlgorithmRegistry, DistMatrix, InversionAlgorithm, SessionBuilder, SpinSession};

@@ -1,52 +1,54 @@
-//! Cross-module integration tests: the full distributed stack (cluster +
-//! blockmatrix + algos + runtime), both backends, storage round-trips,
-//! and the experiment harness glue.
+//! Cross-module integration tests: the full distributed stack (session +
+//! cluster + blockmatrix + algos + runtime), both backends, storage
+//! round-trips, and the experiment harness glue.
 //!
 //! XLA-backend tests are gated on `artifacts/manifest.json` (built by
 //! `make artifacts`); they are skipped, not failed, without it.
 
 use std::path::{Path, PathBuf};
+use std::sync::Arc;
 
-use spin::algos::{lu_inverse_distributed, spin_inverse, strassen_inverse_serial, Algorithm};
-use spin::blockmatrix::BlockMatrix;
+use spin::blockmatrix::{Block, BlockMatrix};
 use spin::cluster::Cluster;
 use spin::config::{BackendKind, ClusterConfig, GeneratorKind, JobConfig, LeafMethod};
-use spin::linalg::{inverse_residual, Matrix};
-use spin::runtime::{make_backend, NativeBackend, XlaBackend};
+use spin::linalg::{inverse_residual, lu_inverse, matmul, Matrix};
+use spin::runtime::{make_backend, BlockKernels, NativeBackend, XlaBackend};
+use spin::session::{AlgorithmRegistry, InversionAlgorithm, SpinSession};
 use spin::util::check::forall;
 use spin::util::Rng;
+use spin::Result;
 
 fn artifacts_dir() -> Option<PathBuf> {
     let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
     dir.join("manifest.json").exists().then_some(dir)
 }
 
-fn paper_cluster() -> Cluster {
-    Cluster::new(ClusterConfig::paper())
+fn paper_session() -> SpinSession {
+    SpinSession::builder().paper_cluster().build().unwrap()
 }
+
+// ---------------- session API over the native backend ----------------
 
 #[test]
 fn spin_full_grid_sweep_native() {
-    let cluster = paper_cluster();
+    let session = paper_session();
     for (n, bs) in [(16usize, 4usize), (32, 4), (32, 8), (64, 8), (64, 16), (128, 32)] {
-        let mut job = JobConfig::new(n, bs);
-        job.seed = 0x100 + n as u64 + bs as u64;
-        let a = BlockMatrix::random(&job).unwrap();
-        let inv = spin_inverse(&cluster, &NativeBackend, &a, &job).unwrap();
-        let resid = inverse_residual(&a.to_dense().unwrap(), &inv.to_dense().unwrap());
+        let a = session
+            .random_seeded(n, bs, 0x100 + n as u64 + bs as u64)
+            .unwrap();
+        let inv = a.inverse().unwrap();
+        let resid = a.inverse_residual(&inv).unwrap();
         assert!(resid < 1e-9, "spin n={n} bs={bs}: {resid:.3e}");
     }
 }
 
 #[test]
 fn lu_full_grid_sweep_native() {
-    let cluster = paper_cluster();
+    let session = paper_session();
     for (n, bs) in [(16usize, 4usize), (32, 8), (64, 16), (128, 32)] {
-        let mut job = JobConfig::new(n, bs);
-        job.seed = 0x200 + n as u64;
-        let a = BlockMatrix::random(&job).unwrap();
-        let inv = lu_inverse_distributed(&cluster, &NativeBackend, &a, &job).unwrap();
-        let resid = inverse_residual(&a.to_dense().unwrap(), &inv.to_dense().unwrap());
+        let a = session.random_seeded(n, bs, 0x200 + n as u64).unwrap();
+        let inv = a.inverse_with("lu").unwrap();
+        let resid = a.inverse_residual(&inv).unwrap();
         assert!(resid < 1e-9, "lu n={n} bs={bs}: {resid:.3e}");
     }
 }
@@ -63,16 +65,16 @@ fn spin_matches_serial_strassen_property() {
             (n, bs.min(n), r.next_u64())
         },
         |&(n, bs, seed)| {
-            let cluster = paper_cluster();
-            let mut job = JobConfig::new(n, bs);
-            job.seed = seed;
-            let a = BlockMatrix::random(&job).unwrap();
+            let session = paper_session();
+            let a = session.random_seeded(n, bs, seed).unwrap();
             let dense = a.to_dense().unwrap();
-            let dist = spin_inverse(&cluster, &NativeBackend, &a, &job)
+            let dist = a
+                .inverse()
                 .map_err(|e| e.to_string())?
                 .to_dense()
                 .unwrap();
-            let serial = strassen_inverse_serial(&dense, bs).map_err(|e| e.to_string())?;
+            let serial =
+                spin::algos::strassen_inverse_serial(&dense, bs).map_err(|e| e.to_string())?;
             let diff = dist.max_abs_diff(&serial);
             if diff < 1e-7 {
                 Ok(())
@@ -85,31 +87,203 @@ fn spin_matches_serial_strassen_property() {
 
 #[test]
 fn spd_and_both_leaf_methods() {
-    let cluster = paper_cluster();
     for leaf in [LeafMethod::Lu, LeafMethod::GaussJordan] {
-        let mut job = JobConfig::new(64, 16);
-        job.generator = GeneratorKind::Spd;
-        job.leaf = leaf;
-        let a = BlockMatrix::random(&job).unwrap();
-        let inv = spin_inverse(&cluster, &NativeBackend, &a, &job).unwrap();
-        let resid = inverse_residual(&a.to_dense().unwrap(), &inv.to_dense().unwrap());
+        let session = SpinSession::builder()
+            .paper_cluster()
+            .generator(GeneratorKind::Spd)
+            .leaf(leaf)
+            .build()
+            .unwrap();
+        let a = session.random(64, 16).unwrap();
+        let inv = a.inverse().unwrap();
+        let resid = a.inverse_residual(&inv).unwrap();
         assert!(resid < 1e-9, "{leaf:?}: {resid:.3e}");
     }
 }
 
 #[test]
 fn virtual_time_accumulates_and_resets_across_runs() {
-    let cluster = paper_cluster();
+    let session = paper_session();
+    let a = session.random(32, 8).unwrap();
+    let _ = a.inverse().unwrap();
+    let t1 = session.virtual_secs();
+    assert!(t1 > 0.0);
+    let _ = a.inverse().unwrap();
+    assert!(session.virtual_secs() > t1, "clock must accumulate");
+    session.reset_clock();
+    assert_eq!(session.virtual_secs(), 0.0);
+}
+
+// ---------------- new workloads: solve and pseudo-inverse ----------------
+
+#[test]
+fn session_solve_matches_serial_reference() {
+    let session = paper_session();
+    let a = session.random_seeded(64, 16, 0x501).unwrap();
+    let b = session.random_seeded(64, 16, 0x502).unwrap();
+    let x = a.solve(&b).unwrap();
+    let want = matmul(
+        &lu_inverse(&a.to_dense().unwrap()).unwrap(),
+        &b.to_dense().unwrap(),
+    );
+    let diff = x.to_dense().unwrap().max_abs_diff(&want);
+    assert!(diff < 1e-8, "solve vs serial reference diff {diff}");
+    // Residual form: ‖A·X − B‖∞ relative to ‖B‖∞.
+    let ax = a.multiply(&x).unwrap().to_dense().unwrap();
+    let bd = b.to_dense().unwrap();
+    let resid = ax.max_abs_diff(&bd) / bd.max_abs();
+    assert!(resid < 1e-9, "solve residual {resid:.3e}");
+}
+
+#[test]
+fn session_solve_dense_and_solve_with_lu() {
+    let session = paper_session();
+    let a = session.random_seeded(32, 8, 0x511).unwrap();
+    // Rectangular dense RHS (n×2).
+    let mut rng = Rng::new(0x512);
+    let rhs = Matrix::random_uniform(32, 2, -1.0, 1.0, &mut rng);
+    let x = a.solve_dense(&rhs).unwrap();
+    let resid = matmul(&a.to_dense().unwrap(), &x).max_abs_diff(&rhs);
+    assert!(resid < 1e-9, "solve_dense residual {resid:.3e}");
+    // solve_with("lu") agrees with the default (spin) path.
+    let b = session.random_seeded(32, 8, 0x513).unwrap();
+    let via_spin = a.solve(&b).unwrap().to_dense().unwrap();
+    let via_lu = a.solve_with("lu", &b).unwrap().to_dense().unwrap();
+    assert!(via_spin.max_abs_diff(&via_lu) < 1e-8);
+}
+
+#[test]
+fn session_pseudo_inverse_matches_serial_inverse() {
+    let session = paper_session();
+    let m = session.random_spd(64, 16).unwrap();
+    let pinv = m.pseudo_inverse().unwrap();
+    // Full-rank square input: M⁺ = M⁻¹ (serial LU reference).
+    let want = lu_inverse(&m.to_dense().unwrap()).unwrap();
+    let diff = pinv.to_dense().unwrap().max_abs_diff(&want);
+    assert!(diff < 1e-6, "pseudo-inverse vs serial inverse diff {diff}");
+    let resid = m.inverse_residual(&pinv).unwrap();
+    assert!(resid < 1e-8, "pseudo-inverse residual {resid:.3e}");
+}
+
+// ---------------- registry behavior ----------------
+
+#[test]
+fn registry_rejects_duplicates_and_unknowns() {
+    let mut registry = AlgorithmRegistry::with_defaults();
+    assert_eq!(registry.names(), vec!["lu".to_string(), "spin".to_string()]);
+
+    struct FakeSpin;
+    impl InversionAlgorithm for FakeSpin {
+        fn name(&self) -> &str {
+            "spin"
+        }
+        fn invert(
+            &self,
+            _cluster: &Cluster,
+            _kernels: &dyn BlockKernels,
+            _a: &BlockMatrix,
+            _job: &JobConfig,
+        ) -> Result<BlockMatrix> {
+            unreachable!("duplicate registration must be rejected")
+        }
+    }
+    let err = registry.register(Arc::new(FakeSpin)).unwrap_err();
+    assert!(err.to_string().contains("already registered"), "{err}");
+
+    let err = registry.get("qr").unwrap_err();
+    let msg = err.to_string();
+    assert!(msg.contains("unknown algorithm `qr`"), "{msg}");
+    assert!(msg.contains("lu|spin"), "{msg}");
+}
+
+#[test]
+fn externally_registered_algorithm_reachable_by_name() {
+    // A user-provided scheme: scale by 2, invert with SPIN, scale by 2 —
+    // 2·(2A)⁻¹ == A⁻¹ — exercised purely through the public API.
+    struct ScaledSpin;
+    impl InversionAlgorithm for ScaledSpin {
+        fn name(&self) -> &str {
+            "scaled-spin"
+        }
+        fn invert(
+            &self,
+            cluster: &Cluster,
+            kernels: &dyn BlockKernels,
+            a: &BlockMatrix,
+            job: &JobConfig,
+        ) -> Result<BlockMatrix> {
+            let doubled = a.scalar_mul(cluster, kernels, 2.0)?;
+            let inv = spin::algos::SpinAlgorithm.invert(cluster, kernels, &doubled, job)?;
+            inv.scalar_mul(cluster, kernels, 2.0)
+        }
+    }
+    let session = SpinSession::builder()
+        .cores(4)
+        .register_algorithm(Arc::new(ScaledSpin))
+        .unwrap()
+        .build()
+        .unwrap();
+    let a = session.random(32, 8).unwrap();
+    let inv = a.inverse_with("scaled-spin").unwrap();
+    let resid = a.inverse_residual(&inv).unwrap();
+    assert!(resid < 1e-10, "scaled-spin residual {resid:.3e}");
+}
+
+// ---------------- BlockMatrix::from_blocks error paths ----------------
+
+#[test]
+fn from_blocks_error_paths_via_session() {
+    let session = SpinSession::local(2).unwrap();
+    // Duplicate index.
+    let dup = vec![
+        Block::new(0, 0, Matrix::zeros(4, 4)),
+        Block::new(0, 0, Matrix::zeros(4, 4)),
+        Block::new(1, 0, Matrix::zeros(4, 4)),
+        Block::new(1, 1, Matrix::zeros(4, 4)),
+    ];
+    let err = session.from_blocks(dup, 2, 4).unwrap_err();
+    assert!(err.to_string().contains("duplicate block index"), "{err}");
+    // Wrong-size block.
+    let bad_size = vec![
+        Block::new(0, 0, Matrix::zeros(3, 4)),
+        Block::new(0, 1, Matrix::zeros(4, 4)),
+        Block::new(1, 0, Matrix::zeros(4, 4)),
+        Block::new(1, 1, Matrix::zeros(4, 4)),
+    ];
+    let err = session.from_blocks(bad_size, 2, 4).unwrap_err();
+    assert!(err.to_string().contains("expected 4x4"), "{err}");
+    // Out-of-grid index.
+    let oob = vec![Block::new(2, 0, Matrix::zeros(4, 4))];
+    assert!(session.from_blocks(oob, 1, 4).is_err());
+    // Wrong count.
+    assert!(session.from_blocks(vec![], 1, 4).is_err());
+}
+
+// ---------------- deprecated shims stay alive ----------------
+
+#[test]
+#[allow(deprecated)]
+fn deprecated_entry_points_still_work() {
+    use spin::algos::{lu_inverse_distributed, spin_inverse, Algorithm};
+    let cluster = Cluster::new(ClusterConfig::paper());
     let job = JobConfig::new(32, 8);
     let a = BlockMatrix::random(&job).unwrap();
-    let _ = spin_inverse(&cluster, &NativeBackend, &a, &job).unwrap();
-    let t1 = cluster.virtual_secs();
-    assert!(t1 > 0.0);
-    let _ = spin_inverse(&cluster, &NativeBackend, &a, &job).unwrap();
-    assert!(cluster.virtual_secs() > t1, "clock must accumulate");
-    cluster.reset();
-    assert_eq!(cluster.virtual_secs(), 0.0);
+    let dense = a.to_dense().unwrap();
+
+    let via_fn = spin_inverse(&cluster, &NativeBackend, &a, &job).unwrap();
+    assert!(inverse_residual(&dense, &via_fn.to_dense().unwrap()) < 1e-9);
+
+    let via_lu = lu_inverse_distributed(&cluster, &NativeBackend, &a, &job).unwrap();
+    assert!(inverse_residual(&dense, &via_lu.to_dense().unwrap()) < 1e-9);
+
+    let algo = Algorithm::parse("spin").unwrap();
+    assert_eq!(algo.name(), "spin");
+    let via_enum = algo.invert(&cluster, &NativeBackend, &a, &job).unwrap();
+    assert!(inverse_residual(&dense, &via_enum.to_dense().unwrap()) < 1e-9);
+    assert!(Algorithm::parse("qr").is_err());
 }
+
+// ---------------- storage / backend plumbing (unchanged paths) ----------
 
 #[test]
 fn block_store_round_trip_via_cli_layer() {
@@ -150,17 +324,30 @@ fn make_backend_dispatches() {
     assert!(make_backend(&cfg).is_err());
 }
 
+#[test]
+fn xla_session_fails_fast_without_artifacts() {
+    let err = SpinSession::builder()
+        .cores(2)
+        .backend(BackendKind::Xla)
+        .artifacts_dir("/definitely/missing")
+        .build()
+        .unwrap_err();
+    assert!(!err.to_string().is_empty());
+}
+
 // ---------------- XLA-backend integration (gated on artifacts) ----------
 
 #[test]
 fn spin_distributed_on_xla_backend() {
     let Some(dir) = artifacts_dir() else { return };
     let be = XlaBackend::new(dir).unwrap();
-    let cluster = paper_cluster();
+    let cluster = Cluster::new(ClusterConfig::paper());
     let mut job = JobConfig::new(128, 32);
     job.leaf = LeafMethod::GaussJordan;
     let a = BlockMatrix::random(&job).unwrap();
-    let inv = spin_inverse(&cluster, &be, &a, &job).unwrap();
+    let inv = spin::algos::SpinAlgorithm
+        .invert(&cluster, &be, &a, &job)
+        .unwrap();
     let resid = inverse_residual(&a.to_dense().unwrap(), &inv.to_dense().unwrap());
     assert!(resid < 1e-9, "xla spin residual {resid:.3e}");
     assert!(be.executed_count() > 0, "PJRT path must actually execute");
@@ -171,10 +358,12 @@ fn spin_distributed_on_xla_backend() {
 fn lu_distributed_on_xla_backend_is_fully_pjrt() {
     let Some(dir) = artifacts_dir() else { return };
     let be = XlaBackend::new(dir).unwrap();
-    let cluster = paper_cluster();
+    let cluster = Cluster::new(ClusterConfig::paper());
     let job = JobConfig::new(64, 16);
     let a = BlockMatrix::random(&job).unwrap();
-    let inv = lu_inverse_distributed(&cluster, &be, &a, &job).unwrap();
+    let inv = spin::algos::LuAlgorithm
+        .invert(&cluster, &be, &a, &job)
+        .unwrap();
     let resid = inverse_residual(&a.to_dense().unwrap(), &inv.to_dense().unwrap());
     assert!(resid < 1e-9, "xla lu residual {resid:.3e}");
     // Baseline leaves (lu_factor / invert_lower / invert_upper) must also
@@ -185,23 +374,30 @@ fn lu_distributed_on_xla_backend_is_fully_pjrt() {
 #[test]
 fn fused_leaf_2x2_on_xla_matches_unfused() {
     let Some(dir) = artifacts_dir() else { return };
-    let be = XlaBackend::new(dir).unwrap();
-    let c1 = paper_cluster();
-    let c2 = paper_cluster();
-    let mut job = JobConfig::new(64, 32);
-    job.leaf = LeafMethod::GaussJordan;
-    let a = BlockMatrix::random(&job).unwrap();
-    let plain = spin_inverse(&c1, &be, &a, &job).unwrap();
-    job.fuse_leaf_2x2 = true;
-    let fused = spin_inverse(&c2, &be, &a, &job).unwrap();
+    let build = |fuse: bool| {
+        SpinSession::builder()
+            .paper_cluster()
+            .backend(BackendKind::Xla)
+            .artifacts_dir(dir.clone())
+            .leaf(LeafMethod::GaussJordan)
+            .fuse_leaf_2x2(fuse)
+            .build()
+            .unwrap()
+    };
+    let plain_session = build(false);
+    let fused_session = build(true);
+    let a_plain = plain_session.random(64, 32).unwrap();
+    let a_fused = fused_session.random(64, 32).unwrap();
+    let plain = a_plain.inverse().unwrap();
+    let fused = a_fused.inverse().unwrap();
     let diff = plain
         .to_dense()
         .unwrap()
         .max_abs_diff(&fused.to_dense().unwrap());
     assert!(diff < 1e-8, "fused vs plain diff {diff}");
     // The fused path collapses that level's stages into one task.
-    let plain_stages = c1.metrics().stages().len();
-    let fused_stages = c2.metrics().stages().len();
+    let plain_stages = plain_session.metrics().stages().len();
+    let fused_stages = fused_session.metrics().stages().len();
     assert!(
         fused_stages < plain_stages,
         "fusion should reduce stage count: {fused_stages} vs {plain_stages}"
@@ -212,13 +408,23 @@ fn fused_leaf_2x2_on_xla_matches_unfused() {
 fn xla_and_native_agree_numerically() {
     let Some(dir) = artifacts_dir() else { return };
     let be = XlaBackend::new(dir).unwrap();
-    let c1 = paper_cluster();
-    let c2 = paper_cluster();
+    let c1 = Cluster::new(ClusterConfig::paper());
     let mut job = JobConfig::new(64, 16);
     job.leaf = LeafMethod::GaussJordan;
     let a = BlockMatrix::random(&job).unwrap();
-    let x = spin_inverse(&c1, &be, &a, &job).unwrap().to_dense().unwrap();
-    let n = spin_inverse(&c2, &NativeBackend, &a, &job)
+    let x = spin::algos::SpinAlgorithm
+        .invert(&c1, &be, &a, &job)
+        .unwrap()
+        .to_dense()
+        .unwrap();
+    let session = SpinSession::builder()
+        .paper_cluster()
+        .leaf(LeafMethod::GaussJordan)
+        .build()
+        .unwrap();
+    let n = session
+        .wrap(a)
+        .inverse()
         .unwrap()
         .to_dense()
         .unwrap();
@@ -233,7 +439,7 @@ fn experiment_harness_runs_on_xla() {
     cfg.backend = BackendKind::Xla;
     let mut job = JobConfig::new(64, 16);
     job.leaf = LeafMethod::GaussJordan;
-    let r = spin::experiments::run_inversion(&cfg, &job, Algorithm::Spin).unwrap();
+    let r = spin::experiments::run_inversion(&cfg, &job, "spin").unwrap();
     assert!(r.residual < 1e-9);
     assert!(r.virtual_secs > 0.0);
 }
@@ -241,17 +447,22 @@ fn experiment_harness_runs_on_xla() {
 #[test]
 fn multithreaded_workers_with_xla_thread_local_engines() {
     let Some(dir) = artifacts_dir() else { return };
-    let be = XlaBackend::new(dir).unwrap();
     let mut cfg = ClusterConfig::paper();
+    cfg.backend = BackendKind::Xla;
+    cfg.artifacts_dir = dir;
     cfg.worker_threads = 3; // forces engines on several threads
-    let cluster = Cluster::new(cfg);
-    let mut job = JobConfig::new(64, 16);
-    job.leaf = LeafMethod::GaussJordan;
-    let a = BlockMatrix::random(&job).unwrap();
-    let inv = spin_inverse(&cluster, &be, &a, &job).unwrap();
-    let resid = inverse_residual(&a.to_dense().unwrap(), &inv.to_dense().unwrap());
+    let session = SpinSession::builder()
+        .cluster_config(cfg)
+        .leaf(LeafMethod::GaussJordan)
+        .build()
+        .unwrap();
+    let a = session.random(64, 16).unwrap();
+    let inv = a.inverse().unwrap();
+    let resid = a.inverse_residual(&inv).unwrap();
     assert!(resid < 1e-9, "mt xla residual {resid:.3e}");
 }
+
+// ---------------- experiment harness / determinism ----------------
 
 #[test]
 fn figure5_replay_is_monotone() {
@@ -264,17 +475,10 @@ fn figure5_replay_is_monotone() {
 
 #[test]
 fn seeded_rerun_is_bitwise_identical() {
-    let cluster = paper_cluster();
-    let job = JobConfig::new(32, 8);
-    let a = BlockMatrix::random(&job).unwrap();
-    let x1 = spin_inverse(&cluster, &NativeBackend, &a, &job)
-        .unwrap()
-        .to_dense()
-        .unwrap();
-    let x2 = spin_inverse(&cluster, &NativeBackend, &a, &job)
-        .unwrap()
-        .to_dense()
-        .unwrap();
+    let session = paper_session();
+    let a = session.random(32, 8).unwrap();
+    let x1 = a.inverse().unwrap().to_dense().unwrap();
+    let x2 = a.inverse().unwrap().to_dense().unwrap();
     assert_eq!(x1.max_abs_diff(&x2), 0.0, "same input ⇒ same output bits");
 }
 

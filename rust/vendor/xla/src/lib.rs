@@ -1,0 +1,184 @@
+//! Compile-time stub of the `xla` (PJRT) bindings used by `spin::runtime`.
+//!
+//! The real bindings link against the XLA native libraries, which are not
+//! part of the offline vendor set. This stub keeps the whole crate — and
+//! everything written against the PJRT engine — compiling anywhere, while
+//! failing fast at *runtime* with an actionable error the moment a PJRT
+//! client is requested. [`Literal`] is implemented for real (it is a plain
+//! host-side container), so layout round-trip code and its tests still run.
+//!
+//! Swapping this path dependency for the real crates.io bindings requires
+//! no source changes in `spin`.
+
+#![forbid(unsafe_code)]
+
+use std::fmt;
+
+/// Error type mirroring `xla::Error`.
+#[derive(Debug, Clone)]
+pub struct Error(String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+fn unavailable(what: &str) -> Error {
+    Error(format!(
+        "{what}: the XLA/PJRT native runtime is not part of this build \
+         (vendored stub `xla` crate); rebuild against the real xla bindings \
+         or use the `native` backend"
+    ))
+}
+
+/// A host-side literal: shape + f64 payload (the only dtype this
+/// workspace lowers).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Literal {
+    dims: Vec<i64>,
+    data: Vec<f64>,
+}
+
+impl Literal {
+    /// Rank-0 literal holding one scalar.
+    pub fn scalar(v: f64) -> Literal {
+        Literal {
+            dims: Vec::new(),
+            data: vec![v],
+        }
+    }
+
+    /// Rank-1 literal over a host slice.
+    pub fn vec1(v: &[f64]) -> Literal {
+        Literal {
+            dims: vec![v.len() as i64],
+            data: v.to_vec(),
+        }
+    }
+
+    /// Reshape without changing the element count.
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal> {
+        let want: i64 = dims.iter().product();
+        if want < 0 || want as usize != self.data.len() {
+            return Err(Error(format!(
+                "reshape: {} elements cannot view as {dims:?}",
+                self.data.len()
+            )));
+        }
+        Ok(Literal {
+            dims: dims.to_vec(),
+            data: self.data.clone(),
+        })
+    }
+
+    pub fn dims(&self) -> &[i64] {
+        &self.dims
+    }
+
+    /// Copy the payload out (f64 only in this workspace).
+    pub fn to_vec<T: From<f64>>(&self) -> Result<Vec<T>> {
+        Ok(self.data.iter().map(|&x| T::from(x)).collect())
+    }
+
+    /// Destructure a tuple literal. The stub never produces tuples (they
+    /// only come back from PJRT execution), so this always errors.
+    pub fn to_tuple(self) -> Result<Vec<Literal>> {
+        Err(unavailable("Literal::to_tuple"))
+    }
+}
+
+impl AsRef<Literal> for Literal {
+    fn as_ref(&self) -> &Literal {
+        self
+    }
+}
+
+/// Stub PJRT client: construction always fails.
+pub struct PjRtClient {
+    _unconstructible: (),
+}
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        Err(unavailable("PjRtClient::cpu"))
+    }
+
+    pub fn platform_name(&self) -> String {
+        "stub".to_string()
+    }
+
+    pub fn compile(&self, _computation: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(unavailable("PjRtClient::compile"))
+    }
+}
+
+/// Stub compiled executable (unreachable: no client can be built).
+pub struct PjRtLoadedExecutable {
+    _unconstructible: (),
+}
+
+impl PjRtLoadedExecutable {
+    pub fn execute<L: AsRef<Literal>>(&self, _args: &[L]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(unavailable("PjRtLoadedExecutable::execute"))
+    }
+}
+
+/// Stub device buffer (unreachable: no executable can be built).
+pub struct PjRtBuffer {
+    _unconstructible: (),
+}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(unavailable("PjRtBuffer::to_literal_sync"))
+    }
+}
+
+/// Stub HLO module proto (parse always errors: nothing can execute it).
+pub struct HloModuleProto {
+    _unconstructible: (),
+}
+
+impl HloModuleProto {
+    pub fn from_text_file(path: &str) -> Result<HloModuleProto> {
+        Err(unavailable(&format!("HloModuleProto::from_text_file({path})")))
+    }
+}
+
+/// Stub computation wrapper.
+pub struct XlaComputation {
+    _unconstructible: (),
+}
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation {
+            _unconstructible: (),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_round_trip() {
+        let lit = Literal::vec1(&[1.0, 2.0, 3.0, 4.0]);
+        let lit = lit.reshape(&[2, 2]).unwrap();
+        assert_eq!(lit.dims(), &[2, 2]);
+        assert_eq!(lit.to_vec::<f64>().unwrap(), vec![1.0, 2.0, 3.0, 4.0]);
+        assert!(lit.reshape(&[3, 2]).is_err());
+    }
+
+    #[test]
+    fn client_fails_fast_with_actionable_message() {
+        let err = PjRtClient::cpu().err().unwrap();
+        assert!(err.to_string().contains("native backend"));
+    }
+}
