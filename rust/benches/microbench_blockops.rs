@@ -20,7 +20,7 @@ fn bench_backend(name: &str, be: &dyn BlockKernels, sizes: &[usize], csv: &mut f
         let reps = if bs <= 64 { 20 } else { 5 };
 
         let t_mm = min_time_of(reps, || be.matmul(&a, &b).unwrap());
-        let t_acc = min_time_of(reps, || be.matmul_acc(&a, &b, &d).unwrap());
+        let t_acc = min_time_of(reps, || be.matmul_acc(&a, &b, d.clone()).unwrap());
         let t_sub = min_time_of(reps, || be.subtract(&a, &b).unwrap());
         let t_inv = min_time_of(reps, || be.leaf_inverse(&a, LeafMethod::GaussJordan).unwrap());
 

@@ -19,6 +19,12 @@
 //! Block-level LU uses no pivoting (pivoting breaks the block recursion;
 //! Liu et al. make the same restriction) — the workload generators keep
 //! every principal minor nonsingular.
+//!
+//! The baseline rides the same partitioner-aware substrate as SPIN: every
+//! intermediate here stays grid-partitioned, so its `subtract`s and
+//! `arrange`s are narrow and each `multiply` pays exactly one shuffle
+//! round — the SPIN-vs-LU comparison measures algorithm structure, not
+//! dataflow overhead.
 
 use crate::blockmatrix::ops_method as method;
 use crate::blockmatrix::BlockMatrix;

@@ -2,10 +2,12 @@
 //!
 //! Per recursion level (grid edge `b` → `b/2`): 1 `breakMat`, 4 `xy`,
 //! 2 recursive inversions (A11 and the Schur complement V), 6 distributed
-//! `multiply`, 2 `subtract` (one fused into the Schur step in the paper's
-//! table as part of multiply accounting), 1 `scalarMul`, 1 `arrange`.
-//! At `b = 1` the single block is inverted serially on one worker (the
-//! `leafNode` map).
+//! `multiply` — one of which is the **fused** Schur step
+//! `V = A21·III − A22` ([`BlockMatrix::multiply_sub`]), whose subtraction
+//! runs inside the multiply's reduce stage (accounted under `multiply`,
+//! exactly as the paper folds it into multiply in Table 3) — 1 standalone
+//! `subtract` (C11), 1 `scalarMul`, 1 `arrange`. At `b = 1` the single
+//! block is inverted serially on one worker (the `leafNode` map).
 //!
 //! Our extension (off by default, `JobConfig::fuse_leaf_2x2`): when the
 //! recursion reaches a 2×2 grid, run the whole Algorithm-1 step as one
@@ -14,7 +16,7 @@
 
 use crate::blockmatrix::{Block, BlockMatrix};
 use crate::blockmatrix::ops_method as method;
-use crate::cluster::{Cluster, Rdd};
+use crate::cluster::Cluster;
 use crate::config::JobConfig;
 use crate::error::{Result, SpinError};
 use crate::runtime::BlockKernels;
@@ -93,8 +95,7 @@ fn inverse_rec(
     let i = inverse_rec(cluster, kernels, &a11, job)?; //  I  = A11⁻¹
     let ii = a21.multiply(cluster, kernels, &i)?; //        II  = A21·I
     let iii = i.multiply(cluster, kernels, &a12)?; //       III = I·A12
-    let iv = a21.multiply(cluster, kernels, &iii)?; //      IV  = A21·III
-    let v = iv.subtract(cluster, kernels, &a22)?; //        V   = IV − A22
+    let v = a21.multiply_sub(cluster, kernels, &iii, &a22)?; // V = A21·III − A22 (fused Schur)
     let vi = inverse_rec(cluster, kernels, &v, job)?; //    VI  = V⁻¹
     let c12 = iii.multiply(cluster, kernels, &vi)?; //      C12 = III·VI
     let c21 = vi.multiply(cluster, kernels, &ii)?; //       C21 = VI·II
@@ -132,8 +133,9 @@ fn fused_2x2(
         Block::new(1, 0, c21),
         Block::new(1, 1, c22),
     ];
-    let n = blocks.len();
-    Ok(BlockMatrix::from_rdd(Rdd::from_items(blocks, n), 2, bs))
+    // from_blocks restores the grid partitioner, so the parent level's
+    // arrange stays narrow after a fused base.
+    BlockMatrix::from_blocks(blocks, 2, bs)
 }
 
 #[cfg(test)]

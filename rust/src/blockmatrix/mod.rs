@@ -8,7 +8,7 @@ mod ops;
 pub use block::{Block, BlockIdx, Quadrant};
 pub use ops::method as ops_method;
 
-use crate::cluster::{Cluster, Rdd};
+use crate::cluster::{Cluster, Partitioner, Rdd};
 use crate::config::{GeneratorKind, JobConfig};
 use crate::error::{Result, SpinError};
 use crate::linalg::{self, Matrix};
@@ -28,7 +28,10 @@ impl BlockMatrix {
 
     /// Wrap blocks; validates the grid is complete and uniformly sized.
     /// Partitioning: one block per partition (a block is the task unit in
-    /// the paper's cost model).
+    /// the paper's cost model), placed by the grid partitioner — block
+    /// `(i, j)` in partition `i * nblocks + j` — so every matrix built
+    /// here is co-partitioned with every other of the same grid and the
+    /// block ops can run narrow.
     pub fn from_blocks(blocks: Vec<Block>, nblocks: usize, block_size: usize) -> Result<Self> {
         if blocks.len() != nblocks * nblocks {
             return Err(SpinError::shape(format!(
@@ -65,9 +68,13 @@ impl BlockMatrix {
             }
             seen[slot] = true;
         }
-        let nparts = blocks.len();
+        let mut parts: Vec<Vec<Block>> = (0..nblocks * nblocks).map(|_| Vec::new()).collect();
+        for b in blocks {
+            let p = b.row * nblocks + b.col;
+            parts[p].push(b);
+        }
         Ok(BlockMatrix {
-            rdd: Rdd::from_items(blocks, nparts),
+            rdd: Rdd::from_partitions_with(parts, Partitioner::Grid { nblocks }),
             nblocks,
             block_size,
         })
@@ -179,6 +186,23 @@ impl BlockMatrix {
         self.rdd.clone()
     }
 
+    /// The grid placement every matrix of this shape should follow.
+    pub(crate) fn grid_partitioner(&self) -> Partitioner {
+        Partitioner::Grid {
+            nblocks: self.nblocks,
+        }
+    }
+
+    /// This matrix's blocks, guaranteed grid-partitioned: free when the
+    /// RDD already carries the grid partitioner (the invariant every
+    /// constructor and op maintains), one counted shuffle otherwise.
+    pub(crate) fn aligned_rdd(&self, cluster: &Cluster, method: &str) -> Rdd<Block> {
+        let nb = self.nblocks;
+        cluster.partition_items_by(method, self.rdd.clone(), self.grid_partitioner(), move |b| {
+            b.row * nb + b.col
+        })
+    }
+
     /// Driver-side block lookup (test helper; O(blocks)).
     pub fn get_block(&self, row: usize, col: usize) -> Option<&Block> {
         self.rdd.iter().find(|b| b.row == row && b.col == col)
@@ -201,13 +225,15 @@ impl BlockMatrix {
     }
 
     /// Map every block's payload through a fallible kernel, as one
-    /// distributed stage attributed to `method`.
+    /// distributed stage attributed to `method`. Payload-only: block
+    /// indices never move, so the input's partitioner is re-stamped.
     pub fn map_blocks_try(
         &self,
         cluster: &Cluster,
         method: &str,
         f: impl Fn(&Matrix) -> Result<Matrix> + Sync,
     ) -> Result<BlockMatrix> {
+        let partitioner = self.rdd.partitioner();
         let out = cluster.map(method, self.rdd_clone(), |blk: Block| {
             f(&blk.matrix).map(|m| Block::new(blk.row, blk.col, m))
         });
@@ -220,11 +246,11 @@ impl BlockMatrix {
             }
             ok_parts.push(ok);
         }
-        Ok(BlockMatrix::from_rdd(
-            Rdd::from_partitions(ok_parts),
-            self.nblocks,
-            self.block_size,
-        ))
+        let mut rdd = Rdd::from_partitions(ok_parts);
+        if let Some(p) = partitioner {
+            rdd = rdd.with_partitioner(p);
+        }
+        Ok(BlockMatrix::from_rdd(rdd, self.nblocks, self.block_size))
     }
 }
 
@@ -286,9 +312,15 @@ mod tests {
     }
 
     #[test]
-    fn one_block_per_partition() {
+    fn one_block_per_partition_under_grid_placement() {
         let bm = BlockMatrix::identity(8, 2).unwrap();
         assert_eq!(bm.rdd().num_partitions(), 16);
+        assert_eq!(bm.rdd().partitioner(), Some(Partitioner::Grid { nblocks: 4 }));
+        // Block (i, j) lives alone in partition i * nblocks + j.
+        for (p, part) in bm.rdd().partitions().iter().enumerate() {
+            assert_eq!(part.len(), 1);
+            assert_eq!(part[0].row * 4 + part[0].col, p);
+        }
     }
 
     #[test]

@@ -3,11 +3,44 @@
 //!
 //! Method-name strings match the paper's Table 3 rows so the metrics
 //! registry regenerates that table directly.
+//!
+//! ## Partitioner contract
+//!
+//! Every [`BlockMatrix`] keeps its blocks under the **grid partitioner**
+//! (block `(i, j)` alone in partition `i * nblocks + j` — see
+//! [`crate::cluster::Partitioner::Grid`]), and every op here restores that
+//! invariant on its output. That one promise decides which ops are narrow
+//! and which must shuffle:
+//!
+//! * **Narrow (zero shuffle bytes, zero driver round-trips):** `breakMat`
+//!   and `xy` (quadrant extraction moves *whole* one-block partitions, a
+//!   1-to-1 dependency), `arrange` (the inverse interleave), `subtract`
+//!   and every elementwise op (co-partitioned `zip_partitions` join),
+//!   `scalarMul`, and `transpose` (a partition permutation).
+//! * **Wide (one shuffle round):** the pairing stage of `multiply`.
+//!   Each A block `(i, k)` and B block `(k, j)` is replicated to key
+//!   `(i, j, k)` and routed **by output index `(i, j)`** straight to the
+//!   grid partition its product lands in — so the k-summing reduce (and,
+//!   for [`BlockMatrix::multiply_sub`], the fused Schur subtraction) runs
+//!   inside the same narrow stage. That single round is recorded as two
+//!   exchange stages in the metrics (one per operand stream); the
+//!   replicated path's *extra* round — re-shuffling every partial product
+//!   for the reduce — is gone.
+//!
+//! The pre-partitioner pipeline — replicated cogroup multiply plus
+//! driver-side re-parallelization after every op — is kept behind
+//! `ClusterConfig::partitioner_aware = false` (and
+//! [`BlockMatrix::multiply_replicated`]) so the shuffle-byte and
+//! driver-round-trip savings stay measurable.
+
+use std::collections::{BTreeMap, HashMap};
+use std::sync::Arc;
 
 use crate::blockmatrix::block::{Block, Quadrant};
 use crate::blockmatrix::BlockMatrix;
-use crate::cluster::{Cluster, Rdd};
+use crate::cluster::{Cluster, Partitioner, Rdd};
 use crate::error::{Result, SpinError};
+use crate::linalg::Matrix;
 
 use crate::runtime::BlockKernels;
 
@@ -20,11 +53,25 @@ pub mod method {
     pub const SUBTRACT: &str = "subtract";
     pub const SCALAR_MUL: &str = "scalar";
     pub const ARRANGE: &str = "arrange";
+    pub const TRANSPOSE: &str = "transpose";
 }
+
+/// One replicated operand copy in the multiply pairing stage: the key is
+/// `(i, j, k)` — output block `(i, j)`, inner index `k` — and the payload
+/// is shared via `Arc` (Spark replicates references into shuffle files,
+/// not deep copies in executor memory; see EXPERIMENTS.md §Perf, L3-2).
+type RepEntry = ((usize, usize, usize), Arc<Matrix>);
 
 impl BlockMatrix {
     /// Algorithm 3: tag every block with its quadrant and remap indices into
-    /// the half-grid (`ri % size`, `ci % size`). One `mapToPair` pass.
+    /// the half-grid (`ri % size`, `ci % size`). One `mapToPair` pass; the
+    /// blocks stay in their grid partitions.
+    ///
+    /// In partitioner-aware mode the output is stamped with the *parent's*
+    /// grid partitioner: the map only re-keys payloads in place, so element
+    /// at partition `p` is still the parent's block `(p / b, p % b)`. That
+    /// stamp is the provenance [`BlockMatrix::quadrant`] requires before it
+    /// extracts quadrants by moving whole partitions.
     pub fn break_mat(&self, cluster: &Cluster) -> Result<Rdd<(Quadrant, Block)>> {
         if self.nblocks() % 2 != 0 {
             return Err(SpinError::shape(format!(
@@ -33,18 +80,37 @@ impl BlockMatrix {
                 self.nblocks()
             )));
         }
-        let half = self.nblocks() / 2;
-        Ok(cluster.map(method::BREAK_MAT, self.rdd_clone(), move |mut blk: Block| {
+        let b = self.nblocks();
+        let half = b / 2;
+        let aware = cluster.config().partitioner_aware;
+        let src = if aware {
+            self.aligned_rdd(cluster, method::BREAK_MAT)
+        } else {
+            self.rdd_clone()
+        };
+        let out = cluster.map(method::BREAK_MAT, src, move |mut blk: Block| {
             let tag = Quadrant::of(blk.row, blk.col, half);
             blk.row %= half;
             blk.col %= half;
             (tag, blk)
-        }))
+        });
+        Ok(if aware {
+            out.with_partitioner(Partitioner::Grid { nblocks: b })
+        } else {
+            out
+        })
     }
 
     /// Algorithm 4 (`xy`): filter one quadrant out of a broken pair-RDD and
     /// strip the tags. The paper runs `_11`…`_22` as four filter+map passes
     /// over the same RDD; `quadrant` is one such pass.
+    ///
+    /// When `broken` carries the parent-grid provenance stamp that
+    /// [`BlockMatrix::break_mat`] sets, the result is re-gridded by moving
+    /// whole one-block partitions — a narrow 1-to-1 dependency with zero
+    /// shuffle bytes. Otherwise (a hand-built pair-RDD, or with
+    /// `partitioner_aware` off) it falls back to the original driver-side
+    /// re-parallelization.
     pub fn quadrant(
         cluster: &Cluster,
         broken: &Rdd<(Quadrant, Block)>,
@@ -52,12 +118,30 @@ impl BlockMatrix {
         half: usize,
         block_size: usize,
     ) -> BlockMatrix {
+        let b = 2 * half;
+        let parent_grid = broken.partitioner() == Some(Partitioner::Grid { nblocks: b });
         let filtered = cluster.filter(method::XY, broken.clone(), move |(tag, _)| *tag == which);
         let rdd = cluster.map(method::XY, filtered, |(_, blk)| blk);
-        // Re-partition: one block per partition for downstream task counts.
-        let blocks = rdd.into_items();
-        let nparts = blocks.len().max(1);
-        BlockMatrix::from_rdd(Rdd::from_items(blocks, nparts), half, block_size)
+        if cluster.config().partitioner_aware && parent_grid {
+            let (roff, coff) = match which {
+                Quadrant::Q11 => (0, 0),
+                Quadrant::Q12 => (0, half),
+                Quadrant::Q21 => (half, 0),
+                Quadrant::Q22 => (half, half),
+            };
+            let sources: Vec<usize> = (0..half)
+                .flat_map(|i| (0..half).map(move |j| (i + roff) * b + (j + coff)))
+                .collect();
+            let grid = rdd
+                .select_partitions(&sources)
+                .with_partitioner(Partitioner::Grid { nblocks: half });
+            BlockMatrix::from_rdd(grid, half, block_size)
+        } else {
+            // Legacy: materialize on the driver and re-parallelize.
+            let blocks = cluster.collect(rdd);
+            let nparts = blocks.len().max(1);
+            BlockMatrix::from_rdd(Rdd::from_items(blocks, nparts), half, block_size)
+        }
     }
 
     /// Break into the four half-grid quadrants (breakMat + 4 × xy).
@@ -75,11 +159,131 @@ impl BlockMatrix {
         Ok((a11, a12, a21, a22))
     }
 
-    /// Paper §3.3 `multiply`: naive replicated block matmul. Every A block
-    /// `(i,k)` is replicated to all `(i,j,k)` keys, every B block `(k,j)` to
-    /// all `(i,j,k)`; a co-group brings each pair to one reducer, which
-    /// multiplies; a reduce-by-key sums over `k`.
+    /// Paper §3.3 `multiply`: C = A·B. With the partitioner-aware dataflow
+    /// this is one shuffle round (the `(i, j, k)` pairing — two recorded
+    /// exchanges, one per operand stream — routed by output index)
+    /// followed by one narrow GEMM+reduce stage; with it disabled, the
+    /// original replicated-cogroup path runs instead.
     pub fn multiply(
+        &self,
+        cluster: &Cluster,
+        kernels: &dyn BlockKernels,
+        other: &BlockMatrix,
+    ) -> Result<BlockMatrix> {
+        self.check_same_grid(other, "multiply")?;
+        if cluster.config().partitioner_aware {
+            self.multiply_partitioned(cluster, kernels, other, None)
+        } else {
+            self.multiply_replicated(cluster, kernels, other)
+        }
+    }
+
+    /// Fused C = A·B − D — SPIN's Schur step `V = A21·III − A22`. The
+    /// subtraction happens **inside** the multiply's final reduce stage
+    /// (D is co-partitioned with the routed products), so the composed
+    /// `multiply` + `subtract` pair's extra stage disappears entirely —
+    /// and with the legacy wide subtract, a whole shuffle per recursion
+    /// level with it.
+    pub fn multiply_sub(
+        &self,
+        cluster: &Cluster,
+        kernels: &dyn BlockKernels,
+        other: &BlockMatrix,
+        d: &BlockMatrix,
+    ) -> Result<BlockMatrix> {
+        self.check_same_grid(other, "multiply_sub")?;
+        self.check_same_grid(d, "multiply_sub")?;
+        if cluster.config().partitioner_aware {
+            self.multiply_partitioned(cluster, kernels, other, Some(d))
+        } else {
+            let prod = self.multiply_replicated(cluster, kernels, other)?;
+            prod.subtract(cluster, kernels, d)
+        }
+    }
+
+    /// Partitioner-aware multiply core: replicate map-side, shuffle once
+    /// routed by output block index, then multiply + sum (+ optionally
+    /// subtract `minus`) in a single narrow stage.
+    fn multiply_partitioned(
+        &self,
+        cluster: &Cluster,
+        kernels: &dyn BlockKernels,
+        other: &BlockMatrix,
+        minus: Option<&BlockMatrix>,
+    ) -> Result<BlockMatrix> {
+        let b = self.nblocks();
+        let bs = self.block_size();
+        let target = Partitioner::Grid { nblocks: b };
+
+        // Replicate (map-side, narrow): A block (i, k) to keys (i, j, k)
+        // for all j; B block (k, j) to keys (i, j, k) for all i.
+        let a_rep = cluster.flat_map(
+            method::MULTIPLY,
+            self.aligned_rdd(cluster, method::MULTIPLY),
+            move |blk: Block| {
+                let m = Arc::new(blk.matrix);
+                (0..b)
+                    .map(move |j| ((blk.row, j, blk.col), Arc::clone(&m)))
+                    .collect::<Vec<_>>()
+            },
+        );
+        let b_rep = cluster.flat_map(
+            method::MULTIPLY,
+            other.aligned_rdd(cluster, method::MULTIPLY),
+            move |blk: Block| {
+                let m = Arc::new(blk.matrix);
+                (0..b)
+                    .map(move |i| ((i, blk.col, blk.row), Arc::clone(&m)))
+                    .collect::<Vec<_>>()
+            },
+        );
+
+        // The single shuffle round (one exchange per operand stream):
+        // route every (i, j, k) replica straight to the grid partition of
+        // its OUTPUT block (i, j). All k-terms for one product land
+        // together, so the sum never shuffles again.
+        let a_parts =
+            cluster.partition_pairs_by(method::MULTIPLY, a_rep, target, move |&(i, j, _k)| {
+                i * b + j
+            });
+        let b_parts =
+            cluster.partition_pairs_by(method::MULTIPLY, b_rep, target, move |&(i, j, _k)| {
+                i * b + j
+            });
+
+        // One narrow stage: per-key GEMM, k-sum, and (when fused) the
+        // Schur subtraction against the co-partitioned D blocks.
+        let joined = match minus {
+            Some(d) => {
+                let d_rdd = d.aligned_rdd(cluster, method::MULTIPLY);
+                cluster.zip_partitions3(method::MULTIPLY, a_parts, b_parts, d_rdd, |avs, bvs, dvs| {
+                    join_products(kernels, avs, bvs, Some(dvs))
+                })
+            }
+            None => cluster.zip_partitions(method::MULTIPLY, a_parts, b_parts, |avs, bvs| {
+                join_products(kernels, avs, bvs, None)
+            }),
+        };
+
+        let out = joined.with_partitioner(target);
+        if out.len() != b * b {
+            return Err(SpinError::cluster(format!(
+                "multiply produced {} blocks, expected {}",
+                out.len(),
+                b * b
+            )));
+        }
+        Ok(BlockMatrix::from_rdd(out, b, bs))
+    }
+
+    /// The paper's original naive replicated block matmul: every A block
+    /// `(i,k)` is replicated to all `(i,j,k)` keys, every B block `(k,j)`
+    /// to all `(i,j,k)`; a co-group brings each pair to one reducer, which
+    /// multiplies; a reduce-by-key sums over `k` (a second shuffle); the
+    /// result is re-parallelized through the driver. Kept as the
+    /// measurable "before" of the partitioner-aware dataflow and for
+    /// ablation benches.
+    pub fn multiply_replicated(
         &self,
         cluster: &Cluster,
         kernels: &dyn BlockKernels,
@@ -90,20 +294,16 @@ impl BlockMatrix {
         let bs = self.block_size();
         let nparts = b * b;
 
-        // Replicate (map-side, narrow). §Perf: payloads are shared via
-        // `Arc` — Spark replicates references into shuffle files, not b
-        // deep copies in executor memory; deep-cloning here dominated the
-        // replication stage at large b (EXPERIMENTS.md §Perf, L3-2).
         let a_rep = cluster.flat_map(method::MULTIPLY, self.rdd_clone(), move |blk: Block| {
-            let m = std::sync::Arc::new(blk.matrix);
+            let m = Arc::new(blk.matrix);
             (0..b)
-                .map(move |j| ((blk.row, j, blk.col), std::sync::Arc::clone(&m)))
+                .map(move |j| ((blk.row, j, blk.col), Arc::clone(&m)))
                 .collect::<Vec<_>>()
         });
         let b_rep = cluster.flat_map(method::MULTIPLY, other.rdd_clone(), move |blk: Block| {
-            let m = std::sync::Arc::new(blk.matrix);
+            let m = Arc::new(blk.matrix);
             (0..b)
-                .map(move |i| ((i, blk.col, blk.row), std::sync::Arc::clone(&m)))
+                .map(move |i| ((i, blk.col, blk.row), Arc::clone(&m)))
                 .collect::<Vec<_>>()
         });
 
@@ -126,7 +326,7 @@ impl BlockMatrix {
         });
 
         let blocks = cluster.map(method::MULTIPLY, summed, |((i, j), m)| Block::new(i, j, m));
-        let items = blocks.into_items();
+        let items = cluster.collect(blocks);
         if items.len() != b * b {
             return Err(SpinError::cluster(format!(
                 "multiply produced {} blocks, expected {}",
@@ -138,7 +338,9 @@ impl BlockMatrix {
         Ok(BlockMatrix::from_rdd(Rdd::from_items(items, n), b, bs))
     }
 
-    /// Paper §3.3 `subtract`: align blocks by index, C = A − B.
+    /// Paper §3.3 `subtract`: align blocks by index, C = A − B. Narrow
+    /// (zero shuffle bytes) on co-partitioned operands — which every
+    /// `BlockMatrix` of the same grid is.
     pub fn subtract(
         &self,
         cluster: &Cluster,
@@ -146,20 +348,7 @@ impl BlockMatrix {
         other: &BlockMatrix,
     ) -> Result<BlockMatrix> {
         self.check_same_grid(other, "subtract")?;
-        self.binary_elementwise(cluster, kernels, other, method::SUBTRACT, false)
-    }
-
-    /// Fused C = A·B − D used for SPIN's Schur step when enabled; kept
-    /// separate so the ablation bench can compare fused vs composed.
-    pub fn multiply_sub(
-        &self,
-        cluster: &Cluster,
-        kernels: &dyn BlockKernels,
-        other: &BlockMatrix,
-        d: &BlockMatrix,
-    ) -> Result<BlockMatrix> {
-        let prod = self.multiply(cluster, kernels, other)?;
-        prod.subtract(cluster, kernels, d)
+        self.binary_elementwise(cluster, kernels, other, method::SUBTRACT)
     }
 
     fn binary_elementwise(
@@ -168,25 +357,54 @@ impl BlockMatrix {
         kernels: &dyn BlockKernels,
         other: &BlockMatrix,
         name: &str,
-        _add: bool,
     ) -> Result<BlockMatrix> {
         let b = self.nblocks();
         let bs = self.block_size();
-        let nparts = b * b;
-        let left = cluster.map(name, self.rdd_clone(), |blk: Block| (blk.idx(), blk.matrix));
-        let right = cluster.map(name, other.rdd_clone(), |blk: Block| (blk.idx(), blk.matrix));
-        let paired = cluster.cogroup(name, left, right, nparts);
-        let out = cluster.map(name, paired, |((i, j), (ls, rs))| {
-            debug_assert_eq!(ls.len(), 1);
-            debug_assert_eq!(rs.len(), 1);
-            let m = kernels
-                .subtract(&ls[0], &rs[0])
-                .expect("subtract kernel failed");
-            Block::new(i, j, m)
-        });
-        let items = out.into_items();
-        let n = items.len();
-        Ok(BlockMatrix::from_rdd(Rdd::from_items(items, n), b, bs))
+        if cluster.config().partitioner_aware {
+            // Narrow co-partitioned join: each grid partition holds the
+            // same block index on both sides.
+            let left = self.aligned_rdd(cluster, name);
+            let right = other.aligned_rdd(cluster, name);
+            let out = cluster.zip_partitions(name, left, right, |ls: Vec<Block>, rs: Vec<Block>| {
+                let mut rmap: HashMap<(usize, usize), Matrix> =
+                    rs.into_iter().map(|blk| (blk.idx(), blk.matrix)).collect();
+                ls.into_iter()
+                    .map(|blk| {
+                        let r = rmap
+                            .remove(&blk.idx())
+                            .expect("co-partitioned operand missing block");
+                        let m = kernels
+                            .subtract(&blk.matrix, &r)
+                            .expect("subtract kernel failed");
+                        Block::new(blk.row, blk.col, m)
+                    })
+                    .collect()
+            });
+            Ok(BlockMatrix::from_rdd(
+                out.with_partitioner(Partitioner::Grid { nblocks: b }),
+                b,
+                bs,
+            ))
+        } else {
+            // Legacy wide path: cogroup both sides, then re-parallelize
+            // through the driver.
+            let nparts = b * b;
+            let left = cluster.map(name, self.rdd_clone(), |blk: Block| (blk.idx(), blk.matrix));
+            let right =
+                cluster.map(name, other.rdd_clone(), |blk: Block| (blk.idx(), blk.matrix));
+            let paired = cluster.cogroup(name, left, right, nparts);
+            let out = cluster.map(name, paired, |((i, j), (ls, rs))| {
+                debug_assert_eq!(ls.len(), 1);
+                debug_assert_eq!(rs.len(), 1);
+                let m = kernels
+                    .subtract(&ls[0], &rs[0])
+                    .expect("subtract kernel failed");
+                Block::new(i, j, m)
+            });
+            let items = cluster.collect(out);
+            let n = items.len();
+            Ok(BlockMatrix::from_rdd(Rdd::from_items(items, n), b, bs))
+        }
     }
 
     /// Paper §3.3 / Algorithm 5 `scalarMul`: one map over blocks.
@@ -200,7 +418,10 @@ impl BlockMatrix {
     }
 
     /// Algorithm 6 `arrange`: re-index the four quadrants into the full
-    /// grid (three shifting maps — C11 keeps its indices) and union.
+    /// grid (three shifting maps — C11 keeps its indices) and interleave.
+    /// Narrow: the shifted quadrants' one-block partitions slot 1-to-1
+    /// into the full grid's partitions, so no element moves executors and
+    /// the result carries the grid partitioner for the next level.
     pub fn arrange(
         cluster: &Cluster,
         c11: BlockMatrix,
@@ -213,47 +434,124 @@ impl BlockMatrix {
         c11.check_same_grid(&c22, "arrange")?;
         let half = c11.nblocks();
         let bs = c11.block_size();
+        let b = 2 * half;
 
-        let r12 = cluster.map(method::ARRANGE, c12.rdd_clone(), move |mut b: Block| {
-            b.col += half;
-            b
-        });
-        let r21 = cluster.map(method::ARRANGE, c21.rdd_clone(), move |mut b: Block| {
-            b.row += half;
-            b
-        });
-        let r22 = cluster.map(method::ARRANGE, c22.rdd_clone(), move |mut b: Block| {
-            b.row += half;
-            b.col += half;
-            b
-        });
-        let unioned = c11
-            .rdd_clone()
-            .union(r12)
-            .union(r21)
-            .union(r22);
-        let items = unioned.into_items();
-        let n = items.len();
-        Ok(BlockMatrix::from_rdd(
-            Rdd::from_items(items, n),
-            2 * half,
-            bs,
-        ))
+        let shift = |src: Rdd<Block>, dr: usize, dc: usize| {
+            cluster.map(method::ARRANGE, src, move |mut blk: Block| {
+                blk.row += dr;
+                blk.col += dc;
+                blk
+            })
+        };
+
+        if cluster.config().partitioner_aware {
+            let r11 = c11.aligned_rdd(cluster, method::ARRANGE);
+            let r12 = shift(c12.aligned_rdd(cluster, method::ARRANGE), 0, half);
+            let r21 = shift(c21.aligned_rdd(cluster, method::ARRANGE), half, 0);
+            let r22 = shift(c22.aligned_rdd(cluster, method::ARRANGE), half, half);
+
+            let mut slots: Vec<Option<Vec<Block>>> = (0..b * b).map(|_| None).collect();
+            let mut place = |rdd: Rdd<Block>, roff: usize, coff: usize| {
+                for (p, part) in rdd.into_partitions().into_iter().enumerate() {
+                    let (i, j) = (p / half + roff, p % half + coff);
+                    slots[i * b + j] = Some(part);
+                }
+            };
+            place(r11, 0, 0);
+            place(r12, 0, half);
+            place(r21, half, 0);
+            place(r22, half, half);
+            let parts: Vec<Vec<Block>> = slots
+                .into_iter()
+                .map(|s| s.expect("arrange covered every grid slot"))
+                .collect();
+            let rdd = Rdd::from_partitions_with(parts, Partitioner::Grid { nblocks: b });
+            Ok(BlockMatrix::from_rdd(rdd, b, bs))
+        } else {
+            let r12 = shift(c12.rdd_clone(), 0, half);
+            let r21 = shift(c21.rdd_clone(), half, 0);
+            let r22 = shift(c22.rdd_clone(), half, half);
+            let unioned = c11.rdd_clone().union(r12).union(r21).union(r22);
+            let items = cluster.collect(unioned);
+            let n = items.len();
+            Ok(BlockMatrix::from_rdd(Rdd::from_items(items, n), b, bs))
+        }
     }
 
-    /// Distributed transpose (one map: swap indices + transpose payloads).
+    /// Distributed transpose: one map (swap indices + transpose payloads)
+    /// plus a narrow partition permutation back onto the grid layout.
     pub fn transpose(&self, cluster: &Cluster) -> BlockMatrix {
-        let out = cluster.map("transpose", self.rdd_clone(), |blk: Block| {
-            Block::new(blk.col, blk.row, blk.matrix.transpose())
-        });
-        let items = out.into_items();
-        let n = items.len();
-        BlockMatrix::from_rdd(
-            Rdd::from_items(items, n),
-            self.nblocks(),
-            self.block_size(),
-        )
+        let nb = self.nblocks();
+        let bs = self.block_size();
+        let mapped = |src: Rdd<Block>| {
+            cluster.map(method::TRANSPOSE, src, |blk: Block| {
+                Block::new(blk.col, blk.row, blk.matrix.transpose())
+            })
+        };
+        if cluster.config().partitioner_aware {
+            let out = mapped(self.aligned_rdd(cluster, method::TRANSPOSE));
+            // Source partition j*nb+i now holds block (i, j); permute it
+            // into grid slot i*nb+j.
+            let sources: Vec<usize> = (0..nb)
+                .flat_map(|i| (0..nb).map(move |j| j * nb + i))
+                .collect();
+            let rdd = out
+                .select_partitions(&sources)
+                .with_partitioner(Partitioner::Grid { nblocks: nb });
+            BlockMatrix::from_rdd(rdd, nb, bs)
+        } else {
+            let out = mapped(self.rdd_clone());
+            let items = cluster.collect(out);
+            let n = items.len();
+            BlockMatrix::from_rdd(Rdd::from_items(items, n), nb, bs)
+        }
     }
+}
+
+/// Reduce side of the partitioner-aware multiply, run inside one narrow
+/// task per grid partition: hash-join the A/B replicas on `(i, j, k)`,
+/// GEMM each pair, accumulate the k-sum in place (`matmul_acc` takes the
+/// accumulator by value — no per-term allocation), and optionally apply
+/// the fused Schur subtraction.
+fn join_products(
+    kernels: &dyn BlockKernels,
+    avs: Vec<RepEntry>,
+    bvs: Vec<RepEntry>,
+    minus: Option<Vec<Block>>,
+) -> Vec<Block> {
+    let mut bmap: HashMap<(usize, usize, usize), Arc<Matrix>> = bvs.into_iter().collect();
+    let mut by_out: BTreeMap<(usize, usize), Vec<(usize, Arc<Matrix>)>> = BTreeMap::new();
+    for ((i, j, k), m) in avs {
+        by_out.entry((i, j)).or_default().push((k, m));
+    }
+    let mut dmap: HashMap<(usize, usize), Matrix> = minus
+        .map(|blocks| blocks.into_iter().map(|blk| (blk.idx(), blk.matrix)).collect())
+        .unwrap_or_default();
+    let mut out = Vec::with_capacity(by_out.len());
+    for ((i, j), mut terms) in by_out {
+        // Deterministic summation order over k.
+        terms.sort_unstable_by_key(|&(k, _)| k);
+        let mut acc: Option<Matrix> = None;
+        for (k, am) in terms {
+            let bm = bmap
+                .remove(&(i, j, k))
+                .expect("B replica missing for (i, j, k)");
+            acc = Some(match acc {
+                None => kernels.matmul(&am, &bm).expect("block matmul kernel failed"),
+                Some(sum) => kernels
+                    .matmul_acc(&am, &bm, sum)
+                    .expect("block matmul kernel failed"),
+            });
+        }
+        let mut m = acc.expect("each output block has at least one k-term");
+        if let Some(d) = dmap.remove(&(i, j)) {
+            m = kernels
+                .subtract(&m, &d)
+                .expect("fused subtract kernel failed");
+        }
+        out.push(Block::new(i, j, m));
+    }
+    out
 }
 
 #[cfg(test)]
@@ -267,6 +565,19 @@ mod tests {
 
     fn cluster() -> Cluster {
         Cluster::new(ClusterConfig::local(4))
+    }
+
+    /// Multi-executor topology so cross-executor shuffle bytes are nonzero.
+    fn multi_exec_cluster() -> Cluster {
+        let mut cfg = ClusterConfig::local(4);
+        cfg.executors_per_node = 4;
+        Cluster::new(cfg)
+    }
+
+    fn legacy_cluster() -> Cluster {
+        let mut cfg = ClusterConfig::local(4);
+        cfg.partitioner_aware = false;
+        Cluster::new(cfg)
     }
 
     fn rand_bm(n: usize, bs: usize, seed: u64) -> (Matrix, BlockMatrix) {
@@ -295,6 +606,23 @@ mod tests {
         let (a11, a12, a21, a22) = bm.split(&c).unwrap();
         let back = BlockMatrix::arrange(&c, a11, a12, a21, a22).unwrap();
         assert!(back.to_dense().unwrap().max_abs_diff(&dense) < 1e-15);
+    }
+
+    #[test]
+    fn split_and_arrange_are_narrow() {
+        let c = multi_exec_cluster();
+        let (dense, bm) = rand_bm(8, 2, 3);
+        let (a11, a12, a21, a22) = bm.split(&c).unwrap();
+        let back = BlockMatrix::arrange(&c, a11, a12, a21, a22).unwrap();
+        assert!(back.to_dense().unwrap().max_abs_diff(&dense) < 1e-15);
+        assert_eq!(back.rdd().partitioner(), Some(Partitioner::Grid { nblocks: 4 }));
+        let snap = c.metrics();
+        assert_eq!(snap.driver_collects(), 0);
+        for m in [method::BREAK_MAT, method::XY, method::ARRANGE] {
+            let s = snap.method(m).unwrap();
+            assert_eq!(s.shuffle_bytes, 0, "{m} shuffled");
+            assert_eq!(s.shuffle_stages, 0, "{m} paid an exchange");
+        }
     }
 
     #[test]
@@ -331,6 +659,7 @@ mod tests {
         let a = BlockMatrix::identity(8, 2).unwrap();
         let b = BlockMatrix::identity(8, 4).unwrap();
         assert!(a.multiply(&c, &NativeBackend, &b).is_err());
+        assert!(a.multiply_sub(&c, &NativeBackend, &a, &b).is_err());
     }
 
     #[test]
@@ -343,25 +672,138 @@ mod tests {
     }
 
     #[test]
+    fn narrow_subtract_records_zero_shuffle() {
+        let c = multi_exec_cluster();
+        let (da, a) = rand_bm(8, 2, 42);
+        let (db, b) = rand_bm(8, 2, 43);
+        let got = a.subtract(&c, &NativeBackend, &b).unwrap();
+        assert!(got.to_dense().unwrap().max_abs_diff(&da.sub(&db).unwrap()) < 1e-15);
+        let s = c.metrics();
+        assert_eq!(s.method("subtract").unwrap().shuffle_bytes, 0);
+        assert_eq!(s.method("subtract").unwrap().shuffle_stages, 0);
+        assert_eq!(s.driver_collects(), 0);
+    }
+
+    #[test]
+    fn unaligned_operand_pays_one_alignment_exchange() {
+        let c = multi_exec_cluster();
+        let (da, a) = rand_bm(8, 2, 44);
+        let (db, b) = rand_bm(8, 2, 45);
+        // Strip the partitioner and scramble placement: same blocks, but
+        // the substrate can no longer prove co-partitioning.
+        let mut blocks = b.rdd_clone().into_items();
+        blocks.reverse();
+        let n = blocks.len();
+        let scrambled = BlockMatrix::from_rdd(Rdd::from_items(blocks, n), b.nblocks(), b.block_size());
+        let got = a.subtract(&c, &NativeBackend, &scrambled).unwrap();
+        assert!(got.to_dense().unwrap().max_abs_diff(&da.sub(&db).unwrap()) < 1e-15);
+        let s = c.metrics().method("subtract").unwrap().clone();
+        assert_eq!(s.shuffle_stages, 1, "one side needed re-gridding");
+        assert!(s.shuffle_bytes > 0);
+    }
+
+    #[test]
+    fn copartitioned_multiply_shuffles_less_than_replicated() {
+        let c_new = multi_exec_cluster();
+        let c_old = multi_exec_cluster();
+        let (da, a) = rand_bm(16, 4, 46);
+        let (db, b) = rand_bm(16, 4, 47);
+        let want = matmul(&da, &db);
+        let got_new = a.multiply(&c_new, &NativeBackend, &b).unwrap();
+        let got_old = a.multiply_replicated(&c_old, &NativeBackend, &b).unwrap();
+        assert!(got_new.to_dense().unwrap().max_abs_diff(&want) < 1e-11);
+        assert!(got_old.to_dense().unwrap().max_abs_diff(&want) < 1e-11);
+        let new = c_new.metrics();
+        let old = c_old.metrics();
+        let new_bytes = new.method("multiply").unwrap().shuffle_bytes;
+        let old_bytes = old.method("multiply").unwrap().shuffle_bytes;
+        assert!(new_bytes > 0, "pairing shuffle still moves data");
+        assert!(
+            new_bytes < old_bytes,
+            "co-partitioned multiply must shuffle strictly less: {new_bytes} vs {old_bytes}"
+        );
+        assert_eq!(new.driver_collects(), 0);
+        assert!(old.driver_collects() > 0);
+        // The output is grid-partitioned for the next op.
+        assert_eq!(
+            got_new.rdd().partitioner(),
+            Some(Partitioner::Grid { nblocks: 4 })
+        );
+    }
+
+    #[test]
+    fn fused_multiply_sub_saves_a_stage_and_matches_composed() {
+        let c_fused = cluster();
+        let c_composed = cluster();
+        let (da, a) = rand_bm(8, 2, 48);
+        let (db, b) = rand_bm(8, 2, 49);
+        let (dd, d) = rand_bm(8, 2, 50);
+        let want = matmul(&da, &db).sub(&dd).unwrap();
+        let fused = a.multiply_sub(&c_fused, &NativeBackend, &b, &d).unwrap();
+        let composed = a
+            .multiply(&c_composed, &NativeBackend, &b)
+            .unwrap()
+            .subtract(&c_composed, &NativeBackend, &d)
+            .unwrap();
+        assert!(fused.to_dense().unwrap().max_abs_diff(&want) < 1e-11);
+        assert!(composed.to_dense().unwrap().max_abs_diff(&want) < 1e-11);
+        let sf = c_fused.metrics();
+        let sc = c_composed.metrics();
+        // The subtraction ran inside multiply's reduce: no subtract stage
+        // at all, and at least one fewer stage end to end.
+        assert!(sf.method("subtract").is_none());
+        assert!(
+            sf.stages().len() < sc.stages().len(),
+            "fused: {} stages, composed: {}",
+            sf.stages().len(),
+            sc.stages().len()
+        );
+        assert!(sf.total_shuffle_stages() <= sc.total_shuffle_stages());
+        assert!(sf.total_shuffle_bytes() <= sc.total_shuffle_bytes());
+    }
+
+    #[test]
+    fn legacy_mode_still_correct() {
+        // partitioner_aware = false exercises the original wide pipeline.
+        let c = legacy_cluster();
+        let (da, a) = rand_bm(8, 2, 51);
+        let (db, b) = rand_bm(8, 2, 52);
+        let prod = a.multiply(&c, &NativeBackend, &b).unwrap();
+        assert!(prod.to_dense().unwrap().max_abs_diff(&matmul(&da, &db)) < 1e-11);
+        let sub = a.subtract(&c, &NativeBackend, &b).unwrap();
+        assert!(sub.to_dense().unwrap().max_abs_diff(&da.sub(&db).unwrap()) < 1e-15);
+        let (a11, a12, a21, a22) = a.split(&c).unwrap();
+        let back = BlockMatrix::arrange(&c, a11, a12, a21, a22).unwrap();
+        assert!(back.to_dense().unwrap().max_abs_diff(&da) < 1e-15);
+        let t = a.transpose(&c);
+        assert!(t.to_dense().unwrap().max_abs_diff(&da.transpose()) < 1e-15);
+        assert!(c.metrics().driver_collects() > 0, "legacy path round-trips");
+    }
+
+    #[test]
     fn scalar_mul_matches_dense() {
         let c = cluster();
-        let (d, a) = rand_bm(8, 2, 50);
+        let (d, a) = rand_bm(8, 2, 53);
         let got = a.scalar_mul(&c, &NativeBackend, -2.5).unwrap();
         assert!(got.to_dense().unwrap().max_abs_diff(&d.scale(-2.5)) < 1e-15);
     }
 
     #[test]
-    fn transpose_matches_dense() {
-        let c = cluster();
-        let (d, a) = rand_bm(8, 4, 60);
+    fn transpose_matches_dense_and_stays_narrow() {
+        let c = multi_exec_cluster();
+        let (d, a) = rand_bm(8, 4, 54);
         let got = a.transpose(&c);
         assert!(got.to_dense().unwrap().max_abs_diff(&d.transpose()) < 1e-15);
+        assert_eq!(got.rdd().partitioner(), Some(Partitioner::Grid { nblocks: 2 }));
+        let s = c.metrics().method("transpose").unwrap().clone();
+        assert_eq!(s.shuffle_bytes, 0);
+        assert_eq!(s.shuffle_stages, 0);
     }
 
     #[test]
     fn multiply_by_identity_is_noop() {
         let c = cluster();
-        let (d, a) = rand_bm(8, 2, 70);
+        let (d, a) = rand_bm(8, 2, 55);
         let eye = BlockMatrix::identity(8, 2).unwrap();
         let got = a.multiply(&c, &NativeBackend, &eye).unwrap();
         assert!(got.to_dense().unwrap().max_abs_diff(&d) < 1e-14);
@@ -398,8 +840,10 @@ mod tests {
                 let mut rng = Rng::new(seed);
                 let da = Matrix::random_uniform(n, n, -1.0, 1.0, &mut rng);
                 let db = Matrix::random_uniform(n, n, -1.0, 1.0, &mut rng);
+                let dd = Matrix::random_uniform(n, n, -1.0, 1.0, &mut rng);
                 let a = BlockMatrix::from_dense(&da, bs).unwrap();
                 let b = BlockMatrix::from_dense(&db, bs).unwrap();
+                let d = BlockMatrix::from_dense(&dd, bs).unwrap();
                 let prod = a
                     .multiply(&c, &NativeBackend, &b)
                     .map_err(|e| e.to_string())?
@@ -417,6 +861,14 @@ mod tests {
                     .unwrap();
                 if sub.max_abs_diff(&da.sub(&db).unwrap()) > 1e-14 {
                     return Err("subtract mismatch".into());
+                }
+                let fused = a
+                    .multiply_sub(&c, &NativeBackend, &b, &d)
+                    .map_err(|e| e.to_string())?
+                    .to_dense()
+                    .unwrap();
+                if fused.max_abs_diff(&want.sub(&dd).unwrap()) > 1e-10 {
+                    return Err("multiply_sub mismatch".into());
                 }
                 Ok(())
             },

@@ -8,6 +8,7 @@
 //! spin gen     --n 512 --block-size 64 --out DIR [--generator …] [--seed N]
 //! spin cost    [--n 4096] [--b 8] [--cores 30] [--calibrate]
 //! spin exp     figure2|figure3|figure4|figure5|table3|all [--smoke|--full]
+//! spin bench   [--smoke] [--out BENCH_spin.json] [--seed N]
 //! spin info
 //! ```
 
@@ -24,6 +25,7 @@ use crate::error::{Result, SpinError};
 use crate::experiments::{self, Scale};
 use crate::runtime::Manifest;
 use crate::ser::bin;
+use crate::ser::json::Json;
 use crate::session::SpinSession;
 use crate::util::fmt;
 
@@ -47,6 +49,7 @@ fn dispatch(argv: Vec<String>) -> Result<()> {
         "gen" => cmd_gen(args),
         "cost" => cmd_cost(args),
         "exp" => cmd_exp(args),
+        "bench" => cmd_bench(args),
         "info" => cmd_info(args),
         "help" | "--help" | "-h" => {
             print!("{}", usage());
@@ -69,6 +72,7 @@ pub fn usage() -> String {
      \x20 gen      generate a matrix and write it as a block store\n\
      \x20 cost     print the Table-1 cost model (optionally calibrated)\n\
      \x20 exp      run a paper experiment: figure2|figure3|figure4|figure5|table3|all\n\
+     \x20 bench    invert the tracked size sweep, write BENCH_spin.json (perf trajectory)\n\
      \x20 info     show cluster config and artifact status\n\
      \n\
      COMMON FLAGS:\n\
@@ -349,6 +353,81 @@ fn cmd_exp(mut args: Args) -> Result<()> {
     }
 }
 
+/// `spin bench`: invert the tracked size sweep (n ∈ {64, 128, 256} at the
+/// paper's split counts b ∈ {2, 4, 8}) with every built-in algorithm and
+/// write a JSON trajectory file — virtual seconds, shuffle bytes, and the
+/// per-method Table-3 breakdown per run — so each PR's perf effect is
+/// diffable. `--smoke` shrinks the sweep for CI.
+fn cmd_bench(mut args: Args) -> Result<()> {
+    let cfg = cluster_config(&mut args)?;
+    let smoke = args.flag("--smoke");
+    let out = args
+        .flag_value("--out")?
+        .unwrap_or_else(|| "BENCH_spin.json".to_string());
+    let seed: u64 = args
+        .flag_value("--seed")?
+        .map(|v| v.parse().map_err(|_| SpinError::config("--seed needs an integer")))
+        .transpose()?
+        .unwrap_or(42);
+    args.finish()?;
+
+    let sizes: &[usize] = if smoke { &[64] } else { &[64, 128, 256] };
+    let splits: &[usize] = if smoke { &[2, 4] } else { &[2, 4, 8] };
+    let mut runs = Vec::new();
+    for &n in sizes {
+        for &b in splits {
+            if n / b < 2 {
+                continue;
+            }
+            for algo in ["spin", "lu"] {
+                let mut job = JobConfig::new(n, n / b);
+                job.seed = seed ^ (n as u64) ^ b as u64;
+                let r = experiments::run_inversion(&cfg, &job, algo)?;
+                println!(
+                    "bench {algo:<4} n={n:<4} b={b}: virtual {}  shuffled {}  \
+                     exchanges {}  residual {:.2e}",
+                    fmt::secs(r.virtual_secs),
+                    fmt::bytes(r.metrics.total_shuffle_bytes()),
+                    r.metrics.total_shuffle_stages(),
+                    r.residual
+                );
+                runs.push(Json::object(vec![
+                    ("algo", Json::str(algo)),
+                    ("n", Json::num(n as f64)),
+                    ("b", Json::num(b as f64)),
+                    ("block_size", Json::num((n / b) as f64)),
+                    ("virtual_secs", Json::num(r.virtual_secs)),
+                    ("real_secs", Json::num(r.real_secs)),
+                    ("residual", Json::num(r.residual)),
+                    (
+                        "total_shuffle_bytes",
+                        Json::num(r.metrics.total_shuffle_bytes() as f64),
+                    ),
+                    (
+                        "shuffle_stages",
+                        Json::num(r.metrics.total_shuffle_stages() as f64),
+                    ),
+                    (
+                        "driver_collects",
+                        Json::num(r.metrics.driver_collects() as f64),
+                    ),
+                    ("methods", r.metrics.to_json()),
+                ]));
+            }
+        }
+    }
+    let doc = Json::object(vec![
+        ("schema", Json::str("spin-bench-v1")),
+        ("scale", Json::str(if smoke { "smoke" } else { "default" })),
+        ("seed", Json::num(seed as f64)),
+        ("cluster", cfg.to_json()),
+        ("runs", Json::Array(runs)),
+    ]);
+    doc.to_file(std::path::Path::new(&out))?;
+    println!("wrote {out}");
+    Ok(())
+}
+
 fn cmd_info(mut args: Args) -> Result<()> {
     let cfg = cluster_config(&mut args)?;
     args.finish()?;
@@ -468,5 +547,25 @@ mod tests {
     #[test]
     fn info_runs() {
         assert_eq!(run(argv("info")), 0);
+    }
+
+    #[test]
+    fn bench_smoke_writes_trajectory_json() {
+        let path = std::env::temp_dir().join(format!("BENCH_spin_{}.json", std::process::id()));
+        let _ = std::fs::remove_file(&path);
+        let cmd = format!("bench --smoke --out {}", path.display());
+        assert_eq!(run(argv(&cmd)), 0);
+        let j = crate::ser::json::Json::from_file(&path).unwrap();
+        assert_eq!(j.get("schema").unwrap().as_str(), Some("spin-bench-v1"));
+        let runs = j.get("runs").unwrap().as_array().unwrap();
+        assert!(runs.len() >= 4, "smoke sweep covers spin+lu at two splits");
+        for r in runs {
+            assert!(r.get("virtual_secs").unwrap().as_f64().unwrap() > 0.0);
+            assert!(r.get("residual").unwrap().as_f64().unwrap() < 1e-8);
+            assert!(r.get("methods").unwrap().get("multiply").is_some());
+            // The partitioner-aware pipeline never round-trips the driver.
+            assert_eq!(r.get("driver_collects").unwrap().as_i64(), Some(0));
+        }
+        let _ = std::fs::remove_file(&path);
     }
 }

@@ -16,6 +16,9 @@ pub struct StageReport {
     pub method: String,
     /// Tasks in the stage (0 for pure shuffle exchanges).
     pub tasks: usize,
+    /// True for shuffle exchanges (the wide half of a wide op), false for
+    /// narrow stages — drives the per-method `shuffle_stages` count.
+    pub exchange: bool,
     /// Total CPU seconds across tasks (measured, real).
     pub compute_secs: f64,
     /// Virtual wall-clock seconds after list scheduling onto slots.
@@ -43,6 +46,10 @@ pub struct MethodStats {
     /// "wall clock execution time".
     pub virtual_secs: f64,
     pub shuffle_bytes: u64,
+    /// Shuffle exchanges this method paid for (0 when every stage ran
+    /// narrow) — the per-op "wide vs narrow" delta the partitioner-aware
+    /// dataflow is measured by.
+    pub shuffle_stages: usize,
 }
 
 /// Thread-safe metrics registry owned by a [`crate::cluster::Cluster`].
@@ -54,6 +61,9 @@ pub struct Metrics {
 struct MetricsInner {
     methods: BTreeMap<String, MethodStats>,
     stages: Vec<StageReport>,
+    /// Driver `collect` round-trips (materialize + re-parallelize). The
+    /// partitioner-aware op pipeline records zero of these.
+    driver_collects: usize,
 }
 
 impl Metrics {
@@ -71,13 +81,22 @@ impl Metrics {
         stats.compute_secs += report.compute_secs;
         stats.virtual_secs += report.makespan_secs + report.shuffle_secs;
         stats.shuffle_bytes += report.shuffle_bytes;
+        if report.exchange {
+            stats.shuffle_stages += 1;
+        }
         inner.stages.push(report);
+    }
+
+    /// Count one driver materialize-and-reparallelize round-trip.
+    pub fn record_driver_collect(&self) {
+        self.inner.lock().unwrap().driver_collects += 1;
     }
 
     pub fn reset(&self) {
         let mut inner = self.inner.lock().unwrap();
         inner.methods.clear();
         inner.stages.clear();
+        inner.driver_collects = 0;
     }
 
     pub fn snapshot(&self) -> MetricsSnapshot {
@@ -85,6 +104,7 @@ impl Metrics {
         MetricsSnapshot {
             methods: inner.methods.clone(),
             stages: inner.stages.clone(),
+            driver_collects: inner.driver_collects,
         }
     }
 }
@@ -100,11 +120,22 @@ impl Default for Metrics {
 pub struct MetricsSnapshot {
     methods: BTreeMap<String, MethodStats>,
     stages: Vec<StageReport>,
+    driver_collects: usize,
 }
 
 impl MetricsSnapshot {
     pub fn method(&self, name: &str) -> Option<&MethodStats> {
         self.methods.get(name)
+    }
+
+    /// Driver `collect` round-trips recorded in this window.
+    pub fn driver_collects(&self) -> usize {
+        self.driver_collects
+    }
+
+    /// Shuffle exchanges recorded in this window (across all methods).
+    pub fn total_shuffle_stages(&self) -> usize {
+        self.methods.values().map(|s| s.shuffle_stages).sum()
     }
 
     pub fn methods(&self) -> impl Iterator<Item = (&String, &MethodStats)> {
@@ -133,6 +164,7 @@ impl MetricsSnapshot {
             "compute",
             "virtual",
             "shuffled",
+            "exchanges",
         ]);
         for (name, s) in &self.methods {
             t.row(vec![
@@ -142,6 +174,7 @@ impl MetricsSnapshot {
                 fmt::secs(s.compute_secs),
                 fmt::secs(s.virtual_secs),
                 fmt::bytes(s.shuffle_bytes),
+                s.shuffle_stages.to_string(),
             ]);
         }
         t.render()
@@ -160,6 +193,7 @@ impl MetricsSnapshot {
                         ("compute_secs", Json::num(s.compute_secs)),
                         ("virtual_secs", Json::num(s.virtual_secs)),
                         ("shuffle_bytes", Json::num(s.shuffle_bytes as f64)),
+                        ("shuffle_stages", Json::num(s.shuffle_stages as f64)),
                     ]),
                 )
             })
@@ -176,6 +210,7 @@ mod tests {
         StageReport {
             method: method.into(),
             tasks,
+            exchange: false,
             compute_secs: compute,
             makespan_secs: makespan,
             shuffle_bytes: 0,
@@ -206,6 +241,7 @@ mod tests {
         m.record_stage(StageReport {
             method: "multiply".into(),
             tasks: 0,
+            exchange: true,
             compute_secs: 0.0,
             makespan_secs: 0.0,
             shuffle_bytes: 1024,
@@ -224,10 +260,35 @@ mod tests {
     fn reset_clears() {
         let m = Metrics::new();
         m.record_stage(stage("x", 1, 0.1, 0.1));
+        m.record_driver_collect();
         m.reset();
         let snap = m.snapshot();
         assert!(snap.method("x").is_none());
         assert!(snap.stages().is_empty());
+        assert_eq!(snap.driver_collects(), 0);
+    }
+
+    #[test]
+    fn counts_exchanges_and_driver_collects() {
+        let m = Metrics::new();
+        m.record_stage(stage("multiply", 4, 1.0, 0.5)); // narrow
+        m.record_stage(StageReport {
+            method: "multiply".into(),
+            tasks: 0,
+            exchange: true,
+            compute_secs: 0.0,
+            makespan_secs: 0.0,
+            shuffle_bytes: 64,
+            shuffle_total_bytes: 64,
+            shuffle_secs: 0.1,
+            task_durations: Vec::new(),
+        });
+        m.record_driver_collect();
+        m.record_driver_collect();
+        let snap = m.snapshot();
+        assert_eq!(snap.method("multiply").unwrap().shuffle_stages, 1);
+        assert_eq!(snap.total_shuffle_stages(), 1);
+        assert_eq!(snap.driver_collects(), 2);
     }
 
     #[test]

@@ -13,9 +13,37 @@
 //! See DESIGN.md §3.
 //!
 //! The API is deliberately Spark-shaped: [`Rdd`] (partitioned collection),
-//! narrow ops (`map`, `filter`, `union`), wide ops (`group_by_key`,
-//! `cogroup`, `reduce_by_key`) that shuffle with byte accounting, and a
-//! per-method [`Metrics`] registry that regenerates the paper's Table 3.
+//! narrow ops (`map`, `filter`, `union`, `zip_partitions`), wide ops
+//! (`group_by_key`, `cogroup`, `reduce_by_key`, `partition_*_by`) that
+//! shuffle with byte accounting, and a per-method [`Metrics`] registry
+//! that regenerates the paper's Table 3.
+//!
+//! ## The partitioner contract (narrow vs wide)
+//!
+//! An [`Rdd`] may carry a [`Partitioner`] — a promise that element
+//! placement is a deterministic function of the key (Spark's
+//! `HashPartitioner` / MLLib's `GridPartitioner`). The substrate exploits
+//! it exactly the way Spark does:
+//!
+//! * **Wide ops become no-ops on matching input.** `group_by_key`,
+//!   `reduce_by_key`, and `partition_*_by` skip the exchange entirely
+//!   (zero shuffle bytes, no exchange stage recorded) when the input
+//!   already carries the target partitioner — keys are then confined to
+//!   single partitions and the reduction runs narrow.
+//! * **Co-partitioned binary ops run narrow.** [`Cluster::zip_partitions`]
+//!   pairs equal-length partition lists task-by-task with no shuffle; two
+//!   RDDs sharing a partitioner can be keyed-joined inside each task.
+//! * **Explicit exchanges route to the consumer.** `partition_pairs_by`
+//!   takes an arbitrary key→partition function, so a producer can land
+//!   its shuffle output directly in the partition its *consumer* needs
+//!   (block-matmul routes `(i, j, k)` replicas by output index `(i, j)`,
+//!   which makes the summing reduce narrow and saves a whole shuffle).
+//!
+//! Ops that re-key elements drop the partitioner; ops that provably keep
+//! keys in place (e.g. a payload-only map) may re-stamp it with
+//! [`Rdd::with_partitioner`]. Driver round-trips ([`Cluster::collect`])
+//! are counted in [`MetricsSnapshot::driver_collects`]; the
+//! partitioner-aware block-matrix pipeline records none.
 
 mod executor;
 mod metrics;
@@ -25,7 +53,7 @@ mod shuffle;
 
 pub use executor::WorkerPool;
 pub use metrics::{MethodStats, Metrics, MetricsSnapshot, StageReport};
-pub use rdd::Rdd;
+pub use rdd::{Partitioner, Rdd};
 pub use scheduler::{list_schedule_makespan, VirtualClock};
 pub use shuffle::{executor_of_partition, hash_partition, Bytes};
 
@@ -106,16 +134,22 @@ impl Cluster {
         })
     }
 
-    /// Per-element filter; one task per partition; no shuffle.
+    /// Per-element filter; one task per partition; no shuffle. Keeps the
+    /// input's partitioner (elements never move, Spark does the same).
     pub fn filter<T: Send>(
         &self,
         method: &str,
         input: Rdd<T>,
         pred: impl Fn(&T) -> bool + Sync,
     ) -> Rdd<T> {
-        self.run_narrow(method, input, |part| {
+        let partitioner = input.partitioner();
+        let out = self.run_narrow(method, input, |part| {
             part.into_iter().filter(|x| pred(x)).collect()
-        })
+        });
+        match partitioner {
+            Some(p) => out.with_partitioner(p),
+            None => out,
+        }
     }
 
     /// Per-element flat map; one task per partition; no shuffle.
@@ -135,14 +169,117 @@ impl Cluster {
         a.union(b)
     }
 
-    /// Materialize all elements on the driver (Spark `collect`).
+    /// Materialize all elements on the driver (Spark `collect`). Counted
+    /// in [`MetricsSnapshot::driver_collects`] — the partitioner-aware op
+    /// pipeline is measured by recording zero of these.
     pub fn collect<T>(&self, rdd: Rdd<T>) -> Vec<T> {
+        self.metrics.record_driver_collect();
         rdd.into_items()
+    }
+
+    /// Zip two co-partitioned RDDs partition-by-partition: one task per
+    /// partition pair, **no shuffle** (Spark `zipPartitions`). The inputs
+    /// must have equal partition counts — callers align them first (a
+    /// no-op for RDDs that already share a partitioner).
+    pub fn zip_partitions<A: Send, B: Send, R: Send>(
+        &self,
+        method: &str,
+        left: Rdd<A>,
+        right: Rdd<B>,
+        f: impl Fn(Vec<A>, Vec<B>) -> Vec<R> + Sync,
+    ) -> Rdd<R> {
+        assert_eq!(
+            left.num_partitions(),
+            right.num_partitions(),
+            "zip_partitions needs co-partitioned inputs"
+        );
+        let tasks: Vec<(Vec<A>, Vec<B>)> = left
+            .into_partitions()
+            .into_iter()
+            .zip(right.into_partitions())
+            .collect();
+        self.run_narrow_tasks(method, tasks, |(a, b)| f(a, b))
+    }
+
+    /// Three-way [`zip_partitions`](Self::zip_partitions) — lets a fused
+    /// op (block-matmul's multiply−subtract) consume a third co-partitioned
+    /// operand inside the same narrow stage.
+    pub fn zip_partitions3<A: Send, B: Send, C: Send, R: Send>(
+        &self,
+        method: &str,
+        left: Rdd<A>,
+        mid: Rdd<B>,
+        right: Rdd<C>,
+        f: impl Fn(Vec<A>, Vec<B>, Vec<C>) -> Vec<R> + Sync,
+    ) -> Rdd<R> {
+        assert!(
+            left.num_partitions() == mid.num_partitions()
+                && left.num_partitions() == right.num_partitions(),
+            "zip_partitions3 needs co-partitioned inputs"
+        );
+        let tasks: Vec<((Vec<A>, Vec<B>), Vec<C>)> = left
+            .into_partitions()
+            .into_iter()
+            .zip(mid.into_partitions())
+            .zip(right.into_partitions())
+            .collect();
+        self.run_narrow_tasks(method, tasks, |((a, b), c)| f(a, b, c))
     }
 
     // ---------- wide transformations (shuffle) ----------
 
-    /// Group values by key into `nparts` output partitions.
+    /// Re-place elements under `partitioner` via `part_fn` (which must
+    /// realize that partitioner's placement — the stamp is the caller's
+    /// promise). A no-op (no stage, no bytes) when the input already
+    /// carries that partitioner; otherwise one counted shuffle exchange.
+    pub fn partition_items_by<T: Bytes>(
+        &self,
+        method: &str,
+        input: Rdd<T>,
+        partitioner: Partitioner,
+        part_fn: impl Fn(&T) -> usize,
+    ) -> Rdd<T> {
+        if input.partitioner() == Some(partitioner) {
+            return input;
+        }
+        let np = partitioner.nparts();
+        let (buckets, moved, total) = shuffle::route(
+            input,
+            np,
+            self.config.total_executors(),
+            part_fn,
+            T::size_bytes,
+        );
+        self.charge_shuffle(method, moved, total);
+        Rdd::from_partitions_with(buckets, partitioner)
+    }
+
+    /// [`partition_items_by`](Self::partition_items_by) for keyed pairs:
+    /// routes by key, counts value payload bytes.
+    pub fn partition_pairs_by<K, V: Bytes>(
+        &self,
+        method: &str,
+        input: Rdd<(K, V)>,
+        partitioner: Partitioner,
+        part_fn: impl Fn(&K) -> usize,
+    ) -> Rdd<(K, V)> {
+        if input.partitioner() == Some(partitioner) {
+            return input;
+        }
+        let np = partitioner.nparts();
+        let (buckets, moved, total) = shuffle::route(
+            input,
+            np,
+            self.config.total_executors(),
+            |(k, _)| part_fn(k),
+            |(_, v)| v.size_bytes(),
+        );
+        self.charge_shuffle(method, moved, total);
+        Rdd::from_partitions_with(buckets, partitioner)
+    }
+
+    /// Group values by key into `nparts` output partitions. Skips the
+    /// exchange when the input is already hash-partitioned onto `nparts`.
     pub fn group_by_key<K, V>(
         &self,
         method: &str,
@@ -153,10 +290,18 @@ impl Cluster {
         K: std::hash::Hash + Eq + Clone + Send,
         V: Send + Bytes,
     {
-        let buckets = self.shuffle_exchange(method, input, nparts);
+        let target = Partitioner::Hash {
+            nparts: nparts.max(1),
+        };
+        let buckets = if input.partitioner() == Some(target) {
+            input
+        } else {
+            self.shuffle_exchange(method, input, nparts)
+        };
         self.run_narrow(method, buckets, |part| {
             shuffle::group_pairs(part).into_iter().collect()
         })
+        .with_partitioner(target)
     }
 
     /// Co-group two keyed RDDs (the paper's `multiply` uses this to bring
@@ -194,7 +339,9 @@ impl Cluster {
         })
     }
 
-    /// Shuffle + per-key reduction (used by block-matmul's sum stage).
+    /// Shuffle + per-key reduction (used by the replicated block-matmul's
+    /// sum stage). Skips the exchange — a fully narrow reduce — when the
+    /// input is already hash-partitioned onto `nparts`.
     pub fn reduce_by_key<K, V>(
         &self,
         method: &str,
@@ -206,7 +353,14 @@ impl Cluster {
         K: std::hash::Hash + Eq + Clone + Send,
         V: Send + Bytes,
     {
-        let buckets = self.shuffle_exchange(method, input, nparts);
+        let target = Partitioner::Hash {
+            nparts: nparts.max(1),
+        };
+        let buckets = if input.partitioner() == Some(target) {
+            input
+        } else {
+            self.shuffle_exchange(method, input, nparts)
+        };
         self.run_narrow(method, buckets, |part| {
             shuffle::group_pairs(part)
                 .into_iter()
@@ -217,6 +371,7 @@ impl Cluster {
                 })
                 .collect()
         })
+        .with_partitioner(target)
     }
 
     // ---------- internals ----------
@@ -230,9 +385,19 @@ impl Cluster {
         input: Rdd<T>,
         per_partition: impl Fn(Vec<T>) -> Vec<U> + Sync,
     ) -> Rdd<U> {
-        let parts = input.into_partitions();
-        let ntasks = parts.len();
-        let (outputs, durations) = self.pool.run_tasks(parts, &per_partition);
+        self.run_narrow_tasks(method, input.into_partitions(), per_partition)
+    }
+
+    /// Narrow-stage core over arbitrary per-task inputs (a plain partition
+    /// for `run_narrow`, a tuple of zipped partitions for `zip_partitions`).
+    fn run_narrow_tasks<T: Send, U: Send>(
+        &self,
+        method: &str,
+        tasks: Vec<T>,
+        per_task: impl Fn(T) -> Vec<U> + Sync,
+    ) -> Rdd<U> {
+        let ntasks = tasks.len();
+        let (outputs, durations) = self.pool.run_tasks(tasks, &per_task);
         let makespan = list_schedule_makespan(&durations, self.slots());
         // Overlap any pending shuffle transfer with this stage's execution.
         let pending = std::mem::take(&mut *self.pending_shuffle.lock().unwrap());
@@ -240,6 +405,7 @@ impl Cluster {
         self.metrics.record_stage(StageReport {
             method: method.to_string(),
             tasks: ntasks,
+            exchange: false,
             compute_secs: durations.iter().sum(),
             makespan_secs: makespan,
             shuffle_bytes: 0,
@@ -248,6 +414,34 @@ impl Cluster {
             task_durations: durations,
         });
         Rdd::from_partitions(outputs)
+    }
+
+    /// Charge one shuffle exchange to the interconnect and the metrics.
+    /// Transfers happen in parallel across executor pairs; charge the
+    /// aggregate volume spread over the executor count, plus one latency.
+    /// The time is deferred: folded into the next narrow stage
+    /// (fetch/execute overlap).
+    fn charge_shuffle(&self, method: &str, moved_bytes: u64, total_bytes: u64) {
+        let executors = self.config.total_executors();
+        let secs = if moved_bytes == 0 {
+            0.0
+        } else {
+            self.config
+                .network
+                .transfer_secs((moved_bytes / executors.max(1) as u64).max(1))
+        };
+        *self.pending_shuffle.lock().unwrap() += secs;
+        self.metrics.record_stage(StageReport {
+            method: method.to_string(),
+            tasks: 0,
+            exchange: true,
+            compute_secs: 0.0,
+            makespan_secs: 0.0,
+            shuffle_bytes: moved_bytes,
+            shuffle_total_bytes: total_bytes,
+            shuffle_secs: secs,
+            task_durations: Vec::new(),
+        });
     }
 
     /// Exchange phase of a wide op: hash-partition elements into `nparts`
@@ -265,27 +459,7 @@ impl Cluster {
     {
         let executors = self.config.total_executors();
         let (buckets, moved_bytes, total_bytes) = shuffle::exchange(input, nparts, executors);
-        // Transfers happen in parallel across executor pairs; charge the
-        // aggregate volume spread over the executor count, plus one latency.
-        let secs = if moved_bytes == 0 {
-            0.0
-        } else {
-            self.config
-                .network
-                .transfer_secs((moved_bytes / executors.max(1) as u64).max(1))
-        };
-        // Deferred: folded into the next narrow stage (fetch/execute overlap).
-        *self.pending_shuffle.lock().unwrap() += secs;
-        self.metrics.record_stage(StageReport {
-            method: method.to_string(),
-            tasks: 0,
-            compute_secs: 0.0,
-            makespan_secs: 0.0,
-            shuffle_bytes: moved_bytes,
-            shuffle_total_bytes: total_bytes,
-            shuffle_secs: secs,
-            task_durations: Vec::new(),
-        });
+        self.charge_shuffle(method, moved_bytes, total_bytes);
         Rdd::from_partitions(buckets)
     }
 
@@ -300,6 +474,7 @@ impl Cluster {
         self.metrics.record_stage(StageReport {
             method: method.to_string(),
             tasks: 1,
+            exchange: false,
             compute_secs: dt,
             makespan_secs: dt,
             shuffle_bytes: 0,
@@ -444,6 +619,78 @@ mod tests {
         let _ = c.collect(c.group_by_key("shufl", rdd, 4));
         let snap = c.metrics();
         assert!(snap.method("shufl").unwrap().shuffle_bytes > 0);
+    }
+
+    #[test]
+    fn zip_partitions_pairs_tasks() {
+        let c = cluster(2);
+        let a = Rdd::from_partitions(vec![vec![1, 2], vec![3]]);
+        let b = Rdd::from_partitions(vec![vec![10], vec![20, 30]]);
+        let out = c.zip_partitions("zip", a, b, |xs: Vec<i32>, ys: Vec<i32>| {
+            vec![xs.iter().sum::<i32>() + ys.iter().sum::<i32>()]
+        });
+        assert_eq!(out.partitions(), &[vec![13], vec![53]]);
+        // Narrow: no exchange stage, no shuffle bytes.
+        let s = c.metrics();
+        assert_eq!(s.method("zip").unwrap().shuffle_stages, 0);
+        assert_eq!(s.method("zip").unwrap().shuffle_bytes, 0);
+    }
+
+    #[test]
+    #[should_panic(expected = "co-partitioned")]
+    fn zip_partitions_rejects_mismatched_layouts() {
+        let c = cluster(2);
+        let a = Rdd::from_partitions(vec![vec![1]]);
+        let b = Rdd::from_partitions(vec![vec![1], vec![2]]);
+        let _ = c.zip_partitions("zip", a, b, |xs: Vec<i32>, _: Vec<i32>| xs);
+    }
+
+    #[test]
+    fn reduce_by_key_skips_exchange_on_copartitioned_input() {
+        let mut cfg = ClusterConfig::local(2);
+        cfg.executors_per_node = 2;
+        let c = Cluster::new(cfg);
+        let pairs: Vec<(u32, i32)> = (0..40).map(|i| (i % 8, 1)).collect();
+        let rdd = c.parallelize(pairs, 4);
+        let once = c.reduce_by_key("first", rdd, 4, |a, b| a + b);
+        assert_eq!(once.partitioner(), Some(Partitioner::Hash { nparts: 4 }));
+        // Re-reducing the already-partitioned output is fully narrow.
+        let twice = c.reduce_by_key("second", once, 4, |a, b| a + b);
+        let snap = c.metrics();
+        assert_eq!(snap.method("first").unwrap().shuffle_stages, 1);
+        assert_eq!(snap.method("second").unwrap().shuffle_stages, 0);
+        assert_eq!(snap.method("second").unwrap().shuffle_bytes, 0);
+        let mut out = c.collect(twice);
+        out.sort_by_key(|(k, _)| *k);
+        assert_eq!(out.len(), 8);
+        assert!(out.iter().all(|&(_, v)| v == 5));
+    }
+
+    #[test]
+    fn partition_items_by_is_noop_on_matching_partitioner() {
+        let mut cfg = ClusterConfig::local(2);
+        cfg.executors_per_node = 2;
+        let c = Cluster::new(cfg);
+        let target = Partitioner::Hash { nparts: 4 };
+        let rdd = c.parallelize((0..32u64).collect(), 8);
+        let placed = c.partition_items_by("place", rdd, target, |x| hash_partition(x, 4));
+        assert_eq!(placed.partitioner(), Some(target));
+        assert!(c.metrics().method("place").unwrap().shuffle_bytes > 0);
+        // Second placement under the same partitioner: free.
+        let again = c.partition_items_by("replace", placed, target, |x| hash_partition(x, 4));
+        assert!(c.metrics().method("replace").is_none());
+        assert_eq!(again.len(), 32);
+    }
+
+    #[test]
+    fn collect_counts_driver_round_trips() {
+        let c = cluster(2);
+        assert_eq!(c.metrics().driver_collects(), 0);
+        let rdd = c.parallelize(vec![1, 2, 3], 2);
+        let _ = c.collect(rdd);
+        assert_eq!(c.metrics().driver_collects(), 1);
+        c.reset();
+        assert_eq!(c.metrics().driver_collects(), 0);
     }
 
     #[test]

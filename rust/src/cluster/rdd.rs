@@ -4,11 +4,55 @@
 //! the recursion driver (Algorithm 2) forces evaluation at every step
 //! anyway, and eager execution is what lets the substrate measure real
 //! per-task durations for the virtual-time model.
+//!
+//! Like Spark, an RDD may carry an optional [`Partitioner`]: a promise
+//! that element placement is a known deterministic function of the
+//! element's key. Two RDDs sharing the same partitioner are
+//! *co-partitioned*: keyed binary ops between them (`zip_partitions`,
+//! the pairing half of block-matmul, elementwise subtract) run as
+//! **narrow** stages — no shuffle bytes, no driver round-trip. The
+//! partitioner is metadata only; constructors that cannot prove placement
+//! (`from_items`, `from_partitions`, `union`) leave it `None`, and ops
+//! that re-key elements must either re-stamp it (when the key→partition
+//! map provably still holds) or drop it.
+
+/// How a keyed RDD's elements are placed into partitions.
+///
+/// Strictly, the stamp promises *placement*: which partition an element
+/// lives in is the partitioner's deterministic function. For most keyed
+/// RDDs that function is over the current key; a few producer/consumer
+/// pairs use it as a **layout-provenance marker** where placement follows
+/// the function over an *ancestor's* key (e.g. `break_mat` stamps its
+/// tagged, re-keyed output with the parent's grid so `quadrant` can move
+/// whole partitions; block-matmul stamps its `(i, j, k)` pairing streams
+/// with the output grid they were routed by). Only consume a stamp under
+/// the contract of the op that set it — see the stamping op's docs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Partitioner {
+    /// `hash_partition(key) % nparts` — Spark's `HashPartitioner`.
+    Hash { nparts: usize },
+    /// Block-grid placement for distributed matrices: block `(i, j)` of an
+    /// `nblocks × nblocks` grid lives alone in partition `i * nblocks + j`
+    /// (MLLib's `GridPartitioner` specialized to one block per partition —
+    /// the block is the task unit in the paper's cost model).
+    Grid { nblocks: usize },
+}
+
+impl Partitioner {
+    /// Number of partitions this placement function maps onto.
+    pub fn nparts(&self) -> usize {
+        match self {
+            Partitioner::Hash { nparts } => *nparts,
+            Partitioner::Grid { nblocks } => nblocks * nblocks,
+        }
+    }
+}
 
 /// A collection split into partitions; one partition = one task.
 #[derive(Debug, Clone)]
 pub struct Rdd<T> {
     partitions: Vec<Vec<T>>,
+    partitioner: Option<Partitioner>,
 }
 
 impl<T> Rdd<T> {
@@ -19,12 +63,49 @@ impl<T> Rdd<T> {
         for (i, item) in items.into_iter().enumerate() {
             partitions[i % nparts].push(item);
         }
-        Rdd { partitions }
+        Rdd {
+            partitions,
+            partitioner: None,
+        }
     }
 
     pub fn from_partitions(partitions: Vec<Vec<T>>) -> Self {
         assert!(!partitions.is_empty(), "need at least one partition");
-        Rdd { partitions }
+        Rdd {
+            partitions,
+            partitioner: None,
+        }
+    }
+
+    /// Wrap partitions whose layout is known to follow `partitioner`.
+    pub fn from_partitions_with(partitions: Vec<Vec<T>>, partitioner: Partitioner) -> Self {
+        assert_eq!(
+            partitions.len(),
+            partitioner.nparts(),
+            "partition count must match the partitioner"
+        );
+        Rdd {
+            partitions,
+            partitioner: Some(partitioner),
+        }
+    }
+
+    /// The placement promise, if any.
+    pub fn partitioner(&self) -> Option<Partitioner> {
+        self.partitioner
+    }
+
+    /// Stamp a partitioner the *caller* has proven holds (e.g. a
+    /// payload-only map that left every key in place). Panics if the
+    /// partition count contradicts the claim.
+    pub fn with_partitioner(mut self, partitioner: Partitioner) -> Self {
+        assert_eq!(
+            self.partitions.len(),
+            partitioner.nparts(),
+            "partition count must match the partitioner"
+        );
+        self.partitioner = Some(partitioner);
+        self
     }
 
     pub fn num_partitions(&self) -> usize {
@@ -47,16 +128,45 @@ impl<T> Rdd<T> {
         self.partitions
     }
 
-    /// Flatten to a single Vec (driver-side `collect`).
+    /// Flatten to a single Vec (driver-side `collect`). Prefer
+    /// [`crate::cluster::Cluster::collect`], which records the driver
+    /// round-trip in the metrics registry.
     pub fn into_items(self) -> Vec<T> {
         self.partitions.into_iter().flatten().collect()
     }
 
     /// Concatenate partition lists (Spark `union` keeps both lineages'
-    /// partitioning).
+    /// partitions but cannot promise a joint placement function).
     pub fn union(mut self, other: Rdd<T>) -> Rdd<T> {
         self.partitions.extend(other.partitions);
+        self.partitioner = None;
         self
+    }
+
+    /// Re-layout by moving *whole partitions*: output partition `t` is
+    /// source partition `sources[t]`. A 1-to-1 narrow dependency (Spark's
+    /// shuffle-free `coalesce` / partition pruning) — no element crosses
+    /// an executor, so no stage and no shuffle bytes are recorded. Each
+    /// source may be selected at most once; unselected partitions are
+    /// dropped. The partitioner is cleared (the caller re-stamps when the
+    /// new layout provably follows one).
+    pub fn select_partitions(self, sources: &[usize]) -> Rdd<T> {
+        assert!(!sources.is_empty(), "need at least one partition");
+        let mut slots: Vec<Option<Vec<T>>> = self.partitions.into_iter().map(Some).collect();
+        let partitions = sources
+            .iter()
+            .map(|&s| {
+                slots
+                    .get_mut(s)
+                    .unwrap_or_else(|| panic!("source partition {s} out of range"))
+                    .take()
+                    .unwrap_or_else(|| panic!("source partition {s} selected twice"))
+            })
+            .collect();
+        Rdd {
+            partitions,
+            partitioner: None,
+        }
     }
 
     pub fn iter(&self) -> impl Iterator<Item = &T> {
@@ -75,6 +185,7 @@ mod tests {
         assert_eq!(rdd.len(), 10);
         assert_eq!(rdd.partitions()[0], vec![0, 3, 6, 9]);
         assert_eq!(rdd.partitions()[1], vec![1, 4, 7]);
+        assert_eq!(rdd.partitioner(), None);
     }
 
     #[test]
@@ -87,18 +198,51 @@ mod tests {
     }
 
     #[test]
-    fn union_keeps_partitions() {
-        let a = Rdd::from_items(vec![1, 2], 2);
+    fn union_keeps_partitions_but_drops_partitioner() {
+        let a = Rdd::from_items(vec![1, 2], 2).with_partitioner(Partitioner::Hash { nparts: 2 });
         let b = Rdd::from_items(vec![3], 1);
         let u = a.union(b);
         assert_eq!(u.num_partitions(), 3);
         assert_eq!(u.len(), 3);
+        assert_eq!(u.partitioner(), None);
     }
 
     #[test]
     fn into_items_flattens_in_partition_order() {
         let rdd = Rdd::from_partitions(vec![vec![1, 2], vec![3]]);
         assert_eq!(rdd.into_items(), vec![1, 2, 3]);
+    }
+
+    #[test]
+    fn partitioner_metadata_round_trip() {
+        let p = Partitioner::Grid { nblocks: 2 };
+        assert_eq!(p.nparts(), 4);
+        let rdd = Rdd::from_partitions_with(vec![vec![1], vec![2], vec![3], vec![4]], p);
+        assert_eq!(rdd.partitioner(), Some(p));
+        assert_ne!(p, Partitioner::Hash { nparts: 4 });
+    }
+
+    #[test]
+    #[should_panic(expected = "partition count must match")]
+    fn partitioner_count_mismatch_panics() {
+        let _ = Rdd::from_items(vec![1, 2], 3).with_partitioner(Partitioner::Hash { nparts: 2 });
+    }
+
+    #[test]
+    fn select_partitions_moves_whole_partitions() {
+        let rdd = Rdd::from_partitions(vec![vec![1], vec![2], vec![3], vec![4]]);
+        let sel = rdd.select_partitions(&[2, 0]);
+        assert_eq!(sel.num_partitions(), 2);
+        assert_eq!(sel.partitions()[0], vec![3]);
+        assert_eq!(sel.partitions()[1], vec![1]);
+        assert_eq!(sel.partitioner(), None);
+    }
+
+    #[test]
+    #[should_panic(expected = "selected twice")]
+    fn select_partitions_rejects_reuse() {
+        let rdd = Rdd::from_partitions(vec![vec![1], vec![2]]);
+        let _ = rdd.select_partitions(&[0, 0]);
     }
 
     #[test]

@@ -104,21 +104,44 @@ where
     V: Bytes,
 {
     let nparts = nparts.max(1);
-    let mut buckets: Vec<Vec<(K, V)>> = (0..nparts).map(|_| Vec::new()).collect();
+    route(
+        input,
+        nparts,
+        executors,
+        |(k, _)| hash_partition(k, nparts),
+        |(_, v)| v.size_bytes(),
+    )
+}
+
+/// Generalized exchange: scatter elements of any type into `nparts`
+/// buckets with an arbitrary routing function, with the same byte
+/// accounting as [`exchange`]. This is what partitioner-aware ops use to
+/// route shuffle output directly to its *consumer's* partition (e.g.
+/// block-matmul routing `(i, j, k)` replicas by output index `(i, j)`,
+/// which turns the downstream reduce into a narrow stage).
+pub fn route<T>(
+    input: Rdd<T>,
+    nparts: usize,
+    executors: usize,
+    part_fn: impl Fn(&T) -> usize,
+    bytes_fn: impl Fn(&T) -> u64,
+) -> (Vec<Vec<T>>, u64, u64) {
+    let nparts = nparts.max(1);
+    let mut buckets: Vec<Vec<T>> = (0..nparts).map(|_| Vec::new()).collect();
     let mut moved = 0u64;
     let mut total = 0u64;
     for (src_part, part) in input.into_partitions().into_iter().enumerate() {
         let src_exec = executor_of_partition(src_part, executors);
-        for (k, v) in part {
-            let dst_part = hash_partition(&k, nparts);
+        for item in part {
+            let dst_part = part_fn(&item) % nparts;
             let dst_exec = executor_of_partition(dst_part, executors);
             if dst_part != src_part {
-                total += v.size_bytes();
+                total += bytes_fn(&item);
             }
             if dst_exec != src_exec {
-                moved += v.size_bytes();
+                moved += bytes_fn(&item);
             }
-            buckets[dst_part].push((k, v));
+            buckets[dst_part].push(item);
         }
     }
     (buckets, moved, total)
@@ -197,6 +220,20 @@ mod tests {
         assert!(total >= moved);
         assert!(moved > 0);
         assert_eq!(moved % 4, 0); // multiples of the i32 payload
+    }
+
+    #[test]
+    fn route_honors_custom_partition_function() {
+        let pairs: Vec<(u64, i32)> = (0..30).map(|i| (i, 1)).collect();
+        let rdd = Rdd::from_items(pairs, 3);
+        let (buckets, moved, total) = route(rdd, 5, 2, |(k, _)| (*k as usize) % 5, |_| 4);
+        assert_eq!(buckets.iter().map(Vec::len).sum::<usize>(), 30);
+        for (p, bucket) in buckets.iter().enumerate() {
+            for (k, _) in bucket {
+                assert_eq!(*k as usize % 5, p);
+            }
+        }
+        assert!(total >= moved);
     }
 
     #[test]

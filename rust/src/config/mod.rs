@@ -75,6 +75,11 @@ pub struct ClusterConfig {
     /// Report virtual (discrete-event) time instead of raw wall clock.
     /// See DESIGN.md §3 — this is the single-core testbed substitution.
     pub virtual_time: bool,
+    /// Partitioner-aware dataflow (default). When disabled, the block
+    /// ops fall back to the original replicated-cogroup multiply and
+    /// driver-side re-parallelization — kept so the shuffle/driver
+    /// round-trip savings stay measurable (and for ablation benches).
+    pub partitioner_aware: bool,
 }
 
 impl ClusterConfig {
@@ -92,6 +97,7 @@ impl ClusterConfig {
             artifacts_dir: PathBuf::from("artifacts"),
             worker_threads: 1,
             virtual_time: true,
+            partitioner_aware: true,
         }
     }
 
@@ -110,6 +116,7 @@ impl ClusterConfig {
             artifacts_dir: PathBuf::from("artifacts"),
             worker_threads: 1,
             virtual_time: true,
+            partitioner_aware: true,
         }
     }
 
@@ -158,6 +165,7 @@ impl ClusterConfig {
             ),
             ("worker_threads", Json::num(self.worker_threads as f64)),
             ("virtual_time", Json::Bool(self.virtual_time)),
+            ("partitioner_aware", Json::Bool(self.partitioner_aware)),
         ])
     }
 
@@ -208,6 +216,12 @@ impl ClusterConfig {
                     .as_bool()
                     .ok_or_else(|| SpinError::config("`virtual_time` must be a bool"))?,
             },
+            partitioner_aware: match v.get("partitioner_aware") {
+                None => base.partitioner_aware,
+                Some(j) => j
+                    .as_bool()
+                    .ok_or_else(|| SpinError::config("`partitioner_aware` must be a bool"))?,
+            },
         };
         cfg.validate()?;
         Ok(cfg)
@@ -243,6 +257,11 @@ impl ClusterConfig {
                 self.virtual_time = value
                     .parse::<bool>()
                     .map_err(|_| SpinError::config("virtual_time needs true|false"))?
+            }
+            "partitioner_aware" => {
+                self.partitioner_aware = value
+                    .parse::<bool>()
+                    .map_err(|_| SpinError::config("partitioner_aware needs true|false"))?
             }
             other => {
                 return Err(SpinError::config(format!("unknown cluster key `{other}`")));
@@ -494,6 +513,7 @@ mod tests {
         let mut c = ClusterConfig::paper();
         c.backend = BackendKind::Xla;
         c.worker_threads = 3;
+        c.partitioner_aware = false;
         let back = ClusterConfig::from_json(&c.to_json()).unwrap();
         assert_eq!(back, c);
     }

@@ -23,7 +23,12 @@ pub struct Table3Column {
     pub b: usize,
     /// Per-method virtual milliseconds, in [`METHODS`] order.
     pub method_ms: Vec<f64>,
+    /// Per-method cross-executor shuffle bytes, in [`METHODS`] order —
+    /// the partitioner-aware dataflow shows up here as zeros on every
+    /// narrow method, with only multiply's pairing round paying bytes.
+    pub method_shuffle_bytes: Vec<u64>,
     pub total_ms: f64,
+    pub total_shuffle_bytes: u64,
 }
 
 /// Run SPIN for each split count and collect the per-method breakdown.
@@ -42,12 +47,19 @@ pub fn run(cluster: &ClusterConfig, n: usize, max_b: usize, seed: u64) -> Result
                     .unwrap_or(0.0)
             })
             .collect();
+        let method_shuffle_bytes: Vec<u64> = METHODS
+            .iter()
+            .map(|m| r.metrics.method(m).map(|s| s.shuffle_bytes).unwrap_or(0))
+            .collect();
         let total_ms = r.virtual_secs * 1e3;
-        log::info!("table3 n={n} b={b}: total {total_ms:.1} ms");
+        let total_shuffle_bytes = r.metrics.total_shuffle_bytes();
+        log::info!("table3 n={n} b={b}: total {total_ms:.1} ms, shuffled {total_shuffle_bytes} B");
         cols.push(Table3Column {
             b,
             method_ms,
+            method_shuffle_bytes,
             total_ms,
+            total_shuffle_bytes,
         });
     }
     Ok(cols)
@@ -65,11 +77,22 @@ pub fn render(n: usize, cols: &[Table3Column]) -> Result<String> {
     let mut total = vec!["Total".to_string()];
     total.extend(cols.iter().map(|c| format!("{:.0}", c.total_ms)));
     t.row(total);
+    let mut shuffled = vec!["ShuffledKB".to_string()];
+    shuffled.extend(
+        cols.iter()
+            .map(|c| format!("{:.0}", c.total_shuffle_bytes as f64 / 1024.0)),
+    );
+    t.row(shuffled);
 
     let mut csv = Table::new(header);
     for (mi, m) in METHODS.iter().enumerate() {
         let mut row = vec![m.to_string()];
         row.extend(cols.iter().map(|c| format!("{}", c.method_ms[mi])));
+        csv.row(row);
+    }
+    for (mi, m) in METHODS.iter().enumerate() {
+        let mut row = vec![format!("{m}_shuffle_bytes")];
+        row.extend(cols.iter().map(|c| format!("{}", c.method_shuffle_bytes[mi])));
         csv.row(row);
     }
     let path = report::write_csv("table3", &csv)?;
@@ -138,7 +161,15 @@ mod tests {
         assert_eq!(cols.len(), 3); // b = 2, 4, 8
         for c in &cols {
             assert_eq!(c.method_ms.len(), METHODS.len());
+            assert_eq!(c.method_shuffle_bytes.len(), METHODS.len());
             assert!(c.total_ms > 0.0);
+            // Narrow methods shuffle nothing under the partitioner-aware
+            // dataflow; only multiply pays an exchange.
+            for (mi, m) in METHODS.iter().enumerate() {
+                if *m != "multiply" {
+                    assert_eq!(c.method_shuffle_bytes[mi], 0, "{m} shuffled");
+                }
+            }
         }
         // leafNode falls with b.
         assert!(cols[0].method_ms[0] > cols.last().unwrap().method_ms[0]);

@@ -38,11 +38,15 @@ pub fn matmul(a: &Matrix, b: &Matrix) -> Matrix {
     c
 }
 
-/// C = D + A·B without an extra allocation for the sum.
-pub fn matmul_acc(a: &Matrix, b: &Matrix, d: &Matrix) -> Matrix {
+/// C = D + A·B, accumulating **in place** into `d`'s buffer. Takes `d`
+/// by value so there really is no extra allocation — the block-matmul
+/// reduce chains `acc = matmul_acc(a_k, b_k, acc)` over k with a single
+/// buffer. Callers that still need `D` afterwards clone at the call site,
+/// where the cost is visible.
+pub fn matmul_acc(a: &Matrix, b: &Matrix, d: Matrix) -> Matrix {
     assert_eq!(d.rows(), a.rows());
     assert_eq!(d.cols(), b.cols());
-    let mut c = d.clone();
+    let mut c = d;
     matmul_into(a, b, &mut c);
     c
 }
@@ -156,9 +160,27 @@ mod tests {
         let a = rand_mat(&mut rng, 10, 12);
         let b = rand_mat(&mut rng, 12, 8);
         let d = rand_mat(&mut rng, 10, 8);
-        let got = matmul_acc(&a, &b, &d);
+        let got = matmul_acc(&a, &b, d.clone());
         let want = matmul(&a, &b).add(&d).unwrap();
         assert!(got.max_abs_diff(&want) < 1e-12);
+    }
+
+    #[test]
+    fn matmul_acc_chains_over_k() {
+        // The block-matmul reduce pattern: one accumulator, k in-place adds.
+        let mut rng = Rng::new(5);
+        let terms: Vec<(Matrix, Matrix)> = (0..4)
+            .map(|_| (rand_mat(&mut rng, 6, 5), rand_mat(&mut rng, 5, 7)))
+            .collect();
+        let mut acc = matmul(&terms[0].0, &terms[0].1);
+        for (a, b) in &terms[1..] {
+            acc = matmul_acc(a, b, acc);
+        }
+        let mut want = Matrix::zeros(6, 7);
+        for (a, b) in &terms {
+            want = want.add(&matmul(a, b)).unwrap();
+        }
+        assert!(acc.max_abs_diff(&want) < 1e-12);
     }
 
     #[test]

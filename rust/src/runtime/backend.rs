@@ -19,8 +19,10 @@ pub trait BlockKernels: Sync {
     /// C = A·B.
     fn matmul(&self, a: &Matrix, b: &Matrix) -> Result<Matrix>;
 
-    /// C = D + A·B (block-matmul reduce step).
-    fn matmul_acc(&self, a: &Matrix, b: &Matrix, d: &Matrix) -> Result<Matrix>;
+    /// C = D + A·B (block-matmul reduce step). `d` is taken by value and
+    /// serves as the accumulator — native kernels add into its buffer
+    /// in place, so chaining over k allocates nothing per term.
+    fn matmul_acc(&self, a: &Matrix, b: &Matrix, d: Matrix) -> Result<Matrix>;
 
     /// C = A·B − D (SPIN's fused Schur step `V = IV − A22`).
     fn neg_matmul_sub(&self, a: &Matrix, b: &Matrix, d: &Matrix) -> Result<Matrix>;
@@ -81,7 +83,7 @@ impl BlockKernels for NativeBackend {
         Ok(linalg::matmul(a, b))
     }
 
-    fn matmul_acc(&self, a: &Matrix, b: &Matrix, d: &Matrix) -> Result<Matrix> {
+    fn matmul_acc(&self, a: &Matrix, b: &Matrix, d: Matrix) -> Result<Matrix> {
         Ok(linalg::matmul_acc(a, b, d))
     }
 
@@ -139,7 +141,7 @@ mod tests {
         let a = Matrix::random_uniform(8, 8, -1.0, 1.0, &mut rng);
         let b = Matrix::random_uniform(8, 8, -1.0, 1.0, &mut rng);
         let d = Matrix::random_uniform(8, 8, -1.0, 1.0, &mut rng);
-        let acc = NativeBackend.matmul_acc(&a, &b, &d).unwrap();
+        let acc = NativeBackend.matmul_acc(&a, &b, d.clone()).unwrap();
         let want = matmul(&a, &b).add(&d).unwrap();
         assert!(acc.max_abs_diff(&want) < 1e-13);
         let nms = NativeBackend.neg_matmul_sub(&a, &b, &d).unwrap();

@@ -106,11 +106,18 @@ impl BlockKernels for XlaBackend {
         }
     }
 
-    fn matmul_acc(&self, a: &Matrix, b: &Matrix, d: &Matrix) -> Result<Matrix> {
+    fn matmul_acc(&self, a: &Matrix, b: &Matrix, d: Matrix) -> Result<Matrix> {
+        // Inlined run_or_fallback: the PJRT branch borrows `d` for the
+        // input buffer, the native branch consumes it as the accumulator.
         let bs = a.rows();
-        self.run_or_fallback("matmul_acc", bs, &[a, b, d], &[], || {
+        if self.with_engine(|e| Ok(e.supports("matmul_acc", bs)))? {
+            self.executed.fetch_add(1, Ordering::Relaxed);
+            self.with_engine(|e| Ok(e.run("matmul_acc", bs, &[a, b, &d], &[])?.remove(0)))
+        } else {
+            log::warn!("no artifact for `matmul_acc` b={bs}; using native fallback");
+            self.fallbacks.fetch_add(1, Ordering::Relaxed);
             NativeBackend.matmul_acc(a, b, d)
-        })
+        }
     }
 
     fn neg_matmul_sub(&self, a: &Matrix, b: &Matrix, d: &Matrix) -> Result<Matrix> {

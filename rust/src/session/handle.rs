@@ -81,6 +81,22 @@ impl<'s> DistMatrix<'s> {
         Ok(DistMatrix::new(self.session, out))
     }
 
+    /// C = A·B − D, fused: the subtraction runs inside the multiply's
+    /// reduce stage (one shuffle total — the shape of SPIN's Schur step).
+    pub fn multiply_sub(
+        &self,
+        other: &DistMatrix<'_>,
+        d: &DistMatrix<'_>,
+    ) -> Result<DistMatrix<'s>> {
+        let out = self.inner.multiply_sub(
+            self.session.cluster(),
+            self.session.kernels(),
+            other.block_matrix(),
+            d.block_matrix(),
+        )?;
+        Ok(DistMatrix::new(self.session, out))
+    }
+
     /// C = A − B.
     pub fn subtract(&self, other: &DistMatrix<'_>) -> Result<DistMatrix<'s>> {
         let out = self.inner.subtract(
@@ -212,6 +228,23 @@ mod tests {
                 .max_abs_diff(&da.transpose())
                 < 1e-15
         );
+    }
+
+    #[test]
+    fn multiply_sub_matches_composed_ops() {
+        let s = session();
+        let a = s.random_seeded(16, 4, 9).unwrap();
+        let b = s.random_seeded(16, 4, 10).unwrap();
+        let d = s.random_seeded(16, 4, 11).unwrap();
+        let fused = a.multiply_sub(&b, &d).unwrap().to_dense().unwrap();
+        let composed = a
+            .multiply(&b)
+            .unwrap()
+            .subtract(&d)
+            .unwrap()
+            .to_dense()
+            .unwrap();
+        assert!(fused.max_abs_diff(&composed) < 1e-11);
     }
 
     #[test]

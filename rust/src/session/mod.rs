@@ -19,8 +19,13 @@
 //! ```
 //!
 //! Matrix handles ([`DistMatrix`]) are borrowed from the session, so every
-//! distributed method (`inverse`, `multiply`, `solve`, `pseudo_inverse`, …)
-//! runs on the session's cluster and is attributed to its metrics registry.
+//! distributed method (`inverse`, `multiply`, `multiply_sub`, `solve`,
+//! `pseudo_inverse`, …) runs on the session's cluster and is attributed to
+//! its metrics registry. Handles stay grid-partitioned across operations
+//! (the cluster's partitioner contract), so chained calls never
+//! re-shuffle for alignment and never round-trip the driver —
+//! `session.metrics().driver_collects()` stays 0 and per-method
+//! `shuffle_bytes`/`shuffle_stages` expose what each op really moved.
 
 mod handle;
 

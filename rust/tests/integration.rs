@@ -114,6 +114,110 @@ fn virtual_time_accumulates_and_resets_across_runs() {
     assert_eq!(session.virtual_secs(), 0.0);
 }
 
+// ---------------- partitioner-aware dataflow (acceptance) ----------------
+
+/// The PR's headline claim, measured end to end at the paper-relevant
+/// geometry (n = 256, block 32, b = 8): the partitioner-aware pipeline
+/// inverts with strictly fewer shuffle bytes and zero driver
+/// materializations versus the original replicated/cogroup dataflow
+/// (still reachable via `partitioner_aware = false`), at unchanged
+/// numerical quality.
+#[test]
+fn partitioner_aware_spin_cuts_shuffle_and_driver_roundtrips() {
+    let mut job = JobConfig::new(256, 32);
+    job.seed = 0xACE5;
+    let a = BlockMatrix::random(&job).unwrap();
+    let dense = a.to_dense().unwrap();
+
+    let run = |aware: bool| {
+        let mut cfg = ClusterConfig::paper();
+        cfg.partitioner_aware = aware;
+        let cluster = Cluster::new(cfg);
+        let inv = spin::algos::SpinAlgorithm
+            .invert(&cluster, &NativeBackend, &a, &job)
+            .unwrap();
+        let resid = inverse_residual(&dense, &inv.to_dense().unwrap());
+        (cluster.metrics(), resid)
+    };
+    let (aware, resid_aware) = run(true);
+    let (legacy, resid_legacy) = run(false);
+
+    assert!(resid_aware < 1e-8, "aware residual {resid_aware:.3e}");
+    assert!(resid_legacy < 1e-8, "legacy residual {resid_legacy:.3e}");
+    assert!(
+        aware.total_shuffle_bytes() < legacy.total_shuffle_bytes(),
+        "shuffle bytes must drop: aware {} vs legacy {}",
+        aware.total_shuffle_bytes(),
+        legacy.total_shuffle_bytes()
+    );
+    assert!(
+        aware.total_shuffle_stages() < legacy.total_shuffle_stages(),
+        "exchange count must drop: aware {} vs legacy {}",
+        aware.total_shuffle_stages(),
+        legacy.total_shuffle_stages()
+    );
+    assert_eq!(
+        aware.driver_collects(),
+        0,
+        "partitioner-aware recursion must never round-trip the driver"
+    );
+    assert!(
+        legacy.driver_collects() > 0,
+        "legacy path re-parallelizes through the driver"
+    );
+    // Narrow ops really are narrow: zero shuffle bytes outside multiply.
+    for m in ["subtract", "breakMat", "xy", "arrange", "scalar", "leafNode"] {
+        if let Some(s) = aware.method(m) {
+            assert_eq!(s.shuffle_bytes, 0, "{m} shuffled");
+            assert_eq!(s.shuffle_stages, 0, "{m} paid an exchange");
+        }
+    }
+}
+
+/// `multiply_sub` is genuinely fused: versus composed multiply+subtract
+/// it runs fewer stages and no separate subtract method at all, while the
+/// legacy dataflow paid a whole extra shuffle for the composition.
+#[test]
+fn fused_schur_step_runs_fewer_stages() {
+    let session_fused = paper_session();
+    let session_composed = paper_session();
+    fn mk(
+        s: &SpinSession,
+    ) -> (
+        spin::session::DistMatrix<'_>,
+        spin::session::DistMatrix<'_>,
+        spin::session::DistMatrix<'_>,
+    ) {
+        (
+            s.random_seeded(64, 16, 0x601).unwrap(),
+            s.random_seeded(64, 16, 0x602).unwrap(),
+            s.random_seeded(64, 16, 0x603).unwrap(),
+        )
+    }
+    let (a, b, d) = mk(&session_fused);
+    let fused = a.multiply_sub(&b, &d).unwrap().to_dense().unwrap();
+    let (a2, b2, d2) = mk(&session_composed);
+    let composed = a2
+        .multiply(&b2)
+        .unwrap()
+        .subtract(&d2)
+        .unwrap()
+        .to_dense()
+        .unwrap();
+    assert!(fused.max_abs_diff(&composed) < 1e-10);
+
+    let sf = session_fused.metrics();
+    let sc = session_composed.metrics();
+    assert!(sf.method("subtract").is_none(), "subtract folded into multiply");
+    assert!(
+        sf.stages().len() < sc.stages().len(),
+        "fused {} stages vs composed {}",
+        sf.stages().len(),
+        sc.stages().len()
+    );
+    assert!(sf.total_shuffle_bytes() <= sc.total_shuffle_bytes());
+}
+
 // ---------------- new workloads: solve and pseudo-inverse ----------------
 
 #[test]
