@@ -52,7 +52,8 @@ fn main() -> spin::Result<()> {
     for algo in ["spin", "lu"] {
         session.reset_clock(); // fresh measurement window per algorithm
         let t0 = std::time::Instant::now();
-        let inv = a.inverse_with(algo)?;
+        let inv = a.inverse_with(algo)?; // lazy plan…
+        inv.collect()?; // …materialized here, inside the timed window
         let real = t0.elapsed().as_secs_f64();
         let resid = a.inverse_residual(&inv)?;
         println!(

@@ -27,7 +27,7 @@ fn main() {
                 .expect("session");
             let a = session.random(n, bs).expect("gen");
             let inv = a.inverse().expect("invert");
-            std::hint::black_box(inv.block_matrix());
+            std::hint::black_box(inv.block_matrix().expect("materialize"));
             let stages = session.metrics().stages().len();
             (session.virtual_secs(), stages)
         };

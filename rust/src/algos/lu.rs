@@ -10,6 +10,16 @@
 //! 3. the final full-size product `A⁻¹ = U⁻¹·L⁻¹` (the paper's
 //!    "additional cost", 7·(n/2)³ in their count).
 //!
+//! Like SPIN, every recursion level's arithmetic is expressed as a lazy
+//! [`MatExpr`] plan and lowered by [`PlanExec`] — the baseline rides the
+//! same plan layer and partitioner-aware substrate, so the SPIN-vs-LU
+//! comparison measures algorithm structure, not dataflow overhead. Note
+//! the Schur update here is `S = A22 − L21·U12` (`D − A·B`), which does
+//! **not** match the `A·B − D` fusion pattern — the optimizer correctly
+//! leaves it unfused, exactly as the eager code did. Laziness has one
+//! free win: the triangular-inverse levels never evaluate their
+//! structurally-zero quadrant, so its extraction pass is skipped.
+//!
 //! At the leaves the baseline pays 3 serial O((n/b)³) kernels per block
 //! position (LU factor + two triangular inverses) versus SPIN's single
 //! leaf inversion — the "9×" leaf-cost gap the paper cites collapses to
@@ -19,37 +29,14 @@
 //! Block-level LU uses no pivoting (pivoting breaks the block recursion;
 //! Liu et al. make the same restriction) — the workload generators keep
 //! every principal minor nonsingular.
-//!
-//! The baseline rides the same partitioner-aware substrate as SPIN: every
-//! intermediate here stays grid-partitioned, so its `subtract`s and
-//! `arrange`s are narrow and each `multiply` pays exactly one shuffle
-//! round — the SPIN-vs-LU comparison measures algorithm structure, not
-//! dataflow overhead.
 
 use crate::blockmatrix::ops_method as method;
 use crate::blockmatrix::BlockMatrix;
 use crate::cluster::Cluster;
 use crate::config::JobConfig;
 use crate::error::{Result, SpinError};
+use crate::plan::{MatExpr, PlanExec};
 use crate::runtime::BlockKernels;
-
-/// Invert a distributed matrix via block-recursive LU (the baseline).
-///
-/// Deprecated shim over the algorithm registry entry: build a
-/// [`crate::session::SpinSession`] and call
-/// `session.invert_with("lu", &m)` instead.
-#[deprecated(
-    since = "0.2.0",
-    note = "use SpinSession::invert_with(\"lu\", …) or register algos::LuAlgorithm in an AlgorithmRegistry"
-)]
-pub fn lu_inverse_distributed(
-    cluster: &Cluster,
-    kernels: &dyn BlockKernels,
-    a: &BlockMatrix,
-    job: &JobConfig,
-) -> Result<BlockMatrix> {
-    lu_inverse_distributed_impl(cluster, kernels, a, job)
-}
 
 /// Block-recursive LU inversion implementation entry — reached through
 /// [`crate::algos::LuAlgorithm`] in the registry.
@@ -69,7 +56,8 @@ pub(crate) fn lu_inverse_distributed_impl(
     let li = invert_block_lower(cluster, kernels, &l, job)?;
     let ui = invert_block_upper(cluster, kernels, &u, job)?;
     // Additional cost: the full-size product U⁻¹ · L⁻¹.
-    let inv = ui.multiply(cluster, kernels, &li)?;
+    let exec = PlanExec::new(cluster, kernels);
+    let inv = exec.eval(&MatExpr::source(ui).multiply(&MatExpr::source(li))?)?;
     if job.residual_check {
         let resid = crate::linalg::inverse_residual(&a.to_dense()?, &inv.to_dense()?);
         if resid > 1e-8 {
@@ -82,7 +70,9 @@ pub(crate) fn lu_inverse_distributed_impl(
 }
 
 /// Recursive block LU: A = L·U (L unit-lower per leaf convention of the
-/// serial kernel, U upper).
+/// serial kernel, U upper). One plan executor per level; the shared
+/// `U12`/`L21` expressions are evaluated once (for the Schur update) and
+/// their memoized values feed the L/U assembly plans.
 fn block_lu(
     cluster: &Cluster,
     kernels: &dyn BlockKernels,
@@ -102,24 +92,27 @@ fn block_lu(
         return Ok((l, u));
     }
 
-    let (a11, a12, a21, a22) = a.split(cluster)?;
+    let exec = PlanExec::new(cluster, kernels);
+    let ae = MatExpr::source(a.clone());
+    let (a11e, a12e, a21e, a22e) = ae.split()?;
 
+    let a11 = exec.eval(&a11e)?;
     let (l11, u11) = block_lu(cluster, kernels, &a11, job)?;
     let l11i = invert_block_lower(cluster, kernels, &l11, job)?;
     let u11i = invert_block_upper(cluster, kernels, &u11, job)?;
 
-    let u12 = l11i.multiply(cluster, kernels, &a12)?; //  U12 = L11⁻¹·A12
-    let l21 = a21.multiply(cluster, kernels, &u11i)?; //  L21 = A21·U11⁻¹
-    let prod = l21.multiply(cluster, kernels, &u12)?; //  L21·U12
-    let s = a22.subtract(cluster, kernels, &prod)?; //    S = A22 − L21·U12
+    let u12e = MatExpr::source(l11i).multiply(&a12e)?; // U12 = L11⁻¹·A12
+    let l21e = a21e.multiply(&MatExpr::source(u11i))?; // L21 = A21·U11⁻¹
+    let se = a22e.subtract(&l21e.multiply(&u12e)?)?; //  S = A22 − L21·U12
+    let s = exec.eval(&se)?;
     let (l22, u22) = block_lu(cluster, kernels, &s, job)?;
 
-    let half = l11.nblocks();
-    let bs = l11.block_size();
-    let zero = BlockMatrix::zeros(half, bs)?;
-    let l = BlockMatrix::arrange(cluster, l11, zero.clone(), l21, l22)?;
-    let u = BlockMatrix::arrange(cluster, u11, u12, zero, u22)?;
-    Ok((l, u))
+    let half = a11.nblocks();
+    let bs = a11.block_size();
+    let zero = MatExpr::source(BlockMatrix::zeros(half, bs)?);
+    let le = MatExpr::arrange(&MatExpr::source(l11), &zero, &l21e, &MatExpr::source(l22))?;
+    let ue = MatExpr::arrange(&MatExpr::source(u11), &u12e, &zero, &MatExpr::source(u22))?;
+    Ok((exec.eval(&le)?, exec.eval(&ue)?))
 }
 
 /// Recursive inversion of a block lower-triangular matrix:
@@ -134,15 +127,25 @@ fn invert_block_lower(
     if b == 1 {
         return l.map_blocks_try(cluster, method::LEAF_NODE, |m| kernels.invert_lower(m));
     }
-    let (l11, _, l21, l22) = l.split(cluster)?;
-    let li11 = invert_block_lower(cluster, kernels, &l11, job)?;
-    let li22 = invert_block_lower(cluster, kernels, &l22, job)?;
-    let mid = li22.multiply(cluster, kernels, &l21)?;
-    let c21 = mid
-        .multiply(cluster, kernels, &li11)?
-        .scalar_mul(cluster, kernels, -1.0)?;
-    let zero = BlockMatrix::zeros(li11.nblocks(), li11.block_size())?;
-    BlockMatrix::arrange(cluster, li11, zero, c21, li22)
+    let exec = PlanExec::new(cluster, kernels);
+    let le = MatExpr::source(l.clone());
+    // The upper-right quadrant is structurally zero and never evaluated.
+    let (l11e, _zero12, l21e, l22e) = le.split()?;
+    let li11 = MatExpr::source(invert_block_lower(
+        cluster,
+        kernels,
+        &exec.eval(&l11e)?,
+        job,
+    )?);
+    let li22 = MatExpr::source(invert_block_lower(
+        cluster,
+        kernels,
+        &exec.eval(&l22e)?,
+        job,
+    )?);
+    let c21 = li22.multiply(&l21e)?.multiply(&li11)?.scale(-1.0);
+    let zero = MatExpr::source(BlockMatrix::zeros(l11e.nblocks(), l11e.block_size())?);
+    exec.eval(&MatExpr::arrange(&li11, &zero, &c21, &li22)?)
 }
 
 /// Recursive inversion of a block upper-triangular matrix:
@@ -157,15 +160,25 @@ fn invert_block_upper(
     if b == 1 {
         return u.map_blocks_try(cluster, method::LEAF_NODE, |m| kernels.invert_upper(m));
     }
-    let (u11, u12, _, u22) = u.split(cluster)?;
-    let ui11 = invert_block_upper(cluster, kernels, &u11, job)?;
-    let ui22 = invert_block_upper(cluster, kernels, &u22, job)?;
-    let mid = ui11.multiply(cluster, kernels, &u12)?;
-    let c12 = mid
-        .multiply(cluster, kernels, &ui22)?
-        .scalar_mul(cluster, kernels, -1.0)?;
-    let zero = BlockMatrix::zeros(ui11.nblocks(), ui11.block_size())?;
-    BlockMatrix::arrange(cluster, ui11, c12, zero, ui22)
+    let exec = PlanExec::new(cluster, kernels);
+    let ue = MatExpr::source(u.clone());
+    // The lower-left quadrant is structurally zero and never evaluated.
+    let (u11e, u12e, _zero21, u22e) = ue.split()?;
+    let ui11 = MatExpr::source(invert_block_upper(
+        cluster,
+        kernels,
+        &exec.eval(&u11e)?,
+        job,
+    )?);
+    let ui22 = MatExpr::source(invert_block_upper(
+        cluster,
+        kernels,
+        &exec.eval(&u22e)?,
+        job,
+    )?);
+    let c12 = ui11.multiply(&u12e)?.multiply(&ui22)?.scale(-1.0);
+    let zero = MatExpr::source(BlockMatrix::zeros(u11e.nblocks(), u11e.block_size())?);
+    exec.eval(&MatExpr::arrange(&ui11, &c12, &zero, &ui22)?)
 }
 
 #[cfg(test)]
@@ -262,5 +275,19 @@ mod tests {
             lu_leaf >= 3 * spin_leaf,
             "LU leaf stages {lu_leaf} < 3× SPIN's {spin_leaf}"
         );
+    }
+
+    #[test]
+    fn schur_update_is_not_miss_fused() {
+        // S = A22 − L21·U12 is D − A·B, not A·B − D: the fusion rule must
+        // not fire on it (a fused multiply_sub would compute the wrong
+        // sign). The metrics prove the subtract stage survives.
+        let c = cluster();
+        let job = JobConfig::new(16, 4);
+        let a = BlockMatrix::random(&job).unwrap();
+        let _ = block_lu(&c, &NativeBackend, &a, &job).unwrap();
+        let snap = c.metrics();
+        assert!(snap.method("subtract").is_some());
+        assert!(!snap.plan_nodes().iter().any(|p| p.op == "multiply_sub"));
     }
 }

@@ -4,76 +4,20 @@
 //! [`InversionAlgorithm`] registry new schemes plug into.
 //!
 //! Dispatch goes through a name-keyed [`AlgorithmRegistry`] (default
-//! entries: `spin`, `lu`); the old closed [`Algorithm`] enum and the free
-//! functions remain as `#[deprecated]` shims.
+//! entries: `spin`, `lu`). Both built-ins express each recursion level as
+//! a lazy [`crate::plan::MatExpr`] plan and lower it through
+//! [`crate::plan::PlanExec`]; an algorithm can additionally expose its
+//! level plan for `explain` via [`InversionAlgorithm::plan`].
+//!
+//! The deprecated closed `Algorithm` enum and the `spin_inverse` /
+//! `lu_inverse_distributed` free-function shims were removed in PR 3
+//! after their scheduled two-PR deprecation window — the registry is the
+//! only dispatch path.
 
 mod lu;
 mod registry;
 mod serial;
 mod spin;
 
-#[allow(deprecated)]
-pub use lu::lu_inverse_distributed;
-use lu::lu_inverse_distributed_impl;
 pub use registry::{AlgorithmRegistry, InversionAlgorithm, LuAlgorithm, SpinAlgorithm};
 pub use serial::{lu_inverse_serial, strassen_inverse_serial};
-#[allow(deprecated)]
-pub use spin::spin_inverse;
-use spin::spin_inverse_impl;
-
-use crate::blockmatrix::BlockMatrix;
-use crate::cluster::Cluster;
-use crate::config::JobConfig;
-use crate::error::Result;
-use crate::runtime::BlockKernels;
-
-/// Which distributed inversion algorithm to run.
-///
-/// Deprecated shim: the closed enum cannot express externally registered
-/// schemes. Use [`AlgorithmRegistry`] / [`crate::session::SpinSession`]
-/// instead; `--algo` on the CLI already resolves through the registry.
-#[deprecated(
-    since = "0.2.0",
-    note = "use AlgorithmRegistry (algos::registry) or SpinSession::invert_with; the enum cannot name externally registered algorithms"
-)]
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
-pub enum Algorithm {
-    /// Strassen-scheme recursion (the paper's SPIN, Algorithm 2).
-    Spin,
-    /// Block-recursive LU baseline (Liu et al. 2016).
-    Lu,
-}
-
-#[allow(deprecated)]
-impl Algorithm {
-    pub fn parse(s: &str) -> Result<Self> {
-        match s {
-            "spin" => Ok(Algorithm::Spin),
-            "lu" => Ok(Algorithm::Lu),
-            other => Err(crate::error::SpinError::config(format!(
-                "unknown algorithm `{other}` (expected spin|lu)"
-            ))),
-        }
-    }
-
-    pub fn name(&self) -> &'static str {
-        match self {
-            Algorithm::Spin => "spin",
-            Algorithm::Lu => "lu",
-        }
-    }
-
-    /// Dispatch to the distributed implementation.
-    pub fn invert(
-        &self,
-        cluster: &Cluster,
-        kernels: &dyn BlockKernels,
-        a: &BlockMatrix,
-        job: &JobConfig,
-    ) -> Result<BlockMatrix> {
-        match self {
-            Algorithm::Spin => spin_inverse_impl(cluster, kernels, a, job),
-            Algorithm::Lu => lu_inverse_distributed_impl(cluster, kernels, a, job),
-        }
-    }
-}

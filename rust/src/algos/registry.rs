@@ -15,6 +15,7 @@ use crate::blockmatrix::BlockMatrix;
 use crate::cluster::Cluster;
 use crate::config::JobConfig;
 use crate::error::{Result, SpinError};
+use crate::plan::MatExpr;
 use crate::runtime::BlockKernels;
 
 /// One distributed inversion scheme.
@@ -39,6 +40,15 @@ pub trait InversionAlgorithm: Send + Sync {
         a: &BlockMatrix,
         job: &JobConfig,
     ) -> Result<BlockMatrix>;
+
+    /// One recursion level of this scheme over `a`, as a lazy plan — the
+    /// hook behind `explain()` / `spin explain`. `Ok(None)` (the default)
+    /// means the scheme does not expose a plan (e.g. its level is a pure
+    /// leaf at this geometry).
+    fn plan(&self, a: &MatExpr) -> Result<Option<MatExpr>> {
+        let _ = a;
+        Ok(None)
+    }
 }
 
 /// The paper's SPIN recursion (Algorithm 2).
@@ -61,6 +71,13 @@ impl InversionAlgorithm for SpinAlgorithm {
         job: &JobConfig,
     ) -> Result<BlockMatrix> {
         super::spin::spin_inverse_impl(cluster, kernels, a, job)
+    }
+
+    fn plan(&self, a: &MatExpr) -> Result<Option<MatExpr>> {
+        if a.nblocks() < 2 {
+            return Ok(None); // single-block leaf: no distributed level
+        }
+        super::spin::level_plan(a).map(Some)
     }
 }
 

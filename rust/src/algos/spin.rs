@@ -1,42 +1,54 @@
-//! SPIN — Algorithm 2: the distributed Strassen-scheme inversion.
+//! SPIN — Algorithm 2: the distributed Strassen-scheme inversion,
+//! expressed one recursion level at a time as a lazy [`MatExpr`] plan.
 //!
-//! Per recursion level (grid edge `b` → `b/2`): 1 `breakMat`, 4 `xy`,
-//! 2 recursive inversions (A11 and the Schur complement V), 6 distributed
-//! `multiply` — one of which is the **fused** Schur step
-//! `V = A21·III − A22` ([`BlockMatrix::multiply_sub`]), whose subtraction
-//! runs inside the multiply's reduce stage (accounted under `multiply`,
-//! exactly as the paper folds it into multiply in Table 3) — 1 standalone
-//! `subtract` (C11), 1 `scalarMul`, 1 `arrange`. At `b = 1` the single
-//! block is inverted serially on one worker (the `leafNode` map).
+//! Per level (grid edge `b` → `b/2`) the plan built by [`level_plan`]
+//! contains: 4 quadrant extractions (sharing 1 `breakMat` pass), two
+//! `invert` nodes (A11 and the Schur complement V — lowered by recursing
+//! into this module), 6 multiplies, 1 subtract, 1 scalarMul, 1 arrange.
+//! The plan **optimizer** — not this file — turns the written
+//! `multiply` + `subtract` Schur step `V = A21·III − A22` into the fused
+//! [`crate::blockmatrix::BlockMatrix::multiply_sub`] stage (PR 2's hand
+//! fusion, now a rewrite rule), and its CSE pass marks the shared
+//! intermediates (`I`, `III`, `VI` are each consumed by several nodes) as
+//! automatic cache points. With `plan_optimizer = false` the same plan
+//! lowers unfused — the measurable "before" arm of the Table-3 comparison.
 //!
-//! Our extension (off by default, `JobConfig::fuse_leaf_2x2`): when the
-//! recursion reaches a 2×2 grid, run the whole Algorithm-1 step as one
-//! fused kernel (`strassen_2x2` artifact) — eliminating seven distributed
-//! stages at the recursion base.
+//! At `b = 1` the single block is inverted serially on one worker (the
+//! `leafNode` map). Our extension (off by default,
+//! `JobConfig::fuse_leaf_2x2`): when the recursion reaches a 2×2 grid, run
+//! the whole Algorithm-1 step as one fused kernel (`strassen_2x2`
+//! artifact) — eliminating seven distributed stages at the recursion base.
 
-use crate::blockmatrix::{Block, BlockMatrix};
 use crate::blockmatrix::ops_method as method;
+use crate::blockmatrix::{Block, BlockMatrix};
 use crate::cluster::Cluster;
 use crate::config::JobConfig;
 use crate::error::{Result, SpinError};
+use crate::plan::{MatExpr, PlanExec};
 use crate::runtime::BlockKernels;
 
-/// Invert a distributed matrix with the SPIN recursion.
-///
-/// Deprecated shim over the algorithm registry entry: build a
-/// [`crate::session::SpinSession`] and call `matrix.inverse()` /
-/// `session.invert_with("spin", &m)` instead.
-#[deprecated(
-    since = "0.2.0",
-    note = "use SpinSession::invert_with(\"spin\", …) or register algos::SpinAlgorithm in an AlgorithmRegistry"
-)]
-pub fn spin_inverse(
-    cluster: &Cluster,
-    kernels: &dyn BlockKernels,
-    a: &BlockMatrix,
-    job: &JobConfig,
-) -> Result<BlockMatrix> {
-    spin_inverse_impl(cluster, kernels, a, job)
+/// `Invert` nodes inside a SPIN level plan resolve to this scheme name —
+/// the recursion itself, not a registry entry (a registry round-trip
+/// would re-run the top-level residual check per level).
+pub(crate) const SPIN_RECURSE: &str = "spin";
+
+/// One SPIN recursion level (Algorithm 2's else-branch) as a lazy plan
+/// over `a`. Written in the paper's unfused notation; fusion, CSE and the
+/// rest are the optimizer's job.
+pub(crate) fn level_plan(a: &MatExpr) -> Result<MatExpr> {
+    let (a11, a12, a21, a22) = a.split()?;
+
+    let i = a11.invert(SPIN_RECURSE); //        I   = A11⁻¹
+    let ii = a21.multiply(&i)?; //              II  = A21·I
+    let iii = i.multiply(&a12)?; //             III = I·A12
+    let v = a21.multiply(&iii)?.subtract(&a22)?; // V = A21·III − A22 (optimizer fuses)
+    let vi = v.invert(SPIN_RECURSE); //         VI  = V⁻¹
+    let c12 = iii.multiply(&vi)?; //            C12 = III·VI
+    let c21 = vi.multiply(&ii)?; //             C21 = VI·II
+    let vii = iii.multiply(&c21)?; //           VII = III·C21
+    let c11 = i.subtract(&vii)?; //             C11 = I − VII
+    let c22 = vi.scale(-1.0); //                C22 = −VI
+    MatExpr::arrange(&c11, &c12, &c21, &c22)
 }
 
 /// SPIN (Algorithm 2) implementation entry — reached through
@@ -69,6 +81,11 @@ pub(crate) fn spin_inverse_impl(
     Ok(inv)
 }
 
+/// Materialize one recursion level: build the level plan, optimize it per
+/// the cluster's `plan_optimizer` setting, and evaluate it — `invert`
+/// nodes recurse back into this function. The recursion boundary is the
+/// plan's materialization point: a level needs its children's *values*
+/// (their block payloads), not their expressions.
 fn inverse_rec(
     cluster: &Cluster,
     kernels: &dyn BlockKernels,
@@ -89,21 +106,12 @@ fn inverse_rec(
         return fused_2x2(cluster, kernels, a, job);
     }
 
-    // ---- else-part: one Strassen level.
-    let (a11, a12, a21, a22) = a.split(cluster)?;
-
-    let i = inverse_rec(cluster, kernels, &a11, job)?; //  I  = A11⁻¹
-    let ii = a21.multiply(cluster, kernels, &i)?; //        II  = A21·I
-    let iii = i.multiply(cluster, kernels, &a12)?; //       III = I·A12
-    let v = a21.multiply_sub(cluster, kernels, &iii, &a22)?; // V = A21·III − A22 (fused Schur)
-    let vi = inverse_rec(cluster, kernels, &v, job)?; //    VI  = V⁻¹
-    let c12 = iii.multiply(cluster, kernels, &vi)?; //      C12 = III·VI
-    let c21 = vi.multiply(cluster, kernels, &ii)?; //       C21 = VI·II
-    let vii = iii.multiply(cluster, kernels, &c21)?; //     VII = III·C21
-    let c11 = i.subtract(cluster, kernels, &vii)?; //       C11 = I − VII
-    let c22 = vi.scalar_mul(cluster, kernels, -1.0)?; //    C22 = −VI
-
-    BlockMatrix::arrange(cluster, c11, c12, c21, c22)
+    // ---- else-part: one Strassen level as a plan.
+    let plan = level_plan(&MatExpr::source(a.clone()))?;
+    let exec = PlanExec::new(cluster, kernels);
+    exec.eval_with(&plan, &|_algo: &str, m: &BlockMatrix| {
+        inverse_rec(cluster, kernels, m, job)
+    })
 }
 
 /// Collect the four leaf blocks and run the fused Algorithm-1 step as one
@@ -241,5 +249,45 @@ mod tests {
         }
         // leafNode count: recursion tree has 2^depth leaves for b=8 -> 8.
         assert_eq!(snap.method("leafNode").unwrap().calls, 8);
+        // The plan executor stamped per-node windows, with the Schur fusion
+        // applied by the optimizer (not hand-wired here).
+        assert!(snap.plan_nodes().iter().any(|p| p.op == "multiply_sub"));
+        assert!(snap.plan_nodes().iter().any(|p| p.cse_cached));
+    }
+
+    #[test]
+    fn unfused_plan_mode_matches_and_pays_extra_stages() {
+        let mut cfg = ClusterConfig::local(4);
+        cfg.plan_optimizer = false;
+        let c_raw = Cluster::new(cfg);
+        let c_opt = cluster();
+        let job = JobConfig::new(32, 8);
+        let a = BlockMatrix::random(&job).unwrap();
+        let opt = spin_inverse_impl(&c_opt, &NativeBackend, &a, &job).unwrap();
+        let raw = spin_inverse_impl(&c_raw, &NativeBackend, &a, &job).unwrap();
+        // multiply_sub is bit-identical to multiply + subtract.
+        assert_eq!(
+            opt.to_dense()
+                .unwrap()
+                .max_abs_diff(&raw.to_dense().unwrap()),
+            0.0,
+            "fused and unfused plans must agree bit-for-bit"
+        );
+        let (mo, mr) = (c_opt.metrics(), c_raw.metrics());
+        assert!(
+            mo.stages().len() < mr.stages().len(),
+            "fusion must delete stages: {} vs {}",
+            mo.stages().len(),
+            mr.stages().len()
+        );
+        assert!(mo.plan_nodes().iter().any(|p| p.op == "multiply_sub"));
+        assert!(
+            !mr.plan_nodes().iter().any(|p| p.op == "multiply_sub"),
+            "optimizer off must leave the plan unfused"
+        );
+        // The raw plan pays one extra standalone subtract per fused level.
+        assert!(
+            mr.method("subtract").unwrap().calls > mo.method("subtract").unwrap().calls
+        );
     }
 }

@@ -8,7 +8,8 @@
 //! spin gen     --n 512 --block-size 64 --out DIR [--generator …] [--seed N]
 //! spin cost    [--n 4096] [--b 8] [--cores 30] [--calibrate]
 //! spin exp     figure2|figure3|figure4|figure5|table3|all [--smoke|--full]
-//! spin bench   [--smoke] [--out BENCH_spin.json] [--seed N]
+//! spin bench   [--smoke] [--out BENCH_spin.json] [--seed N] [--schema-baseline FILE]
+//! spin explain [--n 256 --block-size 32] [--algo spin] [--set plan_optimizer=false]
 //! spin info
 //! ```
 
@@ -50,6 +51,7 @@ fn dispatch(argv: Vec<String>) -> Result<()> {
         "cost" => cmd_cost(args),
         "exp" => cmd_exp(args),
         "bench" => cmd_bench(args),
+        "explain" => cmd_explain(args),
         "info" => cmd_info(args),
         "help" | "--help" | "-h" => {
             print!("{}", usage());
@@ -73,6 +75,8 @@ pub fn usage() -> String {
      \x20 cost     print the Table-1 cost model (optionally calibrated)\n\
      \x20 exp      run a paper experiment: figure2|figure3|figure4|figure5|table3|all\n\
      \x20 bench    invert the tracked size sweep, write BENCH_spin.json (perf trajectory)\n\
+     \x20 explain  print an algorithm's optimized recursion-level plan (fusion, CSE caches,\n\
+     \x20          predicted shuffle stages per node)\n\
      \x20 info     show cluster config and artifact status\n\
      \n\
      COMMON FLAGS:\n\
@@ -369,6 +373,7 @@ fn cmd_bench(mut args: Args) -> Result<()> {
         .map(|v| v.parse().map_err(|_| SpinError::config("--seed needs an integer")))
         .transpose()?
         .unwrap_or(42);
+    let schema_baseline = args.flag_value("--schema-baseline")?;
     args.finish()?;
 
     let sizes: &[usize] = if smoke { &[64] } else { &[64, 128, 256] };
@@ -425,6 +430,107 @@ fn cmd_bench(mut args: Args) -> Result<()> {
     ]);
     doc.to_file(std::path::Path::new(&out))?;
     println!("wrote {out}");
+    if let Some(bp) = schema_baseline {
+        check_bench_schema(&Json::from_file(std::path::Path::new(&bp))?, &doc)?;
+        println!("schema + deterministic-counter gate vs {bp}: OK");
+    }
+    Ok(())
+}
+
+/// `spin explain`: print the optimized plan of one recursion level of the
+/// chosen algorithm — which rewrites fired (the fused `multiply_sub`
+/// Schur step, CSE cache points) and the predicted shuffle stages per
+/// node. `--set plan_optimizer=false` shows the unoptimized plan.
+fn cmd_explain(mut args: Args) -> Result<()> {
+    let cfg = cluster_config(&mut args)?;
+    let job = job_config(&mut args)?;
+    let algo = args
+        .flag_value("--algo")?
+        .unwrap_or_else(|| "spin".to_string());
+    args.finish()?;
+    let session = SpinSession::builder()
+        .cluster_config(cfg)
+        .job_defaults(&job)
+        .build()?;
+    print!("{}", session.explain_invert(&algo, job.n, job.block_size)?);
+    Ok(())
+}
+
+/// Deterministic schema + perf gate for `spin bench`: the measured output
+/// must keep the committed baseline's shape, and — where the baseline
+/// carries runs — must not regress the deterministic dataflow counters
+/// (shuffle exchanges, driver collects). Timing fields are intentionally
+/// NOT compared: they are host-dependent.
+fn check_bench_schema(baseline: &Json, measured: &Json) -> Result<()> {
+    let bschema = baseline.get("schema").and_then(Json::as_str).unwrap_or("<missing>");
+    let mschema = measured.get("schema").and_then(Json::as_str).unwrap_or("<missing>");
+    if bschema != mschema {
+        return Err(SpinError::config(format!(
+            "bench schema drift: baseline `{bschema}` vs measured `{mschema}`"
+        )));
+    }
+    let bobj = baseline
+        .as_object()
+        .ok_or_else(|| SpinError::config("bench baseline is not a JSON object"))?;
+    let mobj = measured
+        .as_object()
+        .ok_or_else(|| SpinError::config("bench output is not a JSON object"))?;
+    for key in mobj.keys() {
+        if !bobj.contains_key(key) {
+            return Err(SpinError::config(format!(
+                "bench schema drift: new top-level key `{key}` missing from the committed baseline \
+                 (update BENCH_spin.json deliberately)"
+            )));
+        }
+    }
+    for key in bobj.keys() {
+        if key.as_str() != "note" && !mobj.contains_key(key) {
+            return Err(SpinError::config(format!(
+                "bench schema drift: baseline key `{key}` disappeared from the measured output"
+            )));
+        }
+    }
+    let empty: [Json; 0] = [];
+    let bruns = baseline.get("runs").and_then(Json::as_array).unwrap_or(&empty);
+    let mruns = measured.get("runs").and_then(Json::as_array).unwrap_or(&empty);
+    // Per-run record shape.
+    if let (Some(brun), Some(mrun)) = (bruns.first(), mruns.first()) {
+        let bkeys: Vec<&String> = brun.as_object().map(|m| m.keys().collect()).unwrap_or_default();
+        let mkeys: Vec<&String> = mrun.as_object().map(|m| m.keys().collect()).unwrap_or_default();
+        if bkeys != mkeys {
+            return Err(SpinError::config(format!(
+                "bench schema drift: run-record keys changed (baseline {bkeys:?} vs measured {mkeys:?})"
+            )));
+        }
+    }
+    // Deterministic perf counters, matched by (algo, n, b).
+    for brun in bruns {
+        let key = (
+            brun.get("algo").and_then(Json::as_str),
+            brun.get("n").and_then(Json::as_i64),
+            brun.get("b").and_then(Json::as_i64),
+        );
+        let (Some(algo), Some(n), Some(b)) = key else { continue };
+        for mrun in mruns {
+            if mrun.get("algo").and_then(Json::as_str) != Some(algo)
+                || mrun.get("n").and_then(Json::as_i64) != Some(n)
+                || mrun.get("b").and_then(Json::as_i64) != Some(b)
+            {
+                continue;
+            }
+            for counter in ["shuffle_stages", "driver_collects"] {
+                let bv = brun.get(counter).and_then(Json::as_f64);
+                let mv = mrun.get(counter).and_then(Json::as_f64);
+                if let (Some(bv), Some(mv)) = (bv, mv) {
+                    if mv > bv {
+                        return Err(SpinError::config(format!(
+                            "bench perf regression: {algo} n={n} b={b}: {counter} rose {bv} -> {mv}"
+                        )));
+                    }
+                }
+            }
+        }
+    }
     Ok(())
 }
 
@@ -547,6 +653,101 @@ mod tests {
     #[test]
     fn info_runs() {
         assert_eq!(run(argv("info")), 0);
+    }
+
+    #[test]
+    fn explain_prints_fused_plan() {
+        assert_eq!(run(argv("explain --n 64 --block-size 16")), 0);
+        assert_eq!(run(argv("explain --n 64 --block-size 16 --algo lu")), 0);
+        // Unknown algorithm / bad geometry fail.
+        assert_eq!(run(argv("explain --n 64 --block-size 16 --algo qr")), 1);
+        assert_eq!(run(argv("explain --n 48 --block-size 16")), 1);
+        // Unoptimized rendering is reachable via the cluster override.
+        assert_eq!(
+            run(argv("explain --n 64 --block-size 16 --set plan_optimizer=false")),
+            0
+        );
+    }
+
+    #[test]
+    fn bench_schema_gate_accepts_stub_and_rejects_drift() {
+        use crate::ser::json::Json;
+        // The committed stub baseline (schema fields, no runs) passes.
+        let stub = Json::from_file(std::path::Path::new(concat!(
+            env!("CARGO_MANIFEST_DIR"),
+            "/../BENCH_spin.json"
+        )))
+        .unwrap();
+        let measured = Json::object(vec![
+            ("schema", Json::str("spin-bench-v1")),
+            ("scale", Json::str("smoke")),
+            ("seed", Json::num(42.0)),
+            ("cluster", Json::object(vec![])),
+            ("runs", Json::Array(vec![])),
+        ]);
+        check_bench_schema(&stub, &measured).unwrap();
+        // Schema string drift fails.
+        let drift = Json::object(vec![
+            ("schema", Json::str("spin-bench-v2")),
+            ("scale", Json::str("smoke")),
+            ("seed", Json::num(42.0)),
+            ("cluster", Json::object(vec![])),
+            ("runs", Json::Array(vec![])),
+        ]);
+        assert!(check_bench_schema(&stub, &drift).is_err());
+        // A new top-level key fails (schema must be updated deliberately).
+        let extra = Json::object(vec![
+            ("schema", Json::str("spin-bench-v1")),
+            ("scale", Json::str("smoke")),
+            ("seed", Json::num(42.0)),
+            ("cluster", Json::object(vec![])),
+            ("runs", Json::Array(vec![])),
+            ("surprise", Json::Bool(true)),
+        ]);
+        assert!(check_bench_schema(&stub, &extra).is_err());
+        // Deterministic counter regression fails.
+        let run_rec = |stages: f64| {
+            Json::object(vec![
+                ("algo", Json::str("spin")),
+                ("n", Json::num(64.0)),
+                ("b", Json::num(2.0)),
+                ("shuffle_stages", Json::num(stages)),
+                ("driver_collects", Json::num(0.0)),
+            ])
+        };
+        let base = Json::object(vec![
+            ("schema", Json::str("spin-bench-v1")),
+            ("runs", Json::Array(vec![run_rec(6.0)])),
+        ]);
+        let ok = Json::object(vec![
+            ("schema", Json::str("spin-bench-v1")),
+            ("runs", Json::Array(vec![run_rec(6.0)])),
+        ]);
+        let worse = Json::object(vec![
+            ("schema", Json::str("spin-bench-v1")),
+            ("runs", Json::Array(vec![run_rec(8.0)])),
+        ]);
+        check_bench_schema(&base, &ok).unwrap();
+        let err = check_bench_schema(&base, &worse).unwrap_err();
+        assert!(err.to_string().contains("perf regression"), "{err}");
+    }
+
+    #[test]
+    fn bench_end_to_end_gate_against_own_output() {
+        // A measured file always passes the gate against itself — the CI
+        // wiring (measure, then diff against the committed baseline) is
+        // exactly this call.
+        let path = std::env::temp_dir().join(format!("BENCH_gate_{}.json", std::process::id()));
+        let _ = std::fs::remove_file(&path);
+        let cmd = format!("bench --smoke --out {}", path.display());
+        assert_eq!(run(argv(&cmd)), 0);
+        let cmd = format!(
+            "bench --smoke --out {} --schema-baseline {}",
+            path.display(),
+            path.display()
+        );
+        assert_eq!(run(argv(&cmd)), 0);
+        let _ = std::fs::remove_file(&path);
     }
 
     #[test]

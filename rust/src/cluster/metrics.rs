@@ -36,6 +36,40 @@ pub struct StageReport {
     pub task_durations: Vec<f64>,
 }
 
+/// Cheap aggregate counters (no stage-vector clone) — the plan executor
+/// brackets each plan node's lowering with two of these to attribute the
+/// delta to that node.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct MetricsTotals {
+    /// Stages recorded so far (narrow + exchange).
+    pub stages: usize,
+    /// Shuffle exchanges recorded so far.
+    pub shuffle_stages: usize,
+    /// Cross-executor shuffle bytes so far.
+    pub shuffle_bytes: u64,
+    /// Driver collect round-trips so far.
+    pub driver_collects: usize,
+}
+
+/// What one logical plan node actually paid when it was lowered — stamped
+/// by [`crate::plan::PlanExec`] so `explain`'s predictions are checkable
+/// against measured behaviour.
+#[derive(Debug, Clone)]
+pub struct PlanNodeReport {
+    /// Plan-node label (`%17`).
+    pub node: String,
+    /// Operator name (`multiply`, `multiply_sub`, `quadrant`, …).
+    pub op: String,
+    /// Stages (narrow + exchange) recorded while lowering this node. For
+    /// `invert` nodes this includes the whole recursive subcomputation.
+    pub stages: usize,
+    pub shuffle_stages: usize,
+    pub shuffle_bytes: u64,
+    pub driver_collects: usize,
+    /// The optimizer marked this node as a CSE cache point.
+    pub cse_cached: bool,
+}
+
 /// Accumulated per-method totals.
 #[derive(Debug, Clone, Default, PartialEq)]
 pub struct MethodStats {
@@ -61,6 +95,8 @@ pub struct Metrics {
 struct MetricsInner {
     methods: BTreeMap<String, MethodStats>,
     stages: Vec<StageReport>,
+    /// Per-plan-node lowering reports (lazy-plan executions only).
+    plan_nodes: Vec<PlanNodeReport>,
     /// Driver `collect` round-trips (materialize + re-parallelize). The
     /// partitioner-aware op pipeline records zero of these.
     driver_collects: usize,
@@ -92,10 +128,27 @@ impl Metrics {
         self.inner.lock().unwrap().driver_collects += 1;
     }
 
+    /// Attribute a lowered plan node's cost window.
+    pub fn record_plan_node(&self, report: PlanNodeReport) {
+        self.inner.lock().unwrap().plan_nodes.push(report);
+    }
+
+    /// Aggregate counters, cheap enough to call around every plan node.
+    pub fn totals(&self) -> MetricsTotals {
+        let inner = self.inner.lock().unwrap();
+        MetricsTotals {
+            stages: inner.stages.len(),
+            shuffle_stages: inner.methods.values().map(|s| s.shuffle_stages).sum(),
+            shuffle_bytes: inner.methods.values().map(|s| s.shuffle_bytes).sum(),
+            driver_collects: inner.driver_collects,
+        }
+    }
+
     pub fn reset(&self) {
         let mut inner = self.inner.lock().unwrap();
         inner.methods.clear();
         inner.stages.clear();
+        inner.plan_nodes.clear();
         inner.driver_collects = 0;
     }
 
@@ -104,6 +157,7 @@ impl Metrics {
         MetricsSnapshot {
             methods: inner.methods.clone(),
             stages: inner.stages.clone(),
+            plan_nodes: inner.plan_nodes.clone(),
             driver_collects: inner.driver_collects,
         }
     }
@@ -120,12 +174,19 @@ impl Default for Metrics {
 pub struct MetricsSnapshot {
     methods: BTreeMap<String, MethodStats>,
     stages: Vec<StageReport>,
+    plan_nodes: Vec<PlanNodeReport>,
     driver_collects: usize,
 }
 
 impl MetricsSnapshot {
     pub fn method(&self, name: &str) -> Option<&MethodStats> {
         self.methods.get(name)
+    }
+
+    /// Per-plan-node lowering reports recorded in this window (empty for
+    /// purely eager `BlockMatrix` work).
+    pub fn plan_nodes(&self) -> &[PlanNodeReport] {
+        &self.plan_nodes
     }
 
     /// Driver `collect` round-trips recorded in this window.
@@ -261,11 +322,46 @@ mod tests {
         let m = Metrics::new();
         m.record_stage(stage("x", 1, 0.1, 0.1));
         m.record_driver_collect();
+        m.record_plan_node(PlanNodeReport {
+            node: "%1".into(),
+            op: "multiply".into(),
+            stages: 3,
+            shuffle_stages: 2,
+            shuffle_bytes: 64,
+            driver_collects: 0,
+            cse_cached: false,
+        });
+        assert_eq!(m.snapshot().plan_nodes().len(), 1);
         m.reset();
         let snap = m.snapshot();
         assert!(snap.method("x").is_none());
         assert!(snap.stages().is_empty());
+        assert!(snap.plan_nodes().is_empty());
         assert_eq!(snap.driver_collects(), 0);
+    }
+
+    #[test]
+    fn totals_track_counters() {
+        let m = Metrics::new();
+        assert_eq!(m.totals(), MetricsTotals::default());
+        m.record_stage(stage("multiply", 4, 1.0, 0.5));
+        m.record_stage(StageReport {
+            method: "multiply".into(),
+            tasks: 0,
+            exchange: true,
+            compute_secs: 0.0,
+            makespan_secs: 0.0,
+            shuffle_bytes: 256,
+            shuffle_total_bytes: 256,
+            shuffle_secs: 0.1,
+            task_durations: Vec::new(),
+        });
+        m.record_driver_collect();
+        let t = m.totals();
+        assert_eq!(t.stages, 2);
+        assert_eq!(t.shuffle_stages, 1);
+        assert_eq!(t.shuffle_bytes, 256);
+        assert_eq!(t.driver_collects, 1);
     }
 
     #[test]

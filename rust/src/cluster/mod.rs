@@ -52,7 +52,9 @@ mod scheduler;
 mod shuffle;
 
 pub use executor::WorkerPool;
-pub use metrics::{MethodStats, Metrics, MetricsSnapshot, StageReport};
+pub use metrics::{
+    MethodStats, Metrics, MetricsSnapshot, MetricsTotals, PlanNodeReport, StageReport,
+};
 pub use rdd::{Partitioner, Rdd};
 pub use scheduler::{list_schedule_makespan, VirtualClock};
 pub use shuffle::{executor_of_partition, hash_partition, Bytes};
@@ -110,6 +112,17 @@ impl Cluster {
 
     pub fn metrics(&self) -> MetricsSnapshot {
         self.metrics.snapshot()
+    }
+
+    /// Cheap aggregate counters — the plan executor brackets each plan
+    /// node's lowering with these to attribute the delta to that node.
+    pub fn metrics_totals(&self) -> MetricsTotals {
+        self.metrics.totals()
+    }
+
+    /// Stamp one lowered plan node's measured cost window.
+    pub fn record_plan_node(&self, report: PlanNodeReport) {
+        self.metrics.record_plan_node(report)
     }
 
     // ---------- RDD creation ----------

@@ -80,6 +80,11 @@ pub struct ClusterConfig {
     /// driver-side re-parallelization — kept so the shuffle/driver
     /// round-trip savings stay measurable (and for ablation benches).
     pub partitioner_aware: bool,
+    /// Run the matrix-expression plan optimizer (default). When disabled,
+    /// lazy plans lower exactly as written — no multiply+subtract fusion,
+    /// no transpose pushdown, no scalar folding, no CSE — which is the
+    /// measurable "unfused plan" arm of the Table-3 comparison.
+    pub plan_optimizer: bool,
 }
 
 impl ClusterConfig {
@@ -98,6 +103,7 @@ impl ClusterConfig {
             worker_threads: 1,
             virtual_time: true,
             partitioner_aware: true,
+            plan_optimizer: true,
         }
     }
 
@@ -117,6 +123,7 @@ impl ClusterConfig {
             worker_threads: 1,
             virtual_time: true,
             partitioner_aware: true,
+            plan_optimizer: true,
         }
     }
 
@@ -166,6 +173,7 @@ impl ClusterConfig {
             ("worker_threads", Json::num(self.worker_threads as f64)),
             ("virtual_time", Json::Bool(self.virtual_time)),
             ("partitioner_aware", Json::Bool(self.partitioner_aware)),
+            ("plan_optimizer", Json::Bool(self.plan_optimizer)),
         ])
     }
 
@@ -222,6 +230,12 @@ impl ClusterConfig {
                     .as_bool()
                     .ok_or_else(|| SpinError::config("`partitioner_aware` must be a bool"))?,
             },
+            plan_optimizer: match v.get("plan_optimizer") {
+                None => base.plan_optimizer,
+                Some(j) => j
+                    .as_bool()
+                    .ok_or_else(|| SpinError::config("`plan_optimizer` must be a bool"))?,
+            },
         };
         cfg.validate()?;
         Ok(cfg)
@@ -262,6 +276,11 @@ impl ClusterConfig {
                 self.partitioner_aware = value
                     .parse::<bool>()
                     .map_err(|_| SpinError::config("partitioner_aware needs true|false"))?
+            }
+            "plan_optimizer" => {
+                self.plan_optimizer = value
+                    .parse::<bool>()
+                    .map_err(|_| SpinError::config("plan_optimizer needs true|false"))?
             }
             other => {
                 return Err(SpinError::config(format!("unknown cluster key `{other}`")));
@@ -514,6 +533,7 @@ mod tests {
         c.backend = BackendKind::Xla;
         c.worker_threads = 3;
         c.partitioner_aware = false;
+        c.plan_optimizer = false;
         let back = ClusterConfig::from_json(&c.to_json()).unwrap();
         assert_eq!(back, c);
     }
@@ -542,6 +562,8 @@ mod tests {
         assert_eq!(c.nodes, 5);
         c.apply_override("backend=xla").unwrap();
         assert_eq!(c.backend, BackendKind::Xla);
+        c.apply_override("plan_optimizer=false").unwrap();
+        assert!(!c.plan_optimizer);
         assert!(c.apply_override("bogus=1").is_err());
         assert!(c.apply_override("no-equals").is_err());
 

@@ -29,15 +29,26 @@ pub struct Table3Column {
     pub method_shuffle_bytes: Vec<u64>,
     pub total_ms: f64,
     pub total_shuffle_bytes: u64,
+    /// Stage count of the optimized plan pipeline (Schur fusion on).
+    pub plan_stages: usize,
+    /// Same job with `plan_optimizer = false`: the unfused
+    /// multiply+subtract plan — the lazy-plan layer's before/after.
+    pub unfused_total_ms: f64,
+    pub unfused_stages: usize,
 }
 
-/// Run SPIN for each split count and collect the per-method breakdown.
+/// Run SPIN for each split count and collect the per-method breakdown —
+/// once with the plan optimizer (the default pipeline) and once with it
+/// disabled, so the report carries the optimized-vs-unfused comparison.
 pub fn run(cluster: &ClusterConfig, n: usize, max_b: usize, seed: u64) -> Result<Vec<Table3Column>> {
+    let mut unfused_cfg = cluster.clone();
+    unfused_cfg.plan_optimizer = false;
     let mut cols = Vec::new();
     for b in split_sweep(n, max_b) {
         let mut job = JobConfig::new(n, n / b);
         job.seed = seed ^ b as u64;
         let r = run_inversion(cluster, &job, "spin")?;
+        let r_unfused = run_inversion(&unfused_cfg, &job, "spin")?;
         let method_ms: Vec<f64> = METHODS
             .iter()
             .map(|m| {
@@ -60,6 +71,9 @@ pub fn run(cluster: &ClusterConfig, n: usize, max_b: usize, seed: u64) -> Result
             method_shuffle_bytes,
             total_ms,
             total_shuffle_bytes,
+            plan_stages: r.metrics.stages().len(),
+            unfused_total_ms: r_unfused.virtual_secs * 1e3,
+            unfused_stages: r_unfused.metrics.stages().len(),
         });
     }
     Ok(cols)
@@ -83,6 +97,17 @@ pub fn render(n: usize, cols: &[Table3Column]) -> Result<String> {
             .map(|c| format!("{:.0}", c.total_shuffle_bytes as f64 / 1024.0)),
     );
     t.row(shuffled);
+    // Optimized-vs-unfused plan comparison: same job with the plan
+    // optimizer off (no Schur fusion, no CSE).
+    let mut unfused = vec!["TotalUnfusedPlan".to_string()];
+    unfused.extend(cols.iter().map(|c| format!("{:.0}", c.unfused_total_ms)));
+    t.row(unfused);
+    let mut stages = vec!["Stages opt/unfused".to_string()];
+    stages.extend(
+        cols.iter()
+            .map(|c| format!("{}/{}", c.plan_stages, c.unfused_stages)),
+    );
+    t.row(stages);
 
     let mut csv = Table::new(header);
     for (mi, m) in METHODS.iter().enumerate() {
@@ -95,6 +120,15 @@ pub fn render(n: usize, cols: &[Table3Column]) -> Result<String> {
         row.extend(cols.iter().map(|c| format!("{}", c.method_shuffle_bytes[mi])));
         csv.row(row);
     }
+    let mut row = vec!["plan_stages".to_string()];
+    row.extend(cols.iter().map(|c| c.plan_stages.to_string()));
+    csv.row(row);
+    let mut row = vec!["unfused_total_ms".to_string()];
+    row.extend(cols.iter().map(|c| format!("{}", c.unfused_total_ms)));
+    csv.row(row);
+    let mut row = vec!["unfused_stages".to_string()];
+    row.extend(cols.iter().map(|c| c.unfused_stages.to_string()));
+    csv.row(row);
     let path = report::write_csv("table3", &csv)?;
     Ok(format!(
         "Table 3 analogue (n = {n}, virtual ms):\n{}\ncsv: {}\n",
@@ -163,6 +197,16 @@ mod tests {
             assert_eq!(c.method_ms.len(), METHODS.len());
             assert_eq!(c.method_shuffle_bytes.len(), METHODS.len());
             assert!(c.total_ms > 0.0);
+            // The plan optimizer's fusion deletes stages per level, so the
+            // unfused arm always runs strictly more stages.
+            assert!(
+                c.unfused_stages > c.plan_stages,
+                "b={}: unfused {} stages vs optimized {}",
+                c.b,
+                c.unfused_stages,
+                c.plan_stages
+            );
+            assert!(c.unfused_total_ms > 0.0);
             // Narrow methods shuffle nothing under the partitioner-aware
             // dataflow; only multiply pays an exchange.
             for (mi, m) in METHODS.iter().enumerate() {

@@ -4,13 +4,20 @@
 //! Apache Spark* (Misra et al., ICDCN '18) as a three-layer Rust + JAX +
 //! Pallas system.
 //!
-//! ## Public API: sessions and matrix handles
+//! ## Public API: sessions, lazy matrix plans, and `explain()`
 //!
 //! The front door is [`session::SpinSession`]: a builder-configured context
 //! that owns the simulated cluster, the block-kernel backend, and the job
-//! defaults, and hands out [`session::DistMatrix`] handles with methods —
-//! no more threading `Cluster` + `&dyn BlockKernels` + `JobConfig` through
-//! free functions.
+//! defaults, and hands out [`session::DistMatrix`] handles. Handles are
+//! **lazy**: operator methods (`multiply`, `subtract`, `inverse`, `solve`,
+//! `pseudo_inverse`, …) build a [`plan::MatExpr`] expression DAG and
+//! return immediately. Distributed work runs only at materialization
+//! points (`collect`, `to_dense`, `inverse_residual`, `solve_dense`) —
+//! after a rule-based optimizer has fused multiply+subtract into one
+//! reduce stage, pushed transposes into multiply operands, folded scalars,
+//! and deduplicated common subexpressions with automatic `cache()`
+//! insertion. `DistMatrix::explain()` (and `spin explain` on the CLI)
+//! prints the optimized plan with predicted shuffle stages per node.
 //!
 //! ```no_run
 //! use spin::session::SpinSession;
@@ -18,14 +25,17 @@
 //! fn main() -> spin::Result<()> {
 //!     let session = SpinSession::builder().cores(4).build()?;
 //!     let a = session.random_spd(256, 64)?;     // 4×4 grid of 64×64 blocks
-//!     let inv = a.inverse()?;                   // SPIN recursion
-//!     assert!(a.inverse_residual(&inv)? < 1e-10);
+//!     let inv = a.inverse()?;                   // lazy: builds a plan node
+//!     assert!(a.inverse_residual(&inv)? < 1e-10); // materializes here
 //!
 //!     let b = session.random_seeded(256, 64, 7)?;
-//!     let x = a.solve(&b)?;                     // X = A⁻¹·B
-//!     let pinv = a.pseudo_inverse()?;           // (AᵀA)⁻¹·Aᵀ
+//!     let x = a.solve(&b)?;                     // X = A⁻¹·B, one lazy plan
+//!     println!("{}", x.explain()?);             // optimized plan + shuffle predictions
+//!     x.collect()?;                             // run it (memoized afterwards)
+//!
+//!     let pinv = a.pseudo_inverse()?;           // (AᵀA)⁻¹·Aᵀ — Aᵀ is CSE-cached
 //!     let lu = session.invert_with("lu", &a)?;  // any registered algorithm
-//!     # let _ = (x, pinv, lu);
+//!     # let _ = (pinv, lu);
 //!     Ok(())
 //! }
 //! ```
@@ -33,18 +43,22 @@
 //! Inversion schemes are open-ended: implement
 //! [`algos::InversionAlgorithm`] and register it in the session builder (or
 //! an [`algos::AlgorithmRegistry`]) under a new name — the CLI's `--algo`
-//! flag and the experiment harness resolve through the same registry. The
-//! old closed `algos::Algorithm` enum and the `spin_inverse` /
-//! `lu_inverse_distributed` free functions remain as `#[deprecated]` shims.
+//! flag and the experiment harness resolve through the same registry, and
+//! a scheme can expose its per-level plan for `explain` via the trait's
+//! `plan` hook. New plan rewrites are added as optimizer rules — see the
+//! rule contract in [`plan::optimizer`] — not as new `BlockMatrix`
+//! methods; PR 2's hand-fused Schur step is now just the fusion rule.
 //!
 //! ## Layers
 //!
 //! * **Layer 3 (this crate)** — the coordinator: a Spark-like dataflow
 //!   substrate ([`cluster`]), the distributed [`blockmatrix`] algebra, the
-//!   SPIN recursion and its LU baseline behind the algorithm registry
-//!   ([`algos`]), the session API ([`session`]), the paper's wall-clock
-//!   cost model ([`costmodel`]) and every experiment in the evaluation
-//!   section ([`experiments`]).
+//!   lazy expression-plan layer ([`plan`]: DAG, optimizer, executor,
+//!   explain), the SPIN recursion and its LU baseline behind the algorithm
+//!   registry ([`algos`]) — both expressing each recursion level as a
+//!   plan — the session API ([`session`]), the paper's wall-clock cost
+//!   model ([`costmodel`]) and every experiment in the evaluation section
+//!   ([`experiments`]).
 //! * **Layer 2/1 (build-time Python)** — block-level compute lowered once
 //!   from JAX + Pallas to HLO text, loaded and executed from Rust through
 //!   the PJRT CPU client ([`runtime`]).
@@ -61,6 +75,7 @@ pub mod costmodel;
 pub mod error;
 pub mod experiments;
 pub mod linalg;
+pub mod plan;
 pub mod runtime;
 pub mod ser;
 pub mod session;

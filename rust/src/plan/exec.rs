@@ -1,0 +1,426 @@
+//! Plan lowering: evaluate an optimized [`MatExpr`] DAG on the
+//! partitioner-aware [`BlockMatrix`] ops.
+//!
+//! * Every unique node executes **at most once** — results are memoized on
+//!   the node itself, so subtrees shared between plans (or a plan
+//!   re-materialized later) never redo distributed work. This is the lazy
+//!   equivalent of the eager API holding intermediates in variables.
+//! * Sibling [`ExprOp::Quadrant`] nodes of the same child share one
+//!   `breakMat` pass (the paper's Algorithm 3) through a per-executor
+//!   memo, exactly like the eager `BlockMatrix::split`.
+//! * Around each node's lowering the executor snapshots the cluster's
+//!   metric totals and stamps a [`PlanNodeReport`] into
+//!   [`crate::cluster::Metrics`] — `explain`'s *predicted* shuffle stages
+//!   can be checked against what each node *actually* paid.
+
+use std::collections::HashMap;
+use std::sync::Mutex;
+
+use crate::blockmatrix::{Block, BlockMatrix, Quadrant};
+use crate::cluster::{Cluster, PlanNodeReport, Rdd};
+use crate::error::{Result, SpinError};
+use crate::runtime::BlockKernels;
+
+use super::{ExprOp, MatExpr, Optimizer, OptimizerConfig};
+
+/// Resolver for [`ExprOp::Invert`] nodes: maps a scheme name plus a
+/// materialized operand to its inverse. The session layer resolves through
+/// its [`crate::algos::AlgorithmRegistry`]; SPIN's recursion passes its own
+/// level function.
+pub type InvertFn<'f> = dyn Fn(&str, &BlockMatrix) -> Result<BlockMatrix> + 'f;
+
+/// Evaluates optimized plans on one cluster + kernel backend.
+pub struct PlanExec<'a> {
+    cluster: &'a Cluster,
+    kernels: &'a dyn BlockKernels,
+    config: OptimizerConfig,
+    /// `breakMat` output per (canonical) child node — sibling quadrant
+    /// extractions reuse it instead of re-running the tagging pass.
+    broken: Mutex<HashMap<u64, Rdd<(Quadrant, Block)>>>,
+}
+
+impl<'a> PlanExec<'a> {
+    /// Executor with the optimizer configuration implied by the cluster's
+    /// `plan_optimizer` knob.
+    pub fn new(cluster: &'a Cluster, kernels: &'a dyn BlockKernels) -> Self {
+        PlanExec::with_config(cluster, kernels, OptimizerConfig::from_cluster(cluster.config()))
+    }
+
+    /// Executor with an explicit rule configuration (rule ablations).
+    pub fn with_config(
+        cluster: &'a Cluster,
+        kernels: &'a dyn BlockKernels,
+        config: OptimizerConfig,
+    ) -> Self {
+        PlanExec {
+            cluster,
+            kernels,
+            config,
+            broken: Mutex::new(HashMap::new()),
+        }
+    }
+
+    pub fn config(&self) -> OptimizerConfig {
+        self.config
+    }
+
+    /// Optimize + execute a plan that contains no `Invert` nodes.
+    pub fn eval(&self, expr: &MatExpr) -> Result<BlockMatrix> {
+        self.eval_with(expr, &|algo: &str, _m: &BlockMatrix| {
+            Err(SpinError::config(format!(
+                "plan contains an invert[{algo}] node but no inverter was supplied"
+            )))
+        })
+    }
+
+    /// Optimize + execute a plan, resolving `Invert` nodes through
+    /// `invert`.
+    pub fn eval_with(&self, expr: &MatExpr, invert: &InvertFn<'_>) -> Result<BlockMatrix> {
+        let optimized = Optimizer::new(self.config).optimize(expr)?;
+        self.exec_node(&optimized, invert)
+    }
+
+    fn exec_node(&self, e: &MatExpr, invert: &InvertFn<'_>) -> Result<BlockMatrix> {
+        if let Some(v) = e.cached_value() {
+            return Ok(v);
+        }
+        let out = match e.op() {
+            ExprOp::Source(m) => return Ok(m.clone()),
+
+            ExprOp::Multiply(a, b) => {
+                let va = self.exec_node(a, invert)?;
+                let vb = self.exec_node(b, invert)?;
+                self.measured(e, || va.multiply(self.cluster, self.kernels, &vb))?
+            }
+
+            ExprOp::MultiplySub(a, b, d) => {
+                let va = self.exec_node(a, invert)?;
+                let vb = self.exec_node(b, invert)?;
+                let vd = self.exec_node(d, invert)?;
+                self.measured(e, || va.multiply_sub(self.cluster, self.kernels, &vb, &vd))?
+            }
+
+            ExprOp::Subtract(a, b) => {
+                let va = self.exec_node(a, invert)?;
+                let vb = self.exec_node(b, invert)?;
+                self.measured(e, || va.subtract(self.cluster, self.kernels, &vb))?
+            }
+
+            ExprOp::Scale(x, s) => {
+                let vx = self.exec_node(x, invert)?;
+                let s = *s;
+                self.measured(e, || vx.scalar_mul(self.cluster, self.kernels, s))?
+            }
+
+            ExprOp::Transpose(x) => {
+                let vx = self.exec_node(x, invert)?;
+                self.measured(e, || Ok(vx.transpose(self.cluster)))?
+            }
+
+            ExprOp::Invert { algo, child } => {
+                let vc = self.exec_node(child, invert)?;
+                self.measured(e, || invert(algo, &vc))?
+            }
+
+            ExprOp::Quadrant { child, which } => {
+                let vc = self.exec_node(child, invert)?;
+                let which = *which;
+                let half = vc.nblocks() / 2;
+                let bs = vc.block_size();
+                let child_id = child.id();
+                self.measured(e, || {
+                    let broken = {
+                        let mut memo = self.broken.lock().unwrap();
+                        match memo.get(&child_id) {
+                            Some(b) => b.clone(),
+                            None => {
+                                let b = vc.break_mat(self.cluster)?;
+                                memo.insert(child_id, b.clone());
+                                b
+                            }
+                        }
+                    };
+                    Ok(BlockMatrix::quadrant(
+                        self.cluster,
+                        &broken,
+                        which,
+                        half,
+                        bs,
+                    ))
+                })?
+            }
+
+            ExprOp::Arrange(c11, c12, c21, c22) => {
+                let v11 = self.exec_node(c11, invert)?;
+                let v12 = self.exec_node(c12, invert)?;
+                let v21 = self.exec_node(c21, invert)?;
+                let v22 = self.exec_node(c22, invert)?;
+                self.measured(e, || {
+                    BlockMatrix::arrange(self.cluster, v11, v12, v21, v22)
+                })?
+            }
+        };
+        e.set_value(out.clone());
+        Ok(out)
+    }
+
+    /// Run one node's lowering inside a metrics window and stamp the
+    /// per-plan-node delta into the cluster's registry.
+    fn measured(
+        &self,
+        e: &MatExpr,
+        f: impl FnOnce() -> Result<BlockMatrix>,
+    ) -> Result<BlockMatrix> {
+        let before = self.cluster.metrics_totals();
+        let out = f()?;
+        let after = self.cluster.metrics_totals();
+        self.cluster.record_plan_node(PlanNodeReport {
+            node: format!("%{}", e.id()),
+            op: e.op().name().to_string(),
+            stages: after.stages.saturating_sub(before.stages),
+            shuffle_stages: after.shuffle_stages.saturating_sub(before.shuffle_stages),
+            shuffle_bytes: after.shuffle_bytes.saturating_sub(before.shuffle_bytes),
+            driver_collects: after.driver_collects.saturating_sub(before.driver_collects),
+            cse_cached: e.is_cse_cached(),
+        });
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ClusterConfig;
+    use crate::linalg::{self, Matrix};
+    use crate::runtime::NativeBackend;
+    use crate::util::check::forall;
+    use crate::util::Rng;
+
+    fn cluster() -> Cluster {
+        Cluster::new(ClusterConfig::local(4))
+    }
+
+    /// The satellite geometry: n = 128, block 16 (an 8×8 grid).
+    const N: usize = 128;
+    const BS: usize = 16;
+
+    fn rand_pair(seed: u64) -> (Matrix, MatExpr) {
+        let mut rng = Rng::new(seed);
+        let dense = Matrix::random_uniform(N, N, -1.0, 1.0, &mut rng);
+        let bm = BlockMatrix::from_dense(&dense, BS).unwrap();
+        (dense, MatExpr::source(bm))
+    }
+
+    /// Evaluate `build`'s plan twice — optimized and raw — on fresh
+    /// clusters, assert the results agree within `tol`, and hand both
+    /// clusters to `check` for metric assertions.
+    fn rule_preserves_results(
+        tol: f64,
+        build: impl Fn() -> MatExpr,
+        check: impl Fn(&Cluster, &Cluster),
+    ) -> std::result::Result<(), String> {
+        let c_opt = cluster();
+        let c_raw = cluster();
+        let opt = PlanExec::with_config(&c_opt, &NativeBackend, OptimizerConfig::all())
+            .eval(&build())
+            .map_err(|e| e.to_string())?;
+        let raw = PlanExec::with_config(&c_raw, &NativeBackend, OptimizerConfig::none())
+            .eval(&build())
+            .map_err(|e| e.to_string())?;
+        let diff = opt
+            .to_dense()
+            .unwrap()
+            .max_abs_diff(&raw.to_dense().unwrap());
+        if diff > tol {
+            return Err(format!("optimized vs raw diff {diff:.3e} > {tol:.0e}"));
+        }
+        check(&c_opt, &c_raw);
+        Ok(())
+    }
+
+    #[test]
+    fn fusion_rule_preserves_results_and_drops_a_stage() {
+        forall(
+            "fusion ≡ multiply+subtract at n=128/bs=16",
+            0xF0,
+            4,
+            |r| r.next_u64(),
+            |&seed| {
+                let (_, a) = rand_pair(seed ^ 1);
+                let (_, b) = rand_pair(seed ^ 2);
+                let (_, d) = rand_pair(seed ^ 3);
+                rule_preserves_results(
+                    0.0, // multiply_sub is bit-identical to multiply+subtract
+                    || a.multiply(&b).unwrap().subtract(&d).unwrap(),
+                    |c_opt, c_raw| {
+                        let (mo, mr) = (c_opt.metrics(), c_raw.metrics());
+                        assert!(mo.method("subtract").is_none(), "subtract fused away");
+                        assert!(mr.method("subtract").is_some());
+                        assert!(mo.stages().len() < mr.stages().len());
+                    },
+                )
+            },
+        );
+    }
+
+    #[test]
+    fn transpose_pushdown_preserves_results_and_saves_a_transpose() {
+        forall(
+            "pushdown ≡ raw transposes at n=128/bs=16",
+            0xF1,
+            4,
+            |r| r.next_u64(),
+            |&seed| {
+                let (_, a) = rand_pair(seed ^ 4);
+                let (_, b) = rand_pair(seed ^ 5);
+                rule_preserves_results(
+                    1e-12, // same products/sums, factors commuted
+                    || a.transpose().multiply(&b).unwrap().transpose(),
+                    |c_opt, c_raw| {
+                        let to = c_opt.metrics().method("transpose").unwrap().calls;
+                        let tr = c_raw.metrics().method("transpose").unwrap().calls;
+                        assert!(to < tr, "pushdown must save a transpose: {to} vs {tr}");
+                    },
+                )
+            },
+        );
+    }
+
+    #[test]
+    fn scalar_folding_preserves_results_and_drops_a_stage() {
+        forall(
+            "scale folding ≡ nested scales at n=128/bs=16",
+            0xF2,
+            4,
+            |r| r.next_u64(),
+            |&seed| {
+                let (_, a) = rand_pair(seed ^ 6);
+                rule_preserves_results(
+                    0.0, // (−1)·(−1)·x and the folded identity agree bitwise
+                    || a.scale(-1.0).scale(-1.0),
+                    |c_opt, c_raw| {
+                        assert!(c_opt.metrics().method("scalar").is_none());
+                        assert_eq!(c_raw.metrics().method("scalar").unwrap().calls, 2);
+                    },
+                )
+            },
+        );
+    }
+
+    #[test]
+    fn cse_executes_shared_subtree_exactly_once() {
+        forall(
+            "CSE single execution at n=128/bs=16",
+            0xF3,
+            4,
+            |r| r.next_u64(),
+            |&seed| {
+                let (_, a) = rand_pair(seed ^ 7);
+                let (_, b) = rand_pair(seed ^ 8);
+                rule_preserves_results(
+                    0.0, // identical products either way
+                    || {
+                        // Structurally identical products built twice.
+                        let m1 = a.multiply(&b).unwrap();
+                        let m2 = a.multiply(&b).unwrap();
+                        m1.multiply(&m2).unwrap()
+                    },
+                    |c_opt, c_raw| {
+                        // Each multiply pays exactly 2 exchange stages, so
+                        // stage counts expose how many products really ran:
+                        // CSE = 2 multiplies (shared + root), raw = 3.
+                        let so = c_opt.metrics().method("multiply").unwrap().shuffle_stages;
+                        let sr = c_raw.metrics().method("multiply").unwrap().shuffle_stages;
+                        assert_eq!(so, 4, "optimized: shared product + root");
+                        assert_eq!(sr, 6, "raw: duplicate product executes twice");
+                    },
+                )
+            },
+        );
+    }
+
+    #[test]
+    fn plan_matches_dense_algebra_end_to_end() {
+        let c = cluster();
+        let (da, a) = rand_pair(21);
+        let (db, b) = rand_pair(22);
+        let (dd, d) = rand_pair(23);
+        // ((A·B − D)ᵀ)·2 − A
+        let expr = a
+            .multiply(&b)
+            .unwrap()
+            .subtract(&d)
+            .unwrap()
+            .transpose()
+            .scale(2.0)
+            .subtract(&a)
+            .unwrap();
+        let exec = PlanExec::with_config(&c, &NativeBackend, OptimizerConfig::all());
+        let got = exec.eval(&expr).unwrap().to_dense().unwrap();
+        let want = linalg::matmul(&da, &db)
+            .sub(&dd)
+            .unwrap()
+            .transpose()
+            .scale(2.0)
+            .sub(&da)
+            .unwrap();
+        assert!(got.max_abs_diff(&want) < 1e-10);
+        // Per-plan-node metrics were stamped.
+        let nodes = c.metrics();
+        assert!(!nodes.plan_nodes().is_empty());
+        assert!(nodes.plan_nodes().iter().any(|p| p.op == "multiply_sub"));
+    }
+
+    #[test]
+    fn memoized_value_survives_re_evaluation() {
+        let c = cluster();
+        let (_, a) = rand_pair(31);
+        let (_, b) = rand_pair(32);
+        let expr = a.multiply(&b).unwrap();
+        let exec = PlanExec::with_config(&c, &NativeBackend, OptimizerConfig::all());
+        let first = exec.eval(&expr).unwrap();
+        let stages_after_first = c.metrics().stages().len();
+        let second = exec.eval(&expr).unwrap();
+        assert_eq!(
+            c.metrics().stages().len(),
+            stages_after_first,
+            "re-evaluating a materialized plan must be free"
+        );
+        assert_eq!(
+            first
+                .to_dense()
+                .unwrap()
+                .max_abs_diff(&second.to_dense().unwrap()),
+            0.0
+        );
+    }
+
+    #[test]
+    fn lazy_split_shares_one_break_mat_and_arrange_round_trips() {
+        let c = cluster();
+        let mut rng = Rng::new(41);
+        let dense = Matrix::random_uniform(16, 16, -1.0, 1.0, &mut rng);
+        let a = MatExpr::source(BlockMatrix::from_dense(&dense, 4).unwrap());
+        let (c11, c12, c21, c22) = a.split().unwrap();
+        let back = MatExpr::arrange(&c11, &c12, &c21, &c22).unwrap();
+        let exec = PlanExec::with_config(&c, &NativeBackend, OptimizerConfig::all());
+        let got = exec.eval(&back).unwrap().to_dense().unwrap();
+        assert!(got.max_abs_diff(&dense) < 1e-15);
+        let m = c.metrics();
+        assert_eq!(
+            m.method("breakMat").unwrap().calls,
+            1,
+            "four quadrants share one breakMat pass"
+        );
+        assert_eq!(m.driver_collects(), 0);
+    }
+
+    #[test]
+    fn invert_node_needs_an_inverter() {
+        let c = cluster();
+        let (_, a) = rand_pair(51);
+        let exec = PlanExec::with_config(&c, &NativeBackend, OptimizerConfig::all());
+        let err = exec.eval(&a.invert("spin")).unwrap_err();
+        assert!(err.to_string().contains("no inverter"), "{err}");
+    }
+}

@@ -1,0 +1,189 @@
+//! `explain()` rendering: one SSA-style line per plan node with its
+//! predicted shuffle cost, plus a summary footer.
+//!
+//! The renderer walks the (optimized) DAG in deterministic postorder, so
+//! shared subtrees print once and are referenced by `%k` — a CSE-marked
+//! node renders as `cache(...)`, making the optimizer's automatic cache
+//! insertion visible.
+
+use std::collections::HashMap;
+
+use super::{ExprOp, MatExpr};
+
+/// Predicted shuffle exchanges one node pays under the partitioner-aware
+/// dataflow: `multiply`/`multiply_sub` route one shuffle round recorded as
+/// two exchange stages (one per operand stream); every other op is narrow.
+/// `Invert` is recursive and predicted separately (`None`).
+pub fn predicted_exchanges(op: &ExprOp, partitioner_aware: bool) -> Option<usize> {
+    match op {
+        ExprOp::Invert { .. } => None,
+        ExprOp::Multiply(..) | ExprOp::MultiplySub(..) => Some(2),
+        // On the legacy dataflow even "narrow" ops cogroup or round-trip
+        // the driver; flag them as one exchange so the prediction stays
+        // honest when `partitioner_aware = false`.
+        ExprOp::Subtract(..) if !partitioner_aware => Some(1),
+        _ => Some(0),
+    }
+}
+
+/// Render an (optimized) plan. `partitioner_aware` selects the shuffle
+/// prediction model — pass the owning cluster's setting.
+pub fn render_plan(root: &MatExpr, partitioner_aware: bool) -> String {
+    let mut r = Renderer {
+        ids: HashMap::new(),
+        lines: Vec::new(),
+        partitioner_aware,
+        exchanges: 0,
+        cached: 0,
+        fused: 0,
+        recursive: 0,
+    };
+    let root_id = r.walk(root);
+    let mut out = String::new();
+    for line in &r.lines {
+        out.push_str(line);
+        out.push('\n');
+    }
+    out.push_str(&format!(
+        "plan: {} nodes · result %{root_id} · predicted {} exchange stage(s){} · {} fused multiply_sub · {} cache point(s) (CSE)\n",
+        r.lines.len(),
+        r.exchanges,
+        if r.recursive > 0 {
+            format!(" + {} recursive inversion(s)", r.recursive)
+        } else {
+            String::new()
+        },
+        r.fused,
+        r.cached,
+    ));
+    out
+}
+
+struct Renderer {
+    /// Node id → display index (postorder).
+    ids: HashMap<u64, usize>,
+    lines: Vec<String>,
+    partitioner_aware: bool,
+    exchanges: usize,
+    cached: usize,
+    fused: usize,
+    recursive: usize,
+}
+
+impl Renderer {
+    fn walk(&mut self, e: &MatExpr) -> usize {
+        if let Some(&n) = self.ids.get(&e.id()) {
+            return n;
+        }
+        let child_nums: Vec<usize> = e.children().iter().map(|c| self.walk(c)).collect();
+        let n = self.ids.len();
+        self.ids.insert(e.id(), n);
+
+        let mut desc = describe(e.op(), &child_nums);
+        if e.is_cse_cached() {
+            desc = format!("cache({desc})");
+            self.cached += 1;
+        }
+        if matches!(e.op(), ExprOp::MultiplySub(..)) {
+            self.fused += 1;
+        }
+        let cost = match predicted_exchanges(e.op(), self.partitioner_aware) {
+            Some(0) => "narrow".to_string(),
+            Some(k) => {
+                self.exchanges += k;
+                format!("{k} exchange stages")
+            }
+            None => {
+                self.recursive += 1;
+                "recursive".to_string()
+            }
+        };
+        self.lines
+            .push(format!("%{n:<3} = {desc:<44} shuffle: {cost}"));
+        n
+    }
+}
+
+fn describe(op: &ExprOp, kids: &[usize]) -> String {
+    let refs = |i: usize| format!("%{}", kids[i]);
+    match op {
+        // Grid only: the plan's shape depends on the split count, not the
+        // block payload size (which the explain header already states).
+        ExprOp::Source(m) => format!("source[{0}x{0} grid]", m.nblocks()),
+        ExprOp::Multiply(..) => format!("multiply {} {}", refs(0), refs(1)),
+        ExprOp::MultiplySub(..) => format!(
+            "multiply_sub {} {} {}   (fused A·B − D)",
+            refs(0),
+            refs(1),
+            refs(2)
+        ),
+        ExprOp::Subtract(..) => format!("subtract {} {}", refs(0), refs(1)),
+        ExprOp::Scale(_, s) => format!("scale {} × {s}", refs(0)),
+        ExprOp::Transpose(..) => format!("transpose {}", refs(0)),
+        ExprOp::Invert { algo, .. } => format!("invert[{algo}] {}", refs(0)),
+        ExprOp::Quadrant { which, .. } => {
+            format!("quadrant[{}] {}", which.label(), refs(0))
+        }
+        ExprOp::Arrange(..) => format!(
+            "arrange {} {} {} {}",
+            refs(0),
+            refs(1),
+            refs(2),
+            refs(3)
+        ),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::blockmatrix::BlockMatrix;
+    use crate::plan::{Optimizer, OptimizerConfig};
+
+    fn src(nb: usize, bs: usize) -> MatExpr {
+        MatExpr::source(BlockMatrix::zeros(nb, bs).unwrap())
+    }
+
+    #[test]
+    fn renders_each_node_once_with_predictions() {
+        let (a, b, d) = (src(2, 4), src(2, 4), src(2, 4));
+        let expr = a.multiply(&b).unwrap().subtract(&d).unwrap();
+        let opt = Optimizer::new(OptimizerConfig::all())
+            .optimize(&expr)
+            .unwrap();
+        let text = render_plan(&opt, true);
+        assert!(text.contains("multiply_sub"), "{text}");
+        assert!(text.contains("2 exchange stages"), "{text}");
+        assert!(text.contains("source[2x2 grid]"), "{text}");
+        assert!(text.contains("predicted 2 exchange stage(s)"), "{text}");
+        assert!(text.contains("1 fused multiply_sub"), "{text}");
+    }
+
+    #[test]
+    fn shared_nodes_render_as_cache_points() {
+        let (a, b, c) = (src(2, 4), src(2, 4), src(2, 4));
+        let shared = a.multiply(&b).unwrap();
+        let root = shared
+            .multiply(&c)
+            .unwrap()
+            .subtract(&shared.transpose())
+            .unwrap();
+        let opt = Optimizer::new(OptimizerConfig::all())
+            .optimize(&root)
+            .unwrap();
+        let text = render_plan(&opt, true);
+        assert!(text.contains("cache(multiply"), "{text}");
+        assert!(text.contains("cache point(s) (CSE)"), "{text}");
+        // The shared product appears exactly once.
+        assert_eq!(text.matches("cache(multiply").count(), 1, "{text}");
+    }
+
+    #[test]
+    fn invert_nodes_are_marked_recursive() {
+        let a = src(2, 4);
+        let text = render_plan(&a.invert("spin"), true);
+        assert!(text.contains("invert[spin]"), "{text}");
+        assert!(text.contains("shuffle: recursive"), "{text}");
+        assert!(text.contains("recursive inversion(s)"), "{text}");
+    }
+}

@@ -1,0 +1,450 @@
+//! Lazy matrix-expression plans: the [`MatExpr`] DAG, the rule-based
+//! [`Optimizer`], the [`PlanExec`] lowering pass, and the
+//! [`render_plan`] / `explain()` pretty-printer.
+//!
+//! ## Why lazy
+//!
+//! PR 2 fused SPIN's Schur step (`V = A21·III − A22`) by hand — a one-off
+//! `BlockMatrix::multiply_sub` special case wired into `spin.rs`. Spark
+//! gets the same effect *systematically* from lazy evaluation plus a plan
+//! optimizer: operators build a logical DAG, rewrite rules fuse and prune
+//! it, and only materialization points execute anything. This module is
+//! that layer for the block-matrix algebra:
+//!
+//! * [`MatExpr`] — an immutable, shareable expression node (`Source`,
+//!   `Multiply`, `Subtract`, `Scale`, `Transpose`, `Invert{algo}`,
+//!   `Quadrant`/split, `Arrange`). Geometry (`nblocks`, `block_size`) is
+//!   known at construction, so shape errors surface when a plan is *built*,
+//!   not when it runs.
+//! * [`Optimizer`] — bottom-up canonicalization applying the rewrite rules
+//!   (multiply+subtract fusion, transpose pushdown, scalar folding, CSE
+//!   with automatic cache marking). See [`optimizer`] for the rule
+//!   contract new rules must follow.
+//! * [`PlanExec`] — lowers an optimized DAG onto the partitioner-aware
+//!   [`BlockMatrix`] ops, memoizes every node's result (each unique
+//!   subtree executes exactly once), and stamps a per-plan-node metrics
+//!   record into the owning cluster's [`crate::cluster::Metrics`].
+//! * [`render_plan`] — the `explain()` renderer: one SSA-style line per
+//!   node with its predicted shuffle cost.
+//!
+//! Materialization points are `DistMatrix::{collect, to_dense,
+//! inverse_residual, block_matrix}` at the session layer and the
+//! algorithm-internal recursion inside `algos::{spin, lu}` (a recursive
+//! inversion needs its operand's *values*, so each recursion level is one
+//! plan evaluated at the level boundary).
+//!
+//! Evaluation is memoized per node: re-materializing a handle, or sharing
+//! a subexpression between two plans evaluated by the same session, never
+//! re-executes distributed work — exactly the behaviour the eager API had
+//! when intermediates were held in variables.
+
+mod exec;
+mod explain;
+pub mod optimizer;
+
+pub use exec::{InvertFn, PlanExec};
+pub use explain::{predicted_exchanges, render_plan};
+pub use optimizer::{Optimizer, OptimizerConfig};
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::blockmatrix::{BlockMatrix, Quadrant};
+use crate::error::{Result, SpinError};
+
+/// Globally unique expression-node ids (used for structural hashing,
+/// memo keys, and `explain` labels).
+static NEXT_EXPR_ID: AtomicU64 = AtomicU64::new(1);
+
+/// One logical operator in a matrix-expression plan.
+///
+/// Every variant preserves the square `nblocks × nblocks` grid geometry
+/// except [`ExprOp::Quadrant`] (halves it) and [`ExprOp::Arrange`]
+/// (doubles it).
+pub enum ExprOp {
+    /// A materialized distributed matrix (the DAG's leaves).
+    Source(BlockMatrix),
+    /// C = A·B.
+    Multiply(MatExpr, MatExpr),
+    /// C = A·B − D, fused into one multiply-reduce stage. Built by the
+    /// optimizer's fusion rule (or explicitly via [`MatExpr::multiply_sub`]).
+    MultiplySub(MatExpr, MatExpr, MatExpr),
+    /// C = A − B.
+    Subtract(MatExpr, MatExpr),
+    /// C = s·A.
+    Scale(MatExpr, f64),
+    /// C = Aᵀ.
+    Transpose(MatExpr),
+    /// C = A⁻¹ through a named inversion scheme, supplied at evaluation
+    /// time by the caller's [`InvertFn`].
+    Invert {
+        /// Scheme name resolved by the evaluating context (a registry
+        /// entry at the session layer, the recursion itself inside SPIN).
+        algo: String,
+        child: MatExpr,
+    },
+    /// One quadrant of the half-grid split (the paper's `breakMat` + `xy`
+    /// pipeline; sibling quadrants of the same child share one `breakMat`
+    /// pass at execution time).
+    Quadrant { child: MatExpr, which: Quadrant },
+    /// Re-assemble four half-grid quadrants into the full grid
+    /// (`C11, C12, C21, C22` order).
+    Arrange(MatExpr, MatExpr, MatExpr, MatExpr),
+}
+
+impl ExprOp {
+    /// Stable operator name used by `explain` and plan-node metrics.
+    pub fn name(&self) -> &'static str {
+        match self {
+            ExprOp::Source(_) => "source",
+            ExprOp::Multiply(..) => "multiply",
+            ExprOp::MultiplySub(..) => "multiply_sub",
+            ExprOp::Subtract(..) => "subtract",
+            ExprOp::Scale(..) => "scale",
+            ExprOp::Transpose(..) => "transpose",
+            ExprOp::Invert { .. } => "invert",
+            ExprOp::Quadrant { .. } => "quadrant",
+            ExprOp::Arrange(..) => "arrange",
+        }
+    }
+}
+
+/// Interior of one DAG node. Shared via [`MatExpr`] (an `Arc` handle);
+/// the memo slots make repeated optimization / evaluation of the same
+/// node free.
+pub struct ExprNode {
+    id: u64,
+    op: ExprOp,
+    nblocks: usize,
+    block_size: usize,
+    /// Canonical (optimized) form of this node under a given optimizer
+    /// config — keeps rewritten identities stable across `optimize` calls
+    /// so downstream value memos keep hitting.
+    canonical: Mutex<Option<(OptimizerConfig, MatExpr)>>,
+    /// Materialized result. A node evaluates at most once per lifetime;
+    /// every further use (same plan or a later plan sharing the subtree)
+    /// reuses the value — the lazy equivalent of the eager API holding an
+    /// intermediate in a variable.
+    value: Mutex<Option<BlockMatrix>>,
+    /// Set by the optimizer's CSE pass on nodes referenced more than once
+    /// in a plan: the automatic `cache()` insertion point shown by
+    /// `explain`.
+    cse_cached: AtomicBool,
+}
+
+/// A lazy distributed-matrix expression: a cheap, clonable handle onto one
+/// node of a shared DAG. Built by [`crate::session::DistMatrix`] operator
+/// methods and by the algorithms' per-recursion-level plans; evaluated by
+/// [`PlanExec`].
+#[derive(Clone)]
+pub struct MatExpr {
+    node: Arc<ExprNode>,
+}
+
+impl MatExpr {
+    // ---------- constructors ----------
+
+    pub(crate) fn with_op(op: ExprOp, nblocks: usize, block_size: usize) -> MatExpr {
+        MatExpr {
+            node: Arc::new(ExprNode {
+                id: NEXT_EXPR_ID.fetch_add(1, Ordering::Relaxed),
+                op,
+                nblocks,
+                block_size,
+                canonical: Mutex::new(None),
+                value: Mutex::new(None),
+                cse_cached: AtomicBool::new(false),
+            }),
+        }
+    }
+
+    /// Wrap a materialized distributed matrix as a plan leaf.
+    pub fn source(m: BlockMatrix) -> MatExpr {
+        let (nb, bs) = (m.nblocks(), m.block_size());
+        MatExpr::with_op(ExprOp::Source(m), nb, bs)
+    }
+
+    /// C = A·B (lazy).
+    pub fn multiply(&self, other: &MatExpr) -> Result<MatExpr> {
+        self.check_same_grid(other, "multiply")?;
+        Ok(MatExpr::with_op(
+            ExprOp::Multiply(self.clone(), other.clone()),
+            self.nblocks(),
+            self.block_size(),
+        ))
+    }
+
+    /// C = A·B − D as an explicitly fused node (the optimizer derives the
+    /// same node from `multiply` + `subtract`).
+    pub fn multiply_sub(&self, other: &MatExpr, d: &MatExpr) -> Result<MatExpr> {
+        self.check_same_grid(other, "multiply_sub")?;
+        self.check_same_grid(d, "multiply_sub")?;
+        Ok(MatExpr::with_op(
+            ExprOp::MultiplySub(self.clone(), other.clone(), d.clone()),
+            self.nblocks(),
+            self.block_size(),
+        ))
+    }
+
+    /// C = A − B (lazy).
+    pub fn subtract(&self, other: &MatExpr) -> Result<MatExpr> {
+        self.check_same_grid(other, "subtract")?;
+        Ok(MatExpr::with_op(
+            ExprOp::Subtract(self.clone(), other.clone()),
+            self.nblocks(),
+            self.block_size(),
+        ))
+    }
+
+    /// C = s·A (lazy).
+    pub fn scale(&self, s: f64) -> MatExpr {
+        MatExpr::with_op(
+            ExprOp::Scale(self.clone(), s),
+            self.nblocks(),
+            self.block_size(),
+        )
+    }
+
+    /// C = Aᵀ (lazy).
+    pub fn transpose(&self) -> MatExpr {
+        MatExpr::with_op(
+            ExprOp::Transpose(self.clone()),
+            self.nblocks(),
+            self.block_size(),
+        )
+    }
+
+    /// C = A⁻¹ through the named scheme, resolved by the evaluator's
+    /// [`InvertFn`] at materialization time.
+    pub fn invert(&self, algo: &str) -> MatExpr {
+        MatExpr::with_op(
+            ExprOp::Invert {
+                algo: algo.to_string(),
+                child: self.clone(),
+            },
+            self.nblocks(),
+            self.block_size(),
+        )
+    }
+
+    /// One quadrant of the half-grid split. Requires an even grid of at
+    /// least 2×2 blocks.
+    pub fn quadrant(&self, which: Quadrant) -> Result<MatExpr> {
+        let b = self.nblocks();
+        if b < 2 || b % 2 != 0 {
+            return Err(SpinError::shape(format!(
+                "cannot take a quadrant of a {b}x{b} block grid"
+            )));
+        }
+        Ok(MatExpr::with_op(
+            ExprOp::Quadrant {
+                child: self.clone(),
+                which,
+            },
+            b / 2,
+            self.block_size(),
+        ))
+    }
+
+    /// All four quadrants (`A11, A12, A21, A22`) — the lazy `split`.
+    pub fn split(&self) -> Result<(MatExpr, MatExpr, MatExpr, MatExpr)> {
+        Ok((
+            self.quadrant(Quadrant::Q11)?,
+            self.quadrant(Quadrant::Q12)?,
+            self.quadrant(Quadrant::Q21)?,
+            self.quadrant(Quadrant::Q22)?,
+        ))
+    }
+
+    /// Re-assemble four equal half-grid quadrants into one full-grid plan.
+    pub fn arrange(
+        c11: &MatExpr,
+        c12: &MatExpr,
+        c21: &MatExpr,
+        c22: &MatExpr,
+    ) -> Result<MatExpr> {
+        c11.check_same_grid(c12, "arrange")?;
+        c11.check_same_grid(c21, "arrange")?;
+        c11.check_same_grid(c22, "arrange")?;
+        Ok(MatExpr::with_op(
+            ExprOp::Arrange(c11.clone(), c12.clone(), c21.clone(), c22.clone()),
+            2 * c11.nblocks(),
+            c11.block_size(),
+        ))
+    }
+
+    // ---------- geometry / accessors ----------
+
+    /// Unique node id.
+    pub fn id(&self) -> u64 {
+        self.node.id
+    }
+
+    /// The logical operator at this node.
+    pub fn op(&self) -> &ExprOp {
+        &self.node.op
+    }
+
+    /// Grid edge of this expression's result.
+    pub fn nblocks(&self) -> usize {
+        self.node.nblocks
+    }
+
+    pub fn block_size(&self) -> usize {
+        self.node.block_size
+    }
+
+    /// Full matrix order `n` of this expression's result.
+    pub fn n(&self) -> usize {
+        self.node.nblocks * self.node.block_size
+    }
+
+    /// Child expressions, in a fixed deterministic order.
+    pub fn children(&self) -> Vec<MatExpr> {
+        match &self.node.op {
+            ExprOp::Source(_) => Vec::new(),
+            ExprOp::Multiply(a, b) | ExprOp::Subtract(a, b) => vec![a.clone(), b.clone()],
+            ExprOp::MultiplySub(a, b, d) => vec![a.clone(), b.clone(), d.clone()],
+            ExprOp::Scale(x, _) | ExprOp::Transpose(x) => vec![x.clone()],
+            ExprOp::Invert { child, .. } | ExprOp::Quadrant { child, .. } => vec![child.clone()],
+            ExprOp::Arrange(a, b, c, d) => vec![a.clone(), b.clone(), c.clone(), d.clone()],
+        }
+    }
+
+    /// Number of unique nodes in this DAG.
+    pub fn node_count(&self) -> usize {
+        let mut seen = std::collections::HashSet::new();
+        let mut stack = vec![self.clone()];
+        while let Some(e) = stack.pop() {
+            if seen.insert(e.id()) {
+                stack.extend(e.children());
+            }
+        }
+        seen.len()
+    }
+
+    /// Whether the optimizer marked this node as a CSE cache point.
+    pub fn is_cse_cached(&self) -> bool {
+        self.node.cse_cached.load(Ordering::Relaxed)
+    }
+
+    pub(crate) fn set_cse_cached(&self, on: bool) {
+        self.node.cse_cached.store(on, Ordering::Relaxed);
+    }
+
+    /// The memoized materialized value, if this node already executed.
+    pub fn cached_value(&self) -> Option<BlockMatrix> {
+        self.node.value.lock().unwrap().clone()
+    }
+
+    pub(crate) fn set_value(&self, v: BlockMatrix) {
+        *self.node.value.lock().unwrap() = Some(v);
+    }
+
+    pub(crate) fn canonical_for(&self, config: OptimizerConfig) -> Option<MatExpr> {
+        match &*self.node.canonical.lock().unwrap() {
+            Some((cfg, e)) if *cfg == config => Some(e.clone()),
+            _ => None,
+        }
+    }
+
+    pub(crate) fn set_canonical(&self, config: OptimizerConfig, e: MatExpr) {
+        *self.node.canonical.lock().unwrap() = Some((config, e));
+    }
+
+    /// Shape compatibility check for binary plan constructors — mirrors
+    /// `BlockMatrix::check_same_grid` so lazy and eager errors read alike.
+    pub(crate) fn check_same_grid(&self, other: &MatExpr, op: &str) -> Result<()> {
+        if self.nblocks() != other.nblocks() || self.block_size() != other.block_size() {
+            return Err(SpinError::shape(format!(
+                "{op}: grid mismatch {}x{} (bs {}) vs {}x{} (bs {})",
+                self.nblocks(),
+                self.nblocks(),
+                self.block_size(),
+                other.nblocks(),
+                other.nblocks(),
+                other.block_size()
+            )));
+        }
+        Ok(())
+    }
+}
+
+impl std::fmt::Debug for MatExpr {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "MatExpr#{}({}, {}x{} of {})",
+            self.id(),
+            self.op().name(),
+            self.nblocks(),
+            self.nblocks(),
+            self.block_size()
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn src(nb: usize, bs: usize) -> MatExpr {
+        MatExpr::source(BlockMatrix::zeros(nb, bs).unwrap())
+    }
+
+    #[test]
+    fn geometry_propagates() {
+        let a = src(4, 8);
+        assert_eq!(a.n(), 32);
+        let m = a.multiply(&a).unwrap();
+        assert_eq!((m.nblocks(), m.block_size()), (4, 8));
+        let q = a.quadrant(Quadrant::Q21).unwrap();
+        assert_eq!((q.nblocks(), q.block_size()), (2, 8));
+        let (c11, c12, c21, c22) = a.split().unwrap();
+        let back = MatExpr::arrange(&c11, &c12, &c21, &c22).unwrap();
+        assert_eq!(back.nblocks(), 4);
+        assert_eq!(back.n(), 32);
+        assert_eq!(a.transpose().n(), 32);
+        assert_eq!(a.scale(2.0).n(), 32);
+        assert_eq!(a.invert("spin").n(), 32);
+    }
+
+    #[test]
+    fn grid_mismatch_rejected_at_construction() {
+        let a = src(4, 8);
+        let b = src(2, 16);
+        assert!(a.multiply(&b).is_err());
+        assert!(a.subtract(&b).is_err());
+        assert!(a.multiply_sub(&a, &b).is_err());
+        assert!(MatExpr::arrange(&a, &a, &a, &b).is_err());
+    }
+
+    #[test]
+    fn quadrant_needs_even_grid() {
+        assert!(src(1, 4).quadrant(Quadrant::Q11).is_err());
+        assert!(src(3, 4).quadrant(Quadrant::Q11).is_err());
+        assert!(src(2, 4).quadrant(Quadrant::Q11).is_ok());
+    }
+
+    #[test]
+    fn node_count_deduplicates_shared_subtrees() {
+        let a = src(2, 4);
+        let b = src(2, 4);
+        let m = a.multiply(&b).unwrap();
+        // m used twice: a, b, m, root = 4 unique nodes.
+        let root = m.subtract(&m).unwrap();
+        assert_eq!(root.node_count(), 4);
+    }
+
+    #[test]
+    fn children_order_is_deterministic() {
+        let a = src(2, 4);
+        let b = src(2, 4);
+        let m = a.multiply(&b).unwrap();
+        let kids = m.children();
+        assert_eq!(kids.len(), 2);
+        assert_eq!(kids[0].id(), a.id());
+        assert_eq!(kids[1].id(), b.id());
+        assert_eq!(m.op().name(), "multiply");
+    }
+}

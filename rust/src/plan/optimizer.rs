@@ -1,0 +1,661 @@
+//! Rule-based plan rewrites, run before lowering.
+//!
+//! ## The rewrite-rule contract
+//!
+//! Every rule must satisfy four properties — check them before adding one:
+//!
+//! 1. **Value-preserving, bit-for-bit where claimed.** A rule may only
+//!    replace a subtree with one that computes the same blocks. Rules that
+//!    re-associate floating-point sums are *not* admissible; reordering
+//!    commutative products (`x·y → y·x` elementwise, as transpose pushdown
+//!    does) and exact-scalar identities are. The executor's property
+//!    tests compare every rule against the unoptimized plan at
+//!    n = 128 / block 16.
+//! 2. **Geometry-preserving.** The rewritten node must report the same
+//!    `nblocks`/`block_size` as the node it replaces.
+//! 3. **Cost-non-increasing.** Fire only when the rewrite cannot add
+//!    distributed stages: the fusion rule checks the multiply operand is
+//!    not shared (a shared product would be computed twice inside the
+//!    fused node) and not already materialized; transpose pushdown fires
+//!    only when it cancels at least one existing transpose.
+//! 4. **Deterministic and idempotent.** Canonicalization is bottom-up and
+//!    memoized per node (keyed by the [`OptimizerConfig`]); a rule must
+//!    produce the same output for the same input so re-optimizing an
+//!    already-optimized DAG is a no-op.
+//!
+//! ## The rules
+//!
+//! * **Fusion** — `Subtract(Multiply(a, b), d)` → `MultiplySub(a, b, d)`:
+//!   the Schur-step fusion PR 2 hand-wired into `spin.rs`, generalized.
+//!   The subtraction runs inside the multiply's reduce stage, deleting a
+//!   whole narrow stage (and, on the legacy dataflow, a shuffle).
+//! * **Transpose pushdown** — `Transpose(Transpose(x))` → `x`, and
+//!   `Transpose(Multiply(a, b))` → `Multiply(tᵣ(b), tᵣ(a))` when `a` or
+//!   `b` is itself a transpose (`tᵣ` strips a transpose if present, else
+//!   wraps one) and the product has no other consumer — net transpose
+//!   *and* multiply stages never increase.
+//! * **Scalar folding** — `Scale(x, 1.0)` → `x`; nested
+//!   `Scale(Scale(x, t), s)` → `Scale(x, s·t)` only when a factor is ±1,
+//!   where the fold is bit-exact (general factors would re-associate a
+//!   rounding step, violating rule 1).
+//! * **CSE** — structurally identical subtrees are interned onto one node
+//!   (so the executor's per-node memo runs them once), and every node
+//!   referenced more than once is marked as an automatic `cache()` point,
+//!   rendered by `explain` (e.g. `III = I·A12`, used three times per SPIN
+//!   level).
+
+use std::collections::{HashMap, HashSet};
+
+use crate::config::ClusterConfig;
+use crate::error::Result;
+
+use super::{ExprOp, MatExpr};
+
+/// Which rewrite rules run. `all()` is the production default; `none()`
+/// reproduces the unoptimized plan (used by the ablation comparison and
+/// `--set plan_optimizer=false`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct OptimizerConfig {
+    /// `Subtract(Multiply(a, b), d)` → fused `MultiplySub(a, b, d)`.
+    pub fuse_multiply_sub: bool,
+    /// Transpose cancellation and pushdown into multiply operands.
+    pub transpose_pushdown: bool,
+    /// Identity-scale elimination and nested-scale folding.
+    pub fold_scalars: bool,
+    /// Structural common-subexpression elimination + cache marking.
+    pub cse: bool,
+}
+
+impl OptimizerConfig {
+    /// Every rule on (the default).
+    pub fn all() -> Self {
+        OptimizerConfig {
+            fuse_multiply_sub: true,
+            transpose_pushdown: true,
+            fold_scalars: true,
+            cse: true,
+        }
+    }
+
+    /// Every rule off — the plan lowers exactly as written.
+    pub fn none() -> Self {
+        OptimizerConfig {
+            fuse_multiply_sub: false,
+            transpose_pushdown: false,
+            fold_scalars: false,
+            cse: false,
+        }
+    }
+
+    /// Derive from the cluster's `plan_optimizer` knob.
+    pub fn from_cluster(cfg: &ClusterConfig) -> Self {
+        if cfg.plan_optimizer {
+            OptimizerConfig::all()
+        } else {
+            OptimizerConfig::none()
+        }
+    }
+}
+
+impl Default for OptimizerConfig {
+    fn default() -> Self {
+        OptimizerConfig::all()
+    }
+}
+
+/// Structural identity of a canonicalized node — child ids plus operator
+/// parameters. Two nodes with equal keys compute identical values, so the
+/// CSE pass interns them onto one node.
+#[derive(Hash, PartialEq, Eq)]
+enum StructKey {
+    Source(u64),
+    Multiply(u64, u64),
+    MultiplySub(u64, u64, u64),
+    Subtract(u64, u64),
+    Scale(u64, u64),
+    Transpose(u64),
+    Invert(String, u64),
+    Quadrant(u64, crate::blockmatrix::Quadrant),
+    Arrange(u64, u64, u64, u64),
+}
+
+/// Build a key from an operator plus explicit child ids — node ids for
+/// interning canonical nodes, *representative* ids for the pre-pass that
+/// detects structural sharing in the original DAG.
+fn key_with(op: &ExprOp, kids: &[u64]) -> StructKey {
+    match op {
+        ExprOp::Source(_) => unreachable!("sources are canonical by identity"),
+        ExprOp::Multiply(..) => StructKey::Multiply(kids[0], kids[1]),
+        ExprOp::MultiplySub(..) => StructKey::MultiplySub(kids[0], kids[1], kids[2]),
+        ExprOp::Subtract(..) => StructKey::Subtract(kids[0], kids[1]),
+        ExprOp::Scale(_, s) => StructKey::Scale(kids[0], s.to_bits()),
+        ExprOp::Transpose(..) => StructKey::Transpose(kids[0]),
+        ExprOp::Invert { algo, .. } => StructKey::Invert(algo.clone(), kids[0]),
+        ExprOp::Quadrant { which, .. } => StructKey::Quadrant(kids[0], *which),
+        ExprOp::Arrange(..) => StructKey::Arrange(kids[0], kids[1], kids[2], kids[3]),
+    }
+}
+
+fn struct_key(op: &ExprOp) -> StructKey {
+    let kids: Vec<u64> = match op {
+        ExprOp::Source(_) => Vec::new(),
+        ExprOp::Multiply(a, b) | ExprOp::Subtract(a, b) => vec![a.id(), b.id()],
+        ExprOp::MultiplySub(a, b, d) => vec![a.id(), b.id(), d.id()],
+        ExprOp::Scale(x, _) | ExprOp::Transpose(x) => vec![x.id()],
+        ExprOp::Invert { child, .. } | ExprOp::Quadrant { child, .. } => vec![child.id()],
+        ExprOp::Arrange(a, b, c, d) => vec![a.id(), b.id(), c.id(), d.id()],
+    };
+    key_with(op, &kids)
+}
+
+/// The rewrite engine. One instance optimizes one (or more) roots; the
+/// interning table is per-instance, while per-node canonical forms are
+/// memoized on the nodes themselves, so repeated optimization — including
+/// of subtrees shared with previously optimized plans — is stable and
+/// cheap.
+pub struct Optimizer {
+    config: OptimizerConfig,
+    interned: HashMap<StructKey, MatExpr>,
+    /// Reference counts of the original DAG under the current root, keyed
+    /// by *structural representative* — pointer-shared and
+    /// structurally-duplicate consumers both count, so the sharing guards
+    /// of the fusion and pushdown rules cannot be evaded by building the
+    /// same subtree twice.
+    use_counts: HashMap<u64, usize>,
+    /// Original node id → structural representative id (first node seen
+    /// with that structure).
+    reps: HashMap<u64, u64>,
+    rep_interned: HashMap<StructKey, u64>,
+}
+
+impl Optimizer {
+    pub fn new(config: OptimizerConfig) -> Self {
+        Optimizer {
+            config,
+            interned: HashMap::new(),
+            use_counts: HashMap::new(),
+            reps: HashMap::new(),
+            rep_interned: HashMap::new(),
+        }
+    }
+
+    /// Structural representative of an original node: two nodes share a
+    /// representative iff they compute the same value (same op over
+    /// representative-equal children, sources by identity).
+    fn rep_of(&mut self, e: &MatExpr) -> u64 {
+        if let Some(&r) = self.reps.get(&e.id()) {
+            return r;
+        }
+        let r = match e.op() {
+            ExprOp::Source(_) => e.id(),
+            op => {
+                let kid_reps: Vec<u64> =
+                    e.children().iter().map(|c| self.rep_of(c)).collect();
+                let key = key_with(op, &kid_reps);
+                *self.rep_interned.entry(key).or_insert_with(|| e.id())
+            }
+        };
+        self.reps.insert(e.id(), r);
+        r
+    }
+
+    /// Canonicalize + rewrite `root`, returning the optimized plan. With
+    /// [`OptimizerConfig::none`] this is the identity (modulo fresh node
+    /// identities for non-source nodes).
+    pub fn optimize(&mut self, root: &MatExpr) -> Result<MatExpr> {
+        self.count_uses(root);
+        let out = self.canon(root)?;
+        if self.config.cse {
+            mark_shared(&out);
+        }
+        Ok(out)
+    }
+
+    /// Count every parent→child edge of the original DAG (each unique
+    /// parent contributes once per child slot), attributed to the child's
+    /// structural representative.
+    fn count_uses(&mut self, root: &MatExpr) {
+        let mut visited = HashSet::new();
+        let mut stack = vec![root.clone()];
+        while let Some(e) = stack.pop() {
+            if !visited.insert(e.id()) {
+                continue;
+            }
+            for c in e.children() {
+                let rep = self.rep_of(&c);
+                *self.use_counts.entry(rep).or_insert(0) += 1;
+                stack.push(c);
+            }
+        }
+    }
+
+    fn intern(&mut self, op: ExprOp, nblocks: usize, block_size: usize) -> MatExpr {
+        if !self.config.cse {
+            return MatExpr::with_op(op, nblocks, block_size);
+        }
+        let key = struct_key(&op);
+        if let Some(hit) = self.interned.get(&key) {
+            return hit.clone();
+        }
+        let e = MatExpr::with_op(op, nblocks, block_size);
+        self.interned.insert(key, e.clone());
+        e
+    }
+
+    /// `Transpose(z)` with cancellation: strips one transpose if `z` is
+    /// already a transpose, else wraps one.
+    fn transpose_of(&mut self, z: &MatExpr) -> MatExpr {
+        if let ExprOp::Transpose(inner) = z.op() {
+            return inner.clone();
+        }
+        self.intern(
+            ExprOp::Transpose(z.clone()),
+            z.nblocks(),
+            z.block_size(),
+        )
+    }
+
+    fn canon(&mut self, e: &MatExpr) -> Result<MatExpr> {
+        if let Some(hit) = e.canonical_for(self.config) {
+            return Ok(hit);
+        }
+        let (nb, bs) = (e.nblocks(), e.block_size());
+        let out = match e.op() {
+            // Sources are canonical by identity.
+            ExprOp::Source(_) => e.clone(),
+
+            ExprOp::Multiply(a, b) => {
+                let ca = self.canon(a)?;
+                let cb = self.canon(b)?;
+                self.intern(ExprOp::Multiply(ca, cb), nb, bs)
+            }
+
+            ExprOp::MultiplySub(a, b, d) => {
+                let ca = self.canon(a)?;
+                let cb = self.canon(b)?;
+                let cd = self.canon(d)?;
+                self.intern(ExprOp::MultiplySub(ca, cb, cd), nb, bs)
+            }
+
+            ExprOp::Subtract(a, b) => {
+                let ca = self.canon(a)?;
+                let cb = self.canon(b)?;
+                // Fusion rule: A·B − D runs the subtraction inside the
+                // multiply's reduce stage. Guards (contract rule 3): the
+                // product must not be shared with another consumer —
+                // pointer-shared *or* structurally duplicated (it would be
+                // computed twice) — and must not already be materialized
+                // (the cached value would go unused).
+                let a_rep = self.rep_of(a);
+                let shared = self.use_counts.get(&a_rep).copied().unwrap_or(1) > 1;
+                let fused = if self.config.fuse_multiply_sub
+                    && !shared
+                    && ca.cached_value().is_none()
+                {
+                    match ca.op() {
+                        ExprOp::Multiply(x, y) => Some((x.clone(), y.clone())),
+                        _ => None,
+                    }
+                } else {
+                    None
+                };
+                match fused {
+                    Some((x, y)) => self.intern(ExprOp::MultiplySub(x, y, cb), nb, bs),
+                    None => self.intern(ExprOp::Subtract(ca, cb), nb, bs),
+                }
+            }
+
+            ExprOp::Scale(x, s) => {
+                let cx = self.canon(x)?;
+                let s = *s;
+                if self.config.fold_scalars {
+                    // Identity scale: exact, always drop.
+                    if s == 1.0 {
+                        return finish(e, self.config, cx);
+                    }
+                    // Nested folding fires only when a factor is ±1
+                    // (contract rule 1: multiplying by ±1 is exact and
+                    // sign-symmetric, so s·(t·x) and (s·t)·x agree bit for
+                    // bit — general factors would re-associate a rounding
+                    // step and make plan_optimizer observable in the last
+                    // ulp, or in overflow behaviour).
+                    let folded = match cx.op() {
+                        ExprOp::Scale(y, t) if s == -1.0 || *t == 1.0 || *t == -1.0 => {
+                            Some((y.clone(), s * t))
+                        }
+                        _ => None,
+                    };
+                    match folded {
+                        Some((y, f)) if f == 1.0 => y,
+                        Some((y, f)) => self.intern(ExprOp::Scale(y, f), nb, bs),
+                        None => self.intern(ExprOp::Scale(cx, s), nb, bs),
+                    }
+                } else {
+                    self.intern(ExprOp::Scale(cx, s), nb, bs)
+                }
+            }
+
+            ExprOp::Transpose(x) => {
+                let cx = self.canon(x)?;
+                if self.config.transpose_pushdown {
+                    if let ExprOp::Transpose(inner) = cx.op() {
+                        // (Aᵀ)ᵀ = A.
+                        return finish(e, self.config, inner.clone());
+                    }
+                    // (A·B)ᵀ = Bᵀ·Aᵀ — fire only when an operand is itself
+                    // a transpose, so at least one stage cancels, and only
+                    // when the product is this transpose's alone (contract
+                    // rule 3: a shared or already-materialized product
+                    // would still execute for its other consumer, making
+                    // the rewrite a net extra multiply).
+                    let x_rep = self.rep_of(x);
+                    let x_shared = self.use_counts.get(&x_rep).copied().unwrap_or(1) > 1;
+                    let pushdown = if x_shared || cx.cached_value().is_some() {
+                        None
+                    } else {
+                        match cx.op() {
+                            ExprOp::Multiply(a, b)
+                                if matches!(a.op(), ExprOp::Transpose(_))
+                                    || matches!(b.op(), ExprOp::Transpose(_)) =>
+                            {
+                                Some((a.clone(), b.clone()))
+                            }
+                            _ => None,
+                        }
+                    };
+                    if let Some((a, b)) = pushdown {
+                        let tb = self.transpose_of(&b);
+                        let ta = self.transpose_of(&a);
+                        self.intern(ExprOp::Multiply(tb, ta), nb, bs)
+                    } else {
+                        self.intern(ExprOp::Transpose(cx), nb, bs)
+                    }
+                } else {
+                    self.intern(ExprOp::Transpose(cx), nb, bs)
+                }
+            }
+
+            ExprOp::Invert { algo, child } => {
+                let cc = self.canon(child)?;
+                let algo = algo.clone();
+                self.intern(ExprOp::Invert { algo, child: cc }, nb, bs)
+            }
+
+            ExprOp::Quadrant { child, which } => {
+                let cc = self.canon(child)?;
+                let which = *which;
+                self.intern(ExprOp::Quadrant { child: cc, which }, nb, bs)
+            }
+
+            ExprOp::Arrange(a, b, c, d) => {
+                let ca = self.canon(a)?;
+                let cb = self.canon(b)?;
+                let cc = self.canon(c)?;
+                let cd = self.canon(d)?;
+                self.intern(ExprOp::Arrange(ca, cb, cc, cd), nb, bs)
+            }
+        };
+        finish(e, self.config, out)
+    }
+}
+
+/// Store the canonical form on the original node and return it.
+fn finish(original: &MatExpr, config: OptimizerConfig, canonical: MatExpr) -> Result<MatExpr> {
+    original.set_canonical(config, canonical.clone());
+    Ok(canonical)
+}
+
+/// CSE cache marking: any node referenced by more than one parent in the
+/// optimized DAG is an automatic `cache()` point (sources excluded — they
+/// are already materialized). The flag is *stored*, not or-ed, so a node
+/// reused by a later plan where it is no longer shared is re-marked
+/// accurately for that plan's `explain` and plan-node metrics.
+fn mark_shared(root: &MatExpr) {
+    let mut indegree: HashMap<u64, usize> = HashMap::new();
+    let mut nodes: Vec<MatExpr> = Vec::new();
+    let mut visited = HashSet::new();
+    let mut stack = vec![root.clone()];
+    while let Some(e) = stack.pop() {
+        if !visited.insert(e.id()) {
+            continue;
+        }
+        for c in e.children() {
+            *indegree.entry(c.id()).or_insert(0) += 1;
+            stack.push(c);
+        }
+        nodes.push(e);
+    }
+    for e in nodes {
+        let shared = indegree.get(&e.id()).copied().unwrap_or(0) >= 2
+            && !matches!(e.op(), ExprOp::Source(_));
+        e.set_cse_cached(shared);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::blockmatrix::BlockMatrix;
+
+    fn src(nb: usize, bs: usize) -> MatExpr {
+        MatExpr::source(BlockMatrix::zeros(nb, bs).unwrap())
+    }
+
+    fn optimize(cfg: OptimizerConfig, e: &MatExpr) -> MatExpr {
+        Optimizer::new(cfg).optimize(e).unwrap()
+    }
+
+    #[test]
+    fn fusion_rewrites_multiply_subtract() {
+        let (a, b, d) = (src(2, 4), src(2, 4), src(2, 4));
+        let expr = a.multiply(&b).unwrap().subtract(&d).unwrap();
+        let opt = optimize(OptimizerConfig::all(), &expr);
+        assert!(matches!(opt.op(), ExprOp::MultiplySub(..)), "{opt:?}");
+        // With the rule off, the shape is preserved.
+        let raw = optimize(OptimizerConfig::none(), &expr);
+        assert!(matches!(raw.op(), ExprOp::Subtract(..)));
+    }
+
+    #[test]
+    fn fusion_respects_sharing_guard() {
+        let (a, b, d) = (src(2, 4), src(2, 4), src(2, 4));
+        let prod = a.multiply(&b).unwrap();
+        // prod feeds both the subtract AND another consumer: fusing would
+        // compute the product twice.
+        let other = prod.scale(2.0);
+        let root = prod
+            .subtract(&d)
+            .unwrap()
+            .subtract(&other)
+            .unwrap();
+        let opt = optimize(OptimizerConfig::all(), &root);
+        fn count_ops(e: &MatExpr, name: &str) -> usize {
+            let mut seen = std::collections::HashSet::new();
+            let mut stack = vec![e.clone()];
+            let mut n = 0;
+            while let Some(x) = stack.pop() {
+                if !seen.insert(x.id()) {
+                    continue;
+                }
+                if x.op().name() == name {
+                    n += 1;
+                }
+                stack.extend(x.children());
+            }
+            n
+        }
+        assert_eq!(count_ops(&opt, "multiply_sub"), 0, "shared product must not fuse");
+        assert_eq!(count_ops(&opt, "multiply"), 1);
+    }
+
+    #[test]
+    fn double_transpose_cancels() {
+        let a = src(2, 4);
+        let expr = a.transpose().transpose();
+        let opt = optimize(OptimizerConfig::all(), &expr);
+        assert_eq!(opt.id(), a.id(), "(Aᵀ)ᵀ must canonicalize to A itself");
+    }
+
+    #[test]
+    fn transpose_pushdown_cancels_inner_transpose() {
+        let (a, b) = (src(2, 4), src(2, 4));
+        // (Aᵀ·B)ᵀ  →  Bᵀ·A: one transpose instead of two.
+        let expr = a.transpose().multiply(&b).unwrap().transpose();
+        let opt = optimize(OptimizerConfig::all(), &expr);
+        match opt.op() {
+            ExprOp::Multiply(l, r) => {
+                assert!(matches!(l.op(), ExprOp::Transpose(_)));
+                assert_eq!(r.id(), a.id());
+            }
+            other => panic!("expected multiply, got {}", other.name()),
+        }
+        // Plain (A·B)ᵀ keeps its single transpose — pushdown would trade
+        // one transpose stage for two.
+        let plain = a.multiply(&b).unwrap().transpose();
+        let opt = optimize(OptimizerConfig::all(), &plain);
+        assert!(matches!(opt.op(), ExprOp::Transpose(_)));
+    }
+
+    #[test]
+    fn scalar_folding_is_exact_only() {
+        let a = src(2, 4);
+        // Double negation folds to the identity (bit-exact).
+        let expr = a.scale(-1.0).scale(-1.0);
+        let opt = optimize(OptimizerConfig::all(), &expr);
+        assert_eq!(opt.id(), a.id(), "(−1)·(−1) folds to the identity scale");
+        // A ±1 factor folds into the other factor (bit-exact).
+        let expr = a.scale(3.0).scale(-1.0);
+        let opt = optimize(OptimizerConfig::all(), &expr);
+        match opt.op() {
+            ExprOp::Scale(x, s) => {
+                assert_eq!(x.id(), a.id());
+                assert_eq!(*s, -3.0);
+            }
+            other => panic!("expected scale, got {}", other.name()),
+        }
+        // General factors do NOT fold: s·(t·x) vs (s·t)·x re-associates a
+        // rounding step, so the optimizer must leave the nest alone.
+        let expr = a.scale(0.3).scale(0.5);
+        let opt = optimize(OptimizerConfig::all(), &expr);
+        match opt.op() {
+            ExprOp::Scale(x, s) => {
+                assert_eq!(*s, 0.5);
+                assert!(matches!(x.op(), ExprOp::Scale(_, t) if *t == 0.3));
+            }
+            other => panic!("expected nested scale, got {}", other.name()),
+        }
+        // Identity scale drops.
+        let opt = optimize(OptimizerConfig::all(), &a.scale(1.0));
+        assert_eq!(opt.id(), a.id());
+    }
+
+    #[test]
+    fn fusion_guard_catches_structural_duplicates() {
+        // The reviewer scenario: two independently built, structurally
+        // identical products — one under a subtract. Fusing would compute
+        // the product twice (once fused, once for the CSE-shared node);
+        // the representative-keyed use counts must block it.
+        let (a, b, d) = (src(2, 4), src(2, 4), src(2, 4));
+        let m1 = a.multiply(&b).unwrap();
+        let m2 = a.multiply(&b).unwrap();
+        let root = m1.subtract(&d).unwrap().multiply(&m2).unwrap();
+        let opt = optimize(OptimizerConfig::all(), &root);
+        let mut multiply_subs = 0;
+        let mut multiplies = 0;
+        let mut seen = std::collections::HashSet::new();
+        let mut stack = vec![opt];
+        while let Some(x) = stack.pop() {
+            if !seen.insert(x.id()) {
+                continue;
+            }
+            match x.op() {
+                ExprOp::MultiplySub(..) => multiply_subs += 1,
+                ExprOp::Multiply(..) => multiplies += 1,
+                _ => {}
+            }
+            stack.extend(x.children());
+        }
+        assert_eq!(multiply_subs, 0, "duplicated product must not fuse");
+        assert_eq!(multiplies, 2, "shared product + root multiply");
+    }
+
+    #[test]
+    fn pushdown_guard_respects_shared_products() {
+        // p = Aᵀ·B consumed both directly and through a transpose: the
+        // pushdown would build a second multiply while p still executes
+        // for its direct consumer — the guard must keep the cheap narrow
+        // transpose instead.
+        let (a, b) = (src(2, 4), src(2, 4));
+        let p = a.transpose().multiply(&b).unwrap();
+        let root = p.subtract(&p.transpose()).unwrap();
+        let opt = optimize(OptimizerConfig::all(), &root);
+        let mut multiplies = 0;
+        let mut seen = std::collections::HashSet::new();
+        let mut stack = vec![opt];
+        while let Some(x) = stack.pop() {
+            if !seen.insert(x.id()) {
+                continue;
+            }
+            if matches!(x.op(), ExprOp::Multiply(..)) {
+                multiplies += 1;
+            }
+            stack.extend(x.children());
+        }
+        assert_eq!(multiplies, 1, "shared product must not be duplicated");
+    }
+
+    #[test]
+    fn cse_cache_marks_are_per_plan_not_sticky() {
+        let (a, b, c) = (src(2, 4), src(2, 4), src(2, 4));
+        let shared = a.multiply(&b).unwrap();
+        // Plan 1: `shared` has two consumers → marked as a cache point.
+        let plan1 = shared.subtract(&shared.transpose()).unwrap();
+        let opt1 = optimize(OptimizerConfig::all(), &plan1);
+        let canonical_shared = opt1
+            .children()
+            .into_iter()
+            .find(|k| matches!(k.op(), ExprOp::Multiply(..)))
+            .expect("left child is the canonical product");
+        assert!(canonical_shared.is_cse_cached());
+        // Plan 2 reuses the same subtree once: the mark must be recomputed
+        // for this plan, not inherited from plan 1.
+        let plan2 = shared.multiply(&c).unwrap();
+        let _ = optimize(OptimizerConfig::all(), &plan2);
+        assert!(
+            !canonical_shared.is_cse_cached(),
+            "cache mark must reflect the most recently optimized plan"
+        );
+    }
+
+    #[test]
+    fn cse_interns_structural_duplicates_and_marks_cache() {
+        let (a, b) = (src(2, 4), src(2, 4));
+        // Two independently built, structurally identical products.
+        let m1 = a.multiply(&b).unwrap();
+        let m2 = a.multiply(&b).unwrap();
+        assert_ne!(m1.id(), m2.id());
+        let root = m1.multiply(&m2).unwrap();
+        let opt = optimize(OptimizerConfig::all(), &root);
+        let kids = opt.children();
+        assert_eq!(kids[0].id(), kids[1].id(), "CSE must intern the duplicates");
+        assert!(kids[0].is_cse_cached(), "shared node is a cache point");
+        assert_eq!(opt.node_count(), 4, "a, b, shared product, root");
+        // Without CSE the duplicates stay distinct.
+        let raw = optimize(OptimizerConfig::none(), &root);
+        let kids = raw.children();
+        assert_ne!(kids[0].id(), kids[1].id());
+    }
+
+    #[test]
+    fn canonicalization_is_stable_across_calls() {
+        let (a, b) = (src(2, 4), src(2, 4));
+        let m = a.multiply(&b).unwrap();
+        let first = optimize(OptimizerConfig::all(), &m);
+        let second = optimize(OptimizerConfig::all(), &m);
+        assert_eq!(
+            first.id(),
+            second.id(),
+            "per-node canonical memo must keep identities stable"
+        );
+    }
+}

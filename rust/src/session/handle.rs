@@ -1,42 +1,58 @@
-//! [`DistMatrix`]: a session-bound handle over a [`BlockMatrix`] whose
-//! methods run on the owning session's cluster and backend.
+//! [`DistMatrix`]: a session-bound handle over a lazy [`MatExpr`] plan.
+//!
+//! Operator methods (`multiply`, `subtract`, `inverse`, …) are **plan
+//! constructors**: they extend the expression DAG and return instantly.
+//! Distributed work happens only at materialization points — [`collect`],
+//! [`to_dense`], [`block_matrix`], [`inverse_residual`], `solve_dense` —
+//! where the session optimizes the plan (fusion, transpose pushdown,
+//! scalar folding, CSE) and lowers it onto the partitioner-aware
+//! `BlockMatrix` ops. Results are memoized per plan node, so a handle
+//! materializes once no matter how many times it is read, and handles
+//! sharing subexpressions share their execution.
+//!
+//! [`collect`]: DistMatrix::collect
+//! [`to_dense`]: DistMatrix::to_dense
+//! [`block_matrix`]: DistMatrix::block_matrix
+//! [`inverse_residual`]: DistMatrix::inverse_residual
 
 use crate::blockmatrix::BlockMatrix;
 use crate::error::{Result, SpinError};
 use crate::linalg::{self, Matrix};
+use crate::plan::MatExpr;
 use crate::session::SpinSession;
 
-/// A distributed square matrix bound to a [`SpinSession`].
+/// A distributed square matrix bound to a [`SpinSession`] — a lazy plan
+/// handle, not a materialized value.
 ///
 /// Binary operations require both operands to share a block grid (the same
-/// `nblocks` × `block_size` geometry); they do not need to come from the
-/// same constructor. Handles borrow the session immutably, so any number of
+/// `nblocks` × `block_size` geometry); mismatches error at plan
+/// *construction*. Handles borrow the session immutably, so any number of
 /// them can be alive at once.
 #[derive(Clone)]
 pub struct DistMatrix<'s> {
     session: &'s SpinSession,
-    inner: BlockMatrix,
+    expr: MatExpr,
 }
 
 impl<'s> DistMatrix<'s> {
-    pub(crate) fn new(session: &'s SpinSession, inner: BlockMatrix) -> Self {
-        DistMatrix { session, inner }
+    pub(crate) fn new(session: &'s SpinSession, expr: MatExpr) -> Self {
+        DistMatrix { session, expr }
     }
 
     // ---------- geometry / access ----------
 
     /// Full matrix order `n`.
     pub fn n(&self) -> usize {
-        self.inner.n()
+        self.expr.n()
     }
 
     /// Grid edge (the paper's split count `b`).
     pub fn nblocks(&self) -> usize {
-        self.inner.nblocks()
+        self.expr.nblocks()
     }
 
     pub fn block_size(&self) -> usize {
-        self.inner.block_size()
+        self.expr.block_size()
     }
 
     /// The owning session.
@@ -44,93 +60,99 @@ impl<'s> DistMatrix<'s> {
         self.session
     }
 
-    /// Borrow the underlying distributed matrix.
-    pub fn block_matrix(&self) -> &BlockMatrix {
-        &self.inner
+    /// The underlying lazy expression.
+    pub fn expr(&self) -> &MatExpr {
+        &self.expr
     }
 
-    /// Unwrap into the underlying distributed matrix.
-    pub fn into_block_matrix(self) -> BlockMatrix {
-        self.inner
+    /// Force evaluation (optimize + lower + execute). Idempotent: the
+    /// result is memoized, so repeated calls (and every other
+    /// materialization point) reuse it.
+    pub fn collect(&self) -> Result<()> {
+        self.session.materialize(&self.expr).map(|_| ())
     }
 
-    /// Assemble into one dense matrix on the driver.
+    /// Materialize into the underlying distributed matrix.
+    pub fn block_matrix(&self) -> Result<BlockMatrix> {
+        self.session.materialize(&self.expr)
+    }
+
+    /// Materialize and unwrap into the underlying distributed matrix.
+    pub fn into_block_matrix(self) -> Result<BlockMatrix> {
+        self.session.materialize(&self.expr)
+    }
+
+    /// Materialize and assemble into one dense matrix on the driver.
     pub fn to_dense(&self) -> Result<Matrix> {
-        self.inner.to_dense()
+        self.session.materialize(&self.expr)?.to_dense()
     }
 
-    // ---------- algebra ----------
+    /// Render this handle's *optimized* plan — which fusions fired, where
+    /// the CSE caches sit, and the predicted shuffle stages per node.
+    pub fn explain(&self) -> Result<String> {
+        self.session.explain_expr(&self.expr)
+    }
 
-    /// A⁻¹ with the session's default algorithm.
+    // ---------- algebra (plan constructors) ----------
+
+    fn derived(&self, expr: MatExpr) -> DistMatrix<'s> {
+        DistMatrix::new(self.session, expr)
+    }
+
+    /// A⁻¹ with the session's default algorithm (lazy).
     pub fn inverse(&self) -> Result<DistMatrix<'s>> {
         self.session.invert(self)
     }
 
-    /// A⁻¹ through a named registry entry (`"spin"`, `"lu"`, …).
+    /// A⁻¹ through a named registry entry (`"spin"`, `"lu"`, …). The name
+    /// is validated now; the inversion runs at materialization.
     pub fn inverse_with(&self, algorithm: &str) -> Result<DistMatrix<'s>> {
         self.session.invert_with(algorithm, self)
     }
 
-    /// C = A·B (distributed block matmul).
+    /// C = A·B (lazy distributed block matmul).
     pub fn multiply(&self, other: &DistMatrix<'_>) -> Result<DistMatrix<'s>> {
-        let out = self.inner.multiply(
-            self.session.cluster(),
-            self.session.kernels(),
-            other.block_matrix(),
-        )?;
-        Ok(DistMatrix::new(self.session, out))
+        Ok(self.derived(self.expr.multiply(other.expr())?))
     }
 
-    /// C = A·B − D, fused: the subtraction runs inside the multiply's
-    /// reduce stage (one shuffle total — the shape of SPIN's Schur step).
+    /// C = A·B − D as an explicitly fused plan node. Composing
+    /// [`multiply`](Self::multiply) + [`subtract`](Self::subtract) now
+    /// produces the same fused stage through the optimizer — this method
+    /// remains for symmetry and for `plan_optimizer = false` runs.
     pub fn multiply_sub(
         &self,
         other: &DistMatrix<'_>,
         d: &DistMatrix<'_>,
     ) -> Result<DistMatrix<'s>> {
-        let out = self.inner.multiply_sub(
-            self.session.cluster(),
-            self.session.kernels(),
-            other.block_matrix(),
-            d.block_matrix(),
-        )?;
-        Ok(DistMatrix::new(self.session, out))
+        Ok(self.derived(self.expr.multiply_sub(other.expr(), d.expr())?))
     }
 
-    /// C = A − B.
+    /// C = A − B (lazy).
     pub fn subtract(&self, other: &DistMatrix<'_>) -> Result<DistMatrix<'s>> {
-        let out = self.inner.subtract(
-            self.session.cluster(),
-            self.session.kernels(),
-            other.block_matrix(),
-        )?;
-        Ok(DistMatrix::new(self.session, out))
+        Ok(self.derived(self.expr.subtract(other.expr())?))
     }
 
-    /// C = s·A.
+    /// C = s·A (lazy).
     pub fn scalar_mul(&self, s: f64) -> Result<DistMatrix<'s>> {
-        let out = self
-            .inner
-            .scalar_mul(self.session.cluster(), self.session.kernels(), s)?;
-        Ok(DistMatrix::new(self.session, out))
+        Ok(self.derived(self.expr.scale(s)))
     }
 
-    /// Aᵀ (one distributed map).
+    /// Aᵀ (lazy).
     pub fn transpose(&self) -> DistMatrix<'s> {
-        DistMatrix::new(self.session, self.inner.transpose(self.session.cluster()))
+        self.derived(self.expr.transpose())
     }
 
     // ---------- solver workloads ----------
 
     /// Solve A·X = B for a distributed right-hand side: X = A⁻¹·B with the
-    /// session's default inversion algorithm.
+    /// session's default inversion algorithm (lazy).
     pub fn solve(&self, rhs: &DistMatrix<'_>) -> Result<DistMatrix<'s>> {
         self.solve_with(self.session.default_algorithm(), rhs)
     }
 
     /// [`solve`](Self::solve) through a named registry entry.
     pub fn solve_with(&self, algorithm: &str, rhs: &DistMatrix<'_>) -> Result<DistMatrix<'s>> {
-        self.inner.check_same_grid(rhs.block_matrix(), "solve")?;
+        self.expr.check_same_grid(rhs.expr(), "solve")?;
         self.inverse_with(algorithm)?.multiply(rhs)
     }
 
@@ -153,11 +175,10 @@ impl<'s> DistMatrix<'s> {
     /// Moore–Penrose pseudo-inverse M⁺ = (MᵀM)⁻¹·Mᵀ for full-column-rank
     /// input, with the session's default inversion algorithm.
     ///
-    /// The Gram matrix MᵀM is symmetric positive definite whenever M has
-    /// full column rank — exactly the input class the SPIN recursion is
-    /// specified for. For an invertible M this equals M⁻¹ (a property the
-    /// tests assert), but it is computed through the normal-equations
-    /// pipeline, so it exercises `transpose` + `multiply` + inversion.
+    /// The whole normal-equations pipeline is one lazy plan: `Mᵀ` is a
+    /// shared subexpression (the Gram product and the final thin product
+    /// both consume it), which the optimizer's CSE pass marks as a cache
+    /// point — it executes once.
     pub fn pseudo_inverse(&self) -> Result<DistMatrix<'s>> {
         self.pseudo_inverse_with(self.session.default_algorithm())
     }
@@ -174,7 +195,7 @@ impl<'s> DistMatrix<'s> {
     // ---------- checks ----------
 
     /// Relative inversion residual ‖A·X − I‖∞ / (‖A‖∞‖X‖∞·n) of a candidate
-    /// inverse `x` against this matrix.
+    /// inverse `x` against this matrix. Materializes both operands.
     pub fn inverse_residual(&self, x: &DistMatrix<'_>) -> Result<f64> {
         Ok(linalg::inverse_residual(&self.to_dense()?, &x.to_dense()?))
     }
@@ -231,7 +252,28 @@ mod tests {
     }
 
     #[test]
-    fn multiply_sub_matches_composed_ops() {
+    fn handles_are_lazy_until_materialized() {
+        let s = session();
+        let a = s.random_seeded(16, 4, 20).unwrap();
+        let b = s.random_seeded(16, 4, 21).unwrap();
+        s.reset_clock();
+        let prod = a.multiply(&b).unwrap();
+        assert_eq!(
+            s.metrics().stages().len(),
+            0,
+            "building a plan must not execute stages"
+        );
+        prod.collect().unwrap();
+        let after_collect = s.metrics().stages().len();
+        assert!(after_collect > 0, "collect materializes");
+        // Re-reading is free: the plan value is memoized.
+        let _ = prod.to_dense().unwrap();
+        let _ = prod.block_matrix().unwrap();
+        assert_eq!(s.metrics().stages().len(), after_collect);
+    }
+
+    #[test]
+    fn composed_multiply_subtract_fuses_like_multiply_sub() {
         let s = session();
         let a = s.random_seeded(16, 4, 9).unwrap();
         let b = s.random_seeded(16, 4, 10).unwrap();
@@ -244,7 +286,25 @@ mod tests {
             .unwrap()
             .to_dense()
             .unwrap();
-        assert!(fused.max_abs_diff(&composed) < 1e-11);
+        assert_eq!(
+            fused.max_abs_diff(&composed),
+            0.0,
+            "optimizer fusion is bit-identical to the explicit fused node"
+        );
+        // Both lowered through multiply_sub: no standalone subtract stage.
+        assert!(s.metrics().method("subtract").is_none());
+    }
+
+    #[test]
+    fn explain_shows_fusion_and_predictions() {
+        let s = session();
+        let a = s.random_seeded(16, 4, 12).unwrap();
+        let b = s.random_seeded(16, 4, 13).unwrap();
+        let d = s.random_seeded(16, 4, 14).unwrap();
+        let plan = a.multiply(&b).unwrap().subtract(&d).unwrap();
+        let text = plan.explain().unwrap();
+        assert!(text.contains("multiply_sub"), "{text}");
+        assert!(text.contains("exchange stage"), "{text}");
     }
 
     #[test]
@@ -301,6 +361,19 @@ mod tests {
         // And it is a left inverse: M⁺·M ≈ I.
         let resid = m.inverse_residual(&pinv).unwrap();
         assert!(resid < 1e-8, "pseudo-inverse residual {resid}");
+    }
+
+    #[test]
+    fn pseudo_inverse_transpose_is_cse_shared() {
+        let s = session();
+        let m = s.random_spd(16, 4).unwrap();
+        let pinv = m.pseudo_inverse().unwrap();
+        pinv.collect().unwrap();
+        // Mᵀ feeds both the Gram product and the final product, but the
+        // memoized plan runs the transpose stage exactly once.
+        assert_eq!(s.metrics().method("transpose").unwrap().calls, 1);
+        let text = pinv.explain().unwrap();
+        assert!(text.contains("cache(transpose"), "{text}");
     }
 
     #[test]

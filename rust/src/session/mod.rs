@@ -18,14 +18,22 @@
 //! }
 //! ```
 //!
-//! Matrix handles ([`DistMatrix`]) are borrowed from the session, so every
-//! distributed method (`inverse`, `multiply`, `multiply_sub`, `solve`,
-//! `pseudo_inverse`, …) runs on the session's cluster and is attributed to
-//! its metrics registry. Handles stay grid-partitioned across operations
-//! (the cluster's partitioner contract), so chained calls never
-//! re-shuffle for alignment and never round-trip the driver —
-//! `session.metrics().driver_collects()` stays 0 and per-method
-//! `shuffle_bytes`/`shuffle_stages` expose what each op really moved.
+//! Matrix handles ([`DistMatrix`]) are borrowed from the session and are
+//! **lazy**: operator methods (`inverse`, `multiply`, `multiply_sub`,
+//! `solve`, `pseudo_inverse`, …) build a [`crate::plan::MatExpr`] DAG and
+//! return immediately. Materialization points (`collect`, `to_dense`,
+//! `inverse_residual`, `solve_dense`, `block_matrix`) run the plan
+//! optimizer — multiply+subtract fusion, transpose pushdown, scalar
+//! folding, CSE with automatic cache insertion — and lower the optimized
+//! plan onto the session's cluster, attributing per-plan-node metrics to
+//! its registry. [`DistMatrix::explain`] / [`SpinSession::explain_invert`]
+//! print the optimized plan with predicted shuffle stages per node.
+//!
+//! Handles stay grid-partitioned across operations (the cluster's
+//! partitioner contract), so chained calls never re-shuffle for alignment
+//! and never round-trip the driver — `session.metrics().driver_collects()`
+//! stays 0 and per-method `shuffle_bytes`/`shuffle_stages` expose what
+//! each op really moved.
 
 mod handle;
 
@@ -41,6 +49,7 @@ use crate::cluster::{Cluster, MetricsSnapshot};
 use crate::config::{BackendKind, ClusterConfig, GeneratorKind, JobConfig, LeafMethod};
 use crate::error::{Result, SpinError};
 use crate::linalg::Matrix;
+use crate::plan::{render_plan, MatExpr, Optimizer, OptimizerConfig, PlanExec};
 use crate::runtime::{make_backend, BlockKernels};
 
 /// Per-session job parameters applied to every operation (a [`JobConfig`]
@@ -281,24 +290,90 @@ impl SpinSession {
         Ok(self.wrap(BlockMatrix::identity(n, block_size)?))
     }
 
-    /// Bind an existing [`BlockMatrix`] to this session.
+    /// Bind an existing [`BlockMatrix`] to this session (a plan source).
     pub fn wrap(&self, matrix: BlockMatrix) -> DistMatrix<'_> {
-        DistMatrix::new(self, matrix)
+        self.wrap_expr(MatExpr::source(matrix))
+    }
+
+    /// Bind a lazy expression to this session.
+    pub fn wrap_expr(&self, expr: MatExpr) -> DistMatrix<'_> {
+        DistMatrix::new(self, expr)
     }
 
     // ---------- algorithm dispatch ----------
 
-    /// Invert through a named registry entry.
+    /// A⁻¹ through a named registry entry, as a lazy plan node. The name
+    /// is validated now (unknown schemes fail immediately); the inversion
+    /// itself runs when the returned handle is materialized.
     pub fn invert_with(&self, algorithm: &str, m: &DistMatrix<'_>) -> Result<DistMatrix<'_>> {
-        let algo = self.registry.get(algorithm)?;
-        let job = self.job_for(m.n(), m.block_size());
-        let inv = algo.invert(&self.cluster, self.kernels.as_ref(), m.block_matrix(), &job)?;
-        Ok(self.wrap(inv))
+        self.registry.get(algorithm)?; // fail fast on unknown names
+        Ok(self.wrap_expr(m.expr().invert(algorithm)))
     }
 
-    /// Invert with the session's default algorithm.
+    /// Invert with the session's default algorithm (lazy).
     pub fn invert(&self, m: &DistMatrix<'_>) -> Result<DistMatrix<'_>> {
         self.invert_with(&self.default_algo, m)
+    }
+
+    // ---------- plan evaluation / explain ----------
+
+    /// The optimizer configuration implied by the cluster's
+    /// `plan_optimizer` knob.
+    pub fn optimizer_config(&self) -> OptimizerConfig {
+        OptimizerConfig::from_cluster(self.cluster.config())
+    }
+
+    /// Materialize a plan on this session's cluster: optimize, lower onto
+    /// the block ops, resolve `invert` nodes through the algorithm
+    /// registry. Memoized per plan node — re-materializing is free.
+    pub(crate) fn materialize(&self, expr: &MatExpr) -> Result<BlockMatrix> {
+        let exec = PlanExec::new(&self.cluster, self.kernels.as_ref());
+        exec.eval_with(expr, &|algo: &str, m: &BlockMatrix| {
+            let scheme = self.registry.get(algo)?;
+            let job = self.job_for(m.n(), m.block_size());
+            scheme.invert(&self.cluster, self.kernels.as_ref(), m, &job)
+        })
+    }
+
+    /// Render the optimized form of an expression (the engine behind
+    /// [`DistMatrix::explain`]).
+    pub(crate) fn explain_expr(&self, expr: &MatExpr) -> Result<String> {
+        let optimized = Optimizer::new(self.optimizer_config()).optimize(expr)?;
+        let mut out = format!(
+            "optimized plan ({} nodes -> {}, optimizer {}):\n",
+            expr.node_count(),
+            optimized.node_count(),
+            if self.config().plan_optimizer { "on" } else { "off" },
+        );
+        out.push_str(&render_plan(&optimized, self.config().partitioner_aware));
+        Ok(out)
+    }
+
+    /// Print one optimized recursion level of `algorithm` at the given
+    /// geometry — the session-level `explain()` behind `spin explain`.
+    /// Algorithms that expose no plan render as a single opaque `invert`
+    /// node.
+    pub fn explain_invert(&self, algorithm: &str, n: usize, block_size: usize) -> Result<String> {
+        let scheme = self.registry.get(algorithm)?;
+        if block_size == 0 || n == 0 || n % block_size != 0 {
+            return Err(SpinError::shape(format!(
+                "explain: block size {block_size} does not divide n {n}"
+            )));
+        }
+        // The plan's shape depends only on the grid, so render over a
+        // unit-block zero source — explaining n = 65536 must not allocate
+        // an n×n matrix.
+        let src = MatExpr::source(BlockMatrix::zeros(n / block_size, 1)?);
+        let plan = match scheme.plan(&src)? {
+            Some(p) => p,
+            None => src.invert(algorithm),
+        };
+        let mut out = format!(
+            "{algorithm}: one recursion level at n = {n}, grid {b}x{b} of {block_size}x{block_size}\n",
+            b = n / block_size,
+        );
+        out.push_str(&self.explain_expr(&plan)?);
+        Ok(out)
     }
 
     /// Register an extra inversion scheme after construction.
@@ -460,14 +535,15 @@ mod tests {
     fn session_residual_check_propagates() {
         // With residual_check on, a well-conditioned input still succeeds —
         // the check runs inside the algorithm (exercised by unit tests of
-        // spin_inverse_impl for the failure path).
+        // the spin module for the failure path). `collect` is the
+        // materialization point where the algorithm actually runs.
         let session = SpinSession::builder()
             .cores(2)
             .residual_check(true)
             .build()
             .unwrap();
         let a = session.random(16, 4).unwrap();
-        assert!(a.inverse().is_ok());
+        assert!(a.inverse().unwrap().collect().is_ok());
     }
 
     #[test]
@@ -503,10 +579,39 @@ mod tests {
     }
 
     #[test]
+    fn explain_invert_shows_fusion_and_cse_cache() {
+        let session = SpinSession::local(2).unwrap();
+        let text = session.explain_invert("spin", 256, 32).unwrap();
+        // The Schur step is fused by the optimizer…
+        assert!(text.contains("multiply_sub"), "{text}");
+        // …and the shared intermediates (I, III, VI) are cache points.
+        assert!(text.contains("cache("), "{text}");
+        assert!(text.contains("invert[spin]"), "{text}");
+        assert!(text.contains("exchange stage"), "{text}");
+        // Unknown algorithms fail fast; LU exposes no plan and renders as
+        // one opaque invert node.
+        assert!(session.explain_invert("qr", 64, 16).is_err());
+        let lu = session.explain_invert("lu", 64, 16).unwrap();
+        assert!(lu.contains("invert[lu]"), "{lu}");
+        // Bad geometry errors.
+        assert!(session.explain_invert("spin", 64, 48).is_err());
+    }
+
+    #[test]
+    fn explain_respects_plan_optimizer_toggle() {
+        let mut cfg = ClusterConfig::local(2);
+        cfg.plan_optimizer = false;
+        let session = SpinSession::builder().cluster_config(cfg).build().unwrap();
+        let text = session.explain_invert("spin", 64, 16).unwrap();
+        assert!(text.contains("optimizer off"), "{text}");
+        assert!(!text.contains("multiply_sub"), "unfused plan: {text}");
+    }
+
+    #[test]
     fn wrap_and_from_blocks_round_trip() {
         let session = SpinSession::local(2).unwrap();
         let eye = session.identity(8, 4).unwrap();
-        let blocks: Vec<Block> = eye.block_matrix().rdd_clone().into_items();
+        let blocks: Vec<Block> = eye.block_matrix().unwrap().rdd_clone().into_items();
         let again = session.from_blocks(blocks, 2, 4).unwrap();
         assert_eq!(
             again
