@@ -10,6 +10,7 @@
 //! spin exp     figure2|figure3|figure4|figure5|table3|all [--smoke|--full]
 //! spin bench   [--smoke] [--out BENCH_spin.json] [--seed N] [--schema-baseline FILE]
 //! spin explain [--n 256 --block-size 32] [--algo spin] [--set plan_optimizer=false]
+//! spin serve   --script JOBS.json [--workers N] [--set cache_budget_bytes=N]
 //! spin info
 //! ```
 
@@ -27,6 +28,7 @@ use crate::experiments::{self, Scale};
 use crate::runtime::Manifest;
 use crate::ser::bin;
 use crate::ser::json::Json;
+use crate::service::{JobSpec, SpinService};
 use crate::session::SpinSession;
 use crate::util::fmt;
 
@@ -52,6 +54,7 @@ fn dispatch(argv: Vec<String>) -> Result<()> {
         "exp" => cmd_exp(args),
         "bench" => cmd_bench(args),
         "explain" => cmd_explain(args),
+        "serve" => cmd_serve(args),
         "info" => cmd_info(args),
         "help" | "--help" | "-h" => {
             print!("{}", usage());
@@ -76,7 +79,9 @@ pub fn usage() -> String {
      \x20 exp      run a paper experiment: figure2|figure3|figure4|figure5|table3|all\n\
      \x20 bench    invert the tracked size sweep, write BENCH_spin.json (perf trajectory)\n\
      \x20 explain  print an algorithm's optimized recursion-level plan (fusion, CSE caches,\n\
-     \x20          predicted shuffle stages per node)\n\
+     \x20          predicted shuffle stages per node, cache decisions + resident bytes)\n\
+     \x20 serve    replay a JobSpec script ({\"jobs\": [...]}) through the multi-tenant\n\
+     \x20          SpinService and print per-job reports (--script FILE, --workers N)\n\
      \x20 info     show cluster config and artifact status\n\
      \n\
      COMMON FLAGS:\n\
@@ -456,6 +461,107 @@ fn cmd_explain(mut args: Args) -> Result<()> {
     Ok(())
 }
 
+/// `spin serve`: the batch driver for the multi-tenant job service.
+/// Reads a `{"jobs": [JobSpec, …]}` script, submits every job to a
+/// [`SpinService`], waits for all of them, and prints one report row per
+/// job plus the service-wide cache summary. `--workers 0` drains the
+/// queue synchronously on this thread (deterministic replay).
+fn cmd_serve(mut args: Args) -> Result<()> {
+    let cfg = cluster_config(&mut args)?;
+    let script = args.flag_value("--script")?.ok_or_else(|| {
+        SpinError::config("serve requires --script FILE (a {\"jobs\": [...]} document)")
+    })?;
+    let workers = args
+        .flag_value("--workers")?
+        .map(|v| {
+            v.parse::<usize>()
+                .map_err(|_| SpinError::config("--workers needs an integer"))
+        })
+        .transpose()?
+        .unwrap_or(2);
+    args.finish()?;
+
+    let specs = JobSpec::parse_script(&Json::from_file(std::path::Path::new(&script))?)?;
+    let service = SpinService::builder()
+        .session_builder(SpinSession::builder().cluster_config(cfg))
+        .workers(workers)
+        .queue_capacity(specs.len().max(1))
+        .build()?;
+    println!(
+        "serving {} job(s) from {script} on {} worker thread(s)",
+        specs.len(),
+        service.worker_count()
+    );
+    let handles = specs
+        .into_iter()
+        .map(|spec| service.submit(spec))
+        .collect::<Result<Vec<_>>>()?;
+    if service.worker_count() == 0 {
+        service.run_pending();
+    }
+
+    let mut table = fmt::Table::new(vec![
+        "job", "tenant", "kind", "label", "status", "stages", "exchanges", "shuffled",
+        "residual",
+    ]);
+    let mut failures = 0usize;
+    for handle in &handles {
+        let spec = handle.spec();
+        let row = match handle.wait() {
+            Ok(out) => vec![
+                handle.id().to_string(),
+                spec.tenant.clone(),
+                spec.kind.name().to_string(),
+                spec.label.clone(),
+                "ok".to_string(),
+                out.metrics.stages().len().to_string(),
+                out.metrics.total_shuffle_stages().to_string(),
+                fmt::bytes(out.metrics.total_shuffle_bytes()),
+                out.residual
+                    .map(|r| format!("{r:.2e}"))
+                    .unwrap_or_else(|| "-".to_string()),
+            ],
+            Err(e) => {
+                failures += 1;
+                vec![
+                    handle.id().to_string(),
+                    spec.tenant.clone(),
+                    spec.kind.name().to_string(),
+                    spec.label.clone(),
+                    format!("FAILED: {e}"),
+                    "-".to_string(),
+                    "-".to_string(),
+                    "-".to_string(),
+                    "-".to_string(),
+                ]
+            }
+        };
+        table.row(row);
+    }
+    print!("{}", table.render());
+    let plans = service.plan_cache_stats();
+    let values = service.cache_stats();
+    println!(
+        "plan cache: {} node(s), {} hit(s), {} miss(es) · values: {} resident in {} entr(ies), \
+         budget {}, {} eviction(s) ({})",
+        plans.entries,
+        plans.hits,
+        plans.misses,
+        fmt::bytes(values.resident_bytes),
+        values.entries,
+        values
+            .budget_bytes
+            .map(fmt::bytes)
+            .unwrap_or_else(|| "unlimited".to_string()),
+        values.evictions,
+        fmt::bytes(values.evicted_bytes),
+    );
+    if failures > 0 {
+        return Err(SpinError::cluster(format!("{failures} job(s) failed")));
+    }
+    Ok(())
+}
+
 /// Deterministic schema + perf gate for `spin bench`: the measured output
 /// must keep the committed baseline's shape, and — where the baseline
 /// carries runs — must not regress the deterministic dataflow counters
@@ -672,7 +778,8 @@ mod tests {
     #[test]
     fn bench_schema_gate_accepts_stub_and_rejects_drift() {
         use crate::ser::json::Json;
-        // The committed stub baseline (schema fields, no runs) passes.
+        // The committed counter baseline accepts a schema-compatible
+        // (empty-runs) measurement.
         let stub = Json::from_file(std::path::Path::new(concat!(
             env!("CARGO_MANIFEST_DIR"),
             "/../BENCH_spin.json"
@@ -747,6 +854,60 @@ mod tests {
             path.display()
         );
         assert_eq!(run(argv(&cmd)), 0);
+        let _ = std::fs::remove_file(&path);
+    }
+
+    fn write_script(name: &str, doc: &Json) -> std::path::PathBuf {
+        let path = std::env::temp_dir().join(format!("{name}_{}.json", std::process::id()));
+        doc.to_file(&path).unwrap();
+        path
+    }
+
+    #[test]
+    fn serve_replays_a_job_script() {
+        use crate::service::{JobSpec, MatrixSpec};
+        let a = MatrixSpec::new(32, 8).seeded(5);
+        let b = MatrixSpec::new(32, 8).seeded(6);
+        let doc = Json::object(vec![(
+            "jobs",
+            Json::Array(vec![
+                JobSpec::invert(a.clone()).tenant("alice").label("inv").to_json(),
+                JobSpec::solve(a.clone(), b).tenant("bob").label("gls").to_json(),
+                JobSpec::pseudo_inverse(a).tenant("alice").to_json(),
+            ]),
+        )]);
+        let path = write_script("spin_serve_ok", &doc);
+        // Threaded and synchronous drivers both succeed.
+        let cmd = format!("serve --script {}", path.display());
+        assert_eq!(run(argv(&cmd)), 0);
+        let cmd = format!(
+            "serve --script {} --workers 0 --set cache_budget_bytes=8192",
+            path.display()
+        );
+        assert_eq!(run(argv(&cmd)), 0);
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn serve_rejects_bad_input() {
+        // Missing --script.
+        assert_eq!(run(argv("serve")), 1);
+        // Script that is not a jobs document.
+        let path = write_script("spin_serve_bad", &Json::object(vec![]));
+        let cmd = format!("serve --script {}", path.display());
+        assert_eq!(run(argv(&cmd)), 1);
+        let _ = std::fs::remove_file(&path);
+        // Script with an invalid job fails at submit.
+        let bad = Json::object(vec![(
+            "jobs",
+            Json::Array(vec![crate::service::JobSpec::invert(
+                crate::service::MatrixSpec::new(100, 10),
+            )
+            .to_json()]),
+        )]);
+        let path = write_script("spin_serve_badjob", &bad);
+        let cmd = format!("serve --script {}", path.display());
+        assert_eq!(run(argv(&cmd)), 1);
         let _ = std::fs::remove_file(&path);
     }
 

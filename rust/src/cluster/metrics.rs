@@ -1,12 +1,41 @@
 //! Per-method metrics registry — regenerates the paper's Table 3
 //! ("Experimental results of wall clock execution time of different
 //! methods in SPIN").
+//!
+//! ## Scopes (multi-job attribution)
+//!
+//! One cluster now serves several concurrent jobs (the `service` layer),
+//! so every recorded stage carries a **scope** — an opaque `u64` job tag
+//! read from a thread-local at record time ([`Metrics::enter_scope`]).
+//! Scope 0 is the ambient default; single-job flows never notice it.
+//! Scoped accessors ([`Metrics::totals_for_scope`],
+//! [`Metrics::snapshot_scope`]) answer "what did *this* job pay", which
+//! is what keeps per-plan-node windows honest when two jobs interleave
+//! stages on the same cluster: a delta of another job's stages can no
+//! longer leak into this job's `PlanNodeReport`.
 
+use std::cell::Cell;
 use std::collections::BTreeMap;
 use std::sync::Mutex;
 
 use crate::ser::json::Json;
 use crate::util::fmt;
+
+thread_local! {
+    /// Job tag stamped onto everything the current thread records.
+    static CURRENT_SCOPE: Cell<u64> = const { Cell::new(0) };
+}
+
+/// RAII guard restoring the previous metrics scope on drop.
+pub struct MetricsScope {
+    prev: u64,
+}
+
+impl Drop for MetricsScope {
+    fn drop(&mut self) {
+        CURRENT_SCOPE.with(|s| s.set(self.prev));
+    }
+}
 
 /// One executed stage (narrow pass or shuffle exchange).
 #[derive(Debug, Clone)]
@@ -95,11 +124,36 @@ pub struct Metrics {
 struct MetricsInner {
     methods: BTreeMap<String, MethodStats>,
     stages: Vec<StageReport>,
+    /// Indices into `stages` per scope — scoped snapshots touch only
+    /// their own job's records, not the whole history.
+    stage_index: BTreeMap<u64, Vec<usize>>,
     /// Per-plan-node lowering reports (lazy-plan executions only).
     plan_nodes: Vec<PlanNodeReport>,
+    /// Indices into `plan_nodes` per scope.
+    plan_node_index: BTreeMap<u64, Vec<usize>>,
+    /// Running aggregate counters per scope (O(1) scoped windows).
+    scope_totals: BTreeMap<u64, MetricsTotals>,
     /// Driver `collect` round-trips (materialize + re-parallelize). The
     /// partitioner-aware op pipeline records zero of these.
     driver_collects: usize,
+    /// Plan-node values dropped by the LRU byte-budget evictor.
+    cache_evictions: usize,
+    /// Bytes those evictions released.
+    cache_evicted_bytes: u64,
+}
+
+/// Fold one stage report into a per-method stats map (shared by the global
+/// aggregation and the scoped-snapshot rebuild).
+fn accumulate(methods: &mut BTreeMap<String, MethodStats>, report: &StageReport) {
+    let stats = methods.entry(report.method.clone()).or_default();
+    stats.calls += 1;
+    stats.tasks += report.tasks;
+    stats.compute_secs += report.compute_secs;
+    stats.virtual_secs += report.makespan_secs + report.shuffle_secs;
+    stats.shuffle_bytes += report.shuffle_bytes;
+    if report.exchange {
+        stats.shuffle_stages += 1;
+    }
 }
 
 impl Metrics {
@@ -109,28 +163,58 @@ impl Metrics {
         }
     }
 
+    /// Tag everything the current thread records with `scope` until the
+    /// returned guard drops (scopes nest; the previous tag is restored).
+    /// The service layer opens one scope per job.
+    pub fn enter_scope(scope: u64) -> MetricsScope {
+        let prev = CURRENT_SCOPE.with(|s| s.replace(scope));
+        MetricsScope { prev }
+    }
+
+    /// The current thread's active scope tag (0 outside any job).
+    pub fn current_scope() -> u64 {
+        CURRENT_SCOPE.with(|s| s.get())
+    }
+
     pub fn record_stage(&self, report: StageReport) {
+        let scope = Metrics::current_scope();
         let mut inner = self.inner.lock().unwrap();
-        let stats = inner.methods.entry(report.method.clone()).or_default();
-        stats.calls += 1;
-        stats.tasks += report.tasks;
-        stats.compute_secs += report.compute_secs;
-        stats.virtual_secs += report.makespan_secs + report.shuffle_secs;
-        stats.shuffle_bytes += report.shuffle_bytes;
-        if report.exchange {
-            stats.shuffle_stages += 1;
+        accumulate(&mut inner.methods, &report);
+        {
+            let totals = inner.scope_totals.entry(scope).or_default();
+            totals.stages += 1;
+            if report.exchange {
+                totals.shuffle_stages += 1;
+            }
+            totals.shuffle_bytes += report.shuffle_bytes;
         }
+        let idx = inner.stages.len();
+        inner.stage_index.entry(scope).or_default().push(idx);
         inner.stages.push(report);
     }
 
     /// Count one driver materialize-and-reparallelize round-trip.
     pub fn record_driver_collect(&self) {
-        self.inner.lock().unwrap().driver_collects += 1;
+        let scope = Metrics::current_scope();
+        let mut inner = self.inner.lock().unwrap();
+        inner.driver_collects += 1;
+        inner.scope_totals.entry(scope).or_default().driver_collects += 1;
     }
 
     /// Attribute a lowered plan node's cost window.
     pub fn record_plan_node(&self, report: PlanNodeReport) {
-        self.inner.lock().unwrap().plan_nodes.push(report);
+        let scope = Metrics::current_scope();
+        let mut inner = self.inner.lock().unwrap();
+        let idx = inner.plan_nodes.len();
+        inner.plan_node_index.entry(scope).or_default().push(idx);
+        inner.plan_nodes.push(report);
+    }
+
+    /// Count plan-node values dropped by the LRU byte-budget evictor.
+    pub fn record_cache_eviction(&self, count: usize, bytes: u64) {
+        let mut inner = self.inner.lock().unwrap();
+        inner.cache_evictions += count;
+        inner.cache_evicted_bytes += bytes;
     }
 
     /// Aggregate counters, cheap enough to call around every plan node.
@@ -144,12 +228,25 @@ impl Metrics {
         }
     }
 
+    /// Aggregate counters restricted to one scope — the per-plan-node
+    /// window bracket under concurrent jobs. For scope 0 with no other
+    /// scope active this equals [`totals`](Self::totals).
+    pub fn totals_for_scope(&self, scope: u64) -> MetricsTotals {
+        let inner = self.inner.lock().unwrap();
+        inner.scope_totals.get(&scope).copied().unwrap_or_default()
+    }
+
     pub fn reset(&self) {
         let mut inner = self.inner.lock().unwrap();
         inner.methods.clear();
         inner.stages.clear();
+        inner.stage_index.clear();
         inner.plan_nodes.clear();
+        inner.plan_node_index.clear();
+        inner.scope_totals.clear();
         inner.driver_collects = 0;
+        inner.cache_evictions = 0;
+        inner.cache_evicted_bytes = 0;
     }
 
     pub fn snapshot(&self) -> MetricsSnapshot {
@@ -159,6 +256,43 @@ impl Metrics {
             stages: inner.stages.clone(),
             plan_nodes: inner.plan_nodes.clone(),
             driver_collects: inner.driver_collects,
+            cache_evictions: inner.cache_evictions,
+            cache_evicted_bytes: inner.cache_evicted_bytes,
+        }
+    }
+
+    /// Snapshot of what ONE scope recorded: its stages, per-method stats
+    /// rebuilt from those stages alone, its plan-node reports, and its
+    /// driver collects — O(this scope's records), not O(total history),
+    /// so per-job snapshots stay cheap on a long-running service.
+    /// Cache-eviction counters are cluster-global (the evictor serves
+    /// every job) and reported as such.
+    pub fn snapshot_scope(&self, scope: u64) -> MetricsSnapshot {
+        let inner = self.inner.lock().unwrap();
+        let mut methods = BTreeMap::new();
+        let mut stages = Vec::new();
+        if let Some(idxs) = inner.stage_index.get(&scope) {
+            for &i in idxs {
+                let stage = &inner.stages[i];
+                accumulate(&mut methods, stage);
+                stages.push(stage.clone());
+            }
+        }
+        let plan_nodes = match inner.plan_node_index.get(&scope) {
+            Some(idxs) => idxs.iter().map(|&i| inner.plan_nodes[i].clone()).collect(),
+            None => Vec::new(),
+        };
+        MetricsSnapshot {
+            methods,
+            stages,
+            plan_nodes,
+            driver_collects: inner
+                .scope_totals
+                .get(&scope)
+                .map(|t| t.driver_collects)
+                .unwrap_or(0),
+            cache_evictions: inner.cache_evictions,
+            cache_evicted_bytes: inner.cache_evicted_bytes,
         }
     }
 }
@@ -176,11 +310,24 @@ pub struct MetricsSnapshot {
     stages: Vec<StageReport>,
     plan_nodes: Vec<PlanNodeReport>,
     driver_collects: usize,
+    cache_evictions: usize,
+    cache_evicted_bytes: u64,
 }
 
 impl MetricsSnapshot {
     pub fn method(&self, name: &str) -> Option<&MethodStats> {
         self.methods.get(name)
+    }
+
+    /// Plan-node values dropped by the LRU byte-budget evictor in this
+    /// window (cluster-global; see `ClusterConfig::cache_budget_bytes`).
+    pub fn cache_evictions(&self) -> usize {
+        self.cache_evictions
+    }
+
+    /// Bytes released by those evictions.
+    pub fn cache_evicted_bytes(&self) -> u64 {
+        self.cache_evicted_bytes
     }
 
     /// Per-plan-node lowering reports recorded in this window (empty for
@@ -407,5 +554,79 @@ mod tests {
         m.record_stage(stage("a", 1, 0.0, 1.0));
         m.record_stage(stage("b", 1, 0.0, 2.0));
         assert!((m.snapshot().total_virtual_secs() - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn scopes_partition_the_record_stream() {
+        let m = Metrics::new();
+        m.record_stage(stage("ambient", 1, 0.1, 0.1)); // scope 0
+        {
+            let _g = Metrics::enter_scope(7);
+            assert_eq!(Metrics::current_scope(), 7);
+            m.record_stage(stage("job7", 2, 0.2, 0.2));
+            m.record_driver_collect();
+            {
+                let _inner = Metrics::enter_scope(8);
+                m.record_stage(stage("job8", 1, 0.1, 0.1));
+            }
+            // Nested guard restored the outer scope.
+            assert_eq!(Metrics::current_scope(), 7);
+            m.record_stage(stage("job7", 1, 0.1, 0.1));
+        }
+        assert_eq!(Metrics::current_scope(), 0);
+
+        let t7 = m.totals_for_scope(7);
+        assert_eq!(t7.stages, 2);
+        assert_eq!(t7.driver_collects, 1);
+        assert_eq!(m.totals_for_scope(8).stages, 1);
+        assert_eq!(m.totals_for_scope(0).stages, 1);
+        assert_eq!(m.totals_for_scope(99), MetricsTotals::default());
+        // Global view still sees everything.
+        assert_eq!(m.totals().stages, 4);
+        assert_eq!(m.totals().driver_collects, 1);
+
+        let s7 = m.snapshot_scope(7);
+        assert_eq!(s7.stages().len(), 2);
+        assert_eq!(s7.method("job7").unwrap().calls, 2);
+        assert!(s7.method("ambient").is_none());
+        assert!(s7.method("job8").is_none());
+        assert_eq!(s7.driver_collects(), 1);
+        assert_eq!(m.snapshot_scope(0).driver_collects(), 0);
+    }
+
+    #[test]
+    fn scoped_exchange_counters() {
+        let m = Metrics::new();
+        let _g = Metrics::enter_scope(3);
+        m.record_stage(StageReport {
+            method: "multiply".into(),
+            tasks: 0,
+            exchange: true,
+            compute_secs: 0.0,
+            makespan_secs: 0.0,
+            shuffle_bytes: 128,
+            shuffle_total_bytes: 128,
+            shuffle_secs: 0.1,
+            task_durations: Vec::new(),
+        });
+        let t = m.totals_for_scope(3);
+        assert_eq!(t.shuffle_stages, 1);
+        assert_eq!(t.shuffle_bytes, 128);
+        assert_eq!(m.totals_for_scope(0).shuffle_stages, 0);
+        assert_eq!(m.snapshot_scope(3).total_shuffle_stages(), 1);
+    }
+
+    #[test]
+    fn cache_eviction_counters_accumulate_and_reset() {
+        let m = Metrics::new();
+        assert_eq!(m.snapshot().cache_evictions(), 0);
+        m.record_cache_eviction(2, 4096);
+        m.record_cache_eviction(1, 1024);
+        let snap = m.snapshot();
+        assert_eq!(snap.cache_evictions(), 3);
+        assert_eq!(snap.cache_evicted_bytes(), 5120);
+        m.reset();
+        assert_eq!(m.snapshot().cache_evictions(), 0);
+        assert_eq!(m.snapshot().cache_evicted_bytes(), 0);
     }
 }

@@ -53,7 +53,8 @@ mod shuffle;
 
 pub use executor::WorkerPool;
 pub use metrics::{
-    MethodStats, Metrics, MetricsSnapshot, MetricsTotals, PlanNodeReport, StageReport,
+    MethodStats, Metrics, MetricsScope, MetricsSnapshot, MetricsTotals, PlanNodeReport,
+    StageReport,
 };
 pub use rdd::{Partitioner, Rdd};
 pub use scheduler::{list_schedule_makespan, VirtualClock};
@@ -120,9 +121,27 @@ impl Cluster {
         self.metrics.totals()
     }
 
+    /// Aggregate counters restricted to the calling thread's metrics
+    /// scope — what the plan executor actually brackets with, so two
+    /// jobs interleaving stages on this cluster cannot double-count each
+    /// other's work into their plan-node windows.
+    pub fn metrics_totals_current(&self) -> MetricsTotals {
+        self.metrics.totals_for_scope(Metrics::current_scope())
+    }
+
+    /// Per-method snapshot of everything one scope (job) recorded.
+    pub fn metrics_scoped(&self, scope: u64) -> MetricsSnapshot {
+        self.metrics.snapshot_scope(scope)
+    }
+
     /// Stamp one lowered plan node's measured cost window.
     pub fn record_plan_node(&self, report: PlanNodeReport) {
         self.metrics.record_plan_node(report)
+    }
+
+    /// Count plan-node values dropped by the LRU byte-budget evictor.
+    pub fn record_cache_eviction(&self, count: usize, bytes: u64) {
+        self.metrics.record_cache_eviction(count, bytes)
     }
 
     // ---------- RDD creation ----------

@@ -85,6 +85,26 @@ pub struct ClusterConfig {
     /// no transpose pushdown, no scalar folding, no CSE — which is the
     /// measurable "unfused plan" arm of the Table-3 comparison.
     pub plan_optimizer: bool,
+    /// Byte budget for memoized plan-node values (0 = unlimited). Above
+    /// the budget, the session's LRU evictor drops least-recently-used
+    /// unpinned values; evicted nodes recompute bit-identically on the
+    /// next read. CLI: `--set cache_budget_bytes=N`.
+    pub cache_budget_bytes: u64,
+}
+
+/// Default real worker-thread count: `SPIN_WORKER_THREADS` when set to a
+/// positive integer, else 1. This is the CI thread-matrix hook — the env
+/// var seeds every preset so the whole test suite runs multi-threaded
+/// without touching each construction site. The trade-off is a
+/// deliberately environment-sensitive *default*: deployments that need a
+/// pinned value should set `worker_threads` explicitly (builder,
+/// config file, or `--set worker_threads=N`), which always wins.
+fn default_worker_threads() -> usize {
+    std::env::var("SPIN_WORKER_THREADS")
+        .ok()
+        .and_then(|v| v.parse::<usize>().ok())
+        .filter(|&n| n > 0)
+        .unwrap_or(1)
 }
 
 impl ClusterConfig {
@@ -100,10 +120,11 @@ impl ClusterConfig {
             },
             backend: BackendKind::Native,
             artifacts_dir: PathBuf::from("artifacts"),
-            worker_threads: 1,
+            worker_threads: default_worker_threads(),
             virtual_time: true,
             partitioner_aware: true,
             plan_optimizer: true,
+            cache_budget_bytes: 0,
         }
     }
 
@@ -120,10 +141,11 @@ impl ClusterConfig {
             },
             backend: BackendKind::Native,
             artifacts_dir: PathBuf::from("artifacts"),
-            worker_threads: 1,
+            worker_threads: default_worker_threads(),
             virtual_time: true,
             partitioner_aware: true,
             plan_optimizer: true,
+            cache_budget_bytes: 0,
         }
     }
 
@@ -174,6 +196,10 @@ impl ClusterConfig {
             ("virtual_time", Json::Bool(self.virtual_time)),
             ("partitioner_aware", Json::Bool(self.partitioner_aware)),
             ("plan_optimizer", Json::Bool(self.plan_optimizer)),
+            (
+                "cache_budget_bytes",
+                Json::num(self.cache_budget_bytes as f64),
+            ),
         ])
     }
 
@@ -236,6 +262,12 @@ impl ClusterConfig {
                     .as_bool()
                     .ok_or_else(|| SpinError::config("`plan_optimizer` must be a bool"))?,
             },
+            cache_budget_bytes: match v.get("cache_budget_bytes") {
+                None => base.cache_budget_bytes,
+                Some(j) => j.as_i64().and_then(|n| u64::try_from(n).ok()).ok_or_else(
+                    || SpinError::config("`cache_budget_bytes` must be a non-negative integer"),
+                )?,
+            },
         };
         cfg.validate()?;
         Ok(cfg)
@@ -281,6 +313,11 @@ impl ClusterConfig {
                 self.plan_optimizer = value
                     .parse::<bool>()
                     .map_err(|_| SpinError::config("plan_optimizer needs true|false"))?
+            }
+            "cache_budget_bytes" => {
+                self.cache_budget_bytes = value.parse::<u64>().map_err(|_| {
+                    SpinError::config("cache_budget_bytes needs a non-negative integer")
+                })?
             }
             other => {
                 return Err(SpinError::config(format!("unknown cluster key `{other}`")));
@@ -534,6 +571,7 @@ mod tests {
         c.worker_threads = 3;
         c.partitioner_aware = false;
         c.plan_optimizer = false;
+        c.cache_budget_bytes = 1 << 20;
         let back = ClusterConfig::from_json(&c.to_json()).unwrap();
         assert_eq!(back, c);
     }
@@ -564,6 +602,9 @@ mod tests {
         assert_eq!(c.backend, BackendKind::Xla);
         c.apply_override("plan_optimizer=false").unwrap();
         assert!(!c.plan_optimizer);
+        c.apply_override("cache_budget_bytes=65536").unwrap();
+        assert_eq!(c.cache_budget_bytes, 65536);
+        assert!(c.apply_override("cache_budget_bytes=lots").is_err());
         assert!(c.apply_override("bogus=1").is_err());
         assert!(c.apply_override("no-equals").is_err());
 

@@ -4,41 +4,59 @@
 //! Apache Spark* (Misra et al., ICDCN '18) as a three-layer Rust + JAX +
 //! Pallas system.
 //!
-//! ## Public API: sessions, lazy matrix plans, and `explain()`
+//! ## Public API: the job service over sessions and lazy plans
 //!
-//! The front door is [`session::SpinSession`]: a builder-configured context
-//! that owns the simulated cluster, the block-kernel backend, and the job
-//! defaults, and hands out [`session::DistMatrix`] handles. Handles are
-//! **lazy**: operator methods (`multiply`, `subtract`, `inverse`, `solve`,
-//! `pseudo_inverse`, …) build a [`plan::MatExpr`] expression DAG and
-//! return immediately. Distributed work runs only at materialization
-//! points (`collect`, `to_dense`, `inverse_residual`, `solve_dense`) —
-//! after a rule-based optimizer has fused multiply+subtract into one
-//! reduce stage, pushed transposes into multiply operands, folded scalars,
-//! and deduplicated common subexpressions with automatic `cache()`
-//! insertion. `DistMatrix::explain()` (and `spin explain` on the CLI)
-//! prints the optimized plan with predicted shuffle stages per node.
+//! The front door for serving many callers is [`service::SpinService`]:
+//! an async, multi-tenant job layer. Callers `submit()` workloads
+//! described by a serializable [`service::JobSpec`] (invert / solve /
+//! multiply / pseudo-inverse over parameter-described matrices) and get a
+//! [`service::JobHandle`] back immediately — poll `status()`, block on
+//! `wait()`, `cancel()` while queued, read per-job `metrics()`, or
+//! `explain()` the optimized plan. A fair-share scheduler drains a
+//! bounded queue round-robin across tenants onto worker threads, and a
+//! **cross-job plan cache** interns structurally-equal plan subtrees so
+//! concurrent jobs over the same data materialize shared work exactly
+//! once.
 //!
 //! ```no_run
-//! use spin::session::SpinSession;
+//! use spin::service::{JobSpec, MatrixSpec, SpinService};
 //!
 //! fn main() -> spin::Result<()> {
-//!     let session = SpinSession::builder().cores(4).build()?;
-//!     let a = session.random_spd(256, 64)?;     // 4×4 grid of 64×64 blocks
-//!     let inv = a.inverse()?;                   // lazy: builds a plan node
-//!     assert!(a.inverse_residual(&inv)? < 1e-10); // materializes here
-//!
-//!     let b = session.random_seeded(256, 64, 7)?;
-//!     let x = a.solve(&b)?;                     // X = A⁻¹·B, one lazy plan
-//!     println!("{}", x.explain()?);             // optimized plan + shuffle predictions
-//!     x.collect()?;                             // run it (memoized afterwards)
-//!
-//!     let pinv = a.pseudo_inverse()?;           // (AᵀA)⁻¹·Aᵀ — Aᵀ is CSE-cached
-//!     let lu = session.invert_with("lu", &a)?;  // any registered algorithm
-//!     # let _ = (pinv, lu);
+//!     let service = SpinService::builder().cores(4).workers(2).build()?;
+//!     let a = MatrixSpec::new(256, 64).seeded(7); // 4×4 grid of 64×64 blocks
+//!     let inv = service.submit(JobSpec::invert(a.clone()).tenant("alice"))?;
+//!     let rhs = MatrixSpec::new(256, 64).seeded(8);
+//!     let sol = service.submit(JobSpec::solve(a, rhs).tenant("bob"))?;
+//!     println!("{}", sol.explain()?);  // optimized plan + cache decisions
+//!     // Both jobs need invert[spin](A): the plan cache interns one node,
+//!     // so whichever worker arrives first pays and the other reuses.
+//!     let inv_out = inv.wait()?;
+//!     let sol_out = sol.wait()?;
+//!     assert!(inv_out.residual.unwrap() < 1e-10);
+//!     println!("solve exchanges: {}", sol_out.metrics.total_shuffle_stages());
 //!     Ok(())
 //! }
 //! ```
+//!
+//! Underneath, [`session::SpinSession`] remains the single-caller API: a
+//! builder-configured context owning the simulated cluster, the
+//! block-kernel backend, and the job defaults, handing out **lazy**
+//! [`session::DistMatrix`] handles whose operator methods build a
+//! [`plan::MatExpr`] DAG. Distributed work runs only at materialization
+//! points, after the rule-based optimizer has fused multiply+subtract,
+//! pushed down transposes, folded scalars, and CSE'd shared subtrees.
+//!
+//! ## Value lifecycle: persist / unpersist / LRU
+//!
+//! Materialized plan-node values are memoized but no longer pinned
+//! forever: the session's [`plan::CacheManager`] tracks every value, and
+//! with `ClusterConfig::cache_budget_bytes` set (CLI:
+//! `--set cache_budget_bytes=N`) an LRU evictor keeps the resident set
+//! under budget — evicted values recompute bit-identically on the next
+//! read. `DistMatrix::persist()` pins a value against eviction;
+//! `unpersist()` releases it immediately. `explain()` shows the per-node
+//! cache decision (`[cached]` / `[evictable]` / `[pinned]`) and predicted
+//! resident bytes.
 //!
 //! Inversion schemes are open-ended: implement
 //! [`algos::InversionAlgorithm`] and register it in the session builder (or
@@ -56,9 +74,9 @@
 //!   lazy expression-plan layer ([`plan`]: DAG, optimizer, executor,
 //!   explain), the SPIN recursion and its LU baseline behind the algorithm
 //!   registry ([`algos`]) — both expressing each recursion level as a
-//!   plan — the session API ([`session`]), the paper's wall-clock cost
-//!   model ([`costmodel`]) and every experiment in the evaluation section
-//!   ([`experiments`]).
+//!   plan — the session API ([`session`]), the multi-tenant job service
+//!   ([`service`]), the paper's wall-clock cost model ([`costmodel`]) and
+//!   every experiment in the evaluation section ([`experiments`]).
 //! * **Layer 2/1 (build-time Python)** — block-level compute lowered once
 //!   from JAX + Pallas to HLO text, loaded and executed from Rust through
 //!   the PJRT CPU client ([`runtime`]).
@@ -78,9 +96,11 @@ pub mod linalg;
 pub mod plan;
 pub mod runtime;
 pub mod ser;
+pub mod service;
 pub mod session;
 pub mod util;
 
 pub use config::{ClusterConfig, JobConfig};
 pub use error::{Result, SpinError};
+pub use service::{JobHandle, JobSpec, JobStatus, MatrixSpec, SpinService};
 pub use session::{AlgorithmRegistry, DistMatrix, InversionAlgorithm, SessionBuilder, SpinSession};

@@ -21,7 +21,7 @@ use crate::cluster::{Cluster, PlanNodeReport, Rdd};
 use crate::error::{Result, SpinError};
 use crate::runtime::BlockKernels;
 
-use super::{ExprOp, MatExpr, Optimizer, OptimizerConfig};
+use super::{CacheManager, ExprOp, MatExpr, Optimizer, OptimizerConfig};
 
 /// Resolver for [`ExprOp::Invert`] nodes: maps a scheme name plus a
 /// materialized operand to its inverse. The session layer resolves through
@@ -37,6 +37,10 @@ pub struct PlanExec<'a> {
     /// `breakMat` output per (canonical) child node — sibling quadrant
     /// extractions reuse it instead of re-running the tagging pass.
     broken: Mutex<HashMap<u64, Rdd<(Quadrant, Block)>>>,
+    /// Value-lifecycle registry (LRU budget + persist pins). `None` for
+    /// algorithm-internal executors whose per-level DAGs die with the
+    /// recursion frame and need no tracking.
+    lifecycle: Option<&'a CacheManager>,
 }
 
 impl<'a> PlanExec<'a> {
@@ -57,7 +61,16 @@ impl<'a> PlanExec<'a> {
             kernels,
             config,
             broken: Mutex::new(HashMap::new()),
+            lifecycle: None,
         }
+    }
+
+    /// Attach the session's value-lifecycle manager: every non-source
+    /// node this executor materializes is registered (and the LRU byte
+    /// budget enforced) there.
+    pub fn with_lifecycle(mut self, manager: &'a CacheManager) -> Self {
+        self.lifecycle = Some(manager);
+        self
     }
 
     pub fn config(&self) -> OptimizerConfig {
@@ -76,16 +89,44 @@ impl<'a> PlanExec<'a> {
     /// Optimize + execute a plan, resolving `Invert` nodes through
     /// `invert`.
     pub fn eval_with(&self, expr: &MatExpr, invert: &InvertFn<'_>) -> Result<BlockMatrix> {
-        let optimized = Optimizer::new(self.config).optimize(expr)?;
+        // Canonicalization is memoized per node, but two threads racing
+        // through a not-yet-memoized subtree would intern two distinct
+        // canonical copies — and then execute the "shared" work twice.
+        // The lifecycle manager's gate serializes the (cheap, driver-side)
+        // optimize step across a session's concurrent jobs.
+        let optimized = match self.lifecycle {
+            Some(mgr) => {
+                let _gate = mgr.optimize_gate();
+                Optimizer::new(self.config).optimize(expr)?
+            }
+            None => Optimizer::new(self.config).optimize(expr)?,
+        };
         self.exec_node(&optimized, invert)
     }
 
     fn exec_node(&self, e: &MatExpr, invert: &InvertFn<'_>) -> Result<BlockMatrix> {
-        if let Some(v) = e.cached_value() {
+        if let ExprOp::Source(m) = e.op() {
+            return Ok(m.clone());
+        }
+        // Hold the memo slot for the whole lowering: a second evaluator of
+        // a shared node (another job's worker thread) blocks here and then
+        // reuses the value — exactly-once execution under concurrency.
+        // Locks are only ever acquired parent→child along DAG edges, so a
+        // wait cycle would require a cycle in the DAG: impossible.
+        let mut slot = e.value_slot();
+        if let Some(v) = (*slot).clone() {
+            drop(slot);
+            if let Some(mgr) = self.lifecycle {
+                mgr.touch(e.id());
+            }
             return Ok(v);
         }
         let out = match e.op() {
-            ExprOp::Source(m) => return Ok(m.clone()),
+            // Handled by the early return above — and it must stay there:
+            // sources must never reach the slot-assignment/lifecycle
+            // registration below (inputs are the caller's storage, not
+            // the budget's).
+            ExprOp::Source(_) => unreachable!("sources return before the memo slot"),
 
             ExprOp::Multiply(a, b) => {
                 let va = self.exec_node(a, invert)?;
@@ -160,20 +201,29 @@ impl<'a> PlanExec<'a> {
                 })?
             }
         };
-        e.set_value(out.clone());
+        *slot = Some(out.clone());
+        drop(slot);
+        if let Some(mgr) = self.lifecycle {
+            let rep = mgr.register(e);
+            if rep.evicted > 0 {
+                self.cluster.record_cache_eviction(rep.evicted, rep.bytes);
+            }
+        }
         Ok(out)
     }
 
     /// Run one node's lowering inside a metrics window and stamp the
-    /// per-plan-node delta into the cluster's registry.
+    /// per-plan-node delta into the cluster's registry. The window reads
+    /// *scope-local* totals, so a concurrent job interleaving stages on
+    /// the same cluster cannot inflate this node's delta.
     fn measured(
         &self,
         e: &MatExpr,
         f: impl FnOnce() -> Result<BlockMatrix>,
     ) -> Result<BlockMatrix> {
-        let before = self.cluster.metrics_totals();
+        let before = self.cluster.metrics_totals_current();
         let out = f()?;
-        let after = self.cluster.metrics_totals();
+        let after = self.cluster.metrics_totals_current();
         self.cluster.record_plan_node(PlanNodeReport {
             node: format!("%{}", e.id()),
             op: e.op().name().to_string(),
@@ -422,5 +472,87 @@ mod tests {
         let exec = PlanExec::with_config(&c, &NativeBackend, OptimizerConfig::all());
         let err = exec.eval(&a.invert("spin")).unwrap_err();
         assert!(err.to_string().contains("no inverter"), "{err}");
+    }
+
+    #[test]
+    fn concurrent_evaluators_share_one_execution() {
+        use crate::plan::CacheManager;
+        // Two threads race to materialize the SAME plan on one cluster —
+        // the memo-slot lock plus the optimize gate must make the shared
+        // product execute exactly once (2 exchange stages, not 4).
+        let c = cluster();
+        let mgr = CacheManager::new(0);
+        let (_, a) = rand_pair(61);
+        let (_, b) = rand_pair(62);
+        let expr = a.multiply(&b).unwrap();
+        let exec = PlanExec::with_config(&c, &NativeBackend, OptimizerConfig::all())
+            .with_lifecycle(&mgr);
+        let barrier = std::sync::Barrier::new(2);
+        let (d1, d2) = std::thread::scope(|scope| {
+            let t1 = scope.spawn(|| {
+                barrier.wait();
+                exec.eval(&expr).unwrap().to_dense().unwrap()
+            });
+            let t2 = scope.spawn(|| {
+                barrier.wait();
+                exec.eval(&expr).unwrap().to_dense().unwrap()
+            });
+            (t1.join().unwrap(), t2.join().unwrap())
+        });
+        assert_eq!(d1.max_abs_diff(&d2), 0.0);
+        let m = c.metrics();
+        assert_eq!(
+            m.method("multiply").unwrap().shuffle_stages,
+            2,
+            "shared node must execute exactly once"
+        );
+    }
+
+    #[test]
+    fn budget_evicts_and_recompute_is_bit_identical() {
+        use crate::plan::CacheManager;
+        let c = cluster();
+        // Working set: product + fused node at 128x128 doubles = 128 KiB
+        // each; a budget of one value forces evictions mid-plan.
+        let mgr = CacheManager::new((N * N * 8) as u64);
+        let (_, a) = rand_pair(71);
+        let (_, b) = rand_pair(72);
+        let (_, d) = rand_pair(73);
+        let expr = a
+            .multiply(&b)
+            .unwrap()
+            .subtract(&d)
+            .unwrap()
+            .transpose()
+            .scale(2.0);
+        let exec = PlanExec::with_config(&c, &NativeBackend, OptimizerConfig::all())
+            .with_lifecycle(&mgr);
+        let first = exec.eval(&expr).unwrap().to_dense().unwrap();
+        assert!(
+            c.metrics().cache_evictions() > 0,
+            "half-working-set budget must evict"
+        );
+        let stats = mgr.stats();
+        assert!(stats.budget_bytes.is_some());
+        assert!(stats.resident_bytes <= (N * N * 8) as u64);
+        assert!(stats.evictions > 0);
+        // Evict everything that is left and re-read: same bits.
+        let mut stack = vec![expr.clone()];
+        let mut seen = std::collections::HashSet::new();
+        while let Some(e) = stack.pop() {
+            if seen.insert(e.id()) {
+                e.evict_value();
+                if let Some(canon) = e.canonical_for(OptimizerConfig::all()) {
+                    stack.push(canon);
+                }
+                stack.extend(e.children());
+            }
+        }
+        let second = exec.eval(&expr).unwrap().to_dense().unwrap();
+        assert_eq!(
+            first.max_abs_diff(&second),
+            0.0,
+            "recompute after eviction must be bit-identical"
+        );
     }
 }

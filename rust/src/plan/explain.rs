@@ -1,12 +1,20 @@
 //! `explain()` rendering: one SSA-style line per plan node with its
-//! predicted shuffle cost, plus a summary footer.
+//! predicted shuffle cost and its cache/lifecycle decision, plus a
+//! summary footer.
 //!
 //! The renderer walks the (optimized) DAG in deterministic postorder, so
 //! shared subtrees print once and are referenced by `%k` — a CSE-marked
 //! node renders as `cache(...)`, making the optimizer's automatic cache
-//! insertion visible.
+//! insertion visible. Each non-source node also shows its predicted
+//! resident bytes and its lifecycle state at render time: `[cached]`
+//! (value memoized right now), `[pinned]` (persisted — the LRU evictor
+//! must skip it), or `[evictable]` (subject to the session's
+//! `cache_budget_bytes`). Sources render as `input` — their storage
+//! belongs to the caller, not the evictor.
 
 use std::collections::HashMap;
+
+use crate::util::fmt;
 
 use super::{ExprOp, MatExpr};
 
@@ -29,14 +37,28 @@ pub fn predicted_exchanges(op: &ExprOp, partitioner_aware: bool) -> Option<usize
 /// Render an (optimized) plan. `partitioner_aware` selects the shuffle
 /// prediction model — pass the owning cluster's setting.
 pub fn render_plan(root: &MatExpr, partitioner_aware: bool) -> String {
+    render_plan_sized(root, partitioner_aware, None)
+}
+
+/// [`render_plan`] with an explicit payload block size for the resident-
+/// bytes column. `spin explain` renders plan *shapes* over unit blocks
+/// (explaining n = 65536 must not allocate an n×n matrix), so it passes
+/// the real block size here; `None` reads each node's own geometry.
+pub fn render_plan_sized(
+    root: &MatExpr,
+    partitioner_aware: bool,
+    block_size_override: Option<usize>,
+) -> String {
     let mut r = Renderer {
         ids: HashMap::new(),
         lines: Vec::new(),
         partitioner_aware,
+        block_size_override,
         exchanges: 0,
         cached: 0,
         fused: 0,
         recursive: 0,
+        resident: 0,
     };
     let root_id = r.walk(root);
     let mut out = String::new();
@@ -45,7 +67,7 @@ pub fn render_plan(root: &MatExpr, partitioner_aware: bool) -> String {
         out.push('\n');
     }
     out.push_str(&format!(
-        "plan: {} nodes · result %{root_id} · predicted {} exchange stage(s){} · {} fused multiply_sub · {} cache point(s) (CSE)\n",
+        "plan: {} nodes · result %{root_id} · predicted {} exchange stage(s){} · {} fused multiply_sub · {} cache point(s) (CSE) · predicted resident ≤ {}\n",
         r.lines.len(),
         r.exchanges,
         if r.recursive > 0 {
@@ -55,6 +77,7 @@ pub fn render_plan(root: &MatExpr, partitioner_aware: bool) -> String {
         },
         r.fused,
         r.cached,
+        fmt::bytes(r.resident),
     ));
     out
 }
@@ -64,13 +87,23 @@ struct Renderer {
     ids: HashMap<u64, usize>,
     lines: Vec<String>,
     partitioner_aware: bool,
+    block_size_override: Option<usize>,
     exchanges: usize,
     cached: usize,
     fused: usize,
     recursive: usize,
+    /// Sum of non-source node payload bytes: the plan's worst-case
+    /// resident set if nothing is ever evicted.
+    resident: u64,
 }
 
 impl Renderer {
+    /// Predicted value bytes of one node under the rendering block size.
+    fn node_bytes(&self, e: &MatExpr) -> u64 {
+        let n = (e.nblocks() * self.block_size_override.unwrap_or(e.block_size())) as u64;
+        n * n * 8
+    }
+
     fn walk(&mut self, e: &MatExpr) -> usize {
         if let Some(&n) = self.ids.get(&e.id()) {
             return n;
@@ -98,8 +131,22 @@ impl Renderer {
                 "recursive".to_string()
             }
         };
+        let mem = if matches!(e.op(), ExprOp::Source(_)) {
+            "input".to_string()
+        } else {
+            let bytes = self.node_bytes(e);
+            self.resident += bytes;
+            let state = if e.is_pinned() {
+                "[pinned]"
+            } else if e.cached_value().is_some() {
+                "[cached]"
+            } else {
+                "[evictable]"
+            };
+            format!("~{} {state}", fmt::bytes(bytes))
+        };
         self.lines
-            .push(format!("%{n:<3} = {desc:<44} shuffle: {cost}"));
+            .push(format!("%{n:<3} = {desc:<44} shuffle: {cost:<17} mem: {mem}"));
         n
     }
 }
@@ -185,5 +232,60 @@ mod tests {
         assert!(text.contains("invert[spin]"), "{text}");
         assert!(text.contains("shuffle: recursive"), "{text}");
         assert!(text.contains("recursive inversion(s)"), "{text}");
+    }
+
+    /// Golden output: the exact rendering of one fused plan, including
+    /// the cache-decision column. A change to any column is a deliberate
+    /// format change and must update this literal.
+    #[test]
+    fn golden_output_fused_plan() {
+        let (a, b, d) = (src(2, 4), src(2, 4), src(2, 4));
+        let expr = a.multiply(&b).unwrap().subtract(&d).unwrap();
+        let opt = Optimizer::new(OptimizerConfig::all())
+            .optimize(&expr)
+            .unwrap();
+        let text = render_plan(&opt, true);
+        let want = concat!(
+            "%0   = source[2x2 grid]                             shuffle: narrow            mem: input\n",
+            "%1   = source[2x2 grid]                             shuffle: narrow            mem: input\n",
+            "%2   = source[2x2 grid]                             shuffle: narrow            mem: input\n",
+            "%3   = multiply_sub %0 %1 %2   (fused A·B − D)      shuffle: 2 exchange stages mem: ~512 B [evictable]\n",
+            "plan: 4 nodes · result %3 · predicted 2 exchange stage(s) · 1 fused multiply_sub · 0 cache point(s) (CSE) · predicted resident ≤ 512 B\n",
+        );
+        assert_eq!(text, want);
+    }
+
+    #[test]
+    fn lifecycle_states_annotate_nodes() {
+        let (a, b) = (src(2, 4), src(2, 4));
+        let expr = a.multiply(&b).unwrap();
+        let opt = Optimizer::new(OptimizerConfig::all())
+            .optimize(&expr)
+            .unwrap();
+        assert!(render_plan(&opt, true).contains("[evictable]"));
+        // A memoized value renders as [cached]…
+        opt.set_value(BlockMatrix::zeros(2, 4).unwrap());
+        assert!(render_plan(&opt, true).contains("[cached]"));
+        // …and a persisted one as [pinned] (pin wins over cached).
+        opt.set_pinned(true);
+        assert!(render_plan(&opt, true).contains("[pinned]"));
+        opt.set_pinned(false);
+        assert!(opt.evict_value());
+        assert!(render_plan(&opt, true).contains("[evictable]"));
+    }
+
+    #[test]
+    fn block_size_override_scales_resident_prediction() {
+        let a = src(4, 1); // unit payload, the `spin explain` shape trick
+        let expr = a.multiply(&a).unwrap();
+        let opt = Optimizer::new(OptimizerConfig::all())
+            .optimize(&expr)
+            .unwrap();
+        // 4 blocks of 64x64 → n = 256 → 512 KiB per node value.
+        let text = render_plan_sized(&opt, true, Some(64));
+        assert!(text.contains("~512.0 KiB"), "{text}");
+        // Without the override the unit geometry is tiny.
+        let text = render_plan(&opt, true);
+        assert!(text.contains("~128 B"), "{text}");
     }
 }

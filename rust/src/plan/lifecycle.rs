@@ -1,0 +1,331 @@
+//! Plan-value lifecycle: the LRU byte-budget evictor that replaces the
+//! old pin-forever memoization.
+//!
+//! ## The lifecycle contract
+//!
+//! * A plan node's materialized value lives in the node itself (so shared
+//!   subtrees still share one execution), but the session's
+//!   [`CacheManager`] tracks every non-source value it materializes:
+//!   node id → approximate payload bytes + last-use tick.
+//! * The manager holds only [`Weak`] references — values are
+//!   **ref-counted by the DAG**: when the last handle to a sub-plan drops,
+//!   its `Arc<ExprNode>`s (and their block payloads) free themselves, and
+//!   the manager merely forgets the dead entry. The manager never extends
+//!   a value's lifetime.
+//! * With `ClusterConfig::cache_budget_bytes > 0`, materializing a node
+//!   that pushes the tracked resident total over budget evicts
+//!   least-recently-used values until it fits. Eviction clears the node's
+//!   memo slot; a later read recomputes from its children (bit-identical —
+//!   the whole pipeline is deterministic), so eviction is always safe and
+//!   never changes results.
+//! * [`crate::session::DistMatrix::persist`] pins a value (the evictor
+//!   skips pinned nodes); `unpersist` unpins and releases it immediately.
+//! * In-flight values are protected structurally: the executor clones a
+//!   child's blocks out of the memo slot before using them, and the
+//!   evictor only `try_lock`s a slot — a node being written or read at
+//!   this instant is simply skipped this pass.
+
+use std::collections::{HashMap, HashSet};
+use std::sync::atomic::Ordering;
+use std::sync::{Mutex, Weak};
+
+use super::{ExprNode, MatExpr};
+
+/// What one enforcement pass evicted (recorded into
+/// `cluster::Metrics::record_cache_eviction` by the caller).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct EvictionReport {
+    /// Values dropped.
+    pub evicted: usize,
+    /// Bytes released.
+    pub bytes: u64,
+}
+
+/// Point-in-time view of the manager's bookkeeping.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct CacheStats {
+    /// Bytes of tracked, still-live memoized values.
+    pub resident_bytes: u64,
+    /// Tracked live entries.
+    pub entries: usize,
+    /// Configured budget (`None` = unlimited).
+    pub budget_bytes: Option<u64>,
+    /// Values evicted over this manager's lifetime.
+    pub evictions: usize,
+    /// Bytes released by those evictions.
+    pub evicted_bytes: u64,
+}
+
+struct Entry {
+    node: Weak<ExprNode>,
+    bytes: u64,
+    last_use: u64,
+}
+
+struct Inner {
+    budget: Option<u64>,
+    tick: u64,
+    entries: HashMap<u64, Entry>,
+    resident: u64,
+    evictions: usize,
+    evicted_bytes: u64,
+}
+
+/// Session-owned registry of materialized plan-node values with LRU
+/// byte-budget eviction. Shared by every plan the session (or service)
+/// executes, so the budget governs the whole application's resident set.
+pub struct CacheManager {
+    inner: Mutex<Inner>,
+    /// Serializes plan canonicalization across a session's concurrent
+    /// jobs — see `PlanExec::eval_with`.
+    optimize_gate: Mutex<()>,
+}
+
+impl CacheManager {
+    /// `budget_bytes = 0` means unlimited (track for stats, never evict).
+    pub fn new(budget_bytes: u64) -> Self {
+        CacheManager {
+            inner: Mutex::new(Inner {
+                budget: (budget_bytes > 0).then_some(budget_bytes),
+                tick: 0,
+                entries: HashMap::new(),
+                resident: 0,
+                evictions: 0,
+                evicted_bytes: 0,
+            }),
+            optimize_gate: Mutex::new(()),
+        }
+    }
+
+    /// Guard serializing the optimize step of concurrent materializations.
+    pub(crate) fn optimize_gate(&self) -> std::sync::MutexGuard<'_, ()> {
+        self.optimize_gate.lock().unwrap()
+    }
+
+    /// Track a freshly materialized node value and enforce the budget.
+    /// Returns what the enforcement pass evicted so the caller can stamp
+    /// it into the cluster metrics.
+    pub(crate) fn register(&self, e: &MatExpr) -> EvictionReport {
+        let bytes = e.approx_result_bytes();
+        let mut inner = self.inner.lock().unwrap();
+        inner.tick += 1;
+        let tick = inner.tick;
+        if let Some(old) = inner.entries.insert(
+            e.id(),
+            Entry {
+                node: MatExpr::downgrade(e),
+                bytes,
+                last_use: tick,
+            },
+        ) {
+            inner.resident = inner.resident.saturating_sub(old.bytes);
+        }
+        inner.resident += bytes;
+        enforce(&mut inner)
+    }
+
+    /// Bump a node's recency (memo hit).
+    pub(crate) fn touch(&self, id: u64) {
+        let mut inner = self.inner.lock().unwrap();
+        inner.tick += 1;
+        let tick = inner.tick;
+        if let Some(entry) = inner.entries.get_mut(&id) {
+            entry.last_use = tick;
+        }
+    }
+
+    /// Stop tracking a node (its value was released explicitly, e.g. by
+    /// `unpersist`). Returns the bytes the entry accounted for.
+    pub(crate) fn forget(&self, id: u64) -> u64 {
+        let mut inner = self.inner.lock().unwrap();
+        match inner.entries.remove(&id) {
+            Some(entry) => {
+                inner.resident = inner.resident.saturating_sub(entry.bytes);
+                entry.bytes
+            }
+            None => 0,
+        }
+    }
+
+    pub fn stats(&self) -> CacheStats {
+        let mut inner = self.inner.lock().unwrap();
+        purge_dead(&mut inner);
+        CacheStats {
+            resident_bytes: inner.resident,
+            entries: inner.entries.len(),
+            budget_bytes: inner.budget,
+            evictions: inner.evictions,
+            evicted_bytes: inner.evicted_bytes,
+        }
+    }
+}
+
+/// Drop entries whose DAG died (every handle released its `Arc`): their
+/// payloads are already freed, only the bookkeeping remains.
+fn purge_dead(inner: &mut Inner) {
+    let mut freed = 0u64;
+    inner.entries.retain(|_, entry| {
+        if entry.node.strong_count() > 0 {
+            true
+        } else {
+            freed += entry.bytes;
+            false
+        }
+    });
+    inner.resident = inner.resident.saturating_sub(freed);
+}
+
+/// Evict least-recently-used, unpinned values until the resident total
+/// fits the budget. Best-effort: a node whose memo slot is momentarily
+/// locked (being read or written) **stays tracked** and is skipped for
+/// the rest of this pass — a later enforcement retries it, so the
+/// accounting never diverges from the slots.
+fn enforce(inner: &mut Inner) -> EvictionReport {
+    let mut report = EvictionReport::default();
+    let Some(budget) = inner.budget else {
+        return report;
+    };
+    if inner.resident <= budget {
+        return report;
+    }
+    purge_dead(inner);
+    let mut busy: HashSet<u64> = HashSet::new();
+    while inner.resident > budget {
+        // LRU candidate among evictable entries not yet found busy.
+        let mut victim: Option<(u64, u64)> = None; // (id, last_use)
+        for (&id, entry) in &inner.entries {
+            if busy.contains(&id) {
+                continue;
+            }
+            let Some(node) = entry.node.upgrade() else {
+                continue;
+            };
+            if node.pinned.load(Ordering::Relaxed) {
+                continue;
+            }
+            if victim.map(|(_, lu)| entry.last_use < lu).unwrap_or(true) {
+                victim = Some((id, entry.last_use));
+            }
+        }
+        let Some((id, _)) = victim else { break };
+        let node = inner.entries.get(&id).and_then(|e| e.node.upgrade());
+        match node {
+            Some(node) => match node.value.try_lock() {
+                Ok(mut slot) => {
+                    let entry = inner.entries.remove(&id).expect("victim is tracked");
+                    inner.resident = inner.resident.saturating_sub(entry.bytes);
+                    if slot.take().is_some() {
+                        report.evicted += 1;
+                        report.bytes += entry.bytes;
+                    }
+                }
+                // In use right now: keep it tracked, try another victim.
+                Err(_) => {
+                    busy.insert(id);
+                }
+            },
+            None => {
+                let entry = inner.entries.remove(&id).expect("victim is tracked");
+                inner.resident = inner.resident.saturating_sub(entry.bytes);
+            }
+        }
+    }
+    inner.evictions += report.evicted;
+    inner.evicted_bytes += report.bytes;
+    report
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::blockmatrix::BlockMatrix;
+    use crate::plan::ExprOp;
+
+    fn leafy(nb: usize, bs: usize) -> MatExpr {
+        // A non-source node (sources are never tracked): transpose of a
+        // zero source, with a value planted by hand.
+        let src = MatExpr::source(BlockMatrix::zeros(nb, bs).unwrap());
+        let t = src.transpose();
+        t.set_value(BlockMatrix::zeros(nb, bs).unwrap());
+        t
+    }
+
+    #[test]
+    fn unlimited_budget_tracks_but_never_evicts() {
+        let mgr = CacheManager::new(0);
+        let a = leafy(2, 4);
+        let rep = mgr.register(&a);
+        assert_eq!(rep, EvictionReport::default());
+        let stats = mgr.stats();
+        assert_eq!(stats.entries, 1);
+        assert_eq!(stats.resident_bytes, a.approx_result_bytes());
+        assert_eq!(stats.budget_bytes, None);
+        assert!(a.cached_value().is_some());
+    }
+
+    #[test]
+    fn over_budget_evicts_lru_first() {
+        // Each 2x4 node holds 8x8 doubles = 512 bytes; budget fits two.
+        let mgr = CacheManager::new(1024);
+        let (a, b, c) = (leafy(2, 4), leafy(2, 4), leafy(2, 4));
+        assert_eq!(mgr.register(&a), EvictionReport::default());
+        assert_eq!(mgr.register(&b), EvictionReport::default());
+        mgr.touch(a.id()); // a is now more recent than b
+        let rep = mgr.register(&c);
+        assert_eq!(rep.evicted, 1);
+        assert_eq!(rep.bytes, 512);
+        assert!(b.cached_value().is_none(), "LRU (b) evicted");
+        assert!(a.cached_value().is_some());
+        assert!(c.cached_value().is_some());
+        let stats = mgr.stats();
+        assert_eq!(stats.evictions, 1);
+        assert_eq!(stats.evicted_bytes, 512);
+        assert!(stats.resident_bytes <= 1024);
+    }
+
+    #[test]
+    fn pinned_values_survive_enforcement() {
+        let mgr = CacheManager::new(512);
+        let a = leafy(2, 4);
+        a.set_pinned(true);
+        mgr.register(&a);
+        let b = leafy(2, 4);
+        let rep = mgr.register(&b);
+        // a is pinned, so the only evictable victim is b itself.
+        assert!(a.cached_value().is_some(), "pinned value must survive");
+        assert_eq!(rep.evicted, 1);
+        assert!(b.cached_value().is_none());
+    }
+
+    #[test]
+    fn dead_dags_are_forgotten_not_evicted() {
+        let mgr = CacheManager::new(0);
+        {
+            let a = leafy(2, 4);
+            mgr.register(&a);
+            assert_eq!(mgr.stats().entries, 1);
+        } // a drops here; its payload freed by the Arc, not the evictor
+        let stats = mgr.stats();
+        assert_eq!(stats.entries, 0);
+        assert_eq!(stats.resident_bytes, 0);
+        assert_eq!(stats.evictions, 0, "natural death is not an eviction");
+    }
+
+    #[test]
+    fn forget_releases_accounting() {
+        let mgr = CacheManager::new(0);
+        let a = leafy(2, 4);
+        mgr.register(&a);
+        assert_eq!(mgr.forget(a.id()), 512);
+        assert_eq!(mgr.forget(a.id()), 0);
+        assert_eq!(mgr.stats().entries, 0);
+    }
+
+    #[test]
+    fn source_bytes_match_geometry() {
+        let src = MatExpr::source(BlockMatrix::zeros(4, 8).unwrap());
+        assert!(matches!(src.op(), ExprOp::Source(_)));
+        // 32x32 doubles.
+        assert_eq!(src.approx_result_bytes(), 32 * 32 * 8);
+    }
+}

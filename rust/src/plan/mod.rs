@@ -40,14 +40,16 @@
 
 mod exec;
 mod explain;
+mod lifecycle;
 pub mod optimizer;
 
 pub use exec::{InvertFn, PlanExec};
-pub use explain::{predicted_exchanges, render_plan};
+pub use explain::{predicted_exchanges, render_plan, render_plan_sized};
+pub use lifecycle::{CacheManager, CacheStats, EvictionReport};
 pub use optimizer::{Optimizer, OptimizerConfig};
 
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Mutex, Weak};
 
 use crate::blockmatrix::{BlockMatrix, Quadrant};
 use crate::error::{Result, SpinError};
@@ -121,15 +123,20 @@ pub struct ExprNode {
     /// config — keeps rewritten identities stable across `optimize` calls
     /// so downstream value memos keep hitting.
     canonical: Mutex<Option<(OptimizerConfig, MatExpr)>>,
-    /// Materialized result. A node evaluates at most once per lifetime;
-    /// every further use (same plan or a later plan sharing the subtree)
-    /// reuses the value — the lazy equivalent of the eager API holding an
-    /// intermediate in a variable.
+    /// Materialized result. A node evaluates at most once *concurrently*
+    /// (the executor holds this slot while lowering, so plans shared
+    /// between jobs never duplicate work); every further use reuses the
+    /// value until the session's [`CacheManager`] evicts it under its
+    /// byte budget — after which the next read recomputes from the
+    /// children, bit-identically.
     value: Mutex<Option<BlockMatrix>>,
     /// Set by the optimizer's CSE pass on nodes referenced more than once
     /// in a plan: the automatic `cache()` insertion point shown by
     /// `explain`.
     cse_cached: AtomicBool,
+    /// Pinned by [`crate::session::DistMatrix::persist`]: the LRU evictor
+    /// must not drop this node's value.
+    pinned: AtomicBool,
 }
 
 /// A lazy distributed-matrix expression: a cheap, clonable handle onto one
@@ -154,6 +161,7 @@ impl MatExpr {
                 canonical: Mutex::new(None),
                 value: Mutex::new(None),
                 cse_cached: AtomicBool::new(false),
+                pinned: AtomicBool::new(false),
             }),
         }
     }
@@ -339,6 +347,48 @@ impl MatExpr {
 
     pub(crate) fn set_value(&self, v: BlockMatrix) {
         *self.node.value.lock().unwrap() = Some(v);
+    }
+
+    /// Exclusive access to the memo slot. The executor holds this for a
+    /// node's whole lowering so concurrent evaluators of a shared subtree
+    /// serialize (exactly-once execution); lock acquisition follows DAG
+    /// edges strictly downward, so no cycle — hence no deadlock — is
+    /// possible.
+    pub(crate) fn value_slot(&self) -> std::sync::MutexGuard<'_, Option<BlockMatrix>> {
+        self.node.value.lock().unwrap()
+    }
+
+    /// Drop this node's memoized value (if any). The next materialization
+    /// recomputes it from the children — always safe, always
+    /// bit-identical. Returns whether a value was actually released.
+    pub fn evict_value(&self) -> bool {
+        self.node.value.lock().unwrap().take().is_some()
+    }
+
+    /// Whether [`crate::session::DistMatrix::persist`] pinned this node
+    /// against LRU eviction.
+    pub fn is_pinned(&self) -> bool {
+        self.node.pinned.load(Ordering::Relaxed)
+    }
+
+    pub(crate) fn set_pinned(&self, on: bool) {
+        self.node.pinned.store(on, Ordering::Relaxed);
+    }
+
+    /// Approximate bytes of this node's materialized value: its full
+    /// `n × n` of f64 block payloads (what the LRU budget charges).
+    pub fn approx_result_bytes(&self) -> u64 {
+        let n = self.n() as u64;
+        n * n * 8
+    }
+
+    pub(crate) fn downgrade(e: &MatExpr) -> Weak<ExprNode> {
+        Arc::downgrade(&e.node)
+    }
+
+    /// Re-handle a weakly-held node, if its DAG is still alive.
+    pub(crate) fn upgrade(node: &Weak<ExprNode>) -> Option<MatExpr> {
+        node.upgrade().map(|node| MatExpr { node })
     }
 
     pub(crate) fn canonical_for(&self, config: OptimizerConfig) -> Option<MatExpr> {

@@ -9,10 +9,12 @@ use crate::linalg::{self, Matrix};
 
 /// Per-block compute vocabulary (mirrors `python/compile/model.py::OPS`).
 ///
-/// Implementations must be `Sync`: kernels are called from worker-pool
-/// threads. Backends with thread-affine state (PJRT handles are `!Send`)
-/// keep it in thread-locals.
-pub trait BlockKernels: Sync {
+/// Implementations must be `Send + Sync`: kernels are called from
+/// worker-pool threads, and the service layer shares one backend across
+/// its job-executor threads. Backends with thread-affine state (PJRT
+/// handles are `!Send`) keep it in thread-locals, so the backend struct
+/// itself stays freely movable.
+pub trait BlockKernels: Send + Sync {
     /// Backend name for reports.
     fn name(&self) -> &'static str;
 

@@ -1,0 +1,241 @@
+//! [`PlanCache`]: service-owned structural interning of [`MatExpr`]
+//! subtrees, so concurrent jobs over the same data share plan **nodes** —
+//! and therefore, through the executor's per-node memoization and the
+//! exactly-once slot locking, share materialized **results**.
+//!
+//! ## The cross-job cache key
+//!
+//! Interning is keyed structurally, bottom-up:
+//!
+//! * a source is keyed by its [`MatrixSpec`] parameters
+//!   `(n, block_size, seed, generator)` — generation is
+//!   seed-deterministic, so equal keys denote bit-identical matrices;
+//! * an operator node is keyed by `(op, child node ids…, params)` —
+//!   children are interned first, so id equality is value equality.
+//!
+//! Two jobs that both need `invert[spin](A)` therefore hold the *same*
+//! `Arc`'d plan node: whichever job materializes first pays, the other
+//! reuses.
+//!
+//! Retention is bounded by live jobs: the cache holds only **weak**
+//! references, so when the last handle to a plan drops, its nodes — and
+//! the source payloads inside them — free naturally and the dead entry
+//! is purged on the next lookup. (Value residency of *materialized*
+//! intermediates is governed separately by the session's
+//! [`crate::plan::CacheManager`] LRU budget.) Source generation runs
+//! **outside** the cache lock — a tenant submitting a huge matrix must
+//! not stall every other tenant's submit — with a re-check on insert so
+//! two racing submitters of the same spec still converge on one node.
+
+use std::collections::HashMap;
+use std::sync::{Mutex, Weak};
+
+use crate::blockmatrix::BlockMatrix;
+use crate::error::Result;
+use crate::plan::{ExprNode, MatExpr};
+
+use super::spec::MatrixSpec;
+
+/// Structural identity of an interned node.
+#[derive(Debug, Clone, Hash, PartialEq, Eq)]
+enum PlanKey {
+    Source {
+        n: usize,
+        block_size: usize,
+        seed: u64,
+        generator: &'static str,
+    },
+    Invert {
+        algo: String,
+        child: u64,
+    },
+    Multiply {
+        a: u64,
+        b: u64,
+    },
+    Transpose {
+        x: u64,
+    },
+}
+
+/// Hit/miss/size counters for reports and tests. `entries` counts only
+/// entries whose plans are still alive.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct PlanCacheStats {
+    pub hits: u64,
+    pub misses: u64,
+    pub entries: usize,
+}
+
+#[derive(Default)]
+struct Inner {
+    map: HashMap<PlanKey, Weak<ExprNode>>,
+    hits: u64,
+    misses: u64,
+}
+
+/// Thread-safe interner of job plan subtrees (see module docs).
+#[derive(Default)]
+pub struct PlanCache {
+    inner: Mutex<Inner>,
+}
+
+impl PlanCache {
+    pub fn new() -> Self {
+        PlanCache::default()
+    }
+
+    fn intern(
+        &self,
+        key: PlanKey,
+        build: impl FnOnce() -> Result<MatExpr>,
+    ) -> Result<MatExpr> {
+        {
+            let mut inner = self.inner.lock().unwrap();
+            if let Some(hit) = inner.map.get(&key).and_then(MatExpr::upgrade) {
+                inner.hits += 1;
+                return Ok(hit);
+            }
+        }
+        // Build with the lock RELEASED: source generation materializes a
+        // whole matrix, and one tenant's big input must not stall every
+        // other tenant's submit.
+        let candidate = build()?;
+        let mut inner = self.inner.lock().unwrap();
+        if let Some(hit) = inner.map.get(&key).and_then(MatExpr::upgrade) {
+            // Raced with another submitter: adopt the winner's node so
+            // both jobs share one plan (our duplicate generation is
+            // discarded; the data is seed-deterministic either way).
+            inner.hits += 1;
+            return Ok(hit);
+        }
+        // Dead entries (all referencing jobs finished and dropped their
+        // handles) are purged here, keeping retention bounded by live
+        // plans. Operator keys over dead child ids can never hit again —
+        // a rebuilt child gets a fresh node id.
+        inner.map.retain(|_, node| node.strong_count() > 0);
+        inner.misses += 1;
+        inner.map.insert(key, MatExpr::downgrade(&candidate));
+        Ok(candidate)
+    }
+
+    /// The interned plan leaf for a described matrix (generates the
+    /// blocks on first use).
+    pub fn source(&self, spec: &MatrixSpec) -> Result<MatExpr> {
+        self.intern(
+            PlanKey::Source {
+                n: spec.n,
+                block_size: spec.block_size,
+                seed: spec.seed,
+                generator: spec.generator.name(),
+            },
+            || Ok(MatExpr::source(BlockMatrix::random(&spec.to_job())?)),
+        )
+    }
+
+    /// Interned `child⁻¹` through the named scheme.
+    pub fn invert(&self, child: &MatExpr, algo: &str) -> Result<MatExpr> {
+        self.intern(
+            PlanKey::Invert {
+                algo: algo.to_string(),
+                child: child.id(),
+            },
+            || Ok(child.invert(algo)),
+        )
+    }
+
+    /// Interned `a·b`.
+    pub fn multiply(&self, a: &MatExpr, b: &MatExpr) -> Result<MatExpr> {
+        self.intern(
+            PlanKey::Multiply {
+                a: a.id(),
+                b: b.id(),
+            },
+            || a.multiply(b),
+        )
+    }
+
+    /// Interned `xᵀ`.
+    pub fn transpose(&self, x: &MatExpr) -> Result<MatExpr> {
+        self.intern(PlanKey::Transpose { x: x.id() }, || Ok(x.transpose()))
+    }
+
+    pub fn stats(&self) -> PlanCacheStats {
+        let mut inner = self.inner.lock().unwrap();
+        inner.map.retain(|_, node| node.strong_count() > 0);
+        PlanCacheStats {
+            hits: inner.hits,
+            misses: inner.misses,
+            entries: inner.map.len(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn equal_specs_intern_to_one_source() {
+        let cache = PlanCache::new();
+        let spec = MatrixSpec::new(16, 4).seeded(3);
+        let a = cache.source(&spec).unwrap();
+        let b = cache.source(&MatrixSpec::new(16, 4).seeded(3)).unwrap();
+        assert_eq!(a.id(), b.id(), "same spec must share one node");
+        // A different seed is a different matrix.
+        let c = cache.source(&spec.clone().seeded(4)).unwrap();
+        assert_ne!(a.id(), c.id());
+        let stats = cache.stats();
+        assert_eq!(stats.hits, 1);
+        assert_eq!(stats.misses, 2);
+        assert_eq!(stats.entries, 2);
+    }
+
+    #[test]
+    fn operators_intern_structurally() {
+        let cache = PlanCache::new();
+        let a = cache.source(&MatrixSpec::new(16, 4).seeded(1)).unwrap();
+        let b = cache.source(&MatrixSpec::new(16, 4).seeded(2)).unwrap();
+        let inv1 = cache.invert(&a, "spin").unwrap();
+        let inv2 = cache.invert(&a, "spin").unwrap();
+        assert_eq!(inv1.id(), inv2.id());
+        assert_ne!(cache.invert(&a, "lu").unwrap().id(), inv1.id());
+        let m1 = cache.multiply(&inv1, &b).unwrap();
+        let m2 = cache.multiply(&inv2, &b).unwrap();
+        assert_eq!(m1.id(), m2.id(), "solve tails built twice share");
+        // Operand order matters.
+        assert_ne!(cache.multiply(&b, &inv1).unwrap().id(), m1.id());
+        let t1 = cache.transpose(&a).unwrap();
+        let t2 = cache.transpose(&a).unwrap();
+        assert_eq!(t1.id(), t2.id());
+    }
+
+    #[test]
+    fn grid_mismatch_surfaces_from_constructor() {
+        let cache = PlanCache::new();
+        let a = cache.source(&MatrixSpec::new(16, 4)).unwrap();
+        let b = cache.source(&MatrixSpec::new(16, 8)).unwrap();
+        assert!(cache.multiply(&a, &b).is_err());
+    }
+
+    #[test]
+    fn dead_plans_are_released_not_pinned() {
+        let cache = PlanCache::new();
+        let spec = MatrixSpec::new(16, 4).seeded(9);
+        {
+            let a = cache.source(&spec).unwrap();
+            let _inv = cache.invert(&a, "spin").unwrap();
+            assert_eq!(cache.stats().entries, 2);
+        } // last handles drop: payloads free, entries purge
+        assert_eq!(
+            cache.stats().entries,
+            0,
+            "weak interning must not pin dead plans' payloads"
+        );
+        // A re-lookup regenerates: a fresh miss, a fresh node.
+        let again = cache.source(&spec).unwrap();
+        assert_eq!(cache.stats().misses, 3);
+        assert_eq!(cache.stats().entries, 1);
+        drop(again);
+    }
+}

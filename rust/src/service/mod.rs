@@ -1,0 +1,748 @@
+//! [`SpinService`]: an async, multi-tenant job layer over the session
+//! stack — the service-shaped front door the ROADMAP's "heavy traffic
+//! from many users" north star asks for.
+//!
+//! Callers [`submit`](SpinService::submit) workloads described by a
+//! serializable [`JobSpec`] (invert / solve / multiply / pseudo-inverse
+//! over parameter-described matrices) and get back a [`JobHandle`]:
+//! poll it ([`status`](JobHandle::status)), block on it
+//! ([`wait`](JobHandle::wait)), cancel it while queued
+//! ([`cancel`](JobHandle::cancel)), and introspect it (per-job
+//! [`metrics`](JobHandle::metrics) via cluster metric scopes,
+//! [`explain`](JobHandle::explain) for the optimized plan).
+//!
+//! Three pieces make concurrent jobs cheap and safe:
+//!
+//! * a **fair-share scheduler**: a bounded queue bucketed per tenant and
+//!   drained round-robin, so one chatty tenant cannot starve the rest,
+//!   and saturation surfaces as a `submit` error (backpressure) rather
+//!   than unbounded memory;
+//! * a **cross-job plan cache** ([`PlanCache`]): structural interning of
+//!   plan subtrees, so two jobs needing `invert[spin](A)` hold the same
+//!   `Arc`'d node — the executor's memo-slot locking then guarantees the
+//!   shared work runs exactly once no matter which worker gets there
+//!   first;
+//! * the **value lifecycle** ([`crate::plan::CacheManager`]): every
+//!   materialized value is tracked and the session's
+//!   `cache_budget_bytes` LRU evictor bounds the resident set across all
+//!   jobs; evicted values recompute bit-identically on the next read.
+//!
+//! ```no_run
+//! use spin::service::{JobSpec, MatrixSpec, SpinService};
+//!
+//! fn main() -> spin::Result<()> {
+//!     let service = SpinService::builder().cores(4).workers(2).build()?;
+//!     let a = MatrixSpec::new(256, 64).seeded(7);
+//!     let inv = service.submit(JobSpec::invert(a.clone()).tenant("alice"))?;
+//!     let sol = service.submit(
+//!         JobSpec::solve(a, MatrixSpec::new(256, 64).seeded(8)).tenant("bob"),
+//!     )?;
+//!     // Both jobs share the interned invert[spin](A) node: it executes once.
+//!     let inv_out = inv.wait()?;
+//!     let sol_out = sol.wait()?;
+//!     println!("residual {:?}", inv_out.residual);
+//!     println!("solve paid {} exchanges", sol_out.metrics.total_shuffle_stages());
+//!     Ok(())
+//! }
+//! ```
+
+mod cache;
+mod scheduler;
+mod spec;
+
+pub use cache::{PlanCache, PlanCacheStats};
+pub use spec::{JobKind, JobSpec, MatrixSpec};
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread;
+
+use crate::cluster::{Metrics, MetricsSnapshot};
+use crate::config::ClusterConfig;
+use crate::error::{Result, SpinError};
+use crate::linalg::{inverse_residual, Matrix};
+use crate::plan::{CacheStats, MatExpr};
+use crate::session::{SessionBuilder, SpinSession};
+
+use scheduler::FairShareQueue;
+
+/// Where a job is in its life.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum JobStatus {
+    Queued,
+    Running,
+    Completed,
+    Failed,
+    Cancelled,
+}
+
+/// What a finished job produced.
+#[derive(Debug, Clone)]
+pub struct JobOutcome {
+    /// The result matrix, assembled dense on the driver.
+    pub dense: Matrix,
+    /// ‖A·X − I‖-style inversion residual, for kinds that invert the
+    /// job's primary matrix (`Invert`, `PseudoInverse`).
+    pub residual: Option<f64>,
+    /// Everything THIS job's execution recorded on the shared cluster
+    /// (scoped by job id — concurrent jobs never pollute each other).
+    pub metrics: MetricsSnapshot,
+}
+
+enum Phase {
+    Queued,
+    Running,
+    Cancelled,
+    Completed(JobOutcome),
+    Failed(String),
+}
+
+struct JobState {
+    id: u64,
+    spec: JobSpec,
+    /// The interned result plan (shared with other jobs where structure
+    /// allows).
+    expr: MatExpr,
+    /// The job's primary input, kept for the residual check.
+    residual_source: Option<MatExpr>,
+    phase: Mutex<Phase>,
+    cv: Condvar,
+}
+
+/// Cheap, clonable reference to one submitted job.
+#[derive(Clone)]
+pub struct JobHandle {
+    state: Arc<JobState>,
+    inner: Arc<ServiceInner>,
+}
+
+impl JobHandle {
+    /// Service-unique job id (also the job's metrics scope tag).
+    pub fn id(&self) -> u64 {
+        self.state.id
+    }
+
+    /// The spec this job was submitted with.
+    pub fn spec(&self) -> &JobSpec {
+        &self.state.spec
+    }
+
+    pub fn status(&self) -> JobStatus {
+        match &*self.state.phase.lock().unwrap() {
+            Phase::Queued => JobStatus::Queued,
+            Phase::Running => JobStatus::Running,
+            Phase::Cancelled => JobStatus::Cancelled,
+            Phase::Completed(_) => JobStatus::Completed,
+            Phase::Failed(_) => JobStatus::Failed,
+        }
+    }
+
+    /// Block until the job reaches a terminal state.
+    pub fn wait(&self) -> Result<JobOutcome> {
+        let mut phase = self.state.phase.lock().unwrap();
+        loop {
+            match &*phase {
+                Phase::Completed(outcome) => return Ok(outcome.clone()),
+                Phase::Failed(msg) => {
+                    return Err(SpinError::cluster(format!(
+                        "job {} failed: {msg}",
+                        self.state.id
+                    )));
+                }
+                Phase::Cancelled => {
+                    return Err(SpinError::cluster(format!(
+                        "job {} was cancelled",
+                        self.state.id
+                    )));
+                }
+                Phase::Queued | Phase::Running => {
+                    phase = self.state.cv.wait(phase).unwrap();
+                }
+            }
+        }
+    }
+
+    /// Cancel a still-queued job. Returns `true` if the cancellation took
+    /// effect; a running or finished job is not interrupted (`false`).
+    /// The queue slot frees immediately, so cancelling relieves
+    /// backpressure.
+    pub fn cancel(&self) -> bool {
+        {
+            let mut phase = self.state.phase.lock().unwrap();
+            if !matches!(*phase, Phase::Queued) {
+                return false;
+            }
+            *phase = Phase::Cancelled;
+            self.state.cv.notify_all();
+        }
+        // Remove our queue entry (a worker may have popped it already —
+        // then run_job sees Cancelled and skips; either way the phase is
+        // terminal and the slot is free).
+        let id = self.state.id;
+        self.inner
+            .queue
+            .lock()
+            .unwrap()
+            .remove_where(&self.state.spec.tenant, |job| job.id == id);
+        true
+    }
+
+    /// Live per-job metrics window (empty until the job starts running).
+    pub fn metrics(&self) -> MetricsSnapshot {
+        self.inner.session.cluster().metrics_scoped(self.state.id)
+    }
+
+    /// Render this job's optimized plan — fusions, CSE cache points,
+    /// predicted shuffle stages, and cache decisions per node.
+    pub fn explain(&self) -> Result<String> {
+        self.inner.session.explain_expr(&self.state.expr)
+    }
+}
+
+struct ServiceInner {
+    session: SpinSession,
+    plans: PlanCache,
+    queue: Mutex<FairShareQueue<Arc<JobState>>>,
+    work_cv: Condvar,
+    shutdown: AtomicBool,
+    next_job: AtomicU64,
+}
+
+impl ServiceInner {
+    fn submit(self: &Arc<Self>, spec: JobSpec) -> Result<JobHandle> {
+        if self.shutdown.load(Ordering::SeqCst) {
+            return Err(SpinError::cluster("service is shutting down"));
+        }
+        for matrix in spec.matrices() {
+            matrix.validate()?;
+        }
+        // Resolve the scheme now: an unknown name must fail at submit,
+        // not minutes later on a worker thread.
+        let algo = spec
+            .algo
+            .clone()
+            .unwrap_or_else(|| self.session.default_algorithm().to_string());
+        self.session.registry().get(&algo)?;
+        let (expr, residual_source) = self.build_plan(&spec, &algo)?;
+        // Ids start at 1: scope 0 stays the ambient (non-job) scope.
+        let id = self.next_job.fetch_add(1, Ordering::Relaxed) + 1;
+        let state = Arc::new(JobState {
+            id,
+            spec,
+            expr,
+            residual_source,
+            phase: Mutex::new(Phase::Queued),
+            cv: Condvar::new(),
+        });
+        self.queue
+            .lock()
+            .unwrap()
+            .push(&state.spec.tenant, Arc::clone(&state))?;
+        self.work_cv.notify_one();
+        Ok(JobHandle {
+            state,
+            inner: Arc::clone(self),
+        })
+    }
+
+    /// Lower a spec onto interned plan nodes (the cross-job sharing
+    /// point: equal sub-structure → same `Arc`'d node).
+    fn build_plan(&self, spec: &JobSpec, algo: &str) -> Result<(MatExpr, Option<MatExpr>)> {
+        match &spec.kind {
+            JobKind::Invert { matrix } => {
+                let src = self.plans.source(matrix)?;
+                Ok((self.plans.invert(&src, algo)?, Some(src)))
+            }
+            JobKind::Solve { matrix, rhs } => {
+                let a = self.plans.source(matrix)?;
+                let b = self.plans.source(rhs)?;
+                let inv = self.plans.invert(&a, algo)?;
+                Ok((self.plans.multiply(&inv, &b)?, None))
+            }
+            JobKind::Multiply { a, b } => {
+                let ea = self.plans.source(a)?;
+                let eb = self.plans.source(b)?;
+                Ok((self.plans.multiply(&ea, &eb)?, None))
+            }
+            JobKind::PseudoInverse { matrix } => {
+                let m = self.plans.source(matrix)?;
+                let mt = self.plans.transpose(&m)?;
+                let gram = self.plans.multiply(&mt, &m)?;
+                let gram_inv = self.plans.invert(&gram, algo)?;
+                Ok((self.plans.multiply(&gram_inv, &mt)?, Some(m)))
+            }
+        }
+    }
+
+    /// Execute one popped job on the calling thread.
+    fn run_job(&self, job: &Arc<JobState>) {
+        {
+            let mut phase = job.phase.lock().unwrap();
+            if !matches!(*phase, Phase::Queued) {
+                // Cancelled while queued: skip silently.
+                return;
+            }
+            *phase = Phase::Running;
+        }
+        // Everything this job records on the shared cluster is tagged
+        // with its id, so per-job windows stay exact under concurrency.
+        let _scope = Metrics::enter_scope(job.id);
+        let outcome = self.execute(job);
+        let mut phase = job.phase.lock().unwrap();
+        *phase = match outcome {
+            Ok(o) => Phase::Completed(o),
+            Err(e) => Phase::Failed(e.to_string()),
+        };
+        job.cv.notify_all();
+    }
+
+    fn execute(&self, job: &JobState) -> Result<JobOutcome> {
+        let result = self.session.materialize(&job.expr)?;
+        let dense = result.to_dense()?;
+        let residual = match &job.residual_source {
+            Some(src) => {
+                let src_dense = self.session.materialize(src)?.to_dense()?;
+                Some(inverse_residual(&src_dense, &dense))
+            }
+            None => None,
+        };
+        Ok(JobOutcome {
+            dense,
+            residual,
+            metrics: self.session.cluster().metrics_scoped(job.id),
+        })
+    }
+}
+
+fn worker_loop(inner: Arc<ServiceInner>) {
+    loop {
+        let job = {
+            let mut queue = inner.queue.lock().unwrap();
+            loop {
+                if let Some(job) = queue.pop() {
+                    break Some(job);
+                }
+                if inner.shutdown.load(Ordering::SeqCst) {
+                    break None;
+                }
+                queue = inner.work_cv.wait(queue).unwrap();
+            }
+        };
+        match job {
+            Some(job) => inner.run_job(&job),
+            None => return,
+        }
+    }
+}
+
+/// Builder for [`SpinService`].
+pub struct ServiceBuilder {
+    session: SessionBuilder,
+    workers: usize,
+    queue_capacity: usize,
+}
+
+impl Default for ServiceBuilder {
+    fn default() -> Self {
+        ServiceBuilder {
+            session: SessionBuilder::default(),
+            workers: 2,
+            queue_capacity: 64,
+        }
+    }
+}
+
+impl ServiceBuilder {
+    /// Replace the whole underlying session configuration.
+    pub fn session_builder(mut self, session: SessionBuilder) -> Self {
+        self.session = session;
+        self
+    }
+
+    /// Local single-node cluster with `cores` task slots.
+    pub fn cores(mut self, cores: usize) -> Self {
+        self.session = self.session.cores(cores);
+        self
+    }
+
+    /// Replace the cluster topology (including `cache_budget_bytes`).
+    pub fn cluster_config(mut self, cfg: ClusterConfig) -> Self {
+        self.session = self.session.cluster_config(cfg);
+        self
+    }
+
+    /// Scheme used when a spec names none.
+    pub fn default_algorithm(mut self, name: &str) -> Self {
+        self.session = self.session.default_algorithm(name);
+        self
+    }
+
+    /// Job-executor threads. `0` = no background execution: jobs queue
+    /// until [`SpinService::run_pending`] drains them on the caller's
+    /// thread (deterministic tests, batch drivers).
+    pub fn workers(mut self, workers: usize) -> Self {
+        self.workers = workers;
+        self
+    }
+
+    /// Bound on queued (not yet running) jobs across all tenants.
+    pub fn queue_capacity(mut self, capacity: usize) -> Self {
+        self.queue_capacity = capacity;
+        self
+    }
+
+    pub fn build(self) -> Result<SpinService> {
+        let session = self.session.build()?;
+        let inner = Arc::new(ServiceInner {
+            session,
+            plans: PlanCache::new(),
+            queue: Mutex::new(FairShareQueue::new(self.queue_capacity)),
+            work_cv: Condvar::new(),
+            shutdown: AtomicBool::new(false),
+            next_job: AtomicU64::new(0),
+        });
+        let workers = (0..self.workers)
+            .map(|i| {
+                let inner = Arc::clone(&inner);
+                thread::Builder::new()
+                    .name(format!("spin-service-{i}"))
+                    .spawn(move || worker_loop(inner))
+                    .expect("spawn service worker thread")
+            })
+            .collect();
+        Ok(SpinService { inner, workers })
+    }
+}
+
+/// The job service: one shared session/cluster, a worker pool draining a
+/// fair-share queue, a cross-job plan cache, and per-job introspection.
+/// Dropping the service stops the workers; still-queued jobs are marked
+/// cancelled (running jobs finish first — drop joins the workers).
+pub struct SpinService {
+    inner: Arc<ServiceInner>,
+    workers: Vec<thread::JoinHandle<()>>,
+}
+
+impl SpinService {
+    pub fn builder() -> ServiceBuilder {
+        ServiceBuilder::default()
+    }
+
+    /// Queue a job and return its handle. All *distributed* work runs
+    /// asynchronously on the workers; what runs on the calling thread is
+    /// validation plus the job's input **definition** — first use of a
+    /// `MatrixSpec` generates its blocks here, so equal specs can intern
+    /// to one shared plan leaf. (Lazy generator leaves — moving that cost
+    /// onto the workers too — are noted future work in the ROADMAP.)
+    /// Fails fast on bad geometry, unknown algorithms, or a saturated
+    /// queue.
+    pub fn submit(&self, spec: JobSpec) -> Result<JobHandle> {
+        self.inner.submit(spec)
+    }
+
+    /// Run queued jobs on the calling thread until the queue is empty;
+    /// returns how many ran. The synchronous driver for `workers(0)`
+    /// services (batch replay, deterministic tests); safe alongside
+    /// background workers too.
+    pub fn run_pending(&self) -> usize {
+        let mut ran = 0;
+        loop {
+            let job = self.inner.queue.lock().unwrap().pop();
+            match job {
+                Some(job) => {
+                    self.inner.run_job(&job);
+                    ran += 1;
+                }
+                None => return ran,
+            }
+        }
+    }
+
+    /// The shared session every job executes on.
+    pub fn session(&self) -> &SpinSession {
+        &self.inner.session
+    }
+
+    /// Cross-job plan-cache counters.
+    pub fn plan_cache_stats(&self) -> PlanCacheStats {
+        self.inner.plans.stats()
+    }
+
+    /// Value-lifecycle counters (resident bytes, budget, evictions).
+    pub fn cache_stats(&self) -> CacheStats {
+        self.inner.session.cache_stats()
+    }
+
+    /// Cluster-global metrics across all jobs.
+    pub fn metrics(&self) -> MetricsSnapshot {
+        self.inner.session.metrics()
+    }
+
+    /// Jobs queued and not yet picked up.
+    pub fn queued_jobs(&self) -> usize {
+        self.inner.queue.lock().unwrap().len()
+    }
+
+    /// Background worker threads.
+    pub fn worker_count(&self) -> usize {
+        self.workers.len()
+    }
+}
+
+impl Drop for SpinService {
+    fn drop(&mut self) {
+        self.inner.shutdown.store(true, Ordering::SeqCst);
+        // Abandon still-queued jobs so their waiters unblock.
+        let abandoned = self.inner.queue.lock().unwrap().drain();
+        for job in abandoned {
+            let mut phase = job.phase.lock().unwrap();
+            if matches!(*phase, Phase::Queued) {
+                *phase = Phase::Cancelled;
+            }
+            drop(phase);
+            job.cv.notify_all();
+        }
+        self.inner.work_cv.notify_all();
+        for worker in self.workers.drain(..) {
+            let _ = worker.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sync_service() -> SpinService {
+        SpinService::builder().cores(2).workers(0).build().unwrap()
+    }
+
+    #[test]
+    fn submit_wait_invert_matches_session() {
+        let service = SpinService::builder().cores(2).workers(1).build().unwrap();
+        let handle = service
+            .submit(JobSpec::invert(MatrixSpec::new(32, 8).seeded(5)).label("inv"))
+            .unwrap();
+        let outcome = handle.wait().unwrap();
+        assert_eq!(handle.status(), JobStatus::Completed);
+        assert!(outcome.residual.unwrap() < 1e-9);
+        assert!(outcome.metrics.method("multiply").is_some());
+        assert_eq!(outcome.metrics.driver_collects(), 0);
+        // Reference: the same inversion through a plain session.
+        let session = SpinSession::local(2).unwrap();
+        let a = session.random_seeded(32, 8, 5).unwrap();
+        let want = a.inverse().unwrap().to_dense().unwrap();
+        assert_eq!(outcome.dense.max_abs_diff(&want), 0.0);
+    }
+
+    #[test]
+    fn submit_validates_before_queueing() {
+        let service = sync_service();
+        // Bad geometry.
+        let err = service
+            .submit(JobSpec::invert(MatrixSpec::new(100, 10)))
+            .unwrap_err();
+        assert!(err.to_string().contains("power of two"), "{err}");
+        // Unknown algorithm.
+        let err = service
+            .submit(JobSpec::invert(MatrixSpec::new(16, 4)).algorithm("qr"))
+            .unwrap_err();
+        assert!(err.to_string().contains("unknown algorithm"), "{err}");
+        // Grid mismatch inside a binary kind.
+        let err = service
+            .submit(JobSpec::multiply(
+                MatrixSpec::new(16, 4),
+                MatrixSpec::new(16, 8),
+            ))
+            .unwrap_err();
+        assert!(err.to_string().contains("grid mismatch"), "{err}");
+        assert_eq!(service.queued_jobs(), 0, "nothing bad was queued");
+    }
+
+    #[test]
+    fn queue_capacity_backpressure_and_cancel() {
+        let service = SpinService::builder()
+            .cores(2)
+            .workers(0)
+            .queue_capacity(2)
+            .build()
+            .unwrap();
+        let spec = || JobSpec::invert(MatrixSpec::new(16, 4));
+        let h1 = service.submit(spec()).unwrap();
+        let h2 = service.submit(spec().tenant("other")).unwrap();
+        let err = service.submit(spec()).unwrap_err();
+        assert!(err.to_string().contains("queue is full"), "{err}");
+        // Cancelling a queued job frees its slot immediately.
+        assert!(h2.cancel());
+        assert!(!h2.cancel(), "second cancel is a no-op");
+        assert_eq!(h2.status(), JobStatus::Cancelled);
+        assert!(h2.wait().unwrap_err().to_string().contains("cancelled"));
+        assert_eq!(service.queued_jobs(), 1, "cancel must relieve backpressure");
+        let h3 = service.submit(spec().tenant("third")).unwrap();
+        assert_eq!(service.run_pending(), 2, "h1 and h3 run; h2 never pops");
+        assert_eq!(h1.status(), JobStatus::Completed);
+        assert_eq!(h3.status(), JobStatus::Completed);
+        // A completed job cannot be cancelled.
+        assert!(!h1.cancel());
+    }
+
+    #[test]
+    fn shared_subexpression_executes_once_across_jobs() {
+        let service = sync_service();
+        let a = MatrixSpec::new(64, 16).seeded(0xA);
+        let b = MatrixSpec::new(64, 16).seeded(0xB);
+        let inv = service.submit(JobSpec::invert(a.clone())).unwrap();
+        let solve = service.submit(JobSpec::solve(a, b)).unwrap();
+        assert_eq!(service.run_pending(), 2);
+        let inv_out = inv.wait().unwrap();
+        let solve_out = solve.wait().unwrap();
+        assert!(inv_out.residual.unwrap() < 1e-9);
+        assert!(solve_out.residual.is_none());
+        // The invert[spin](A) node is interned once, so across BOTH jobs
+        // the recursion's leaves ran exactly once: grid 4 → 4 leaf calls.
+        let total = service.metrics();
+        assert_eq!(total.method("leafNode").unwrap().calls, 4);
+        // Plan cache saw the share: the solve's invert lookup was a hit.
+        let stats = service.plan_cache_stats();
+        assert!(stats.hits >= 2, "source + invert re-lookups hit: {stats:?}");
+        // Per-job attribution: the solve job paid the inversion (it ran
+        // second only in submission order — the scheduler interleaves
+        // tenants, but here both are `default`), while the other job got
+        // the memoized value. Exactly one job carries the leaf stages.
+        let inv_leaves = inv_out
+            .metrics
+            .method("leafNode")
+            .map(|s| s.calls)
+            .unwrap_or(0);
+        let solve_leaves = solve_out
+            .metrics
+            .method("leafNode")
+            .map(|s| s.calls)
+            .unwrap_or(0);
+        assert_eq!(inv_leaves + solve_leaves, 4);
+    }
+
+    #[test]
+    fn per_job_metrics_are_scoped() {
+        let service = sync_service();
+        let h1 = service
+            .submit(JobSpec::multiply(
+                MatrixSpec::new(16, 4).seeded(1),
+                MatrixSpec::new(16, 4).seeded(2),
+            ))
+            .unwrap();
+        let h2 = service
+            .submit(JobSpec::multiply(
+                MatrixSpec::new(16, 4).seeded(3),
+                MatrixSpec::new(16, 4).seeded(4),
+            ))
+            .unwrap();
+        service.run_pending();
+        let m1 = h1.wait().unwrap().metrics;
+        let m2 = h2.wait().unwrap().metrics;
+        // Each distinct multiply pays its own single shuffle round (2
+        // exchange stages) — and ONLY its own.
+        assert_eq!(m1.method("multiply").unwrap().shuffle_stages, 2);
+        assert_eq!(m2.method("multiply").unwrap().shuffle_stages, 2);
+        assert_eq!(service.metrics().total_shuffle_stages(), 4);
+        // The live handle view agrees with the outcome snapshot.
+        assert_eq!(h1.metrics().total_shuffle_stages(), 2);
+    }
+
+    #[test]
+    fn pseudo_inverse_job_and_explain() {
+        let service = sync_service();
+        let handle = service
+            .submit(JobSpec::pseudo_inverse(MatrixSpec::new(32, 8).seeded(9).spd()))
+            .unwrap();
+        // explain works while the job is still queued.
+        let text = handle.explain().unwrap();
+        assert!(text.contains("invert[spin]"), "{text}");
+        assert!(text.contains("transpose"), "{text}");
+        service.run_pending();
+        let out = handle.wait().unwrap();
+        assert!(out.residual.unwrap() < 1e-8);
+    }
+
+    #[test]
+    fn failed_job_reports_error() {
+        use crate::algos::InversionAlgorithm;
+        use crate::blockmatrix::BlockMatrix;
+        use crate::cluster::Cluster;
+        use crate::config::JobConfig;
+        use crate::runtime::BlockKernels;
+
+        struct Exploding;
+        impl InversionAlgorithm for Exploding {
+            fn name(&self) -> &str {
+                "exploding"
+            }
+            fn invert(
+                &self,
+                _cluster: &Cluster,
+                _kernels: &dyn BlockKernels,
+                _a: &BlockMatrix,
+                _job: &JobConfig,
+            ) -> Result<BlockMatrix> {
+                Err(SpinError::numerical("boom"))
+            }
+        }
+        let service = SpinService::builder()
+            .session_builder(
+                SpinSession::builder()
+                    .cores(2)
+                    .register_algorithm(Arc::new(Exploding))
+                    .unwrap(),
+            )
+            .workers(0)
+            .build()
+            .unwrap();
+        let h = service
+            .submit(JobSpec::invert(MatrixSpec::new(16, 4)).algorithm("exploding"))
+            .unwrap();
+        service.run_pending();
+        assert_eq!(h.status(), JobStatus::Failed);
+        let err = h.wait().unwrap_err().to_string();
+        assert!(err.contains("failed") && err.contains("boom"), "{err}");
+        // A failed job cannot be cancelled after the fact.
+        assert!(!h.cancel());
+    }
+
+    #[test]
+    fn fair_share_run_order_across_tenants() {
+        let service = sync_service();
+        let spec = |seed: u64, tenant: &str| {
+            JobSpec::multiply(
+                MatrixSpec::new(16, 4).seeded(seed),
+                MatrixSpec::new(16, 4).seeded(seed + 100),
+            )
+            .tenant(tenant)
+        };
+        let a1 = service.submit(spec(1, "alice")).unwrap();
+        let a2 = service.submit(spec(2, "alice")).unwrap();
+        let b1 = service.submit(spec(3, "bob")).unwrap();
+        // Synchronous drain pops in fair-share order: alice, bob, alice.
+        // Job ids are submission-ordered, so check scope stage ordering
+        // via the global stage stream: run one job at a time.
+        assert_eq!(service.queued_jobs(), 3);
+        let first = {
+            let job = service.inner.queue.lock().unwrap().pop().unwrap();
+            let id = job.id;
+            service.inner.run_job(&job);
+            id
+        };
+        let second = {
+            let job = service.inner.queue.lock().unwrap().pop().unwrap();
+            let id = job.id;
+            service.inner.run_job(&job);
+            id
+        };
+        assert_eq!(first, a1.id());
+        assert_eq!(second, b1.id(), "bob's turn before alice's backlog");
+        service.run_pending();
+        assert_eq!(a2.status(), JobStatus::Completed);
+        for h in [a1, a2, b1] {
+            h.wait().unwrap();
+        }
+    }
+}

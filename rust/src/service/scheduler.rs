@@ -1,0 +1,164 @@
+//! Bounded fair-share queue: jobs are bucketed per tenant and drained
+//! round-robin across tenants with queued work, so one chatty tenant
+//! cannot starve the others — a heavy submitter only competes with
+//! itself. Total occupancy is capped; `push` fails when the service is
+//! saturated (backpressure instead of unbounded memory).
+
+use std::collections::{BTreeMap, VecDeque};
+
+use crate::error::{Result, SpinError};
+
+pub(crate) struct FairShareQueue<T> {
+    capacity: usize,
+    queues: BTreeMap<String, VecDeque<T>>,
+    /// Rotation of tenants with non-empty queues, each exactly once.
+    rr: VecDeque<String>,
+    len: usize,
+}
+
+impl<T> FairShareQueue<T> {
+    pub fn new(capacity: usize) -> Self {
+        FairShareQueue {
+            capacity: capacity.max(1),
+            queues: BTreeMap::new(),
+            rr: VecDeque::new(),
+            len: 0,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    /// Enqueue under `tenant`; errors when the service is saturated.
+    pub fn push(&mut self, tenant: &str, item: T) -> Result<()> {
+        if self.len >= self.capacity {
+            return Err(SpinError::cluster(format!(
+                "service queue is full ({} jobs queued, capacity {})",
+                self.len, self.capacity
+            )));
+        }
+        let queue = self.queues.entry(tenant.to_string()).or_default();
+        if queue.is_empty() {
+            self.rr.push_back(tenant.to_string());
+        }
+        queue.push_back(item);
+        self.len += 1;
+        Ok(())
+    }
+
+    /// Next job, round-robin across tenants: take the head of the front
+    /// tenant's queue, then rotate that tenant to the back (if it still
+    /// has work).
+    pub fn pop(&mut self) -> Option<T> {
+        let tenant = self.rr.pop_front()?;
+        let queue = self
+            .queues
+            .get_mut(&tenant)
+            .expect("rr names a tenant with a queue");
+        let item = queue.pop_front().expect("rr names a non-empty queue");
+        if queue.is_empty() {
+            self.queues.remove(&tenant);
+        } else {
+            self.rr.push_back(tenant);
+        }
+        self.len -= 1;
+        Some(item)
+    }
+
+    /// Remove one queued item of `tenant` matching `pred` (job
+    /// cancellation): the slot frees immediately, so cancelling relieves
+    /// backpressure instead of waiting for a worker to pop-and-discard.
+    pub fn remove_where(&mut self, tenant: &str, pred: impl Fn(&T) -> bool) -> Option<T> {
+        let queue = self.queues.get_mut(tenant)?;
+        let pos = queue.iter().position(pred)?;
+        let item = queue.remove(pos).expect("position is in range");
+        if queue.is_empty() {
+            self.queues.remove(tenant);
+            self.rr.retain(|name| name != tenant);
+        }
+        self.len -= 1;
+        Some(item)
+    }
+
+    /// Remove everything (service shutdown): returns the abandoned items
+    /// so the caller can mark them cancelled.
+    pub fn drain(&mut self) -> Vec<T> {
+        let mut out = Vec::with_capacity(self.len);
+        while let Some(item) = self.pop() {
+            out.push(item);
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn round_robin_across_tenants() {
+        let mut q = FairShareQueue::new(16);
+        // alice floods, bob and carol each submit one.
+        q.push("alice", "a1").unwrap();
+        q.push("alice", "a2").unwrap();
+        q.push("alice", "a3").unwrap();
+        q.push("bob", "b1").unwrap();
+        q.push("carol", "c1").unwrap();
+        let order: Vec<&str> = std::iter::from_fn(|| q.pop()).collect();
+        // alice first (submitted first), then each other tenant gets a
+        // turn before alice's backlog continues.
+        assert_eq!(order, vec!["a1", "b1", "c1", "a2", "a3"]);
+        assert_eq!(q.len(), 0);
+    }
+
+    #[test]
+    fn capacity_backpressure() {
+        let mut q = FairShareQueue::new(2);
+        q.push("t", 1).unwrap();
+        q.push("t", 2).unwrap();
+        let err = q.push("t", 3).unwrap_err();
+        assert!(err.to_string().contains("capacity 2"), "{err}");
+        assert_eq!(q.pop(), Some(1));
+        q.push("t", 3).unwrap(); // space again after a pop
+        assert_eq!(q.len(), 2);
+    }
+
+    #[test]
+    fn drain_empties_in_fair_order() {
+        let mut q = FairShareQueue::new(8);
+        q.push("x", 1).unwrap();
+        q.push("y", 2).unwrap();
+        q.push("x", 3).unwrap();
+        assert_eq!(q.drain(), vec![1, 2, 3]);
+        assert_eq!(q.len(), 0);
+        assert_eq!(q.pop(), None);
+    }
+
+    #[test]
+    fn remove_where_frees_slot_and_keeps_rotation_sound() {
+        let mut q = FairShareQueue::new(2);
+        q.push("x", 1).unwrap();
+        q.push("y", 2).unwrap();
+        assert!(q.push("x", 3).is_err(), "full");
+        // Removing x's only item drops x from the rotation entirely.
+        assert_eq!(q.remove_where("x", |&v| v == 1), Some(1));
+        assert_eq!(q.len(), 1);
+        assert_eq!(q.remove_where("x", |&v| v == 1), None);
+        q.push("z", 4).unwrap(); // slot freed
+        assert_eq!(q.pop(), Some(2));
+        assert_eq!(q.pop(), Some(4));
+        assert_eq!(q.pop(), None);
+    }
+
+    #[test]
+    fn tenant_rotation_reenters_after_empty() {
+        let mut q = FairShareQueue::new(8);
+        q.push("x", 1).unwrap();
+        assert_eq!(q.pop(), Some(1));
+        // x left the rotation when its queue emptied; re-pushing re-enters.
+        q.push("x", 2).unwrap();
+        assert_eq!(q.pop(), Some(2));
+        assert_eq!(q.pop(), None);
+    }
+}

@@ -1,0 +1,363 @@
+//! [`JobSpec`]: the serializable description of one service workload.
+//!
+//! A spec names *what* to compute — matrices are described by their
+//! generator parameters (`n`, `block_size`, `seed`, family), not passed
+//! by value — so specs can travel: submitted programmatically, written to
+//! a script file and replayed by `spin serve --script`, or logged for
+//! reproduction. Two specs describing the same matrix intern to the same
+//! plan source (see [`crate::service::PlanCache`]), which is what lets
+//! concurrent jobs share materialized subexpressions.
+
+use crate::config::{GeneratorKind, JobConfig};
+use crate::error::{Result, SpinError};
+use crate::ser::json::Json;
+
+/// Largest seed a spec accepts: JSON numbers are f64, so only integers
+/// up to 2⁵³ round-trip exactly — a lossy seed would silently describe a
+/// *different* matrix after replay, breaking the sharing key's
+/// bit-identity contract.
+pub const MAX_SEED: u64 = 1 << 53;
+
+/// A generated distributed matrix, described by parameters. Equal specs
+/// denote bit-identical matrices (generation is seed-deterministic), so
+/// equality doubles as the cross-job sharing key.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct MatrixSpec {
+    /// Matrix order (power of two).
+    pub n: usize,
+    /// Block edge (power of two dividing `n` into a power-of-two grid).
+    pub block_size: usize,
+    /// Generator seed (≤ [`MAX_SEED`] so scripts replay exactly).
+    pub seed: u64,
+    /// Test-matrix family.
+    pub generator: GeneratorKind,
+}
+
+impl MatrixSpec {
+    /// Diagonally-dominant matrix with the crate's default seed.
+    pub fn new(n: usize, block_size: usize) -> Self {
+        let j = JobConfig::new(n, block_size);
+        MatrixSpec {
+            n,
+            block_size,
+            seed: j.seed,
+            generator: j.generator,
+        }
+    }
+
+    pub fn seeded(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+
+    pub fn spd(mut self) -> Self {
+        self.generator = GeneratorKind::Spd;
+        self
+    }
+
+    /// The geometry/seed checks a spec must pass before it is queued.
+    pub fn validate(&self) -> Result<()> {
+        if self.seed > MAX_SEED {
+            return Err(SpinError::config(format!(
+                "matrix seed {} exceeds 2^53 and would not survive a JSON \
+                 round-trip (scripts must replay the exact matrix)",
+                self.seed
+            )));
+        }
+        self.to_job().validate()
+    }
+
+    /// Full job parameters for generating this matrix.
+    pub(crate) fn to_job(&self) -> JobConfig {
+        let mut job = JobConfig::new(self.n, self.block_size);
+        job.seed = self.seed;
+        job.generator = self.generator;
+        job
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::object(vec![
+            ("n", Json::num(self.n as f64)),
+            ("block_size", Json::num(self.block_size as f64)),
+            ("seed", Json::num(self.seed as f64)),
+            ("generator", Json::str(self.generator.name())),
+        ])
+    }
+
+    pub fn from_json(v: &Json) -> Result<Self> {
+        let n = v
+            .req("n")?
+            .as_usize()
+            .ok_or_else(|| SpinError::config("matrix `n` must be a positive integer"))?;
+        let block_size = v
+            .req("block_size")?
+            .as_usize()
+            .ok_or_else(|| SpinError::config("matrix `block_size` must be a positive integer"))?;
+        let mut spec = MatrixSpec::new(n, block_size);
+        if let Some(j) = v.get("seed") {
+            let raw = j
+                .as_i64()
+                .ok_or_else(|| SpinError::config("matrix `seed` must be an integer"))?;
+            spec.seed = u64::try_from(raw)
+                .ok()
+                .filter(|&s| s <= MAX_SEED)
+                .ok_or_else(|| {
+                    SpinError::config(format!(
+                        "matrix `seed` must be an integer in [0, 2^53], got {raw}"
+                    ))
+                })?;
+        }
+        if let Some(j) = v.get("generator") {
+            spec.generator = GeneratorKind::parse(
+                j.as_str()
+                    .ok_or_else(|| SpinError::config("matrix `generator` must be a string"))?,
+            )?;
+        }
+        Ok(spec)
+    }
+}
+
+/// The workload shape.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum JobKind {
+    /// A⁻¹.
+    Invert { matrix: MatrixSpec },
+    /// X = A⁻¹·B for a distributed right-hand side.
+    Solve { matrix: MatrixSpec, rhs: MatrixSpec },
+    /// C = A·B.
+    Multiply { a: MatrixSpec, b: MatrixSpec },
+    /// M⁺ = (MᵀM)⁻¹·Mᵀ.
+    PseudoInverse { matrix: MatrixSpec },
+}
+
+impl JobKind {
+    /// Stable kind tag used by JSON and reports.
+    pub fn name(&self) -> &'static str {
+        match self {
+            JobKind::Invert { .. } => "invert",
+            JobKind::Solve { .. } => "solve",
+            JobKind::Multiply { .. } => "multiply",
+            JobKind::PseudoInverse { .. } => "pseudo_inverse",
+        }
+    }
+}
+
+/// One submittable service job: a workload plus scheduling metadata.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct JobSpec {
+    /// Fair-share scheduling bucket; the scheduler round-robins across
+    /// tenants with queued work.
+    pub tenant: String,
+    /// Free-form display label for reports ("" = unnamed).
+    pub label: String,
+    /// Inversion scheme for kinds that invert (`None` = the service
+    /// session's default algorithm). Ignored by `Multiply`.
+    pub algo: Option<String>,
+    pub kind: JobKind,
+}
+
+impl JobSpec {
+    fn with_kind(kind: JobKind) -> Self {
+        JobSpec {
+            tenant: "default".to_string(),
+            label: String::new(),
+            algo: None,
+            kind,
+        }
+    }
+
+    pub fn invert(matrix: MatrixSpec) -> Self {
+        JobSpec::with_kind(JobKind::Invert { matrix })
+    }
+
+    pub fn solve(matrix: MatrixSpec, rhs: MatrixSpec) -> Self {
+        JobSpec::with_kind(JobKind::Solve { matrix, rhs })
+    }
+
+    pub fn multiply(a: MatrixSpec, b: MatrixSpec) -> Self {
+        JobSpec::with_kind(JobKind::Multiply { a, b })
+    }
+
+    pub fn pseudo_inverse(matrix: MatrixSpec) -> Self {
+        JobSpec::with_kind(JobKind::PseudoInverse { matrix })
+    }
+
+    pub fn tenant(mut self, tenant: &str) -> Self {
+        self.tenant = tenant.to_string();
+        self
+    }
+
+    pub fn label(mut self, label: &str) -> Self {
+        self.label = label.to_string();
+        self
+    }
+
+    pub fn algorithm(mut self, algo: &str) -> Self {
+        self.algo = Some(algo.to_string());
+        self
+    }
+
+    /// Every matrix this job reads.
+    pub fn matrices(&self) -> Vec<&MatrixSpec> {
+        match &self.kind {
+            JobKind::Invert { matrix } | JobKind::PseudoInverse { matrix } => vec![matrix],
+            JobKind::Solve { matrix, rhs } => vec![matrix, rhs],
+            JobKind::Multiply { a, b } => vec![a, b],
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut pairs = vec![
+            ("kind", Json::str(self.kind.name())),
+            ("tenant", Json::str(self.tenant.clone())),
+            ("label", Json::str(self.label.clone())),
+        ];
+        if let Some(algo) = &self.algo {
+            pairs.push(("algo", Json::str(algo.clone())));
+        }
+        match &self.kind {
+            JobKind::Invert { matrix } | JobKind::PseudoInverse { matrix } => {
+                pairs.push(("matrix", matrix.to_json()));
+            }
+            JobKind::Solve { matrix, rhs } => {
+                pairs.push(("matrix", matrix.to_json()));
+                pairs.push(("rhs", rhs.to_json()));
+            }
+            JobKind::Multiply { a, b } => {
+                pairs.push(("a", a.to_json()));
+                pairs.push(("b", b.to_json()));
+            }
+        }
+        Json::object(pairs)
+    }
+
+    pub fn from_json(v: &Json) -> Result<Self> {
+        let kind = v
+            .req("kind")?
+            .as_str()
+            .ok_or_else(|| SpinError::config("job `kind` must be a string"))?;
+        let matrix = |key: &str| -> Result<MatrixSpec> { MatrixSpec::from_json(v.req(key)?) };
+        let kind = match kind {
+            "invert" => JobKind::Invert {
+                matrix: matrix("matrix")?,
+            },
+            "solve" => JobKind::Solve {
+                matrix: matrix("matrix")?,
+                rhs: matrix("rhs")?,
+            },
+            "multiply" => JobKind::Multiply {
+                a: matrix("a")?,
+                b: matrix("b")?,
+            },
+            "pseudo_inverse" => JobKind::PseudoInverse {
+                matrix: matrix("matrix")?,
+            },
+            other => {
+                return Err(SpinError::config(format!(
+                    "unknown job kind `{other}` (expected invert|solve|multiply|pseudo_inverse)"
+                )));
+            }
+        };
+        let mut spec = JobSpec::with_kind(kind);
+        if let Some(j) = v.get("tenant") {
+            spec.tenant = j
+                .as_str()
+                .ok_or_else(|| SpinError::config("job `tenant` must be a string"))?
+                .to_string();
+        }
+        if let Some(j) = v.get("label") {
+            spec.label = j
+                .as_str()
+                .ok_or_else(|| SpinError::config("job `label` must be a string"))?
+                .to_string();
+        }
+        if let Some(j) = v.get("algo") {
+            spec.algo = Some(
+                j.as_str()
+                    .ok_or_else(|| SpinError::config("job `algo` must be a string"))?
+                    .to_string(),
+            );
+        }
+        Ok(spec)
+    }
+
+    /// Parse a `spin serve --script` document: `{"jobs": [spec, …]}`.
+    pub fn parse_script(doc: &Json) -> Result<Vec<JobSpec>> {
+        let jobs = doc
+            .req("jobs")?
+            .as_array()
+            .ok_or_else(|| SpinError::config("script `jobs` must be an array"))?;
+        if jobs.is_empty() {
+            return Err(SpinError::config("script contains no jobs"));
+        }
+        jobs.iter().map(JobSpec::from_json).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matrix_spec_round_trips() {
+        let spec = MatrixSpec::new(128, 16).seeded(7).spd();
+        let back = MatrixSpec::from_json(&spec.to_json()).unwrap();
+        assert_eq!(back, spec);
+        spec.validate().unwrap();
+        assert!(MatrixSpec::new(100, 10).validate().is_err());
+    }
+
+    #[test]
+    fn seeds_that_cannot_round_trip_are_rejected() {
+        // Above 2^53 the f64 JSON encoding is lossy: validate() refuses.
+        let lossy = MatrixSpec::new(16, 4).seeded(MAX_SEED + 1);
+        assert!(lossy.validate().is_err());
+        MatrixSpec::new(16, 4).seeded(MAX_SEED).validate().unwrap();
+        // Negative or oversized seeds in a script are parse errors.
+        let mut doc = MatrixSpec::new(16, 4).to_json();
+        if let Json::Object(m) = &mut doc {
+            m.insert("seed".to_string(), Json::num(-1.0));
+        }
+        assert!(MatrixSpec::from_json(&doc).is_err());
+        if let Json::Object(m) = &mut doc {
+            m.insert("seed".to_string(), Json::num(9.1e15)); // > 2^53
+        }
+        assert!(MatrixSpec::from_json(&doc).is_err());
+    }
+
+    #[test]
+    fn job_specs_round_trip() {
+        let a = MatrixSpec::new(64, 16).seeded(1);
+        let b = MatrixSpec::new(64, 16).seeded(2);
+        let specs = vec![
+            JobSpec::invert(a.clone()).tenant("alice").algorithm("lu"),
+            JobSpec::solve(a.clone(), b.clone()).label("gls"),
+            JobSpec::multiply(a.clone(), b.clone()),
+            JobSpec::pseudo_inverse(a.clone()).tenant("bob"),
+        ];
+        for spec in &specs {
+            let back = JobSpec::from_json(&spec.to_json()).unwrap();
+            assert_eq!(&back, spec);
+        }
+        assert_eq!(specs[0].kind.name(), "invert");
+        assert_eq!(specs[1].matrices().len(), 2);
+    }
+
+    #[test]
+    fn script_parsing_and_errors() {
+        let doc = Json::object(vec![(
+            "jobs",
+            Json::Array(vec![JobSpec::invert(MatrixSpec::new(16, 4)).to_json()]),
+        )]);
+        let jobs = JobSpec::parse_script(&doc).unwrap();
+        assert_eq!(jobs.len(), 1);
+        assert_eq!(jobs[0].tenant, "default");
+        // No jobs key / empty list / bad kind all fail.
+        assert!(JobSpec::parse_script(&Json::object(vec![])).is_err());
+        assert!(
+            JobSpec::parse_script(&Json::object(vec![("jobs", Json::Array(vec![]))])).is_err()
+        );
+        let bad = Json::object(vec![("kind", Json::str("cholesky"))]);
+        assert!(JobSpec::from_json(&bad).is_err());
+    }
+}

@@ -67,9 +67,28 @@ impl<'s> DistMatrix<'s> {
 
     /// Force evaluation (optimize + lower + execute). Idempotent: the
     /// result is memoized, so repeated calls (and every other
-    /// materialization point) reuse it.
+    /// materialization point) reuse it — until the session's LRU evictor
+    /// (or [`unpersist`](Self::unpersist)) releases the value, after
+    /// which the next read recomputes it bit-identically.
     pub fn collect(&self) -> Result<()> {
         self.session.materialize(&self.expr).map(|_| ())
+    }
+
+    /// Materialize this handle's value and **pin** it: the session's LRU
+    /// byte-budget evictor (`ClusterConfig::cache_budget_bytes`) must not
+    /// drop it. The Spark `persist()` of the lifecycle contract.
+    pub fn persist(&self) -> Result<&Self> {
+        self.session.materialize(&self.expr)?;
+        self.session.pin_expr(&self.expr)?;
+        Ok(self)
+    }
+
+    /// Unpin and immediately release this handle's materialized value
+    /// (blocks payloads free as soon as no other plan shares them).
+    /// Returns whether a value was actually resident. The handle stays
+    /// usable: the next materialization recomputes.
+    pub fn unpersist(&self) -> Result<bool> {
+        self.session.unpin_expr(&self.expr)
     }
 
     /// Materialize into the underlying distributed matrix.
@@ -383,5 +402,90 @@ mod tests {
         let a = m.pseudo_inverse_with("spin").unwrap().to_dense().unwrap();
         let b = m.pseudo_inverse_with("lu").unwrap().to_dense().unwrap();
         assert!(a.max_abs_diff(&b) < 1e-8);
+    }
+
+    /// Every plan node of a handle's *canonical* (executed) DAG, walked
+    /// through both the original nodes and their canonical memos.
+    fn all_plan_nodes(m: &DistMatrix<'_>) -> Vec<crate::plan::MatExpr> {
+        let cfg = m.session().optimizer_config();
+        let mut out = Vec::new();
+        let mut seen = std::collections::HashSet::new();
+        let mut stack = vec![m.expr().clone()];
+        while let Some(e) = stack.pop() {
+            if !seen.insert(e.id()) {
+                continue;
+            }
+            if let Some(canon) = e.canonical_for(cfg) {
+                stack.push(canon);
+            }
+            stack.extend(e.children());
+            out.push(e);
+        }
+        out
+    }
+
+    /// Satellite: evicting ANY subset of memoized plan-node values never
+    /// changes a recomputed `collect()` result — n = 128 / block 16, with
+    /// both built-in inversion schemes in the DAG.
+    #[test]
+    fn evicting_any_value_subset_preserves_results() {
+        use crate::util::check::forall;
+        for algo in ["spin", "lu"] {
+            let s = session();
+            // A DAG with real depth: Mᵀ, the Gram product, an invert and
+            // the final thin product.
+            let m = s.random_spd(128, 16).unwrap();
+            let pinv = m.pseudo_inverse_with(algo).unwrap();
+            let want = pinv.to_dense().unwrap();
+            let nodes = all_plan_nodes(&pinv);
+            assert!(nodes.len() >= 4, "expected a multi-node DAG for {algo}");
+            forall(
+                "eviction subsets preserve collect()",
+                0xE0 + algo.len() as u64,
+                6,
+                |r| r.next_u64(),
+                |&mask| {
+                    for (i, node) in nodes.iter().enumerate() {
+                        if mask & (1 << (i % 64)) != 0 {
+                            node.evict_value();
+                        }
+                    }
+                    let again = pinv.to_dense().map_err(|e| e.to_string())?;
+                    if again.max_abs_diff(&want) == 0.0 {
+                        Ok(())
+                    } else {
+                        Err(format!("{algo}: recompute after eviction diverged"))
+                    }
+                },
+            );
+        }
+    }
+
+    #[test]
+    fn persist_pins_and_unpersist_releases() {
+        let s = session();
+        let a = s.random_seeded(16, 4, 40).unwrap();
+        let b = s.random_seeded(16, 4, 41).unwrap();
+        let prod = a.multiply(&b).unwrap();
+        prod.persist().unwrap();
+        let stats = s.cache_stats();
+        assert!(stats.entries >= 1);
+        assert!(stats.resident_bytes >= 16 * 16 * 8);
+        // Pinned: a manual evict sweep of the canonical DAG must leave the
+        // persisted root resident (the evictor checks the same flag).
+        let canon = prod
+            .expr()
+            .canonical_for(s.optimizer_config())
+            .expect("persist materialized, so the canonical memo exists");
+        assert!(canon.is_pinned());
+        assert!(canon.cached_value().is_some());
+        // unpersist releases immediately and the handle still works.
+        assert!(prod.unpersist().unwrap());
+        assert!(canon.cached_value().is_none());
+        assert!(!canon.is_pinned());
+        assert!(!prod.unpersist().unwrap(), "second unpersist is a no-op");
+        let d = prod.to_dense().unwrap();
+        let want = crate::linalg::matmul(&a.to_dense().unwrap(), &b.to_dense().unwrap());
+        assert!(d.max_abs_diff(&want) < 1e-11);
     }
 }

@@ -49,7 +49,9 @@ use crate::cluster::{Cluster, MetricsSnapshot};
 use crate::config::{BackendKind, ClusterConfig, GeneratorKind, JobConfig, LeafMethod};
 use crate::error::{Result, SpinError};
 use crate::linalg::Matrix;
-use crate::plan::{render_plan, MatExpr, Optimizer, OptimizerConfig, PlanExec};
+use crate::plan::{
+    render_plan_sized, CacheManager, CacheStats, MatExpr, Optimizer, OptimizerConfig, PlanExec,
+};
 use crate::runtime::{make_backend, BlockKernels};
 
 /// Per-session job parameters applied to every operation (a [`JobConfig`]
@@ -215,12 +217,14 @@ impl SessionBuilder {
             )));
         }
         let kernels = make_backend(&self.cluster)?;
+        let lifecycle = Arc::new(CacheManager::new(self.cluster.cache_budget_bytes));
         Ok(SpinSession {
             cluster: Cluster::new(self.cluster),
             kernels,
             defaults: self.defaults,
             registry: self.registry,
             default_algo: self.default_algo,
+            lifecycle,
         })
     }
 }
@@ -234,6 +238,10 @@ pub struct SpinSession {
     defaults: JobDefaults,
     registry: AlgorithmRegistry,
     default_algo: String,
+    /// Value-lifecycle registry: tracks every materialized plan-node
+    /// value, enforces `ClusterConfig::cache_budget_bytes` by LRU
+    /// eviction, and honors `DistMatrix::persist` pins.
+    lifecycle: Arc<CacheManager>,
 }
 
 impl SpinSession {
@@ -325,9 +333,12 @@ impl SpinSession {
 
     /// Materialize a plan on this session's cluster: optimize, lower onto
     /// the block ops, resolve `invert` nodes through the algorithm
-    /// registry. Memoized per plan node — re-materializing is free.
+    /// registry. Memoized per plan node — re-materializing is free until
+    /// the LRU evictor (or `unpersist`) releases a value, after which it
+    /// recomputes bit-identically.
     pub(crate) fn materialize(&self, expr: &MatExpr) -> Result<BlockMatrix> {
-        let exec = PlanExec::new(&self.cluster, self.kernels.as_ref());
+        let exec =
+            PlanExec::new(&self.cluster, self.kernels.as_ref()).with_lifecycle(&self.lifecycle);
         exec.eval_with(expr, &|algo: &str, m: &BlockMatrix| {
             let scheme = self.registry.get(algo)?;
             let job = self.job_for(m.n(), m.block_size());
@@ -335,17 +346,64 @@ impl SpinSession {
         })
     }
 
+    /// Canonical (optimizer-output) form of an expression — the node the
+    /// executor actually memoizes values on, hence the pin/evict target.
+    fn canonical(&self, expr: &MatExpr) -> Result<MatExpr> {
+        let _gate = self.lifecycle.optimize_gate();
+        Optimizer::new(self.optimizer_config()).optimize(expr)
+    }
+
+    /// Pin an expression's materialized value against LRU eviction
+    /// (engine behind [`DistMatrix::persist`]). The value must already be
+    /// materialized by the caller.
+    pub(crate) fn pin_expr(&self, expr: &MatExpr) -> Result<()> {
+        self.canonical(expr)?.set_pinned(true);
+        Ok(())
+    }
+
+    /// Unpin and immediately release an expression's materialized value
+    /// (engine behind [`DistMatrix::unpersist`]). Returns whether a value
+    /// was actually resident.
+    pub(crate) fn unpin_expr(&self, expr: &MatExpr) -> Result<bool> {
+        let canonical = self.canonical(expr)?;
+        canonical.set_pinned(false);
+        let released = canonical.evict_value();
+        self.lifecycle.forget(canonical.id());
+        Ok(released)
+    }
+
+    /// Lifecycle bookkeeping: resident bytes, entry count, budget, and
+    /// eviction totals of this session's value cache.
+    pub fn cache_stats(&self) -> CacheStats {
+        self.lifecycle.stats()
+    }
+
     /// Render the optimized form of an expression (the engine behind
     /// [`DistMatrix::explain`]).
     pub(crate) fn explain_expr(&self, expr: &MatExpr) -> Result<String> {
-        let optimized = Optimizer::new(self.optimizer_config()).optimize(expr)?;
+        self.explain_expr_sized(expr, None)
+    }
+
+    /// [`explain_expr`](Self::explain_expr) with an explicit payload
+    /// block size for the resident-bytes column (used when the plan is
+    /// rendered over unit-block shape sources).
+    pub(crate) fn explain_expr_sized(
+        &self,
+        expr: &MatExpr,
+        block_size: Option<usize>,
+    ) -> Result<String> {
+        let optimized = self.canonical(expr)?;
         let mut out = format!(
             "optimized plan ({} nodes -> {}, optimizer {}):\n",
             expr.node_count(),
             optimized.node_count(),
             if self.config().plan_optimizer { "on" } else { "off" },
         );
-        out.push_str(&render_plan(&optimized, self.config().partitioner_aware));
+        out.push_str(&render_plan_sized(
+            &optimized,
+            self.config().partitioner_aware,
+            block_size,
+        ));
         Ok(out)
     }
 
@@ -372,7 +430,9 @@ impl SpinSession {
             "{algorithm}: one recursion level at n = {n}, grid {b}x{b} of {block_size}x{block_size}\n",
             b = n / block_size,
         );
-        out.push_str(&self.explain_expr(&plan)?);
+        // Resident-bytes predictions use the real block size even though
+        // the shape plan is built over unit blocks.
+        out.push_str(&self.explain_expr_sized(&plan, Some(block_size))?);
         Ok(out)
     }
 
@@ -605,6 +665,38 @@ mod tests {
         let text = session.explain_invert("spin", 64, 16).unwrap();
         assert!(text.contains("optimizer off"), "{text}");
         assert!(!text.contains("multiply_sub"), "unfused plan: {text}");
+    }
+
+    #[test]
+    fn cache_budget_evicts_and_results_stay_correct() {
+        let mut cfg = ClusterConfig::local(2);
+        // Budget = one 64x64 value; the pseudo-inverse pipeline holds four
+        // intermediates, so the LRU evictor must fire.
+        cfg.cache_budget_bytes = 64 * 64 * 8;
+        let s = SpinSession::builder().cluster_config(cfg).build().unwrap();
+        let m = s.random_spd(64, 16).unwrap();
+        let pinv = m.pseudo_inverse().unwrap();
+        let d1 = pinv.to_dense().unwrap();
+        assert!(s.metrics().cache_evictions() > 0, "budget must evict");
+        assert!(s.metrics().cache_evicted_bytes() > 0);
+        let stats = s.cache_stats();
+        assert_eq!(stats.budget_bytes, Some(64 * 64 * 8));
+        assert!(stats.resident_bytes <= 64 * 64 * 8);
+        assert!(stats.evictions > 0);
+        // Re-reads (memoized or recomputed) are bit-identical.
+        let d2 = pinv.to_dense().unwrap();
+        assert_eq!(d1.max_abs_diff(&d2), 0.0);
+    }
+
+    #[test]
+    fn unlimited_budget_never_evicts() {
+        let s = SpinSession::local(2).unwrap();
+        let m = s.random_spd(64, 16).unwrap();
+        let pinv = m.pseudo_inverse().unwrap();
+        pinv.collect().unwrap();
+        assert_eq!(s.metrics().cache_evictions(), 0);
+        assert_eq!(s.cache_stats().budget_bytes, None);
+        assert!(s.cache_stats().entries >= 4);
     }
 
     #[test]

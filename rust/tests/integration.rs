@@ -474,6 +474,218 @@ fn session_explain_shows_fusion_and_cache_nodes() {
     assert!(text.contains("cache("), "{text}");
 }
 
+// ---------------- SpinService: multi-tenant jobs (this PR's headline) ----
+
+/// Acceptance: two concurrent service jobs sharing a source matrix are
+/// bit-identical to sequential `SpinSession` runs, and the shared
+/// subexpression (`invert[spin](A)`) materializes exactly once — proven
+/// by stage counts on the shared cluster.
+#[test]
+fn service_concurrent_jobs_share_work_and_match_sequential() {
+    use spin::service::{JobSpec, MatrixSpec, SpinService};
+
+    // Sequential reference on a plain session: one inversion feeds both
+    // the inverse read-out and the solve (shared handle → runs once).
+    let session = SpinSession::builder().cores(4).build().unwrap();
+    let a = session.random_seeded(64, 16, 0xCAFE).unwrap();
+    let b = session.random_seeded(64, 16, 0xBEEF).unwrap();
+    let inv = a.inverse_with("spin").unwrap();
+    let seq_inv = inv.to_dense().unwrap();
+    let seq_solve = inv.multiply(&b).unwrap().to_dense().unwrap();
+    let seq_leaves = session.metrics().method("leafNode").unwrap().calls;
+
+    // The service runs the same two workloads concurrently (2 workers)
+    // for two tenants, sharing the interned invert node.
+    let service = SpinService::builder().cores(4).workers(2).build().unwrap();
+    let spec_a = MatrixSpec::new(64, 16).seeded(0xCAFE);
+    let spec_b = MatrixSpec::new(64, 16).seeded(0xBEEF);
+    let h_inv = service
+        .submit(JobSpec::invert(spec_a.clone()).tenant("alice"))
+        .unwrap();
+    let h_solve = service
+        .submit(JobSpec::solve(spec_a, spec_b).tenant("bob"))
+        .unwrap();
+    let out_inv = h_inv.wait().unwrap();
+    let out_solve = h_solve.wait().unwrap();
+
+    assert_eq!(
+        out_inv.dense.max_abs_diff(&seq_inv),
+        0.0,
+        "service inversion must be bit-identical to the session run"
+    );
+    assert_eq!(
+        out_solve.dense.max_abs_diff(&seq_solve),
+        0.0,
+        "service solve must be bit-identical to the session run"
+    );
+    assert!(out_inv.residual.unwrap() < 1e-9);
+
+    // Exactly-once sharing: across BOTH jobs the recursion's leaves ran
+    // once (grid 4 → 4 leaf inversions), same as the sequential session.
+    let total = service.metrics();
+    assert_eq!(total.method("leafNode").unwrap().calls, seq_leaves);
+    assert_eq!(total.driver_collects(), 0);
+    // Whichever job won the race carries the leaf stages; together they
+    // account for exactly one inversion.
+    let leaves = |m: &spin::cluster::MetricsSnapshot| {
+        m.method("leafNode").map(|s| s.calls).unwrap_or(0)
+    };
+    assert_eq!(leaves(&out_inv.metrics) + leaves(&out_solve.metrics), seq_leaves);
+    // The plan cache observed the share.
+    assert!(service.plan_cache_stats().hits >= 2);
+}
+
+/// Acceptance: an LRU budget of HALF the working set still completes
+/// correctly (bit-identical to an unbudgeted session) with eviction
+/// counters > 0.
+#[test]
+fn service_lru_half_budget_completes_with_evictions() {
+    use spin::service::{JobSpec, MatrixSpec, SpinService};
+
+    // Unbudgeted reference.
+    let session = SpinSession::builder().cores(4).build().unwrap();
+    let m_ref = session.random_spd(128, 16).unwrap();
+    let want = m_ref.pseudo_inverse().unwrap().to_dense().unwrap();
+
+    // Working set: the pseudo-inverse pipeline holds 4 intermediates of
+    // 128×128 doubles (plus the concurrent invert job's value) — budget
+    // half of the 4-value set.
+    let value_bytes = 128 * 128 * 8;
+    let mut cfg = ClusterConfig::local(4);
+    cfg.cache_budget_bytes = (2 * value_bytes) as u64;
+    let service = SpinService::builder()
+        .cluster_config(cfg)
+        .workers(2)
+        .build()
+        .unwrap();
+    let spd = MatrixSpec::new(128, 16).spd();
+    let h1 = service
+        .submit(JobSpec::pseudo_inverse(spd.clone()).tenant("a"))
+        .unwrap();
+    let h2 = service.submit(JobSpec::invert(spd).tenant("b")).unwrap();
+    let o1 = h1.wait().unwrap();
+    let o2 = h2.wait().unwrap();
+    assert_eq!(
+        o1.dense.max_abs_diff(&want),
+        0.0,
+        "budgeted run must be bit-identical to the unbudgeted session"
+    );
+    assert!(o2.residual.unwrap() < 1e-8);
+    assert!(
+        service.metrics().cache_evictions() > 0,
+        "half-working-set budget must evict"
+    );
+    let stats = service.cache_stats();
+    assert!(stats.evictions > 0);
+    assert!(stats.resident_bytes <= (2 * value_bytes) as u64);
+}
+
+/// Regression (metrics accounting): two jobs executing simultaneously on
+/// one cluster must not double-count each other's stage windows — each
+/// job's multiply plan-node reports exactly its own single shuffle round.
+#[test]
+fn concurrent_jobs_do_not_double_count_plan_windows() {
+    use spin::service::{JobSpec, MatrixSpec, SpinService};
+    let service = SpinService::builder().cores(4).workers(2).build().unwrap();
+    let mul = |s1: u64, s2: u64, tenant: &str| {
+        JobSpec::multiply(
+            MatrixSpec::new(64, 16).seeded(s1),
+            MatrixSpec::new(64, 16).seeded(s2),
+        )
+        .tenant(tenant)
+    };
+    let h1 = service.submit(mul(1, 2, "alice")).unwrap();
+    let h2 = service.submit(mul(3, 4, "bob")).unwrap();
+    let m1 = h1.wait().unwrap().metrics;
+    let m2 = h2.wait().unwrap().metrics;
+    for m in [&m1, &m2] {
+        assert_eq!(m.method("multiply").unwrap().shuffle_stages, 2);
+        let node = m
+            .plan_nodes()
+            .iter()
+            .find(|p| p.op == "multiply")
+            .expect("each job stamped its multiply window");
+        assert_eq!(
+            node.shuffle_stages, 2,
+            "plan-node window absorbed another job's exchanges"
+        );
+        assert_eq!(node.driver_collects, 0);
+    }
+    assert_eq!(service.metrics().total_shuffle_stages(), 4);
+}
+
+/// Regression (deterministic form): two plans forced to interleave on
+/// one cluster under explicit metric scopes — per-scope windows stay
+/// exact no matter how the stage streams interleave.
+#[test]
+fn interleaved_plan_windows_stay_exact_under_explicit_scopes() {
+    use spin::cluster::Metrics;
+    use spin::plan::{MatExpr, PlanExec};
+
+    let cluster = Cluster::new(ClusterConfig::local(4));
+    let src = |seed: u64| {
+        let mut job = JobConfig::new(64, 16);
+        job.seed = seed;
+        MatExpr::source(BlockMatrix::random(&job).unwrap())
+    };
+    let e1 = src(11).multiply(&src(12)).unwrap();
+    let e2 = src(13).multiply(&src(14)).unwrap();
+    let exec = PlanExec::new(&cluster, &NativeBackend);
+    let barrier = std::sync::Barrier::new(2);
+    std::thread::scope(|scope| {
+        scope.spawn(|| {
+            let _tag = Metrics::enter_scope(101);
+            barrier.wait();
+            exec.eval(&e1).unwrap();
+        });
+        scope.spawn(|| {
+            let _tag = Metrics::enter_scope(102);
+            barrier.wait();
+            exec.eval(&e2).unwrap();
+        });
+    });
+    for scope in [101u64, 102] {
+        let snap = cluster.metrics_scoped(scope);
+        assert_eq!(snap.method("multiply").unwrap().shuffle_stages, 2);
+        for node in snap.plan_nodes() {
+            if node.op == "multiply" {
+                assert_eq!(node.shuffle_stages, 2, "scope {scope} window leaked");
+            }
+        }
+    }
+    // Global view sees both jobs.
+    assert_eq!(cluster.metrics().total_shuffle_stages(), 4);
+}
+
+/// The service integration surface under the CI thread matrix: with
+/// `SPIN_WORKER_THREADS=4` the cluster's real worker pool and the
+/// service's job threads are both multi-threaded at once.
+#[test]
+fn service_with_multithreaded_worker_pool() {
+    use spin::service::{JobSpec, MatrixSpec, SpinService};
+    let mut cfg = ClusterConfig::local(4);
+    cfg.worker_threads = 4;
+    let service = SpinService::builder()
+        .cluster_config(cfg)
+        .workers(2)
+        .build()
+        .unwrap();
+    let handles: Vec<_> = (0..4)
+        .map(|i| {
+            service
+                .submit(
+                    JobSpec::invert(MatrixSpec::new(64, 16).seeded(0x700 + i))
+                        .tenant(if i % 2 == 0 { "even" } else { "odd" }),
+                )
+                .unwrap()
+        })
+        .collect();
+    for h in handles {
+        let out = h.wait().unwrap();
+        assert!(out.residual.unwrap() < 1e-9);
+    }
+}
+
 // ---------------- storage / backend plumbing (unchanged paths) ----------
 
 #[test]
