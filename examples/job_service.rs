@@ -23,7 +23,10 @@ fn main() -> spin::Result<()> {
         .build()?;
 
     // One shared 128x128 SPD matrix, described by parameters — equal
-    // descriptions intern to one plan source, so jobs share it.
+    // descriptions intern to ONE lazy plan leaf, so jobs share it, and
+    // submit() is O(1): not a single block exists until a worker
+    // materializes the first job (generation then runs per-partition on
+    // the workers, bit-identical to eager generation of the same spec).
     let a = MatrixSpec::new(128, 16).seeded(7).spd();
     let rhs = MatrixSpec::new(128, 16).seeded(8);
 
@@ -74,6 +77,15 @@ fn main() -> spin::Result<()> {
             .method("leafNode")
             .map(|s| s.calls)
             .unwrap_or(0));
+    // Finished jobs release their metric scopes (outcome snapshots keep
+    // the per-job view), so a serve loop holds steady-state memory.
+    let retention = service.metrics();
+    println!(
+        "metrics retention: {} record(s) retained, {} released over {} finished job(s)",
+        retention.retained_stage_records(),
+        retention.released_stage_records(),
+        retention.released_scopes(),
+    );
     println!("job_service OK");
     Ok(())
 }

@@ -12,7 +12,6 @@ use crate::cluster::{Cluster, Partitioner, Rdd};
 use crate::config::{GeneratorKind, JobConfig};
 use crate::error::{Result, SpinError};
 use crate::linalg::{self, Matrix};
-use crate::util::Rng;
 
 /// A square matrix distributed as an `nblocks × nblocks` grid of square
 /// `block_size × block_size` blocks.
@@ -131,11 +130,65 @@ impl BlockMatrix {
     }
 
     /// Generate a distributed test matrix per the job's generator family.
+    /// Blocks come from seed-derived per-block RNG streams
+    /// ([`linalg::generate_block`]) — the same pure function the lazy
+    /// `ExprOp::LazySource` leaves evaluate on the workers, so eager and
+    /// lazy generation are bit-identical by construction.
     pub fn random(job: &JobConfig) -> Result<Self> {
         job.validate()?;
-        let mut rng = Rng::new(job.seed);
-        let dense = linalg::generate(job.generator, job.n, &mut rng);
-        BlockMatrix::from_dense(&dense, job.block_size)
+        let nblocks = job.num_splits();
+        let blocks = (0..nblocks)
+            .flat_map(|bi| (0..nblocks).map(move |bj| (bi, bj)))
+            .map(|(bi, bj)| {
+                Block::new(
+                    bi,
+                    bj,
+                    linalg::generate_block(job.generator, job.n, job.block_size, bi, bj, job.seed),
+                )
+            })
+            .collect();
+        BlockMatrix::from_blocks(blocks, nblocks, job.block_size)
+    }
+
+    /// Build a distributed matrix by producing each block **on the
+    /// workers**: one grid-placed index per partition, one narrow stage
+    /// attributed to `method`, block `(i, j)` produced by `produce` inside
+    /// the partition's task. This is the lazy-source materialization path
+    /// — the driver never holds more than the assembled RDD, and the
+    /// produced blocks land directly under the grid partitioner.
+    pub fn materialize_blocks(
+        cluster: &Cluster,
+        method: &str,
+        nblocks: usize,
+        block_size: usize,
+        produce: impl Fn(usize, usize) -> Result<Matrix> + Sync,
+    ) -> Result<Self> {
+        let parts: Vec<Vec<(usize, usize)>> = (0..nblocks)
+            .flat_map(|i| (0..nblocks).map(move |j| vec![(i, j)]))
+            .collect();
+        let idx = Rdd::from_partitions_with(parts, Partitioner::Grid { nblocks });
+        let out = cluster.map(method, idx, |(i, j): (usize, usize)| {
+            produce(i, j).and_then(|m| {
+                if m.rows() != block_size || m.cols() != block_size {
+                    return Err(SpinError::shape(format!(
+                        "source block ({i},{j}) is {}x{}, expected {block_size}x{block_size}",
+                        m.rows(),
+                        m.cols()
+                    )));
+                }
+                Ok(Block::new(i, j, m))
+            })
+        });
+        let mut ok_parts = Vec::with_capacity(nblocks * nblocks);
+        for part in out.into_partitions() {
+            let mut ok = Vec::with_capacity(part.len());
+            for r in part {
+                ok.push(r?);
+            }
+            ok_parts.push(ok);
+        }
+        let rdd = Rdd::from_partitions(ok_parts).with_partitioner(Partitioner::Grid { nblocks });
+        Ok(BlockMatrix::from_rdd(rdd, nblocks, block_size))
     }
 
     /// Convenience for examples: a random SPD distributed matrix.
@@ -257,6 +310,7 @@ impl BlockMatrix {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::util::Rng;
 
     #[test]
     fn from_dense_round_trip() {
@@ -329,5 +383,52 @@ mod tests {
         let a = BlockMatrix::random(&job).unwrap().to_dense().unwrap();
         let b = BlockMatrix::random(&job).unwrap().to_dense().unwrap();
         assert_eq!(a.max_abs_diff(&b), 0.0);
+    }
+
+    #[test]
+    fn materialize_blocks_matches_eager_random_bitwise() {
+        use crate::config::{ClusterConfig, GeneratorKind};
+        let cluster = Cluster::new(ClusterConfig::local(2));
+        for generator in [GeneratorKind::DiagDominant, GeneratorKind::Spd] {
+            let mut job = JobConfig::new(32, 8);
+            job.seed = 0xBEE;
+            job.generator = generator;
+            let eager = BlockMatrix::random(&job).unwrap();
+            let lazy = BlockMatrix::materialize_blocks(&cluster, "generate", 4, 8, |i, j| {
+                Ok(linalg::generate_block(generator, 32, 8, i, j, 0xBEE))
+            })
+            .unwrap();
+            assert_eq!(
+                lazy.to_dense()
+                    .unwrap()
+                    .max_abs_diff(&eager.to_dense().unwrap()),
+                0.0,
+                "{generator:?}: worker-produced blocks must match eager bits"
+            );
+            assert_eq!(
+                lazy.rdd().partitioner(),
+                Some(Partitioner::Grid { nblocks: 4 }),
+                "lazy sources land grid-partitioned"
+            );
+        }
+        // The production stage is attributed and narrow.
+        let m = cluster.metrics();
+        assert_eq!(m.method("generate").unwrap().calls, 2);
+        assert_eq!(m.method("generate").unwrap().shuffle_stages, 0);
+        assert_eq!(m.driver_collects(), 0);
+    }
+
+    #[test]
+    fn materialize_blocks_surfaces_producer_errors() {
+        use crate::config::ClusterConfig;
+        let cluster = Cluster::new(ClusterConfig::local(2));
+        let bad_shape = BlockMatrix::materialize_blocks(&cluster, "generate", 2, 4, |_, _| {
+            Ok(Matrix::zeros(3, 3))
+        });
+        assert!(bad_shape.unwrap_err().to_string().contains("expected 4x4"));
+        let io = BlockMatrix::materialize_blocks(&cluster, "load", 2, 4, |i, j| {
+            Err(SpinError::artifact(format!("missing block ({i},{j})")))
+        });
+        assert!(io.is_err());
     }
 }

@@ -5,12 +5,14 @@
 //! spin invert  --n 1024 --block-size 128 [--algo spin|lu] [--backend native|xla]
 //!              [--generator diag-dominant|spd] [--seed N] [--fuse-leaf-2x2]
 //!              [--residual-check] [--set cluster.key=value]...
+//! spin ingest  --n 512 --block-size 64 --out DIR [--generator …] [--seed N]
 //! spin gen     --n 512 --block-size 64 --out DIR [--generator …] [--seed N]
 //! spin cost    [--n 4096] [--b 8] [--cores 30] [--calibrate]
 //! spin exp     figure2|figure3|figure4|figure5|table3|all [--smoke|--full]
 //! spin bench   [--smoke] [--out BENCH_spin.json] [--seed N] [--schema-baseline FILE]
 //! spin explain [--n 256 --block-size 32] [--algo spin] [--set plan_optimizer=false]
-//! spin serve   --script JOBS.json [--workers N] [--set cache_budget_bytes=N]
+//! spin serve   --script JOBS.json | --store DIR [--workers N]
+//!              [--set cache_budget_bytes=N] [--set metrics_history=N]
 //! spin info
 //! ```
 
@@ -20,16 +22,15 @@ pub use args::Args;
 
 use std::path::PathBuf;
 
-use crate::blockmatrix::BlockMatrix;
 use crate::config::{ClusterConfig, GeneratorKind, JobConfig};
 use crate::costmodel::{self, CostConstants};
 use crate::error::{Result, SpinError};
 use crate::experiments::{self, Scale};
 use crate::runtime::Manifest;
-use crate::ser::bin;
 use crate::ser::json::Json;
-use crate::service::{JobSpec, SpinService};
+use crate::service::{JobSpec, MatrixSpec, SpinService};
 use crate::session::SpinSession;
+use crate::store::{self, LocalDirStore};
 use crate::util::fmt;
 
 /// Entry point for the `spin` binary; returns the process exit code.
@@ -49,7 +50,7 @@ fn dispatch(argv: Vec<String>) -> Result<()> {
     let cmd = args.positional().unwrap_or_else(|| "help".to_string());
     match cmd.as_str() {
         "invert" => cmd_invert(args),
-        "gen" => cmd_gen(args),
+        "ingest" | "gen" => cmd_ingest(args),
         "cost" => cmd_cost(args),
         "exp" => cmd_exp(args),
         "bench" => cmd_bench(args),
@@ -74,7 +75,8 @@ pub fn usage() -> String {
      \n\
      COMMANDS:\n\
      \x20 invert   invert a generated matrix on the simulated cluster\n\
-     \x20 gen      generate a matrix and write it as a block store\n\
+     \x20 ingest   generate a matrix block-by-block into a block store (O(block) memory;\n\
+     \x20          serve it lazily with `spin serve --store DIR`; `gen` is an alias)\n\
      \x20 cost     print the Table-1 cost model (optionally calibrated)\n\
      \x20 exp      run a paper experiment: figure2|figure3|figure4|figure5|table3|all\n\
      \x20 bench    invert the tracked size sweep, write BENCH_spin.json (perf trajectory)\n\
@@ -232,25 +234,23 @@ fn cmd_invert(mut args: Args) -> Result<()> {
     Ok(())
 }
 
-fn cmd_gen(mut args: Args) -> Result<()> {
+/// `spin ingest` (alias `gen`): generate a matrix **block by block**
+/// into a block store. Per-block RNG streams mean the driver holds one
+/// block at a time — ingest scales to matrices that never fit driver
+/// memory, and the stored bits equal what the lazy serve path generates.
+fn cmd_ingest(mut args: Args) -> Result<()> {
     let job = job_config(&mut args)?;
     let out = args
         .flag_value("--out")?
-        .ok_or_else(|| SpinError::config("gen requires --out DIR"))?;
+        .ok_or_else(|| SpinError::config("ingest requires --out DIR"))?;
     args.finish()?;
-    let a = BlockMatrix::random(&job)?;
-    let nblocks = a.nblocks();
-    let blocks = a
-        .to_dense()?; // materialize once, then re-split for the store
-    let bm = BlockMatrix::from_dense(&blocks, job.block_size)?;
-    let iter = (0..nblocks)
-        .flat_map(|i| (0..nblocks).map(move |j| (i, j)))
-        .map(|(i, j)| ((i, j), bm.get_block(i, j).unwrap().matrix.clone()));
-    bin::write_block_store(std::path::Path::new(&out), nblocks, job.block_size, iter)?;
+    let store = LocalDirStore::create(&out, job.num_splits(), job.block_size)?;
+    let written = store::ingest_generated(&store, &job)?;
     println!(
         "wrote {}x{} block store ({} blocks of {}x{}) to {out}",
-        job.n, job.n, nblocks * nblocks, job.block_size, job.block_size
+        job.n, job.n, written, job.block_size, job.block_size
     );
+    println!("serve it lazily: spin serve --store {out}   (blocks load on the workers)");
     Ok(())
 }
 
@@ -389,6 +389,29 @@ fn cmd_bench(mut args: Args) -> Result<()> {
             if n / b < 2 {
                 continue;
             }
+            // Measured (not assumed): submit this geometry's job through
+            // a throwaway service and count the blocks its plan holds
+            // driver-side — 0 is the lazy-leaf invariant the baseline
+            // gates; an eager-generation regression shows up here. The
+            // count depends only on the source leaves, not the algorithm,
+            // so one probe covers both algo rows.
+            let submit_driver_blocks = {
+                let probe = SpinService::builder()
+                    .cluster_config(cfg.clone())
+                    .workers(0)
+                    .build()?;
+                let spec = MatrixSpec {
+                    n,
+                    block_size: n / b,
+                    // Only the plan's shape is probed; mask the seed into
+                    // the spec-valid range (≤ 2^53).
+                    seed: (seed ^ (n as u64) ^ b as u64) & ((1u64 << 53) - 1),
+                    generator: GeneratorKind::DiagDominant,
+                    store: None,
+                };
+                let handle = probe.submit(JobSpec::invert(spec))?;
+                handle.submit_driver_blocks()
+            };
             for algo in ["spin", "lu"] {
                 let mut job = JobConfig::new(n, n / b);
                 job.seed = seed ^ (n as u64) ^ b as u64;
@@ -420,6 +443,10 @@ fn cmd_bench(mut args: Args) -> Result<()> {
                     (
                         "driver_collects",
                         Json::num(r.metrics.driver_collects() as f64),
+                    ),
+                    (
+                        "submit_driver_blocks",
+                        Json::num(submit_driver_blocks as f64),
                     ),
                     ("methods", r.metrics.to_json()),
                 ]));
@@ -462,15 +489,17 @@ fn cmd_explain(mut args: Args) -> Result<()> {
 }
 
 /// `spin serve`: the batch driver for the multi-tenant job service.
-/// Reads a `{"jobs": [JobSpec, …]}` script, submits every job to a
-/// [`SpinService`], waits for all of them, and prints one report row per
-/// job plus the service-wide cache summary. `--workers 0` drains the
-/// queue synchronously on this thread (deterministic replay).
+/// Reads a `{"jobs": [JobSpec, …]}` script — or, with `--store DIR`,
+/// serves one inversion of a block-store matrix (blocks load lazily on
+/// the workers) — submits every job to a [`SpinService`], waits for all
+/// of them, and prints one report row per job plus the service-wide
+/// cache and metrics-retention summary. `--workers 0` drains the queue
+/// synchronously on this thread (deterministic replay).
 fn cmd_serve(mut args: Args) -> Result<()> {
     let cfg = cluster_config(&mut args)?;
-    let script = args.flag_value("--script")?.ok_or_else(|| {
-        SpinError::config("serve requires --script FILE (a {\"jobs\": [...]} document)")
-    })?;
+    let script = args.flag_value("--script")?;
+    let store_dir = args.flag_value("--store")?;
+    let algo = args.flag_value("--algo")?;
     let workers = args
         .flag_value("--workers")?
         .map(|v| {
@@ -481,14 +510,40 @@ fn cmd_serve(mut args: Args) -> Result<()> {
         .unwrap_or(2);
     args.finish()?;
 
-    let specs = JobSpec::parse_script(&Json::from_file(std::path::Path::new(&script))?)?;
+    let (specs, source_label) = match (&script, &store_dir) {
+        (Some(script), None) => {
+            if algo.is_some() {
+                return Err(SpinError::config(
+                    "--algo applies to --store mode only; scripted jobs name their \
+                     algorithm per job (\"algo\": \"...\")",
+                ));
+            }
+            (
+                JobSpec::parse_script(&Json::from_file(std::path::Path::new(script))?)?,
+                script.clone(),
+            )
+        }
+        (None, Some(dir)) => {
+            let mut job = JobSpec::invert(MatrixSpec::from_store(dir)?).label("store-invert");
+            if let Some(algo) = &algo {
+                job = job.algorithm(algo);
+            }
+            (vec![job], dir.clone())
+        }
+        _ => {
+            return Err(SpinError::config(
+                "serve requires exactly one of --script FILE (a {\"jobs\": [...]} document) \
+                 or --store DIR",
+            ));
+        }
+    };
     let service = SpinService::builder()
         .session_builder(SpinSession::builder().cluster_config(cfg))
         .workers(workers)
         .queue_capacity(specs.len().max(1))
         .build()?;
     println!(
-        "serving {} job(s) from {script} on {} worker thread(s)",
+        "serving {} job(s) from {source_label} on {} worker thread(s)",
         specs.len(),
         service.worker_count()
     );
@@ -555,6 +610,13 @@ fn cmd_serve(mut args: Args) -> Result<()> {
             .unwrap_or_else(|| "unlimited".to_string()),
         values.evictions,
         fmt::bytes(values.evicted_bytes),
+    );
+    let retention = service.metrics();
+    println!(
+        "metrics retention: {} stage record(s) retained · {} released across {} finished job scope(s)",
+        retention.retained_stage_records(),
+        retention.released_stage_records(),
+        retention.released_scopes(),
     );
     if failures > 0 {
         return Err(SpinError::cluster(format!("{failures} job(s) failed")));
@@ -624,7 +686,7 @@ fn check_bench_schema(baseline: &Json, measured: &Json) -> Result<()> {
             {
                 continue;
             }
-            for counter in ["shuffle_stages", "driver_collects"] {
+            for counter in ["shuffle_stages", "driver_collects", "submit_driver_blocks"] {
                 let bv = brun.get(counter).and_then(Json::as_f64);
                 let mv = mrun.get(counter).and_then(Json::as_f64);
                 if let (Some(bv), Some(mv)) = (bv, mv) {
@@ -754,6 +816,28 @@ mod tests {
         assert_eq!(run(argv(&cmd)), 0);
         let meta = crate::ser::bin::read_block_store_meta(&dir).unwrap();
         assert_eq!(meta.nblocks, 4);
+    }
+
+    #[test]
+    fn ingest_then_serve_store_round_trips() {
+        let dir = std::env::temp_dir().join(format!("spin_cli_ingest_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let cmd = format!("ingest --n 32 --block-size 8 --seed 9 --out {}", dir.display());
+        assert_eq!(run(argv(&cmd)), 0);
+        // Serve the store directly: one lazy invert job, blocks loaded on
+        // the workers.
+        let cmd = format!("serve --store {} --workers 0", dir.display());
+        assert_eq!(run(argv(&cmd)), 0);
+        let cmd = format!("serve --store {} --workers 0 --algo lu", dir.display());
+        assert_eq!(run(argv(&cmd)), 0);
+        // Missing ingest args / exclusive serve sources fail.
+        assert_eq!(run(argv("ingest --n 16 --block-size 4")), 1);
+        assert_eq!(run(argv("serve --workers 0")), 1);
+        let both = format!("serve --store {} --script nope.json", dir.display());
+        assert_eq!(run(argv(&both)), 1);
+        // --algo would be silently ignored with a script: rejected.
+        assert_eq!(run(argv("serve --script nope.json --algo lu")), 1);
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]
@@ -927,6 +1011,8 @@ mod tests {
             assert!(r.get("methods").unwrap().get("multiply").is_some());
             // The partitioner-aware pipeline never round-trips the driver.
             assert_eq!(r.get("driver_collects").unwrap().as_i64(), Some(0));
+            // Lazy leaves: submit generates zero blocks on the driver.
+            assert_eq!(r.get("submit_driver_blocks").unwrap().as_i64(), Some(0));
         }
         let _ = std::fs::remove_file(&path);
     }

@@ -13,13 +13,30 @@
 //! is what keeps per-plan-node windows honest when two jobs interleave
 //! stages on the same cluster: a delta of another job's stages can no
 //! longer leak into this job's `PlanNodeReport`.
+//!
+//! ## Retention (long-lived services)
+//!
+//! Records are stored **per scope**, so a finished job's history is
+//! droppable in O(1) bookkeeping: [`Metrics::release_scope`] removes the
+//! scope's stage records, plan-node reports, index and totals (the
+//! service calls it after a job reaches a terminal phase — take the
+//! job's [`Metrics::snapshot_scope`] *before* releasing). Per-method
+//! aggregates survive releases — they are bounded by the method-name set
+//! and keep the Table-3 view exact over the cluster's lifetime. An
+//! optional windowed history (`ClusterConfig::metrics_history`, CLI
+//! `--set metrics_history=N`) additionally caps retained stage records
+//! across all live scopes, oldest-first. The retention counters
+//! ([`MetricsSnapshot::retained_stage_records`],
+//! [`MetricsSnapshot::released_stage_records`],
+//! [`MetricsSnapshot::released_scopes`]) let a soak test assert
+//! steady-state memory.
 
 use std::cell::Cell;
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, VecDeque};
 use std::sync::Mutex;
 
 use crate::ser::json::Json;
-use crate::util::fmt;
+use crate::util::{fmt, plock};
 
 thread_local! {
     /// Job tag stamped onto everything the current thread records.
@@ -120,19 +137,40 @@ pub struct Metrics {
     inner: Mutex<MetricsInner>,
 }
 
+/// Every record one scope (job) produced — the unit of release.
+#[derive(Default)]
+struct ScopeRecords {
+    /// `(seq, report)` in record order; `seq` is registry-global so the
+    /// cross-scope snapshot can interleave scopes back into record order.
+    stages: VecDeque<(u64, StageReport)>,
+    /// Per-plan-node lowering reports (lazy-plan executions only) —
+    /// windowed by the same history cap as the stage records.
+    plan_nodes: VecDeque<(u64, PlanNodeReport)>,
+    /// Running aggregate counters (O(1) scoped windows) — these survive
+    /// the history cap (only full-record payloads are windowed).
+    totals: MetricsTotals,
+}
+
 #[derive(Default)]
 struct MetricsInner {
     methods: BTreeMap<String, MethodStats>,
-    stages: Vec<StageReport>,
-    /// Indices into `stages` per scope — scoped snapshots touch only
-    /// their own job's records, not the whole history.
-    stage_index: BTreeMap<u64, Vec<usize>>,
-    /// Per-plan-node lowering reports (lazy-plan executions only).
-    plan_nodes: Vec<PlanNodeReport>,
-    /// Indices into `plan_nodes` per scope.
-    plan_node_index: BTreeMap<u64, Vec<usize>>,
-    /// Running aggregate counters per scope (O(1) scoped windows).
-    scope_totals: BTreeMap<u64, MetricsTotals>,
+    /// Per-scope record storage; scope 0 is the ambient (non-job) scope.
+    scopes: BTreeMap<u64, ScopeRecords>,
+    /// Global record sequence (snapshot ordering across scopes).
+    seq: u64,
+    /// Stage records recorded over the registry's lifetime (monotonic).
+    total_stages: usize,
+    /// Windowed-history cap on retained stage records (0 = unlimited).
+    history: usize,
+    /// Stage records currently held across all scopes.
+    retained_stages: usize,
+    /// Plan-node reports currently held across all scopes (windowed by
+    /// the same `history` cap; not separately surfaced).
+    retained_plan_nodes: usize,
+    /// Stage records dropped by `release_scope` or the history window.
+    released_stages: usize,
+    /// Scopes released so far.
+    released_scopes: usize,
     /// Driver `collect` round-trips (materialize + re-parallelize). The
     /// partitioner-aware op pipeline records zero of these.
     driver_collects: usize,
@@ -140,6 +178,42 @@ struct MetricsInner {
     cache_evictions: usize,
     /// Bytes those evictions released.
     cache_evicted_bytes: u64,
+    /// Bytes currently pinned by `persist()` (gauge, set by the session).
+    pinned_bytes: u64,
+}
+
+/// Drop oldest records (across scopes, by global sequence) until the
+/// retained counts fit the configured window. Stage records and
+/// plan-node reports are windowed independently under the same cap, so
+/// neither record class can grow without bound in a scope that is never
+/// released (e.g. a long-lived session's ambient scope 0).
+fn enforce_history(inner: &mut MetricsInner) {
+    if inner.history == 0 {
+        return;
+    }
+    while inner.retained_stages > inner.history {
+        let oldest = inner
+            .scopes
+            .iter()
+            .filter_map(|(&scope, rec)| rec.stages.front().map(|(seq, _)| (*seq, scope)))
+            .min();
+        let Some((_, scope)) = oldest else { break };
+        let rec = inner.scopes.get_mut(&scope).expect("scope exists");
+        rec.stages.pop_front();
+        inner.retained_stages -= 1;
+        inner.released_stages += 1;
+    }
+    while inner.retained_plan_nodes > inner.history {
+        let oldest = inner
+            .scopes
+            .iter()
+            .filter_map(|(&scope, rec)| rec.plan_nodes.front().map(|(seq, _)| (*seq, scope)))
+            .min();
+        let Some((_, scope)) = oldest else { break };
+        let rec = inner.scopes.get_mut(&scope).expect("scope exists");
+        rec.plan_nodes.pop_front();
+        inner.retained_plan_nodes -= 1;
+    }
 }
 
 /// Fold one stage report into a per-method stats map (shared by the global
@@ -158,8 +232,18 @@ fn accumulate(methods: &mut BTreeMap<String, MethodStats>, report: &StageReport)
 
 impl Metrics {
     pub fn new() -> Self {
+        Metrics::with_history(0)
+    }
+
+    /// Registry with a windowed stage history: at most `history` stage
+    /// records stay resident (oldest dropped first, across scopes);
+    /// `0` retains everything until `release_scope`/`reset`.
+    pub fn with_history(history: usize) -> Self {
         Metrics {
-            inner: Mutex::new(MetricsInner::default()),
+            inner: Mutex::new(MetricsInner {
+                history,
+                ..MetricsInner::default()
+            }),
         }
     }
 
@@ -178,50 +262,90 @@ impl Metrics {
 
     pub fn record_stage(&self, report: StageReport) {
         let scope = Metrics::current_scope();
-        let mut inner = self.inner.lock().unwrap();
+        let mut inner = plock(&self.inner);
         accumulate(&mut inner.methods, &report);
+        inner.seq += 1;
+        inner.total_stages += 1;
+        inner.retained_stages += 1;
+        let seq = inner.seq;
         {
-            let totals = inner.scope_totals.entry(scope).or_default();
-            totals.stages += 1;
+            let rec = inner.scopes.entry(scope).or_default();
+            rec.totals.stages += 1;
             if report.exchange {
-                totals.shuffle_stages += 1;
+                rec.totals.shuffle_stages += 1;
             }
-            totals.shuffle_bytes += report.shuffle_bytes;
+            rec.totals.shuffle_bytes += report.shuffle_bytes;
+            rec.stages.push_back((seq, report));
         }
-        let idx = inner.stages.len();
-        inner.stage_index.entry(scope).or_default().push(idx);
-        inner.stages.push(report);
+        enforce_history(&mut inner);
     }
 
     /// Count one driver materialize-and-reparallelize round-trip.
     pub fn record_driver_collect(&self) {
         let scope = Metrics::current_scope();
-        let mut inner = self.inner.lock().unwrap();
+        let mut inner = plock(&self.inner);
         inner.driver_collects += 1;
-        inner.scope_totals.entry(scope).or_default().driver_collects += 1;
+        inner.scopes.entry(scope).or_default().totals.driver_collects += 1;
     }
 
     /// Attribute a lowered plan node's cost window.
     pub fn record_plan_node(&self, report: PlanNodeReport) {
         let scope = Metrics::current_scope();
-        let mut inner = self.inner.lock().unwrap();
-        let idx = inner.plan_nodes.len();
-        inner.plan_node_index.entry(scope).or_default().push(idx);
-        inner.plan_nodes.push(report);
+        let mut inner = plock(&self.inner);
+        inner.seq += 1;
+        inner.retained_plan_nodes += 1;
+        let seq = inner.seq;
+        inner
+            .scopes
+            .entry(scope)
+            .or_default()
+            .plan_nodes
+            .push_back((seq, report));
+        enforce_history(&mut inner);
     }
 
     /// Count plan-node values dropped by the LRU byte-budget evictor.
     pub fn record_cache_eviction(&self, count: usize, bytes: u64) {
-        let mut inner = self.inner.lock().unwrap();
+        let mut inner = plock(&self.inner);
         inner.cache_evictions += count;
         inner.cache_evicted_bytes += bytes;
     }
 
+    /// Gauge: bytes currently pinned by `persist()` against eviction
+    /// (set by the session whenever a pin changes).
+    pub fn set_pinned_bytes(&self, bytes: u64) {
+        plock(&self.inner).pinned_bytes = bytes;
+    }
+
+    /// Drop everything one scope recorded — stage records, plan-node
+    /// reports, index and totals — in one map removal. Called by the
+    /// service once a job reaches a terminal phase (after taking the
+    /// job's outcome snapshot), so a long-lived server holds steady-state
+    /// memory no matter how many jobs it has finished. Per-method
+    /// aggregates are deliberately kept (bounded by the method-name set).
+    /// Returns how many stage records were released.
+    pub fn release_scope(&self, scope: u64) -> usize {
+        let mut inner = plock(&self.inner);
+        match inner.scopes.remove(&scope) {
+            Some(rec) => {
+                let released = rec.stages.len();
+                inner.retained_stages -= released;
+                inner.retained_plan_nodes -= rec.plan_nodes.len();
+                inner.released_stages += released;
+                inner.released_scopes += 1;
+                released
+            }
+            None => 0,
+        }
+    }
+
     /// Aggregate counters, cheap enough to call around every plan node.
+    /// `stages` counts records over the registry's lifetime — releases
+    /// and the history window never make the totals go backwards.
     pub fn totals(&self) -> MetricsTotals {
-        let inner = self.inner.lock().unwrap();
+        let inner = plock(&self.inner);
         MetricsTotals {
-            stages: inner.stages.len(),
+            stages: inner.total_stages,
             shuffle_stages: inner.methods.values().map(|s| s.shuffle_stages).sum(),
             shuffle_bytes: inner.methods.values().map(|s| s.shuffle_bytes).sum(),
             driver_collects: inner.driver_collects,
@@ -230,34 +354,52 @@ impl Metrics {
 
     /// Aggregate counters restricted to one scope — the per-plan-node
     /// window bracket under concurrent jobs. For scope 0 with no other
-    /// scope active this equals [`totals`](Self::totals).
+    /// scope active this equals [`totals`](Self::totals). A released
+    /// scope reads as empty.
     pub fn totals_for_scope(&self, scope: u64) -> MetricsTotals {
-        let inner = self.inner.lock().unwrap();
-        inner.scope_totals.get(&scope).copied().unwrap_or_default()
+        let inner = plock(&self.inner);
+        inner
+            .scopes
+            .get(&scope)
+            .map(|rec| rec.totals)
+            .unwrap_or_default()
     }
 
     pub fn reset(&self) {
-        let mut inner = self.inner.lock().unwrap();
-        inner.methods.clear();
-        inner.stages.clear();
-        inner.stage_index.clear();
-        inner.plan_nodes.clear();
-        inner.plan_node_index.clear();
-        inner.scope_totals.clear();
-        inner.driver_collects = 0;
-        inner.cache_evictions = 0;
-        inner.cache_evicted_bytes = 0;
+        let mut inner = plock(&self.inner);
+        let history = inner.history;
+        *inner = MetricsInner {
+            history,
+            ..MetricsInner::default()
+        };
     }
 
     pub fn snapshot(&self) -> MetricsSnapshot {
-        let inner = self.inner.lock().unwrap();
+        let inner = plock(&self.inner);
+        // Interleave per-scope records back into global record order.
+        let mut stages: Vec<(u64, StageReport)> = inner
+            .scopes
+            .values()
+            .flat_map(|rec| rec.stages.iter().cloned())
+            .collect();
+        stages.sort_by_key(|(seq, _)| *seq);
+        let mut plan_nodes: Vec<(u64, PlanNodeReport)> = inner
+            .scopes
+            .values()
+            .flat_map(|rec| rec.plan_nodes.iter().cloned())
+            .collect();
+        plan_nodes.sort_by_key(|(seq, _)| *seq);
         MetricsSnapshot {
             methods: inner.methods.clone(),
-            stages: inner.stages.clone(),
-            plan_nodes: inner.plan_nodes.clone(),
+            stages: stages.into_iter().map(|(_, s)| s).collect(),
+            plan_nodes: plan_nodes.into_iter().map(|(_, p)| p).collect(),
             driver_collects: inner.driver_collects,
             cache_evictions: inner.cache_evictions,
             cache_evicted_bytes: inner.cache_evicted_bytes,
+            pinned_bytes: inner.pinned_bytes,
+            retained_stage_records: inner.retained_stages,
+            released_stage_records: inner.released_stages,
+            released_scopes: inner.released_scopes,
         }
     }
 
@@ -265,34 +407,39 @@ impl Metrics {
     /// rebuilt from those stages alone, its plan-node reports, and its
     /// driver collects — O(this scope's records), not O(total history),
     /// so per-job snapshots stay cheap on a long-running service.
-    /// Cache-eviction counters are cluster-global (the evictor serves
-    /// every job) and reported as such.
+    /// Cache-eviction/pin/retention counters are cluster-global (the
+    /// evictor and the retention window serve every job) and reported as
+    /// such. A released scope reads as empty. With a `metrics_history`
+    /// window smaller than one scope's record count, the snapshot holds
+    /// only the scope's most recent retained records (per-method stats
+    /// are rebuilt from those) — size the window above the largest single
+    /// job, or read [`totals_for_scope`](Self::totals_for_scope), whose
+    /// counters are never windowed.
     pub fn snapshot_scope(&self, scope: u64) -> MetricsSnapshot {
-        let inner = self.inner.lock().unwrap();
+        let inner = plock(&self.inner);
         let mut methods = BTreeMap::new();
         let mut stages = Vec::new();
-        if let Some(idxs) = inner.stage_index.get(&scope) {
-            for &i in idxs {
-                let stage = &inner.stages[i];
+        let mut plan_nodes = Vec::new();
+        let mut driver_collects = 0;
+        if let Some(rec) = inner.scopes.get(&scope) {
+            for (_, stage) in &rec.stages {
                 accumulate(&mut methods, stage);
                 stages.push(stage.clone());
             }
+            plan_nodes = rec.plan_nodes.iter().map(|(_, p)| p.clone()).collect();
+            driver_collects = rec.totals.driver_collects;
         }
-        let plan_nodes = match inner.plan_node_index.get(&scope) {
-            Some(idxs) => idxs.iter().map(|&i| inner.plan_nodes[i].clone()).collect(),
-            None => Vec::new(),
-        };
         MetricsSnapshot {
             methods,
             stages,
             plan_nodes,
-            driver_collects: inner
-                .scope_totals
-                .get(&scope)
-                .map(|t| t.driver_collects)
-                .unwrap_or(0),
+            driver_collects,
             cache_evictions: inner.cache_evictions,
             cache_evicted_bytes: inner.cache_evicted_bytes,
+            pinned_bytes: inner.pinned_bytes,
+            retained_stage_records: inner.retained_stages,
+            released_stage_records: inner.released_stages,
+            released_scopes: inner.released_scopes,
         }
     }
 }
@@ -312,6 +459,10 @@ pub struct MetricsSnapshot {
     driver_collects: usize,
     cache_evictions: usize,
     cache_evicted_bytes: u64,
+    pinned_bytes: u64,
+    retained_stage_records: usize,
+    released_stage_records: usize,
+    released_scopes: usize,
 }
 
 impl MetricsSnapshot {
@@ -328,6 +479,29 @@ impl MetricsSnapshot {
     /// Bytes released by those evictions.
     pub fn cache_evicted_bytes(&self) -> u64 {
         self.cache_evicted_bytes
+    }
+
+    /// Bytes currently pinned by `persist()` against LRU eviction
+    /// (cluster-global gauge; the evictor budgets only unpinned bytes).
+    pub fn pinned_bytes(&self) -> u64 {
+        self.pinned_bytes
+    }
+
+    /// Stage records currently resident across all scopes — the quantity
+    /// a long-lived service's soak test bounds.
+    pub fn retained_stage_records(&self) -> usize {
+        self.retained_stage_records
+    }
+
+    /// Stage records dropped so far by `release_scope` or the
+    /// `metrics_history` window.
+    pub fn released_stage_records(&self) -> usize {
+        self.released_stage_records
+    }
+
+    /// Scopes (completed jobs) whose records were released.
+    pub fn released_scopes(&self) -> usize {
+        self.released_scopes
     }
 
     /// Per-plan-node lowering reports recorded in this window (empty for
@@ -614,6 +788,94 @@ mod tests {
         assert_eq!(t.shuffle_bytes, 128);
         assert_eq!(m.totals_for_scope(0).shuffle_stages, 0);
         assert_eq!(m.snapshot_scope(3).total_shuffle_stages(), 1);
+    }
+
+    #[test]
+    fn release_scope_drops_records_but_keeps_aggregates() {
+        let m = Metrics::new();
+        {
+            let _g = Metrics::enter_scope(5);
+            m.record_stage(stage("multiply", 2, 0.2, 0.2));
+            m.record_stage(stage("multiply", 2, 0.2, 0.2));
+            m.record_plan_node(PlanNodeReport {
+                node: "%1".into(),
+                op: "multiply".into(),
+                stages: 2,
+                shuffle_stages: 0,
+                shuffle_bytes: 0,
+                driver_collects: 0,
+                cse_cached: false,
+            });
+        }
+        m.record_stage(stage("ambient", 1, 0.1, 0.1)); // scope 0
+        assert_eq!(m.snapshot().retained_stage_records(), 3);
+        assert_eq!(m.snapshot_scope(5).stages().len(), 2);
+
+        assert_eq!(m.release_scope(5), 2);
+        assert_eq!(m.release_scope(5), 0, "second release is a no-op");
+        // The scope reads as empty; the ambient scope is untouched.
+        assert!(m.snapshot_scope(5).stages().is_empty());
+        assert!(m.snapshot_scope(5).plan_nodes().is_empty());
+        assert_eq!(m.totals_for_scope(5), MetricsTotals::default());
+        assert_eq!(m.snapshot_scope(0).stages().len(), 1);
+        // Retention counters and lifetime aggregates.
+        let snap = m.snapshot();
+        assert_eq!(snap.retained_stage_records(), 1);
+        assert_eq!(snap.released_stage_records(), 2);
+        assert_eq!(snap.released_scopes(), 1);
+        assert_eq!(snap.stages().len(), 1, "global view holds retained only");
+        assert_eq!(
+            snap.method("multiply").unwrap().calls,
+            2,
+            "per-method aggregates survive the release (Table-3 view)"
+        );
+        assert_eq!(m.totals().stages, 3, "lifetime totals never go backwards");
+    }
+
+    #[test]
+    fn windowed_history_caps_retained_records() {
+        let m = Metrics::with_history(3);
+        for i in 0..7 {
+            let _g = Metrics::enter_scope(i % 2);
+            m.record_stage(stage("s", 1, 0.1, 0.1));
+        }
+        let snap = m.snapshot();
+        assert_eq!(snap.retained_stage_records(), 3);
+        assert_eq!(snap.released_stage_records(), 4);
+        assert_eq!(snap.stages().len(), 3);
+        assert_eq!(snap.method("s").unwrap().calls, 7, "aggregates keep all");
+        assert_eq!(m.totals().stages, 7);
+        // Plan-node reports ride the same window (no unbounded class).
+        for i in 0..5 {
+            m.record_plan_node(PlanNodeReport {
+                node: format!("%{i}"),
+                op: "multiply".into(),
+                stages: 1,
+                shuffle_stages: 0,
+                shuffle_bytes: 0,
+                driver_collects: 0,
+                cse_cached: false,
+            });
+        }
+        assert_eq!(m.snapshot().plan_nodes().len(), 3);
+        // Reset clears records but keeps the configured window.
+        m.reset();
+        assert_eq!(m.snapshot().retained_stage_records(), 0);
+        for _ in 0..5 {
+            m.record_stage(stage("s", 1, 0.1, 0.1));
+        }
+        assert_eq!(m.snapshot().retained_stage_records(), 3);
+    }
+
+    #[test]
+    fn pinned_bytes_gauge_round_trips() {
+        let m = Metrics::new();
+        assert_eq!(m.snapshot().pinned_bytes(), 0);
+        m.set_pinned_bytes(4096);
+        assert_eq!(m.snapshot().pinned_bytes(), 4096);
+        assert_eq!(m.snapshot_scope(3).pinned_bytes(), 4096, "global gauge");
+        m.reset();
+        assert_eq!(m.snapshot().pinned_bytes(), 0);
     }
 
     #[test]

@@ -81,9 +81,10 @@ pub struct Cluster {
 impl Cluster {
     pub fn new(config: ClusterConfig) -> Self {
         let pool = WorkerPool::new(config.worker_threads);
+        let metrics = Metrics::with_history(config.metrics_history);
         Cluster {
             config,
-            metrics: Metrics::new(),
+            metrics,
             vclock: Mutex::new(VirtualClock::new()),
             pool,
             pending_shuffle: Mutex::new(0.0),
@@ -142,6 +143,20 @@ impl Cluster {
     /// Count plan-node values dropped by the LRU byte-budget evictor.
     pub fn record_cache_eviction(&self, count: usize, bytes: u64) {
         self.metrics.record_cache_eviction(count, bytes)
+    }
+
+    /// Drop one scope's retained metric records (stage history, plan-node
+    /// reports, totals) — the service calls this when a job reaches a
+    /// terminal phase, after taking the job's outcome snapshot. Returns
+    /// the number of stage records released.
+    pub fn release_metrics_scope(&self, scope: u64) -> usize {
+        self.metrics.release_scope(scope)
+    }
+
+    /// Update the pinned-bytes gauge surfaced by
+    /// [`MetricsSnapshot::pinned_bytes`].
+    pub fn set_pinned_bytes(&self, bytes: u64) {
+        self.metrics.set_pinned_bytes(bytes)
     }
 
     // ---------- RDD creation ----------

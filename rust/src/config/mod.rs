@@ -90,6 +90,15 @@ pub struct ClusterConfig {
     /// unpinned values; evicted nodes recompute bit-identically on the
     /// next read. CLI: `--set cache_budget_bytes=N`.
     pub cache_budget_bytes: u64,
+    /// Windowed metrics history: retain at most this many stage records
+    /// (and, independently, plan-node reports) across all scopes,
+    /// dropping oldest-first (0 = unlimited). Pairs with the service's
+    /// per-job scope release to hold a long-lived `spin serve` at
+    /// steady-state memory. Size it above the largest single job's stage
+    /// count — a smaller window truncates that job's scoped snapshot
+    /// (scope *totals* stay exact either way). CLI:
+    /// `--set metrics_history=N`.
+    pub metrics_history: usize,
 }
 
 /// Default real worker-thread count: `SPIN_WORKER_THREADS` when set to a
@@ -125,6 +134,7 @@ impl ClusterConfig {
             partitioner_aware: true,
             plan_optimizer: true,
             cache_budget_bytes: 0,
+            metrics_history: 0,
         }
     }
 
@@ -146,6 +156,7 @@ impl ClusterConfig {
             partitioner_aware: true,
             plan_optimizer: true,
             cache_budget_bytes: 0,
+            metrics_history: 0,
         }
     }
 
@@ -200,6 +211,7 @@ impl ClusterConfig {
                 "cache_budget_bytes",
                 Json::num(self.cache_budget_bytes as f64),
             ),
+            ("metrics_history", Json::num(self.metrics_history as f64)),
         ])
     }
 
@@ -268,6 +280,7 @@ impl ClusterConfig {
                     || SpinError::config("`cache_budget_bytes` must be a non-negative integer"),
                 )?,
             },
+            metrics_history: get_usize("metrics_history", base.metrics_history)?,
         };
         cfg.validate()?;
         Ok(cfg)
@@ -318,6 +331,9 @@ impl ClusterConfig {
                 self.cache_budget_bytes = value.parse::<u64>().map_err(|_| {
                     SpinError::config("cache_budget_bytes needs a non-negative integer")
                 })?
+            }
+            "metrics_history" => {
+                self.metrics_history = parse_usize(value)?;
             }
             other => {
                 return Err(SpinError::config(format!("unknown cluster key `{other}`")));
@@ -572,6 +588,7 @@ mod tests {
         c.partitioner_aware = false;
         c.plan_optimizer = false;
         c.cache_budget_bytes = 1 << 20;
+        c.metrics_history = 500;
         let back = ClusterConfig::from_json(&c.to_json()).unwrap();
         assert_eq!(back, c);
     }
@@ -605,6 +622,9 @@ mod tests {
         c.apply_override("cache_budget_bytes=65536").unwrap();
         assert_eq!(c.cache_budget_bytes, 65536);
         assert!(c.apply_override("cache_budget_bytes=lots").is_err());
+        c.apply_override("metrics_history=200").unwrap();
+        assert_eq!(c.metrics_history, 200);
+        assert!(c.apply_override("metrics_history=many").is_err());
         assert!(c.apply_override("bogus=1").is_err());
         assert!(c.apply_override("no-equals").is_err());
 

@@ -18,11 +18,23 @@
 //! concurrent jobs over the same data materialize shared work exactly
 //! once.
 //!
+//! Inputs are **lazy**: `submit()` does O(1) matrix work. A
+//! `MatrixSpec` — a generator family, or a block-store directory via
+//! [`service::MatrixSpec::from_store`] (`spin ingest` writes one, see
+//! [`store`]) — lowers to a lazy plan leaf whose blocks are produced
+//! per-partition on the *workers* at first materialization,
+//! bit-identical to eager generation of the same parameters. And the
+//! service is built to run forever: a finished job's metric records are
+//! released at its terminal phase (`--set metrics_history=N` windows the
+//! rest), and a panicking job fails alone while the workers keep
+//! serving.
+//!
 //! ```no_run
 //! use spin::service::{JobSpec, MatrixSpec, SpinService};
 //!
 //! fn main() -> spin::Result<()> {
 //!     let service = SpinService::builder().cores(4).workers(2).build()?;
+//!     // O(1): no block of the 256×256 input exists yet.
 //!     let a = MatrixSpec::new(256, 64).seeded(7); // 4×4 grid of 64×64 blocks
 //!     let inv = service.submit(JobSpec::invert(a.clone()).tenant("alice"))?;
 //!     let rhs = MatrixSpec::new(256, 64).seeded(8);
@@ -53,10 +65,13 @@
 //! with `ClusterConfig::cache_budget_bytes` set (CLI:
 //! `--set cache_budget_bytes=N`) an LRU evictor keeps the resident set
 //! under budget — evicted values recompute bit-identically on the next
-//! read. `DistMatrix::persist()` pins a value against eviction;
-//! `unpersist()` releases it immediately. `explain()` shows the per-node
-//! cache decision (`[cached]` / `[evictable]` / `[pinned]`) and predicted
-//! resident bytes.
+//! read (lazily-born source values simply regenerate on the workers).
+//! `DistMatrix::persist()` pins a value against eviction — pinned bytes
+//! are excluded from the budget (only the evictable set is bounded) and
+//! surfaced in `MetricsSnapshot::pinned_bytes`; `unpersist()` releases
+//! immediately. `explain()` shows the per-node cache decision
+//! (`[cached]` / `[evictable]` / `[pinned]`) and predicted resident
+//! bytes.
 //!
 //! Inversion schemes are open-ended: implement
 //! [`algos::InversionAlgorithm`] and register it in the session builder (or
@@ -98,6 +113,7 @@ pub mod runtime;
 pub mod ser;
 pub mod service;
 pub mod session;
+pub mod store;
 pub mod util;
 
 pub use config::{ClusterConfig, JobConfig};

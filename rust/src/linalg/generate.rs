@@ -34,6 +34,95 @@ pub fn spd(n: usize, rng: &mut Rng) -> Matrix {
     m
 }
 
+// ---------------------------------------------------------------------
+// Per-block generation: seed-derived independent RNG streams, one per
+// block index. This is the generation domain shared by the eager
+// `BlockMatrix::random` constructor and the lazy `ExprOp::LazySource`
+// plan leaves — both call [`crate::linalg::generate_block`], so a lazily
+// materialized matrix is bit-identical to its eagerly generated twin no
+// matter which worker produces which block, or in what order.
+// ---------------------------------------------------------------------
+
+/// The RNG stream of block `(bi, bj)` under `seed`. Streams are derived,
+/// not sliced from one sequential stream, so any block is generable in
+/// O(block) work without replaying its predecessors.
+pub fn block_stream(seed: u64, bi: usize, bj: usize) -> Rng {
+    let mut base = Rng::new(seed);
+    base.fork(((bi as u64) << 32) | bj as u64)
+}
+
+/// Raw uniform(-1, 1) payload of block `(bi, bj)` — the common substrate
+/// of both per-block families below.
+fn uniform_block(block_size: usize, seed: u64, bi: usize, bj: usize) -> Matrix {
+    let mut rng = block_stream(seed, bi, bj);
+    Matrix::random_uniform(block_size, block_size, -1.0, 1.0, &mut rng)
+}
+
+/// Block `(bi, bj)` of the per-block diagonally-dominant family: uniform
+/// off-diagonal entries, diagonal entries rewritten to ±(row abs-sum + 1).
+/// A diagonal block needs its whole block-row's entries for the row sums;
+/// they are regenerated locally from the sibling streams (deterministic
+/// and O(n·block_size) work) rather than shuffled in.
+pub fn diag_dominant_block(
+    n: usize,
+    block_size: usize,
+    bi: usize,
+    bj: usize,
+    seed: u64,
+) -> Matrix {
+    let mut m = uniform_block(block_size, seed, bi, bj);
+    if bi == bj {
+        let nblocks = n / block_size;
+        let row: Vec<Matrix> = (0..nblocks)
+            .map(|bk| {
+                if bk == bi {
+                    m.clone()
+                } else {
+                    uniform_block(block_size, seed, bi, bk)
+                }
+            })
+            .collect();
+        for i in 0..block_size {
+            let mut row_sum = 0.0;
+            for (bk, blk) in row.iter().enumerate() {
+                for j in 0..block_size {
+                    if !(bk == bi && j == i) {
+                        row_sum += blk.get(i, j).abs();
+                    }
+                }
+            }
+            let sign = if m.get(i, i) >= 0.0 { 1.0 } else { -1.0 };
+            m.set(i, i, sign * (row_sum + 1.0));
+        }
+    }
+    m
+}
+
+/// Block `(bi, bj)` of the per-block SPD family `B·Bᵀ + n·I`, where `B`'s
+/// blocks come from the per-block streams: the output block is
+/// `Σ_k B(bi,k)·B(bj,k)ᵀ` (+ `n·I` on the diagonal), accumulated in fixed
+/// `k` order so every producer computes identical bits.
+pub fn spd_block(n: usize, block_size: usize, bi: usize, bj: usize, seed: u64) -> Matrix {
+    let nblocks = n / block_size;
+    let mut acc = Matrix::zeros(block_size, block_size);
+    for bk in 0..nblocks {
+        let left = uniform_block(block_size, seed, bi, bk);
+        let right = uniform_block(block_size, seed, bj, bk);
+        let prod = matmul(&left, &right.transpose());
+        for j in 0..block_size {
+            for i in 0..block_size {
+                acc.add_assign_at(i, j, prod.get(i, j));
+            }
+        }
+    }
+    if bi == bj {
+        for i in 0..block_size {
+            acc.add_assign_at(i, i, n as f64);
+        }
+    }
+    acc
+}
+
 /// Hilbert matrix H[i][j] = 1/(i+j+1) — notoriously ill-conditioned;
 /// used by numerical edge-case tests only.
 pub fn hilbert(n: usize) -> Matrix {
@@ -90,6 +179,62 @@ mod tests {
         assert_eq!(h.get(0, 0), 1.0);
         assert!((h.get(1, 2) - 0.25).abs() < 1e-15);
         assert_eq!(h.get(2, 1), h.get(1, 2));
+    }
+
+    #[test]
+    fn per_block_diag_dominant_is_dominant_and_deterministic() {
+        let (n, bs) = (32, 8);
+        let mut dense = Matrix::zeros(n, n);
+        for bi in 0..n / bs {
+            for bj in 0..n / bs {
+                let blk = diag_dominant_block(n, bs, bi, bj, 7);
+                dense.set_submatrix(bi * bs, bj * bs, &blk).unwrap();
+            }
+        }
+        for i in 0..n {
+            let mut off = 0.0;
+            for j in 0..n {
+                if j != i {
+                    off += dense.get(i, j).abs();
+                }
+            }
+            assert!(dense.get(i, i).abs() > off, "row {i} not dominant");
+        }
+        // Same (seed, index) ⇒ same bits, regardless of generation order.
+        let a = diag_dominant_block(n, bs, 2, 2, 7);
+        let b = diag_dominant_block(n, bs, 2, 2, 7);
+        assert_eq!(a.max_abs_diff(&b), 0.0);
+        assert!(diag_dominant_block(n, bs, 2, 2, 8).max_abs_diff(&a) > 0.0);
+    }
+
+    #[test]
+    fn per_block_spd_assembles_symmetric_pd() {
+        let (n, bs) = (24, 8);
+        let mut dense = Matrix::zeros(n, n);
+        for bi in 0..n / bs {
+            for bj in 0..n / bs {
+                let blk = spd_block(n, bs, bi, bj, 5);
+                dense.set_submatrix(bi * bs, bj * bs, &blk).unwrap();
+            }
+        }
+        assert!(dense.max_abs_diff(&dense.transpose()) < 1e-12);
+        let mut rng = Rng::new(3);
+        for _ in 0..8 {
+            let x = Matrix::random_uniform(n, 1, -1.0, 1.0, &mut rng);
+            let q = matmul(&matmul(&x.transpose(), &dense), &x).get(0, 0);
+            assert!(q > 0.0);
+        }
+        lu_inverse(&dense).unwrap();
+    }
+
+    #[test]
+    fn block_streams_are_independent() {
+        let mut a = block_stream(1, 0, 0);
+        let mut b = block_stream(1, 0, 1);
+        let mut c = block_stream(1, 1, 0);
+        let same_ab = (0..64).filter(|_| a.next_u64() == b.next_u64()).count();
+        let same_bc = (0..64).filter(|_| b.next_u64() == c.next_u64()).count();
+        assert!(same_ab < 2 && same_bc < 2);
     }
 
     #[test]

@@ -15,24 +15,42 @@ pub use decomp::{
     gauss_jordan_inverse, inverse, lu_decompose, lu_decompose_nopivot, lu_inverse, solve,
     LuFactors,
 };
-pub use generate::{diag_dominant, hilbert, random_invertible, spd};
+pub use generate::{
+    block_stream, diag_dominant, diag_dominant_block, hilbert, random_invertible, spd, spd_block,
+};
 pub use matrix::Matrix;
 pub use multiply::{matmul, matmul_acc, matmul_naive, MICRO_BLOCK};
 pub use triangular::{invert_lower, invert_upper, is_lower_triangular, is_upper_triangular};
 
 use crate::config::GeneratorKind;
-use crate::util::Rng;
 
 /// FLOP count of an `n×n` GEMM (2n³, the roofline denominator).
 pub fn gemm_flops(n: usize) -> f64 {
     2.0 * (n as f64).powi(3)
 }
 
-/// Generate a test matrix of the given family.
-pub fn generate(kind: GeneratorKind, n: usize, rng: &mut Rng) -> Matrix {
+// NOTE: there is deliberately no dense sequential-RNG `generate()`
+// dispatcher anymore — every distributed generation path (eager
+// `BlockMatrix::random`, lazy leaves, store ingest) goes through
+// `generate_block`, keeping exactly one generation domain whose bits all
+// paths agree on. The dense `diag_dominant`/`spd` helpers remain for
+// serial unit tests only.
+
+/// Block `(bi, bj)` of the seed-deterministic per-block generation scheme
+/// — a pure function of `(kind, n, block_size, bi, bj, seed)`, so eager
+/// driver-side generation and lazy per-partition worker generation
+/// produce bit-identical matrices (see `generate::block_stream`).
+pub fn generate_block(
+    kind: GeneratorKind,
+    n: usize,
+    block_size: usize,
+    bi: usize,
+    bj: usize,
+    seed: u64,
+) -> Matrix {
     match kind {
-        GeneratorKind::DiagDominant => diag_dominant(n, rng),
-        GeneratorKind::Spd => spd(n, rng),
+        GeneratorKind::DiagDominant => diag_dominant_block(n, block_size, bi, bj, seed),
+        GeneratorKind::Spd => spd_block(n, block_size, bi, bj, seed),
     }
 }
 

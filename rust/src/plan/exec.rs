@@ -20,6 +20,7 @@ use crate::blockmatrix::{Block, BlockMatrix, Quadrant};
 use crate::cluster::{Cluster, PlanNodeReport, Rdd};
 use crate::error::{Result, SpinError};
 use crate::runtime::BlockKernels;
+use crate::util::plock;
 
 use super::{CacheManager, ExprOp, MatExpr, Optimizer, OptimizerConfig};
 
@@ -123,10 +124,16 @@ impl<'a> PlanExec<'a> {
         }
         let out = match e.op() {
             // Handled by the early return above — and it must stay there:
-            // sources must never reach the slot-assignment/lifecycle
+            // eager sources must never reach the slot-assignment/lifecycle
             // registration below (inputs are the caller's storage, not
             // the budget's).
             ExprOp::Source(_) => unreachable!("sources return before the memo slot"),
+
+            // Lazily-born leaves ARE session storage: produced on the
+            // workers here, memoized in the slot, byte-accounted by the
+            // lifecycle manager below, and re-produced bit-identically if
+            // the evictor drops them.
+            ExprOp::LazySource(spec) => self.measured(e, || spec.materialize(self.cluster))?,
 
             ExprOp::Multiply(a, b) => {
                 let va = self.exec_node(a, invert)?;
@@ -171,7 +178,7 @@ impl<'a> PlanExec<'a> {
                 let child_id = child.id();
                 self.measured(e, || {
                     let broken = {
-                        let mut memo = self.broken.lock().unwrap();
+                        let mut memo = plock(&self.broken);
                         match memo.get(&child_id) {
                             Some(b) => b.clone(),
                             None => {
@@ -463,6 +470,37 @@ mod tests {
             "four quadrants share one breakMat pass"
         );
         assert_eq!(m.driver_collects(), 0);
+    }
+
+    #[test]
+    fn lazy_source_materializes_once_and_regenerates_after_eviction() {
+        use crate::config::GeneratorKind;
+        use crate::plan::SourceSpec;
+        let c = cluster();
+        let spec = SourceSpec::Generated {
+            n: 64,
+            block_size: 16,
+            seed: 0xD00D,
+            generator: GeneratorKind::DiagDominant,
+        };
+        let leaf = MatExpr::lazy_source(spec).unwrap();
+        let exec = PlanExec::with_config(&c, &NativeBackend, OptimizerConfig::all());
+        let first = exec.eval(&leaf).unwrap().to_dense().unwrap();
+        // Eager twin is bit-identical.
+        let mut job = crate::config::JobConfig::new(64, 16);
+        job.seed = 0xD00D;
+        let eager = BlockMatrix::random(&job).unwrap().to_dense().unwrap();
+        assert_eq!(first.max_abs_diff(&eager), 0.0);
+        // Second read is memoized: no new generate stage.
+        assert_eq!(c.metrics().method("generate").unwrap().calls, 1);
+        exec.eval(&leaf).unwrap();
+        assert_eq!(c.metrics().method("generate").unwrap().calls, 1);
+        // Evict and re-read: regenerated on the workers, same bits.
+        assert!(leaf.evict_value());
+        let second = exec.eval(&leaf).unwrap().to_dense().unwrap();
+        assert_eq!(c.metrics().method("generate").unwrap().calls, 2);
+        assert_eq!(first.max_abs_diff(&second), 0.0);
+        assert_eq!(c.metrics().driver_collects(), 0);
     }
 
     #[test]

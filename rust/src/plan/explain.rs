@@ -25,6 +25,8 @@ use super::{ExprOp, MatExpr};
 pub fn predicted_exchanges(op: &ExprOp, partitioner_aware: bool) -> Option<usize> {
     match op {
         ExprOp::Invert { .. } => None,
+        // Lazy sources generate (or load) one block per partition: narrow.
+        ExprOp::LazySource(_) => Some(0),
         ExprOp::Multiply(..) | ExprOp::MultiplySub(..) => Some(2),
         // On the legacy dataflow even "narrow" ops cogroup or round-trip
         // the driver; flag them as one exchange so the prediction stays
@@ -59,6 +61,7 @@ pub fn render_plan_sized(
         fused: 0,
         recursive: 0,
         resident: 0,
+        pinned: 0,
     };
     let root_id = r.walk(root);
     let mut out = String::new();
@@ -67,7 +70,7 @@ pub fn render_plan_sized(
         out.push('\n');
     }
     out.push_str(&format!(
-        "plan: {} nodes · result %{root_id} · predicted {} exchange stage(s){} · {} fused multiply_sub · {} cache point(s) (CSE) · predicted resident ≤ {}\n",
+        "plan: {} nodes · result %{root_id} · predicted {} exchange stage(s){} · {} fused multiply_sub · {} cache point(s) (CSE) · predicted resident ≤ {} · pinned {}\n",
         r.lines.len(),
         r.exchanges,
         if r.recursive > 0 {
@@ -78,6 +81,7 @@ pub fn render_plan_sized(
         r.fused,
         r.cached,
         fmt::bytes(r.resident),
+        fmt::bytes(r.pinned),
     ));
     out
 }
@@ -95,6 +99,9 @@ struct Renderer {
     /// Sum of non-source node payload bytes: the plan's worst-case
     /// resident set if nothing is ever evicted.
     resident: u64,
+    /// Bytes of currently-pinned (`persist()`ed) node values — what the
+    /// LRU evictor must step around.
+    pinned: u64,
 }
 
 impl Renderer {
@@ -137,6 +144,7 @@ impl Renderer {
             let bytes = self.node_bytes(e);
             self.resident += bytes;
             let state = if e.is_pinned() {
+                self.pinned += bytes;
                 "[pinned]"
             } else if e.cached_value().is_some() {
                 "[cached]"
@@ -157,6 +165,9 @@ fn describe(op: &ExprOp, kids: &[usize]) -> String {
         // Grid only: the plan's shape depends on the split count, not the
         // block payload size (which the explain header already states).
         ExprOp::Source(m) => format!("source[{0}x{0} grid]", m.nblocks()),
+        ExprOp::LazySource(spec) => {
+            format!("lazy_source[{0}x{0} grid · {1}]", spec.nblocks(), spec.label())
+        }
         ExprOp::Multiply(..) => format!("multiply {} {}", refs(0), refs(1)),
         ExprOp::MultiplySub(..) => format!(
             "multiply_sub {} {} {}   (fused A·B − D)",
@@ -250,9 +261,55 @@ mod tests {
             "%1   = source[2x2 grid]                             shuffle: narrow            mem: input\n",
             "%2   = source[2x2 grid]                             shuffle: narrow            mem: input\n",
             "%3   = multiply_sub %0 %1 %2   (fused A·B − D)      shuffle: 2 exchange stages mem: ~512 B [evictable]\n",
-            "plan: 4 nodes · result %3 · predicted 2 exchange stage(s) · 1 fused multiply_sub · 0 cache point(s) (CSE) · predicted resident ≤ 512 B\n",
+            "plan: 4 nodes · result %3 · predicted 2 exchange stage(s) · 1 fused multiply_sub · 0 cache point(s) (CSE) · predicted resident ≤ 512 B · pinned 0 B\n",
         );
         assert_eq!(text, want);
+    }
+
+    #[test]
+    fn pinned_bytes_surface_in_the_footer() {
+        let (a, b) = (src(2, 4), src(2, 4));
+        let expr = a.multiply(&b).unwrap();
+        let opt = Optimizer::new(OptimizerConfig::all())
+            .optimize(&expr)
+            .unwrap();
+        opt.set_value(BlockMatrix::zeros(2, 4).unwrap());
+        opt.set_pinned(true);
+        let text = render_plan(&opt, true);
+        assert!(text.contains("[pinned]"), "{text}");
+        assert!(text.contains("pinned 512 B"), "{text}");
+        opt.set_pinned(false);
+    }
+
+    #[test]
+    fn lazy_sources_render_spec_and_narrow_cost() {
+        use crate::config::GeneratorKind;
+        use crate::plan::SourceSpec;
+        let leaf = MatExpr::lazy_source(SourceSpec::Generated {
+            n: 16,
+            block_size: 4,
+            seed: 9,
+            generator: GeneratorKind::Spd,
+        })
+        .unwrap();
+        let root = leaf.multiply(&leaf).unwrap();
+        let opt = Optimizer::new(OptimizerConfig::all())
+            .optimize(&root)
+            .unwrap();
+        let text = render_plan(&opt, true);
+        assert!(text.contains("lazy_source[4x4 grid · seed 9 · spd]"), "{text}");
+        // Unlike eager sources, lazy leaves are tracked session storage.
+        assert!(text.contains("[evictable]"), "{text}");
+        let store = MatExpr::lazy_source(SourceSpec::Store {
+            dir: std::path::PathBuf::from("/data/a"),
+            nblocks: 2,
+            block_size: 4,
+            store_id: None,
+        })
+        .unwrap();
+        let text = render_plan(&store, true);
+        assert!(text.contains("store /data/a"), "{text}");
+        assert!(text.contains("shuffle: narrow"), "{text}");
     }
 
     #[test]

@@ -29,6 +29,8 @@ use std::collections::{HashMap, HashSet};
 use std::sync::atomic::Ordering;
 use std::sync::{Mutex, Weak};
 
+use crate::util::plock;
+
 use super::{ExprNode, MatExpr};
 
 /// What one enforcement pass evicted (recorded into
@@ -46,6 +48,10 @@ pub struct EvictionReport {
 pub struct CacheStats {
     /// Bytes of tracked, still-live memoized values.
     pub resident_bytes: u64,
+    /// Bytes of those values pinned by `persist()` — the evictor must
+    /// step around them, and they do **not** count against the budget
+    /// (the budget governs the evictable set; see `enforce`).
+    pub pinned_bytes: u64,
     /// Tracked live entries.
     pub entries: usize,
     /// Configured budget (`None` = unlimited).
@@ -99,7 +105,7 @@ impl CacheManager {
 
     /// Guard serializing the optimize step of concurrent materializations.
     pub(crate) fn optimize_gate(&self) -> std::sync::MutexGuard<'_, ()> {
-        self.optimize_gate.lock().unwrap()
+        plock(&self.optimize_gate)
     }
 
     /// Track a freshly materialized node value and enforce the budget.
@@ -107,7 +113,7 @@ impl CacheManager {
     /// it into the cluster metrics.
     pub(crate) fn register(&self, e: &MatExpr) -> EvictionReport {
         let bytes = e.approx_result_bytes();
-        let mut inner = self.inner.lock().unwrap();
+        let mut inner = plock(&self.inner);
         inner.tick += 1;
         let tick = inner.tick;
         if let Some(old) = inner.entries.insert(
@@ -126,7 +132,7 @@ impl CacheManager {
 
     /// Bump a node's recency (memo hit).
     pub(crate) fn touch(&self, id: u64) {
-        let mut inner = self.inner.lock().unwrap();
+        let mut inner = plock(&self.inner);
         inner.tick += 1;
         let tick = inner.tick;
         if let Some(entry) = inner.entries.get_mut(&id) {
@@ -137,7 +143,7 @@ impl CacheManager {
     /// Stop tracking a node (its value was released explicitly, e.g. by
     /// `unpersist`). Returns the bytes the entry accounted for.
     pub(crate) fn forget(&self, id: u64) -> u64 {
-        let mut inner = self.inner.lock().unwrap();
+        let mut inner = plock(&self.inner);
         match inner.entries.remove(&id) {
             Some(entry) => {
                 inner.resident = inner.resident.saturating_sub(entry.bytes);
@@ -148,16 +154,28 @@ impl CacheManager {
     }
 
     pub fn stats(&self) -> CacheStats {
-        let mut inner = self.inner.lock().unwrap();
+        let mut inner = plock(&self.inner);
         purge_dead(&mut inner);
         CacheStats {
             resident_bytes: inner.resident,
+            pinned_bytes: pinned_bytes(&inner),
             entries: inner.entries.len(),
             budget_bytes: inner.budget,
             evictions: inner.evictions,
             evicted_bytes: inner.evicted_bytes,
         }
     }
+}
+
+/// Bytes of tracked values whose nodes are currently pinned.
+fn pinned_bytes(inner: &Inner) -> u64 {
+    inner
+        .entries
+        .values()
+        .filter_map(|entry| entry.node.upgrade().map(|node| (node, entry.bytes)))
+        .filter(|(node, _)| node.pinned.load(Ordering::Relaxed))
+        .map(|(_, bytes)| bytes)
+        .sum()
 }
 
 /// Drop entries whose DAG died (every handle released its `Arc`): their
@@ -175,11 +193,15 @@ fn purge_dead(inner: &mut Inner) {
     inner.resident = inner.resident.saturating_sub(freed);
 }
 
-/// Evict least-recently-used, unpinned values until the resident total
-/// fits the budget. Best-effort: a node whose memo slot is momentarily
-/// locked (being read or written) **stays tracked** and is skipped for
-/// the rest of this pass — a later enforcement retries it, so the
-/// accounting never diverges from the slots.
+/// Evict least-recently-used, unpinned values until the **evictable**
+/// total (resident minus pinned) fits the budget. Pinned bytes do not
+/// count against the budget: `persist()` is a caller's promise that the
+/// value stays resident, so charging it would make `pinned ≥ budget`
+/// evict every unpinned value on every pass and thrash recomputation.
+/// Best-effort: a node whose memo slot is momentarily locked (being read
+/// or written) **stays tracked** and is skipped for the rest of this
+/// pass — a later enforcement retries it, so the accounting never
+/// diverges from the slots.
 fn enforce(inner: &mut Inner) -> EvictionReport {
     let mut report = EvictionReport::default();
     let Some(budget) = inner.budget else {
@@ -189,8 +211,9 @@ fn enforce(inner: &mut Inner) -> EvictionReport {
         return report;
     }
     purge_dead(inner);
+    let pinned = pinned_bytes(inner);
     let mut busy: HashSet<u64> = HashSet::new();
-    while inner.resident > budget {
+    while inner.resident.saturating_sub(pinned) > budget {
         // LRU candidate among evictable entries not yet found busy.
         let mut victim: Option<(u64, u64)> = None; // (id, last_use)
         for (&id, entry) in &inner.entries {
@@ -290,11 +313,23 @@ mod tests {
         a.set_pinned(true);
         mgr.register(&a);
         let b = leafy(2, 4);
+        let c = leafy(2, 4);
+        // Pinned bytes (512) do NOT count against the 512-byte budget:
+        // one unpinned value (b, 512 evictable) still fits, so nothing
+        // thrashes even though pinned ≥ budget.
         let rep = mgr.register(&b);
-        // a is pinned, so the only evictable victim is b itself.
+        assert_eq!(rep, EvictionReport::default(), "no thrash: {rep:?}");
+        assert!(b.cached_value().is_some());
+        // A second unpinned value pushes the evictable total over budget:
+        // the LRU unpinned value (b) goes, the pinned one never does.
+        let rep = mgr.register(&c);
         assert!(a.cached_value().is_some(), "pinned value must survive");
         assert_eq!(rep.evicted, 1);
-        assert!(b.cached_value().is_none());
+        assert!(b.cached_value().is_none(), "LRU unpinned evicted");
+        assert!(c.cached_value().is_some());
+        let stats = mgr.stats();
+        assert_eq!(stats.pinned_bytes, 512);
+        assert_eq!(stats.resident_bytes, 1024);
     }
 
     #[test]

@@ -48,15 +48,151 @@ pub use explain::{predicted_exchanges, render_plan, render_plan_sized};
 pub use lifecycle::{CacheManager, CacheStats, EvictionReport};
 pub use optimizer::{Optimizer, OptimizerConfig};
 
+use std::path::PathBuf;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Mutex, Weak};
 
 use crate::blockmatrix::{BlockMatrix, Quadrant};
+use crate::cluster::Cluster;
+use crate::config::GeneratorKind;
 use crate::error::{Result, SpinError};
+use crate::linalg;
+use crate::store::{BlockStore, LocalDirStore};
+use crate::util::plock;
 
 /// Globally unique expression-node ids (used for structural hashing,
 /// memo keys, and `explain` labels).
 static NEXT_EXPR_ID: AtomicU64 = AtomicU64::new(1);
+
+/// Parameter description of a **lazily-born** source matrix: the leaf
+/// holds this spec instead of blocks, and the blocks are produced
+/// per-partition on the workers at first materialization — `O(1)` matrix
+/// work to build the plan, `O(blocks)` distributed work to read it.
+///
+/// Generation is a pure per-block function
+/// ([`crate::linalg::generate_block`]), so a lazy leaf's value is
+/// bit-identical to the eager [`BlockMatrix::random`] twin of the same
+/// parameters; a store leaf reads one serialized block per partition from
+/// a [`crate::store::BlockStore`] directory.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum SourceSpec {
+    /// Seed-deterministic generated matrix.
+    Generated {
+        n: usize,
+        block_size: usize,
+        seed: u64,
+        generator: GeneratorKind,
+    },
+    /// Blocks read from a block-store directory (one file per `(i, j)`).
+    Store {
+        dir: PathBuf,
+        nblocks: usize,
+        block_size: usize,
+        /// The store generation recorded when this spec was built
+        /// (`meta.json`'s `store_id`); re-checked at every
+        /// (re)materialization so an in-place re-ingest fails loudly
+        /// instead of silently breaking the evict ⇒ regenerate
+        /// bit-identically invariant. `None` for pre-id stores.
+        store_id: Option<String>,
+    },
+}
+
+impl SourceSpec {
+    /// Describe the matrix held by a block-store directory: reads only
+    /// `meta.json` for the grid shape — the single lowering point shared
+    /// by [`crate::session::SpinSession::from_store`] and
+    /// [`crate::service::MatrixSpec::from_store`].
+    pub fn from_dir(dir: impl Into<PathBuf>) -> Result<SourceSpec> {
+        let dir: PathBuf = dir.into();
+        let meta = crate::ser::bin::read_block_store_meta(&dir)?;
+        Ok(SourceSpec::Store {
+            dir,
+            nblocks: meta.nblocks,
+            block_size: meta.block_size,
+            store_id: meta.store_id,
+        })
+    }
+
+    /// Grid edge of the described matrix.
+    pub fn nblocks(&self) -> usize {
+        match self {
+            SourceSpec::Generated { n, block_size, .. } => n / block_size,
+            SourceSpec::Store { nblocks, .. } => *nblocks,
+        }
+    }
+
+    pub fn block_size(&self) -> usize {
+        match self {
+            SourceSpec::Generated { block_size, .. } | SourceSpec::Store { block_size, .. } => {
+                *block_size
+            }
+        }
+    }
+
+    /// Short human label for `explain`.
+    pub fn label(&self) -> String {
+        match self {
+            SourceSpec::Generated {
+                seed, generator, ..
+            } => format!("seed {seed} · {}", generator.name()),
+            SourceSpec::Store { dir, .. } => format!("store {}", dir.display()),
+        }
+    }
+
+    /// Produce the described matrix, one block per partition, **on the
+    /// workers** — the lowering of an [`ExprOp::LazySource`] leaf. The
+    /// stage is attributed to `generate` (parameter families) or
+    /// `loadBlock` (stores) in the caller's metric scope.
+    pub(crate) fn materialize(&self, cluster: &Cluster) -> Result<BlockMatrix> {
+        match self {
+            SourceSpec::Generated {
+                n,
+                block_size,
+                seed,
+                generator,
+            } => {
+                let (n, block_size, seed, generator) = (*n, *block_size, *seed, *generator);
+                BlockMatrix::materialize_blocks(
+                    cluster,
+                    "generate",
+                    n / block_size,
+                    block_size,
+                    |i, j| Ok(linalg::generate_block(generator, n, block_size, i, j, seed)),
+                )
+            }
+            SourceSpec::Store {
+                dir,
+                nblocks,
+                block_size,
+                store_id,
+            } => {
+                let store = LocalDirStore::open_unchecked(dir.clone());
+                // Identity check on every (re)materialization: evicted
+                // store leaves must regenerate the SAME bytes, so a store
+                // re-ingested since this plan was built is a loud error,
+                // never a silent mix of old intermediates and new data.
+                let meta = store.meta()?;
+                if meta.nblocks != *nblocks
+                    || meta.block_size != *block_size
+                    || meta.store_id != *store_id
+                {
+                    return Err(SpinError::artifact(format!(
+                        "store {} changed since this plan was built \
+                         (re-ingested?); resubmit against the current store",
+                        dir.display()
+                    )));
+                }
+                BlockMatrix::materialize_blocks(
+                    cluster,
+                    "loadBlock",
+                    *nblocks,
+                    *block_size,
+                    |i, j| store.read_block(i, j),
+                )
+            }
+        }
+    }
+}
 
 /// One logical operator in a matrix-expression plan.
 ///
@@ -66,6 +202,12 @@ static NEXT_EXPR_ID: AtomicU64 = AtomicU64::new(1);
 pub enum ExprOp {
     /// A materialized distributed matrix (the DAG's leaves).
     Source(BlockMatrix),
+    /// A described-not-materialized leaf: blocks are produced on the
+    /// workers at first read (and re-produced bit-identically if the
+    /// value is later evicted). Unlike [`ExprOp::Source`], the
+    /// materialized value is session storage, so the lifecycle manager
+    /// byte-accounts and may evict it.
+    LazySource(SourceSpec),
     /// C = A·B.
     Multiply(MatExpr, MatExpr),
     /// C = A·B − D, fused into one multiply-reduce stage. Built by the
@@ -99,6 +241,7 @@ impl ExprOp {
     pub fn name(&self) -> &'static str {
         match self {
             ExprOp::Source(_) => "source",
+            ExprOp::LazySource(_) => "lazy_source",
             ExprOp::Multiply(..) => "multiply",
             ExprOp::MultiplySub(..) => "multiply_sub",
             ExprOp::Subtract(..) => "subtract",
@@ -170,6 +313,25 @@ impl MatExpr {
     pub fn source(m: BlockMatrix) -> MatExpr {
         let (nb, bs) = (m.nblocks(), m.block_size());
         MatExpr::with_op(ExprOp::Source(m), nb, bs)
+    }
+
+    /// A lazy source leaf: `O(1)` to build — no blocks are generated or
+    /// read until the node is materialized, and then on the workers.
+    pub fn lazy_source(spec: SourceSpec) -> Result<MatExpr> {
+        let (nb, bs) = (spec.nblocks(), spec.block_size());
+        if nb == 0 || bs == 0 {
+            return Err(SpinError::shape(format!(
+                "lazy source needs a non-empty grid, got {nb}x{nb} of {bs}"
+            )));
+        }
+        if let SourceSpec::Generated { n, block_size, .. } = &spec {
+            if n % block_size != 0 {
+                return Err(SpinError::shape(format!(
+                    "lazy source: block size {block_size} does not divide n {n}"
+                )));
+            }
+        }
+        Ok(MatExpr::with_op(ExprOp::LazySource(spec), nb, bs))
     }
 
     /// C = A·B (lazy).
@@ -310,7 +472,7 @@ impl MatExpr {
     /// Child expressions, in a fixed deterministic order.
     pub fn children(&self) -> Vec<MatExpr> {
         match &self.node.op {
-            ExprOp::Source(_) => Vec::new(),
+            ExprOp::Source(_) | ExprOp::LazySource(_) => Vec::new(),
             ExprOp::Multiply(a, b) | ExprOp::Subtract(a, b) => vec![a.clone(), b.clone()],
             ExprOp::MultiplySub(a, b, d) => vec![a.clone(), b.clone(), d.clone()],
             ExprOp::Scale(x, _) | ExprOp::Transpose(x) => vec![x.clone()],
@@ -331,6 +493,26 @@ impl MatExpr {
         seen.len()
     }
 
+    /// Blocks held by this DAG's **eager** `Source` leaves — matrix data
+    /// that was materialized on the driver when the plan was built. The
+    /// lazy submit paths keep this at 0 (leaves are [`ExprOp::LazySource`]
+    /// descriptors); `spin bench` measures and gates it per run so an
+    /// eager-generation regression in the service fails CI.
+    pub fn driver_source_blocks(&self) -> usize {
+        let mut seen = std::collections::HashSet::new();
+        let mut stack = vec![self.clone()];
+        let mut blocks = 0;
+        while let Some(e) = stack.pop() {
+            if seen.insert(e.id()) {
+                if let ExprOp::Source(m) = e.op() {
+                    blocks += m.nblocks() * m.nblocks();
+                }
+                stack.extend(e.children());
+            }
+        }
+        blocks
+    }
+
     /// Whether the optimizer marked this node as a CSE cache point.
     pub fn is_cse_cached(&self) -> bool {
         self.node.cse_cached.load(Ordering::Relaxed)
@@ -342,27 +524,29 @@ impl MatExpr {
 
     /// The memoized materialized value, if this node already executed.
     pub fn cached_value(&self) -> Option<BlockMatrix> {
-        self.node.value.lock().unwrap().clone()
+        plock(&self.node.value).clone()
     }
 
     pub(crate) fn set_value(&self, v: BlockMatrix) {
-        *self.node.value.lock().unwrap() = Some(v);
+        *plock(&self.node.value) = Some(v);
     }
 
     /// Exclusive access to the memo slot. The executor holds this for a
     /// node's whole lowering so concurrent evaluators of a shared subtree
     /// serialize (exactly-once execution); lock acquisition follows DAG
     /// edges strictly downward, so no cycle — hence no deadlock — is
-    /// possible.
+    /// possible. Poison-tolerant: a job that panicked mid-lowering leaves
+    /// the slot either fully written or `None`, so recovering the guard is
+    /// safe and later jobs sharing the node simply recompute.
     pub(crate) fn value_slot(&self) -> std::sync::MutexGuard<'_, Option<BlockMatrix>> {
-        self.node.value.lock().unwrap()
+        plock(&self.node.value)
     }
 
     /// Drop this node's memoized value (if any). The next materialization
     /// recomputes it from the children — always safe, always
     /// bit-identical. Returns whether a value was actually released.
     pub fn evict_value(&self) -> bool {
-        self.node.value.lock().unwrap().take().is_some()
+        plock(&self.node.value).take().is_some()
     }
 
     /// Whether [`crate::session::DistMatrix::persist`] pinned this node
@@ -392,14 +576,14 @@ impl MatExpr {
     }
 
     pub(crate) fn canonical_for(&self, config: OptimizerConfig) -> Option<MatExpr> {
-        match &*self.node.canonical.lock().unwrap() {
+        match &*plock(&self.node.canonical) {
             Some((cfg, e)) if *cfg == config => Some(e.clone()),
             _ => None,
         }
     }
 
     pub(crate) fn set_canonical(&self, config: OptimizerConfig, e: MatExpr) {
-        *self.node.canonical.lock().unwrap() = Some((config, e));
+        *plock(&self.node.canonical) = Some((config, e));
     }
 
     /// Shape compatibility check for binary plan constructors — mirrors
@@ -474,6 +658,37 @@ mod tests {
         assert!(src(1, 4).quadrant(Quadrant::Q11).is_err());
         assert!(src(3, 4).quadrant(Quadrant::Q11).is_err());
         assert!(src(2, 4).quadrant(Quadrant::Q11).is_ok());
+    }
+
+    #[test]
+    fn lazy_source_is_o1_and_geometry_checked() {
+        let spec = SourceSpec::Generated {
+            n: 1 << 20, // a terabyte-scale matrix: building the leaf is free
+            block_size: 1 << 10,
+            seed: 7,
+            generator: GeneratorKind::DiagDominant,
+        };
+        let leaf = MatExpr::lazy_source(spec).unwrap();
+        assert_eq!(leaf.nblocks(), 1 << 10);
+        assert_eq!(leaf.n(), 1 << 20);
+        assert!(leaf.cached_value().is_none(), "nothing materialized");
+        assert_eq!(leaf.op().name(), "lazy_source");
+        assert!(leaf.children().is_empty());
+        // Degenerate specs are rejected at construction.
+        assert!(MatExpr::lazy_source(SourceSpec::Generated {
+            n: 0,
+            block_size: 4,
+            seed: 0,
+            generator: GeneratorKind::DiagDominant,
+        })
+        .is_err());
+        assert!(MatExpr::lazy_source(SourceSpec::Store {
+            dir: PathBuf::from("x"),
+            nblocks: 2,
+            block_size: 0,
+            store_id: None,
+        })
+        .is_err());
     }
 
     #[test]

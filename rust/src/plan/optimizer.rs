@@ -124,7 +124,9 @@ enum StructKey {
 /// detects structural sharing in the original DAG.
 fn key_with(op: &ExprOp, kids: &[u64]) -> StructKey {
     match op {
-        ExprOp::Source(_) => unreachable!("sources are canonical by identity"),
+        ExprOp::Source(_) | ExprOp::LazySource(_) => {
+            unreachable!("sources are canonical by identity")
+        }
         ExprOp::Multiply(..) => StructKey::Multiply(kids[0], kids[1]),
         ExprOp::MultiplySub(..) => StructKey::MultiplySub(kids[0], kids[1], kids[2]),
         ExprOp::Subtract(..) => StructKey::Subtract(kids[0], kids[1]),
@@ -138,7 +140,7 @@ fn key_with(op: &ExprOp, kids: &[u64]) -> StructKey {
 
 fn struct_key(op: &ExprOp) -> StructKey {
     let kids: Vec<u64> = match op {
-        ExprOp::Source(_) => Vec::new(),
+        ExprOp::Source(_) | ExprOp::LazySource(_) => Vec::new(),
         ExprOp::Multiply(a, b) | ExprOp::Subtract(a, b) => vec![a.id(), b.id()],
         ExprOp::MultiplySub(a, b, d) => vec![a.id(), b.id(), d.id()],
         ExprOp::Scale(x, _) | ExprOp::Transpose(x) => vec![x.id()],
@@ -187,7 +189,10 @@ impl Optimizer {
             return r;
         }
         let r = match e.op() {
-            ExprOp::Source(_) => e.id(),
+            // Leaves are their own representative: eager sources by
+            // identity, lazy sources because the service's `PlanCache`
+            // already interns equal specs onto one node.
+            ExprOp::Source(_) | ExprOp::LazySource(_) => e.id(),
             op => {
                 let kid_reps: Vec<u64> =
                     e.children().iter().map(|c| self.rep_of(c)).collect();
@@ -261,8 +266,8 @@ impl Optimizer {
         }
         let (nb, bs) = (e.nblocks(), e.block_size());
         let out = match e.op() {
-            // Sources are canonical by identity.
-            ExprOp::Source(_) => e.clone(),
+            // Sources (eager and lazy) are canonical by identity.
+            ExprOp::Source(_) | ExprOp::LazySource(_) => e.clone(),
 
             ExprOp::Multiply(a, b) => {
                 let ca = self.canon(a)?;

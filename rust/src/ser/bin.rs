@@ -60,6 +60,18 @@ pub fn read_matrix(path: &Path) -> Result<Matrix> {
     Matrix::from_vec(rows, cols, data)
 }
 
+/// Fresh identity token for one store generation. Every (re)creation of
+/// a store gets a new id, so lazy readers that recorded the id at plan
+/// time can detect an in-place re-ingest and fail loudly instead of
+/// silently mixing old cached intermediates with new bytes.
+fn new_store_id() -> String {
+    let nanos = std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.as_nanos())
+        .unwrap_or(0);
+    format!("{}-{nanos:x}", std::process::id())
+}
+
 /// Write a block grid (row-major iteration of an `nblocks × nblocks` grid of
 /// equally sized square blocks) into a block-store directory.
 pub fn write_block_store(
@@ -73,6 +85,7 @@ pub fn write_block_store(
         ("format", Json::str("spin-block-store-v1")),
         ("nblocks", Json::num(nblocks as f64)),
         ("block_size", Json::num(block_size as f64)),
+        ("store_id", Json::str(new_store_id())),
     ]);
     meta.to_file(&dir.join("meta.json"))?;
     for ((bi, bj), m) in blocks {
@@ -92,6 +105,9 @@ pub fn write_block_store(
 pub struct BlockStoreMeta {
     pub nblocks: usize,
     pub block_size: usize,
+    /// Identity of this store generation (`None` for stores written
+    /// before the id was introduced) — see `new_store_id`.
+    pub store_id: Option<String>,
 }
 
 /// Read block-store metadata.
@@ -112,6 +128,10 @@ pub fn read_block_store_meta(dir: &Path) -> Result<BlockStoreMeta> {
             .req("block_size")?
             .as_usize()
             .ok_or_else(|| SpinError::artifact("bad block_size"))?,
+        store_id: meta
+            .get("store_id")
+            .and_then(Json::as_str)
+            .map(str::to_string),
     })
 }
 

@@ -17,22 +17,29 @@
 //! `Arc`'d plan node: whichever job materializes first pays, the other
 //! reuses.
 //!
+//! Source leaves are **lazy** ([`crate::plan::SourceSpec`]): interning a
+//! source builds an O(1) descriptor node — no block is generated or read
+//! at submit — and the key stays `(n, block_size, seed, generator)`, so
+//! a lazy leaf interns exactly where the old eager leaf did (equal specs
+//! share one node either way; store-backed leaves key on the directory
+//! plus its current generation id, so a re-ingested store is a new key).
+//!
 //! Retention is bounded by live jobs: the cache holds only **weak**
 //! references, so when the last handle to a plan drops, its nodes — and
-//! the source payloads inside them — free naturally and the dead entry
+//! any payloads memoized inside them — free naturally and the dead entry
 //! is purged on the next lookup. (Value residency of *materialized*
-//! intermediates is governed separately by the session's
-//! [`crate::plan::CacheManager`] LRU budget.) Source generation runs
-//! **outside** the cache lock — a tenant submitting a huge matrix must
-//! not stall every other tenant's submit — with a re-check on insert so
-//! two racing submitters of the same spec still converge on one node.
+//! values is governed separately by the session's
+//! [`crate::plan::CacheManager`] LRU budget.) Node construction runs
+//! **outside** the cache lock, with a re-check on insert so two racing
+//! submitters of the same spec still converge on one node.
 
 use std::collections::HashMap;
+use std::path::PathBuf;
 use std::sync::{Mutex, Weak};
 
-use crate::blockmatrix::BlockMatrix;
 use crate::error::Result;
-use crate::plan::{ExprNode, MatExpr};
+use crate::plan::{ExprNode, MatExpr, SourceSpec};
+use crate::util::plock;
 
 use super::spec::MatrixSpec;
 
@@ -44,6 +51,15 @@ enum PlanKey {
         block_size: usize,
         seed: u64,
         generator: &'static str,
+    },
+    StoreSource {
+        dir: PathBuf,
+        n: usize,
+        block_size: usize,
+        /// Store generation id — a re-ingested directory is a NEW key,
+        /// so fresh submits never adopt a stale leaf recorded against
+        /// the old bytes.
+        store_id: Option<String>,
     },
     Invert {
         algo: String,
@@ -91,20 +107,21 @@ impl PlanCache {
         build: impl FnOnce() -> Result<MatExpr>,
     ) -> Result<MatExpr> {
         {
-            let mut inner = self.inner.lock().unwrap();
+            let mut inner = plock(&self.inner);
             if let Some(hit) = inner.map.get(&key).and_then(MatExpr::upgrade) {
                 inner.hits += 1;
                 return Ok(hit);
             }
         }
-        // Build with the lock RELEASED: source generation materializes a
-        // whole matrix, and one tenant's big input must not stall every
-        // other tenant's submit.
+        // Build with the lock RELEASED (node construction is O(1) now
+        // that sources are lazy, but the discipline keeps any future
+        // heavyweight constructor from stalling other tenants' submits),
+        // with a re-check so racing submitters converge on one node.
         let candidate = build()?;
-        let mut inner = self.inner.lock().unwrap();
+        let mut inner = plock(&self.inner);
         if let Some(hit) = inner.map.get(&key).and_then(MatExpr::upgrade) {
             // Raced with another submitter: adopt the winner's node so
-            // both jobs share one plan (our duplicate generation is
+            // both jobs share one plan (our duplicate descriptor is
             // discarded; the data is seed-deterministic either way).
             inner.hits += 1;
             return Ok(hit);
@@ -119,18 +136,36 @@ impl PlanCache {
         Ok(candidate)
     }
 
-    /// The interned plan leaf for a described matrix (generates the
-    /// blocks on first use).
+    /// The interned **lazy** plan leaf for a described matrix: O(1) to
+    /// build — blocks are produced per-partition on the workers at first
+    /// materialization, never driver-side at submit. The key is the same
+    /// `(n, block_size, seed, generator)` the eager leaves used, so lazy
+    /// and eager eras intern identically and equal specs share one node.
     pub fn source(&self, spec: &MatrixSpec) -> Result<MatExpr> {
-        self.intern(
-            PlanKey::Source {
+        // Lower first: for store-backed specs this reads the directory's
+        // current generation id, which is part of the key — a re-ingested
+        // store interns as a fresh leaf instead of adopting a stale one.
+        let source = spec.to_source_spec()?;
+        let key = match &source {
+            SourceSpec::Store {
+                dir,
+                nblocks,
+                block_size,
+                store_id,
+            } => PlanKey::StoreSource {
+                dir: dir.clone(),
+                n: nblocks * block_size,
+                block_size: *block_size,
+                store_id: store_id.clone(),
+            },
+            SourceSpec::Generated { .. } => PlanKey::Source {
                 n: spec.n,
                 block_size: spec.block_size,
                 seed: spec.seed,
                 generator: spec.generator.name(),
             },
-            || Ok(MatExpr::source(BlockMatrix::random(&spec.to_job())?)),
-        )
+        };
+        self.intern(key, || MatExpr::lazy_source(source))
     }
 
     /// Interned `child⁻¹` through the named scheme.
@@ -161,7 +196,7 @@ impl PlanCache {
     }
 
     pub fn stats(&self) -> PlanCacheStats {
-        let mut inner = self.inner.lock().unwrap();
+        let mut inner = plock(&self.inner);
         inner.map.retain(|_, node| node.strong_count() > 0);
         PlanCacheStats {
             hits: inner.hits,
@@ -208,6 +243,28 @@ mod tests {
         let t1 = cache.transpose(&a).unwrap();
         let t2 = cache.transpose(&a).unwrap();
         assert_eq!(t1.id(), t2.id());
+    }
+
+    #[test]
+    fn sources_intern_lazy_with_no_driver_side_blocks() {
+        let cache = PlanCache::new();
+        let leaf = cache.source(&MatrixSpec::new(1 << 14, 1 << 7)).unwrap();
+        // A 16384² matrix leaf: O(1) descriptor, nothing materialized.
+        assert_eq!(leaf.op().name(), "lazy_source");
+        assert!(leaf.cached_value().is_none());
+        // Store-backed and generated specs of the same geometry are
+        // DIFFERENT keys (different data). Only meta.json exists — no
+        // block is touched by interning.
+        let dir = std::env::temp_dir().join(format!("spin_cache_store_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        crate::store::LocalDirStore::create(&dir, 4, 8).unwrap();
+        let gen32 = cache.source(&MatrixSpec::new(32, 8)).unwrap();
+        let store_spec = MatrixSpec::from_store(&dir).unwrap();
+        let store_leaf = cache.source(&store_spec).unwrap();
+        assert_ne!(store_leaf.id(), gen32.id());
+        // Same store path interns to one node.
+        assert_eq!(cache.source(&store_spec).unwrap().id(), store_leaf.id());
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]

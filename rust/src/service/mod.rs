@@ -11,8 +11,14 @@
 //! [`metrics`](JobHandle::metrics) via cluster metric scopes,
 //! [`explain`](JobHandle::explain) for the optimized plan).
 //!
-//! Three pieces make concurrent jobs cheap and safe:
+//! Five pieces make a long-lived, concurrent service cheap and safe:
 //!
+//! * **O(1) submit**: matrix inputs are *described*, not materialized —
+//!   a `MatrixSpec` lowers to a lazy [`crate::plan::SourceSpec`] leaf
+//!   whose blocks are generated (or loaded from a
+//!   [`crate::store::BlockStore`]) per-partition **on the workers** at
+//!   first materialization, so `submit()` returns without touching a
+//!   single block;
 //! * a **fair-share scheduler**: a bounded queue bucketed per tenant and
 //!   drained round-robin, so one chatty tenant cannot starve the rest,
 //!   and saturation surfaces as a `submit` error (backpressure) rather
@@ -23,9 +29,18 @@
 //!   shared work runs exactly once no matter which worker gets there
 //!   first;
 //! * the **value lifecycle** ([`crate::plan::CacheManager`]): every
-//!   materialized value is tracked and the session's
-//!   `cache_budget_bytes` LRU evictor bounds the resident set across all
-//!   jobs; evicted values recompute bit-identically on the next read.
+//!   materialized value — including lazily-born source values — is
+//!   tracked and the session's `cache_budget_bytes` LRU evictor bounds
+//!   the resident set across all jobs; evicted values recompute
+//!   bit-identically on the next read;
+//! * **bounded metrics**: a finished job's metric scope is released
+//!   (stage records, plan-node reports, index) the moment it reaches a
+//!   terminal phase — its full snapshot lives on in
+//!   [`JobOutcome::metrics`] — and `--set metrics_history=N` additionally
+//!   windows whatever remains, so `spin serve` holds steady-state memory
+//!   across any number of jobs. Failures are contained: a panicking
+//!   generator or algorithm fails *its* job (`Failed`, with the panic
+//!   message) while the workers, locks, and queue keep serving.
 //!
 //! ```no_run
 //! use spin::service::{JobSpec, MatrixSpec, SpinService};
@@ -53,6 +68,7 @@ mod spec;
 pub use cache::{PlanCache, PlanCacheStats};
 pub use spec::{JobKind, JobSpec, MatrixSpec};
 
+use std::panic::{self, AssertUnwindSafe};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread;
@@ -63,8 +79,20 @@ use crate::error::{Result, SpinError};
 use crate::linalg::{inverse_residual, Matrix};
 use crate::plan::{CacheStats, MatExpr};
 use crate::session::{SessionBuilder, SpinSession};
+use crate::util::{plock, pwait};
 
 use scheduler::FairShareQueue;
+
+/// Human-readable payload of a caught job panic.
+fn panic_message(payload: Box<dyn std::any::Any + Send>) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".to_string()
+    }
+}
 
 /// Where a job is in its life.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -128,7 +156,7 @@ impl JobHandle {
     }
 
     pub fn status(&self) -> JobStatus {
-        match &*self.state.phase.lock().unwrap() {
+        match &*plock(&self.state.phase) {
             Phase::Queued => JobStatus::Queued,
             Phase::Running => JobStatus::Running,
             Phase::Cancelled => JobStatus::Cancelled,
@@ -139,7 +167,7 @@ impl JobHandle {
 
     /// Block until the job reaches a terminal state.
     pub fn wait(&self) -> Result<JobOutcome> {
-        let mut phase = self.state.phase.lock().unwrap();
+        let mut phase = plock(&self.state.phase);
         loop {
             match &*phase {
                 Phase::Completed(outcome) => return Ok(outcome.clone()),
@@ -156,38 +184,49 @@ impl JobHandle {
                     )));
                 }
                 Phase::Queued | Phase::Running => {
-                    phase = self.state.cv.wait(phase).unwrap();
+                    phase = pwait(&self.state.cv, phase);
                 }
             }
         }
     }
 
-    /// Cancel a still-queued job. Returns `true` if the cancellation took
-    /// effect; a running or finished job is not interrupted (`false`).
-    /// The queue slot frees immediately, so cancelling relieves
-    /// backpressure.
+    /// Cancel a still-queued job. Returns `true` **iff** this call
+    /// removed the job from the queue — and then the job never runs; a
+    /// running or finished job is not interrupted (`false`). There is no
+    /// in-between: workers claim a job's phase *under the queue lock*
+    /// when they pop it, so a job is always either in the queue (and
+    /// cancellable) or already claimed (and not). The freed slot relieves
+    /// backpressure immediately.
     pub fn cancel(&self) -> bool {
-        {
-            let mut phase = self.state.phase.lock().unwrap();
-            if !matches!(*phase, Phase::Queued) {
-                return false;
-            }
-            *phase = Phase::Cancelled;
-            self.state.cv.notify_all();
+        // Fast path: a phase never returns to Queued, so a job observed
+        // claimed/terminal here can never be cancellable again — skip the
+        // service-wide queue lock for late/polling cancellers.
+        if !matches!(*plock(&self.state.phase), Phase::Queued) {
+            return false;
         }
-        // Remove our queue entry (a worker may have popped it already —
-        // then run_job sees Cancelled and skips; either way the phase is
-        // terminal and the slot is free).
         let id = self.state.id;
-        self.inner
-            .queue
-            .lock()
-            .unwrap()
-            .remove_where(&self.state.spec.tenant, |job| job.id == id);
+        // Lock order queue → phase, matching the workers' pop+claim.
+        let mut queue = plock(&self.inner.queue);
+        let removed = queue
+            .remove_where(&self.state.spec.tenant, |job| job.id == id)
+            .is_some();
+        if !removed {
+            return false;
+        }
+        let mut phase = plock(&self.state.phase);
+        debug_assert!(matches!(*phase, Phase::Queued), "queued jobs stay Queued");
+        *phase = Phase::Cancelled;
+        drop(phase);
+        drop(queue);
+        self.state.cv.notify_all();
         true
     }
 
-    /// Live per-job metrics window (empty until the job starts running).
+    /// Live per-job metrics window (empty until the job starts running,
+    /// and empty again once the job reaches a terminal phase — the
+    /// service releases a finished job's metric scope to keep long-lived
+    /// deployments at steady-state memory; the full per-job snapshot
+    /// survives in [`JobOutcome::metrics`]).
     pub fn metrics(&self) -> MetricsSnapshot {
         self.inner.session.cluster().metrics_scoped(self.state.id)
     }
@@ -196,6 +235,13 @@ impl JobHandle {
     /// predicted shuffle stages, and cache decisions per node.
     pub fn explain(&self) -> Result<String> {
         self.inner.session.explain_expr(&self.state.expr)
+    }
+
+    /// Blocks of this job's plan that were materialized **on the driver**
+    /// at submit. Always 0 for spec-described inputs — the lazy-leaf
+    /// invariant `spin bench` measures and gates per run.
+    pub fn submit_driver_blocks(&self) -> usize {
+        self.state.expr.driver_source_blocks()
     }
 }
 
@@ -234,15 +280,23 @@ impl ServiceInner {
             phase: Mutex::new(Phase::Queued),
             cv: Condvar::new(),
         });
-        self.queue
-            .lock()
-            .unwrap()
-            .push(&state.spec.tenant, Arc::clone(&state))?;
+        plock(&self.queue).push(&state.spec.tenant, Arc::clone(&state))?;
         self.work_cv.notify_one();
         Ok(JobHandle {
             state,
             inner: Arc::clone(self),
         })
+    }
+
+    /// Pop the next runnable job and claim its phase (`Queued` →
+    /// `Running`) in ONE queue-lock critical section. This closes the
+    /// cancel race: there is no instant where a job is out of the queue
+    /// but not yet `Running`, so `cancel()` (which removes from the queue
+    /// under the same lock) either fully wins — the job never runs — or
+    /// cleanly loses.
+    fn claim_next(&self) -> Option<Arc<JobState>> {
+        let mut queue = plock(&self.queue);
+        claim_from(&mut queue)
     }
 
     /// Lower a spec onto interned plan nodes (the cross-job sharing
@@ -274,25 +328,32 @@ impl ServiceInner {
         }
     }
 
-    /// Execute one popped job on the calling thread.
+    /// Execute one claimed job (phase already `Running`) on the calling
+    /// thread. A panicking execution — a generator, a user-registered
+    /// algorithm, a worker task — fails *this job* and leaves the service
+    /// serving: the panic is caught here, and every lock it may have
+    /// poisoned on the way up is poison-tolerant (`util::plock`).
     fn run_job(&self, job: &Arc<JobState>) {
-        {
-            let mut phase = job.phase.lock().unwrap();
-            if !matches!(*phase, Phase::Queued) {
-                // Cancelled while queued: skip silently.
-                return;
-            }
-            *phase = Phase::Running;
-        }
-        // Everything this job records on the shared cluster is tagged
-        // with its id, so per-job windows stay exact under concurrency.
-        let _scope = Metrics::enter_scope(job.id);
-        let outcome = self.execute(job);
-        let mut phase = job.phase.lock().unwrap();
-        *phase = match outcome {
-            Ok(o) => Phase::Completed(o),
-            Err(e) => Phase::Failed(e.to_string()),
+        let outcome = {
+            // Everything this job records on the shared cluster is tagged
+            // with its id, so per-job windows stay exact under
+            // concurrency.
+            let _scope = Metrics::enter_scope(job.id);
+            panic::catch_unwind(AssertUnwindSafe(|| self.execute(job)))
         };
+        // Terminal: drop the job's metric scope so a long-lived service
+        // holds steady-state memory. The outcome snapshot was taken
+        // inside execute(), so per-job introspection survives in
+        // JobOutcome. Release BEFORE the phase flips: a waiter woken by
+        // wait() must observe the retention counters already settled.
+        self.session.cluster().release_metrics_scope(job.id);
+        let mut phase = plock(&job.phase);
+        *phase = match outcome {
+            Ok(Ok(o)) => Phase::Completed(o),
+            Ok(Err(e)) => Phase::Failed(e.to_string()),
+            Err(payload) => Phase::Failed(format!("panicked: {}", panic_message(payload))),
+        };
+        drop(phase);
         job.cv.notify_all();
     }
 
@@ -314,18 +375,35 @@ impl ServiceInner {
     }
 }
 
+/// Pop+claim under the caller's queue lock (see
+/// [`ServiceInner::claim_next`]). The defensive skip of a non-`Queued`
+/// phase cannot fire under the current invariants (queued jobs are always
+/// `Queued` — cancel removes them before flipping the phase) but keeps
+/// the loop safe if a new terminal path ever appears.
+fn claim_from(queue: &mut FairShareQueue<Arc<JobState>>) -> Option<Arc<JobState>> {
+    while let Some(job) = queue.pop() {
+        let mut phase = plock(&job.phase);
+        if matches!(*phase, Phase::Queued) {
+            *phase = Phase::Running;
+            drop(phase);
+            return Some(job);
+        }
+    }
+    None
+}
+
 fn worker_loop(inner: Arc<ServiceInner>) {
     loop {
         let job = {
-            let mut queue = inner.queue.lock().unwrap();
+            let mut queue = plock(&inner.queue);
             loop {
-                if let Some(job) = queue.pop() {
+                if let Some(job) = claim_from(&mut queue) {
                     break Some(job);
                 }
                 if inner.shutdown.load(Ordering::SeqCst) {
                     break None;
                 }
-                queue = inner.work_cv.wait(queue).unwrap();
+                queue = pwait(&inner.work_cv, queue);
             }
         };
         match job {
@@ -428,14 +506,13 @@ impl SpinService {
         ServiceBuilder::default()
     }
 
-    /// Queue a job and return its handle. All *distributed* work runs
-    /// asynchronously on the workers; what runs on the calling thread is
-    /// validation plus the job's input **definition** — first use of a
-    /// `MatrixSpec` generates its blocks here, so equal specs can intern
-    /// to one shared plan leaf. (Lazy generator leaves — moving that cost
-    /// onto the workers too — are noted future work in the ROADMAP.)
-    /// Fails fast on bad geometry, unknown algorithms, or a saturated
-    /// queue.
+    /// Queue a job and return its handle in **O(1) matrix work**: the
+    /// calling thread only validates the spec and builds (or re-interns)
+    /// lazy plan nodes — a `MatrixSpec`'s blocks are produced
+    /// per-partition on the workers at first materialization, never
+    /// driver-side here. Equal specs still intern to one shared plan
+    /// leaf (the cache key is unchanged). Fails fast on bad geometry,
+    /// unknown algorithms, missing stores, or a saturated queue.
     pub fn submit(&self, spec: JobSpec) -> Result<JobHandle> {
         self.inner.submit(spec)
     }
@@ -446,16 +523,11 @@ impl SpinService {
     /// background workers too.
     pub fn run_pending(&self) -> usize {
         let mut ran = 0;
-        loop {
-            let job = self.inner.queue.lock().unwrap().pop();
-            match job {
-                Some(job) => {
-                    self.inner.run_job(&job);
-                    ran += 1;
-                }
-                None => return ran,
-            }
+        while let Some(job) = self.inner.claim_next() {
+            self.inner.run_job(&job);
+            ran += 1;
         }
+        ran
     }
 
     /// The shared session every job executes on.
@@ -480,7 +552,7 @@ impl SpinService {
 
     /// Jobs queued and not yet picked up.
     pub fn queued_jobs(&self) -> usize {
-        self.inner.queue.lock().unwrap().len()
+        plock(&self.inner.queue).len()
     }
 
     /// Background worker threads.
@@ -493,9 +565,9 @@ impl Drop for SpinService {
     fn drop(&mut self) {
         self.inner.shutdown.store(true, Ordering::SeqCst);
         // Abandon still-queued jobs so their waiters unblock.
-        let abandoned = self.inner.queue.lock().unwrap().drain();
+        let abandoned = plock(&self.inner.queue).drain();
         for job in abandoned {
-            let mut phase = job.phase.lock().unwrap();
+            let mut phase = plock(&job.phase);
             if matches!(*phase, Phase::Queued) {
                 *phase = Phase::Cancelled;
             }
@@ -623,7 +695,7 @@ mod tests {
     }
 
     #[test]
-    fn per_job_metrics_are_scoped() {
+    fn per_job_metrics_are_scoped_and_released_on_completion() {
         let service = sync_service();
         let h1 = service
             .submit(JobSpec::multiply(
@@ -645,8 +717,23 @@ mod tests {
         assert_eq!(m1.method("multiply").unwrap().shuffle_stages, 2);
         assert_eq!(m2.method("multiply").unwrap().shuffle_stages, 2);
         assert_eq!(service.metrics().total_shuffle_stages(), 4);
-        // The live handle view agrees with the outcome snapshot.
-        assert_eq!(h1.metrics().total_shuffle_stages(), 2);
+        // Terminal jobs' scopes are RELEASED: the live handle view reads
+        // empty (the outcome snapshot above is the durable record), and
+        // the retention counters account for both scopes.
+        assert_eq!(h1.metrics().stages().len(), 0);
+        let total = service.metrics();
+        assert_eq!(total.released_scopes(), 2);
+        assert!(total.released_stage_records() > 0);
+        assert_eq!(
+            total.retained_stage_records(),
+            total.stages().len(),
+            "retained counter matches what the global snapshot holds"
+        );
+        assert_eq!(
+            total.retained_stage_records(),
+            0,
+            "all work ran under job scopes, so nothing is retained"
+        );
     }
 
     #[test]
@@ -726,13 +813,13 @@ mod tests {
         // via the global stage stream: run one job at a time.
         assert_eq!(service.queued_jobs(), 3);
         let first = {
-            let job = service.inner.queue.lock().unwrap().pop().unwrap();
+            let job = service.inner.claim_next().unwrap();
             let id = job.id;
             service.inner.run_job(&job);
             id
         };
         let second = {
-            let job = service.inner.queue.lock().unwrap().pop().unwrap();
+            let job = service.inner.claim_next().unwrap();
             let id = job.id;
             service.inner.run_job(&job);
             id
@@ -744,5 +831,221 @@ mod tests {
         for h in [a1, a2, b1] {
             h.wait().unwrap();
         }
+    }
+
+    /// Acceptance (lazy sources): `submit()` performs ZERO block
+    /// generation on the driver — no stage of any kind is recorded until
+    /// a worker materializes the job — and the generation stage then
+    /// lands in the job's own metric scope.
+    #[test]
+    fn submit_generates_nothing_on_the_driver() {
+        let service = sync_service();
+        let handle = service
+            .submit(JobSpec::invert(MatrixSpec::new(64, 16).seeded(42)))
+            .unwrap();
+        assert_eq!(service.queued_jobs(), 1);
+        let before = service.metrics();
+        assert!(
+            before.stages().is_empty(),
+            "submit must not run any stage (driver-side generation is gone)"
+        );
+        assert_eq!(before.retained_stage_records(), 0);
+        assert!(before.method("generate").is_none());
+        assert_eq!(
+            handle.submit_driver_blocks(),
+            0,
+            "the plan must hold no driver-materialized source blocks"
+        );
+        // The plan is fully known pre-materialization: explain works on a
+        // queued job and shows the lazy leaf.
+        let text = handle.explain().unwrap();
+        assert!(text.contains("lazy_source"), "{text}");
+        service.run_pending();
+        let out = handle.wait().unwrap();
+        assert!(out.residual.unwrap() < 1e-9);
+        // Generation ran as a distributed stage in THIS job's scope: one
+        // call, one task per block of the 4x4 grid, fully narrow.
+        let gen = out.metrics.method("generate").expect("generate stage");
+        assert_eq!(gen.calls, 1);
+        assert_eq!(gen.tasks, 16);
+        assert_eq!(gen.shuffle_stages, 0);
+        assert_eq!(out.metrics.driver_collects(), 0);
+        // Global (lifetime) aggregates saw it exactly once too.
+        assert_eq!(service.metrics().method("generate").unwrap().calls, 1);
+    }
+
+    /// Acceptance (lazy/eager equivalence + sharing): concurrent jobs
+    /// over the same spec share ONE interned lazy leaf — generation runs
+    /// once, attributed to exactly one job — and the result is
+    /// bit-identical to the eager session path.
+    #[test]
+    fn lazy_leaf_shared_across_jobs_generates_once() {
+        let service = sync_service();
+        let spec = MatrixSpec::new(64, 16).seeded(0x5EED);
+        let h1 = service.submit(JobSpec::invert(spec.clone())).unwrap();
+        let h2 = service
+            .submit(JobSpec::multiply(spec.clone(), spec.clone()).tenant("other"))
+            .unwrap();
+        assert_eq!(service.run_pending(), 2);
+        let o1 = h1.wait().unwrap();
+        let o2 = h2.wait().unwrap();
+        // One shared leaf ⇒ the generate stage ran exactly once across
+        // both jobs, and exactly one job's scope carries it.
+        assert_eq!(service.metrics().method("generate").unwrap().calls, 1);
+        let gen_calls = |m: &MetricsSnapshot| m.method("generate").map(|s| s.calls).unwrap_or(0);
+        assert_eq!(gen_calls(&o1.metrics) + gen_calls(&o2.metrics), 1);
+        // Bit-identity with the eager session path.
+        let session = SpinSession::local(2).unwrap();
+        let a = session.random_seeded(64, 16, 0x5EED).unwrap();
+        let want_inv = a.inverse().unwrap().to_dense().unwrap();
+        let want_sq = a.multiply(&a).unwrap().to_dense().unwrap();
+        assert_eq!(o1.dense.max_abs_diff(&want_inv), 0.0);
+        assert_eq!(o2.dense.max_abs_diff(&want_sq), 0.0);
+    }
+
+    /// Satellite (bugfix): a job whose execution PANICS — here a
+    /// user-registered algorithm — fails that job with the panic message
+    /// while the service (workers, queue, shared plan nodes whose locks
+    /// the panic poisoned) keeps serving.
+    #[test]
+    fn panicking_job_fails_while_service_keeps_serving() {
+        use crate::algos::InversionAlgorithm;
+        use crate::blockmatrix::BlockMatrix;
+        use crate::cluster::Cluster;
+        use crate::config::JobConfig;
+        use crate::runtime::BlockKernels;
+
+        struct Panicking;
+        impl InversionAlgorithm for Panicking {
+            fn name(&self) -> &str {
+                "panicking"
+            }
+            fn invert(
+                &self,
+                _cluster: &Cluster,
+                _kernels: &dyn BlockKernels,
+                _a: &BlockMatrix,
+                _job: &JobConfig,
+            ) -> Result<BlockMatrix> {
+                panic!("generator blew up");
+            }
+        }
+        let service = SpinService::builder()
+            .session_builder(
+                SpinSession::builder()
+                    .cores(2)
+                    .register_algorithm(Arc::new(Panicking))
+                    .unwrap(),
+            )
+            .workers(1)
+            .build()
+            .unwrap();
+        let spec = || JobSpec::invert(MatrixSpec::new(16, 4)).algorithm("panicking");
+        let bad = service.submit(spec()).unwrap();
+        let err = bad.wait().unwrap_err().to_string();
+        assert_eq!(bad.status(), JobStatus::Failed);
+        assert!(
+            err.contains("panicked") && err.contains("generator blew up"),
+            "{err}"
+        );
+        // The SAME interned plan node (whose memo lock the panic
+        // poisoned) fails cleanly again rather than wedging the worker.
+        let again = service.submit(spec()).unwrap();
+        assert!(again.wait().is_err());
+        // And an honest job on the surviving worker completes.
+        let good = service
+            .submit(JobSpec::invert(MatrixSpec::new(16, 4)))
+            .unwrap();
+        let out = good.wait().unwrap();
+        assert_eq!(good.status(), JobStatus::Completed);
+        assert!(out.residual.unwrap() < 1e-9);
+        // Failed jobs release their metric scopes like completed ones.
+        assert_eq!(service.metrics().released_scopes(), 3);
+    }
+
+    /// Satellite (bugfix): the cancel/claim race is closed — workers
+    /// claim the phase under the queue lock, so `cancel()` either fully
+    /// wins (job removed, never runs) or cleanly loses (job runs to a
+    /// terminal state). The barrier maximizes the historic race window;
+    /// the invariant must hold for every interleaving.
+    #[test]
+    fn cancel_and_claim_race_is_atomic() {
+        // Deterministic directions first. Cancel before any claim: wins,
+        // and the claimer then finds nothing.
+        let service = sync_service();
+        let spec = || {
+            JobSpec::multiply(
+                MatrixSpec::new(16, 4).seeded(1),
+                MatrixSpec::new(16, 4).seeded(2),
+            )
+        };
+        let h = service.submit(spec()).unwrap();
+        assert!(h.cancel());
+        assert!(service.inner.claim_next().is_none());
+        assert_eq!(h.status(), JobStatus::Cancelled);
+        // Claim before cancel: cancel must lose and the job completes.
+        let h = service.submit(spec()).unwrap();
+        let job = service.inner.claim_next().unwrap();
+        assert!(!h.cancel(), "claimed job is no longer cancellable");
+        service.inner.run_job(&job);
+        assert_eq!(h.status(), JobStatus::Completed);
+
+        // Racing direction: whatever the interleaving, exactly one side
+        // wins and the loser observes it consistently.
+        for round in 0..16 {
+            let h = service.submit(spec()).unwrap();
+            let barrier = std::sync::Barrier::new(2);
+            let (ran, cancelled) = std::thread::scope(|scope| {
+                let runner = scope.spawn(|| {
+                    barrier.wait();
+                    service.run_pending()
+                });
+                let canceller = scope.spawn(|| {
+                    barrier.wait();
+                    h.cancel()
+                });
+                (runner.join().unwrap(), canceller.join().unwrap())
+            });
+            if cancelled {
+                assert_eq!(ran, 0, "round {round}: cancelled job must never run");
+                assert_eq!(h.status(), JobStatus::Cancelled);
+                assert!(h.wait().is_err());
+            } else {
+                assert_eq!(ran, 1, "round {round}: uncancelled job runs exactly once");
+                assert_eq!(h.status(), JobStatus::Completed);
+                h.wait().unwrap();
+            }
+            assert_eq!(service.queued_jobs(), 0);
+        }
+    }
+
+    /// Satellite (store round-trip): ingest → `from_store` → invert on
+    /// the service; blocks are loaded by the workers, the result matches
+    /// the generated twin bit-for-bit, and the residual passes.
+    #[test]
+    fn store_backed_job_loads_on_workers_and_inverts() {
+        let dir = std::env::temp_dir().join(format!("spin_svc_store_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let mut job = crate::config::JobConfig::new(32, 8);
+        job.seed = 0xAB;
+        let store = crate::store::LocalDirStore::create(&dir, 4, 8).unwrap();
+        crate::store::ingest_generated(&store, &job).unwrap();
+
+        let service = sync_service();
+        let spec = MatrixSpec::from_store(&dir).unwrap();
+        let handle = service.submit(JobSpec::invert(spec)).unwrap();
+        service.run_pending();
+        let out = handle.wait().unwrap();
+        assert!(out.residual.unwrap() < 1e-8);
+        let load = out.metrics.method("loadBlock").expect("store load stage");
+        assert_eq!(load.calls, 1);
+        assert_eq!(load.tasks, 16);
+        // The store held the same bits the generator produces, so the
+        // inverse equals the generated twin's inverse exactly.
+        let session = SpinSession::local(2).unwrap();
+        let a = session.random_seeded(32, 8, 0xAB).unwrap();
+        let want = a.inverse().unwrap().to_dense().unwrap();
+        assert_eq!(out.dense.max_abs_diff(&want), 0.0);
+        let _ = std::fs::remove_dir_all(&dir);
     }
 }

@@ -8,8 +8,12 @@
 //! plan source (see [`crate::service::PlanCache`]), which is what lets
 //! concurrent jobs share materialized subexpressions.
 
+use std::path::PathBuf;
+
 use crate::config::{GeneratorKind, JobConfig};
 use crate::error::{Result, SpinError};
+use crate::plan::SourceSpec;
+use crate::ser::bin;
 use crate::ser::json::Json;
 
 /// Largest seed a spec accepts: JSON numbers are f64, so only integers
@@ -18,9 +22,16 @@ use crate::ser::json::Json;
 /// bit-identity contract.
 pub const MAX_SEED: u64 = 1 << 53;
 
-/// A generated distributed matrix, described by parameters. Equal specs
-/// denote bit-identical matrices (generation is seed-deterministic), so
-/// equality doubles as the cross-job sharing key.
+/// A distributed matrix described by parameters — a generator family
+/// (`n`, `block_size`, `seed`, family) or a block-store directory. Equal
+/// specs denote bit-identical matrices (generation is seed-deterministic;
+/// a store is one fixed on-disk matrix), so equality doubles as the
+/// cross-job sharing key.
+///
+/// Specs are **lazy**: submitting one queues an
+/// [`crate::plan::SourceSpec`] leaf whose blocks are produced
+/// per-partition on the workers at first materialization — `submit()`
+/// performs zero block generation or block I/O on the driver.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct MatrixSpec {
     /// Matrix order (power of two).
@@ -28,9 +39,13 @@ pub struct MatrixSpec {
     /// Block edge (power of two dividing `n` into a power-of-two grid).
     pub block_size: usize,
     /// Generator seed (≤ [`MAX_SEED`] so scripts replay exactly).
+    /// Ignored for store-backed specs.
     pub seed: u64,
-    /// Test-matrix family.
+    /// Test-matrix family. Ignored for store-backed specs.
     pub generator: GeneratorKind,
+    /// When set, blocks come from this block-store directory instead of
+    /// a generator (see [`MatrixSpec::from_store`]).
+    pub store: Option<PathBuf>,
 }
 
 impl MatrixSpec {
@@ -42,7 +57,31 @@ impl MatrixSpec {
             block_size,
             seed: j.seed,
             generator: j.generator,
+            store: None,
         }
+    }
+
+    /// Describe a matrix stored in a block-store directory. Reads only
+    /// `meta.json` (grid shape, via [`SourceSpec::from_dir`]), so the
+    /// handle is O(1) in the matrix size; block files are read on the
+    /// workers at materialization.
+    pub fn from_store(dir: impl Into<PathBuf>) -> Result<Self> {
+        let SourceSpec::Store {
+            dir,
+            nblocks,
+            block_size,
+            ..
+        } = SourceSpec::from_dir(dir)?
+        else {
+            unreachable!("from_dir always builds a store spec");
+        };
+        Ok(MatrixSpec {
+            n: nblocks * block_size,
+            block_size,
+            seed: 0,
+            generator: GeneratorKind::DiagDominant,
+            store: Some(dir),
+        })
     }
 
     pub fn seeded(mut self, seed: u64) -> Self {
@@ -56,15 +95,48 @@ impl MatrixSpec {
     }
 
     /// The geometry/seed checks a spec must pass before it is queued.
+    /// Store-backed specs also verify the directory's `meta.json` still
+    /// matches the recorded grid — a cheap driver-side read that fails a
+    /// bad script at submit rather than minutes later on a worker.
     pub fn validate(&self) -> Result<()> {
-        if self.seed > MAX_SEED {
+        if self.store.is_none() && self.seed > MAX_SEED {
             return Err(SpinError::config(format!(
                 "matrix seed {} exceeds 2^53 and would not survive a JSON \
                  round-trip (scripts must replay the exact matrix)",
                 self.seed
             )));
         }
+        if let Some(dir) = &self.store {
+            let meta = bin::read_block_store_meta(dir)?;
+            if meta.block_size != self.block_size || meta.nblocks * meta.block_size != self.n {
+                return Err(SpinError::config(format!(
+                    "store {} holds a {}x{} grid of {} blocks, but the spec says n={} bs={}",
+                    dir.display(),
+                    meta.nblocks,
+                    meta.nblocks,
+                    meta.block_size,
+                    self.n,
+                    self.block_size
+                )));
+            }
+        }
         self.to_job().validate()
+    }
+
+    /// The lazy plan-leaf descriptor this spec lowers to. Store-backed
+    /// specs re-read `meta.json` here so the leaf records the *current*
+    /// store generation id (materialization re-checks it; see
+    /// [`SourceSpec::Store`]).
+    pub(crate) fn to_source_spec(&self) -> Result<SourceSpec> {
+        match &self.store {
+            Some(dir) => SourceSpec::from_dir(dir.clone()),
+            None => Ok(SourceSpec::Generated {
+                n: self.n,
+                block_size: self.block_size,
+                seed: self.seed,
+                generator: self.generator,
+            }),
+        }
     }
 
     /// Full job parameters for generating this matrix.
@@ -76,12 +148,16 @@ impl MatrixSpec {
     }
 
     pub fn to_json(&self) -> Json {
-        Json::object(vec![
+        let mut pairs = vec![
             ("n", Json::num(self.n as f64)),
             ("block_size", Json::num(self.block_size as f64)),
             ("seed", Json::num(self.seed as f64)),
             ("generator", Json::str(self.generator.name())),
-        ])
+        ];
+        if let Some(dir) = &self.store {
+            pairs.push(("store", Json::str(dir.to_string_lossy().to_string())));
+        }
+        Json::object(pairs)
     }
 
     pub fn from_json(v: &Json) -> Result<Self> {
@@ -112,6 +188,12 @@ impl MatrixSpec {
                 j.as_str()
                     .ok_or_else(|| SpinError::config("matrix `generator` must be a string"))?,
             )?;
+        }
+        if let Some(j) = v.get("store") {
+            spec.store = Some(PathBuf::from(
+                j.as_str()
+                    .ok_or_else(|| SpinError::config("matrix `store` must be a string path"))?,
+            ));
         }
         Ok(spec)
     }
@@ -323,6 +405,29 @@ mod tests {
             m.insert("seed".to_string(), Json::num(9.1e15)); // > 2^53
         }
         assert!(MatrixSpec::from_json(&doc).is_err());
+    }
+
+    #[test]
+    fn store_specs_round_trip_and_validate_meta() {
+        // A real store on disk: from_store reads only meta.json.
+        let dir = std::env::temp_dir().join(format!("spin_spec_store_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let store = crate::store::LocalDirStore::create(&dir, 4, 8).unwrap();
+        crate::store::ingest_generated(&store, &JobConfig::new(32, 8)).unwrap();
+        let spec = MatrixSpec::from_store(&dir).unwrap();
+        assert_eq!((spec.n, spec.block_size), (32, 8));
+        spec.validate().unwrap();
+        let back = MatrixSpec::from_json(&spec.to_json()).unwrap();
+        assert_eq!(back, spec);
+        // A replayed spec whose recorded grid disagrees with the store
+        // fails validation at submit time.
+        let mut lying = spec.clone();
+        lying.block_size = 4;
+        lying.n = 16;
+        assert!(lying.validate().is_err());
+        // Missing store directory fails both construction and validation.
+        assert!(MatrixSpec::from_store("/definitely/missing").is_err());
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]

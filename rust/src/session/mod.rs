@@ -51,6 +51,7 @@ use crate::error::{Result, SpinError};
 use crate::linalg::Matrix;
 use crate::plan::{
     render_plan_sized, CacheManager, CacheStats, MatExpr, Optimizer, OptimizerConfig, PlanExec,
+    SourceSpec,
 };
 use crate::runtime::{make_backend, BlockKernels};
 
@@ -277,6 +278,37 @@ impl SpinSession {
         Ok(self.wrap(BlockMatrix::random(&job)?))
     }
 
+    /// **Lazy** random distributed matrix: the handle returns in O(1) —
+    /// no block exists until the first materialization, which produces
+    /// them per-partition on the workers. Bit-identical to
+    /// [`random_seeded`](Self::random_seeded) for the same parameters
+    /// (both paths evaluate the same per-block generator function), so
+    /// callers can switch freely as input sizes grow.
+    pub fn lazy_random_seeded(
+        &self,
+        n: usize,
+        block_size: usize,
+        seed: u64,
+    ) -> Result<DistMatrix<'_>> {
+        let mut job = self.job_for(n, block_size);
+        job.seed = seed;
+        job.validate()?;
+        Ok(self.wrap_expr(MatExpr::lazy_source(SourceSpec::Generated {
+            n,
+            block_size,
+            seed,
+            generator: job.generator,
+        })?))
+    }
+
+    /// A matrix stored in a block-store directory (`spin ingest` /
+    /// [`crate::store::LocalDirStore`]), as a lazy handle: only
+    /// `meta.json` is read here; block files are read per-partition on
+    /// the workers at first materialization.
+    pub fn from_store(&self, dir: impl Into<std::path::PathBuf>) -> Result<DistMatrix<'_>> {
+        Ok(self.wrap_expr(MatExpr::lazy_source(SourceSpec::from_dir(dir)?)?))
+    }
+
     /// Split a driver-side dense matrix into session-managed blocks.
     pub fn from_dense(&self, dense: &Matrix, block_size: usize) -> Result<DistMatrix<'_>> {
         Ok(self.wrap(BlockMatrix::from_dense(dense, block_size)?))
@@ -355,9 +387,11 @@ impl SpinSession {
 
     /// Pin an expression's materialized value against LRU eviction
     /// (engine behind [`DistMatrix::persist`]). The value must already be
-    /// materialized by the caller.
+    /// materialized by the caller. Pinned bytes are excluded from the LRU
+    /// budget and surfaced in `MetricsSnapshot::pinned_bytes`.
     pub(crate) fn pin_expr(&self, expr: &MatExpr) -> Result<()> {
         self.canonical(expr)?.set_pinned(true);
+        self.cluster.set_pinned_bytes(self.lifecycle.stats().pinned_bytes);
         Ok(())
     }
 
@@ -369,6 +403,7 @@ impl SpinSession {
         canonical.set_pinned(false);
         let released = canonical.evict_value();
         self.lifecycle.forget(canonical.id());
+        self.cluster.set_pinned_bytes(self.lifecycle.stats().pinned_bytes);
         Ok(released)
     }
 
@@ -483,8 +518,11 @@ impl SpinSession {
         self.cluster.virtual_secs()
     }
 
-    /// Per-method metrics snapshot.
+    /// Per-method metrics snapshot. Refreshes the pinned-bytes gauge
+    /// first, so values whose DAGs died since the last pin change (freed
+    /// by ref-counting, not by `unpersist`) don't read as still pinned.
     pub fn metrics(&self) -> MetricsSnapshot {
+        self.cluster.set_pinned_bytes(self.lifecycle.stats().pinned_bytes);
         self.cluster.metrics()
     }
 
@@ -697,6 +735,89 @@ mod tests {
         assert_eq!(s.metrics().cache_evictions(), 0);
         assert_eq!(s.cache_stats().budget_bytes, None);
         assert!(s.cache_stats().entries >= 4);
+    }
+
+    #[test]
+    fn lazy_random_is_bit_identical_to_eager_and_deferred() {
+        let session = SpinSession::local(2).unwrap();
+        session.reset_clock();
+        let lazy = session.lazy_random_seeded(32, 8, 77).unwrap();
+        assert_eq!(
+            session.metrics().stages().len(),
+            0,
+            "lazy handle construction must not execute"
+        );
+        let eager = session.random_seeded(32, 8, 77).unwrap();
+        assert_eq!(
+            lazy.to_dense()
+                .unwrap()
+                .max_abs_diff(&eager.to_dense().unwrap()),
+            0.0,
+            "lazy and eager generation share one per-block function"
+        );
+        assert_eq!(session.metrics().method("generate").unwrap().calls, 1);
+        // Bad geometry is rejected at handle construction.
+        assert!(session.lazy_random_seeded(100, 10, 1).is_err());
+    }
+
+    #[test]
+    fn session_from_store_reads_blocks_at_materialization() {
+        let dir = std::env::temp_dir().join(format!("spin_sess_store_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let mut job = JobConfig::new(16, 4);
+        job.seed = 3;
+        let store = crate::store::LocalDirStore::create(&dir, 4, 4).unwrap();
+        crate::store::ingest_generated(&store, &job).unwrap();
+        let session = SpinSession::local(2).unwrap();
+        let m = session.from_store(&dir).unwrap();
+        assert_eq!((m.n(), m.block_size()), (16, 4));
+        let want = session.random_seeded(16, 4, 3).unwrap().to_dense().unwrap();
+        assert_eq!(m.to_dense().unwrap().max_abs_diff(&want), 0.0);
+        assert!(session.metrics().method("loadBlock").unwrap().calls >= 1);
+        assert!(session.from_store("/definitely/missing").is_err());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn store_re_ingest_is_detected_not_silently_mixed() {
+        let dir = std::env::temp_dir().join(format!("spin_reingest_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let mut job = JobConfig::new(16, 4);
+        job.seed = 1;
+        let store = crate::store::LocalDirStore::create(&dir, 4, 4).unwrap();
+        crate::store::ingest_generated(&store, &job).unwrap();
+        let session = SpinSession::local(2).unwrap();
+        let m = session.from_store(&dir).unwrap();
+        let first = m.to_dense().unwrap();
+        // Re-ingest IN PLACE with different data (new store generation).
+        job.seed = 2;
+        let store = crate::store::LocalDirStore::create(&dir, 4, 4).unwrap();
+        crate::store::ingest_generated(&store, &job).unwrap();
+        // The memoized value is still served (consistent with the plan)…
+        assert_eq!(m.to_dense().unwrap().max_abs_diff(&first), 0.0);
+        // …but once evicted, re-materialization must fail loudly rather
+        // than regenerate DIFFERENT bytes under the same plan node.
+        assert!(m.expr().evict_value());
+        let err = m.to_dense().unwrap_err().to_string();
+        assert!(err.contains("changed since this plan was built"), "{err}");
+        // A fresh handle against the current store works.
+        let fresh = session.from_store(&dir).unwrap();
+        assert!(fresh.to_dense().unwrap().max_abs_diff(&first) > 0.0);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn persist_updates_pinned_bytes_gauge() {
+        let s = SpinSession::local(2).unwrap();
+        let a = s.random_seeded(16, 4, 50).unwrap();
+        let b = s.random_seeded(16, 4, 51).unwrap();
+        let prod = a.multiply(&b).unwrap();
+        assert_eq!(s.metrics().pinned_bytes(), 0);
+        prod.persist().unwrap();
+        assert_eq!(s.metrics().pinned_bytes(), 16 * 16 * 8);
+        assert_eq!(s.cache_stats().pinned_bytes, 16 * 16 * 8);
+        prod.unpersist().unwrap();
+        assert_eq!(s.metrics().pinned_bytes(), 0);
     }
 
     #[test]

@@ -1,0 +1,213 @@
+//! Block stores: the HDFS-style ingest/load path for distributed
+//! matrices.
+//!
+//! A store holds one matrix as a directory of files — `meta.json` with
+//! the grid shape plus one [`crate::ser::bin`] dense file per `(i, j)`
+//! block — so the unit of I/O is the unit of distribution. The serving
+//! stack consumes stores through **lazy plan leaves**: a
+//! [`crate::service::MatrixSpec::from_store`] (or
+//! [`crate::session::SpinSession::from_store`]) handle returns after
+//! reading only `meta.json`; block files are read per-partition on the
+//! workers at first materialization, never driver-side at submit.
+//!
+//! [`BlockStore`] is the pluggable interface (a future HDFS/S3 client
+//! implements it); [`LocalDirStore`] is the local-filesystem
+//! implementation behind `spin ingest` and `spin serve --store`.
+
+use std::path::{Path, PathBuf};
+
+use crate::blockmatrix::BlockMatrix;
+use crate::config::JobConfig;
+use crate::error::{Result, SpinError};
+use crate::linalg::{self, Matrix};
+use crate::ser::bin;
+
+pub use crate::ser::bin::BlockStoreMeta;
+
+/// One stored distributed matrix: square `nblocks × nblocks` grid of
+/// square `block_size` blocks, addressable per block. Implementations
+/// must be safe to read from concurrent worker tasks.
+pub trait BlockStore: Send + Sync {
+    /// Grid shape of the stored matrix.
+    fn meta(&self) -> Result<BlockStoreMeta>;
+
+    /// Read one block's payload.
+    fn read_block(&self, bi: usize, bj: usize) -> Result<Matrix>;
+
+    /// Write one block's payload (ingest path).
+    fn write_block(&self, bi: usize, bj: usize, m: &Matrix) -> Result<()>;
+}
+
+/// [`BlockStore`] over a local directory in the `ser::bin` layout:
+/// `meta.json` + `block_<i>_<j>.mat`, one serialized block per file.
+pub struct LocalDirStore {
+    dir: PathBuf,
+}
+
+impl LocalDirStore {
+    /// Open an existing store (validates `meta.json`).
+    pub fn open(dir: impl Into<PathBuf>) -> Result<(Self, BlockStoreMeta)> {
+        let store = LocalDirStore { dir: dir.into() };
+        let meta = store.meta()?;
+        Ok((store, meta))
+    }
+
+    /// Create (or overwrite) a store directory for the given grid shape.
+    /// Overwriting first removes every `block_*.mat` file left by a
+    /// previous store — block files carry no identity tying them to
+    /// `meta.json`, so stale leftovers from an older (larger, or
+    /// differently seeded) store would otherwise be served silently.
+    pub fn create(dir: impl Into<PathBuf>, nblocks: usize, block_size: usize) -> Result<Self> {
+        let dir: PathBuf = dir.into();
+        if nblocks == 0 || block_size == 0 {
+            return Err(SpinError::config(
+                "block store needs a positive grid and block size",
+            ));
+        }
+        std::fs::create_dir_all(&dir)?;
+        for entry in std::fs::read_dir(&dir)? {
+            let path = entry?.path();
+            let name = path.file_name().and_then(|n| n.to_str()).unwrap_or("");
+            if path.is_file() && name.starts_with("block_") && name.ends_with(".mat") {
+                std::fs::remove_file(&path)?;
+            }
+        }
+        bin::write_block_store(&dir, nblocks, block_size, std::iter::empty())?;
+        Ok(LocalDirStore { dir })
+    }
+
+    /// Wrap a directory without touching the filesystem — the lazy-leaf
+    /// path, where `meta.json` was already validated at spec time and
+    /// block reads happen on the workers.
+    pub fn open_unchecked(dir: impl Into<PathBuf>) -> Self {
+        LocalDirStore { dir: dir.into() }
+    }
+
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+}
+
+impl BlockStore for LocalDirStore {
+    fn meta(&self) -> Result<BlockStoreMeta> {
+        bin::read_block_store_meta(&self.dir)
+    }
+
+    fn read_block(&self, bi: usize, bj: usize) -> Result<Matrix> {
+        bin::read_block(&self.dir, bi, bj)
+    }
+
+    fn write_block(&self, bi: usize, bj: usize, m: &Matrix) -> Result<()> {
+        bin::write_matrix(&self.dir.join(format!("block_{bi}_{bj}.mat")), m)
+    }
+}
+
+/// Ingest a generated matrix into a store **block by block**: per-block
+/// RNG streams mean the driver holds one block at a time, so ingest is
+/// O(block) memory at any matrix size. The stored bits equal what the
+/// eager and lazy generation paths produce for the same job parameters.
+pub fn ingest_generated(store: &dyn BlockStore, job: &JobConfig) -> Result<usize> {
+    job.validate()?;
+    let nblocks = job.num_splits();
+    for bi in 0..nblocks {
+        for bj in 0..nblocks {
+            let block =
+                linalg::generate_block(job.generator, job.n, job.block_size, bi, bj, job.seed);
+            store.write_block(bi, bj, &block)?;
+        }
+    }
+    Ok(nblocks * nblocks)
+}
+
+/// Write an already-materialized distributed matrix into a store.
+pub fn ingest_block_matrix(store: &dyn BlockStore, m: &BlockMatrix) -> Result<usize> {
+    let meta = store.meta()?;
+    if meta.nblocks != m.nblocks() || meta.block_size != m.block_size() {
+        return Err(SpinError::shape(format!(
+            "store grid {}x{} of {} does not match matrix grid {}x{} of {}",
+            meta.nblocks,
+            meta.nblocks,
+            meta.block_size,
+            m.nblocks(),
+            m.nblocks(),
+            m.block_size()
+        )));
+    }
+    let mut written = 0usize;
+    for bi in 0..m.nblocks() {
+        for bj in 0..m.nblocks() {
+            let block = m
+                .get_block(bi, bj)
+                .ok_or_else(|| SpinError::shape(format!("grid missing block ({bi},{bj})")))?;
+            store.write_block(bi, bj, &block.matrix)?;
+            written += 1;
+        }
+    }
+    Ok(written)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::GeneratorKind;
+
+    fn tmpdir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!("spin_store_{tag}_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&d);
+        d
+    }
+
+    #[test]
+    fn ingest_generated_round_trips_against_eager_random() {
+        let d = tmpdir("gen");
+        let mut job = JobConfig::new(32, 8);
+        job.seed = 11;
+        job.generator = GeneratorKind::Spd;
+        let store = LocalDirStore::create(&d, job.num_splits(), job.block_size).unwrap();
+        assert_eq!(ingest_generated(&store, &job).unwrap(), 16);
+        let (reopened, meta) = LocalDirStore::open(&d).unwrap();
+        assert_eq!((meta.nblocks, meta.block_size), (4, 8));
+        let eager = BlockMatrix::random(&job).unwrap();
+        for bi in 0..4 {
+            for bj in 0..4 {
+                let stored = reopened.read_block(bi, bj).unwrap();
+                let want = &eager.get_block(bi, bj).unwrap().matrix;
+                assert_eq!(stored.max_abs_diff(want), 0.0, "block ({bi},{bj})");
+            }
+        }
+        let _ = std::fs::remove_dir_all(&d);
+    }
+
+    #[test]
+    fn ingest_block_matrix_validates_grid() {
+        let d = tmpdir("bm");
+        let store = LocalDirStore::create(&d, 2, 4).unwrap();
+        let m = BlockMatrix::identity(8, 4).unwrap();
+        assert_eq!(ingest_block_matrix(&store, &m).unwrap(), 4);
+        let wrong = BlockMatrix::identity(8, 2).unwrap();
+        assert!(ingest_block_matrix(&store, &wrong).is_err());
+        let _ = std::fs::remove_dir_all(&d);
+    }
+
+    #[test]
+    fn create_clears_stale_blocks_from_a_previous_store() {
+        let d = tmpdir("stale");
+        let big = LocalDirStore::create(&d, 4, 4).unwrap();
+        ingest_generated(&big, &JobConfig::new(16, 4)).unwrap();
+        assert!(d.join("block_3_3.mat").exists());
+        // Re-create the same directory as a SMALLER store: the old
+        // out-of-grid block files must not survive to be served later.
+        let small = LocalDirStore::create(&d, 2, 4).unwrap();
+        ingest_generated(&small, &JobConfig::new(8, 4)).unwrap();
+        assert!(!d.join("block_3_3.mat").exists(), "stale block cleared");
+        let (_, meta) = LocalDirStore::open(&d).unwrap();
+        assert_eq!((meta.nblocks, meta.block_size), (2, 4));
+        let _ = std::fs::remove_dir_all(&d);
+    }
+
+    #[test]
+    fn open_rejects_missing_and_create_rejects_degenerate() {
+        assert!(LocalDirStore::open("/definitely/missing/store").is_err());
+        assert!(LocalDirStore::create(tmpdir("bad"), 0, 4).is_err());
+    }
+}

@@ -13,3 +13,20 @@ pub mod timer;
 
 pub use rng::Rng;
 pub use timer::Stopwatch;
+
+use std::sync::{Condvar, Mutex, MutexGuard, PoisonError};
+
+/// Poison-tolerant mutex lock. A panicking job (worker task, user
+/// algorithm, generator) must fail *that job*, not wedge every later
+/// caller of the lock it happened to hold — the guarded states in this
+/// crate are all written atomically-enough that recovering the guard is
+/// safe (memo slots hold `Option`s set in one assignment, queues/maps are
+/// structurally consistent between method calls).
+pub fn plock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(PoisonError::into_inner)
+}
+
+/// Poison-tolerant condvar wait — companion to [`plock`].
+pub fn pwait<'a, T>(cv: &Condvar, guard: MutexGuard<'a, T>) -> MutexGuard<'a, T> {
+    cv.wait(guard).unwrap_or_else(PoisonError::into_inner)
+}
