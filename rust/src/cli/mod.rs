@@ -13,6 +13,8 @@
 //! spin explain [--n 256 --block-size 32] [--algo spin] [--set plan_optimizer=false]
 //! spin serve   --script JOBS.json | --store DIR [--workers N]
 //!              [--set cache_budget_bytes=N] [--set metrics_history=N]
+//! spin serve   --http ADDR [--store DIR] [--workers N]
+//!              [--http-set listen|max_body_bytes|sse_heartbeat_ms=V]
 //! spin info
 //! ```
 
@@ -22,15 +24,16 @@ pub use args::Args;
 
 use std::path::PathBuf;
 
-use crate::config::{ClusterConfig, GeneratorKind, JobConfig};
+use crate::config::{ClusterConfig, GeneratorKind, HttpConfig, JobConfig};
 use crate::costmodel::{self, CostConstants};
 use crate::error::{Result, SpinError};
 use crate::experiments::{self, Scale};
+use crate::http::{HttpServer, RecoveredJob, ServerState};
 use crate::runtime::Manifest;
 use crate::ser::json::Json;
 use crate::service::{JobSpec, MatrixSpec, SpinService};
 use crate::session::SpinSession;
-use crate::store::{self, LocalDirStore};
+use crate::store::{self, JobLog, LocalDirStore};
 use crate::util::fmt;
 
 /// Entry point for the `spin` binary; returns the process exit code.
@@ -83,7 +86,10 @@ pub fn usage() -> String {
      \x20 explain  print an algorithm's optimized recursion-level plan (fusion, CSE caches,\n\
      \x20          predicted shuffle stages per node, cache decisions + resident bytes)\n\
      \x20 serve    replay a JobSpec script ({\"jobs\": [...]}) through the multi-tenant\n\
-     \x20          SpinService and print per-job reports (--script FILE, --workers N)\n\
+     \x20          SpinService and print per-job reports (--script FILE, --workers N),\n\
+     \x20          or expose the service over HTTP: --http ADDR [--store DIR] runs the\n\
+     \x20          job API (POST /v1/jobs, SSE /v1/jobs/:id/events, /v1/metrics) with a\n\
+     \x20          durable job log in DIR replayed on restart; ctrl-c drains gracefully\n\
      \x20 info     show cluster config and artifact status\n\
      \n\
      COMMON FLAGS:\n\
@@ -500,6 +506,8 @@ fn cmd_serve(mut args: Args) -> Result<()> {
     let script = args.flag_value("--script")?;
     let store_dir = args.flag_value("--store")?;
     let algo = args.flag_value("--algo")?;
+    let http_addr = args.flag_value("--http")?;
+    let http_overrides = args.flag_values("--http-set")?;
     let workers = args
         .flag_value("--workers")?
         .map(|v| {
@@ -509,6 +517,26 @@ fn cmd_serve(mut args: Args) -> Result<()> {
         .transpose()?
         .unwrap_or(2);
     args.finish()?;
+
+    if let Some(addr) = http_addr {
+        if script.is_some() || algo.is_some() {
+            return Err(SpinError::config(
+                "--http is a live server: jobs arrive over POST /v1/jobs, so \
+                 --script/--algo do not apply (--store DIR is the durable job log)",
+            ));
+        }
+        let mut http = HttpConfig {
+            listen: addr,
+            ..HttpConfig::default()
+        };
+        for kv in &http_overrides {
+            http.apply_override(kv)?;
+        }
+        return serve_http(cfg, http, store_dir, workers);
+    }
+    if !http_overrides.is_empty() {
+        return Err(SpinError::config("--http-set requires --http ADDR"));
+    }
 
     let (specs, source_label) = match (&script, &store_dir) {
         (Some(script), None) => {
@@ -559,7 +587,7 @@ fn cmd_serve(mut args: Args) -> Result<()> {
         "job", "tenant", "kind", "label", "status", "stages", "exchanges", "shuffled",
         "residual",
     ]);
-    let mut failures = 0usize;
+    let mut failures: Vec<String> = Vec::new();
     for handle in &handles {
         let spec = handle.spec();
         let row = match handle.wait() {
@@ -577,7 +605,13 @@ fn cmd_serve(mut args: Args) -> Result<()> {
                     .unwrap_or_else(|| "-".to_string()),
             ],
             Err(e) => {
-                failures += 1;
+                failures.push(format!(
+                    "  job {} [{}/{}] {}: {e}",
+                    handle.id(),
+                    spec.tenant,
+                    if spec.label.is_empty() { "-" } else { &spec.label },
+                    spec.kind.name(),
+                ));
                 vec![
                     handle.id().to_string(),
                     spec.tenant.clone(),
@@ -618,9 +652,134 @@ fn cmd_serve(mut args: Args) -> Result<()> {
         retention.released_stage_records(),
         retention.released_scopes(),
     );
-    if failures > 0 {
-        return Err(SpinError::cluster(format!("{failures} job(s) failed")));
+    // Scripted batches are CI fodder: a nonzero exit must *name* what
+    // failed, not just count it.
+    if !failures.is_empty() {
+        return Err(SpinError::cluster(format!(
+            "{} job(s) failed:\n{}",
+            failures.len(),
+            failures.join("\n")
+        )));
     }
+    Ok(())
+}
+
+/// Set by the SIGINT handler; polled by the `--http` serve loop.
+static INTERRUPTED: std::sync::atomic::AtomicBool = std::sync::atomic::AtomicBool::new(false);
+
+/// Route SIGINT to the [`INTERRUPTED`] flag so ctrl-c triggers a
+/// graceful drain instead of killing jobs mid-flight. Hand-rolled over
+/// the raw C `signal(2)` entry point: the offline vendor set has no
+/// `libc`/`ctrlc` crate, and `std` already links the platform libc.
+#[cfg(unix)]
+fn install_sigint_handler() {
+    extern "C" fn on_sigint(_sig: i32) {
+        INTERRUPTED.store(true, std::sync::atomic::Ordering::SeqCst);
+    }
+    extern "C" {
+        fn signal(signum: i32, handler: usize) -> usize;
+    }
+    const SIGINT: i32 = 2;
+    // SAFETY: `on_sigint` is async-signal-safe (a single atomic store)
+    // and stays alive for the process lifetime (it is a fn item).
+    unsafe {
+        signal(SIGINT, on_sigint as extern "C" fn(i32) as usize);
+    }
+}
+
+#[cfg(not(unix))]
+fn install_sigint_handler() {}
+
+/// `spin serve --http ADDR`: run the job API server until interrupted.
+/// With `--store DIR`, jobs are journaled to a durable log there and the
+/// log is replayed at startup — jobs still pending at the last shutdown
+/// re-enqueue under their original ids, and already-terminal jobs are
+/// served from the log without re-execution.
+fn serve_http(
+    cfg: ClusterConfig,
+    http: HttpConfig,
+    store_dir: Option<String>,
+    workers: usize,
+) -> Result<()> {
+    http.validate()?;
+    if workers == 0 {
+        return Err(SpinError::config(
+            "--http needs --workers >= 1 (there is no synchronous drain over a live socket)",
+        ));
+    }
+    let mut builder = SpinService::builder()
+        .session_builder(SpinSession::builder().cluster_config(cfg))
+        .workers(workers)
+        .queue_capacity(256);
+    let mut generation = 0u64;
+    let mut replayed = None;
+    if let Some(dir) = &store_dir {
+        let (job_log, replay) = JobLog::open(std::path::Path::new(dir))?;
+        generation = job_log.generation();
+        builder = builder.job_log(std::sync::Arc::new(job_log));
+        replayed = Some(replay);
+    }
+    let service = builder.build()?;
+
+    let mut recovered = std::collections::BTreeMap::new();
+    let mut resumed = 0usize;
+    if let Some(replay) = replayed {
+        for job in replay.jobs {
+            match job.terminal {
+                Some(terminal) => {
+                    recovered.insert(
+                        job.id,
+                        RecoveredJob {
+                            spec: job.spec,
+                            terminal: crate::service::TerminalSummary {
+                                status: terminal.status,
+                                error: terminal.error,
+                                residual: terminal.residual,
+                            },
+                        },
+                    );
+                }
+                None => {
+                    // Still pending at the last shutdown: resume under
+                    // the original id (resubmits stay idempotent).
+                    service.submit_with_id(job.id, job.spec)?;
+                    resumed += 1;
+                }
+            }
+        }
+    }
+    let recovered_count = recovered.len();
+
+    let state = ServerState {
+        service,
+        config: http,
+        recovered,
+        generation,
+    };
+    let mut server = HttpServer::bind(state)?;
+    // Parseable by scripts and the smoke test: exactly one line, the
+    // resolved address (ephemeral ports included).
+    println!("listening on http://{}", server.local_addr());
+    match &store_dir {
+        Some(dir) => println!(
+            "job log: {dir} (generation {generation}; {recovered_count} terminal job(s) \
+             recovered, {resumed} pending job(s) resumed)"
+        ),
+        None => println!("job log: none (jobs do not survive a restart; add --store DIR)"),
+    }
+    println!(
+        "workers: {} · ctrl-c drains running jobs, then exits",
+        server.service().worker_count()
+    );
+
+    install_sigint_handler();
+    while !INTERRUPTED.load(std::sync::atomic::Ordering::SeqCst) {
+        std::thread::sleep(std::time::Duration::from_millis(100));
+    }
+    println!("interrupted: refusing new connections, draining running jobs");
+    server.shutdown();
+    server.service().wait_idle();
+    println!("drained; bye");
     Ok(())
 }
 

@@ -343,6 +343,112 @@ impl ClusterConfig {
     }
 }
 
+/// `spin serve --http` front-door knobs: where to listen and the wire
+/// limits the hand-rolled HTTP/1.1 server enforces.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct HttpConfig {
+    /// Listen address, `host:port` (`port 0` = ephemeral, the bound
+    /// address is printed at startup).
+    pub listen: String,
+    /// Largest accepted request body in bytes; larger submits are
+    /// rejected with `413` before buffering.
+    pub max_body_bytes: usize,
+    /// SSE keep-alive: a `: heartbeat` comment is written on any event
+    /// stream idle this long, so proxies and clients can distinguish a
+    /// quiet job from a dead connection.
+    pub sse_heartbeat_ms: u64,
+}
+
+impl Default for HttpConfig {
+    fn default() -> Self {
+        HttpConfig {
+            listen: "127.0.0.1:8017".to_string(),
+            max_body_bytes: 1 << 20,
+            sse_heartbeat_ms: 10_000,
+        }
+    }
+}
+
+impl HttpConfig {
+    pub fn validate(&self) -> Result<()> {
+        if self.listen.is_empty() {
+            return Err(SpinError::config("http listen address must not be empty"));
+        }
+        if self.max_body_bytes == 0 {
+            return Err(SpinError::config("http max_body_bytes must be positive"));
+        }
+        if self.sse_heartbeat_ms == 0 {
+            return Err(SpinError::config("http sse_heartbeat_ms must be positive"));
+        }
+        Ok(())
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::object(vec![
+            ("listen", Json::str(self.listen.clone())),
+            ("max_body_bytes", Json::num(self.max_body_bytes as f64)),
+            ("sse_heartbeat_ms", Json::num(self.sse_heartbeat_ms as f64)),
+        ])
+    }
+
+    pub fn from_json(v: &Json) -> Result<Self> {
+        v.check_known_keys("http config", &["listen", "max_body_bytes", "sse_heartbeat_ms"])?;
+        let base = HttpConfig::default();
+        let cfg = HttpConfig {
+            listen: match v.get("listen") {
+                None => base.listen,
+                Some(j) => j
+                    .as_str()
+                    .ok_or_else(|| SpinError::config("`listen` must be a string"))?
+                    .to_string(),
+            },
+            max_body_bytes: match v.get("max_body_bytes") {
+                None => base.max_body_bytes,
+                Some(j) => j.as_usize().ok_or_else(|| {
+                    SpinError::config("`max_body_bytes` must be a non-negative integer")
+                })?,
+            },
+            sse_heartbeat_ms: match v.get("sse_heartbeat_ms") {
+                None => base.sse_heartbeat_ms,
+                Some(j) => j
+                    .as_i64()
+                    .and_then(|n| u64::try_from(n).ok())
+                    .ok_or_else(|| {
+                        SpinError::config("`sse_heartbeat_ms` must be a non-negative integer")
+                    })?,
+            },
+        };
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    pub fn from_file(path: &Path) -> Result<Self> {
+        Self::from_json(&Json::from_file(path)?)
+    }
+
+    /// Apply a `key=value` override (CLI `--set` in serve's http mode).
+    pub fn apply_override(&mut self, kv: &str) -> Result<()> {
+        let (key, value) = kv
+            .split_once('=')
+            .ok_or_else(|| SpinError::config(format!("override `{kv}` is not key=value")))?;
+        match key {
+            "listen" => self.listen = value.to_string(),
+            "max_body_bytes" => {
+                self.max_body_bytes = value
+                    .parse()
+                    .map_err(|_| SpinError::config("max_body_bytes needs an integer"))?
+            }
+            "sse_heartbeat_ms" => {
+                self.sse_heartbeat_ms = value
+                    .parse()
+                    .map_err(|_| SpinError::config("sse_heartbeat_ms needs an integer"))?
+            }
+            other => return Err(SpinError::config(format!("unknown http key `{other}`"))),
+        }
+        self.validate()
+    }
+}
+
 /// Test-matrix generator families (all invertible by construction).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum GeneratorKind {
@@ -632,6 +738,26 @@ mod tests {
         j.apply_override("block_size=32").unwrap();
         assert_eq!(j.num_splits(), 8);
         assert!(j.apply_override("block_size=7").is_err());
+    }
+
+    #[test]
+    fn http_config_round_trip_validation_and_overrides() {
+        let base = HttpConfig::default();
+        base.validate().unwrap();
+        let back = HttpConfig::from_json(&base.to_json()).unwrap();
+        assert_eq!(back, base);
+        let mut c = base.clone();
+        c.apply_override("listen=0.0.0.0:9000").unwrap();
+        assert_eq!(c.listen, "0.0.0.0:9000");
+        c.apply_override("max_body_bytes=4096").unwrap();
+        c.apply_override("sse_heartbeat_ms=250").unwrap();
+        assert_eq!((c.max_body_bytes, c.sse_heartbeat_ms), (4096, 250));
+        assert!(c.apply_override("max_body_bytes=0").is_err());
+        assert!(c.apply_override("bogus=1").is_err());
+        // Strict JSON: a typo'd key is named in the error.
+        let doc = Json::parse(r#"{"listn": "x:1"}"#).unwrap();
+        let err = HttpConfig::from_json(&doc).unwrap_err().to_string();
+        assert!(err.contains("`listn`"), "{err}");
     }
 
     #[test]

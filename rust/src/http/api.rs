@@ -1,0 +1,355 @@
+//! Request routing and JSON rendering for the job API.
+
+use crate::error::SpinError;
+use crate::ser::json::Json;
+use crate::service::{JobHandle, JobSpec, JobStatus};
+
+use super::wire::{Request, Response};
+use super::{RecoveredJob, ServerState};
+
+/// What the connection handler should do with a routed request.
+pub(crate) enum Reply {
+    Plain(Response),
+    /// Upgrade to a server-sent-event stream for this job.
+    EventStream { job_id: u64 },
+}
+
+pub(crate) fn route(state: &ServerState, request: &Request) -> Reply {
+    let segments = request.segments();
+    let method = request.method.as_str();
+    let plain = |r: Response| Reply::Plain(r);
+    match segments.as_slice() {
+        ["v1", "healthz"] if method == "GET" => plain(Response::json(
+            200,
+            &Json::object(vec![
+                ("ok", Json::Bool(true)),
+                ("generation", Json::num(state.generation as f64)),
+            ]),
+        )),
+        ["v1", "metrics"] if method == "GET" => plain(global_metrics(state)),
+        ["v1", "jobs"] if method == "POST" => plain(submit(state, &request.body)),
+        ["v1", "jobs", id] if method == "GET" => plain(with_id(id, |id| job_status(state, id))),
+        ["v1", "jobs", id, "cancel"] if method == "POST" => {
+            plain(with_id(id, |id| cancel(state, id)))
+        }
+        ["v1", "jobs", id, "explain"] if method == "GET" => {
+            plain(with_id(id, |id| explain(state, id)))
+        }
+        ["v1", "jobs", id, "metrics"] if method == "GET" => {
+            plain(with_id(id, |id| job_metrics(state, id)))
+        }
+        ["v1", "jobs", id, "events"] if method == "GET" => match parse_id(id) {
+            Some(job_id)
+                if state.service.job(job_id).is_some()
+                    || state.recovered.contains_key(&job_id) =>
+            {
+                Reply::EventStream { job_id }
+            }
+            Some(job_id) => plain(Response::error(404, &format!("unknown job {job_id}"))),
+            None => plain(Response::error(400, &format!("bad job id `{id}`"))),
+        },
+        ["v1", "healthz" | "metrics" | "jobs", ..] => {
+            plain(Response::error(405, &format!("{method} not allowed here")))
+        }
+        _ => plain(Response::error(404, &format!("no route for {}", request.path))),
+    }
+}
+
+fn parse_id(raw: &str) -> Option<u64> {
+    raw.parse::<u64>().ok().filter(|&id| id > 0)
+}
+
+fn with_id(raw: &str, f: impl FnOnce(u64) -> Response) -> Response {
+    match parse_id(raw) {
+        Some(id) => f(id),
+        None => Response::error(400, &format!("bad job id `{raw}`")),
+    }
+}
+
+/// Map a service error onto the closest HTTP status: saturation is
+/// retryable (503), an id conflict is 409, anything else the client
+/// said wrong is 400.
+fn error_response(e: &SpinError) -> Response {
+    let msg = e.to_string();
+    let status = if msg.contains("queue is full") || msg.contains("shutting down") {
+        503
+    } else if msg.contains("different spec") {
+        409
+    } else {
+        400
+    };
+    Response::error(status, &msg)
+}
+
+/// `POST /v1/jobs`: body is a strict [`JobSpec`] JSON object, plus an
+/// optional top-level `"id"` for id-stable (idempotent) resubmits.
+fn submit(state: &ServerState, body: &[u8]) -> Response {
+    let Ok(text) = std::str::from_utf8(body) else {
+        return Response::error(400, "body is not UTF-8");
+    };
+    let parsed = match Json::parse(text) {
+        Ok(v) => v,
+        Err(e) => return Response::error(400, &e.to_string()),
+    };
+    let (fixed_id, spec_json) = match parsed {
+        Json::Object(mut map) => {
+            let fixed_id = match map.remove("id") {
+                None => None,
+                Some(v) => match v.as_i64().and_then(|n| u64::try_from(n).ok()).filter(|&n| n > 0)
+                {
+                    Some(id) => Some(id),
+                    None => return Response::error(400, "`id` must be a positive integer"),
+                },
+            };
+            (fixed_id, Json::Object(map))
+        }
+        other => (None, other),
+    };
+    let spec = match JobSpec::from_json(&spec_json) {
+        Ok(spec) => spec,
+        Err(e) => return Response::error(400, &e.to_string()),
+    };
+    // A resubmit of a job that finished before the last restart is
+    // answered from the log — same id, no second execution.
+    if let Some(id) = fixed_id {
+        if let Some(recovered) = state.recovered.get(&id) {
+            if recovered.spec != spec {
+                return Response::error(409, &format!("job {id} already exists with a different spec"));
+            }
+            return Response::json(200, &recovered_json(id, recovered));
+        }
+    }
+    let result = match fixed_id {
+        Some(id) => state.service.submit_with_id(id, spec),
+        None => state.service.submit(spec),
+    };
+    match result {
+        Ok(handle) => Response::json(
+            202,
+            &Json::object(vec![
+                ("id", Json::num(handle.id() as f64)),
+                ("status", Json::str(handle.status().name())),
+            ]),
+        ),
+        Err(e) => error_response(&e),
+    }
+}
+
+fn history_json(handle: &JobHandle) -> Json {
+    Json::Array(
+        handle
+            .history()
+            .iter()
+            .map(|e| {
+                Json::object(vec![
+                    ("seq", Json::num(e.seq as f64)),
+                    ("status", Json::str(e.status.name())),
+                    ("ts_ms", Json::num(e.ts_ms as f64)),
+                ])
+            })
+            .collect(),
+    )
+}
+
+fn recovered_json(id: u64, job: &RecoveredJob) -> Json {
+    let mut pairs = vec![
+        ("id", Json::num(id as f64)),
+        ("status", Json::str(job.terminal.status.name())),
+        ("recovered", Json::Bool(true)),
+        ("kind", Json::str(job.spec.kind.name())),
+        ("tenant", Json::str(job.spec.tenant.clone())),
+        ("label", Json::str(job.spec.label.clone())),
+    ];
+    if let Some(e) = &job.terminal.error {
+        pairs.push(("error", Json::str(e.clone())));
+    }
+    if let Some(r) = job.terminal.residual {
+        pairs.push(("residual", Json::Number(r)));
+    }
+    Json::object(pairs)
+}
+
+/// `GET /v1/jobs/:id`: live jobs report status/history/outcome summary;
+/// jobs terminal before the last restart answer from the recovered log.
+fn job_status(state: &ServerState, id: u64) -> Response {
+    if let Some(handle) = state.service.job(id) {
+        let spec = handle.spec();
+        let mut pairs = vec![
+            ("id", Json::num(id as f64)),
+            ("status", Json::str(handle.status().name())),
+            ("kind", Json::str(spec.kind.name())),
+            ("tenant", Json::str(spec.tenant.clone())),
+            ("label", Json::str(spec.label.clone())),
+            (
+                "submit_driver_blocks",
+                Json::num(handle.submit_driver_blocks() as f64),
+            ),
+            ("history", history_json(&handle)),
+        ];
+        if let Some(algo) = &spec.algo {
+            pairs.push(("algo", Json::str(algo.clone())));
+        }
+        if let Some(terminal) = handle.terminal() {
+            if let Some(e) = terminal.error {
+                pairs.push(("error", Json::str(e)));
+            }
+            if let Some(r) = terminal.residual {
+                pairs.push(("residual", Json::Number(r)));
+            }
+        }
+        return Response::json(200, &Json::object(pairs));
+    }
+    match state.recovered.get(&id) {
+        Some(job) => Response::json(200, &recovered_json(id, job)),
+        None => Response::error(404, &format!("unknown job {id}")),
+    }
+}
+
+fn cancel(state: &ServerState, id: u64) -> Response {
+    if let Some(handle) = state.service.job(id) {
+        let cancelled = handle.cancel();
+        return Response::json(
+            200,
+            &Json::object(vec![
+                ("id", Json::num(id as f64)),
+                ("cancelled", Json::Bool(cancelled)),
+                ("status", Json::str(handle.status().name())),
+            ]),
+        );
+    }
+    match state.recovered.get(&id) {
+        // Already terminal before the restart: nothing to cancel.
+        Some(job) => Response::json(
+            200,
+            &Json::object(vec![
+                ("id", Json::num(id as f64)),
+                ("cancelled", Json::Bool(false)),
+                ("status", Json::str(job.terminal.status.name())),
+            ]),
+        ),
+        None => Response::error(404, &format!("unknown job {id}")),
+    }
+}
+
+fn explain(state: &ServerState, id: u64) -> Response {
+    let Some(handle) = state.service.job(id) else {
+        return match state.recovered.get(&id) {
+            Some(_) => Response::error(404, &format!("job {id} finished before the last restart; its plan is not retained")),
+            None => Response::error(404, &format!("unknown job {id}")),
+        };
+    };
+    match handle.explain() {
+        Ok(text) => Response::json(
+            200,
+            &Json::object(vec![
+                ("id", Json::num(id as f64)),
+                ("explain", Json::str(text)),
+            ]),
+        ),
+        Err(e) => Response::error(500, &e.to_string()),
+    }
+}
+
+/// `GET /v1/jobs/:id/metrics`: the completed outcome's snapshot when
+/// terminal, the live scoped window while running.
+fn job_metrics(state: &ServerState, id: u64) -> Response {
+    let Some(handle) = state.service.job(id) else {
+        return match state.recovered.get(&id) {
+            Some(job) => Response::json(200, &recovered_json(id, job)),
+            None => Response::error(404, &format!("unknown job {id}")),
+        };
+    };
+    let snapshot = match handle.outcome() {
+        Some(outcome) => outcome.metrics,
+        None => handle.metrics(),
+    };
+    Response::json(
+        200,
+        &Json::object(vec![
+            ("id", Json::num(id as f64)),
+            ("status", Json::str(handle.status().name())),
+            ("methods", snapshot.to_json()),
+            (
+                "total_shuffle_stages",
+                Json::num(snapshot.total_shuffle_stages() as f64),
+            ),
+            (
+                "total_shuffle_bytes",
+                Json::num(snapshot.total_shuffle_bytes() as f64),
+            ),
+            (
+                "driver_collects",
+                Json::num(snapshot.driver_collects() as f64),
+            ),
+        ]),
+    )
+}
+
+/// `GET /v1/metrics`: the service-wide snapshot — cluster metrics plus
+/// plan-cache, value-lifecycle, retention and queue counters.
+fn global_metrics(state: &ServerState) -> Response {
+    let service = &state.service;
+    let m = service.metrics();
+    let plans = service.plan_cache_stats();
+    let cache = service.cache_stats();
+    Response::json(
+        200,
+        &Json::object(vec![
+            ("methods", m.to_json()),
+            ("total_shuffle_stages", Json::num(m.total_shuffle_stages() as f64)),
+            ("total_shuffle_bytes", Json::num(m.total_shuffle_bytes() as f64)),
+            ("driver_collects", Json::num(m.driver_collects() as f64)),
+            (
+                "retained_stage_records",
+                Json::num(m.retained_stage_records() as f64),
+            ),
+            (
+                "released_stage_records",
+                Json::num(m.released_stage_records() as f64),
+            ),
+            ("released_scopes", Json::num(m.released_scopes() as f64)),
+            (
+                "plan_cache",
+                Json::object(vec![
+                    ("entries", Json::num(plans.entries as f64)),
+                    ("hits", Json::num(plans.hits as f64)),
+                    ("misses", Json::num(plans.misses as f64)),
+                ]),
+            ),
+            (
+                "cache",
+                Json::object(vec![
+                    ("resident_bytes", Json::num(cache.resident_bytes as f64)),
+                    ("pinned_bytes", Json::num(cache.pinned_bytes as f64)),
+                    ("entries", Json::num(cache.entries as f64)),
+                    ("evictions", Json::num(cache.evictions as f64)),
+                    ("evicted_bytes", Json::num(cache.evicted_bytes as f64)),
+                ]),
+            ),
+            ("queued_jobs", Json::num(service.queued_jobs() as f64)),
+            ("workers", Json::num(service.worker_count() as f64)),
+            ("generation", Json::num(state.generation as f64)),
+        ]),
+    )
+}
+
+/// Render one job event in the SSE `data:` JSON shape (shared with the
+/// stream writer).
+pub(crate) fn event_json(e: &crate::service::JobEvent) -> Json {
+    Json::object(vec![
+        ("job_id", Json::num(e.job_id as f64)),
+        ("seq", Json::num(e.seq as f64)),
+        ("status", Json::str(e.status.name())),
+        ("ts_ms", Json::num(e.ts_ms as f64)),
+    ])
+}
+
+/// Synthetic terminal event JSON for jobs recovered from the log (their
+/// live event history did not survive the restart).
+pub(crate) fn recovered_event_json(id: u64, status: JobStatus) -> Json {
+    Json::object(vec![
+        ("job_id", Json::num(id as f64)),
+        ("status", Json::str(status.name())),
+        ("recovered", Json::Bool(true)),
+    ])
+}

@@ -1,0 +1,131 @@
+//! A minimal blocking HTTP client for the job API, used by the CLI
+//! smoke path and the end-to-end tests (the build is offline, so the
+//! test suite brings its own client).
+//!
+//! One request per connection, mirroring the server's
+//! `Connection: close` model: connect, write, read to EOF, parse.
+
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::TcpStream;
+
+use crate::error::{Result, SpinError};
+use crate::ser::json::Json;
+
+/// Client for one server address (`host:port`).
+#[derive(Debug, Clone)]
+pub struct HttpClient {
+    addr: String,
+}
+
+impl HttpClient {
+    pub fn new(addr: impl Into<String>) -> Self {
+        HttpClient { addr: addr.into() }
+    }
+
+    /// `GET path` → (status, parsed JSON body).
+    pub fn get(&self, path: &str) -> Result<(u16, Json)> {
+        self.request("GET", path, None)
+    }
+
+    /// `POST path` with an optional JSON body → (status, parsed body).
+    pub fn post(&self, path: &str, body: Option<&Json>) -> Result<(u16, Json)> {
+        self.request("POST", path, body)
+    }
+
+    fn request(&self, method: &str, path: &str, body: Option<&Json>) -> Result<(u16, Json)> {
+        let mut stream = TcpStream::connect(&self.addr)?;
+        let payload = body.map(|b| b.compact()).unwrap_or_default();
+        write!(
+            stream,
+            "{method} {path} HTTP/1.1\r\nHost: {}\r\nContent-Length: {}\r\nConnection: close\r\n\r\n{payload}",
+            self.addr,
+            payload.len()
+        )?;
+        stream.flush()?;
+        let mut raw = String::new();
+        stream.take(16 << 20).read_to_string(&mut raw)?;
+        Self::parse_response(&raw)
+    }
+
+    fn parse_response(raw: &str) -> Result<(u16, Json)> {
+        let Some((head, body)) = raw.split_once("\r\n\r\n") else {
+            return Err(SpinError::config(format!(
+                "malformed HTTP response: {raw:?}"
+            )));
+        };
+        let status_line = head.lines().next().unwrap_or("");
+        let status = status_line
+            .split_whitespace()
+            .nth(1)
+            .and_then(|s| s.parse::<u16>().ok())
+            .ok_or_else(|| {
+                SpinError::config(format!("malformed HTTP status line: {status_line:?}"))
+            })?;
+        let json = if body.trim().is_empty() {
+            Json::Null
+        } else {
+            Json::parse(body)?
+        };
+        Ok((status, json))
+    }
+
+    /// Open `path` as a server-sent-event stream and read it to the
+    /// `end` event (or EOF), returning `(event_name, data)` pairs.
+    /// Heartbeat comment lines are counted but not returned.
+    pub fn follow_events(&self, path: &str) -> Result<Vec<(String, Json)>> {
+        let mut stream = TcpStream::connect(&self.addr)?;
+        write!(
+            stream,
+            "GET {path} HTTP/1.1\r\nHost: {}\r\nAccept: text/event-stream\r\nConnection: close\r\n\r\n",
+            self.addr
+        )?;
+        stream.flush()?;
+        let mut reader = BufReader::new(stream);
+        // Status line + headers.
+        let mut line = String::new();
+        reader.read_line(&mut line)?;
+        if !line.contains("200") {
+            return Err(SpinError::config(format!(
+                "event stream refused: {}",
+                line.trim()
+            )));
+        }
+        loop {
+            let mut header = String::new();
+            if reader.read_line(&mut header)? == 0 || header.trim_end().is_empty() {
+                break;
+            }
+        }
+        // Frames: `event:` + `data:` lines separated by blank lines.
+        let mut events = Vec::new();
+        let mut name = String::new();
+        let mut data = String::new();
+        loop {
+            let mut line = String::new();
+            if reader.read_line(&mut line)? == 0 {
+                break; // EOF mid-stream (e.g. server shutdown)
+            }
+            let line = line.trim_end();
+            if let Some(rest) = line.strip_prefix("event:") {
+                name = rest.trim().to_string();
+            } else if let Some(rest) = line.strip_prefix("data:") {
+                data = rest.trim().to_string();
+            } else if line.starts_with(':') {
+                continue; // heartbeat comment
+            } else if line.is_empty() && !name.is_empty() {
+                let parsed = if data.is_empty() {
+                    Json::Null
+                } else {
+                    Json::parse(&data)?
+                };
+                let done = name == "end";
+                events.push((std::mem::take(&mut name), parsed));
+                data.clear();
+                if done {
+                    break;
+                }
+            }
+        }
+        Ok(events)
+    }
+}

@@ -1,0 +1,200 @@
+//! HTTP front door for the job service: a minimal hand-rolled HTTP/1.1
+//! server over `std::net` (the build is offline — no framework deps)
+//! that exposes [`crate::service::SpinService`] to network clients.
+//!
+//! Endpoints (see `docs/HTTP_API.md` for curl examples):
+//!
+//! | Method + path                | Purpose                                 |
+//! |------------------------------|-----------------------------------------|
+//! | `POST /v1/jobs`              | submit a [`JobSpec`] JSON → job id      |
+//! | `GET  /v1/jobs/:id`          | status + terminal outcome summary       |
+//! | `POST /v1/jobs/:id/cancel`   | cancel a still-queued job               |
+//! | `GET  /v1/jobs/:id/explain`  | optimized plan rendering                |
+//! | `GET  /v1/jobs/:id/metrics`  | per-job metrics snapshot                |
+//! | `GET  /v1/jobs/:id/events`   | phase transitions as server-sent events |
+//! | `GET  /v1/metrics`           | service-wide metrics snapshot           |
+//! | `GET  /v1/healthz`           | liveness probe                          |
+//!
+//! The server pairs with the durable job log
+//! ([`crate::store::joblog`]): submits are fsynced before the id is
+//! acknowledged, terminals before they are observable, and
+//! `spin serve --http` replays the log at startup — still-pending jobs
+//! re-enqueue under their original ids (resubmit is idempotent by id)
+//! and already-terminal jobs are answered from the log without
+//! re-execution.
+//!
+//! Connection model: one request per connection (`Connection: close`),
+//! a detached thread per connection, and a nonblocking accept loop that
+//! polls a shutdown flag — no event loop, no unsafe, no dependencies.
+//! SSE connections stay open, streaming until the job's terminal event.
+
+mod api;
+pub mod client;
+mod sse;
+mod wire;
+
+pub use client::HttpClient;
+pub use wire::{Request, Response};
+
+use std::collections::BTreeMap;
+use std::io::BufReader;
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::thread;
+use std::time::Duration;
+
+use crate::config::HttpConfig;
+use crate::error::Result;
+use crate::service::{JobSpec, SpinService, TerminalSummary};
+
+/// How often the accept loop re-checks the shutdown flag while idle.
+const ACCEPT_POLL: Duration = Duration::from_millis(25);
+
+/// Per-connection read timeout: a client that connects and goes silent
+/// releases its thread instead of pinning it forever.
+const READ_TIMEOUT: Duration = Duration::from_secs(30);
+
+/// A job that was already terminal in the job log at startup: served
+/// from the log (status, idempotent resubmit, SSE terminal replay)
+/// without re-execution.
+#[derive(Debug, Clone)]
+pub struct RecoveredJob {
+    pub spec: JobSpec,
+    pub terminal: TerminalSummary,
+}
+
+/// Everything a request handler can reach: the service, the wire
+/// limits, and the jobs recovered terminal from the log at startup.
+pub struct ServerState {
+    pub service: SpinService,
+    pub config: HttpConfig,
+    /// Terminal jobs recovered from the job log, by id. Read-only after
+    /// startup.
+    pub recovered: BTreeMap<u64, RecoveredJob>,
+    /// Job-log generation of this server start (0 = no durable log).
+    pub generation: u64,
+}
+
+impl ServerState {
+    pub fn new(service: SpinService, config: HttpConfig) -> Self {
+        ServerState {
+            service,
+            config,
+            recovered: BTreeMap::new(),
+            generation: 0,
+        }
+    }
+}
+
+/// The listening server: an accept thread plus detached per-connection
+/// handlers. Dropping it (or calling [`HttpServer::shutdown`]) stops
+/// accepting; established SSE streams run to their terminal event.
+pub struct HttpServer {
+    addr: SocketAddr,
+    state: Arc<ServerState>,
+    stop: Arc<AtomicBool>,
+    accept: Option<thread::JoinHandle<()>>,
+}
+
+impl HttpServer {
+    /// Bind `state.config.listen` and start accepting. Port 0 binds an
+    /// ephemeral port — read the real one from
+    /// [`local_addr`](HttpServer::local_addr).
+    pub fn bind(state: ServerState) -> Result<HttpServer> {
+        state.config.validate()?;
+        let listener = TcpListener::bind(&state.config.listen)?;
+        let addr = listener.local_addr()?;
+        listener.set_nonblocking(true)?;
+        let state = Arc::new(state);
+        let stop = Arc::new(AtomicBool::new(false));
+        let accept = {
+            let state = Arc::clone(&state);
+            let stop = Arc::clone(&stop);
+            thread::Builder::new()
+                .name("spin-http-accept".to_string())
+                .spawn(move || accept_loop(listener, state, stop))
+                .expect("spawn http accept thread")
+        };
+        Ok(HttpServer {
+            addr,
+            state,
+            stop,
+            accept: Some(accept),
+        })
+    }
+
+    /// The actually-bound address (resolves an ephemeral port 0).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    pub fn state(&self) -> &Arc<ServerState> {
+        &self.state
+    }
+
+    pub fn service(&self) -> &SpinService {
+        &self.state.service
+    }
+
+    /// Stop accepting new connections and join the accept thread.
+    /// Established connections (including SSE streams) finish on their
+    /// own; pair with [`SpinService::wait_idle`] for a graceful drain.
+    pub fn shutdown(&mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        if let Some(handle) = self.accept.take() {
+            let _ = handle.join();
+        }
+    }
+}
+
+impl Drop for HttpServer {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+fn accept_loop(listener: TcpListener, state: Arc<ServerState>, stop: Arc<AtomicBool>) {
+    loop {
+        if stop.load(Ordering::SeqCst) {
+            return;
+        }
+        match listener.accept() {
+            Ok((stream, _)) => {
+                let state = Arc::clone(&state);
+                let _ = thread::Builder::new()
+                    .name("spin-http-conn".to_string())
+                    .spawn(move || handle_connection(stream, state));
+            }
+            // Nonblocking accept: idle (or transient error) → poll the
+            // shutdown flag at a human-invisible cadence.
+            Err(_) => thread::sleep(ACCEPT_POLL),
+        }
+    }
+}
+
+fn handle_connection(stream: TcpStream, state: Arc<ServerState>) {
+    let _ = stream.set_nonblocking(false);
+    let _ = stream.set_read_timeout(Some(READ_TIMEOUT));
+    let Ok(read_half) = stream.try_clone() else {
+        return;
+    };
+    let mut reader = BufReader::new(read_half);
+    let mut stream = stream;
+    let request = match Request::read(&mut reader, state.config.max_body_bytes) {
+        Ok(Some(request)) => request,
+        Ok(None) => return, // clean close before a request
+        Err(response) => {
+            let _ = response.write(&mut stream);
+            return;
+        }
+    };
+    match api::route(&state, &request) {
+        api::Reply::Plain(response) => {
+            let _ = response.write(&mut stream);
+        }
+        api::Reply::EventStream { job_id } => {
+            let _ = sse::stream_events(stream, &state, job_id);
+        }
+    }
+}

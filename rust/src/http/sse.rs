@@ -1,0 +1,108 @@
+//! Server-sent-event streaming of job phase transitions.
+//!
+//! Wire shape per event:
+//!
+//! ```text
+//! event: phase
+//! data: {"job_id":7,"seq":12,"status":"running","ts_ms":1754600000000}
+//! ```
+//!
+//! The stream replays the job's full history first (subscribe happens
+//! *before* the snapshot so no transition can fall between them; the
+//! writer dedups by `seq`), then follows live events until the terminal
+//! transition, closing with an `event: end`. While idle it emits
+//! `: heartbeat` comment lines every `sse_heartbeat_ms` so proxies and
+//! clients can distinguish "still running" from "connection died".
+
+use std::io::Write;
+use std::net::TcpStream;
+use std::sync::mpsc::RecvTimeoutError;
+use std::sync::Arc;
+use std::time::Duration;
+
+use crate::service::JobEvent;
+
+use super::api::{event_json, recovered_event_json};
+use super::ServerState;
+
+fn write_headers(stream: &mut TcpStream) -> std::io::Result<()> {
+    write!(
+        stream,
+        "HTTP/1.1 200 OK\r\nContent-Type: text/event-stream\r\nCache-Control: no-cache\r\nConnection: close\r\n\r\n"
+    )?;
+    stream.flush()
+}
+
+fn write_event(stream: &mut TcpStream, event: &JobEvent) -> std::io::Result<()> {
+    writeln!(
+        stream,
+        "event: phase\ndata: {}\n",
+        event_json(event).compact()
+    )?;
+    stream.flush()
+}
+
+fn write_end(stream: &mut TcpStream, job_id: u64) -> std::io::Result<()> {
+    writeln!(stream, "event: end\ndata: {{\"job_id\":{job_id}}}\n")?;
+    stream.flush()
+}
+
+pub(crate) fn stream_events(
+    mut stream: TcpStream,
+    state: &Arc<ServerState>,
+    job_id: u64,
+) -> std::io::Result<()> {
+    // SSE streams may legitimately idle far longer than a request read;
+    // the heartbeat keeps the connection visibly alive instead.
+    let _ = stream.set_read_timeout(None);
+    write_headers(&mut stream)?;
+
+    // A job that was already terminal before the last restart has no
+    // live event history: replay its terminal status from the log.
+    if state.service.job(job_id).is_none() {
+        if let Some(recovered) = state.recovered.get(&job_id) {
+            writeln!(
+                stream,
+                "event: phase\ndata: {}\n",
+                recovered_event_json(job_id, recovered.terminal.status).compact()
+            )?;
+            return write_end(&mut stream, job_id);
+        }
+        // Routed here but evicted since: close with an end event.
+        return write_end(&mut stream, job_id);
+    }
+
+    let (history, rx) = state.service.subscribe(Some(job_id));
+    let mut last_seq = 0u64;
+    for event in &history {
+        write_event(&mut stream, event)?;
+        last_seq = event.seq;
+        if event.status.is_terminal() {
+            return write_end(&mut stream, job_id);
+        }
+    }
+    let heartbeat = Duration::from_millis(state.config.sse_heartbeat_ms.max(1));
+    loop {
+        match rx.recv_timeout(heartbeat) {
+            Ok(event) => {
+                // The subscription was registered before the history
+                // snapshot, so events already replayed above come
+                // through again — drop them by sequence number.
+                if event.seq <= last_seq {
+                    continue;
+                }
+                write_event(&mut stream, &event)?;
+                last_seq = event.seq;
+                if event.status.is_terminal() {
+                    return write_end(&mut stream, job_id);
+                }
+            }
+            Err(RecvTimeoutError::Timeout) => {
+                stream.write_all(b": heartbeat\n\n")?;
+                stream.flush()?;
+            }
+            // Service dropped (shutdown): the stream cannot progress.
+            Err(RecvTimeoutError::Disconnected) => return write_end(&mut stream, job_id),
+        }
+    }
+}

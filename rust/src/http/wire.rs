@@ -1,0 +1,192 @@
+//! HTTP/1.1 wire format: request parsing and response writing, scoped
+//! to exactly what the job API needs (no chunked bodies, no keep-alive
+//! — every response carries `Connection: close`).
+
+use std::io::{BufRead, Read, Write};
+
+use crate::ser::json::Json;
+
+/// One parsed request: method, path and the (possibly empty) body.
+#[derive(Debug)]
+pub struct Request {
+    pub method: String,
+    pub path: String,
+    pub body: Vec<u8>,
+}
+
+impl Request {
+    /// Read one request off the connection. `Ok(None)` = the peer closed
+    /// before sending anything; `Err(response)` = a malformed or
+    /// oversized request, with the error response to send back.
+    pub fn read(
+        reader: &mut impl BufRead,
+        max_body: usize,
+    ) -> std::result::Result<Option<Request>, Response> {
+        let mut line = String::new();
+        match reader.read_line(&mut line) {
+            Ok(0) => return Ok(None),
+            Ok(_) => {}
+            Err(_) => return Err(Response::error(400, "malformed request line")),
+        }
+        let mut parts = line.split_whitespace();
+        let (Some(method), Some(path), Some(version)) =
+            (parts.next(), parts.next(), parts.next())
+        else {
+            return Err(Response::error(400, "malformed request line"));
+        };
+        if !version.starts_with("HTTP/1.") {
+            return Err(Response::error(505, "only HTTP/1.x is supported"));
+        }
+        let method = method.to_string();
+        let path = path.to_string();
+        let mut content_length = 0usize;
+        loop {
+            let mut header = String::new();
+            match reader.read_line(&mut header) {
+                Ok(0) => return Err(Response::error(400, "connection closed mid-headers")),
+                Ok(_) => {}
+                Err(_) => return Err(Response::error(400, "unreadable header")),
+            }
+            let header = header.trim_end();
+            if header.is_empty() {
+                break;
+            }
+            let Some((name, value)) = header.split_once(':') else {
+                return Err(Response::error(400, "malformed header"));
+            };
+            if name.eq_ignore_ascii_case("content-length") {
+                content_length = match value.trim().parse::<usize>() {
+                    Ok(n) => n,
+                    Err(_) => return Err(Response::error(400, "bad Content-Length")),
+                };
+            }
+        }
+        if content_length > max_body {
+            return Err(Response::error(
+                413,
+                &format!("request body exceeds {max_body} bytes"),
+            ));
+        }
+        let mut body = vec![0u8; content_length];
+        if reader.read_exact(&mut body).is_err() {
+            return Err(Response::error(400, "connection closed mid-body"));
+        }
+        Ok(Some(Request { method, path, body }))
+    }
+
+    /// Path split into non-empty segments: `/v1/jobs/7` → `["v1",
+    /// "jobs", "7"]` (any query string is dropped).
+    pub fn segments(&self) -> Vec<&str> {
+        self.path
+            .split('?')
+            .next()
+            .unwrap_or("")
+            .split('/')
+            .filter(|s| !s.is_empty())
+            .collect()
+    }
+}
+
+/// One response, always fully buffered (SSE bypasses this type and
+/// writes its stream directly).
+#[derive(Debug)]
+pub struct Response {
+    pub status: u16,
+    pub content_type: &'static str,
+    pub body: Vec<u8>,
+}
+
+impl Response {
+    pub fn json(status: u16, value: &Json) -> Response {
+        Response {
+            status,
+            content_type: "application/json",
+            body: value.compact().into_bytes(),
+        }
+    }
+
+    /// `{"error": msg}` with the given status.
+    pub fn error(status: u16, msg: &str) -> Response {
+        Response::json(status, &Json::object(vec![("error", Json::str(msg))]))
+    }
+
+    pub fn reason(status: u16) -> &'static str {
+        match status {
+            200 => "OK",
+            202 => "Accepted",
+            400 => "Bad Request",
+            404 => "Not Found",
+            405 => "Method Not Allowed",
+            409 => "Conflict",
+            413 => "Payload Too Large",
+            500 => "Internal Server Error",
+            503 => "Service Unavailable",
+            505 => "HTTP Version Not Supported",
+            _ => "Unknown",
+        }
+    }
+
+    pub fn write(&self, w: &mut impl Write) -> std::io::Result<()> {
+        write!(
+            w,
+            "HTTP/1.1 {} {}\r\nContent-Type: {}\r\nContent-Length: {}\r\nConnection: close\r\n\r\n",
+            self.status,
+            Response::reason(self.status),
+            self.content_type,
+            self.body.len()
+        )?;
+        w.write_all(&self.body)?;
+        w.flush()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::BufReader;
+
+    fn parse(raw: &str, max_body: usize) -> std::result::Result<Option<Request>, Response> {
+        Request::read(&mut BufReader::new(raw.as_bytes()), max_body)
+    }
+
+    #[test]
+    fn parses_request_with_body() {
+        let raw = "POST /v1/jobs HTTP/1.1\r\nHost: x\r\nContent-Length: 4\r\n\r\nabcd";
+        let req = parse(raw, 1024).unwrap().unwrap();
+        assert_eq!(req.method, "POST");
+        assert_eq!(req.segments(), vec!["v1", "jobs"]);
+        assert_eq!(req.body, b"abcd");
+    }
+
+    #[test]
+    fn parses_bodyless_get_and_query_strings() {
+        let raw = "GET /v1/jobs/7/events?x=1 HTTP/1.0\r\n\r\n";
+        let req = parse(raw, 1024).unwrap().unwrap();
+        assert_eq!(req.segments(), vec!["v1", "jobs", "7", "events"]);
+        assert!(req.body.is_empty());
+    }
+
+    #[test]
+    fn rejects_oversized_and_malformed() {
+        let raw = "POST / HTTP/1.1\r\nContent-Length: 999\r\n\r\n";
+        assert_eq!(parse(raw, 10).unwrap_err().status, 413);
+        assert_eq!(parse("garbage\r\n\r\n", 10).unwrap_err().status, 400);
+        let raw = "GET / SPDY/3\r\n\r\n";
+        assert_eq!(parse(raw, 10).unwrap_err().status, 505);
+        // Truncated body.
+        let raw = "POST / HTTP/1.1\r\nContent-Length: 8\r\n\r\nabc";
+        assert_eq!(parse(raw, 10).unwrap_err().status, 400);
+        // Clean EOF before any request.
+        assert!(parse("", 10).unwrap().is_none());
+    }
+
+    #[test]
+    fn response_renders_status_line_and_length() {
+        let mut out = Vec::new();
+        Response::error(404, "nope").write(&mut out).unwrap();
+        let text = String::from_utf8(out).unwrap();
+        assert!(text.starts_with("HTTP/1.1 404 Not Found\r\n"), "{text}");
+        assert!(text.contains("Content-Length: 16"), "{text}");
+        assert!(text.ends_with("{\"error\":\"nope\"}"), "{text}");
+    }
+}

@@ -4,14 +4,53 @@
 //! Apache Spark* (Misra et al., ICDCN '18) as a three-layer Rust + JAX +
 //! Pallas system.
 //!
-//! ## Public API: the job service over sessions and lazy plans
+//! ## Public API: an HTTP job server over the service layer
 //!
-//! The front door for serving many callers is [`service::SpinService`]:
-//! an async, multi-tenant job layer. Callers `submit()` workloads
-//! described by a serializable [`service::JobSpec`] (invert / solve /
-//! multiply / pseudo-inverse over parameter-described matrices) and get a
-//! [`service::JobHandle`] back immediately — poll `status()`, block on
-//! `wait()`, `cancel()` while queued, read per-job `metrics()`, or
+//! The network front door is the [`http`] module: `spin serve --http
+//! ADDR --store DIR` runs a dependency-free HTTP/1.1 server (hand-rolled
+//! over `std::net` — the build is offline) exposing the job service.
+//! Submit a JSON [`service::JobSpec`] to `POST /v1/jobs`, poll
+//! `GET /v1/jobs/:id`, follow phase transitions live over server-sent
+//! events at `GET /v1/jobs/:id/events`, and scrape `GET /v1/metrics`.
+//! With `--store DIR` every submit and terminal outcome is fsynced to an
+//! append-only job log before it becomes observable, and a restart
+//! replays the log: jobs still pending resume under their original ids,
+//! finished jobs answer from the log without re-execution, and resubmits
+//! are idempotent by id. See `docs/HTTP_API.md` for the wire format.
+//!
+//! ```no_run
+//! use spin::config::HttpConfig;
+//! use spin::http::{HttpClient, HttpServer, ServerState};
+//! use spin::service::SpinService;
+//!
+//! fn main() -> spin::Result<()> {
+//!     // In production use `spin serve --http 127.0.0.1:8017 --store jobs/`;
+//!     // embedding the server in-process works the same way:
+//!     let service = SpinService::builder().cores(4).workers(2).build()?;
+//!     let config = HttpConfig { listen: "127.0.0.1:0".into(), ..HttpConfig::default() };
+//!     let server = HttpServer::bind(ServerState::new(service, config))?;
+//!
+//!     let client = HttpClient::new(server.local_addr().to_string());
+//!     let spec = spin::ser::json::Json::parse(
+//!         r#"{"kind":"invert","tenant":"alice","matrix":{"n":256,"block_size":64,"seed":7}}"#,
+//!     )?;
+//!     let (status, reply) = client.post("/v1/jobs", Some(&spec))?;
+//!     assert_eq!(status, 202); // fsynced durable before the id is issued
+//!     let id = reply.req("id")?.as_i64().unwrap();
+//!     // Streams queued → running → done, then an `end` event.
+//!     for (event, data) in client.follow_events(&format!("/v1/jobs/{id}/events"))? {
+//!         println!("{event}: {}", data.compact());
+//!     }
+//!     Ok(())
+//! }
+//! ```
+//!
+//! Underneath sits [`service::SpinService`]: an async, multi-tenant job
+//! layer. Callers `submit()` workloads described by a serializable
+//! [`service::JobSpec`] (invert / solve / multiply / pseudo-inverse over
+//! parameter-described matrices) and get a [`service::JobHandle`] back
+//! immediately — poll `status()`, block on `wait()`, `cancel()` while
+//! queued, read per-job `metrics()`, subscribe to phase events, or
 //! `explain()` the optimized plan. A fair-share scheduler drains a
 //! bounded queue round-robin across tenants onto worker threads, and a
 //! **cross-job plan cache** interns structurally-equal plan subtrees so
@@ -107,6 +146,7 @@ pub mod config;
 pub mod costmodel;
 pub mod error;
 pub mod experiments;
+pub mod http;
 pub mod linalg;
 pub mod plan;
 pub mod runtime;
@@ -116,7 +156,8 @@ pub mod session;
 pub mod store;
 pub mod util;
 
-pub use config::{ClusterConfig, JobConfig};
+pub use config::{ClusterConfig, HttpConfig, JobConfig};
 pub use error::{Result, SpinError};
-pub use service::{JobHandle, JobSpec, JobStatus, MatrixSpec, SpinService};
+pub use http::{HttpClient, HttpServer, ServerState};
+pub use service::{JobEvent, JobHandle, JobSpec, JobStatus, MatrixSpec, SpinService, TerminalSummary};
 pub use session::{AlgorithmRegistry, DistMatrix, InversionAlgorithm, SessionBuilder, SpinSession};

@@ -36,6 +36,25 @@ impl Json {
             .ok_or_else(|| SpinError::config(format!("missing required key `{key}`")))
     }
 
+    /// Strict-deserialization guard: errors if this object holds a key
+    /// outside `known`, naming the offending key and the accepted set so
+    /// a client typo fails at parse time instead of silently running
+    /// defaults. Non-objects pass (their shape errors surface elsewhere).
+    pub fn check_known_keys(&self, context: &str, known: &[&str]) -> Result<()> {
+        let Json::Object(map) = self else {
+            return Ok(());
+        };
+        for key in map.keys() {
+            if !known.contains(&key.as_str()) {
+                return Err(SpinError::config(format!(
+                    "unknown {context} key `{key}` (expected one of: {})",
+                    known.join(", ")
+                )));
+            }
+        }
+        Ok(())
+    }
+
     pub fn as_f64(&self) -> Option<f64> {
         match self {
             Json::Number(x) => Some(*x),
@@ -494,6 +513,18 @@ mod tests {
     fn req_reports_missing_key() {
         let v = Json::parse("{}").unwrap();
         assert!(v.req("nope").is_err());
+    }
+
+    #[test]
+    fn check_known_keys_names_the_offender() {
+        let v = Json::parse(r#"{"n": 4, "blocksize": 2}"#).unwrap();
+        let err = v.check_known_keys("matrix", &["n", "block_size"]).unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains("`blocksize`"), "{msg}");
+        assert!(msg.contains("block_size"), "{msg}");
+        v.check_known_keys("matrix", &["n", "blocksize"]).unwrap();
+        // Non-objects pass: their shape errors surface elsewhere.
+        Json::Number(1.0).check_known_keys("x", &[]).unwrap();
     }
 
     #[test]

@@ -42,6 +42,16 @@
 //!   generator or algorithm fails *its* job (`Failed`, with the panic
 //!   message) while the workers, locks, and queue keep serving.
 //!
+//! The service also exposes the seams the HTTP front door
+//! ([`crate::http`]) builds on: a phase-transition **event bus**
+//! ([`SpinService::subscribe`], [`JobHandle::history`]) publishing
+//! `queued → running → completed/failed/cancelled` with timestamps, an
+//! **id-stable submit** ([`SpinService::submit_with_id`], idempotent by
+//! job id), and an optional **durable job log**
+//! ([`ServiceBuilder::job_log`]) that fsyncs every submit and terminal
+//! before it becomes visible, so a restarted server resumes exactly the
+//! jobs that were in flight.
+//!
 //! ```no_run
 //! use spin::service::{JobSpec, MatrixSpec, SpinService};
 //!
@@ -68,9 +78,10 @@ mod spec;
 pub use cache::{PlanCache, PlanCacheStats};
 pub use spec::{JobKind, JobSpec, MatrixSpec};
 
+use std::collections::BTreeMap;
 use std::panic::{self, AssertUnwindSafe};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::{Arc, Condvar, Mutex};
+use std::sync::{mpsc, Arc, Condvar, Mutex};
 use std::thread;
 
 use crate::cluster::{Metrics, MetricsSnapshot};
@@ -79,7 +90,8 @@ use crate::error::{Result, SpinError};
 use crate::linalg::{inverse_residual, Matrix};
 use crate::plan::{CacheStats, MatExpr};
 use crate::session::{SessionBuilder, SpinSession};
-use crate::util::{plock, pwait};
+use crate::store::joblog::JobLog;
+use crate::util::{now_ms, plock, pwait};
 
 use scheduler::FairShareQueue;
 
@@ -104,6 +116,61 @@ pub enum JobStatus {
     Cancelled,
 }
 
+impl JobStatus {
+    /// Stable wire name — HTTP status JSON, SSE events, job-log records.
+    pub fn name(&self) -> &'static str {
+        match self {
+            JobStatus::Queued => "queued",
+            JobStatus::Running => "running",
+            JobStatus::Completed => "completed",
+            JobStatus::Failed => "failed",
+            JobStatus::Cancelled => "cancelled",
+        }
+    }
+
+    /// Inverse of [`name`](JobStatus::name) (job-log replay).
+    pub fn parse(s: &str) -> Result<JobStatus> {
+        Ok(match s {
+            "queued" => JobStatus::Queued,
+            "running" => JobStatus::Running,
+            "completed" => JobStatus::Completed,
+            "failed" => JobStatus::Failed,
+            "cancelled" => JobStatus::Cancelled,
+            other => {
+                return Err(SpinError::config(format!("unknown job status `{other}`")));
+            }
+        })
+    }
+
+    /// Completed, failed or cancelled — the phases a job never leaves.
+    pub fn is_terminal(&self) -> bool {
+        !matches!(self, JobStatus::Queued | JobStatus::Running)
+    }
+}
+
+/// One phase transition as published on the service event bus — what
+/// [`JobHandle::history`] records and the HTTP layer streams as SSE.
+#[derive(Debug, Clone)]
+pub struct JobEvent {
+    /// Global publication order, strictly increasing across the service.
+    /// Subscribers that merge a history snapshot with a live feed dedup
+    /// on this.
+    pub seq: u64,
+    pub job_id: u64,
+    pub status: JobStatus,
+    /// Wall-clock transition time, milliseconds since the Unix epoch.
+    pub ts_ms: u64,
+}
+
+/// Terminal outcome in summary form: what the status endpoint reports
+/// and what survives a restart for jobs recovered from the job log.
+#[derive(Debug, Clone)]
+pub struct TerminalSummary {
+    pub status: JobStatus,
+    pub error: Option<String>,
+    pub residual: Option<f64>,
+}
+
 /// What a finished job produced.
 #[derive(Debug, Clone)]
 pub struct JobOutcome {
@@ -125,6 +192,16 @@ enum Phase {
     Failed(String),
 }
 
+fn phase_status(phase: &Phase) -> JobStatus {
+    match phase {
+        Phase::Queued => JobStatus::Queued,
+        Phase::Running => JobStatus::Running,
+        Phase::Cancelled => JobStatus::Cancelled,
+        Phase::Completed(_) => JobStatus::Completed,
+        Phase::Failed(_) => JobStatus::Failed,
+    }
+}
+
 struct JobState {
     id: u64,
     spec: JobSpec,
@@ -135,6 +212,8 @@ struct JobState {
     residual_source: Option<MatExpr>,
     phase: Mutex<Phase>,
     cv: Condvar,
+    /// Phase transitions in publication order (see [`JobEvent`]).
+    history: Mutex<Vec<JobEvent>>,
 }
 
 /// Cheap, clonable reference to one submitted job.
@@ -156,12 +235,42 @@ impl JobHandle {
     }
 
     pub fn status(&self) -> JobStatus {
+        phase_status(&plock(&self.state.phase))
+    }
+
+    /// Phase-transition history so far, oldest first.
+    pub fn history(&self) -> Vec<JobEvent> {
+        plock(&self.state.history).clone()
+    }
+
+    /// The outcome, once the job has completed (`None` otherwise).
+    pub fn outcome(&self) -> Option<JobOutcome> {
         match &*plock(&self.state.phase) {
-            Phase::Queued => JobStatus::Queued,
-            Phase::Running => JobStatus::Running,
-            Phase::Cancelled => JobStatus::Cancelled,
-            Phase::Completed(_) => JobStatus::Completed,
-            Phase::Failed(_) => JobStatus::Failed,
+            Phase::Completed(o) => Some(o.clone()),
+            _ => None,
+        }
+    }
+
+    /// Terminal summary (status + error + residual) once the job has
+    /// reached a terminal phase (`None` while queued/running).
+    pub fn terminal(&self) -> Option<TerminalSummary> {
+        match &*plock(&self.state.phase) {
+            Phase::Completed(o) => Some(TerminalSummary {
+                status: JobStatus::Completed,
+                error: None,
+                residual: o.residual,
+            }),
+            Phase::Failed(msg) => Some(TerminalSummary {
+                status: JobStatus::Failed,
+                error: Some(msg.clone()),
+                residual: None,
+            }),
+            Phase::Cancelled => Some(TerminalSummary {
+                status: JobStatus::Cancelled,
+                error: None,
+                residual: None,
+            }),
+            Phase::Queued | Phase::Running => None,
         }
     }
 
@@ -218,7 +327,12 @@ impl JobHandle {
         *phase = Phase::Cancelled;
         drop(phase);
         drop(queue);
+        // An explicit cancel is a durable terminal: a restarted server
+        // must not resurrect the job.
+        self.inner
+            .log_terminal(id, JobStatus::Cancelled, None, None);
         self.state.cv.notify_all();
+        self.inner.publish(&self.state, JobStatus::Cancelled);
         true
     }
 
@@ -245,6 +359,19 @@ impl JobHandle {
     }
 }
 
+/// Terminal jobs retained in the service's job index (the HTTP status
+/// endpoint's lookup window). Beyond the cap the oldest terminal entries
+/// are forgotten — outstanding [`JobHandle`]s stay fully usable; only
+/// id-based lookup of long-finished jobs stops resolving.
+const JOB_RETENTION_CAP: usize = 256;
+
+/// One event-bus listener (see [`SpinService::subscribe`]).
+struct Subscriber {
+    /// `None` = all jobs.
+    job: Option<u64>,
+    tx: mpsc::Sender<JobEvent>,
+}
+
 struct ServiceInner {
     session: SpinSession,
     plans: PlanCache,
@@ -252,10 +379,18 @@ struct ServiceInner {
     work_cv: Condvar,
     shutdown: AtomicBool,
     next_job: AtomicU64,
+    /// Every job the service still remembers, by id — the authority for
+    /// id-stable resubmits and status-by-id lookups.
+    jobs: Mutex<BTreeMap<u64, Arc<JobState>>>,
+    subscribers: Mutex<Vec<Subscriber>>,
+    event_seq: AtomicU64,
+    /// Durable job log (`spin serve --http --store DIR`); `None` for
+    /// purely in-process services.
+    job_log: Option<Arc<JobLog>>,
 }
 
 impl ServiceInner {
-    fn submit(self: &Arc<Self>, spec: JobSpec) -> Result<JobHandle> {
+    fn submit(self: &Arc<Self>, spec: JobSpec, fixed_id: Option<u64>) -> Result<JobHandle> {
         if self.shutdown.load(Ordering::SeqCst) {
             return Err(SpinError::cluster("service is shutting down"));
         }
@@ -271,7 +406,17 @@ impl ServiceInner {
         self.session.registry().get(&algo)?;
         let (expr, residual_source) = self.build_plan(&spec, &algo)?;
         // Ids start at 1: scope 0 stays the ambient (non-job) scope.
-        let id = self.next_job.fetch_add(1, Ordering::Relaxed) + 1;
+        let id = match fixed_id {
+            Some(id) => {
+                if id == 0 {
+                    return Err(SpinError::config("job ids start at 1"));
+                }
+                // Keep auto-allocation above every externally fixed id.
+                self.next_job.fetch_max(id, Ordering::Relaxed);
+                id
+            }
+            None => self.next_job.fetch_add(1, Ordering::Relaxed) + 1,
+        };
         let state = Arc::new(JobState {
             id,
             spec,
@@ -279,13 +424,94 @@ impl ServiceInner {
             residual_source,
             phase: Mutex::new(Phase::Queued),
             cv: Condvar::new(),
+            history: Mutex::new(Vec::new()),
         });
-        plock(&self.queue).push(&state.spec.tenant, Arc::clone(&state))?;
+        {
+            // Register under the jobs lock: the index is the idempotency
+            // authority, so a concurrent resubmit of the same id cannot
+            // double-enqueue.
+            let mut jobs = plock(&self.jobs);
+            if let Some(existing) = jobs.get(&id) {
+                if existing.spec == state.spec {
+                    return Ok(JobHandle {
+                        state: Arc::clone(existing),
+                        inner: Arc::clone(self),
+                    });
+                }
+                return Err(SpinError::config(format!(
+                    "job {id} already exists with a different spec"
+                )));
+            }
+            jobs.insert(id, Arc::clone(&state));
+            if jobs.len() > JOB_RETENTION_CAP {
+                let excess = jobs.len() - JOB_RETENTION_CAP;
+                let evict: Vec<u64> = jobs
+                    .iter()
+                    .filter(|(_, j)| phase_status(&plock(&j.phase)).is_terminal())
+                    .map(|(&jid, _)| jid)
+                    .take(excess)
+                    .collect();
+                for jid in evict {
+                    jobs.remove(&jid);
+                }
+            }
+        }
+        // Durability before visibility: the submitted record must be on
+        // disk before the id is acknowledged or a worker can run the job.
+        if let Some(log) = &self.job_log {
+            if let Err(e) = log.record_submitted(id, &state.spec) {
+                plock(&self.jobs).remove(&id);
+                return Err(e);
+            }
+        }
+        self.publish(&state, JobStatus::Queued);
+        if let Err(e) = plock(&self.queue).push(&state.spec.tenant, Arc::clone(&state)) {
+            // Queue full: withdraw the job entirely. The log pairs the
+            // submitted record with a cancelled terminal so a restart
+            // does not resurrect a job the client saw rejected.
+            plock(&self.jobs).remove(&id);
+            *plock(&state.phase) = Phase::Cancelled;
+            let msg = e.to_string();
+            self.log_terminal(id, JobStatus::Cancelled, Some(&msg), None);
+            self.publish(&state, JobStatus::Cancelled);
+            return Err(e);
+        }
         self.work_cv.notify_one();
         Ok(JobHandle {
             state,
             inner: Arc::clone(self),
         })
+    }
+
+    /// Publish one phase transition: record it in the job's history and
+    /// fan it out to live subscribers (dead receivers are dropped).
+    /// Called with no service locks held except what `history` needs.
+    fn publish(&self, job: &JobState, status: JobStatus) {
+        let event = JobEvent {
+            seq: self.event_seq.fetch_add(1, Ordering::Relaxed) + 1,
+            job_id: job.id,
+            status,
+            ts_ms: now_ms(),
+        };
+        plock(&job.history).push(event.clone());
+        let mut subs = plock(&self.subscribers);
+        subs.retain(|s| {
+            if s.job.is_some_and(|id| id != event.job_id) {
+                return true;
+            }
+            s.tx.send(event.clone()).is_ok()
+        });
+    }
+
+    /// Append a terminal record to the durable job log, if one is
+    /// attached. A failing append degrades durability (a restart may
+    /// re-run the job) but must not fail the job itself.
+    fn log_terminal(&self, id: u64, status: JobStatus, error: Option<&str>, residual: Option<f64>) {
+        if let Some(log) = &self.job_log {
+            if let Err(e) = log.record_terminal(id, status, error, residual) {
+                log::warn!("job log append failed for job {id}: {e}");
+            }
+        }
     }
 
     /// Pop the next runnable job and claim its phase (`Queued` →
@@ -334,6 +560,7 @@ impl ServiceInner {
     /// serving: the panic is caught here, and every lock it may have
     /// poisoned on the way up is poison-tolerant (`util::plock`).
     fn run_job(&self, job: &Arc<JobState>) {
+        self.publish(job, JobStatus::Running);
         let outcome = {
             // Everything this job records on the shared cluster is tagged
             // with its id, so per-job windows stay exact under
@@ -347,14 +574,25 @@ impl ServiceInner {
         // JobOutcome. Release BEFORE the phase flips: a waiter woken by
         // wait() must observe the retention counters already settled.
         self.session.cluster().release_metrics_scope(job.id);
-        let mut phase = plock(&job.phase);
-        *phase = match outcome {
+        let terminal = match outcome {
             Ok(Ok(o)) => Phase::Completed(o),
             Ok(Err(e)) => Phase::Failed(e.to_string()),
             Err(payload) => Phase::Failed(format!("panicked: {}", panic_message(payload))),
         };
+        // Durability before visibility: the terminal record is fsynced
+        // before any waiter/poller can observe the flip, so a job a
+        // client saw finish never re-executes after a crash-restart.
+        let (status, error, residual) = match &terminal {
+            Phase::Completed(o) => (JobStatus::Completed, None, o.residual),
+            Phase::Failed(msg) => (JobStatus::Failed, Some(msg.clone()), None),
+            _ => unreachable!("run_job only produces completed/failed"),
+        };
+        self.log_terminal(job.id, status, error.as_deref(), residual);
+        let mut phase = plock(&job.phase);
+        *phase = terminal;
         drop(phase);
         job.cv.notify_all();
+        self.publish(job, status);
     }
 
     fn execute(&self, job: &JobState) -> Result<JobOutcome> {
@@ -418,6 +656,7 @@ pub struct ServiceBuilder {
     session: SessionBuilder,
     workers: usize,
     queue_capacity: usize,
+    job_log: Option<Arc<JobLog>>,
 }
 
 impl Default for ServiceBuilder {
@@ -426,6 +665,7 @@ impl Default for ServiceBuilder {
             session: SessionBuilder::default(),
             workers: 2,
             queue_capacity: 64,
+            job_log: None,
         }
     }
 }
@@ -469,6 +709,14 @@ impl ServiceBuilder {
         self
     }
 
+    /// Attach a durable [`JobLog`]: every accepted submit and every
+    /// terminal phase is fsynced to it before becoming visible, which is
+    /// what makes `spin serve --http` crash-restartable.
+    pub fn job_log(mut self, log: Arc<JobLog>) -> Self {
+        self.job_log = Some(log);
+        self
+    }
+
     pub fn build(self) -> Result<SpinService> {
         let session = self.session.build()?;
         let inner = Arc::new(ServiceInner {
@@ -478,6 +726,10 @@ impl ServiceBuilder {
             work_cv: Condvar::new(),
             shutdown: AtomicBool::new(false),
             next_job: AtomicU64::new(0),
+            jobs: Mutex::new(BTreeMap::new()),
+            subscribers: Mutex::new(Vec::new()),
+            event_seq: AtomicU64::new(0),
+            job_log: self.job_log,
         });
         let workers = (0..self.workers)
             .map(|i| {
@@ -514,7 +766,75 @@ impl SpinService {
     /// leaf (the cache key is unchanged). Fails fast on bad geometry,
     /// unknown algorithms, missing stores, or a saturated queue.
     pub fn submit(&self, spec: JobSpec) -> Result<JobHandle> {
-        self.inner.submit(spec)
+        self.inner.submit(spec, None)
+    }
+
+    /// [`submit`](SpinService::submit) under a caller-chosen job id — the
+    /// id-stable path HTTP resubmits and job-log replay use. Submitting
+    /// an id the service already knows is **idempotent**: the same spec
+    /// returns the existing job's handle (no second execution); a
+    /// different spec under a taken id is an error. Auto-allocated ids
+    /// always stay above every fixed id seen.
+    pub fn submit_with_id(&self, id: u64, spec: JobSpec) -> Result<JobHandle> {
+        self.inner.submit(spec, Some(id))
+    }
+
+    /// Look up a job the service still remembers by id. Retention is
+    /// bounded: past the cap the oldest *terminal* jobs are forgotten
+    /// (outstanding handles stay valid; only id lookup stops resolving).
+    pub fn job(&self, id: u64) -> Option<JobHandle> {
+        plock(&self.inner.jobs).get(&id).map(|state| JobHandle {
+            state: Arc::clone(state),
+            inner: Arc::clone(&self.inner),
+        })
+    }
+
+    /// Subscribe to phase-transition events — for one job, or all jobs
+    /// (`None`). Returns the history so far plus a live receiver. The
+    /// subscriber is registered *before* the history snapshot is taken,
+    /// so every event is in the snapshot or the live feed (possibly
+    /// both — dedup on [`JobEvent::seq`]); none can fall between.
+    pub fn subscribe(&self, job: Option<u64>) -> (Vec<JobEvent>, mpsc::Receiver<JobEvent>) {
+        let (tx, rx) = mpsc::channel();
+        plock(&self.inner.subscribers).push(Subscriber { job, tx });
+        let mut history: Vec<JobEvent> = {
+            let jobs = plock(&self.inner.jobs);
+            match job {
+                Some(id) => jobs
+                    .get(&id)
+                    .map(|j| plock(&j.history).clone())
+                    .unwrap_or_default(),
+                None => jobs
+                    .values()
+                    .flat_map(|j| plock(&j.history).clone())
+                    .collect(),
+            }
+        };
+        history.sort_by_key(|e| e.seq);
+        (history, rx)
+    }
+
+    /// Block until no remembered job is queued or running — the graceful
+    /// drain behind ctrl-c on `spin serve --http`. The caller must have
+    /// stopped submitting (or have workers running) or this never
+    /// returns.
+    pub fn wait_idle(&self) {
+        loop {
+            let pending: Vec<Arc<JobState>> = plock(&self.inner.jobs)
+                .values()
+                .filter(|j| !phase_status(&plock(&j.phase)).is_terminal())
+                .cloned()
+                .collect();
+            if pending.is_empty() {
+                return;
+            }
+            for job in pending {
+                let mut phase = plock(&job.phase);
+                while !phase_status(&phase).is_terminal() {
+                    phase = pwait(&job.cv, phase);
+                }
+            }
+        }
     }
 
     /// Run queued jobs on the calling thread until the queue is empty;
@@ -564,7 +884,10 @@ impl SpinService {
 impl Drop for SpinService {
     fn drop(&mut self) {
         self.inner.shutdown.store(true, Ordering::SeqCst);
-        // Abandon still-queued jobs so their waiters unblock.
+        // Abandon still-queued jobs so their waiters unblock. This is
+        // deliberately NOT logged as terminal: a shutdown-abandoned job
+        // was never finished, so a restarted server re-enqueues it from
+        // the durable log.
         let abandoned = plock(&self.inner.queue).drain();
         for job in abandoned {
             let mut phase = plock(&job.phase);
@@ -573,6 +896,7 @@ impl Drop for SpinService {
             }
             drop(phase);
             job.cv.notify_all();
+            self.inner.publish(&job, JobStatus::Cancelled);
         }
         self.inner.work_cv.notify_all();
         for worker in self.workers.drain(..) {
@@ -1017,6 +1341,133 @@ mod tests {
             }
             assert_eq!(service.queued_jobs(), 0);
         }
+    }
+
+    #[test]
+    fn events_record_phase_transitions_in_order() {
+        let service = sync_service();
+        let (history, rx) = service.subscribe(None);
+        assert!(history.is_empty());
+        let h = service
+            .submit(JobSpec::invert(MatrixSpec::new(16, 4).seeded(3)))
+            .unwrap();
+        service.run_pending();
+        h.wait().unwrap();
+        let statuses: Vec<JobStatus> = h.history().iter().map(|e| e.status).collect();
+        assert_eq!(
+            statuses,
+            vec![JobStatus::Queued, JobStatus::Running, JobStatus::Completed]
+        );
+        // Seqs strictly increase and timestamps are populated.
+        let seqs: Vec<u64> = h.history().iter().map(|e| e.seq).collect();
+        assert!(seqs.windows(2).all(|w| w[0] < w[1]), "{seqs:?}");
+        assert!(h.history().iter().all(|e| e.ts_ms > 0));
+        // The live subscriber saw the same three events.
+        let live: Vec<JobStatus> = rx.try_iter().map(|e| e.status).collect();
+        assert_eq!(live, statuses);
+        // Cancelled jobs publish a cancelled terminal event.
+        let h2 = service
+            .submit(JobSpec::invert(MatrixSpec::new(16, 4).seeded(4)))
+            .unwrap();
+        assert!(h2.cancel());
+        let statuses: Vec<JobStatus> = h2.history().iter().map(|e| e.status).collect();
+        assert_eq!(statuses, vec![JobStatus::Queued, JobStatus::Cancelled]);
+        // A job-filtered subscriber gets h2's history only.
+        let (history, _rx) = service.subscribe(Some(h2.id()));
+        assert_eq!(history.len(), 2);
+        assert!(history.iter().all(|e| e.job_id == h2.id()));
+    }
+
+    #[test]
+    fn submit_with_id_is_idempotent_by_id() {
+        let service = sync_service();
+        let spec = JobSpec::invert(MatrixSpec::new(16, 4).seeded(7));
+        let h = service.submit_with_id(42, spec.clone()).unwrap();
+        assert_eq!(h.id(), 42);
+        // Same id + same spec: the existing job, not a second execution.
+        let again = service.submit_with_id(42, spec.clone()).unwrap();
+        assert_eq!(again.id(), 42);
+        assert_eq!(service.queued_jobs(), 1, "no duplicate enqueue");
+        // Same id + different spec: refused.
+        let err = service
+            .submit_with_id(42, JobSpec::invert(MatrixSpec::new(32, 8)))
+            .unwrap_err();
+        assert!(err.to_string().contains("different spec"), "{err}");
+        // Id 0 is reserved for the ambient scope.
+        assert!(service.submit_with_id(0, spec.clone()).is_err());
+        // Auto-allocation continues above the fixed id.
+        let auto = service.submit(spec.clone().tenant("other")).unwrap();
+        assert!(auto.id() > 42, "auto id {} must exceed fixed 42", auto.id());
+        // Lookup by id resolves both.
+        assert_eq!(service.job(42).unwrap().id(), 42);
+        assert!(service.job(999).is_none());
+        service.run_pending();
+        assert_eq!(h.status(), JobStatus::Completed);
+        assert_eq!(again.status(), JobStatus::Completed, "same underlying job");
+        // Resubmit after completion still returns the finished job.
+        let after = service.submit_with_id(42, spec).unwrap();
+        assert_eq!(after.status(), JobStatus::Completed);
+        assert!(after.outcome().is_some());
+        assert_eq!(
+            after.terminal().unwrap().status,
+            JobStatus::Completed,
+            "terminal summary available"
+        );
+    }
+
+    #[test]
+    fn job_log_records_lifecycle_and_replay_resumes_pending() {
+        use crate::store::joblog::JobLog;
+        let dir = std::env::temp_dir().join(format!("spin_svc_log_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let (log, replay) = JobLog::open(&dir).unwrap();
+        assert_eq!(replay.jobs.len(), 0);
+        let spec_a = JobSpec::invert(MatrixSpec::new(16, 4).seeded(1)).label("a");
+        let spec_b = JobSpec::invert(MatrixSpec::new(16, 4).seeded(2)).label("b");
+        {
+            let service = SpinService::builder()
+                .cores(2)
+                .workers(0)
+                .job_log(Arc::new(log))
+                .build()
+                .unwrap();
+            let a = service.submit(spec_a.clone()).unwrap();
+            let _b = service.submit(spec_b.clone()).unwrap();
+            // Only job a runs before the "crash" (service drop).
+            let job = service.inner.claim_next().unwrap();
+            service.inner.run_job(&job);
+            a.wait().unwrap();
+        }
+        // Restart: replay finds a terminal for a, b still pending.
+        let (log, replay) = JobLog::open(&dir).unwrap();
+        assert_eq!(log.generation(), 2);
+        let pending: Vec<&crate::store::ReplayedJob> = replay.pending().collect();
+        assert_eq!(pending.len(), 1);
+        assert_eq!(pending[0].spec, spec_b);
+        let done = replay.jobs.iter().find(|j| j.terminal.is_some()).unwrap();
+        assert_eq!(done.spec, spec_a);
+        let t = done.terminal.as_ref().unwrap();
+        assert_eq!(t.status, JobStatus::Completed);
+        assert!(t.residual.unwrap() < 1e-9);
+        // Re-enqueue the pending job under its original id.
+        let service = SpinService::builder()
+            .cores(2)
+            .workers(0)
+            .job_log(Arc::new(log))
+            .build()
+            .unwrap();
+        let h = service
+            .submit_with_id(pending[0].id, pending[0].spec.clone())
+            .unwrap();
+        assert_eq!(h.id(), 2);
+        service.run_pending();
+        h.wait().unwrap();
+        drop(service);
+        // Third generation: everything terminal, nothing pending.
+        let (_, replay) = JobLog::open(&dir).unwrap();
+        assert_eq!(replay.pending().count(), 0);
+        assert_eq!(replay.jobs.len(), 2);
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     /// Satellite (store round-trip): ingest → `from_store` → invert on

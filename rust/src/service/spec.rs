@@ -161,6 +161,7 @@ impl MatrixSpec {
     }
 
     pub fn from_json(v: &Json) -> Result<Self> {
+        v.check_known_keys("matrix spec", &["n", "block_size", "seed", "generator", "store"])?;
         let n = v
             .req("n")?
             .as_usize()
@@ -318,6 +319,14 @@ impl JobSpec {
             .req("kind")?
             .as_str()
             .ok_or_else(|| SpinError::config("job `kind` must be a string"))?;
+        // Strict per-kind key set: a typo like `matirx` or a field from
+        // the wrong kind fails the submit instead of running defaults.
+        let known: &[&str] = match kind {
+            "solve" => &["kind", "tenant", "label", "algo", "matrix", "rhs"],
+            "multiply" => &["kind", "tenant", "label", "algo", "a", "b"],
+            _ => &["kind", "tenant", "label", "algo", "matrix"],
+        };
+        v.check_known_keys(&format!("job spec ({kind})"), known)?;
         let matrix = |key: &str| -> Result<MatrixSpec> { MatrixSpec::from_json(v.req(key)?) };
         let kind = match kind {
             "invert" => JobKind::Invert {
@@ -365,6 +374,7 @@ impl JobSpec {
 
     /// Parse a `spin serve --script` document: `{"jobs": [spec, …]}`.
     pub fn parse_script(doc: &Json) -> Result<Vec<JobSpec>> {
+        doc.check_known_keys("script", &["jobs"])?;
         let jobs = doc
             .req("jobs")?
             .as_array()
@@ -464,5 +474,36 @@ mod tests {
         );
         let bad = Json::object(vec![("kind", Json::str("cholesky"))]);
         assert!(JobSpec::from_json(&bad).is_err());
+    }
+
+    #[test]
+    fn unknown_fields_are_rejected_naming_the_key() {
+        // Matrix-level typo: `blocksize` instead of `block_size`.
+        let mut m = MatrixSpec::new(16, 4).to_json();
+        if let Json::Object(map) = &mut m {
+            map.insert("blocksize".to_string(), Json::num(4.0));
+        }
+        let err = MatrixSpec::from_json(&m).unwrap_err().to_string();
+        assert!(err.contains("`blocksize`"), "{err}");
+        // Job-level typo: `matirx` on an invert spec.
+        let mut j = JobSpec::invert(MatrixSpec::new(16, 4)).to_json();
+        if let Json::Object(map) = &mut j {
+            map.insert("matirx".to_string(), Json::Null);
+        }
+        let err = JobSpec::from_json(&j).unwrap_err().to_string();
+        assert!(err.contains("`matirx`"), "{err}");
+        // A field from the wrong kind: `rhs` on an invert spec.
+        let mut j = JobSpec::invert(MatrixSpec::new(16, 4)).to_json();
+        if let Json::Object(map) = &mut j {
+            map.insert("rhs".to_string(), MatrixSpec::new(16, 4).to_json());
+        }
+        assert!(JobSpec::from_json(&j).is_err());
+        // ...but `rhs` is fine on solve, where it belongs.
+        let ok = JobSpec::solve(MatrixSpec::new(16, 4), MatrixSpec::new(16, 4));
+        JobSpec::from_json(&ok.to_json()).unwrap();
+        // Script-level typo.
+        let doc = Json::object(vec![("job", Json::Array(vec![]))]);
+        let err = JobSpec::parse_script(&doc).unwrap_err().to_string();
+        assert!(err.contains("`job`"), "{err}");
     }
 }

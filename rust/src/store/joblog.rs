@@ -1,0 +1,392 @@
+//! Durable job log: append-only JSONL under the store directory that
+//! makes a `spin serve --http` server crash-restartable.
+//!
+//! Every accepted submit appends a `submitted` record (job id + full
+//! [`JobSpec`]) and every terminal phase flip appends a `terminal`
+//! record, each fsynced before the state becomes externally visible —
+//! so a job a client saw acknowledged is never lost, and a job a client
+//! saw finish never re-executes. On startup the server replays the log:
+//! ids with a `submitted` but no `terminal` record were queued or
+//! running at crash time and are re-enqueued under their original ids
+//! (resubmit over HTTP is idempotent by id); ids with a `terminal`
+//! record are served from the log without re-execution.
+//!
+//! Each server start appends a `generation` header record carrying the
+//! format tag and a monotonically increasing generation number, so the
+//! log itself records every restart boundary.
+
+use std::collections::BTreeMap;
+use std::fs::{File, OpenOptions};
+use std::io::Write;
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+use crate::error::{Result, SpinError};
+use crate::ser::json::Json;
+use crate::service::{JobSpec, JobStatus};
+use crate::util::{now_ms, plock};
+
+/// Log file name inside the store directory.
+pub const JOB_LOG_FILE: &str = "jobs.log";
+
+/// Format tag written in every generation header.
+pub const JOB_LOG_FORMAT: &str = "spin-joblog-v1";
+
+/// Append-only writer for the durable job log. One per server process;
+/// appends are serialized by an internal lock and fsynced before
+/// returning, so a record that `record_*` acknowledged survives a crash.
+pub struct JobLog {
+    file: Mutex<File>,
+    path: PathBuf,
+    generation: u64,
+}
+
+/// Terminal outcome as recorded in the log (no dense result payload —
+/// results are recomputable from the spec; the log is for control state).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Terminal {
+    pub status: JobStatus,
+    pub error: Option<String>,
+    pub residual: Option<f64>,
+}
+
+/// One job reconstructed from the log: its spec plus, if it finished,
+/// the terminal record. `terminal: None` means the job was queued or
+/// running at crash time and must be re-enqueued.
+#[derive(Debug, Clone)]
+pub struct ReplayedJob {
+    pub id: u64,
+    pub spec: JobSpec,
+    pub terminal: Option<Terminal>,
+}
+
+/// Everything recovered from an existing log at startup.
+#[derive(Debug, Default)]
+pub struct JobLogReplay {
+    /// Highest generation header seen (0 when the log is new/empty).
+    pub generation: u64,
+    /// Jobs in id order, deduplicated (first `submitted` record wins).
+    pub jobs: Vec<ReplayedJob>,
+}
+
+impl JobLogReplay {
+    /// Jobs that never reached a terminal phase — the restart re-enqueues
+    /// exactly these.
+    pub fn pending(&self) -> impl Iterator<Item = &ReplayedJob> {
+        self.jobs.iter().filter(|j| j.terminal.is_none())
+    }
+
+    /// Largest job id seen; the restarted server allocates above this.
+    pub fn max_id(&self) -> u64 {
+        self.jobs.iter().map(|j| j.id).max().unwrap_or(0)
+    }
+}
+
+impl JobLog {
+    /// Open (creating if absent) the job log in `dir`, replaying any
+    /// existing records first. Returns the writer — positioned at a new
+    /// generation, header already appended and fsynced — plus the replay.
+    pub fn open(dir: impl Into<PathBuf>) -> Result<(JobLog, JobLogReplay)> {
+        let dir = dir.into();
+        std::fs::create_dir_all(&dir)?;
+        let path = dir.join(JOB_LOG_FILE);
+        let replay = if path.exists() {
+            replay_file(&path)?
+        } else {
+            JobLogReplay::default()
+        };
+        let file = OpenOptions::new().create(true).append(true).open(&path)?;
+        let log = JobLog {
+            file: Mutex::new(file),
+            path,
+            generation: replay.generation + 1,
+        };
+        log.append(Json::object(vec![
+            ("type", Json::str("generation")),
+            ("format", Json::str(JOB_LOG_FORMAT)),
+            ("generation", Json::num(log.generation as f64)),
+            ("ts_ms", Json::num(now_ms() as f64)),
+        ]))?;
+        Ok((log, replay))
+    }
+
+    /// Generation number of this writer (1 for a fresh log).
+    pub fn generation(&self) -> u64 {
+        self.generation
+    }
+
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+
+    /// Record an accepted submit. Must be called (and return) before the
+    /// job id is acknowledged to the client.
+    pub fn record_submitted(&self, id: u64, spec: &JobSpec) -> Result<()> {
+        self.append(Json::object(vec![
+            ("type", Json::str("submitted")),
+            ("id", Json::num(id as f64)),
+            ("spec", spec.to_json()),
+            ("ts_ms", Json::num(now_ms() as f64)),
+        ]))
+    }
+
+    /// Record a terminal phase. Must be called (and return) before the
+    /// phase flip is published, so a crash after a client observed
+    /// completion cannot re-execute the job.
+    pub fn record_terminal(
+        &self,
+        id: u64,
+        status: JobStatus,
+        error: Option<&str>,
+        residual: Option<f64>,
+    ) -> Result<()> {
+        let mut pairs = vec![
+            ("type", Json::str("terminal")),
+            ("id", Json::num(id as f64)),
+            ("status", Json::str(status.name())),
+            ("ts_ms", Json::num(now_ms() as f64)),
+        ];
+        if let Some(e) = error {
+            pairs.push(("error", Json::str(e)));
+        }
+        if let Some(r) = residual {
+            pairs.push(("residual", Json::Number(r)));
+        }
+        self.append(Json::object(pairs))
+    }
+
+    /// One fsynced line: write + `sync_data` under the writer lock, so
+    /// concurrent workers' records never interleave and an acknowledged
+    /// record is on disk.
+    fn append(&self, record: Json) -> Result<()> {
+        let mut line = record.compact();
+        line.push('\n');
+        let file = plock(&self.file);
+        (&*file).write_all(line.as_bytes())?;
+        file.sync_data()?;
+        Ok(())
+    }
+}
+
+/// Parse an existing log. A torn final line (crash mid-append) is
+/// tolerated and skipped; any earlier malformed record is an error —
+/// that is corruption, not a crash artifact.
+fn replay_file(path: &Path) -> Result<JobLogReplay> {
+    let text = std::fs::read_to_string(path)?;
+    let lines: Vec<&str> = text.lines().filter(|l| !l.trim().is_empty()).collect();
+    let mut generation = 0u64;
+    let mut jobs: BTreeMap<u64, ReplayedJob> = BTreeMap::new();
+    for (idx, line) in lines.iter().enumerate() {
+        let last = idx + 1 == lines.len();
+        let record = match Json::parse(line) {
+            Ok(v) => v,
+            Err(_) if last => break, // torn tail from a crash mid-append
+            Err(e) => {
+                return Err(SpinError::config(format!(
+                    "corrupt job log {} at record {}: {e}",
+                    path.display(),
+                    idx + 1
+                )));
+            }
+        };
+        let parsed = parse_record(&record, &mut generation, &mut jobs);
+        if let Err(e) = parsed {
+            if last {
+                break;
+            }
+            return Err(SpinError::config(format!(
+                "corrupt job log {} at record {}: {e}",
+                path.display(),
+                idx + 1
+            )));
+        }
+    }
+    Ok(JobLogReplay {
+        generation,
+        jobs: jobs.into_values().collect(),
+    })
+}
+
+fn parse_record(
+    record: &Json,
+    generation: &mut u64,
+    jobs: &mut BTreeMap<u64, ReplayedJob>,
+) -> Result<()> {
+    let kind = record
+        .req("type")?
+        .as_str()
+        .ok_or_else(|| SpinError::config("record `type` must be a string"))?;
+    match kind {
+        "generation" => {
+            let format = record
+                .req("format")?
+                .as_str()
+                .ok_or_else(|| SpinError::config("generation `format` must be a string"))?;
+            if format != JOB_LOG_FORMAT {
+                return Err(SpinError::config(format!(
+                    "unsupported job log format `{format}` (expected `{JOB_LOG_FORMAT}`)"
+                )));
+            }
+            let g = record
+                .req("generation")?
+                .as_i64()
+                .and_then(|v| u64::try_from(v).ok())
+                .ok_or_else(|| SpinError::config("generation number must be a u64"))?;
+            *generation = (*generation).max(g);
+        }
+        "submitted" => {
+            let id = record_id(record)?;
+            let spec = JobSpec::from_json(record.req("spec")?)?;
+            // Dedup by id: a restarted generation re-logs its re-enqueues,
+            // so later submitted records for a known id are echoes.
+            jobs.entry(id).or_insert(ReplayedJob {
+                id,
+                spec,
+                terminal: None,
+            });
+        }
+        "terminal" => {
+            let id = record_id(record)?;
+            let status = JobStatus::parse(
+                record
+                    .req("status")?
+                    .as_str()
+                    .ok_or_else(|| SpinError::config("terminal `status` must be a string"))?,
+            )?;
+            let terminal = Terminal {
+                status,
+                error: record.get("error").and_then(|v| v.as_str()).map(String::from),
+                residual: record.get("residual").and_then(|v| v.as_f64()),
+            };
+            // Terminal without a submitted record can only happen if the
+            // log was truncated externally; nothing to resume, skip it.
+            if let Some(job) = jobs.get_mut(&id) {
+                job.terminal.get_or_insert(terminal);
+            }
+        }
+        other => {
+            return Err(SpinError::config(format!(
+                "unknown job log record type `{other}`"
+            )));
+        }
+    }
+    Ok(())
+}
+
+fn record_id(record: &Json) -> Result<u64> {
+    record
+        .req("id")?
+        .as_i64()
+        .and_then(|v| u64::try_from(v).ok())
+        .filter(|&id| id > 0)
+        .ok_or_else(|| SpinError::config("record `id` must be a positive integer"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::service::MatrixSpec;
+
+    fn tmpdir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!("spin_joblog_{tag}_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&d);
+        d
+    }
+
+    fn spec(seed: u64) -> JobSpec {
+        JobSpec::invert(MatrixSpec::new(16, 4).seeded(seed)).label("t")
+    }
+
+    #[test]
+    fn log_replays_pending_and_terminal_jobs() {
+        let d = tmpdir("replay");
+        let (log, replay) = JobLog::open(&d).unwrap();
+        assert_eq!(log.generation(), 1);
+        assert_eq!(replay.generation, 0);
+        assert!(replay.jobs.is_empty());
+        log.record_submitted(1, &spec(1)).unwrap();
+        log.record_submitted(2, &spec(2)).unwrap();
+        log.record_submitted(3, &spec(3)).unwrap();
+        log.record_terminal(1, JobStatus::Completed, None, Some(1e-12))
+            .unwrap();
+        log.record_terminal(3, JobStatus::Failed, Some("boom"), None)
+            .unwrap();
+        drop(log);
+
+        let (log2, replay) = JobLog::open(&d).unwrap();
+        assert_eq!(log2.generation(), 2);
+        assert_eq!(replay.generation, 1);
+        assert_eq!(replay.jobs.len(), 3);
+        assert_eq!(replay.max_id(), 3);
+        let pending: Vec<u64> = replay.pending().map(|j| j.id).collect();
+        assert_eq!(pending, vec![2], "only the unterminated job is pending");
+        let done = &replay.jobs[0];
+        let t = done.terminal.as_ref().unwrap();
+        assert_eq!(t.status, JobStatus::Completed);
+        assert_eq!(t.residual, Some(1e-12));
+        let failed = replay.jobs[2].terminal.as_ref().unwrap();
+        assert_eq!(failed.status, JobStatus::Failed);
+        assert_eq!(failed.error.as_deref(), Some("boom"));
+        assert_eq!(replay.jobs[1].spec, spec(2));
+        let _ = std::fs::remove_dir_all(&d);
+    }
+
+    #[test]
+    fn resubmitted_ids_dedup_across_generations() {
+        let d = tmpdir("dedup");
+        let (log, _) = JobLog::open(&d).unwrap();
+        log.record_submitted(5, &spec(5)).unwrap();
+        drop(log);
+        // Restarted generation re-logs the re-enqueue of id 5, then
+        // finishes it.
+        let (log, replay) = JobLog::open(&d).unwrap();
+        assert_eq!(replay.pending().count(), 1);
+        log.record_submitted(5, &spec(5)).unwrap();
+        log.record_terminal(5, JobStatus::Completed, None, None).unwrap();
+        drop(log);
+        let (_, replay) = JobLog::open(&d).unwrap();
+        assert_eq!(replay.jobs.len(), 1, "one job despite two submitted records");
+        assert!(replay.pending().next().is_none());
+        let _ = std::fs::remove_dir_all(&d);
+    }
+
+    #[test]
+    fn torn_tail_is_tolerated_but_midfile_corruption_errors() {
+        let d = tmpdir("torn");
+        let (log, _) = JobLog::open(&d).unwrap();
+        log.record_submitted(1, &spec(1)).unwrap();
+        let path = log.path().to_path_buf();
+        drop(log);
+        // Simulate a crash mid-append: partial JSON on the final line.
+        let mut text = std::fs::read_to_string(&path).unwrap();
+        text.push_str("{\"type\":\"termi");
+        std::fs::write(&path, &text).unwrap();
+        let (_, replay) = JobLog::open(&d).unwrap();
+        assert_eq!(replay.pending().count(), 1, "torn tail skipped");
+        // Corruption before the tail is a hard error.
+        let mut lines: Vec<String> =
+            std::fs::read_to_string(&path).unwrap().lines().map(String::from).collect();
+        lines.insert(1, "not json".to_string());
+        std::fs::write(&path, lines.join("\n")).unwrap();
+        assert!(JobLog::open(&d).is_err());
+        let _ = std::fs::remove_dir_all(&d);
+    }
+
+    #[test]
+    fn generation_header_carries_format_tag() {
+        let d = tmpdir("gen");
+        let (log, _) = JobLog::open(&d).unwrap();
+        let first = std::fs::read_to_string(log.path())
+            .unwrap()
+            .lines()
+            .next()
+            .unwrap()
+            .to_string();
+        let header = Json::parse(&first).unwrap();
+        assert_eq!(header.get("type").unwrap().as_str(), Some("generation"));
+        assert_eq!(header.get("format").unwrap().as_str(), Some(JOB_LOG_FORMAT));
+        assert_eq!(header.get("generation").unwrap().as_i64(), Some(1));
+        assert!(header.get("ts_ms").unwrap().as_i64().unwrap() > 0);
+        let _ = std::fs::remove_dir_all(&d);
+    }
+}

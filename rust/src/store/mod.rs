@@ -13,6 +13,14 @@
 //! [`BlockStore`] is the pluggable interface (a future HDFS/S3 client
 //! implements it); [`LocalDirStore`] is the local-filesystem
 //! implementation behind `spin ingest` and `spin serve --store`.
+//!
+//! The store directory also hosts the serving stack's durability state:
+//! [`joblog`] is the append-only job log that lets `spin serve --http`
+//! resume queued/running jobs after a crash.
+
+pub mod joblog;
+
+pub use joblog::{JobLog, JobLogReplay, ReplayedJob, Terminal};
 
 use std::path::{Path, PathBuf};
 

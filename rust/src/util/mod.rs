@@ -30,3 +30,12 @@ pub fn plock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
 pub fn pwait<'a, T>(cv: &Condvar, guard: MutexGuard<'a, T>) -> MutexGuard<'a, T> {
     cv.wait(guard).unwrap_or_else(PoisonError::into_inner)
 }
+
+/// Wall-clock milliseconds since the Unix epoch — the timestamp format
+/// used by job-log records and SSE phase events.
+pub fn now_ms() -> u64 {
+    std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.as_millis() as u64)
+        .unwrap_or(0)
+}

@@ -1,0 +1,464 @@
+//! End-to-end tests of the HTTP job API: a real server on an ephemeral
+//! port, a real `TcpStream` client, SSE streams followed to their
+//! terminal event, and the durable job log driven through a simulated
+//! crash + restart.
+
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::TcpStream;
+use std::path::PathBuf;
+use std::process::{Child, Command, Stdio};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use spin::config::HttpConfig;
+use spin::http::{HttpClient, HttpServer, ServerState};
+use spin::ser::json::Json;
+use spin::service::SpinService;
+use spin::store::JobLog;
+
+fn tmp_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("spin_http_{tag}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+fn http_config() -> HttpConfig {
+    HttpConfig {
+        listen: "127.0.0.1:0".to_string(),
+        // Fast heartbeats so the SSE idle path is exercised in-test.
+        sse_heartbeat_ms: 50,
+        ..HttpConfig::default()
+    }
+}
+
+fn bind(service: SpinService) -> HttpServer {
+    HttpServer::bind(ServerState::new(service, http_config())).unwrap()
+}
+
+fn invert_spec_json(n: usize, bs: usize, seed: u64, tenant: &str) -> String {
+    format!(
+        r#"{{"kind":"invert","tenant":"{tenant}","label":"e2e","matrix":{{"n":{n},"block_size":{bs},"seed":{seed}}}}}"#
+    )
+}
+
+/// Drive one request over a raw `TcpStream` — no client sugar — and
+/// return (status line, body).
+fn raw_request(addr: &str, method: &str, path: &str, body: &str) -> (String, String) {
+    let mut stream = TcpStream::connect(addr).unwrap();
+    write!(
+        stream,
+        "{method} {path} HTTP/1.1\r\nHost: {addr}\r\nContent-Length: {}\r\n\r\n{body}",
+        body.len()
+    )
+    .unwrap();
+    stream.flush().unwrap();
+    let mut raw = String::new();
+    stream.read_to_string(&mut raw).unwrap();
+    let (head, body) = raw.split_once("\r\n\r\n").expect("complete response");
+    (head.lines().next().unwrap().to_string(), body.to_string())
+}
+
+#[test]
+fn submit_over_raw_tcp_then_sse_to_terminal_with_residual() {
+    let service = SpinService::builder().workers(2).build().unwrap();
+    let server = bind(service);
+    let addr = server.local_addr().to_string();
+
+    // Submit over a bare socket: the wire format itself is under test.
+    let (status_line, body) = raw_request(
+        &addr,
+        "POST",
+        "/v1/jobs",
+        &invert_spec_json(32, 8, 7, "alice"),
+    );
+    assert!(status_line.contains("202"), "{status_line} {body}");
+    let reply = Json::parse(&body).unwrap();
+    let id = reply.req("id").unwrap().as_i64().unwrap() as u64;
+    assert!(id > 0);
+
+    // Follow the event stream to the terminal transition.
+    let client = HttpClient::new(addr.clone());
+    let events = client.follow_events(&format!("/v1/jobs/{id}/events")).unwrap();
+    let phases: Vec<&str> = events
+        .iter()
+        .filter(|(name, _)| name == "phase")
+        .map(|(_, data)| data.req("status").unwrap().as_str().unwrap())
+        .collect();
+    assert_eq!(phases, vec!["queued", "running", "completed"], "{events:?}");
+    assert_eq!(events.last().unwrap().0, "end");
+    // Seq strictly increases across the stream (no duplicate delivery).
+    let seqs: Vec<i64> = events
+        .iter()
+        .filter(|(name, _)| name == "phase")
+        .map(|(_, data)| data.req("seq").unwrap().as_i64().unwrap())
+        .collect();
+    assert!(seqs.windows(2).all(|w| w[0] < w[1]), "{seqs:?}");
+
+    // Status: terminal summary carries the inversion residual, and the
+    // lazy-leaf invariant holds over HTTP.
+    let (code, status) = client.get(&format!("/v1/jobs/{id}")).unwrap();
+    assert_eq!(code, 200);
+    assert_eq!(status.req("status").unwrap().as_str(), Some("completed"));
+    assert!(status.req("residual").unwrap().as_f64().unwrap() < 1e-8);
+    assert_eq!(status.req("submit_driver_blocks").unwrap().as_i64(), Some(0));
+    let history = status.req("history").unwrap().as_array().unwrap();
+    assert_eq!(history.len(), 3, "queued, running, completed");
+
+    // Per-job metrics + explain + global metrics all answer.
+    let (code, m) = client.get(&format!("/v1/jobs/{id}/metrics")).unwrap();
+    assert_eq!(code, 200);
+    assert!(m.req("methods").unwrap().get("multiply").is_some());
+    let (code, e) = client.get(&format!("/v1/jobs/{id}/explain")).unwrap();
+    assert_eq!(code, 200);
+    assert!(e.req("explain").unwrap().as_str().unwrap().contains("invert"));
+    let (code, g) = client.get("/v1/metrics").unwrap();
+    assert_eq!(code, 200);
+    assert_eq!(g.req("workers").unwrap().as_i64(), Some(2));
+    assert!(g.req("plan_cache").unwrap().get("entries").is_some());
+}
+
+#[test]
+fn strict_specs_and_routing_errors_over_http() {
+    let service = SpinService::builder().workers(0).build().unwrap();
+    let server = bind(service);
+    let client = HttpClient::new(server.local_addr().to_string());
+
+    // Unknown JobSpec field: rejected, naming the offending key.
+    let bad = Json::parse(
+        r#"{"kind":"invert","tenant":"t","matirx":{"n":32,"block_size":8}}"#,
+    )
+    .unwrap();
+    let (code, body) = client.post("/v1/jobs", Some(&bad)).unwrap();
+    assert_eq!(code, 400, "{body:?}");
+    assert!(body.req("error").unwrap().as_str().unwrap().contains("matirx"));
+
+    // Malformed JSON, bad routes, wrong methods, unknown ids.
+    let (line, _) = raw_request(&client_addr(&server), "POST", "/v1/jobs", "{nope");
+    assert!(line.contains("400"), "{line}");
+    assert_eq!(client.get("/v1/jobs/999").unwrap().0, 404);
+    assert_eq!(client.get("/v1/jobs/zzz").unwrap().0, 400);
+    assert_eq!(client.get("/nope").unwrap().0, 404);
+    assert_eq!(client.post("/v1/metrics", None).unwrap().0, 405);
+    assert_eq!(client.get("/v1/healthz").unwrap().0, 200);
+
+    // Oversized body: 413 from the declared Content-Length alone, before
+    // any body bytes are read (so none are sent here).
+    let mut stream = TcpStream::connect(client_addr(&server)).unwrap();
+    write!(
+        stream,
+        "POST /v1/jobs HTTP/1.1\r\nContent-Length: {}\r\n\r\n",
+        2 << 20
+    )
+    .unwrap();
+    stream.flush().unwrap();
+    let mut raw = String::new();
+    stream.read_to_string(&mut raw).unwrap();
+    assert!(raw.starts_with("HTTP/1.1 413"), "{raw}");
+}
+
+fn client_addr(server: &HttpServer) -> String {
+    server.local_addr().to_string()
+}
+
+#[test]
+fn cancel_over_http_reaches_sse_and_log() {
+    let dir = tmp_dir("cancel");
+    let (log, replay) = JobLog::open(&dir).unwrap();
+    assert_eq!(replay.jobs.len(), 0);
+    // No workers: the job stays queued, so cancel always wins.
+    let service = SpinService::builder()
+        .workers(0)
+        .job_log(Arc::new(log))
+        .build()
+        .unwrap();
+    let server = bind(service);
+    let client = HttpClient::new(server.local_addr().to_string());
+
+    let spec = Json::parse(&invert_spec_json(32, 8, 9, "bob")).unwrap();
+    let (code, reply) = client.post("/v1/jobs", Some(&spec)).unwrap();
+    assert_eq!(code, 202);
+    let id = reply.req("id").unwrap().as_i64().unwrap() as u64;
+    let (code, c) = client.post(&format!("/v1/jobs/{id}/cancel"), None).unwrap();
+    assert_eq!(code, 200);
+    assert_eq!(c.req("cancelled").unwrap().as_bool(), Some(true));
+    let events = client.follow_events(&format!("/v1/jobs/{id}/events")).unwrap();
+    let last_phase = events
+        .iter()
+        .rev()
+        .find(|(name, _)| name == "phase")
+        .unwrap();
+    assert_eq!(last_phase.1.req("status").unwrap().as_str(), Some("cancelled"));
+
+    // Explicit cancels are durable: a restart must not resurrect the job.
+    drop(server);
+    let (_log2, replay) = JobLog::open(&dir).unwrap();
+    assert_eq!(replay.pending().count(), 0);
+    let job = replay.jobs.iter().find(|j| j.id == id).unwrap();
+    assert_eq!(
+        job.terminal.as_ref().unwrap().status,
+        spin::service::JobStatus::Cancelled
+    );
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// The acceptance scenario: jobs before a crash, kill, restart against
+/// the same store — every job terminal exactly once, SSE works on both
+/// sides of the restart, and no terminal job re-executes.
+#[test]
+fn kill_and_restart_replays_log_without_duplicate_execution() {
+    let dir = tmp_dir("restart");
+
+    // Generation 1: one job runs to completion, one stays pending.
+    let (log, _) = JobLog::open(&dir).unwrap();
+    let service = SpinService::builder()
+        .workers(0)
+        .job_log(Arc::new(log))
+        .build()
+        .unwrap();
+    let server = bind(service);
+    let client = HttpClient::new(server.local_addr().to_string());
+
+    let spec_a = Json::parse(&invert_spec_json(32, 8, 5, "alice")).unwrap();
+    let (code, reply) = client.post("/v1/jobs", Some(&spec_a)).unwrap();
+    assert_eq!(code, 202);
+    let id_a = reply.req("id").unwrap().as_i64().unwrap() as u64;
+    server.service().run_pending(); // A completes before the crash
+    let events_a = client.follow_events(&format!("/v1/jobs/{id_a}/events")).unwrap();
+    assert_eq!(
+        events_a
+            .iter()
+            .rev()
+            .find(|(n, _)| n == "phase")
+            .unwrap()
+            .1
+            .req("status")
+            .unwrap()
+            .as_str(),
+        Some("completed")
+    );
+    let residual_a = {
+        let (_, s) = client.get(&format!("/v1/jobs/{id_a}")).unwrap();
+        s.req("residual").unwrap().as_f64().unwrap()
+    };
+    let spec_b = Json::parse(&invert_spec_json(64, 16, 6, "bob")).unwrap();
+    let (code, reply) = client.post("/v1/jobs", Some(&spec_b)).unwrap();
+    assert_eq!(code, 202);
+    let id_b = reply.req("id").unwrap().as_i64().unwrap() as u64;
+
+    // Crash: drop server + service with B still queued. The shutdown
+    // drain cancels B in-process but deliberately does NOT log a
+    // terminal record — B must be re-enqueued by the replay.
+    drop(server);
+
+    // Generation 2: replay the log the way `spin serve --http` does.
+    let (log, replay) = JobLog::open(&dir).unwrap();
+    assert_eq!(log.generation(), 2, "one prior generation");
+    let service = SpinService::builder()
+        .workers(0)
+        .job_log(Arc::new(log))
+        .build()
+        .unwrap();
+    let mut recovered = std::collections::BTreeMap::new();
+    let mut pending = Vec::new();
+    for job in replay.jobs {
+        match job.terminal {
+            Some(t) => {
+                recovered.insert(
+                    job.id,
+                    spin::http::RecoveredJob {
+                        spec: job.spec,
+                        terminal: spin::service::TerminalSummary {
+                            status: t.status,
+                            error: t.error,
+                            residual: t.residual,
+                        },
+                    },
+                );
+            }
+            None => pending.push((job.id, job.spec)),
+        }
+    }
+    assert_eq!(recovered.len(), 1, "A is terminal in the log");
+    assert_eq!(pending.len(), 1, "B is pending in the log");
+    for (id, spec) in pending {
+        assert_eq!(id, id_b);
+        service.submit_with_id(id, spec).unwrap();
+    }
+    let mut state = ServerState::new(service, http_config());
+    state.recovered = recovered;
+    state.generation = 2;
+    let server = HttpServer::bind(state).unwrap();
+    let client = HttpClient::new(server.local_addr().to_string());
+
+    // A answers from the log — marked recovered, same residual, and an
+    // idempotent resubmit under its id returns 200 without re-running.
+    let (code, s) = client.get(&format!("/v1/jobs/{id_a}")).unwrap();
+    assert_eq!(code, 200);
+    assert_eq!(s.req("recovered").unwrap().as_bool(), Some(true));
+    assert_eq!(s.req("residual").unwrap().as_f64(), Some(residual_a));
+    let mut resubmit_a = spec_a.as_object().unwrap().clone();
+    resubmit_a.insert("id".to_string(), Json::num(id_a as f64));
+    let (code, s) = client.post("/v1/jobs", Some(&Json::Object(resubmit_a))).unwrap();
+    assert_eq!(code, 200, "{s:?}");
+    assert_eq!(s.req("recovered").unwrap().as_bool(), Some(true));
+    assert!(server.service().job(id_a).is_none(), "A never re-entered the service");
+
+    // SSE works after the restart: follow B through execution.
+    let follower = {
+        let client = client.clone();
+        let path = format!("/v1/jobs/{id_b}/events");
+        std::thread::spawn(move || client.follow_events(&path).unwrap())
+    };
+    server.service().run_pending();
+    let events_b = follower.join().unwrap();
+    assert_eq!(
+        events_b
+            .iter()
+            .rev()
+            .find(|(n, _)| n == "phase")
+            .unwrap()
+            .1
+            .req("status")
+            .unwrap()
+            .as_str(),
+        Some("completed")
+    );
+    drop(server);
+
+    // Exactly-once: the raw log holds one terminal record per job.
+    let text = std::fs::read_to_string(dir.join("jobs.log")).unwrap();
+    let terminals = |id: u64| {
+        text.lines()
+            .filter(|l| l.contains("\"type\":\"terminal\"") && l.contains(&format!("\"id\":{id},")))
+            .count()
+    };
+    assert_eq!(terminals(id_a), 1);
+    assert_eq!(terminals(id_b), 1);
+    // And a third replay sees nothing pending.
+    let (_log, replay) = JobLog::open(&dir).unwrap();
+    assert_eq!(replay.pending().count(), 0);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Kill the spawned server even when an assert panics mid-test.
+struct KillOnDrop(Child);
+
+impl Drop for KillOnDrop {
+    fn drop(&mut self) {
+        let _ = self.0.kill();
+        let _ = self.0.wait();
+    }
+}
+
+/// CI smoke: launch the real `spin` binary, parse the printed address,
+/// and drive the API from outside the process.
+#[test]
+fn binary_serve_http_smoke() {
+    let dir = tmp_dir("smoke");
+    let child = Command::new(env!("CARGO_BIN_EXE_spin"))
+        .args([
+            "serve",
+            "--http",
+            "127.0.0.1:0",
+            "--workers",
+            "2",
+            "--store",
+            dir.to_str().unwrap(),
+        ])
+        .stdout(Stdio::piped())
+        .stderr(Stdio::null())
+        .spawn()
+        .unwrap();
+    let mut child = KillOnDrop(child);
+    let stdout = child.0.stdout.take().unwrap();
+    let mut lines = BufReader::new(stdout).lines();
+    let addr = loop {
+        let line = lines
+            .next()
+            .expect("server exited before printing its address")
+            .unwrap();
+        if let Some(rest) = line.strip_prefix("listening on http://") {
+            break rest.trim().to_string();
+        }
+    };
+    let client = HttpClient::new(addr);
+
+    let (code, h) = client.get("/v1/healthz").unwrap();
+    assert_eq!(code, 200);
+    assert_eq!(h.req("ok").unwrap().as_bool(), Some(true));
+
+    let spec = Json::parse(&invert_spec_json(32, 8, 11, "smoke")).unwrap();
+    let (code, reply) = client.post("/v1/jobs", Some(&spec)).unwrap();
+    assert_eq!(code, 202, "{reply:?}");
+    let id = reply.req("id").unwrap().as_i64().unwrap();
+
+    // Poll status to terminal (the SSE path is covered in-process).
+    let deadline = Instant::now() + Duration::from_secs(60);
+    loop {
+        let (code, s) = client.get(&format!("/v1/jobs/{id}")).unwrap();
+        assert_eq!(code, 200);
+        let status = s.req("status").unwrap().as_str().unwrap().to_string();
+        if status == "completed" {
+            assert!(s.req("residual").unwrap().as_f64().unwrap() < 1e-8);
+            break;
+        }
+        assert!(
+            status == "queued" || status == "running",
+            "unexpected terminal: {s:?}"
+        );
+        assert!(Instant::now() < deadline, "job never finished");
+        std::thread::sleep(Duration::from_millis(50));
+    }
+
+    // Cancel answers 2xx whatever the race outcome; metrics answer.
+    let (code, _) = client.post(&format!("/v1/jobs/{id}/cancel"), None).unwrap();
+    assert_eq!(code, 200);
+    let (code, g) = client.get("/v1/metrics").unwrap();
+    assert_eq!(code, 200);
+    assert_eq!(g.req("generation").unwrap().as_i64(), Some(1));
+    drop(child);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// 50 jobs over HTTP across tenants: every one reaches `completed`, the
+/// retention counters stay bounded, and the driver never materializes a
+/// block at submit.
+#[test]
+fn http_soak_50_jobs_across_tenants() {
+    let service = SpinService::builder()
+        .workers(2)
+        .queue_capacity(64)
+        .build()
+        .unwrap();
+    let server = bind(service);
+    let client = HttpClient::new(server.local_addr().to_string());
+    let tenants = ["alice", "bob", "carol", "dave"];
+    let mut ids = Vec::new();
+    for i in 0..50u64 {
+        let spec = Json::parse(&invert_spec_json(
+            32,
+            8,
+            100 + (i % 8),
+            tenants[(i % 4) as usize],
+        ))
+        .unwrap();
+        let (code, reply) = client.post("/v1/jobs", Some(&spec)).unwrap();
+        assert_eq!(code, 202, "submit {i}: {reply:?}");
+        ids.push(reply.req("id").unwrap().as_i64().unwrap() as u64);
+    }
+    server.service().wait_idle();
+    for id in &ids {
+        let (code, s) = client.get(&format!("/v1/jobs/{id}")).unwrap();
+        assert_eq!(code, 200);
+        assert_eq!(s.req("status").unwrap().as_str(), Some("completed"), "{s:?}");
+        assert_eq!(s.req("submit_driver_blocks").unwrap().as_i64(), Some(0));
+    }
+    let (code, g) = client.get("/v1/metrics").unwrap();
+    assert_eq!(code, 200);
+    // Retention: finished jobs release their stage records; the resident
+    // window stays far below 50 jobs' worth of stages.
+    let retained = g.req("retained_stage_records").unwrap().as_i64().unwrap();
+    let released = g.req("released_stage_records").unwrap().as_i64().unwrap();
+    assert!(released > 0, "{g:?}");
+    assert!(retained <= released, "retained {retained} vs released {released}");
+}
