@@ -32,11 +32,22 @@
 
 use crate::blockmatrix::ops_method as method;
 use crate::blockmatrix::BlockMatrix;
-use crate::cluster::Cluster;
+use crate::cluster::{Cluster, ResilienceTotals};
 use crate::config::JobConfig;
 use crate::error::{Result, SpinError};
 use crate::plan::{MatExpr, PlanExec};
 use crate::runtime::BlockKernels;
+use crate::store::checkpoint;
+
+/// Record checkpoint activity on this job's metric scope (no-op deltas
+/// are dropped by the metrics layer).
+fn record_ckpt(cluster: &Cluster, written: usize, restored: usize) {
+    cluster.record_resilience(&ResilienceTotals {
+        checkpoints_written: written,
+        checkpoints_restored: restored,
+        ..ResilienceTotals::default()
+    });
+}
 
 /// Block-recursive LU inversion implementation entry — reached through
 /// [`crate::algos::LuAlgorithm`] in the registry.
@@ -52,12 +63,32 @@ pub(crate) fn lu_inverse_distributed_impl(
             a.nblocks()
         )));
     }
-    let (l, u) = block_lu(cluster, kernels, a, job)?;
-    let li = invert_block_lower(cluster, kernels, &l, job)?;
-    let ui = invert_block_upper(cluster, kernels, &u, job)?;
-    // Additional cost: the full-size product U⁻¹ · L⁻¹.
-    let exec = PlanExec::new(cluster, kernels);
-    let inv = exec.eval(&MatExpr::source(ui).multiply(&MatExpr::source(li))?)?;
+    // Root checkpoint boundary: without it the three top-level phases
+    // would all be recursion roots and the two triangular inversions
+    // would collide on the same `r-m` key. The residual check below runs
+    // on restored results too.
+    let ckpt = checkpoint::boundary();
+    let restored = ckpt
+        .as_ref()
+        .and_then(|level| level.try_restore("m", a.nblocks(), a.block_size()));
+    let inv = match restored {
+        Some(inv) => {
+            record_ckpt(cluster, 0, 1);
+            inv
+        }
+        None => {
+            let (l, u) = block_lu(cluster, kernels, a, job)?;
+            let li = invert_block_lower(cluster, kernels, &l, job)?;
+            let ui = invert_block_upper(cluster, kernels, &u, job)?;
+            // Additional cost: the full-size product U⁻¹ · L⁻¹.
+            let exec = PlanExec::new(cluster, kernels);
+            let inv = exec.eval(&MatExpr::source(ui).multiply(&MatExpr::source(li))?)?;
+            if let Some(level) = &ckpt {
+                record_ckpt(cluster, level.persist("m", &inv) as usize, 0);
+            }
+            inv
+        }
+    };
     if job.residual_check {
         let resid = crate::linalg::inverse_residual(&a.to_dense()?, &inv.to_dense()?);
         if resid > 1e-8 {
@@ -74,6 +105,32 @@ pub(crate) fn lu_inverse_distributed_impl(
 /// `U12`/`L21` expressions are evaluated once (for the Schur update) and
 /// their memoized values feed the L/U assembly plans.
 fn block_lu(
+    cluster: &Cluster,
+    kernels: &dyn BlockKernels,
+    a: &BlockMatrix,
+    job: &JobConfig,
+) -> Result<(BlockMatrix, BlockMatrix)> {
+    // This boundary produces a PAIR, checkpointed as two parts under one
+    // path key; resume restores both or recomputes both.
+    let ckpt = checkpoint::boundary();
+    let b = a.nblocks();
+    if let Some(level) = &ckpt {
+        let l = level.try_restore("l", b, a.block_size());
+        let u = level.try_restore("u", b, a.block_size());
+        if let (Some(l), Some(u)) = (l, u) {
+            record_ckpt(cluster, 0, 2);
+            return Ok((l, u));
+        }
+    }
+    let (l, u) = block_lu_compute(cluster, kernels, a, job)?;
+    if let Some(level) = &ckpt {
+        let wrote = level.persist("l", &l) as usize + level.persist("u", &u) as usize;
+        record_ckpt(cluster, wrote, 0);
+    }
+    Ok((l, u))
+}
+
+fn block_lu_compute(
     cluster: &Cluster,
     kernels: &dyn BlockKernels,
     a: &BlockMatrix,
@@ -123,7 +180,14 @@ fn invert_block_lower(
     l: &BlockMatrix,
     job: &JobConfig,
 ) -> Result<BlockMatrix> {
+    let ckpt = checkpoint::boundary();
     let b = l.nblocks();
+    if let Some(level) = &ckpt {
+        if let Some(restored) = level.try_restore("m", b, l.block_size()) {
+            record_ckpt(cluster, 0, 1);
+            return Ok(restored);
+        }
+    }
     if b == 1 {
         return l.map_blocks_try(cluster, method::LEAF_NODE, |m| kernels.invert_lower(m));
     }
@@ -145,7 +209,11 @@ fn invert_block_lower(
     )?);
     let c21 = li22.multiply(&l21e)?.multiply(&li11)?.scale(-1.0);
     let zero = MatExpr::source(BlockMatrix::zeros(l11e.nblocks(), l11e.block_size())?);
-    exec.eval(&MatExpr::arrange(&li11, &zero, &c21, &li22)?)
+    let inv = exec.eval(&MatExpr::arrange(&li11, &zero, &c21, &li22)?)?;
+    if let Some(level) = &ckpt {
+        record_ckpt(cluster, level.persist("m", &inv) as usize, 0);
+    }
+    Ok(inv)
 }
 
 /// Recursive inversion of a block upper-triangular matrix:
@@ -156,7 +224,14 @@ fn invert_block_upper(
     u: &BlockMatrix,
     job: &JobConfig,
 ) -> Result<BlockMatrix> {
+    let ckpt = checkpoint::boundary();
     let b = u.nblocks();
+    if let Some(level) = &ckpt {
+        if let Some(restored) = level.try_restore("m", b, u.block_size()) {
+            record_ckpt(cluster, 0, 1);
+            return Ok(restored);
+        }
+    }
     if b == 1 {
         return u.map_blocks_try(cluster, method::LEAF_NODE, |m| kernels.invert_upper(m));
     }
@@ -178,7 +253,11 @@ fn invert_block_upper(
     )?);
     let c12 = ui11.multiply(&u12e)?.multiply(&ui22)?.scale(-1.0);
     let zero = MatExpr::source(BlockMatrix::zeros(u11e.nblocks(), u11e.block_size())?);
-    exec.eval(&MatExpr::arrange(&ui11, &c12, &zero, &ui22)?)
+    let inv = exec.eval(&MatExpr::arrange(&ui11, &c12, &zero, &ui22)?)?;
+    if let Some(level) = &ckpt {
+        record_ckpt(cluster, level.persist("m", &inv) as usize, 0);
+    }
+    Ok(inv)
 }
 
 #[cfg(test)]

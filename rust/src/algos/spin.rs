@@ -21,11 +21,12 @@
 
 use crate::blockmatrix::ops_method as method;
 use crate::blockmatrix::{Block, BlockMatrix};
-use crate::cluster::Cluster;
+use crate::cluster::{Cluster, ResilienceTotals};
 use crate::config::JobConfig;
 use crate::error::{Result, SpinError};
 use crate::plan::{MatExpr, PlanExec};
 use crate::runtime::BlockKernels;
+use crate::store::checkpoint;
 
 /// `Invert` nodes inside a SPIN level plan resolve to this scheme name —
 /// the recursion itself, not a registry entry (a registry round-trip
@@ -85,33 +86,54 @@ pub(crate) fn spin_inverse_impl(
 /// the cluster's `plan_optimizer` setting, and evaluate it — `invert`
 /// nodes recurse back into this function. The recursion boundary is the
 /// plan's materialization point: a level needs its children's *values*
-/// (their block payloads), not their expressions.
+/// (their block payloads), not their expressions — and therefore also the
+/// checkpoint boundary: a resumed job restores the level's value here and
+/// skips the whole subtree below it.
 fn inverse_rec(
     cluster: &Cluster,
     kernels: &dyn BlockKernels,
     a: &BlockMatrix,
     job: &JobConfig,
 ) -> Result<BlockMatrix> {
+    let ckpt = checkpoint::boundary();
     let b = a.nblocks();
+    if let Some(level) = &ckpt {
+        if let Some(restored) = level.try_restore("m", b, a.block_size()) {
+            cluster.record_resilience(&ResilienceTotals {
+                checkpoints_restored: 1,
+                ..ResilienceTotals::default()
+            });
+            return Ok(restored);
+        }
+    }
 
-    // ---- leaf: one block, inverted serially on a worker (paper's if-part).
-    if b == 1 {
-        return a.map_blocks_try(cluster, method::LEAF_NODE, |m| {
+    let inv = if b == 1 {
+        // ---- leaf: one block, inverted serially on a worker (paper's
+        // if-part).
+        a.map_blocks_try(cluster, method::LEAF_NODE, |m| {
             kernels.leaf_inverse(m, job.leaf)
-        });
-    }
+        })?
+    } else if b == 2 && job.fuse_leaf_2x2 {
+        // ---- optional fused 2×2 base (our extension).
+        fused_2x2(cluster, kernels, a, job)?
+    } else {
+        // ---- else-part: one Strassen level as a plan.
+        let plan = level_plan(&MatExpr::source(a.clone()))?;
+        let exec = PlanExec::new(cluster, kernels);
+        exec.eval_with(&plan, &|_algo: &str, m: &BlockMatrix| {
+            inverse_rec(cluster, kernels, m, job)
+        })?
+    };
 
-    // ---- optional fused 2×2 base (our extension).
-    if b == 2 && job.fuse_leaf_2x2 {
-        return fused_2x2(cluster, kernels, a, job);
+    if let Some(level) = &ckpt {
+        if level.persist("m", &inv) {
+            cluster.record_resilience(&ResilienceTotals {
+                checkpoints_written: 1,
+                ..ResilienceTotals::default()
+            });
+        }
     }
-
-    // ---- else-part: one Strassen level as a plan.
-    let plan = level_plan(&MatExpr::source(a.clone()))?;
-    let exec = PlanExec::new(cluster, kernels);
-    exec.eval_with(&plan, &|_algo: &str, m: &BlockMatrix| {
-        inverse_rec(cluster, kernels, m, job)
-    })
+    Ok(inv)
 }
 
 /// Collect the four leaf blocks and run the fused Algorithm-1 step as one

@@ -89,7 +89,9 @@ pub fn usage() -> String {
      \x20          SpinService and print per-job reports (--script FILE, --workers N),\n\
      \x20          or expose the service over HTTP: --http ADDR [--store DIR] runs the\n\
      \x20          job API (POST /v1/jobs, SSE /v1/jobs/:id/events, /v1/metrics) with a\n\
-     \x20          durable job log in DIR replayed on restart; ctrl-c drains gracefully\n\
+     \x20          durable job log in DIR replayed on restart (pending jobs resume from\n\
+     \x20          their last checkpointed level); ctrl-c drains gracefully, hard-failing\n\
+     \x20          whatever is left after --drain-timeout-secs N (default 30)\n\
      \x20 info     show cluster config and artifact status\n\
      \n\
      COMMON FLAGS:\n\
@@ -97,6 +99,8 @@ pub fn usage() -> String {
      \x20 --backend native|xla\n\
      \x20 --generator diag-dominant|spd --seed N --fuse-leaf-2x2\n\
      \x20 --residual-check --set key=value (cluster overrides, repeatable)\n\
+     \x20 --set fault_seed=N/fault_rate=F/checkpoint_every_level=N… — deterministic\n\
+     \x20 chaos, stage retry, speculation, checkpoints (see docs/RESILIENCE.md)\n\
      \x20 --smoke | --full (experiment scale)\n"
         .to_string()
 }
@@ -516,6 +520,13 @@ fn cmd_serve(mut args: Args) -> Result<()> {
         })
         .transpose()?
         .unwrap_or(2);
+    let drain_timeout = args
+        .flag_value("--drain-timeout-secs")?
+        .map(|v| {
+            v.parse::<u64>()
+                .map_err(|_| SpinError::config("--drain-timeout-secs needs an integer"))
+        })
+        .transpose()?;
     args.finish()?;
 
     if let Some(addr) = http_addr {
@@ -532,10 +543,13 @@ fn cmd_serve(mut args: Args) -> Result<()> {
         for kv in &http_overrides {
             http.apply_override(kv)?;
         }
-        return serve_http(cfg, http, store_dir, workers);
+        return serve_http(cfg, http, store_dir, workers, drain_timeout.unwrap_or(30));
     }
     if !http_overrides.is_empty() {
         return Err(SpinError::config("--http-set requires --http ADDR"));
+    }
+    if drain_timeout.is_some() {
+        return Err(SpinError::config("--drain-timeout-secs requires --http ADDR"));
     }
 
     let (specs, source_label) = match (&script, &store_dir) {
@@ -700,6 +714,7 @@ fn serve_http(
     http: HttpConfig,
     store_dir: Option<String>,
     workers: usize,
+    drain_timeout_secs: u64,
 ) -> Result<()> {
     http.validate()?;
     if workers == 0 {
@@ -741,7 +756,11 @@ fn serve_http(
                 }
                 None => {
                     // Still pending at the last shutdown: resume under
-                    // the original id (resubmits stay idempotent).
+                    // the original id (resubmits stay idempotent). Any
+                    // recursion levels the crashed run checkpointed are
+                    // attached first, so the resumed execution restores
+                    // them instead of recomputing.
+                    service.preload_checkpoints(job.id, job.checkpoints);
                     service.submit_with_id(job.id, job.spec)?;
                     resumed += 1;
                 }
@@ -776,11 +795,49 @@ fn serve_http(
     while !INTERRUPTED.load(std::sync::atomic::Ordering::SeqCst) {
         std::thread::sleep(std::time::Duration::from_millis(100));
     }
-    println!("interrupted: refusing new connections, draining running jobs");
+    println!(
+        "interrupted: refusing new connections, draining running jobs \
+         (deadline {drain_timeout_secs}s)"
+    );
     server.shutdown();
-    server.service().wait_idle();
-    println!("drained; bye");
-    Ok(())
+    let drained = server
+        .service()
+        .wait_idle_timeout(std::time::Duration::from_secs(drain_timeout_secs));
+    // Shutdown summary: recovery activity over the server's lifetime,
+    // and any tenants leaving work behind at the deadline.
+    let r = *server.service().metrics().resilience();
+    if r != Default::default() {
+        println!(
+            "resilience: {} task retrie(s), {} budget exhaustion(s), {}/{} speculative \
+             copies won, {} checkpoint level(s) written, {} restored",
+            r.retries,
+            r.retry_exhausted,
+            r.speculative_won,
+            r.speculative_launched,
+            r.checkpoints_written,
+            r.checkpoints_restored
+        );
+    }
+    for g in server.service().tenant_gauges() {
+        println!(
+            "tenant {}: {} queued, {} running at shutdown",
+            g.tenant, g.queued, g.running
+        );
+    }
+    if drained {
+        println!("drained; bye");
+        return Ok(());
+    }
+    // The deadline passed with jobs still queued or running: hard-fail
+    // them with a journaled terminal (a restart serves the verdict, it
+    // does not silently re-run them) and exit nonzero so supervisors see
+    // the unclean drain.
+    let failed = server
+        .service()
+        .fail_pending("drain deadline exceeded at shutdown");
+    Err(SpinError::cluster(format!(
+        "drain deadline of {drain_timeout_secs}s exceeded: hard-failed {failed} job(s)"
+    )))
 }
 
 /// Deterministic schema + perf gate for `spin bench`: the measured output

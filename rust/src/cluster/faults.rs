@@ -1,0 +1,361 @@
+//! Deterministic fault injection for the simulated cluster.
+//!
+//! The chaos harness has to satisfy two constraints at once: runs must
+//! be **reproducible** (a seed fully determines which task attempts
+//! fail, straggle, or panic) and injected faults must never change the
+//! *numeric result* of a job (the acceptance bar is bit-identical
+//! inverses vs a clean run). Both fall out of the same design: the user
+//! task closure executes exactly once for real, and the fault stream is
+//! applied to the **virtual-time accounting** afterwards — a failed
+//! attempt charges its wasted compute plus an exponential backoff into
+//! the task's effective duration, a straggling attempt inflates it, and
+//! a speculative copy caps it. This mirrors how Spark's retry/
+//! speculation machinery changes *when* a stage finishes, never *what*
+//! it computes (a deterministic task recomputes the same partition).
+//!
+//! The decision stream is a splitmix64-style hash of
+//! `(fault_seed, stage_seq, partition, attempt)`, so every stage/
+//! partition/attempt triple draws an independent, reproducible verdict.
+//! `stage_seq` is a monotonic per-cluster counter: with a single job in
+//! flight the stream is exactly reproducible; with concurrent jobs the
+//! interleaving perturbs which stage draws which verdicts (counters may
+//! shift between runs) but determinism of *results* is unconditional.
+//!
+//! Straggler speculation is intentionally timing-coupled: an attempt
+//! straggles by a seed-derived inflation factor, and a speculative copy
+//! launches once the inflated duration exceeds
+//! `speculation_multiplier × median(stage task durations)` — the copy
+//! starts at the threshold and runs for the task's clean duration, and
+//! the stage takes whichever finishes first (`speculative_won` counts
+//! the copy winning). Because the threshold compares *measured*
+//! durations, borderline speculation counts can wiggle across runs —
+//! stragglers are a timing phenomenon; retry counters, by contrast,
+//! depend only on the seed and the stage order.
+//!
+//! When `fault_seed` is unset the cluster holds no [`FaultPlan`] at all
+//! and every stage runs the exact pre-existing path (a single `Option`
+//! check) — the "provably inert when disabled" acceptance criterion.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use crate::config::{ClusterConfig, FaultKinds};
+
+use super::metrics::ResilienceTotals;
+
+/// Salts separating the independent per-attempt draws.
+const SALT_DECIDE: u64 = 0x5049_4E5F_4641_494C; // "SPIN_FAIL"
+const SALT_KIND: u64 = 0x5049_4E5F_4B49_4E44;
+const SALT_FRACTION: u64 = 0x5049_4E5F_4652_4143;
+const SALT_STRAGGLE: u64 = 0x5049_4E5F_5354_5247;
+
+/// What the fault stream decided for one attempt of one task.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum FaultKind {
+    /// The attempt died partway through (charges a seed-derived fraction
+    /// of the task's compute, then a retry).
+    TaskPanic,
+    /// The attempt ran to completion and then failed (charges the full
+    /// task compute, then a retry).
+    TaskError,
+    /// The attempt succeeds but runs slow (seed-derived inflation,
+    /// subject to speculation).
+    Straggle,
+}
+
+/// Effective virtual-time accounting for one stage under injected
+/// faults, plus the recovery counters the stage earned.
+pub struct StageFaultOutcome {
+    /// Per-task effective durations (failed-attempt charges + backoffs +
+    /// final attempt) to feed the list scheduler in place of the clean
+    /// measured durations.
+    pub durations: Vec<f64>,
+    /// Recovery counters earned by this stage.
+    pub delta: ResilienceTotals,
+    /// First partition whose retry budget was exhausted, if any — the
+    /// stage runner turns this into a job-fatal panic naming the stage
+    /// and partition.
+    pub exhausted: Option<usize>,
+}
+
+/// Seed-derived fault schedule owned by a [`super::Cluster`] — present
+/// only when `ClusterConfig::fault_seed` is set.
+pub struct FaultPlan {
+    seed: u64,
+    rate: f64,
+    kinds: FaultKinds,
+    task_retries: usize,
+    backoff_secs: f64,
+    speculation_multiplier: f64,
+    /// Monotonic stage counter — each stage draws from its own slice of
+    /// the decision stream.
+    stage_seq: AtomicU64,
+}
+
+/// splitmix64 finalizer — a full-avalanche mix for the decision stream.
+fn mix(mut x: u64) -> u64 {
+    x = x.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    x = (x ^ (x >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    x = (x ^ (x >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    x ^ (x >> 31)
+}
+
+/// Map a hash to a uniform draw in [0, 1).
+fn unit(x: u64) -> f64 {
+    (x >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+}
+
+impl FaultPlan {
+    /// Build the plan from the cluster config; `None` (no plan, zero
+    /// overhead) unless `fault_seed` is set.
+    pub fn from_config(cfg: &ClusterConfig) -> Option<FaultPlan> {
+        cfg.fault_seed.map(|seed| FaultPlan {
+            seed,
+            rate: cfg.fault_rate,
+            kinds: cfg.fault_kinds,
+            task_retries: cfg.task_retries,
+            backoff_secs: cfg.retry_backoff_secs,
+            speculation_multiplier: cfg.speculation_multiplier,
+            stage_seq: AtomicU64::new(0),
+        })
+    }
+
+    /// One independent draw for `(stage, partition, attempt, salt)`.
+    fn draw(&self, stage: u64, partition: u64, attempt: u64, salt: u64) -> u64 {
+        let mut h = self.seed;
+        for w in [stage, partition, attempt, salt] {
+            h = mix(h ^ w);
+        }
+        h
+    }
+
+    /// The verdict for one attempt: `None` = clean success, otherwise a
+    /// fault kind chosen uniformly among the configured kinds.
+    fn fault_for(&self, stage: u64, partition: u64, attempt: u64) -> Option<FaultKind> {
+        if unit(self.draw(stage, partition, attempt, SALT_DECIDE)) >= self.rate {
+            return None;
+        }
+        let mut active = [FaultKind::TaskPanic; 3];
+        let mut n = 0;
+        if self.kinds.task_panic {
+            active[n] = FaultKind::TaskPanic;
+            n += 1;
+        }
+        if self.kinds.task_error {
+            active[n] = FaultKind::TaskError;
+            n += 1;
+        }
+        if self.kinds.straggle {
+            active[n] = FaultKind::Straggle;
+            n += 1;
+        }
+        if n == 0 {
+            return None; // validated away in ClusterConfig, but stay safe
+        }
+        let pick = self.draw(stage, partition, attempt, SALT_KIND) as usize % n;
+        Some(active[pick])
+    }
+
+    /// Apply this stage's slice of the fault stream to the measured task
+    /// durations: replay the retry loop each task would have gone
+    /// through, charging wasted attempts, backoffs, straggle inflation
+    /// and speculation caps into the effective durations.
+    pub fn apply(&self, measured: &[f64]) -> StageFaultOutcome {
+        let stage = self.stage_seq.fetch_add(1, Ordering::Relaxed);
+        let mut sorted: Vec<f64> = measured.to_vec();
+        sorted.sort_by(|a, b| a.partial_cmp(b).expect("durations are finite"));
+        let median = if sorted.is_empty() {
+            0.0
+        } else {
+            sorted[sorted.len() / 2]
+        };
+        let threshold = self.speculation_multiplier * median;
+        let speculate = self.speculation_multiplier > 0.0 && median > 0.0;
+
+        let mut delta = ResilienceTotals::default();
+        let mut exhausted = None;
+        let mut durations = Vec::with_capacity(measured.len());
+        for (partition, &clean) in measured.iter().enumerate() {
+            let mut effective = 0.0;
+            for attempt in 0..=self.task_retries as u64 {
+                match self.fault_for(stage, partition as u64, attempt) {
+                    Some(FaultKind::TaskError) => effective += clean,
+                    Some(FaultKind::TaskPanic) => {
+                        let frac =
+                            unit(self.draw(stage, partition as u64, attempt, SALT_FRACTION));
+                        effective += clean * frac;
+                    }
+                    verdict => {
+                        // Success — clean, or straggling (slow success).
+                        let mut dur = clean;
+                        if verdict == Some(FaultKind::Straggle) {
+                            let factor = 2.0
+                                + 6.0
+                                    * unit(self.draw(
+                                        stage,
+                                        partition as u64,
+                                        attempt,
+                                        SALT_STRAGGLE,
+                                    ));
+                            let inflated = clean * factor;
+                            dur = inflated;
+                            if speculate && inflated > threshold {
+                                delta.speculative_launched += 1;
+                                // The copy launches once the original
+                                // crosses the threshold and then runs the
+                                // task cleanly; take the first finisher.
+                                let copy_finish = threshold + clean;
+                                if copy_finish < inflated {
+                                    delta.speculative_won += 1;
+                                    dur = copy_finish;
+                                }
+                            }
+                        }
+                        effective += dur;
+                        break;
+                    }
+                }
+                // The attempt failed. Either retry (with exponential
+                // backoff) or report the budget spent.
+                if attempt as usize >= self.task_retries {
+                    delta.retry_exhausted += 1;
+                    exhausted.get_or_insert(partition);
+                    break;
+                }
+                delta.retries += 1;
+                effective += self.backoff_secs * (1u64 << attempt.min(20)) as f64;
+            }
+            durations.push(effective);
+        }
+        StageFaultOutcome {
+            durations,
+            delta,
+            exhausted,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ClusterConfig;
+
+    fn plan(seed: u64, rate: f64, kinds: FaultKinds) -> FaultPlan {
+        let mut cfg = ClusterConfig::local(2);
+        cfg.fault_seed = Some(seed);
+        cfg.fault_rate = rate;
+        cfg.fault_kinds = kinds;
+        cfg.task_retries = 3;
+        cfg.retry_backoff_secs = 0.05;
+        cfg.speculation_multiplier = 3.0;
+        FaultPlan::from_config(&cfg).expect("seed set")
+    }
+
+    #[test]
+    fn disabled_config_builds_no_plan() {
+        let cfg = ClusterConfig::local(2);
+        assert!(cfg.fault_seed.is_none());
+        assert!(FaultPlan::from_config(&cfg).is_none());
+    }
+
+    #[test]
+    fn zero_rate_is_identity() {
+        let p = plan(42, 0.0, FaultKinds::all());
+        let measured = vec![0.5, 1.0, 0.25, 0.75];
+        let out = p.apply(&measured);
+        assert_eq!(out.durations, measured, "bitwise-identical durations");
+        assert!(!out.delta.any());
+        assert!(out.exhausted.is_none());
+    }
+
+    #[test]
+    fn same_seed_same_outcome() {
+        let measured: Vec<f64> = (0..64).map(|i| 0.5 + (i % 7) as f64 * 0.1).collect();
+        let a = plan(7, 0.2, FaultKinds::all()).apply(&measured);
+        let b = plan(7, 0.2, FaultKinds::all()).apply(&measured);
+        assert_eq!(a.durations, b.durations);
+        assert_eq!(a.delta, b.delta);
+        assert_eq!(a.exhausted, b.exhausted);
+        // A different seed draws a different schedule.
+        let c = plan(8, 0.2, FaultKinds::all()).apply(&measured);
+        assert_ne!(a.durations, c.durations);
+    }
+
+    #[test]
+    fn stage_counter_advances_the_stream() {
+        let p = plan(7, 0.3, FaultKinds::all());
+        let measured = vec![0.5; 32];
+        let first = p.apply(&measured);
+        let second = p.apply(&measured);
+        assert_ne!(
+            first.durations, second.durations,
+            "each stage draws its own slice of the stream"
+        );
+    }
+
+    #[test]
+    fn fail_kinds_charge_retries_and_exhaust_at_rate_one() {
+        let kinds = FaultKinds {
+            task_panic: true,
+            task_error: true,
+            straggle: false,
+        };
+        let p = plan(3, 1.0, kinds);
+        let measured = vec![1.0, 1.0];
+        let out = p.apply(&measured);
+        // Every attempt fails: budget of 3 retries spent on both tasks.
+        assert_eq!(out.delta.retries, 6);
+        assert_eq!(out.delta.retry_exhausted, 2);
+        assert_eq!(out.exhausted, Some(0));
+        // Wasted attempts + backoffs all charge time.
+        assert!(out.durations.iter().all(|&d| d > 0.0));
+    }
+
+    #[test]
+    fn moderate_rate_retries_then_succeeds() {
+        let kinds = FaultKinds {
+            task_panic: true,
+            task_error: true,
+            straggle: false,
+        };
+        let p = plan(12, 0.3, kinds);
+        let measured = vec![1.0; 64];
+        let out = p.apply(&measured);
+        assert!(out.delta.retries > 0, "some attempts fail at rate 0.3");
+        assert!(out.exhausted.is_none(), "0.3^4 per task is vanishing");
+        // A retried task charges at least its failed attempt's backoff.
+        assert!(out
+            .durations
+            .iter()
+            .zip(&measured)
+            .all(|(eff, clean)| eff >= clean));
+    }
+
+    #[test]
+    fn stragglers_launch_and_win_speculation() {
+        let kinds = FaultKinds {
+            task_panic: false,
+            task_error: false,
+            straggle: true,
+        };
+        let p = plan(5, 1.0, kinds);
+        let measured = vec![1.0; 32];
+        let out = p.apply(&measured);
+        assert!(out.delta.retries == 0, "straggle is a slow success");
+        assert!(out.delta.speculative_launched > 0);
+        assert!(out.delta.speculative_won > 0);
+        assert!(out.delta.speculative_won <= out.delta.speculative_launched);
+        // A won speculation caps at threshold + clean = 3·median + clean.
+        for d in &out.durations {
+            assert!(*d <= 3.0 * 1.0 + 1.0 + 1e-12);
+            assert!(*d >= 1.0, "straggle never makes a task faster");
+        }
+    }
+
+    #[test]
+    fn empty_stage_is_fine() {
+        let p = plan(1, 0.5, FaultKinds::all());
+        let out = p.apply(&[]);
+        assert!(out.durations.is_empty());
+        assert!(!out.delta.any());
+    }
+}

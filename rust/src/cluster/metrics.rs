@@ -97,6 +97,45 @@ pub struct MetricsTotals {
     pub driver_collects: usize,
 }
 
+/// Recovery counters from the fault-injection / retry / speculation /
+/// checkpoint layer. Kept separate from [`MetricsTotals`] so plan-node
+/// cost windows (stages, shuffles, collects) stay exactly what they were
+/// before the resilience subsystem existed — retries change *time*, not
+/// the logical stage structure the windows attribute.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct ResilienceTotals {
+    /// Failed task attempts that were retried (one per extra attempt).
+    pub retries: usize,
+    /// Tasks that spent their whole retry budget (job-fatal).
+    pub retry_exhausted: usize,
+    /// Speculative copies launched for straggling tasks.
+    pub speculative_launched: usize,
+    /// Speculative copies that finished before the straggling original.
+    pub speculative_won: usize,
+    /// Recursion-level checkpoints persisted to the block store.
+    pub checkpoints_written: usize,
+    /// Recursion levels restored from a checkpoint instead of computed.
+    pub checkpoints_restored: usize,
+}
+
+impl ResilienceTotals {
+    /// Fold `other` into `self`.
+    pub fn add(&mut self, other: &ResilienceTotals) {
+        self.retries += other.retries;
+        self.retry_exhausted += other.retry_exhausted;
+        self.speculative_launched += other.speculative_launched;
+        self.speculative_won += other.speculative_won;
+        self.checkpoints_written += other.checkpoints_written;
+        self.checkpoints_restored += other.checkpoints_restored;
+    }
+
+    /// True when any counter is nonzero — the inertness assertion for
+    /// runs with fault injection disabled.
+    pub fn any(&self) -> bool {
+        *self != ResilienceTotals::default()
+    }
+}
+
 /// What one logical plan node actually paid when it was lowered — stamped
 /// by [`crate::plan::PlanExec`] so `explain`'s predictions are checkable
 /// against measured behaviour.
@@ -149,6 +188,8 @@ struct ScopeRecords {
     /// Running aggregate counters (O(1) scoped windows) — these survive
     /// the history cap (only full-record payloads are windowed).
     totals: MetricsTotals,
+    /// Recovery counters attributed to this scope (O(1), never windowed).
+    resilience: ResilienceTotals,
 }
 
 #[derive(Default)]
@@ -180,6 +221,8 @@ struct MetricsInner {
     cache_evicted_bytes: u64,
     /// Bytes currently pinned by `persist()` (gauge, set by the session).
     pinned_bytes: u64,
+    /// Registry-lifetime recovery counters (survive scope releases).
+    resilience: ResilienceTotals,
 }
 
 /// Drop oldest records (across scopes, by global sequence) until the
@@ -304,6 +347,36 @@ impl Metrics {
         enforce_history(&mut inner);
     }
 
+    /// Fold one batch of recovery counters into the registry — both the
+    /// registry-lifetime totals and the current thread's scope (so a
+    /// job's retries/speculation/checkpoints are attributable per job).
+    pub fn record_resilience(&self, delta: &ResilienceTotals) {
+        if !delta.any() {
+            return;
+        }
+        let scope = Metrics::current_scope();
+        let mut inner = plock(&self.inner);
+        inner.resilience.add(delta);
+        inner.scopes.entry(scope).or_default().resilience.add(delta);
+    }
+
+    /// Registry-lifetime recovery counters (never go backwards; scope
+    /// releases and the history window do not touch them).
+    pub fn resilience_totals(&self) -> ResilienceTotals {
+        plock(&self.inner).resilience
+    }
+
+    /// Recovery counters restricted to one scope (a released scope reads
+    /// as zero — take the job's snapshot before releasing).
+    pub fn resilience_for_scope(&self, scope: u64) -> ResilienceTotals {
+        let inner = plock(&self.inner);
+        inner
+            .scopes
+            .get(&scope)
+            .map(|rec| rec.resilience)
+            .unwrap_or_default()
+    }
+
     /// Count plan-node values dropped by the LRU byte-budget evictor.
     pub fn record_cache_eviction(&self, count: usize, bytes: u64) {
         let mut inner = plock(&self.inner);
@@ -400,6 +473,7 @@ impl Metrics {
             retained_stage_records: inner.retained_stages,
             released_stage_records: inner.released_stages,
             released_scopes: inner.released_scopes,
+            resilience: inner.resilience,
         }
     }
 
@@ -421,6 +495,7 @@ impl Metrics {
         let mut stages = Vec::new();
         let mut plan_nodes = Vec::new();
         let mut driver_collects = 0;
+        let mut resilience = ResilienceTotals::default();
         if let Some(rec) = inner.scopes.get(&scope) {
             for (_, stage) in &rec.stages {
                 accumulate(&mut methods, stage);
@@ -428,6 +503,7 @@ impl Metrics {
             }
             plan_nodes = rec.plan_nodes.iter().map(|(_, p)| p.clone()).collect();
             driver_collects = rec.totals.driver_collects;
+            resilience = rec.resilience;
         }
         MetricsSnapshot {
             methods,
@@ -440,6 +516,7 @@ impl Metrics {
             retained_stage_records: inner.retained_stages,
             released_stage_records: inner.released_stages,
             released_scopes: inner.released_scopes,
+            resilience,
         }
     }
 }
@@ -463,9 +540,18 @@ pub struct MetricsSnapshot {
     retained_stage_records: usize,
     released_stage_records: usize,
     released_scopes: usize,
+    resilience: ResilienceTotals,
 }
 
 impl MetricsSnapshot {
+    /// Recovery counters in this window — registry-lifetime for
+    /// [`Metrics::snapshot`], the scope's own for
+    /// [`Metrics::snapshot_scope`]. All-zero when fault injection is
+    /// disabled and no checkpoints were written or restored.
+    pub fn resilience(&self) -> &ResilienceTotals {
+        &self.resilience
+    }
+
     pub fn method(&self, name: &str) -> Option<&MethodStats> {
         self.methods.get(name)
     }
@@ -865,6 +951,49 @@ mod tests {
             m.record_stage(stage("s", 1, 0.1, 0.1));
         }
         assert_eq!(m.snapshot().retained_stage_records(), 3);
+    }
+
+    #[test]
+    fn resilience_counters_scope_and_survive_release() {
+        let m = Metrics::new();
+        assert!(!m.resilience_totals().any());
+        {
+            let _g = Metrics::enter_scope(11);
+            m.record_resilience(&ResilienceTotals {
+                retries: 2,
+                speculative_launched: 1,
+                speculative_won: 1,
+                ..ResilienceTotals::default()
+            });
+            m.record_resilience(&ResilienceTotals {
+                retries: 1,
+                checkpoints_written: 1,
+                ..ResilienceTotals::default()
+            });
+        }
+        m.record_resilience(&ResilienceTotals {
+            checkpoints_restored: 1,
+            ..ResilienceTotals::default()
+        }); // scope 0
+        let s11 = m.resilience_for_scope(11);
+        assert_eq!(s11.retries, 3);
+        assert_eq!(s11.speculative_launched, 1);
+        assert_eq!(s11.speculative_won, 1);
+        assert_eq!(s11.checkpoints_written, 1);
+        assert_eq!(s11.checkpoints_restored, 0);
+        assert_eq!(m.resilience_for_scope(0).checkpoints_restored, 1);
+        assert_eq!(m.snapshot_scope(11).resilience().retries, 3);
+        assert_eq!(m.snapshot().resilience().retries, 3, "global view");
+        // Releasing the scope drops its copy but not the lifetime totals.
+        m.release_scope(11);
+        assert!(!m.resilience_for_scope(11).any());
+        assert_eq!(m.resilience_totals().retries, 3);
+        assert_eq!(m.snapshot().resilience().checkpoints_restored, 1);
+        // All-zero deltas are a no-op (no scope entry materialized).
+        m.record_resilience(&ResilienceTotals::default());
+        assert!(!m.resilience_for_scope(11).any());
+        m.reset();
+        assert!(!m.resilience_totals().any());
     }
 
     #[test]

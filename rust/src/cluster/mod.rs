@@ -46,15 +46,17 @@
 //! partitioner-aware block-matrix pipeline records none.
 
 mod executor;
+mod faults;
 mod metrics;
 mod rdd;
 mod scheduler;
 mod shuffle;
 
 pub use executor::WorkerPool;
+pub use faults::FaultPlan;
 pub use metrics::{
     MethodStats, Metrics, MetricsScope, MetricsSnapshot, MetricsTotals, PlanNodeReport,
-    StageReport,
+    ResilienceTotals, StageReport,
 };
 pub use rdd::{Partitioner, Rdd};
 pub use scheduler::{list_schedule_makespan, VirtualClock};
@@ -76,18 +78,24 @@ pub struct Cluster {
     /// execution, so it is folded into the next narrow stage as
     /// `max(compute, transfer)` rather than summed.
     pending_shuffle: Mutex<f64>,
+    /// Seeded fault-injection schedule (`ClusterConfig::fault_seed`);
+    /// `None` disables the chaos layer entirely — every stage runs the
+    /// exact pre-existing path behind a single `Option` check.
+    fault: Option<FaultPlan>,
 }
 
 impl Cluster {
     pub fn new(config: ClusterConfig) -> Self {
         let pool = WorkerPool::new(config.worker_threads);
         let metrics = Metrics::with_history(config.metrics_history);
+        let fault = FaultPlan::from_config(&config);
         Cluster {
             config,
             metrics,
             vclock: Mutex::new(VirtualClock::new()),
             pool,
             pending_shuffle: Mutex::new(0.0),
+            fault,
         }
     }
 
@@ -157,6 +165,25 @@ impl Cluster {
     /// [`MetricsSnapshot::pinned_bytes`].
     pub fn set_pinned_bytes(&self, bytes: u64) {
         self.metrics.set_pinned_bytes(bytes)
+    }
+
+    /// Fold recovery counters (retries, speculation, checkpoints) into
+    /// the registry — attributed to the calling thread's scope. The
+    /// checkpoint layer records its written/restored counts through
+    /// this; the stage runner records retry/speculation deltas itself.
+    pub fn record_resilience(&self, delta: &ResilienceTotals) {
+        self.metrics.record_resilience(delta)
+    }
+
+    /// Cluster-lifetime recovery counters (all-zero when fault injection
+    /// is disabled and no checkpoints were written or restored).
+    pub fn resilience_totals(&self) -> ResilienceTotals {
+        self.metrics.resilience_totals()
+    }
+
+    /// Recovery counters attributed to one job scope.
+    pub fn resilience_for_scope(&self, scope: u64) -> ResilienceTotals {
+        self.metrics.resilience_for_scope(scope)
     }
 
     // ---------- RDD creation ----------
@@ -444,7 +471,10 @@ impl Cluster {
         per_task: impl Fn(T) -> Vec<U> + Sync,
     ) -> Rdd<U> {
         let ntasks = tasks.len();
-        let (outputs, durations) = self.pool.run_tasks(tasks, &per_task);
+        let (outputs, mut durations) = self.pool.run_tasks(tasks, &per_task);
+        if let Some(plan) = &self.fault {
+            durations = self.apply_faults(method, plan, &durations);
+        }
         let makespan = list_schedule_makespan(&durations, self.slots());
         // Overlap any pending shuffle transfer with this stage's execution.
         let pending = std::mem::take(&mut *self.pending_shuffle.lock().unwrap());
@@ -461,6 +491,25 @@ impl Cluster {
             task_durations: durations,
         });
         Rdd::from_partitions(outputs)
+    }
+
+    /// Run one stage's measured durations through the fault plan: the
+    /// effective durations (wasted attempts + backoffs + straggle/
+    /// speculation) replace the clean ones for virtual-time accounting,
+    /// recovery counters land in the metrics, and a spent retry budget
+    /// is job-fatal — the panic names the stage and partition, and the
+    /// service's per-job `catch_unwind` turns it into a Failed terminal.
+    fn apply_faults(&self, method: &str, plan: &FaultPlan, durations: &[f64]) -> Vec<f64> {
+        let outcome = plan.apply(durations);
+        self.metrics.record_resilience(&outcome.delta);
+        if let Some(partition) = outcome.exhausted {
+            panic!(
+                "stage `{method}` partition {partition}: task failed after {} attempts \
+                 (retry budget exhausted)",
+                self.config.task_retries + 1
+            );
+        }
+        outcome.durations
     }
 
     /// Charge one shuffle exchange to the interconnect and the metrics.
@@ -516,7 +565,10 @@ impl Cluster {
     pub fn run_single<T: Send>(&self, method: &str, f: impl FnOnce() -> T + Send) -> T {
         let t0 = std::time::Instant::now();
         let out = f();
-        let dt = t0.elapsed().as_secs_f64();
+        let mut dt = t0.elapsed().as_secs_f64();
+        if let Some(plan) = &self.fault {
+            dt = self.apply_faults(method, plan, &[dt])[0];
+        }
         self.vclock.lock().unwrap().advance(dt);
         self.metrics.record_stage(StageReport {
             method: method.to_string(),
@@ -738,6 +790,56 @@ mod tests {
         assert_eq!(c.metrics().driver_collects(), 1);
         c.reset();
         assert_eq!(c.metrics().driver_collects(), 0);
+    }
+
+    #[test]
+    fn fault_injection_changes_time_not_results() {
+        let clean = cluster(4);
+        let mut cfg = ClusterConfig::local(4);
+        cfg.fault_seed = Some(0xC0FFEE);
+        cfg.fault_rate = 0.2;
+        let chaotic = Cluster::new(cfg);
+        let run = |c: &Cluster| {
+            let rdd = c.parallelize((0..512i64).collect(), 16);
+            let doubled = c.map("chaos-map", rdd, |x: i64| x * 2);
+            let mut v = c.collect(c.filter("chaos-filter", doubled, |x| x % 4 == 0));
+            v.sort_unstable();
+            v
+        };
+        assert_eq!(run(&clean), run(&chaotic), "faults never change values");
+        assert!(!clean.resilience_totals().any(), "disabled path stays inert");
+        let r = chaotic.resilience_totals();
+        assert!(r.retries > 0, "rate 0.2 over 32 tasks must retry");
+        assert_eq!(r.retry_exhausted, 0);
+        // Retried/straggling stages charge more virtual time.
+        assert!(chaotic.virtual_secs() > 0.0);
+    }
+
+    #[test]
+    fn exhausted_retry_budget_names_stage_and_partition() {
+        let mut cfg = ClusterConfig::local(2);
+        cfg.fault_seed = Some(9);
+        cfg.fault_rate = 1.0;
+        cfg.fault_kinds = crate::config::FaultKinds {
+            task_panic: true,
+            task_error: true,
+            straggle: false,
+        };
+        cfg.task_retries = 2;
+        let c = Cluster::new(cfg);
+        let err = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let rdd = c.parallelize((0..8).collect(), 4);
+            let _ = c.collect(c.map("doomed", rdd, |x: i32| x));
+        }))
+        .expect_err("budget must exhaust at rate 1.0");
+        let msg = err
+            .downcast_ref::<String>()
+            .cloned()
+            .unwrap_or_else(|| "non-string panic".into());
+        assert!(msg.contains("stage `doomed`"), "panic names the stage: {msg}");
+        assert!(msg.contains("partition"), "panic names the partition: {msg}");
+        assert!(msg.contains("3 attempts"), "panic names the budget: {msg}");
+        assert!(c.resilience_totals().retry_exhausted > 0);
     }
 
     #[test]

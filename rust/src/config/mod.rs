@@ -54,6 +54,74 @@ impl NetworkConfig {
     }
 }
 
+/// Which fault kinds the deterministic injector may draw for a faulted
+/// task attempt. Parsed from a `|`-separated list
+/// (`fault_kinds=task_panic|task_error|straggle`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct FaultKinds {
+    /// The attempt dies mid-task (partial work lost, charged at a
+    /// seed-derived fraction of the task's duration).
+    pub task_panic: bool,
+    /// The attempt runs to the end and then fails (full duration charged).
+    pub task_error: bool,
+    /// The attempt succeeds but its duration is inflated by a
+    /// seed-derived factor — the straggler-speculation trigger.
+    pub straggle: bool,
+}
+
+impl FaultKinds {
+    pub fn all() -> Self {
+        FaultKinds {
+            task_panic: true,
+            task_error: true,
+            straggle: true,
+        }
+    }
+
+    pub fn none() -> Self {
+        FaultKinds {
+            task_panic: false,
+            task_error: false,
+            straggle: false,
+        }
+    }
+
+    pub fn any(&self) -> bool {
+        self.task_panic || self.task_error || self.straggle
+    }
+
+    pub fn parse(s: &str) -> Result<Self> {
+        let mut kinds = FaultKinds::none();
+        for part in s.split('|').filter(|p| !p.is_empty()) {
+            match part {
+                "task_panic" => kinds.task_panic = true,
+                "task_error" => kinds.task_error = true,
+                "straggle" => kinds.straggle = true,
+                other => {
+                    return Err(SpinError::config(format!(
+                        "unknown fault kind `{other}` (expected task_panic|task_error|straggle)"
+                    )));
+                }
+            }
+        }
+        Ok(kinds)
+    }
+
+    pub fn name(&self) -> String {
+        let mut parts = Vec::new();
+        if self.task_panic {
+            parts.push("task_panic");
+        }
+        if self.task_error {
+            parts.push("task_error");
+        }
+        if self.straggle {
+            parts.push("straggle");
+        }
+        parts.join("|")
+    }
+}
+
 /// Cluster topology + runtime knobs.
 #[derive(Debug, Clone, PartialEq)]
 pub struct ClusterConfig {
@@ -99,6 +167,49 @@ pub struct ClusterConfig {
     /// (scope *totals* stay exact either way). CLI:
     /// `--set metrics_history=N`.
     pub metrics_history: usize,
+    /// Deterministic fault injection: `Some(seed)` arms the injector —
+    /// every partition-task attempt draws from a stream derived from
+    /// `(seed, stage, partition, attempt)`, so a chaos run replays
+    /// exactly. `None` (default) disables injection entirely; the
+    /// execution path is then byte-identical to a build without the
+    /// feature. CLI: `--set fault_seed=N`.
+    pub fault_seed: Option<u64>,
+    /// Probability in `[0, 1]` that a given task attempt is faulted
+    /// (only consulted when `fault_seed` is set).
+    /// CLI: `--set fault_rate=0.05`.
+    pub fault_rate: f64,
+    /// Which fault kinds the injector may draw.
+    /// CLI: `--set fault_kinds=task_panic|task_error|straggle`.
+    pub fault_kinds: FaultKinds,
+    /// Retry budget per partition task: a task may fail this many times
+    /// and still succeed on the next attempt; one more fault exhausts
+    /// the budget and fails the stage (naming stage + partition).
+    /// CLI: `--set task_retries=N`.
+    pub task_retries: usize,
+    /// Base of the exponential retry backoff in virtual seconds: attempt
+    /// `k` (1-based) waits `retry_backoff_secs · 2^(k−1)` before
+    /// re-running. CLI: `--set retry_backoff_secs=0.05`.
+    pub retry_backoff_secs: f64,
+    /// Straggler speculation: when a task attempt runs longer than this
+    /// multiple of the stage's median task duration, a speculative copy
+    /// is launched at the threshold and the first finisher wins
+    /// (0 = speculation off). CLI: `--set speculation_multiplier=3`.
+    pub speculation_multiplier: f64,
+    /// Persist recursion-level results every N levels of the inversion
+    /// recursion to the job's checkpoint store, journaling a
+    /// `checkpoint` record — a restarted server resumes the job from
+    /// the deepest completed checkpoints instead of from scratch
+    /// (0 = off). CLI: `--set checkpoint_every_level=N`.
+    pub checkpoint_every_level: usize,
+    /// Per-tenant cap on *queued* jobs in the service (0 = unlimited):
+    /// a tenant at its quota gets a retryable rejection (HTTP 429)
+    /// instead of filling the shared queue.
+    /// CLI: `--set tenant_queue_quota=N`.
+    pub tenant_queue_quota: usize,
+    /// Per-tenant cap on *running* jobs (0 = unlimited): workers skip a
+    /// tenant already at its cap, so one tenant cannot occupy every
+    /// worker. CLI: `--set tenant_inflight_cap=N`.
+    pub tenant_inflight_cap: usize,
 }
 
 /// Default real worker-thread count: `SPIN_WORKER_THREADS` when set to a
@@ -135,6 +246,15 @@ impl ClusterConfig {
             plan_optimizer: true,
             cache_budget_bytes: 0,
             metrics_history: 0,
+            fault_seed: None,
+            fault_rate: 0.02,
+            fault_kinds: FaultKinds::all(),
+            task_retries: 3,
+            retry_backoff_secs: 0.05,
+            speculation_multiplier: 3.0,
+            checkpoint_every_level: 0,
+            tenant_queue_quota: 0,
+            tenant_inflight_cap: 0,
         }
     }
 
@@ -157,6 +277,15 @@ impl ClusterConfig {
             plan_optimizer: true,
             cache_budget_bytes: 0,
             metrics_history: 0,
+            fault_seed: None,
+            fault_rate: 0.02,
+            fault_kinds: FaultKinds::all(),
+            task_retries: 3,
+            retry_backoff_secs: 0.05,
+            speculation_multiplier: 3.0,
+            checkpoint_every_level: 0,
+            tenant_queue_quota: 0,
+            tenant_inflight_cap: 0,
         }
     }
 
@@ -188,6 +317,20 @@ impl ClusterConfig {
         if !(self.network.bandwidth_gbps > 0.0) || self.network.latency_us < 0.0 {
             return Err(SpinError::config("invalid network parameters"));
         }
+        if !(0.0..=1.0).contains(&self.fault_rate) {
+            return Err(SpinError::config("fault_rate must be in [0, 1]"));
+        }
+        if self.fault_seed.is_some() && !self.fault_kinds.any() {
+            return Err(SpinError::config(
+                "fault_seed is set but fault_kinds is empty",
+            ));
+        }
+        if !(self.retry_backoff_secs >= 0.0) {
+            return Err(SpinError::config("retry_backoff_secs must be >= 0"));
+        }
+        if !(self.speculation_multiplier >= 0.0) {
+            return Err(SpinError::config("speculation_multiplier must be >= 0"));
+        }
         Ok(())
     }
 
@@ -212,6 +355,33 @@ impl ClusterConfig {
                 Json::num(self.cache_budget_bytes as f64),
             ),
             ("metrics_history", Json::num(self.metrics_history as f64)),
+            (
+                "fault_seed",
+                match self.fault_seed {
+                    Some(s) => Json::num(s as f64),
+                    None => Json::Null,
+                },
+            ),
+            ("fault_rate", Json::num(self.fault_rate)),
+            ("fault_kinds", Json::str(self.fault_kinds.name())),
+            ("task_retries", Json::num(self.task_retries as f64)),
+            ("retry_backoff_secs", Json::num(self.retry_backoff_secs)),
+            (
+                "speculation_multiplier",
+                Json::num(self.speculation_multiplier),
+            ),
+            (
+                "checkpoint_every_level",
+                Json::num(self.checkpoint_every_level as f64),
+            ),
+            (
+                "tenant_queue_quota",
+                Json::num(self.tenant_queue_quota as f64),
+            ),
+            (
+                "tenant_inflight_cap",
+                Json::num(self.tenant_inflight_cap as f64),
+            ),
         ])
     }
 
@@ -281,6 +451,32 @@ impl ClusterConfig {
                 )?,
             },
             metrics_history: get_usize("metrics_history", base.metrics_history)?,
+            fault_seed: match v.get("fault_seed") {
+                None | Some(Json::Null) => base.fault_seed,
+                Some(j) => Some(j.as_i64().and_then(|n| u64::try_from(n).ok()).ok_or_else(
+                    || SpinError::config("`fault_seed` must be a non-negative integer or null"),
+                )?),
+            },
+            fault_rate: get_f64("fault_rate", base.fault_rate)?,
+            fault_kinds: match v.get("fault_kinds") {
+                None => base.fault_kinds,
+                Some(j) => FaultKinds::parse(
+                    j.as_str()
+                        .ok_or_else(|| SpinError::config("`fault_kinds` must be a string"))?,
+                )?,
+            },
+            task_retries: get_usize("task_retries", base.task_retries)?,
+            retry_backoff_secs: get_f64("retry_backoff_secs", base.retry_backoff_secs)?,
+            speculation_multiplier: get_f64(
+                "speculation_multiplier",
+                base.speculation_multiplier,
+            )?,
+            checkpoint_every_level: get_usize(
+                "checkpoint_every_level",
+                base.checkpoint_every_level,
+            )?,
+            tenant_queue_quota: get_usize("tenant_queue_quota", base.tenant_queue_quota)?,
+            tenant_inflight_cap: get_usize("tenant_inflight_cap", base.tenant_inflight_cap)?,
         };
         cfg.validate()?;
         Ok(cfg)
@@ -335,6 +531,22 @@ impl ClusterConfig {
             "metrics_history" => {
                 self.metrics_history = parse_usize(value)?;
             }
+            "fault_seed" => {
+                self.fault_seed = match value {
+                    "none" | "off" => None,
+                    v => Some(v.parse::<u64>().map_err(|_| {
+                        SpinError::config("fault_seed needs a non-negative integer (or none)")
+                    })?),
+                }
+            }
+            "fault_rate" => self.fault_rate = parse_f64(value)?,
+            "fault_kinds" => self.fault_kinds = FaultKinds::parse(value)?,
+            "task_retries" => self.task_retries = parse_usize(value)?,
+            "retry_backoff_secs" => self.retry_backoff_secs = parse_f64(value)?,
+            "speculation_multiplier" => self.speculation_multiplier = parse_f64(value)?,
+            "checkpoint_every_level" => self.checkpoint_every_level = parse_usize(value)?,
+            "tenant_queue_quota" => self.tenant_queue_quota = parse_usize(value)?,
+            "tenant_inflight_cap" => self.tenant_inflight_cap = parse_usize(value)?,
             other => {
                 return Err(SpinError::config(format!("unknown cluster key `{other}`")));
             }
@@ -695,8 +907,60 @@ mod tests {
         c.plan_optimizer = false;
         c.cache_budget_bytes = 1 << 20;
         c.metrics_history = 500;
+        c.fault_seed = Some(0xC0FFEE);
+        c.fault_rate = 0.25;
+        c.fault_kinds = FaultKinds {
+            task_panic: false,
+            task_error: true,
+            straggle: true,
+        };
+        c.task_retries = 5;
+        c.retry_backoff_secs = 0.125;
+        c.speculation_multiplier = 2.5;
+        c.checkpoint_every_level = 2;
+        c.tenant_queue_quota = 8;
+        c.tenant_inflight_cap = 2;
         let back = ClusterConfig::from_json(&c.to_json()).unwrap();
         assert_eq!(back, c);
+        // fault_seed=None survives the trip too (serialized as null).
+        let c = ClusterConfig::paper();
+        assert_eq!(ClusterConfig::from_json(&c.to_json()).unwrap(), c);
+    }
+
+    #[test]
+    fn fault_kinds_parse_and_render() {
+        assert_eq!(FaultKinds::parse("task_panic|task_error|straggle").unwrap(), FaultKinds::all());
+        let k = FaultKinds::parse("straggle").unwrap();
+        assert!(k.straggle && !k.task_panic && !k.task_error);
+        assert_eq!(k.name(), "straggle");
+        assert_eq!(FaultKinds::all().name(), "task_panic|task_error|straggle");
+        assert!(FaultKinds::parse("os_kill").is_err());
+        assert!(!FaultKinds::parse("").unwrap().any());
+    }
+
+    #[test]
+    fn resilience_validation_and_overrides() {
+        let mut c = ClusterConfig::local(2);
+        c.apply_override("fault_seed=42").unwrap();
+        assert_eq!(c.fault_seed, Some(42));
+        c.apply_override("fault_rate=0.1").unwrap();
+        c.apply_override("fault_kinds=straggle").unwrap();
+        c.apply_override("task_retries=2").unwrap();
+        c.apply_override("retry_backoff_secs=0.01").unwrap();
+        c.apply_override("speculation_multiplier=4").unwrap();
+        c.apply_override("checkpoint_every_level=1").unwrap();
+        c.apply_override("tenant_queue_quota=4").unwrap();
+        c.apply_override("tenant_inflight_cap=1").unwrap();
+        c.validate().unwrap();
+        c.apply_override("fault_seed=none").unwrap();
+        assert_eq!(c.fault_seed, None);
+        // Out-of-range and inconsistent settings are rejected.
+        assert!(c.apply_override("fault_rate=1.5").is_err());
+        assert!(c.apply_override("retry_backoff_secs=-1").is_err());
+        let mut armed = ClusterConfig::local(2);
+        armed.fault_seed = Some(1);
+        armed.fault_kinds = FaultKinds::none();
+        assert!(armed.validate().is_err(), "armed injector needs kinds");
     }
 
     #[test]

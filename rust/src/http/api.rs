@@ -66,11 +66,15 @@ fn with_id(raw: &str, f: impl FnOnce(u64) -> Response) -> Response {
     }
 }
 
-/// Map a service error onto the closest HTTP status: saturation is
-/// retryable (503), an id conflict is 409, anything else the client
-/// said wrong is 400.
+/// Map a service error onto the closest HTTP status: a tenant over its
+/// queue quota is 429 with a `Retry-After` hint (only that tenant must
+/// back off), global saturation is retryable (503), an id conflict is
+/// 409, anything else the client said wrong is 400.
 fn error_response(e: &SpinError) -> Response {
     let msg = e.to_string();
+    if msg.contains("queue quota") {
+        return Response::error(429, &msg).header("Retry-After", "1");
+    }
     let status = if msg.contains("queue is full") || msg.contains("shutting down") {
         503
     } else if msg.contains("different spec") {
@@ -281,8 +285,30 @@ fn job_metrics(state: &ServerState, id: u64) -> Response {
                 "driver_collects",
                 Json::num(snapshot.driver_collects() as f64),
             ),
+            ("resilience", resilience_json(snapshot.resilience())),
         ]),
     )
+}
+
+/// Recovery counters as one JSON object (per-job and service-wide).
+fn resilience_json(r: &crate::cluster::ResilienceTotals) -> Json {
+    Json::object(vec![
+        ("retries", Json::num(r.retries as f64)),
+        ("retry_exhausted", Json::num(r.retry_exhausted as f64)),
+        (
+            "speculative_launched",
+            Json::num(r.speculative_launched as f64),
+        ),
+        ("speculative_won", Json::num(r.speculative_won as f64)),
+        (
+            "checkpoints_written",
+            Json::num(r.checkpoints_written as f64),
+        ),
+        (
+            "checkpoints_restored",
+            Json::num(r.checkpoints_restored as f64),
+        ),
+    ])
 }
 
 /// `GET /v1/metrics`: the service-wide snapshot — cluster metrics plus
@@ -329,6 +355,23 @@ fn global_metrics(state: &ServerState) -> Response {
             ("queued_jobs", Json::num(service.queued_jobs() as f64)),
             ("workers", Json::num(service.worker_count() as f64)),
             ("generation", Json::num(state.generation as f64)),
+            ("resilience", resilience_json(m.resilience())),
+            (
+                "tenants",
+                Json::Array(
+                    service
+                        .tenant_gauges()
+                        .iter()
+                        .map(|g| {
+                            Json::object(vec![
+                                ("tenant", Json::str(g.tenant.clone())),
+                                ("queued", Json::num(g.queued as f64)),
+                                ("running", Json::num(g.running as f64)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
         ]),
     )
 }

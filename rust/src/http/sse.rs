@@ -13,6 +13,12 @@
 //! transition, closing with an `event: end`. While idle it emits
 //! `: heartbeat` comment lines every `sse_heartbeat_ms` so proxies and
 //! clients can distinguish "still running" from "connection died".
+//!
+//! Dead sockets cannot pin server memory: a failed event or heartbeat
+//! write ends the handler, and dropping its subscription deregisters
+//! the listener immediately (see
+//! [`crate::service::EventSubscription`]) — even when the job is
+//! already terminal and no further event would ever flush it out.
 
 use std::io::Write;
 use std::net::TcpStream;
@@ -98,6 +104,11 @@ pub(crate) fn stream_events(
                 }
             }
             Err(RecvTimeoutError::Timeout) => {
+                // The idle-time liveness probe doubles as dead-socket
+                // detection: a client that vanished fails this write
+                // within a heartbeat or two (RST after the first buffered
+                // write), the `?` ends the handler, and the subscription
+                // guard drops — freeing the subscriber slot.
                 stream.write_all(b": heartbeat\n\n")?;
                 stream.flush()?;
             }

@@ -94,6 +94,8 @@ pub struct Response {
     pub status: u16,
     pub content_type: &'static str,
     pub body: Vec<u8>,
+    /// Extra response headers (e.g. `Retry-After` on a 429).
+    pub headers: Vec<(&'static str, String)>,
 }
 
 impl Response {
@@ -102,12 +104,19 @@ impl Response {
             status,
             content_type: "application/json",
             body: value.compact().into_bytes(),
+            headers: Vec::new(),
         }
     }
 
     /// `{"error": msg}` with the given status.
     pub fn error(status: u16, msg: &str) -> Response {
         Response::json(status, &Json::object(vec![("error", Json::str(msg))]))
+    }
+
+    /// Attach an extra header (builder-style).
+    pub fn header(mut self, name: &'static str, value: impl Into<String>) -> Response {
+        self.headers.push((name, value.into()));
+        self
     }
 
     pub fn reason(status: u16) -> &'static str {
@@ -119,6 +128,7 @@ impl Response {
             405 => "Method Not Allowed",
             409 => "Conflict",
             413 => "Payload Too Large",
+            429 => "Too Many Requests",
             500 => "Internal Server Error",
             503 => "Service Unavailable",
             505 => "HTTP Version Not Supported",
@@ -129,12 +139,16 @@ impl Response {
     pub fn write(&self, w: &mut impl Write) -> std::io::Result<()> {
         write!(
             w,
-            "HTTP/1.1 {} {}\r\nContent-Type: {}\r\nContent-Length: {}\r\nConnection: close\r\n\r\n",
+            "HTTP/1.1 {} {}\r\nContent-Type: {}\r\nContent-Length: {}\r\nConnection: close\r\n",
             self.status,
             Response::reason(self.status),
             self.content_type,
             self.body.len()
         )?;
+        for (name, value) in &self.headers {
+            write!(w, "{name}: {value}\r\n")?;
+        }
+        write!(w, "\r\n")?;
         w.write_all(&self.body)?;
         w.flush()
     }
@@ -188,5 +202,19 @@ mod tests {
         assert!(text.starts_with("HTTP/1.1 404 Not Found\r\n"), "{text}");
         assert!(text.contains("Content-Length: 16"), "{text}");
         assert!(text.ends_with("{\"error\":\"nope\"}"), "{text}");
+    }
+
+    #[test]
+    fn extra_headers_render_before_the_body() {
+        let mut out = Vec::new();
+        Response::error(429, "slow down")
+            .header("Retry-After", "1")
+            .write(&mut out)
+            .unwrap();
+        let text = String::from_utf8(out).unwrap();
+        assert!(text.starts_with("HTTP/1.1 429 Too Many Requests\r\n"), "{text}");
+        let (head, body) = text.split_once("\r\n\r\n").unwrap();
+        assert!(head.contains("Retry-After: 1"), "{text}");
+        assert_eq!(body, "{\"error\":\"slow down\"}");
     }
 }

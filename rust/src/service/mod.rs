@@ -90,7 +90,8 @@ use crate::error::{Result, SpinError};
 use crate::linalg::{inverse_residual, Matrix};
 use crate::plan::{CacheStats, MatExpr};
 use crate::session::{SessionBuilder, SpinSession};
-use crate::store::joblog::JobLog;
+use crate::store::checkpoint;
+use crate::store::joblog::{CheckpointRecord, JobLog};
 use crate::util::{now_ms, plock, pwait};
 
 use scheduler::FairShareQueue;
@@ -331,6 +332,11 @@ impl JobHandle {
         // must not resurrect the job.
         self.inner
             .log_terminal(id, JobStatus::Cancelled, None, None);
+        // A cancelled job's recovered checkpoints will never be used.
+        if let Some(log) = &self.inner.job_log {
+            checkpoint::cleanup(log.dir(), id);
+        }
+        plock(&self.inner.recovered_ckpts).remove(&id);
         self.state.cv.notify_all();
         self.inner.publish(&self.state, JobStatus::Cancelled);
         true
@@ -365,11 +371,57 @@ impl JobHandle {
 /// id-based lookup of long-finished jobs stops resolving.
 const JOB_RETENTION_CAP: usize = 256;
 
+/// Per-job phase-transition history cap. A job's lifecycle is a handful
+/// of transitions; the cap only matters as a hard bound so a pathological
+/// path (or a future retry loop) can't grow the event bus without limit —
+/// the oldest events are dropped first.
+const JOB_EVENT_HISTORY_CAP: usize = 32;
+
+/// Per-tenant occupancy, reported as gauges by `/v1/metrics` and the
+/// serve summary.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TenantGauge {
+    pub tenant: String,
+    /// Jobs queued and not yet claimed.
+    pub queued: usize,
+    /// Jobs currently running on a worker.
+    pub running: usize,
+}
+
 /// One event-bus listener (see [`SpinService::subscribe`]).
 struct Subscriber {
     /// `None` = all jobs.
     job: Option<u64>,
     tx: mpsc::Sender<JobEvent>,
+    /// Identity for drop-time deregistration (see [`EventSubscription`]).
+    token: u64,
+}
+
+/// A live event subscription: the receiver plus drop-time
+/// deregistration. `publish` prunes a subscriber only when a send to it
+/// fails, and only for events matching its filter — so a listener on an
+/// already-terminal job (a dead SSE socket, an abandoned receiver)
+/// would otherwise sit in the subscriber list forever. Dropping this
+/// guard frees the slot deterministically. Derefs to the underlying
+/// [`mpsc::Receiver`].
+pub struct EventSubscription {
+    rx: mpsc::Receiver<JobEvent>,
+    token: u64,
+    inner: Arc<ServiceInner>,
+}
+
+impl std::ops::Deref for EventSubscription {
+    type Target = mpsc::Receiver<JobEvent>;
+
+    fn deref(&self) -> &Self::Target {
+        &self.rx
+    }
+}
+
+impl Drop for EventSubscription {
+    fn drop(&mut self) {
+        plock(&self.inner.subscribers).retain(|s| s.token != self.token);
+    }
 }
 
 struct ServiceInner {
@@ -384,9 +436,17 @@ struct ServiceInner {
     jobs: Mutex<BTreeMap<u64, Arc<JobState>>>,
     subscribers: Mutex<Vec<Subscriber>>,
     event_seq: AtomicU64,
+    /// Subscription tokens (see [`EventSubscription`]).
+    sub_seq: AtomicU64,
     /// Durable job log (`spin serve --http --store DIR`); `None` for
     /// purely in-process services.
     job_log: Option<Arc<JobLog>>,
+    /// Jobs currently running per tenant (the in-flight cap's gauge).
+    running: Mutex<BTreeMap<String, usize>>,
+    /// Checkpoint records replayed from the job log, keyed by job id —
+    /// attached to the job's execution when it is resubmitted, consumed
+    /// at its terminal.
+    recovered_ckpts: Mutex<BTreeMap<u64, Vec<CheckpointRecord>>>,
 }
 
 impl ServiceInner {
@@ -465,7 +525,19 @@ impl ServiceInner {
             }
         }
         self.publish(&state, JobStatus::Queued);
-        if let Err(e) = plock(&self.queue).push(&state.spec.tenant, Arc::clone(&state)) {
+        let pushed = {
+            let mut queue = plock(&self.queue);
+            let quota = self.session.cluster().config().tenant_queue_quota;
+            if quota > 0 && queue.tenant_len(&state.spec.tenant) >= quota {
+                Err(SpinError::cluster(format!(
+                    "tenant `{}` is over its queue quota ({quota} jobs queued)",
+                    state.spec.tenant
+                )))
+            } else {
+                queue.push(&state.spec.tenant, Arc::clone(&state))
+            }
+        };
+        if let Err(e) = pushed {
             // Queue full: withdraw the job entirely. The log pairs the
             // submitted record with a cancelled terminal so a restart
             // does not resurrect a job the client saw rejected.
@@ -493,7 +565,14 @@ impl ServiceInner {
             status,
             ts_ms: now_ms(),
         };
-        plock(&job.history).push(event.clone());
+        {
+            let mut history = plock(&job.history);
+            history.push(event.clone());
+            if history.len() > JOB_EVENT_HISTORY_CAP {
+                let excess = history.len() - JOB_EVENT_HISTORY_CAP;
+                history.drain(..excess);
+            }
+        }
         let mut subs = plock(&self.subscribers);
         subs.retain(|s| {
             if s.job.is_some_and(|id| id != event.job_id) {
@@ -522,7 +601,7 @@ impl ServiceInner {
     /// cleanly loses.
     fn claim_next(&self) -> Option<Arc<JobState>> {
         let mut queue = plock(&self.queue);
-        claim_from(&mut queue)
+        claim_from(self, &mut queue)
     }
 
     /// Lower a spec onto interned plan nodes (the cross-job sharing
@@ -564,7 +643,9 @@ impl ServiceInner {
         let outcome = {
             // Everything this job records on the shared cluster is tagged
             // with its id, so per-job windows stay exact under
-            // concurrency.
+            // concurrency. The checkpoint context (when checkpointing is
+            // on) rides the same thread for the same span.
+            let _ckpt = self.install_checkpoints(job);
             let _scope = Metrics::enter_scope(job.id);
             panic::catch_unwind(AssertUnwindSafe(|| self.execute(job)))
         };
@@ -588,11 +669,62 @@ impl ServiceInner {
             _ => unreachable!("run_job only produces completed/failed"),
         };
         self.log_terminal(job.id, status, error.as_deref(), residual);
+        // A terminal job's checkpoints can never be restored again: free
+        // the disk and the replayed records.
+        if let Some(log) = &self.job_log {
+            if self.session.cluster().config().checkpoint_every_level > 0 {
+                checkpoint::cleanup(log.dir(), job.id);
+            }
+        }
+        plock(&self.recovered_ckpts).remove(&job.id);
         let mut phase = plock(&job.phase);
-        *phase = terminal;
+        // Don't overwrite a terminal another path already set (the drain
+        // deadline hard-fails wedged jobs; if one finishes after all, the
+        // hard-fail verdict the client saw stands).
+        let already_terminal = phase_status(&phase).is_terminal();
+        if !already_terminal {
+            *phase = terminal;
+        }
         drop(phase);
         job.cv.notify_all();
-        self.publish(job, status);
+        if !already_terminal {
+            self.publish(job, status);
+        }
+        // Free the tenant's in-flight slot and wake the workers: a capped
+        // tenant's queued jobs become claimable the moment one finishes.
+        {
+            let mut running = plock(&self.running);
+            if let Some(n) = running.get_mut(&job.spec.tenant) {
+                *n = n.saturating_sub(1);
+                if *n == 0 {
+                    running.remove(&job.spec.tenant);
+                }
+            }
+        }
+        self.work_cv.notify_all();
+    }
+
+    /// Install the thread-local checkpoint context for one job run, when
+    /// checkpointing is configured (`checkpoint_every_level > 0`) and a
+    /// durable job log exists to journal the records (checkpoints without
+    /// a journal could never be trusted at replay).
+    fn install_checkpoints(&self, job: &JobState) -> Option<checkpoint::InstallGuard> {
+        let every = self.session.cluster().config().checkpoint_every_level;
+        if every == 0 {
+            return None;
+        }
+        let log = self.job_log.as_ref()?;
+        let records = plock(&self.recovered_ckpts)
+            .get(&job.id)
+            .cloned()
+            .unwrap_or_default();
+        Some(checkpoint::install(
+            job.id,
+            log.dir(),
+            every,
+            Some(Arc::clone(log)),
+            &records,
+        ))
     }
 
     fn execute(&self, job: &JobState) -> Result<JobOutcome> {
@@ -614,20 +746,36 @@ impl ServiceInner {
 }
 
 /// Pop+claim under the caller's queue lock (see
-/// [`ServiceInner::claim_next`]). The defensive skip of a non-`Queued`
-/// phase cannot fire under the current invariants (queued jobs are always
-/// `Queued` — cancel removes them before flipping the phase) but keeps
-/// the loop safe if a new terminal path ever appears.
-fn claim_from(queue: &mut FairShareQueue<Arc<JobState>>) -> Option<Arc<JobState>> {
-    while let Some(job) = queue.pop() {
+/// [`ServiceInner::claim_next`]). Tenants at their in-flight cap are
+/// skipped (their jobs stay queued; other tenants keep flowing) and the
+/// claimed tenant's running count is bumped before the queue lock is
+/// released, so two workers can never over-admit one tenant. The
+/// defensive skip of a non-`Queued` phase cannot fire under the current
+/// invariants (queued jobs are always `Queued` — cancel removes them
+/// before flipping the phase) but keeps the loop safe if a new terminal
+/// path ever appears.
+fn claim_from(
+    inner: &ServiceInner,
+    queue: &mut FairShareQueue<Arc<JobState>>,
+) -> Option<Arc<JobState>> {
+    let cap = inner.session.cluster().config().tenant_inflight_cap;
+    loop {
+        let job = if cap == 0 {
+            queue.pop()
+        } else {
+            let running = plock(&inner.running);
+            queue.pop_where(|tenant| running.get(tenant).copied().unwrap_or(0) < cap)
+        }?;
         let mut phase = plock(&job.phase);
         if matches!(*phase, Phase::Queued) {
             *phase = Phase::Running;
             drop(phase);
+            *plock(&inner.running)
+                .entry(job.spec.tenant.clone())
+                .or_insert(0) += 1;
             return Some(job);
         }
     }
-    None
 }
 
 fn worker_loop(inner: Arc<ServiceInner>) {
@@ -635,7 +783,7 @@ fn worker_loop(inner: Arc<ServiceInner>) {
         let job = {
             let mut queue = plock(&inner.queue);
             loop {
-                if let Some(job) = claim_from(&mut queue) {
+                if let Some(job) = claim_from(&inner, &mut queue) {
                     break Some(job);
                 }
                 if inner.shutdown.load(Ordering::SeqCst) {
@@ -729,7 +877,10 @@ impl ServiceBuilder {
             jobs: Mutex::new(BTreeMap::new()),
             subscribers: Mutex::new(Vec::new()),
             event_seq: AtomicU64::new(0),
+            sub_seq: AtomicU64::new(0),
             job_log: self.job_log,
+            running: Mutex::new(BTreeMap::new()),
+            recovered_ckpts: Mutex::new(BTreeMap::new()),
         });
         let workers = (0..self.workers)
             .map(|i| {
@@ -794,9 +945,12 @@ impl SpinService {
     /// subscriber is registered *before* the history snapshot is taken,
     /// so every event is in the snapshot or the live feed (possibly
     /// both — dedup on [`JobEvent::seq`]); none can fall between.
-    pub fn subscribe(&self, job: Option<u64>) -> (Vec<JobEvent>, mpsc::Receiver<JobEvent>) {
+    /// Dropping the returned [`EventSubscription`] deregisters the
+    /// listener even if no further event for its job ever fires.
+    pub fn subscribe(&self, job: Option<u64>) -> (Vec<JobEvent>, EventSubscription) {
         let (tx, rx) = mpsc::channel();
-        plock(&self.inner.subscribers).push(Subscriber { job, tx });
+        let token = self.inner.sub_seq.fetch_add(1, Ordering::Relaxed) + 1;
+        plock(&self.inner.subscribers).push(Subscriber { job, tx, token });
         let mut history: Vec<JobEvent> = {
             let jobs = plock(&self.inner.jobs);
             match job {
@@ -811,7 +965,51 @@ impl SpinService {
             }
         };
         history.sort_by_key(|e| e.seq);
-        (history, rx)
+        let sub = EventSubscription {
+            rx,
+            token,
+            inner: Arc::clone(&self.inner),
+        };
+        (history, sub)
+    }
+
+    /// Attach checkpoint records replayed from the job log to a job id
+    /// that is about to be resubmitted ([`SpinService::submit_with_id`]).
+    /// When the job runs, each recorded recursion level restores from the
+    /// block store instead of recomputing. Records are consumed (and the
+    /// on-disk checkpoints deleted) when the job reaches a terminal.
+    pub fn preload_checkpoints(&self, id: u64, records: Vec<CheckpointRecord>) {
+        if records.is_empty() {
+            return;
+        }
+        plock(&self.inner.recovered_ckpts).insert(id, records);
+    }
+
+    /// Per-tenant queued/running occupancy, sorted by tenant name —
+    /// `/v1/metrics` gauges and the serve summary.
+    pub fn tenant_gauges(&self) -> Vec<TenantGauge> {
+        let mut by_tenant: BTreeMap<String, TenantGauge> = BTreeMap::new();
+        for (tenant, queued) in plock(&self.inner.queue).tenant_counts() {
+            by_tenant.insert(
+                tenant.clone(),
+                TenantGauge {
+                    tenant,
+                    queued,
+                    running: 0,
+                },
+            );
+        }
+        for (tenant, &running) in plock(&self.inner.running).iter() {
+            by_tenant
+                .entry(tenant.clone())
+                .or_insert_with(|| TenantGauge {
+                    tenant: tenant.clone(),
+                    queued: 0,
+                    running: 0,
+                })
+                .running = running;
+        }
+        by_tenant.into_values().collect()
     }
 
     /// Block until no remembered job is queued or running — the graceful
@@ -835,6 +1033,62 @@ impl SpinService {
                 }
             }
         }
+    }
+
+    /// [`wait_idle`](SpinService::wait_idle) with a deadline: returns
+    /// `true` if every remembered job reached a terminal within
+    /// `timeout`, `false` if some are still queued/running (the caller
+    /// then decides — `spin serve`'s drain deadline hard-fails them via
+    /// [`fail_pending`](SpinService::fail_pending)).
+    pub fn wait_idle_timeout(&self, timeout: std::time::Duration) -> bool {
+        let deadline = std::time::Instant::now() + timeout;
+        loop {
+            let any_pending = plock(&self.inner.jobs)
+                .values()
+                .any(|j| !phase_status(&plock(&j.phase)).is_terminal());
+            if !any_pending {
+                return true;
+            }
+            if std::time::Instant::now() >= deadline {
+                return false;
+            }
+            std::thread::sleep(std::time::Duration::from_millis(20));
+        }
+    }
+
+    /// Hard-fail every job that is not yet terminal — the drain
+    /// deadline's last resort. Queued jobs are removed from the queue so
+    /// no worker claims them; each failed job gets a journaled terminal
+    /// record (durability before visibility, like every other terminal)
+    /// so a restarted server serves the verdict instead of re-running a
+    /// job the operator decided to abandon. Returns how many jobs were
+    /// failed. A still-running job's thread is not interrupted — its
+    /// eventual result is discarded (the hard-fail terminal stands).
+    pub fn fail_pending(&self, reason: &str) -> usize {
+        // Empty the queue first: a drained job can no longer be claimed.
+        let _abandoned = plock(&self.inner.queue).drain();
+        let pending: Vec<Arc<JobState>> = plock(&self.inner.jobs)
+            .values()
+            .filter(|j| !phase_status(&plock(&j.phase)).is_terminal())
+            .cloned()
+            .collect();
+        let mut failed = 0;
+        for job in pending {
+            // Journal first; the record wins replay even if the running
+            // thread finishes later (first terminal per id wins).
+            self.inner
+                .log_terminal(job.id, JobStatus::Failed, Some(reason), None);
+            let mut phase = plock(&job.phase);
+            if phase_status(&phase).is_terminal() {
+                continue;
+            }
+            *phase = Phase::Failed(reason.to_string());
+            drop(phase);
+            job.cv.notify_all();
+            self.inner.publish(&job, JobStatus::Failed);
+            failed += 1;
+        }
+        failed
     }
 
     /// Run queued jobs on the calling thread until the queue is empty;
@@ -1378,6 +1632,38 @@ mod tests {
         assert!(history.iter().all(|e| e.job_id == h2.id()));
     }
 
+    /// Satellite (SSE hygiene): a listener on an already-terminal job
+    /// never receives another event, so publish-side pruning cannot
+    /// reach it — the subscription guard's drop must free the slot. And
+    /// per-job event history is bounded, so a pathological job cannot
+    /// grow server memory without limit.
+    #[test]
+    fn dropped_subscription_frees_its_slot_and_history_is_bounded() {
+        let service = sync_service();
+        let h = service
+            .submit(JobSpec::invert(MatrixSpec::new(16, 4).seeded(5)))
+            .unwrap();
+        service.run_pending();
+        h.wait().unwrap();
+        let (history, sub) = service.subscribe(Some(h.id()));
+        assert_eq!(history.last().unwrap().status, JobStatus::Completed);
+        assert_eq!(plock(&service.inner.subscribers).len(), 1);
+        drop(sub);
+        assert_eq!(
+            plock(&service.inner.subscribers).len(),
+            0,
+            "dead subscriber slot freed without waiting for a failed send"
+        );
+        // Flood the job with events: history stays capped, newest kept.
+        for _ in 0..(JOB_EVENT_HISTORY_CAP * 2) {
+            service.inner.publish(&h.state, JobStatus::Running);
+        }
+        let history = h.history();
+        assert_eq!(history.len(), JOB_EVENT_HISTORY_CAP);
+        let seqs: Vec<u64> = history.iter().map(|e| e.seq).collect();
+        assert!(seqs.windows(2).all(|w| w[0] < w[1]), "newest retained");
+    }
+
     #[test]
     fn submit_with_id_is_idempotent_by_id() {
         let service = sync_service();
@@ -1467,6 +1753,187 @@ mod tests {
         let (_, replay) = JobLog::open(&dir).unwrap();
         assert_eq!(replay.pending().count(), 0);
         assert_eq!(replay.jobs.len(), 2);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    /// Satellite (tenant protection): queue quota rejects a flooding
+    /// tenant's submits with a `quota` error (HTTP maps it to 429), the
+    /// in-flight cap keeps a tenant's claims bounded while other tenants
+    /// keep flowing, and the gauges report both sides.
+    #[test]
+    fn tenant_quota_and_inflight_cap_protect_other_tenants() {
+        let mut cfg = ClusterConfig::local(2);
+        cfg.tenant_queue_quota = 2;
+        cfg.tenant_inflight_cap = 1;
+        let service = SpinService::builder()
+            .cluster_config(cfg)
+            .workers(0)
+            .queue_capacity(16)
+            .build()
+            .unwrap();
+        let spec = |seed: u64| {
+            JobSpec::multiply(
+                MatrixSpec::new(16, 4).seeded(seed),
+                MatrixSpec::new(16, 4).seeded(seed + 50),
+            )
+        };
+        let a1 = service.submit(spec(1).tenant("alice")).unwrap();
+        let a2 = service.submit(spec(2).tenant("alice")).unwrap();
+        let err = service.submit(spec(3).tenant("alice")).unwrap_err();
+        assert!(err.to_string().contains("quota"), "{err}");
+        // The rejected job left no residue: not queued, not remembered.
+        assert_eq!(service.queued_jobs(), 2);
+        // Another tenant is untouched by alice's quota.
+        let b1 = service.submit(spec(4).tenant("bob")).unwrap();
+        let gauges = service.tenant_gauges();
+        let alice = gauges.iter().find(|g| g.tenant == "alice").unwrap();
+        assert_eq!((alice.queued, alice.running), (2, 0));
+        // Claim 1 takes alice's head; alice is then AT her in-flight cap,
+        // so claim 2 must skip her backlog and serve bob.
+        let j1 = service.inner.claim_next().unwrap();
+        assert_eq!(j1.id, a1.id());
+        let j2 = service.inner.claim_next().unwrap();
+        assert_eq!(j2.id, b1.id(), "capped tenant must not block the rotation");
+        assert!(
+            service.inner.claim_next().is_none(),
+            "alice's second job is unclaimable while she is at cap"
+        );
+        let gauges = service.tenant_gauges();
+        let alice = gauges.iter().find(|g| g.tenant == "alice").unwrap();
+        assert_eq!((alice.queued, alice.running), (1, 1));
+        // Finishing a job frees the slot; the backlog then drains.
+        service.inner.run_job(&j1);
+        service.inner.run_job(&j2);
+        let j3 = service.inner.claim_next().unwrap();
+        assert_eq!(j3.id, a2.id());
+        service.inner.run_job(&j3);
+        for h in [a1, a2, b1] {
+            assert_eq!(h.status(), JobStatus::Completed);
+        }
+        assert!(service.tenant_gauges().is_empty(), "all gauges settled");
+    }
+
+    /// Satellite (drain deadline): `fail_pending` hard-fails everything
+    /// not yet terminal with a journaled record, and `wait_idle_timeout`
+    /// reports whether the drain beat the deadline.
+    #[test]
+    fn drain_deadline_hard_fails_pending_jobs_durably() {
+        use crate::store::joblog::JobLog;
+        let dir = std::env::temp_dir().join(format!("spin_svc_drain_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let (log, _) = JobLog::open(&dir).unwrap();
+        let service = SpinService::builder()
+            .cores(2)
+            .workers(0)
+            .job_log(Arc::new(log))
+            .build()
+            .unwrap();
+        let h1 = service
+            .submit(JobSpec::invert(MatrixSpec::new(16, 4).seeded(1)))
+            .unwrap();
+        let h2 = service
+            .submit(JobSpec::invert(MatrixSpec::new(16, 4).seeded(2)).tenant("other"))
+            .unwrap();
+        // No workers: the queue is wedged by construction.
+        assert!(!service.wait_idle_timeout(std::time::Duration::from_millis(60)));
+        assert_eq!(service.fail_pending("drain timeout"), 2);
+        assert!(service.wait_idle_timeout(std::time::Duration::from_millis(10)));
+        for h in [&h1, &h2] {
+            assert_eq!(h.status(), JobStatus::Failed);
+            let t = h.terminal().unwrap();
+            assert!(t.error.as_deref().unwrap().contains("drain timeout"));
+        }
+        assert_eq!(service.queued_jobs(), 0, "queue emptied, nothing claimable");
+        drop(service);
+        // The terminals are durable: a restart resumes nothing.
+        let (_, replay) = JobLog::open(&dir).unwrap();
+        assert_eq!(replay.pending().count(), 0);
+        assert!(replay
+            .jobs
+            .iter()
+            .all(|j| j.terminal.as_ref().unwrap().status == JobStatus::Failed));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    /// Tentpole (checkpoint/resume): a job whose process dies after its
+    /// recursion levels were checkpointed — journal has `submitted` +
+    /// `checkpoint` records but no terminal — is re-enqueued on restart
+    /// and RESTORES the checkpointed levels instead of recomputing: zero
+    /// leaf stages in the resumed job's scope, bit-identical result, and
+    /// the checkpoint dir is reclaimed at the terminal.
+    #[test]
+    fn checkpointed_job_resumes_from_journaled_levels_after_crash() {
+        use crate::runtime::NativeBackend;
+        use crate::store::joblog::JobLog;
+        let dir = std::env::temp_dir().join(format!("spin_svc_ckpt_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let mut cfg = ClusterConfig::local(2);
+        cfg.checkpoint_every_level = 1;
+        let spec = JobSpec::invert(MatrixSpec::new(32, 8).seeded(0xCE));
+        // Clean reference result.
+        let session = SpinSession::local(2).unwrap();
+        let a = session.random_seeded(32, 8, 0xCE).unwrap();
+        let want = a.inverse().unwrap().to_dense().unwrap();
+
+        // Generation 1: the job is durably submitted, and the worker gets
+        // as far as checkpointing every level — then the process "dies"
+        // before any terminal is logged. We drive the algorithm by hand
+        // under the same checkpoint context a worker would install.
+        {
+            let (log, _) = JobLog::open(&dir).unwrap();
+            let log = Arc::new(log);
+            let service = SpinService::builder()
+                .cluster_config(cfg.clone())
+                .workers(0)
+                .job_log(Arc::clone(&log))
+                .build()
+                .unwrap();
+            let h = service.submit(spec.clone()).unwrap();
+            assert_eq!(h.id(), 1);
+            let _ctx = checkpoint::install(1, log.dir(), 1, Some(Arc::clone(&log)), &[]);
+            let cluster = crate::cluster::Cluster::new(ClusterConfig::local(2));
+            let mut job = crate::config::JobConfig::new(32, 8);
+            job.seed = 0xCE;
+            let a = crate::blockmatrix::BlockMatrix::random(&job).unwrap();
+            let _ = crate::algos::spin::spin_inverse_impl(&cluster, &NativeBackend, &a, &job)
+                .unwrap();
+            // Service drop abandons the queued job WITHOUT a terminal
+            // record — exactly a crash's disk state.
+        }
+
+        // Generation 2: replay finds the pending job with its journal of
+        // checkpoints; the server re-enqueues it with them preloaded.
+        let (log, replay) = JobLog::open(&dir).unwrap();
+        let pending: Vec<&crate::store::ReplayedJob> = replay.pending().collect();
+        assert_eq!(pending.len(), 1);
+        let keys: Vec<&str> = pending[0].checkpoints.iter().map(|c| c.key.as_str()).collect();
+        assert!(keys.contains(&"r-m"), "root level journaled: {keys:?}");
+        assert!(keys.contains(&"r.0-m") && keys.contains(&"r.1-m"), "{keys:?}");
+        let service = SpinService::builder()
+            .cluster_config(cfg)
+            .workers(0)
+            .job_log(Arc::new(log))
+            .build()
+            .unwrap();
+        service.preload_checkpoints(pending[0].id, pending[0].checkpoints.clone());
+        let h = service
+            .submit_with_id(pending[0].id, pending[0].spec.clone())
+            .unwrap();
+        service.run_pending();
+        let out = h.wait().unwrap();
+        // The restored root level skipped the ENTIRE recursion: no leaf
+        // inversion stage ran in this job's scope.
+        assert!(
+            out.metrics.method("leafNode").is_none(),
+            "resumed job must not recompute checkpointed levels"
+        );
+        assert!(out.metrics.resilience().checkpoints_restored >= 1);
+        assert_eq!(out.metrics.resilience().checkpoints_written, 0);
+        // Bit-identical to the clean, uninterrupted run.
+        assert_eq!(out.dense.max_abs_diff(&want), 0.0);
+        assert!(out.residual.unwrap() < 1e-8);
+        // Terminal reclaims the checkpoint storage.
+        assert!(!dir.join("checkpoints").join("job_1").exists());
         let _ = std::fs::remove_dir_all(&dir);
     }
 

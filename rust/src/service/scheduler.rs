@@ -30,6 +30,19 @@ impl<T> FairShareQueue<T> {
         self.len
     }
 
+    /// Items queued under one tenant (the per-tenant quota gauge).
+    pub fn tenant_len(&self, tenant: &str) -> usize {
+        self.queues.get(tenant).map_or(0, |q| q.len())
+    }
+
+    /// Queued-count per tenant, for metrics gauges.
+    pub fn tenant_counts(&self) -> Vec<(String, usize)> {
+        self.queues
+            .iter()
+            .map(|(tenant, q)| (tenant.clone(), q.len()))
+            .collect()
+    }
+
     /// Enqueue under `tenant`; errors when the service is saturated.
     pub fn push(&mut self, tenant: &str, item: T) -> Result<()> {
         if self.len >= self.capacity {
@@ -51,19 +64,34 @@ impl<T> FairShareQueue<T> {
     /// tenant's queue, then rotate that tenant to the back (if it still
     /// has work).
     pub fn pop(&mut self) -> Option<T> {
-        let tenant = self.rr.pop_front()?;
-        let queue = self
-            .queues
-            .get_mut(&tenant)
-            .expect("rr names a tenant with a queue");
-        let item = queue.pop_front().expect("rr names a non-empty queue");
-        if queue.is_empty() {
-            self.queues.remove(&tenant);
-        } else {
-            self.rr.push_back(tenant);
+        self.pop_where(|_| true)
+    }
+
+    /// [`pop`](Self::pop), skipping tenants `admit` rejects (the
+    /// in-flight cap): a blocked tenant rotates to the back and an
+    /// admitted one is served, so a capped tenant never blocks the rest
+    /// of the rotation. Returns `None` when no admitted tenant has work.
+    pub fn pop_where(&mut self, admit: impl Fn(&str) -> bool) -> Option<T> {
+        for _ in 0..self.rr.len() {
+            let tenant = self.rr.pop_front()?;
+            if !admit(&tenant) {
+                self.rr.push_back(tenant);
+                continue;
+            }
+            let queue = self
+                .queues
+                .get_mut(&tenant)
+                .expect("rr names a tenant with a queue");
+            let item = queue.pop_front().expect("rr names a non-empty queue");
+            if queue.is_empty() {
+                self.queues.remove(&tenant);
+            } else {
+                self.rr.push_back(tenant);
+            }
+            self.len -= 1;
+            return Some(item);
         }
-        self.len -= 1;
-        Some(item)
+        None
     }
 
     /// Remove one queued item of `tenant` matching `pred` (job
@@ -149,6 +177,26 @@ mod tests {
         assert_eq!(q.pop(), Some(2));
         assert_eq!(q.pop(), Some(4));
         assert_eq!(q.pop(), None);
+    }
+
+    #[test]
+    fn pop_where_skips_capped_tenants_without_starving_others() {
+        let mut q = FairShareQueue::new(8);
+        q.push("alice", "a1").unwrap();
+        q.push("alice", "a2").unwrap();
+        q.push("bob", "b1").unwrap();
+        assert_eq!(q.tenant_len("alice"), 2);
+        assert_eq!(q.tenant_len("nobody"), 0);
+        // alice is at her in-flight cap: bob is served instead.
+        assert_eq!(q.pop_where(|t| t != "alice"), Some("b1"));
+        // Nobody admitted → None, queue intact.
+        assert_eq!(q.pop_where(|_| false), None);
+        assert_eq!(q.len(), 2);
+        let counts = q.tenant_counts();
+        assert_eq!(counts, vec![("alice".to_string(), 2)]);
+        // Cap lifted: alice drains in order.
+        assert_eq!(q.pop(), Some("a1"));
+        assert_eq!(q.pop(), Some("a2"));
     }
 
     #[test]

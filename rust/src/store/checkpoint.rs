@@ -1,0 +1,346 @@
+//! Mid-job checkpoint/resume for the recursive inversion algorithms.
+//!
+//! The SPIN and LU schemes recurse over block quadrants; every recursion
+//! level ends at a materialization boundary where a whole intermediate
+//! [`BlockMatrix`] exists. With `--set checkpoint_every_level=N`, levels
+//! at depth `0, N, 2N, …` persist that result to a per-job block store
+//! under `<store>/checkpoints/job_<id>/<key>/` and journal a
+//! `checkpoint` record in `jobs.log` *after* the blocks are fully on
+//! disk — so a record seen at replay implies a complete, loadable
+//! checkpoint. A killed server re-enqueues the job with the journaled
+//! records attached; when the recursion reaches a checkpointed boundary
+//! again it restores the level instead of recomputing it (and its whole
+//! subtree). Checkpoint blocks round-trip through [`crate::ser::bin`]
+//! bit-exactly, so a resumed job's result is identical to an
+//! uninterrupted run's.
+//!
+//! **Keys are recursion paths**, not sequence numbers: every boundary is
+//! named by the child indices from the recursion root (`r`, `r.0`,
+//! `r.1.0`, …) plus a part tag for boundaries producing several
+//! matrices (`r.0-l` / `r.0-u` for LU's factor pair). Path keys are
+//! stable under resume — a restored subtree skips its inner boundaries
+//! entirely, which would desync any flat counter, but cannot perturb
+//! sibling paths.
+//!
+//! The context is **thread-local and optional**: the service installs it
+//! around a job's execution ([`install`]); everywhere else
+//! ([`boundary`] with no context) the algorithms pay one thread-local
+//! read per recursion level and nothing more.
+
+use std::cell::RefCell;
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+use crate::blockmatrix::{Block, BlockMatrix};
+use crate::error::Result;
+use crate::store::joblog::{CheckpointRecord, JobLog};
+use crate::store::{ingest_block_matrix, BlockStore, LocalDirStore};
+
+thread_local! {
+    static CTX: RefCell<Option<Ctx>> = const { RefCell::new(None) };
+}
+
+struct Ctx {
+    job_id: u64,
+    /// `<store>/checkpoints/job_<id>` — one subdirectory per key.
+    dir: PathBuf,
+    /// Persist boundaries whose depth is a multiple of this (0 never
+    /// happens: `install` is only called when checkpointing is on).
+    every: usize,
+    /// Journal for durable `checkpoint` records (`None` in unit tests).
+    log: Option<Arc<JobLog>>,
+    /// Keys journaled by a previous generation: restorable, and never
+    /// re-persisted.
+    restorable: BTreeMap<String, (usize, usize)>,
+    /// Next-child index per open recursion level (top = current node).
+    counters: Vec<usize>,
+    /// Child indices from the recursion root to the current node.
+    path: Vec<usize>,
+}
+
+/// Directory a job's checkpoints live in.
+fn job_dir(store_dir: &Path, job_id: u64) -> PathBuf {
+    store_dir.join("checkpoints").join(format!("job_{job_id}"))
+}
+
+/// Install a checkpoint context on the current thread for the duration
+/// of the returned guard (the service wraps one around each job run).
+/// `restorable` carries the `checkpoint` records replayed from the job
+/// log for this job id. A previously installed context is saved and
+/// restored when the guard drops.
+pub fn install(
+    job_id: u64,
+    store_dir: &Path,
+    every: usize,
+    log: Option<Arc<JobLog>>,
+    restorable: &[CheckpointRecord],
+) -> InstallGuard {
+    let ctx = Ctx {
+        job_id,
+        dir: job_dir(store_dir, job_id),
+        every: every.max(1),
+        log,
+        restorable: restorable
+            .iter()
+            .map(|c| (c.key.clone(), (c.nblocks, c.block_size)))
+            .collect(),
+        counters: Vec::new(),
+        path: Vec::new(),
+    };
+    InstallGuard {
+        prev: CTX.with(|c| c.borrow_mut().replace(ctx)),
+    }
+}
+
+/// RAII guard for [`install`]: dropping it removes the context (and
+/// restores whatever was installed before).
+pub struct InstallGuard {
+    prev: Option<Ctx>,
+}
+
+impl Drop for InstallGuard {
+    fn drop(&mut self) {
+        CTX.with(|c| *c.borrow_mut() = self.prev.take());
+    }
+}
+
+/// Enter one recursion boundary. Returns `None` when no context is
+/// installed — the disabled path costs exactly this thread-local read.
+/// The guard names the boundary (path key + depth); dropping it exits
+/// the level. Call it for *every* recursion entry, restored or not, so
+/// sibling indices stay stable.
+pub fn boundary() -> Option<LevelGuard> {
+    CTX.with(|c| {
+        let mut slot = c.borrow_mut();
+        let ctx = slot.as_mut()?;
+        let pushed = if let Some(next) = ctx.counters.last_mut() {
+            let idx = *next;
+            *next += 1;
+            ctx.path.push(idx);
+            true
+        } else {
+            false
+        };
+        ctx.counters.push(0);
+        let key_path = if ctx.path.is_empty() {
+            "r".to_string()
+        } else {
+            let segs: Vec<String> = ctx.path.iter().map(|i| i.to_string()).collect();
+            format!("r.{}", segs.join("."))
+        };
+        Some(LevelGuard {
+            key_path,
+            depth: ctx.path.len(),
+            pushed,
+        })
+    })
+}
+
+/// One entered recursion boundary (see [`boundary`]).
+pub struct LevelGuard {
+    key_path: String,
+    depth: usize,
+    pushed: bool,
+}
+
+impl LevelGuard {
+    /// Full checkpoint key for one part of this boundary's result
+    /// (`part` is `m` for single-matrix boundaries, `l`/`u` for LU's
+    /// factor pair).
+    pub fn key(&self, part: &str) -> String {
+        format!("{}-{part}", self.key_path)
+    }
+
+    /// Recursion depth of this boundary (root = 0).
+    pub fn depth(&self) -> usize {
+        self.depth
+    }
+
+    /// Restore this boundary's `part` from a journaled checkpoint.
+    /// Returns `None` — falling through to a clean recompute — unless a
+    /// replayed record exists for the key, the recorded and on-disk
+    /// geometry both match the expectation, and every block reads back.
+    pub fn try_restore(&self, part: &str, nblocks: usize, block_size: usize) -> Option<BlockMatrix> {
+        let key = self.key(part);
+        let dir = CTX.with(|c| {
+            let slot = c.borrow();
+            let ctx = slot.as_ref()?;
+            match ctx.restorable.get(&key) {
+                Some(&(nb, bs)) if nb == nblocks && bs == block_size => Some(ctx.dir.join(&key)),
+                _ => None,
+            }
+        })?;
+        let (store, meta) = LocalDirStore::open(&dir).ok()?;
+        if meta.nblocks != nblocks || meta.block_size != block_size {
+            return None;
+        }
+        let mut blocks = Vec::with_capacity(nblocks * nblocks);
+        for bi in 0..nblocks {
+            for bj in 0..nblocks {
+                blocks.push(Block::new(bi, bj, store.read_block(bi, bj).ok()?));
+            }
+        }
+        BlockMatrix::from_blocks(blocks, nblocks, block_size).ok()
+    }
+
+    /// Persist one part of this boundary's computed result, if this
+    /// depth is a checkpoint level. Returns `true` only when the blocks
+    /// AND the journal record are durably written — the counter the
+    /// caller records must mean "resumable". Trivial (single-block)
+    /// results and keys already journaled by a prior generation are
+    /// skipped. A persist failure is logged and ignored: checkpoints
+    /// accelerate recovery, they must never fail the job.
+    pub fn persist(&self, part: &str, m: &BlockMatrix) -> bool {
+        if m.nblocks() < 2 {
+            return false;
+        }
+        let key = self.key(part);
+        let due = CTX.with(|c| {
+            let slot = c.borrow();
+            let ctx = slot.as_ref()?;
+            if self.depth % ctx.every != 0 || ctx.restorable.contains_key(&key) {
+                return None;
+            }
+            Some((ctx.dir.join(&key), ctx.log.clone(), ctx.job_id))
+        });
+        let Some((dir, log, job_id)) = due else {
+            return false;
+        };
+        let write = || -> Result<()> {
+            let store = LocalDirStore::create(&dir, m.nblocks(), m.block_size())?;
+            ingest_block_matrix(&store, m)?;
+            if let Some(log) = &log {
+                log.record_checkpoint(
+                    job_id,
+                    &CheckpointRecord {
+                        key: key.clone(),
+                        nblocks: m.nblocks(),
+                        block_size: m.block_size(),
+                    },
+                )?;
+            }
+            Ok(())
+        };
+        match write() {
+            Ok(()) => true,
+            Err(e) => {
+                log::warn!("checkpoint `{key}` for job {job_id} failed: {e}");
+                false
+            }
+        }
+    }
+}
+
+impl Drop for LevelGuard {
+    fn drop(&mut self) {
+        CTX.with(|c| {
+            if let Some(ctx) = c.borrow_mut().as_mut() {
+                ctx.counters.pop();
+                if self.pushed {
+                    ctx.path.pop();
+                }
+            }
+        });
+    }
+}
+
+/// Remove a job's checkpoint directory — called once the job reaches a
+/// durable terminal, after which its checkpoints can never be restored.
+pub fn cleanup(store_dir: &Path, job_id: u64) {
+    let _ = std::fs::remove_dir_all(job_dir(store_dir, job_id));
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::JobConfig;
+
+    fn tmpdir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!("spin_ckpt_{tag}_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&d);
+        d
+    }
+
+    #[test]
+    fn boundary_is_none_without_context() {
+        assert!(boundary().is_none());
+    }
+
+    #[test]
+    fn path_keys_follow_the_recursion_shape() {
+        let d = tmpdir("keys");
+        let _g = install(1, &d, 1, None, &[]);
+        let root = boundary().unwrap();
+        assert_eq!(root.key("m"), "r-m");
+        assert_eq!(root.depth(), 0);
+        {
+            let c0 = boundary().unwrap();
+            assert_eq!(c0.key("m"), "r.0-m");
+            let c00 = boundary().unwrap();
+            assert_eq!(c00.key("l"), "r.0.0-l");
+            assert_eq!(c00.key("u"), "r.0.0-u");
+            assert_eq!(c00.depth(), 2);
+        }
+        // Sibling after the first subtree fully exited.
+        let c1 = boundary().unwrap();
+        assert_eq!(c1.key("m"), "r.1-m");
+        let _ = std::fs::remove_dir_all(&d);
+    }
+
+    #[test]
+    fn persist_then_restore_round_trips_bits() {
+        let d = tmpdir("roundtrip");
+        let mut job = JobConfig::new(16, 4);
+        job.seed = 0xC4;
+        let m = BlockMatrix::random(&job).unwrap();
+        {
+            let _g = install(7, &d, 1, None, &[]);
+            let lvl = boundary().unwrap();
+            assert!(lvl.persist("m", &m));
+        }
+        let rec = CheckpointRecord {
+            key: "r-m".to_string(),
+            nblocks: 4,
+            block_size: 4,
+        };
+        let _g = install(7, &d, 1, None, std::slice::from_ref(&rec));
+        let lvl = boundary().unwrap();
+        let got = lvl.try_restore("m", 4, 4).expect("restorable");
+        for bi in 0..4 {
+            for bj in 0..4 {
+                let want = &m.get_block(bi, bj).unwrap().matrix;
+                let have = &got.get_block(bi, bj).unwrap().matrix;
+                assert_eq!(have.max_abs_diff(want), 0.0, "block ({bi},{bj})");
+            }
+        }
+        // Geometry mismatches and unknown keys fall through to compute.
+        assert!(lvl.try_restore("m", 2, 4).is_none());
+        assert!(lvl.try_restore("x", 4, 4).is_none());
+        // A restored key is never re-persisted (already durable).
+        assert!(!lvl.persist("m", &m));
+        drop(lvl);
+        drop(_g);
+        cleanup(&d, 7);
+        assert!(!d.join("checkpoints").join("job_7").exists());
+        let _ = std::fs::remove_dir_all(&d);
+    }
+
+    #[test]
+    fn every_gates_depths_and_leaves_are_skipped() {
+        let d = tmpdir("every");
+        let mut job = JobConfig::new(8, 4);
+        job.seed = 1;
+        let m = BlockMatrix::random(&job).unwrap(); // 2x2 grid
+        let single = BlockMatrix::identity(4, 4).unwrap(); // 1x1 grid
+        let _g = install(9, &d, 2, None, &[]);
+        let root = boundary().unwrap(); // depth 0: due
+        assert!(root.persist("m", &m));
+        assert!(!root.persist("m", &single), "single-block results skipped");
+        let child = boundary().unwrap(); // depth 1: off-cycle
+        assert!(!child.persist("m", &m));
+        let grand = boundary().unwrap(); // depth 2: due
+        assert!(grand.persist("m", &m));
+        let _ = std::fs::remove_dir_all(&d);
+    }
+}

@@ -50,6 +50,20 @@ pub struct Terminal {
     pub residual: Option<f64>,
 }
 
+/// One durably journaled mid-job checkpoint: a recursion-level result
+/// the job persisted to the block store before it (maybe) crashed. The
+/// record is appended *after* the blocks are fully written, so replaying
+/// one guarantees the on-disk checkpoint is complete.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct CheckpointRecord {
+    /// Recursion-path key (e.g. `r.0.1-m`), unique within the job.
+    pub key: String,
+    /// Block grid of the checkpointed matrix.
+    pub nblocks: usize,
+    /// Block size of the checkpointed matrix.
+    pub block_size: usize,
+}
+
 /// One job reconstructed from the log: its spec plus, if it finished,
 /// the terminal record. `terminal: None` means the job was queued or
 /// running at crash time and must be re-enqueued.
@@ -58,6 +72,9 @@ pub struct ReplayedJob {
     pub id: u64,
     pub spec: JobSpec,
     pub terminal: Option<Terminal>,
+    /// Checkpoints journaled before the crash — a re-enqueued job restores
+    /// these levels from the block store instead of recomputing them.
+    pub checkpoints: Vec<CheckpointRecord>,
 }
 
 /// Everything recovered from an existing log at startup.
@@ -119,6 +136,12 @@ impl JobLog {
         &self.path
     }
 
+    /// Store directory the log lives in — checkpoint data is kept under
+    /// `<dir>/checkpoints/`.
+    pub fn dir(&self) -> &Path {
+        self.path.parent().unwrap_or_else(|| Path::new("."))
+    }
+
     /// Record an accepted submit. Must be called (and return) before the
     /// job id is acknowledged to the client.
     pub fn record_submitted(&self, id: u64, spec: &JobSpec) -> Result<()> {
@@ -153,6 +176,20 @@ impl JobLog {
             pairs.push(("residual", Json::Number(r)));
         }
         self.append(Json::object(pairs))
+    }
+
+    /// Record a completed mid-job checkpoint. Must be called only after
+    /// the checkpoint's blocks are fully on disk: the record is the
+    /// durability point replay trusts.
+    pub fn record_checkpoint(&self, id: u64, ckpt: &CheckpointRecord) -> Result<()> {
+        self.append(Json::object(vec![
+            ("type", Json::str("checkpoint")),
+            ("id", Json::num(id as f64)),
+            ("key", Json::str(ckpt.key.as_str())),
+            ("nblocks", Json::num(ckpt.nblocks as f64)),
+            ("block_size", Json::num(ckpt.block_size as f64)),
+            ("ts_ms", Json::num(now_ms() as f64)),
+        ]))
     }
 
     /// One fsynced line: write + `sync_data` under the writer lock, so
@@ -243,7 +280,31 @@ fn parse_record(
                 id,
                 spec,
                 terminal: None,
+                checkpoints: Vec::new(),
             });
+        }
+        "checkpoint" => {
+            let id = record_id(record)?;
+            let key = record
+                .req("key")?
+                .as_str()
+                .ok_or_else(|| SpinError::config("checkpoint `key` must be a string"))?
+                .to_string();
+            let nblocks = record_usize(record, "nblocks")?;
+            let block_size = record_usize(record, "block_size")?;
+            // A checkpoint for an unknown id means the log was truncated
+            // externally; like orphan terminals, skip it.
+            if let Some(job) = jobs.get_mut(&id) {
+                let ckpt = CheckpointRecord {
+                    key,
+                    nblocks,
+                    block_size,
+                };
+                // Re-run generations may re-journal a level; keep one.
+                if !job.checkpoints.iter().any(|c| c.key == ckpt.key) {
+                    job.checkpoints.push(ckpt);
+                }
+            }
         }
         "terminal" => {
             let id = record_id(record)?;
@@ -271,6 +332,15 @@ fn parse_record(
         }
     }
     Ok(())
+}
+
+fn record_usize(record: &Json, field: &str) -> Result<usize> {
+    record
+        .req(field)?
+        .as_i64()
+        .and_then(|v| usize::try_from(v).ok())
+        .filter(|&v| v > 0)
+        .ok_or_else(|| SpinError::config(format!("record `{field}` must be a positive integer")))
 }
 
 fn record_id(record: &Json) -> Result<u64> {
@@ -369,6 +439,40 @@ mod tests {
         lines.insert(1, "not json".to_string());
         std::fs::write(&path, lines.join("\n")).unwrap();
         assert!(JobLog::open(&d).is_err());
+        let _ = std::fs::remove_dir_all(&d);
+    }
+
+    #[test]
+    fn checkpoint_records_replay_with_pending_jobs_and_dedup() {
+        let d = tmpdir("ckpt");
+        let (log, _) = JobLog::open(&d).unwrap();
+        assert_eq!(log.dir(), d.as_path());
+        log.record_submitted(7, &spec(7)).unwrap();
+        let ck = |key: &str| CheckpointRecord {
+            key: key.to_string(),
+            nblocks: 4,
+            block_size: 16,
+        };
+        log.record_checkpoint(7, &ck("r-m")).unwrap();
+        log.record_checkpoint(7, &ck("r.0-m")).unwrap();
+        // Orphan checkpoint (no submitted record) is skipped, not fatal.
+        log.record_checkpoint(99, &ck("r-m")).unwrap();
+        drop(log);
+        let (log, replay) = JobLog::open(&d).unwrap();
+        let job = replay.jobs.iter().find(|j| j.id == 7).unwrap();
+        assert!(job.terminal.is_none(), "still pending");
+        assert_eq!(job.checkpoints, vec![ck("r-m"), ck("r.0-m")]);
+        assert!(!replay.jobs.iter().any(|j| j.id == 99));
+        // A resumed generation re-journals the same key: deduped.
+        log.record_submitted(7, &spec(7)).unwrap();
+        log.record_checkpoint(7, &ck("r-m")).unwrap();
+        log.record_terminal(7, JobStatus::Completed, None, Some(1e-12))
+            .unwrap();
+        drop(log);
+        let (_, replay) = JobLog::open(&d).unwrap();
+        let job = replay.jobs.iter().find(|j| j.id == 7).unwrap();
+        assert_eq!(job.checkpoints.len(), 2, "re-journaled key deduped");
+        assert!(job.terminal.is_some());
         let _ = std::fs::remove_dir_all(&d);
     }
 

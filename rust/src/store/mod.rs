@@ -18,9 +18,10 @@
 //! [`joblog`] is the append-only job log that lets `spin serve --http`
 //! resume queued/running jobs after a crash.
 
+pub mod checkpoint;
 pub mod joblog;
 
-pub use joblog::{JobLog, JobLogReplay, ReplayedJob, Terminal};
+pub use joblog::{CheckpointRecord, JobLog, JobLogReplay, ReplayedJob, Terminal};
 
 use std::path::{Path, PathBuf};
 

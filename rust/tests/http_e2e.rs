@@ -10,7 +10,7 @@ use std::process::{Child, Command, Stdio};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
-use spin::config::HttpConfig;
+use spin::config::{ClusterConfig, HttpConfig};
 use spin::http::{HttpClient, HttpServer, ServerState};
 use spin::ser::json::Json;
 use spin::service::SpinService;
@@ -340,6 +340,141 @@ fn kill_and_restart_replays_log_without_duplicate_execution() {
     let _ = std::fs::remove_dir_all(&dir);
 }
 
+/// The checkpoint/resume acceptance scenario against the real binary:
+/// a deep inversion starts under `checkpoint_every_level=1`, the server
+/// is SIGKILLed once the journal shows completed recursion levels, and
+/// the restarted server resumes the job from those checkpoints — it
+/// restores instead of recomputing (visible in the per-job recovery
+/// counters), finishes with a passing residual, and the result is
+/// bit-identical to an uninterrupted fault-free run.
+#[test]
+fn binary_kill_mid_job_resumes_from_checkpointed_levels() {
+    let dir = tmp_dir("ckpt_kill");
+    let serve_args = |dir: &PathBuf| {
+        vec![
+            "serve".to_string(),
+            "--http".to_string(),
+            "127.0.0.1:0".to_string(),
+            "--workers".to_string(),
+            "1".to_string(),
+            "--store".to_string(),
+            dir.to_str().unwrap().to_string(),
+            "--set".to_string(),
+            "checkpoint_every_level=1".to_string(),
+        ]
+    };
+    let spawn_server = |dir: &PathBuf| {
+        let child = Command::new(env!("CARGO_BIN_EXE_spin"))
+            .args(serve_args(dir))
+            .stdout(Stdio::piped())
+            .stderr(Stdio::null())
+            .spawn()
+            .unwrap();
+        let mut child = KillOnDrop(child);
+        let stdout = child.0.stdout.take().unwrap();
+        let mut lines = BufReader::new(stdout).lines();
+        let mut addr = None;
+        let mut log_line = None;
+        while addr.is_none() || log_line.is_none() {
+            let line = lines
+                .next()
+                .expect("server exited before printing its banner")
+                .unwrap();
+            if let Some(rest) = line.strip_prefix("listening on http://") {
+                addr = Some(rest.trim().to_string());
+            } else if line.starts_with("job log:") {
+                log_line = Some(line);
+            }
+        }
+        (child, addr.unwrap(), log_line.unwrap())
+    };
+
+    // Generation 1: a 32×32-grid inversion — deep recursion, so inner
+    // levels checkpoint long before the job can finish.
+    let (child, addr, _) = spawn_server(&dir);
+    let client = HttpClient::new(addr);
+    let spec = Json::parse(&invert_spec_json(256, 8, 21, "chaos")).unwrap();
+    let (code, reply) = client.post("/v1/jobs", Some(&spec)).unwrap();
+    assert_eq!(code, 202, "{reply:?}");
+    let id = reply.req("id").unwrap().as_i64().unwrap() as u64;
+
+    // Kill -9 the moment a complete `checkpoint` record is journaled:
+    // the disk now holds a mid-job crash state.
+    let log_path = dir.join("jobs.log");
+    let deadline = Instant::now() + Duration::from_secs(60);
+    loop {
+        let text = std::fs::read_to_string(&log_path).unwrap_or_default();
+        if text
+            .lines()
+            .any(|l| l.contains("\"type\":\"checkpoint\"") && l.ends_with('}'))
+        {
+            break;
+        }
+        assert!(Instant::now() < deadline, "no checkpoint journaled in time");
+        std::thread::sleep(Duration::from_millis(2));
+    }
+    drop(child); // SIGKILL
+    let text = std::fs::read_to_string(&log_path).unwrap();
+    assert!(
+        !text.contains("\"type\":\"terminal\""),
+        "the job must not have finished before the kill:\n{text}"
+    );
+
+    // Generation 2: same store — the banner reports the resume, and the
+    // job runs to a passing terminal by restoring the journaled levels.
+    let (child, addr, log_line) = spawn_server(&dir);
+    assert!(
+        log_line.contains("1 pending job(s) resumed"),
+        "{log_line}"
+    );
+    let client = HttpClient::new(addr);
+    let deadline = Instant::now() + Duration::from_secs(120);
+    let residual = loop {
+        let (code, s) = client.get(&format!("/v1/jobs/{id}")).unwrap();
+        assert_eq!(code, 200);
+        match s.req("status").unwrap().as_str().unwrap() {
+            "completed" => break s.req("residual").unwrap().as_f64().unwrap(),
+            "queued" | "running" => {}
+            other => panic!("unexpected terminal `{other}`: {s:?}"),
+        }
+        assert!(Instant::now() < deadline, "resumed job never finished");
+        std::thread::sleep(Duration::from_millis(50));
+    };
+    assert!(residual < 1e-8, "residual {residual}");
+    // The resumed run provably skipped work: recursion levels were
+    // restored from the checkpoint store, not recomputed.
+    let (code, m) = client.get(&format!("/v1/jobs/{id}/metrics")).unwrap();
+    assert_eq!(code, 200);
+    let restored = m
+        .req("resilience")
+        .unwrap()
+        .req("checkpoints_restored")
+        .unwrap()
+        .as_i64()
+        .unwrap();
+    assert!(restored >= 1, "{m:?}");
+    // Terminal cleanup reclaimed the checkpoint store.
+    assert!(
+        !dir.join("checkpoints").join(format!("job_{id}")).exists(),
+        "checkpoints deleted once the job is terminal"
+    );
+    drop(child);
+
+    // Bit-identity: an uninterrupted run of the same spec, no faults,
+    // no checkpoints, produces the same result bits (equal residual).
+    let clean = SpinService::builder().workers(2).build().unwrap();
+    let handle = clean
+        .submit(spin::service::JobSpec::from_json(&spec).unwrap())
+        .unwrap();
+    let out = handle.wait().unwrap();
+    assert_eq!(
+        out.residual.unwrap().to_bits(),
+        residual.to_bits(),
+        "resumed result must be bit-identical to a clean run"
+    );
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
 /// Kill the spawned server even when an assert panics mid-test.
 struct KillOnDrop(Child);
 
@@ -418,6 +553,156 @@ fn binary_serve_http_smoke() {
     assert_eq!(g.req("generation").unwrap().as_i64(), Some(1));
     drop(child);
     let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// A tenant over its queue quota gets 429 + `Retry-After` — scoped
+/// backpressure that tells exactly one client to slow down — while
+/// other tenants keep getting 202, and the per-tenant gauges surface in
+/// `/v1/metrics`.
+#[test]
+fn tenant_over_quota_gets_429_with_retry_after() {
+    let mut cfg = ClusterConfig::local(2);
+    cfg.tenant_queue_quota = 1;
+    let service = SpinService::builder()
+        .cluster_config(cfg)
+        .workers(0)
+        .queue_capacity(16)
+        .build()
+        .unwrap();
+    let server = bind(service);
+    let addr = server.local_addr().to_string();
+    let client = HttpClient::new(addr.clone());
+
+    let spec1 = Json::parse(&invert_spec_json(16, 4, 1, "flooder")).unwrap();
+    assert_eq!(client.post("/v1/jobs", Some(&spec1)).unwrap().0, 202);
+    let (_, g) = client.get("/v1/metrics").unwrap();
+    let tenants = g.req("tenants").unwrap().as_array().unwrap();
+    let flooder = tenants
+        .iter()
+        .find(|t| t.req("tenant").unwrap().as_str() == Some("flooder"))
+        .expect("gauge for the queued tenant");
+    assert_eq!(flooder.req("queued").unwrap().as_i64(), Some(1));
+
+    // Second queued job for the same tenant: read the raw response so
+    // the Retry-After header itself is under test.
+    let spec2 = Json::parse(&invert_spec_json(16, 4, 2, "flooder")).unwrap();
+    let body = spec2.compact();
+    let mut stream = TcpStream::connect(&addr).unwrap();
+    write!(
+        stream,
+        "POST /v1/jobs HTTP/1.1\r\nHost: {addr}\r\nContent-Length: {}\r\n\r\n{body}",
+        body.len()
+    )
+    .unwrap();
+    stream.flush().unwrap();
+    let mut raw = String::new();
+    stream.read_to_string(&mut raw).unwrap();
+    let (head, body) = raw.split_once("\r\n\r\n").unwrap();
+    assert!(head.starts_with("HTTP/1.1 429 Too Many Requests"), "{raw}");
+    assert!(head.contains("Retry-After: 1"), "{raw}");
+    assert!(body.contains("queue quota"), "{raw}");
+
+    // The quota is per tenant: someone else is still welcome.
+    let other = Json::parse(&invert_spec_json(16, 4, 3, "patient")).unwrap();
+    assert_eq!(client.post("/v1/jobs", Some(&other)).unwrap().0, 202);
+
+    // Draining the queue frees the quota: the flooder may retry now.
+    server.service().run_pending();
+    let spec3 = Json::parse(&invert_spec_json(16, 4, 4, "flooder")).unwrap();
+    assert_eq!(client.post("/v1/jobs", Some(&spec3)).unwrap().0, 202);
+}
+
+/// The chaos acceptance run: 20 seeded jobs over HTTP under
+/// deterministic fault injection (`fault_rate=0.05`, panics + errors +
+/// stragglers). Every job must terminate successfully with passing
+/// residuals, the recovery counters must show retries actually
+/// happened, and — because retry/speculation are virtual-time replays,
+/// never second executions — every residual must be BIT-identical to a
+/// fault-free run of the same spec.
+#[test]
+fn chaos_20_jobs_over_http_recover_and_match_fault_free_bits() {
+    let tenants = ["alice", "bob", "carol", "dave"];
+    let specs: Vec<String> = (0..20u64)
+        .map(|i| invert_spec_json(32, 8, 500 + (i % 6), tenants[(i % 4) as usize]))
+        .collect();
+    let run = |cfg: ClusterConfig| -> (Vec<f64>, Vec<i64>) {
+        let service = SpinService::builder()
+            .cluster_config(cfg)
+            .workers(2)
+            .queue_capacity(32)
+            .build()
+            .unwrap();
+        let server = bind(service);
+        let client = HttpClient::new(server.local_addr().to_string());
+        let mut ids = Vec::new();
+        for (i, spec) in specs.iter().enumerate() {
+            let spec = Json::parse(spec).unwrap();
+            let (code, reply) = client.post("/v1/jobs", Some(&spec)).unwrap();
+            assert_eq!(code, 202, "submit {i}: {reply:?}");
+            ids.push(reply.req("id").unwrap().as_i64().unwrap() as u64);
+        }
+        server.service().wait_idle();
+        let mut residuals = Vec::new();
+        for (i, id) in ids.iter().enumerate() {
+            let (code, s) = client.get(&format!("/v1/jobs/{id}")).unwrap();
+            assert_eq!(code, 200);
+            assert_eq!(
+                s.req("status").unwrap().as_str(),
+                Some("completed"),
+                "job {i}: {s:?}"
+            );
+            let r = s.req("residual").unwrap().as_f64().unwrap();
+            assert!(r < 1e-8, "job {i} residual {r}");
+            residuals.push(r);
+        }
+        let (code, g) = client.get("/v1/metrics").unwrap();
+        assert_eq!(code, 200);
+        let res = g.req("resilience").unwrap();
+        let counters = [
+            "retries",
+            "retry_exhausted",
+            "speculative_launched",
+            "speculative_won",
+        ]
+        .iter()
+        .map(|name| res.req(name).unwrap().as_i64().unwrap())
+        .collect();
+        (residuals, counters)
+    };
+
+    // CI sweeps several fault streams by exporting SPIN_CHAOS_SEED; the
+    // default keeps a bare `cargo test` deterministic.
+    let fault_seed = std::env::var("SPIN_CHAOS_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0xC0FFEE);
+    let mut chaos = ClusterConfig::local(2);
+    chaos.fault_seed = Some(fault_seed);
+    chaos.fault_rate = 0.05;
+    // A deeper budget than the default: ~10^4 task attempts across the
+    // run make 4-in-a-row fault streaks (p = 0.05^4) plausible; six
+    // in a row are not.
+    chaos.task_retries = 5;
+    let (faulted, counters) = run(chaos);
+    let (retries, exhausted, spec_launched, spec_won) =
+        (counters[0], counters[1], counters[2], counters[3]);
+    assert!(retries > 0, "chaos run injected and recovered faults");
+    assert_eq!(exhausted, 0, "every job stayed inside the retry budget");
+    assert!(spec_won >= 0 && spec_won <= spec_launched, "{counters:?}");
+
+    // Fault-free arm: identical specs, injection disarmed. The
+    // resilience machinery must be provably inert (zero counters) and
+    // the results bit-identical (residuals are a pure function of the
+    // result bits, and f64 round-trips the API's JSON exactly).
+    let (clean, counters) = run(ClusterConfig::local(2));
+    assert_eq!(counters, vec![0, 0, 0, 0], "fault injection is inert when off");
+    for (i, (f, c)) in faulted.iter().zip(&clean).enumerate() {
+        assert_eq!(
+            f.to_bits(),
+            c.to_bits(),
+            "job {i}: faulted residual {f:e} != clean {c:e}"
+        );
+    }
 }
 
 /// 50 jobs over HTTP across tenants: every one reaches `completed`, the

@@ -53,6 +53,75 @@ fn lu_full_grid_sweep_native() {
     }
 }
 
+/// Resilience acceptance property: with deterministic fault injection
+/// enabled (panics, task errors, stragglers — forcing retries and
+/// speculative re-execution), both algorithms still produce results
+/// **bit-identical** to an entirely fault-free run. Retries re-execute
+/// the same pure closure on the same inputs, so recovery must never be
+/// observable in the output — only in the resilience counters.
+#[test]
+fn faulted_run_is_bit_identical_to_clean_run_property() {
+    forall(
+        "chaos run ≡ clean run, bit for bit",
+        0xFA_0175,
+        4,
+        |r| (r.next_u64(), 1 + r.next_u64() % 0xFFFF),
+        |&(matrix_seed, fault_seed)| {
+            for algo in ["spin", "lu"] {
+                let mut chaos = ClusterConfig::local(4);
+                chaos.fault_seed = Some(fault_seed);
+                chaos.fault_rate = 0.1;
+                // Generous budget: the property must hold for every
+                // sampled fault stream, not just streak-free ones.
+                chaos.task_retries = 5;
+                let faulted_session = SpinSession::builder()
+                    .cluster_config(chaos)
+                    .build()
+                    .unwrap();
+                let clean_session = SpinSession::local(4).unwrap();
+
+                let run = |session: &SpinSession| -> std::result::Result<Matrix, String> {
+                    let a = session
+                        .random_seeded(128, 16, matrix_seed)
+                        .map_err(|e| e.to_string())?;
+                    let inv = a.inverse_with(algo).map_err(|e| e.to_string())?;
+                    let resid = a.inverse_residual(&inv).map_err(|e| e.to_string())?;
+                    if resid >= 1e-8 {
+                        return Err(format!("{algo} residual {resid:.3e}"));
+                    }
+                    inv.to_dense().map_err(|e| e.to_string())
+                };
+                let faulted = run(&faulted_session)?;
+                let clean = run(&clean_session)?;
+
+                for (i, (f, c)) in faulted.data().iter().zip(clean.data()).enumerate() {
+                    if f.to_bits() != c.to_bits() {
+                        return Err(format!(
+                            "{algo} seed={matrix_seed:#x} fault_seed={fault_seed}: \
+                             element {i} differs: {f:e} vs {c:e}"
+                        ));
+                    }
+                }
+
+                // The chaos run must actually have exercised recovery,
+                // and the clean run must be provably untouched by it.
+                let faulted_res = *faulted_session.metrics().resilience();
+                if faulted_res.retries == 0 {
+                    return Err(format!("{algo}: fault injection never fired"));
+                }
+                if faulted_res.retry_exhausted != 0 {
+                    return Err(format!("{algo}: a stage ran out of retries"));
+                }
+                let clean_res = *clean_session.metrics().resilience();
+                if clean_res.retries != 0 || clean_res.speculative_launched != 0 {
+                    return Err(format!("{algo}: clean run recorded recovery {clean_res:?}"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
 #[test]
 fn spin_matches_serial_strassen_property() {
     forall(
