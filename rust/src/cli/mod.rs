@@ -441,6 +441,10 @@ fn cmd_bench(mut args: Args) -> Result<()> {
                     ("block_size", Json::num((n / b) as f64)),
                     ("virtual_secs", Json::num(r.virtual_secs)),
                     ("real_secs", Json::num(r.real_secs)),
+                    // Measured wall clock (ms) — the armed timing dimension
+                    // of the bench trajectory. Gated on presence + nonzero
+                    // only (never on magnitude): see `check_bench_schema`.
+                    ("wall_clock_ms", Json::num(r.real_secs * 1000.0)),
                     ("residual", Json::num(r.residual)),
                     (
                         "total_shuffle_bytes",
@@ -843,8 +847,10 @@ fn serve_http(
 /// Deterministic schema + perf gate for `spin bench`: the measured output
 /// must keep the committed baseline's shape, and — where the baseline
 /// carries runs — must not regress the deterministic dataflow counters
-/// (shuffle exchanges, driver collects). Timing fields are intentionally
-/// NOT compared: they are host-dependent.
+/// (shuffle exchanges, driver collects). Timing magnitudes are
+/// intentionally NOT compared (host-dependent); measured timing fields
+/// (`wall_clock_ms`) gate on schema presence only — every gated row must
+/// carry a nonzero measurement, never a particular value.
 fn check_bench_schema(baseline: &Json, measured: &Json) -> Result<()> {
     let bschema = baseline.get("schema").and_then(Json::as_str).unwrap_or("<missing>");
     let mschema = measured.get("schema").and_then(Json::as_str).unwrap_or("<missing>");
@@ -911,6 +917,20 @@ fn check_bench_schema(baseline: &Json, measured: &Json) -> Result<()> {
                             "bench perf regression: {algo} n={n} b={b}: {counter} rose {bv} -> {mv}"
                         )));
                     }
+                }
+            }
+            // Measured timing: gated on presence + nonzero only. The
+            // baseline commits 0.0 placeholders (timings are
+            // host-dependent); a measured run that reports no wall clock
+            // means the timing plumbing broke.
+            let timing = "wall_clock_ms";
+            if brun.get(timing).is_some() {
+                let mv = mrun.get(timing).and_then(Json::as_f64);
+                if !mv.is_some_and(|v| v > 0.0) {
+                    return Err(SpinError::config(format!(
+                        "bench timing gate: {algo} n={n} b={b}: `{timing}` missing or zero \
+                         in the measured output (got {mv:?})"
+                    )));
                 }
             }
         }
@@ -1113,30 +1133,40 @@ mod tests {
         ]);
         assert!(check_bench_schema(&stub, &extra).is_err());
         // Deterministic counter regression fails.
-        let run_rec = |stages: f64| {
+        let run_rec = |stages: f64, wall_ms: f64| {
             Json::object(vec![
                 ("algo", Json::str("spin")),
                 ("n", Json::num(64.0)),
                 ("b", Json::num(2.0)),
                 ("shuffle_stages", Json::num(stages)),
                 ("driver_collects", Json::num(0.0)),
+                ("wall_clock_ms", Json::num(wall_ms)),
             ])
         };
         let base = Json::object(vec![
             ("schema", Json::str("spin-bench-v1")),
-            ("runs", Json::Array(vec![run_rec(6.0)])),
+            ("runs", Json::Array(vec![run_rec(6.0, 0.0)])),
         ]);
         let ok = Json::object(vec![
             ("schema", Json::str("spin-bench-v1")),
-            ("runs", Json::Array(vec![run_rec(6.0)])),
+            ("runs", Json::Array(vec![run_rec(6.0, 1.5)])),
         ]);
         let worse = Json::object(vec![
             ("schema", Json::str("spin-bench-v1")),
-            ("runs", Json::Array(vec![run_rec(8.0)])),
+            ("runs", Json::Array(vec![run_rec(8.0, 1.5)])),
         ]);
         check_bench_schema(&base, &ok).unwrap();
         let err = check_bench_schema(&base, &worse).unwrap_err();
         assert!(err.to_string().contains("perf regression"), "{err}");
+        // The armed timing gate: a baseline row carrying `wall_clock_ms`
+        // (even the committed 0.0 placeholder) requires the measured run
+        // to report a real, nonzero measurement.
+        let unmeasured = Json::object(vec![
+            ("schema", Json::str("spin-bench-v1")),
+            ("runs", Json::Array(vec![run_rec(6.0, 0.0)])),
+        ]);
+        let err = check_bench_schema(&base, &unmeasured).unwrap_err();
+        assert!(err.to_string().contains("timing gate"), "{err}");
     }
 
     #[test]
@@ -1223,6 +1253,8 @@ mod tests {
         assert!(runs.len() >= 4, "smoke sweep covers spin+lu at two splits");
         for r in runs {
             assert!(r.get("virtual_secs").unwrap().as_f64().unwrap() > 0.0);
+            // Measured wall clock is armed: every row reports a real timing.
+            assert!(r.get("wall_clock_ms").unwrap().as_f64().unwrap() > 0.0);
             assert!(r.get("residual").unwrap().as_f64().unwrap() < 1e-8);
             assert!(r.get("methods").unwrap().get("multiply").is_some());
             // The partitioner-aware pipeline never round-trips the driver.

@@ -69,6 +69,12 @@ pub struct StageFaultOutcome {
     /// final attempt) to feed the list scheduler in place of the clean
     /// measured durations.
     pub durations: Vec<f64>,
+    /// Per-task extra *real* seconds the final successful attempt
+    /// straggled beyond its clean duration (0 for clean/failed tasks).
+    /// Under the exec pool (`exec_threads > 1`) the cluster runs these
+    /// as an actual parallel sleep wave, so speculation wins real
+    /// wall-clock time; on the sequential path they stay virtual-only.
+    pub sleeps: Vec<f64>,
     /// Recovery counters earned by this stage.
     pub delta: ResilienceTotals,
     /// First partition whose retry budget was exhausted, if any — the
@@ -155,12 +161,26 @@ impl FaultPlan {
         Some(active[pick])
     }
 
-    /// Apply this stage's slice of the fault stream to the measured task
-    /// durations: replay the retry loop each task would have gone
-    /// through, charging wasted attempts, backoffs, straggle inflation
-    /// and speculation caps into the effective durations.
+    /// Apply the next stage's slice of the fault stream (implicit
+    /// monotonic stage id). Prefer [`FaultPlan::apply_at`] from stage
+    /// runners that already allocate explicit stage ids — implicit
+    /// numbering is only reproducible when call order is.
     pub fn apply(&self, measured: &[f64]) -> StageFaultOutcome {
         let stage = self.stage_seq.fetch_add(1, Ordering::Relaxed);
+        self.apply_at(stage, measured)
+    }
+
+    /// Apply stage `stage`'s slice of the fault stream to the measured
+    /// task durations: replay the retry loop each task would have gone
+    /// through, charging wasted attempts, backoffs, straggle inflation
+    /// and speculation caps into the effective durations.
+    ///
+    /// Taking the stage id explicitly makes the fault stream
+    /// **executor-independent**: the inline `threads == 1` fast path and
+    /// the work-stealing pool feed the same `(stage, partition, attempt)`
+    /// triples regardless of completion order, so a chaos run replays
+    /// identically at any `exec_threads`.
+    pub fn apply_at(&self, stage: u64, measured: &[f64]) -> StageFaultOutcome {
         let mut sorted: Vec<f64> = measured.to_vec();
         sorted.sort_by(|a, b| a.partial_cmp(b).expect("durations are finite"));
         let median = if sorted.is_empty() {
@@ -174,6 +194,7 @@ impl FaultPlan {
         let mut delta = ResilienceTotals::default();
         let mut exhausted = None;
         let mut durations = Vec::with_capacity(measured.len());
+        let mut sleeps = vec![0.0; measured.len()];
         for (partition, &clean) in measured.iter().enumerate() {
             let mut effective = 0.0;
             for attempt in 0..=self.task_retries as u64 {
@@ -210,6 +231,10 @@ impl FaultPlan {
                                 }
                             }
                         }
+                        // The real-sleep wave replays only the winner's
+                        // slowdown: a won speculation caps the sleep at
+                        // the copy's finish, exactly the wall-clock win.
+                        sleeps[partition] = (dur - clean).max(0.0);
                         effective += dur;
                         break;
                     }
@@ -228,6 +253,7 @@ impl FaultPlan {
         }
         StageFaultOutcome {
             durations,
+            sleeps,
             delta,
             exhausted,
         }
@@ -356,6 +382,43 @@ mod tests {
         let p = plan(1, 0.5, FaultKinds::all());
         let out = p.apply(&[]);
         assert!(out.durations.is_empty());
+        assert!(out.sleeps.is_empty());
         assert!(!out.delta.any());
+    }
+
+    #[test]
+    fn explicit_stage_ids_match_the_implicit_sequence() {
+        let measured: Vec<f64> = (0..32).map(|i| 0.25 + (i % 5) as f64 * 0.1).collect();
+        let implicit = plan(9, 0.4, FaultKinds::all());
+        let explicit = plan(9, 0.4, FaultKinds::all());
+        for stage in 0..4u64 {
+            let a = implicit.apply(&measured);
+            let b = explicit.apply_at(stage, &measured);
+            assert_eq!(a.durations, b.durations, "stage {stage}");
+            assert_eq!(a.sleeps, b.sleeps, "stage {stage}");
+            assert_eq!(a.delta, b.delta, "stage {stage}");
+        }
+    }
+
+    #[test]
+    fn sleeps_carry_only_the_straggle_excess() {
+        let kinds = FaultKinds {
+            task_panic: false,
+            task_error: false,
+            straggle: true,
+        };
+        let p = plan(5, 1.0, kinds);
+        let measured = vec![1.0; 32];
+        let out = p.apply(&measured);
+        assert_eq!(out.sleeps.len(), measured.len());
+        for (sleep, (eff, clean)) in out.sleeps.iter().zip(out.durations.iter().zip(&measured)) {
+            // Final attempt is the only charge at rate 1 straggle-only,
+            // so the sleep is exactly the effective excess over clean.
+            assert!((sleep - (eff - clean)).abs() < 1e-12, "{sleep} vs {eff}");
+            assert!(*sleep > 0.0, "every task straggles at rate 1");
+        }
+        // Clean runs sleep nowhere.
+        let clean = plan(5, 0.0, kinds).apply(&measured);
+        assert!(clean.sleeps.iter().all(|&s| s == 0.0));
     }
 }

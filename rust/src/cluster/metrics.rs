@@ -55,7 +55,7 @@ impl Drop for MetricsScope {
 }
 
 /// One executed stage (narrow pass or shuffle exchange).
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, Default)]
 pub struct StageReport {
     /// Method attribution (breakMat, xy, multiply, subtract, scalarMul,
     /// arrange, leafNode, …).
@@ -80,6 +80,18 @@ pub struct StageReport {
     /// lets experiments replay the schedule on a different topology
     /// without re-running the compute (noise-free scaling curves).
     pub task_durations: Vec<f64>,
+    /// Real wall-clock nanoseconds the stage took on this host, from
+    /// submission to last task completion (the measured dimension, as
+    /// opposed to the virtual `makespan_secs`).
+    pub wall_ns: u64,
+    /// Total real nanoseconds tasks waited queued on the exec pool
+    /// (0 on the sequential path).
+    pub queue_ns: u64,
+    /// Total real nanoseconds tasks spent executing.
+    pub run_ns: u64,
+    /// Tasks that ran via work stealing rather than on the worker they
+    /// were queued on.
+    pub steals: usize,
 }
 
 /// Cheap aggregate counters (no stage-vector clone) — the plan executor
@@ -169,6 +181,12 @@ pub struct MethodStats {
     /// narrow) — the per-op "wide vs narrow" delta the partitioner-aware
     /// dataflow is measured by.
     pub shuffle_stages: usize,
+    /// Real wall-clock seconds summed over this method's stages — the
+    /// measured trajectory dimension armed by the exec pool (still
+    /// populated, from coarse stage timing, on the sequential path).
+    pub wall_secs: f64,
+    /// Work-stealing migrations across this method's stages.
+    pub steals: usize,
 }
 
 /// Thread-safe metrics registry owned by a [`crate::cluster::Cluster`].
@@ -268,6 +286,8 @@ fn accumulate(methods: &mut BTreeMap<String, MethodStats>, report: &StageReport)
     stats.compute_secs += report.compute_secs;
     stats.virtual_secs += report.makespan_secs + report.shuffle_secs;
     stats.shuffle_bytes += report.shuffle_bytes;
+    stats.wall_secs += report.wall_ns as f64 * 1e-9;
+    stats.steals += report.steals;
     if report.exchange {
         stats.shuffle_stages += 1;
     }
@@ -631,8 +651,10 @@ impl MetricsSnapshot {
             "tasks",
             "compute",
             "virtual",
+            "wall",
             "shuffled",
             "exchanges",
+            "steals",
         ]);
         for (name, s) in &self.methods {
             t.row(vec![
@@ -641,8 +663,10 @@ impl MetricsSnapshot {
                 s.tasks.to_string(),
                 fmt::secs(s.compute_secs),
                 fmt::secs(s.virtual_secs),
+                fmt::secs(s.wall_secs),
                 fmt::bytes(s.shuffle_bytes),
                 s.shuffle_stages.to_string(),
+                s.steals.to_string(),
             ]);
         }
         t.render()
@@ -660,8 +684,10 @@ impl MetricsSnapshot {
                         ("tasks", Json::num(s.tasks as f64)),
                         ("compute_secs", Json::num(s.compute_secs)),
                         ("virtual_secs", Json::num(s.virtual_secs)),
+                        ("wall_secs", Json::num(s.wall_secs)),
                         ("shuffle_bytes", Json::num(s.shuffle_bytes as f64)),
                         ("shuffle_stages", Json::num(s.shuffle_stages as f64)),
+                        ("steals", Json::num(s.steals as f64)),
                     ]),
                 )
             })
@@ -685,6 +711,8 @@ mod tests {
             shuffle_total_bytes: 0,
             shuffle_secs: 0.0,
             task_durations: vec![compute / tasks.max(1) as f64; tasks],
+            wall_ns: (makespan * 1e9) as u64,
+            ..StageReport::default()
         }
     }
 
@@ -716,6 +744,7 @@ mod tests {
             shuffle_total_bytes: 2048,
             shuffle_secs: 0.25,
             task_durations: Vec::new(),
+            ..StageReport::default()
         });
         let snap = m.snapshot();
         let s = snap.method("multiply").unwrap();
@@ -762,6 +791,7 @@ mod tests {
             shuffle_total_bytes: 256,
             shuffle_secs: 0.1,
             task_durations: Vec::new(),
+            ..StageReport::default()
         });
         m.record_driver_collect();
         let t = m.totals();
@@ -785,6 +815,7 @@ mod tests {
             shuffle_total_bytes: 64,
             shuffle_secs: 0.1,
             task_durations: Vec::new(),
+            ..StageReport::default()
         });
         m.record_driver_collect();
         m.record_driver_collect();
@@ -868,6 +899,7 @@ mod tests {
             shuffle_total_bytes: 128,
             shuffle_secs: 0.1,
             task_durations: Vec::new(),
+            ..StageReport::default()
         });
         let t = m.totals_for_scope(3);
         assert_eq!(t.shuffle_stages, 1);

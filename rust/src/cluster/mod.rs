@@ -62,9 +62,11 @@ pub use rdd::{Partitioner, Rdd};
 pub use scheduler::{list_schedule_makespan, VirtualClock};
 pub use shuffle::{executor_of_partition, hash_partition, Bytes};
 
-use std::sync::Mutex;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
 
 use crate::config::ClusterConfig;
+use crate::exec::{ExecPool, StageExecStats};
 
 /// A simulated Spark cluster: topology + task execution + virtual clock +
 /// metrics. One `Cluster` corresponds to one Spark application context.
@@ -73,6 +75,16 @@ pub struct Cluster {
     metrics: Metrics,
     vclock: Mutex<VirtualClock>,
     pool: WorkerPool,
+    /// Work-stealing partition runtime (`ClusterConfig::exec_threads > 1`):
+    /// the process-wide pool every compute stage, shuffle wave and
+    /// straggler sleep fans out on. `None` keeps the legacy sequential /
+    /// per-stage-scoped-thread path.
+    exec: Option<Arc<ExecPool>>,
+    /// Explicit stage-id allocator shared by every executor path, so the
+    /// fault stream sees identical `(stage, partition, attempt)` triples
+    /// regardless of which executor ran the stage (see
+    /// [`FaultPlan::apply_at`]).
+    stage_seq: AtomicU64,
     /// Interconnect time of the most recent shuffle exchange, not yet
     /// charged to the clock: Spark overlaps shuffle fetch with reduce-side
     /// execution, so it is folded into the next narrow stage as
@@ -87,6 +99,11 @@ pub struct Cluster {
 impl Cluster {
     pub fn new(config: ClusterConfig) -> Self {
         let pool = WorkerPool::new(config.worker_threads);
+        let exec = if config.exec_threads > 1 {
+            Some(ExecPool::shared(config.exec_threads))
+        } else {
+            None
+        };
         let metrics = Metrics::with_history(config.metrics_history);
         let fault = FaultPlan::from_config(&config);
         Cluster {
@@ -94,9 +111,19 @@ impl Cluster {
             metrics,
             vclock: Mutex::new(VirtualClock::new()),
             pool,
+            exec,
+            stage_seq: AtomicU64::new(0),
             pending_shuffle: Mutex::new(0.0),
             fault,
         }
+    }
+
+    /// Allocate the next stage id — the executor-independent key into the
+    /// fault stream. Allocated once per compute stage, in submission
+    /// order, exactly where the implicit per-`apply` numbering used to
+    /// advance.
+    fn next_stage_id(&self) -> u64 {
+        self.stage_seq.fetch_add(1, Ordering::Relaxed)
     }
 
     pub fn config(&self) -> &ClusterConfig {
@@ -306,49 +333,68 @@ impl Cluster {
     /// realize that partitioner's placement — the stamp is the caller's
     /// promise). A no-op (no stage, no bytes) when the input already
     /// carries that partitioner; otherwise one counted shuffle exchange.
-    pub fn partition_items_by<T: Bytes>(
+    pub fn partition_items_by<T: Bytes + Send>(
         &self,
         method: &str,
         input: Rdd<T>,
         partitioner: Partitioner,
-        part_fn: impl Fn(&T) -> usize,
+        part_fn: impl Fn(&T) -> usize + Sync,
     ) -> Rdd<T> {
         if input.partitioner() == Some(partitioner) {
             return input;
         }
         let np = partitioner.nparts();
-        let (buckets, moved, total) = shuffle::route(
-            input,
-            np,
-            self.config.total_executors(),
-            part_fn,
-            T::size_bytes,
-        );
-        self.charge_shuffle(method, moved, total);
+        let executors = self.config.total_executors();
+        let (buckets, moved, total, stats) = match &self.exec {
+            Some(pool) => {
+                shuffle::route_parallel(pool, input, np, executors, part_fn, T::size_bytes)
+            }
+            None => {
+                let t0 = std::time::Instant::now();
+                let (b, m, t) = shuffle::route(input, np, executors, part_fn, T::size_bytes);
+                (b, m, t, wall_only_stats(t0))
+            }
+        };
+        self.charge_shuffle(method, moved, total, stats);
         Rdd::from_partitions_with(buckets, partitioner)
     }
 
     /// [`partition_items_by`](Self::partition_items_by) for keyed pairs:
     /// routes by key, counts value payload bytes.
-    pub fn partition_pairs_by<K, V: Bytes>(
+    pub fn partition_pairs_by<K: Send, V: Bytes + Send>(
         &self,
         method: &str,
         input: Rdd<(K, V)>,
         partitioner: Partitioner,
-        part_fn: impl Fn(&K) -> usize,
+        part_fn: impl Fn(&K) -> usize + Sync,
     ) -> Rdd<(K, V)> {
         if input.partitioner() == Some(partitioner) {
             return input;
         }
         let np = partitioner.nparts();
-        let (buckets, moved, total) = shuffle::route(
-            input,
-            np,
-            self.config.total_executors(),
-            |(k, _)| part_fn(k),
-            |(_, v)| v.size_bytes(),
-        );
-        self.charge_shuffle(method, moved, total);
+        let executors = self.config.total_executors();
+        let (buckets, moved, total, stats) = match &self.exec {
+            Some(pool) => shuffle::route_parallel(
+                pool,
+                input,
+                np,
+                executors,
+                |(k, _)| part_fn(k),
+                |(_, v)| v.size_bytes(),
+            ),
+            None => {
+                let t0 = std::time::Instant::now();
+                let (b, m, t) = shuffle::route(
+                    input,
+                    np,
+                    executors,
+                    |(k, _)| part_fn(k),
+                    |(_, v)| v.size_bytes(),
+                );
+                (b, m, t, wall_only_stats(t0))
+            }
+        };
+        self.charge_shuffle(method, moved, total, stats);
         Rdd::from_partitions_with(buckets, partitioner)
     }
 
@@ -471,9 +517,16 @@ impl Cluster {
         per_task: impl Fn(T) -> Vec<U> + Sync,
     ) -> Rdd<U> {
         let ntasks = tasks.len();
-        let (outputs, mut durations) = self.pool.run_tasks(tasks, &per_task);
+        let stage_id = self.next_stage_id();
+        let (outputs, mut durations, mut stats) = self.execute_stage(tasks, &per_task);
         if let Some(plan) = &self.fault {
-            durations = self.apply_faults(method, plan, &durations);
+            let (effective, sleeps) = self.apply_faults(method, plan, stage_id, &durations);
+            durations = effective;
+            // Under the pool, straggle is a *real* parallel sleep wave —
+            // speculation wins actual wall clock, not just virtual time.
+            if let Some(pool) = &self.exec {
+                stats.wall_ns += pool.sleep_parallel(&sleeps);
+            }
         }
         let makespan = list_schedule_makespan(&durations, self.slots());
         // Overlap any pending shuffle transfer with this stage's execution.
@@ -489,8 +542,40 @@ impl Cluster {
             shuffle_total_bytes: 0,
             shuffle_secs: 0.0,
             task_durations: durations,
+            wall_ns: stats.wall_ns,
+            queue_ns: stats.queue_ns,
+            run_ns: stats.run_ns,
+            steals: stats.steals,
         });
         Rdd::from_partitions(outputs)
+    }
+
+    /// Execute one wave of tasks: on the work-stealing partition runtime
+    /// when `exec_threads > 1`, else on the legacy per-stage pool (inline
+    /// for `worker_threads == 1`) with coarse wall timing so the measured
+    /// dimension is populated on every path.
+    fn execute_stage<T: Send, U: Send>(
+        &self,
+        tasks: Vec<T>,
+        f: impl Fn(T) -> U + Sync,
+    ) -> (Vec<U>, Vec<f64>, StageExecStats) {
+        let ntasks = tasks.len();
+        if let Some(pool) = &self.exec {
+            if ntasks > 1 {
+                let run = pool.run_stage(tasks, &f);
+                return (run.outputs, run.durations, run.stats);
+            }
+        }
+        let t0 = std::time::Instant::now();
+        let (outputs, durations) = self.pool.run_tasks(tasks, &f);
+        let stats = StageExecStats {
+            tasks: ntasks,
+            steals: 0,
+            queue_ns: 0,
+            run_ns: (durations.iter().sum::<f64>() * 1e9) as u64,
+            wall_ns: t0.elapsed().as_nanos() as u64,
+        };
+        (outputs, durations, stats)
     }
 
     /// Run one stage's measured durations through the fault plan: the
@@ -499,8 +584,16 @@ impl Cluster {
     /// recovery counters land in the metrics, and a spent retry budget
     /// is job-fatal — the panic names the stage and partition, and the
     /// service's per-job `catch_unwind` turns it into a Failed terminal.
-    fn apply_faults(&self, method: &str, plan: &FaultPlan, durations: &[f64]) -> Vec<f64> {
-        let outcome = plan.apply(durations);
+    /// Also returns the per-task real-sleep straggle excess (see
+    /// [`faults::StageFaultOutcome::sleeps`]).
+    fn apply_faults(
+        &self,
+        method: &str,
+        plan: &FaultPlan,
+        stage_id: u64,
+        durations: &[f64],
+    ) -> (Vec<f64>, Vec<f64>) {
+        let outcome = plan.apply_at(stage_id, durations);
         self.metrics.record_resilience(&outcome.delta);
         if let Some(partition) = outcome.exhausted {
             panic!(
@@ -509,15 +602,22 @@ impl Cluster {
                 self.config.task_retries + 1
             );
         }
-        outcome.durations
+        (outcome.durations, outcome.sleeps)
     }
 
     /// Charge one shuffle exchange to the interconnect and the metrics.
     /// Transfers happen in parallel across executor pairs; charge the
     /// aggregate volume spread over the executor count, plus one latency.
     /// The time is deferred: folded into the next narrow stage
-    /// (fetch/execute overlap).
-    fn charge_shuffle(&self, method: &str, moved_bytes: u64, total_bytes: u64) {
+    /// (fetch/execute overlap). `stats` carries the exchange's *real*
+    /// execution timings (map/reduce waves under the pool).
+    fn charge_shuffle(
+        &self,
+        method: &str,
+        moved_bytes: u64,
+        total_bytes: u64,
+        stats: StageExecStats,
+    ) {
         let executors = self.config.total_executors();
         let secs = if moved_bytes == 0 {
             0.0
@@ -537,6 +637,10 @@ impl Cluster {
             shuffle_total_bytes: total_bytes,
             shuffle_secs: secs,
             task_durations: Vec::new(),
+            wall_ns: stats.wall_ns,
+            queue_ns: stats.queue_ns,
+            run_ns: stats.run_ns,
+            steals: stats.steals,
         });
     }
 
@@ -554,8 +658,23 @@ impl Cluster {
         V: Send + Bytes,
     {
         let executors = self.config.total_executors();
-        let (buckets, moved_bytes, total_bytes) = shuffle::exchange(input, nparts, executors);
-        self.charge_shuffle(method, moved_bytes, total_bytes);
+        let np = nparts.max(1);
+        let (buckets, moved_bytes, total_bytes, stats) = match &self.exec {
+            Some(pool) => shuffle::route_parallel(
+                pool,
+                input,
+                np,
+                executors,
+                |(k, _)| shuffle::hash_partition(k, np),
+                |(_, v)| v.size_bytes(),
+            ),
+            None => {
+                let t0 = std::time::Instant::now();
+                let (b, m, t) = shuffle::exchange(input, nparts, executors);
+                (b, m, t, wall_only_stats(t0))
+            }
+        };
+        self.charge_shuffle(method, moved_bytes, total_bytes, stats);
         Rdd::from_partitions(buckets)
     }
 
@@ -563,11 +682,18 @@ impl Cluster {
     /// used for driver-side serial steps that still cost virtual time
     /// (e.g. the paper's single-block leaf inversion when b = 1).
     pub fn run_single<T: Send>(&self, method: &str, f: impl FnOnce() -> T + Send) -> T {
+        let stage_id = self.next_stage_id();
         let t0 = std::time::Instant::now();
         let out = f();
         let mut dt = t0.elapsed().as_secs_f64();
+        let run_ns = t0.elapsed().as_nanos() as u64;
+        let mut wall_ns = run_ns;
         if let Some(plan) = &self.fault {
-            dt = self.apply_faults(method, plan, &[dt])[0];
+            let (eff, sleeps) = self.apply_faults(method, plan, stage_id, &[dt]);
+            dt = eff[0];
+            if let Some(pool) = &self.exec {
+                wall_ns += pool.sleep_parallel(&sleeps);
+            }
         }
         self.vclock.lock().unwrap().advance(dt);
         self.metrics.record_stage(StageReport {
@@ -580,8 +706,21 @@ impl Cluster {
             shuffle_total_bytes: 0,
             shuffle_secs: 0.0,
             task_durations: vec![dt],
+            wall_ns,
+            queue_ns: 0,
+            run_ns,
+            steals: 0,
         });
         out
+    }
+}
+
+/// Coarse stage stats for the sequential paths: only the wall clock is
+/// measured (no queueing, no steals).
+fn wall_only_stats(t0: std::time::Instant) -> StageExecStats {
+    StageExecStats {
+        wall_ns: t0.elapsed().as_nanos() as u64,
+        ..StageExecStats::default()
     }
 }
 
@@ -851,5 +990,84 @@ mod tests {
         let mut v = c.collect(c.map("mt", rdd, |x: i64| x * 3));
         v.sort_unstable();
         assert_eq!(v, (0..1000).map(|x| x * 3).collect::<Vec<_>>());
+    }
+
+    /// One mixed narrow+wide pipeline, element order included — the
+    /// parallel runtime's determinism contract is exact equality, not
+    /// set equality.
+    fn pipeline_fingerprint(c: &Cluster) -> Vec<(u64, i64)> {
+        let rdd = c.parallelize((0..600i64).collect(), 12);
+        let mapped = c.map("exec-map", rdd, |x: i64| ((x % 17) as u64, x * x));
+        let reduced = c.reduce_by_key("exec-reduce", mapped, 6, |a, b| a + b);
+        let filtered = c.filter("exec-filter", reduced, |(_, v)| *v % 2 == 0);
+        c.collect(filtered)
+    }
+
+    #[test]
+    fn exec_pool_stages_bit_identical_to_sequential() {
+        let sequential = cluster(4);
+        let baseline = pipeline_fingerprint(&sequential);
+        for threads in [2usize, 4, 8] {
+            let mut cfg = ClusterConfig::local(4);
+            cfg.exec_threads = threads;
+            let parallel = Cluster::new(cfg);
+            assert_eq!(
+                pipeline_fingerprint(&parallel),
+                baseline,
+                "exec_threads={threads} must reproduce the sequential run exactly"
+            );
+        }
+    }
+
+    #[test]
+    fn fault_stream_is_executor_independent() {
+        // Straggle/speculation excluded: their *counters* are coupled to
+        // measured durations, which legitimately differ across executors.
+        // Panic/error injection must hit identical (stage, partition,
+        // attempt) triples on every executor path.
+        let chaotic = |threads: usize| {
+            let mut cfg = ClusterConfig::local(4);
+            cfg.exec_threads = threads;
+            cfg.fault_seed = Some(0xDEC0DE);
+            cfg.fault_rate = 0.25;
+            cfg.fault_kinds = crate::config::FaultKinds {
+                task_panic: true,
+                task_error: true,
+                straggle: false,
+            };
+            cfg.task_retries = 10;
+            Cluster::new(cfg)
+        };
+        let base_cluster = chaotic(1);
+        let base = pipeline_fingerprint(&base_cluster);
+        let base_retries = base_cluster.resilience_totals().retries;
+        assert!(base_retries > 0, "rate 0.25 must inject retries");
+        for threads in [2usize, 4] {
+            let c = chaotic(threads);
+            assert_eq!(pipeline_fingerprint(&c), base, "results at exec_threads={threads}");
+            assert_eq!(
+                c.resilience_totals().retries,
+                base_retries,
+                "identical fault stream at exec_threads={threads}"
+            );
+        }
+    }
+
+    #[test]
+    fn stages_record_wall_clock_and_shuffle_timings() {
+        let mut cfg = ClusterConfig::local(4);
+        cfg.exec_threads = 4;
+        let c = Cluster::new(cfg);
+        let _ = pipeline_fingerprint(&c);
+        let snap = c.metrics();
+        let map = snap.method("exec-map").expect("map stats recorded");
+        assert!(map.wall_secs > 0.0, "narrow stages measure wall clock");
+        let red = snap.method("exec-reduce").expect("reduce stats recorded");
+        assert!(red.wall_secs > 0.0, "exchange + reduce measure wall clock");
+        // Sequential paths also populate the measured dimension.
+        let seq = cluster(2);
+        let _ = pipeline_fingerprint(&seq);
+        let s = seq.metrics();
+        assert!(s.method("exec-map").unwrap().wall_secs > 0.0);
     }
 }

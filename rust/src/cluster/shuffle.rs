@@ -1,11 +1,22 @@
 //! Shuffle machinery: hash partitioning, executor placement, and the byte
 //! accounting that feeds the simulated interconnect.
+//!
+//! Two execution strategies produce identical buckets: the sequential
+//! [`route`] and the pool-backed [`route_parallel`] (map-side bucketing
+//! and reduce-side merges as separate task waves over a sharded-lock
+//! exchange). The determinism contract — incoming runs merge in
+//! ascending source-partition order, items in original order within a
+//! run — makes the parallel path bit-identical, k-sum reduce order
+//! included. See `docs/EXECUTOR.md`.
 
 use std::collections::hash_map::DefaultHasher;
 use std::collections::HashMap;
 use std::hash::{Hash, Hasher};
+use std::sync::Mutex;
 
 use crate::cluster::rdd::Rdd;
+use crate::exec::{ExecPool, StageExecStats};
+use crate::util::plock;
 
 /// Payload size estimation for shuffle-cost accounting.
 pub trait Bytes {
@@ -147,6 +158,87 @@ pub fn route<T>(
     (buckets, moved, total)
 }
 
+/// Parallel [`route`]: map-side bucketing fans out one task per source
+/// partition (each computes its own byte counts and scatters
+/// per-destination runs into a sharded-lock exchange), then reduce-side
+/// merges fan out one task per destination partition.
+///
+/// **Determinism contract**: each destination sorts its incoming runs by
+/// ascending source partition before concatenating, and a run preserves
+/// the source's item order — exactly the element order the sequential
+/// [`route`] produces. Downstream `group_pairs` first-seen key order and
+/// k-sum reduce order are therefore identical, which is what keeps
+/// parallel runs bit-identical to sequential ones. Byte counters are
+/// per-item sums, so they match trivially.
+///
+/// Also returns the pool's merged execution stats for the two waves
+/// (wall clock, queue/run time, steals) for the stage record.
+pub fn route_parallel<T: Send>(
+    pool: &ExecPool,
+    input: Rdd<T>,
+    nparts: usize,
+    executors: usize,
+    part_fn: impl Fn(&T) -> usize + Sync,
+    bytes_fn: impl Fn(&T) -> u64 + Sync,
+) -> (Vec<Vec<T>>, u64, u64, StageExecStats) {
+    // One mailbox per destination partition, each holding (source, run)
+    // pairs published by the map wave.
+    type Shard<T> = Mutex<Vec<(usize, Vec<T>)>>;
+    let nparts = nparts.max(1);
+    let shards: Vec<Shard<T>> = (0..nparts).map(|_| Mutex::new(Vec::new())).collect();
+    let map_tasks: Vec<(usize, Vec<T>)> = input.into_partitions().into_iter().enumerate().collect();
+
+    // Map wave: bucket each source partition locally, then publish the
+    // non-empty runs into the destination shards.
+    let map_run = pool.run_stage(map_tasks, |(src_part, items)| {
+        let src_exec = executor_of_partition(src_part, executors);
+        let mut runs: Vec<Vec<T>> = (0..nparts).map(|_| Vec::new()).collect();
+        let mut moved = 0u64;
+        let mut total = 0u64;
+        for item in items {
+            let dst_part = part_fn(&item) % nparts;
+            let dst_exec = executor_of_partition(dst_part, executors);
+            if dst_part != src_part {
+                total += bytes_fn(&item);
+            }
+            if dst_exec != src_exec {
+                moved += bytes_fn(&item);
+            }
+            runs[dst_part].push(item);
+        }
+        for (dst, run) in runs.into_iter().enumerate() {
+            if !run.is_empty() {
+                plock(&shards[dst]).push((src_part, run));
+            }
+        }
+        (moved, total)
+    });
+    let moved = map_run.outputs.iter().map(|(m, _)| m).sum();
+    let total = map_run.outputs.iter().map(|(_, t)| t).sum();
+
+    // Reduce wave: merge each destination's runs in canonical
+    // (ascending-source) order.
+    let reduce_run = pool.run_stage((0..nparts).collect(), |dst: usize| {
+        let mut incoming = std::mem::take(&mut *plock(&shards[dst]));
+        incoming.sort_by_key(|(src, _)| *src);
+        let mut bucket = Vec::with_capacity(incoming.iter().map(|(_, r)| r.len()).sum());
+        for (_, mut run) in incoming {
+            bucket.append(&mut run);
+        }
+        bucket
+    });
+
+    let (m, r) = (map_run.stats, reduce_run.stats);
+    let stats = StageExecStats {
+        tasks: m.tasks + r.tasks,
+        steals: m.steals + r.steals,
+        queue_ns: m.queue_ns + r.queue_ns,
+        run_ns: m.run_ns + r.run_ns,
+        wall_ns: m.wall_ns + r.wall_ns,
+    };
+    (reduce_run.outputs, moved, total, stats)
+}
+
 /// Group a partition's pairs by key, preserving first-seen key order.
 pub fn group_pairs<K: Hash + Eq + Clone, V>(pairs: Vec<(K, V)>) -> Vec<(K, Vec<V>)> {
     let mut order: Vec<K> = Vec::new();
@@ -241,6 +333,51 @@ mod tests {
         let pairs = vec![("a", 1), ("b", 2), ("a", 3)];
         let grouped = group_pairs(pairs);
         assert_eq!(grouped, vec![("a", vec![1, 3]), ("b", vec![2])]);
+    }
+
+    #[test]
+    fn property_parallel_route_identical_to_sequential() {
+        let pool = ExecPool::new(4);
+        forall(
+            "parallel route ≡ sequential route (order included)",
+            0xB7,
+            32,
+            |r| {
+                let n = r.next_usize(300);
+                let items: Vec<(u64, i64)> =
+                    (0..n).map(|_| (r.next_u64() % 16, r.next_u64() as i64)).collect();
+                let nparts = 1 + r.next_usize(8);
+                let execs = 1 + r.next_usize(6);
+                let srcparts = 1 + r.next_usize(8);
+                (items, nparts, execs, srcparts)
+            },
+            |(items, nparts, execs, srcparts)| {
+                let part = |it: &(u64, i64)| (it.0 as usize) % *nparts;
+                let bytes = |it: &(u64, i64)| it.size_bytes();
+                let (seq, smoved, stotal) =
+                    route(Rdd::from_items(items.clone(), *srcparts), *nparts, *execs, part, bytes);
+                let (par, pmoved, ptotal, stats) = route_parallel(
+                    &pool,
+                    Rdd::from_items(items.clone(), *srcparts),
+                    *nparts,
+                    *execs,
+                    part,
+                    bytes,
+                );
+                if seq != par {
+                    return Err(format!("buckets diverge: {seq:?} vs {par:?}"));
+                }
+                if (smoved, stotal) != (pmoved, ptotal) {
+                    return Err(format!(
+                        "byte counters diverge: ({smoved},{stotal}) vs ({pmoved},{ptotal})"
+                    ));
+                }
+                if stats.tasks != *srcparts + *nparts {
+                    return Err(format!("expected map+reduce task waves, got {stats:?}"));
+                }
+                Ok(())
+            },
+        );
     }
 
     #[test]

@@ -140,6 +140,13 @@ pub struct ClusterConfig {
     /// Real worker threads used to chew through tasks on this machine
     /// (orthogonal to the *simulated* slot count above).
     pub worker_threads: usize,
+    /// Execution lanes of the work-stealing partition runtime
+    /// (`spin::exec`). At 1 (the default) stages run on the legacy
+    /// inline/scoped-thread path; above 1 every narrow stage, shuffle
+    /// wave, and straggler sleep fans out on the shared process-wide
+    /// pool — bit-identical results, real wall-clock metrics. CLI:
+    /// `--set exec_threads=N`; env default: `SPIN_EXEC_THREADS`.
+    pub exec_threads: usize,
     /// Report virtual (discrete-event) time instead of raw wall clock.
     /// See DESIGN.md §3 — this is the single-core testbed substitution.
     pub virtual_time: bool,
@@ -227,6 +234,18 @@ fn default_worker_threads() -> usize {
         .unwrap_or(1)
 }
 
+/// Default exec-pool lane count: `SPIN_EXEC_THREADS` when set to a
+/// positive integer, else 1 (sequential inline execution). Same CI
+/// thread-matrix contract as [`default_worker_threads`]: an explicit
+/// `exec_threads` (builder, config file, `--set exec_threads=N`) wins.
+fn default_exec_threads() -> usize {
+    std::env::var("SPIN_EXEC_THREADS")
+        .ok()
+        .and_then(|v| v.parse::<usize>().ok())
+        .filter(|&n| n > 0)
+        .unwrap_or(1)
+}
+
 impl ClusterConfig {
     /// Single-node local "cluster" with `cores` slots — unit-test topology.
     pub fn local(cores: usize) -> Self {
@@ -241,6 +260,7 @@ impl ClusterConfig {
             backend: BackendKind::Native,
             artifacts_dir: PathBuf::from("artifacts"),
             worker_threads: default_worker_threads(),
+            exec_threads: default_exec_threads(),
             virtual_time: true,
             partitioner_aware: true,
             plan_optimizer: true,
@@ -272,6 +292,7 @@ impl ClusterConfig {
             backend: BackendKind::Native,
             artifacts_dir: PathBuf::from("artifacts"),
             worker_threads: default_worker_threads(),
+            exec_threads: default_exec_threads(),
             virtual_time: true,
             partitioner_aware: true,
             plan_optimizer: true,
@@ -314,6 +335,9 @@ impl ClusterConfig {
         if self.worker_threads == 0 {
             return Err(SpinError::config("worker_threads must be positive"));
         }
+        if self.exec_threads == 0 {
+            return Err(SpinError::config("exec_threads must be positive"));
+        }
         if !(self.network.bandwidth_gbps > 0.0) || self.network.latency_us < 0.0 {
             return Err(SpinError::config("invalid network parameters"));
         }
@@ -347,6 +371,7 @@ impl ClusterConfig {
                 Json::str(self.artifacts_dir.to_string_lossy().to_string()),
             ),
             ("worker_threads", Json::num(self.worker_threads as f64)),
+            ("exec_threads", Json::num(self.exec_threads as f64)),
             ("virtual_time", Json::Bool(self.virtual_time)),
             ("partitioner_aware", Json::Bool(self.partitioner_aware)),
             ("plan_optimizer", Json::Bool(self.plan_optimizer)),
@@ -426,6 +451,7 @@ impl ClusterConfig {
                 ),
             },
             worker_threads: get_usize("worker_threads", base.worker_threads)?,
+            exec_threads: get_usize("exec_threads", base.exec_threads)?,
             virtual_time: match v.get("virtual_time") {
                 None => base.virtual_time,
                 Some(j) => j
@@ -508,6 +534,7 @@ impl ClusterConfig {
             "backend" => self.backend = BackendKind::parse(value)?,
             "artifacts_dir" => self.artifacts_dir = PathBuf::from(value),
             "worker_threads" => self.worker_threads = parse_usize(value)?,
+            "exec_threads" => self.exec_threads = parse_usize(value)?,
             "virtual_time" => {
                 self.virtual_time = value
                     .parse::<bool>()
@@ -903,6 +930,7 @@ mod tests {
         let mut c = ClusterConfig::paper();
         c.backend = BackendKind::Xla;
         c.worker_threads = 3;
+        c.exec_threads = 4;
         c.partitioner_aware = false;
         c.plan_optimizer = false;
         c.cache_budget_bytes = 1 << 20;

@@ -72,6 +72,9 @@
 //! use spin::service::{JobSpec, MatrixSpec, SpinService};
 //!
 //! fn main() -> spin::Result<()> {
+//!     // `--set exec_threads=N` (or SPIN_EXEC_THREADS) runs every stage's
+//!     // partitions on the work-stealing pool in `spin::exec` — results
+//!     // stay bit-identical to sequential execution (see docs/EXECUTOR.md).
 //!     let service = SpinService::builder().cores(4).workers(2).build()?;
 //!     // O(1): no block of the 256×256 input exists yet.
 //!     let a = MatrixSpec::new(256, 64).seeded(7); // 4×4 grid of 64×64 blocks
@@ -145,6 +148,7 @@ pub mod cluster;
 pub mod config;
 pub mod costmodel;
 pub mod error;
+pub mod exec;
 pub mod experiments;
 pub mod http;
 pub mod linalg;

@@ -1113,3 +1113,96 @@ fn rng_stream_stability_guard() {
     let vals: Vec<u64> = (0..4).map(|_| r.next_u64() % 1000).collect();
     assert_eq!(vals.len(), 4);
 }
+
+// ---------------- work-stealing executor (this PR's headline) ----------
+
+/// Acceptance (property): running every stage on the work-stealing
+/// partition runtime — at 2, 4 and 8 lanes, with and without fault
+/// injection — is **bit-identical** to the sequential executor for both
+/// algorithms. The runtime's determinism contract (canonical-order shuffle
+/// merges, executor-independent fault streams) is exactly this.
+#[test]
+fn parallel_execution_is_bit_identical_to_sequential_property() {
+    forall(
+        "exec_threads ∈ {2,4,8} ≡ sequential, bit for bit",
+        0xE8EC,
+        2,
+        |r| (r.next_u64(), 1 + r.next_u64() % 0xFFFF),
+        |&(matrix_seed, fault_seed)| {
+            let run = |algo: &str, exec_threads: usize, chaos: bool| {
+                let mut cfg = ClusterConfig::local(4);
+                cfg.exec_threads = exec_threads;
+                if chaos {
+                    cfg.fault_seed = Some(fault_seed);
+                    cfg.fault_rate = 0.1;
+                    cfg.task_retries = 5;
+                }
+                let session = SpinSession::builder()
+                    .cluster_config(cfg)
+                    .build()
+                    .map_err(|e| e.to_string())?;
+                let a = session
+                    .random_seeded(128, 16, matrix_seed)
+                    .map_err(|e| e.to_string())?;
+                let inv = a.inverse_with(algo).map_err(|e| e.to_string())?;
+                inv.to_dense().map_err(|e| e.to_string())
+            };
+            for algo in ["spin", "lu"] {
+                for chaos in [false, true] {
+                    let sequential = run(algo, 1, chaos)?;
+                    for threads in [2usize, 4, 8] {
+                        let parallel = run(algo, threads, chaos)?;
+                        for (i, (p, s)) in
+                            parallel.data().iter().zip(sequential.data()).enumerate()
+                        {
+                            if p.to_bits() != s.to_bits() {
+                                return Err(format!(
+                                    "{algo} chaos={chaos} exec_threads={threads} \
+                                     seed={matrix_seed:#x}: element {i} differs: \
+                                     {p:e} vs {s:e}"
+                                ));
+                            }
+                        }
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// CI speedup smoke (`SPIN_EXEC_SPEEDUP=1`, release build): at n = 512 /
+/// block 64 the 4-lane executor must beat the sequential one by ≥ 1.3×
+/// wall clock. Skipped with a notice on hosts with < 4 cores or when the
+/// env gate is unset (debug-build timings are noise).
+#[test]
+fn exec_parallel_speedup_smoke() {
+    if std::env::var("SPIN_EXEC_SPEEDUP").is_err() {
+        println!("skipping speedup smoke: SPIN_EXEC_SPEEDUP not set");
+        return;
+    }
+    let cores = std::thread::available_parallelism().map(|c| c.get()).unwrap_or(1);
+    if cores < 4 {
+        println!("skipping speedup smoke: only {cores} cores available (need 4)");
+        return;
+    }
+    let wall = |exec_threads: usize| {
+        let mut cfg = ClusterConfig::local(4);
+        cfg.exec_threads = exec_threads;
+        let mut job = JobConfig::new(512, 64);
+        job.seed = 0x5EED;
+        let r = spin::experiments::run_inversion(&cfg, &job, "spin").unwrap();
+        assert!(r.residual < 1e-8, "residual {:.3e}", r.residual);
+        r.real_secs
+    };
+    // Warm up once so allocator/page-cache effects don't skew lane 1.
+    let _ = wall(1);
+    let sequential = wall(1);
+    let parallel = wall(4);
+    let speedup = sequential / parallel;
+    println!("speedup smoke: sequential {sequential:.3}s, 4 lanes {parallel:.3}s ({speedup:.2}x)");
+    assert!(
+        speedup >= 1.3,
+        "4-lane executor must be ≥ 1.3x faster: {sequential:.3}s vs {parallel:.3}s ({speedup:.2}x)"
+    );
+}
