@@ -1,0 +1,320 @@
+//! Newton–Schulz iterative inverse approximation.
+//!
+//! The iteration `X_{k+1} = X_k(2I − A·X_k)` converges quadratically
+//! whenever `‖I − A·X₀‖ < 1`. We seed with the scaled transpose
+//! `X₀ = Aᵀ/(‖A‖₁·‖A‖∞)`, which satisfies that bound for **every**
+//! nonsingular `A` (σ_max(A)² ≤ ‖A‖₁·‖A‖∞, a classical norm inequality),
+//! so convergence is guaranteed for the crate's diag-dominant and SPD
+//! generator families — only the iteration *count* depends on
+//! conditioning.
+//!
+//! ## One plan per iteration
+//!
+//! Each pass builds `M_k = 2I − A·X_k` as ONE lazy plan (a `Multiply`
+//! under a `Subtract` against the loop-invariant `2I` source) and lowers
+//! it through the standard optimizer. Note the shape is `D − A·B`, which
+//! the fusion rule correctly does NOT turn into `multiply_sub` (that
+//! fusion only matches `A·B − D`) — the optimizer-rule contract holds
+//! with zero special-casing. The residual `‖I − A·X_k‖∞ = ‖M_k − I‖∞`
+//! is then read off `M_k` driver-side for free, and the update
+//! `X_{k+1} = X_k·M_k` reuses `M_k`'s memoized value through the plan
+//! executor's per-node slot — each non-final pass pays exactly two
+//! distributed multiplies, and the final pass only one.
+//!
+//! ## SLA semantics
+//!
+//! The driver stops as soon as the residual reaches
+//! `JobConfig::tolerance`, or after `JobConfig::max_iters` passes. A run
+//! that exhausts its budget still returns the best iterate — with
+//! `converged: false` in its [`ConvergenceReport`] — because the serving
+//! mode's contract is "the best answer by the deadline", not "exact or
+//! nothing". Non-finite residuals (a singular input driving the
+//! iteration apart) are a hard numerical error.
+
+use crate::blockmatrix::BlockMatrix;
+use crate::cluster::{Cluster, ConvergenceReport};
+use crate::config::JobConfig;
+use crate::error::{Result, SpinError};
+use crate::plan::{MatExpr, PlanExec};
+use crate::runtime::BlockKernels;
+
+use super::super::registry::InversionAlgorithm;
+
+/// Newton–Schulz approximate inverse (`newton` in the registry).
+pub struct NewtonAlgorithm;
+
+impl InversionAlgorithm for NewtonAlgorithm {
+    fn name(&self) -> &str {
+        "newton"
+    }
+
+    fn description(&self) -> &str {
+        "Newton-Schulz iterative inverse (early-stop at tolerance/max_iters)"
+    }
+
+    fn iterative(&self) -> bool {
+        true
+    }
+
+    fn convergence_note(&self) -> Option<String> {
+        Some(
+            "convergence loop: repeat the plan above (X ← X·(2I − A·X), seeded X₀ = Aᵀ/(‖A‖₁‖A‖∞)) \
+             until ‖I − A·Xₖ‖∞ ≤ tolerance or max_iters passes; residual read driver-side from \
+             the 2I − A·X value each pass"
+                .to_string(),
+        )
+    }
+
+    fn invert(
+        &self,
+        cluster: &Cluster,
+        kernels: &dyn BlockKernels,
+        a: &BlockMatrix,
+        job: &JobConfig,
+    ) -> Result<BlockMatrix> {
+        newton_inverse_impl(cluster, kernels, a, job)
+    }
+
+    fn plan(&self, a: &MatExpr) -> Result<Option<MatExpr>> {
+        // One iteration of the loop, as the convergence note explains.
+        // The seed's true scale factor 1/(‖A‖₁‖A‖∞) is data-dependent;
+        // 0.5 stands in so the scale node renders instead of folding.
+        let x0 = a.transpose().scale(0.5);
+        let two_i =
+            MatExpr::source(BlockMatrix::identity(a.n(), a.block_size())?).scale(2.0);
+        let m = two_i.subtract(&a.multiply(&x0)?)?;
+        Ok(Some(x0.multiply(&m)?))
+    }
+}
+
+/// The driver loop (see module docs for the per-pass plan structure).
+pub(crate) fn newton_inverse_impl(
+    cluster: &Cluster,
+    kernels: &dyn BlockKernels,
+    a: &BlockMatrix,
+    job: &JobConfig,
+) -> Result<BlockMatrix> {
+    let n = a.n();
+    let bs = a.block_size();
+    let tol = job.tolerance;
+    let max_iters = job.max_iters;
+
+    // Seed scale from the two driver-side norms. Zero norms mean a zero
+    // matrix — singular, and the iteration could never move off X₀ = 0.
+    let dense = a.to_dense()?;
+    let norm_product = dense.one_norm() * dense.inf_norm();
+    if norm_product <= 0.0 || !norm_product.is_finite() {
+        return Err(SpinError::numerical(format!(
+            "newton seed undefined: ‖A‖₁·‖A‖∞ = {norm_product:.3e}"
+        )));
+    }
+
+    let exec = PlanExec::new(cluster, kernels);
+    let ae = MatExpr::source(a.clone());
+    // Loop-invariant 2I: one shared plan node, so its (narrow) scaling
+    // runs once and every iteration's subtract reuses the memoized value.
+    let two_i = MatExpr::source(BlockMatrix::identity(n, bs)?).scale(2.0);
+
+    // X₀ = Aᵀ/(‖A‖₁‖A‖∞): transpose + scale are narrow — no exchange.
+    let mut x = exec.eval(&ae.transpose().scale(1.0 / norm_product))?;
+
+    let mut residuals: Vec<f64> = Vec::new();
+    let mut converged = false;
+    for pass in 1..=max_iters {
+        let xe = MatExpr::source(x.clone());
+        let me = two_i.subtract(&ae.multiply(&xe)?)?;
+        let m = exec.eval(&me)?;
+
+        // M − I = I − A·X, so the iterate's residual is ‖M − I‖∞.
+        let md = m.to_dense()?;
+        let mut r: f64 = 0.0;
+        for i in 0..n {
+            let mut row = 0.0;
+            for j in 0..n {
+                let expect = if i == j { 1.0 } else { 0.0 };
+                row += (md.get(i, j) - expect).abs();
+            }
+            r = r.max(row);
+        }
+        residuals.push(r);
+        if !r.is_finite() {
+            return Err(SpinError::numerical(format!(
+                "newton diverged at iteration {pass}: residual {r}"
+            )));
+        }
+        if r <= tol {
+            converged = true;
+            break;
+        }
+        if pass == max_iters {
+            // Budget exhausted: return THIS iterate (whose residual we
+            // just measured) rather than paying for an update we could
+            // not verify.
+            break;
+        }
+        // X_{k+1} = X_k·M_k — M_k's value is memoized on its plan node,
+        // so this costs one distributed multiply, not a recompute.
+        x = exec.eval(&xe.multiply(&me)?)?;
+    }
+
+    let final_residual = *residuals.last().expect("max_iters >= 1");
+    cluster.record_convergence(ConvergenceReport {
+        algo: "newton".to_string(),
+        iterations: residuals.len(),
+        converged,
+        tolerance: tol,
+        final_residual,
+        residuals,
+    });
+    Ok(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{ClusterConfig, GeneratorKind};
+    use crate::linalg::inverse_residual;
+    use crate::runtime::NativeBackend;
+
+    fn cluster() -> Cluster {
+        Cluster::new(ClusterConfig::local(4))
+    }
+
+    fn job(n: usize, bs: usize, gen: GeneratorKind) -> JobConfig {
+        let mut job = JobConfig::new(n, bs);
+        job.generator = gen;
+        job
+    }
+
+    #[test]
+    fn converges_on_diag_dominant_with_early_stop() {
+        let c = cluster();
+        let mut j = job(32, 8, GeneratorKind::DiagDominant);
+        j.tolerance = 1e-10;
+        j.max_iters = 64;
+        let a = BlockMatrix::random(&j).unwrap();
+        let inv = newton_inverse_impl(&c, &NativeBackend, &a, &j).unwrap();
+        let resid = inverse_residual(&a.to_dense().unwrap(), &inv.to_dense().unwrap());
+        assert!(resid < 1e-8, "residual {resid:.3e}");
+        let reports = c.metrics_scoped(0).convergence().to_vec();
+        assert_eq!(reports.len(), 1);
+        let r = &reports[0];
+        assert!(r.converged);
+        assert!(
+            r.iterations < j.max_iters,
+            "early stop not honored: {} iterations",
+            r.iterations
+        );
+        assert_eq!(r.iterations, r.residuals.len());
+        assert!(r.final_residual <= j.tolerance);
+        // Quadratic convergence: the trajectory is strictly decreasing
+        // once contraction kicks in; at minimum the last step improves.
+        assert!(r.residuals.last().unwrap() <= r.residuals.first().unwrap());
+    }
+
+    #[test]
+    fn converges_on_spd() {
+        let c = cluster();
+        let mut j = job(32, 4, GeneratorKind::Spd);
+        j.tolerance = 1e-9;
+        let a = BlockMatrix::random(&j).unwrap();
+        let inv = newton_inverse_impl(&c, &NativeBackend, &a, &j).unwrap();
+        let resid = inverse_residual(&a.to_dense().unwrap(), &inv.to_dense().unwrap());
+        assert!(resid < 1e-8, "residual {resid:.3e}");
+        let totals = c.convergence_totals();
+        assert_eq!(totals.runs, 1);
+        assert_eq!(totals.converged_runs, 1);
+    }
+
+    #[test]
+    fn loose_tolerance_stops_sooner() {
+        let j_strict = {
+            let mut j = job(32, 8, GeneratorKind::DiagDominant);
+            j.tolerance = 1e-12;
+            j
+        };
+        let j_loose = {
+            let mut j = job(32, 8, GeneratorKind::DiagDominant);
+            j.tolerance = 1e-2;
+            j
+        };
+        let iters = |j: &JobConfig| {
+            let c = cluster();
+            let a = BlockMatrix::random(j).unwrap();
+            newton_inverse_impl(&c, &NativeBackend, &a, j).unwrap();
+            c.metrics_scoped(0).convergence()[0].iterations
+        };
+        let strict = iters(&j_strict);
+        let loose = iters(&j_loose);
+        assert!(
+            loose < strict,
+            "loose tolerance ran {loose} iterations vs strict {strict}"
+        );
+    }
+
+    #[test]
+    fn exhausted_budget_returns_best_iterate_unconverged() {
+        let c = cluster();
+        let mut j = job(32, 8, GeneratorKind::DiagDominant);
+        j.tolerance = 1e-14; // unreachable in 2 passes
+        j.max_iters = 2;
+        let a = BlockMatrix::random(&j).unwrap();
+        // SLA semantics: Ok, not Err — the best-so-far iterate.
+        let inv = newton_inverse_impl(&c, &NativeBackend, &a, &j).unwrap();
+        assert!(inv.to_dense().unwrap().all_finite());
+        let reports = c.metrics_scoped(0).convergence().to_vec();
+        let r = &reports[0];
+        assert!(!r.converged);
+        assert_eq!(r.iterations, 2);
+        assert!(r.final_residual > j.tolerance);
+        let totals = c.convergence_totals();
+        assert_eq!((totals.runs, totals.converged_runs), (1, 0));
+    }
+
+    #[test]
+    fn matches_exact_inverse() {
+        let c1 = cluster();
+        let c2 = cluster();
+        let mut j = job(16, 4, GeneratorKind::DiagDominant);
+        j.tolerance = 1e-13;
+        let a = BlockMatrix::random(&j).unwrap();
+        let newton = newton_inverse_impl(&c1, &NativeBackend, &a, &j).unwrap();
+        let spin = crate::algos::spin::spin_inverse_impl(&c2, &NativeBackend, &a, &j).unwrap();
+        let diff = newton
+            .to_dense()
+            .unwrap()
+            .max_abs_diff(&spin.to_dense().unwrap());
+        assert!(diff < 1e-9, "newton vs spin diff {diff}");
+    }
+
+    #[test]
+    fn schur_shape_is_not_miss_fused() {
+        // 2I − A·X is D − A·B: the multiply_sub fusion must not fire.
+        let c = cluster();
+        let j = job(16, 4, GeneratorKind::DiagDominant);
+        let a = BlockMatrix::random(&j).unwrap();
+        let _ = newton_inverse_impl(&c, &NativeBackend, &a, &j).unwrap();
+        let snap = c.metrics();
+        assert!(snap.method("subtract").is_some());
+        assert!(!snap.plan_nodes().iter().any(|p| p.op == "multiply_sub"));
+    }
+
+    #[test]
+    fn exchange_count_is_deterministic_per_iteration_count() {
+        // Every pass pays the same stage structure, so exchanges are a
+        // pure function of the iteration count — the property the bench
+        // gate relies on.
+        let counts = |seed: u64| {
+            let c = cluster();
+            let mut j = job(32, 8, GeneratorKind::DiagDominant);
+            j.seed = seed;
+            let a = BlockMatrix::random(&j).unwrap();
+            newton_inverse_impl(&c, &NativeBackend, &a, &j).unwrap();
+            let iters = c.metrics_scoped(0).convergence()[0].iterations;
+            (iters, c.metrics_totals().shuffle_stages)
+        };
+        let (i1, e1) = counts(7);
+        let (i2, e2) = counts(7);
+        assert_eq!((i1, e1), (i2, e2), "same input must replay identically");
+    }
+}

@@ -174,7 +174,9 @@ fn block_lu_compute(
 
 /// Recursive inversion of a block lower-triangular matrix:
 /// `[[L11,0],[L21,L22]]⁻¹ = [[L11⁻¹, 0], [−L22⁻¹·L21·L11⁻¹, L22⁻¹]]`.
-fn invert_block_lower(
+/// Shared with the Cholesky scheme (`A⁻¹ = L⁻ᵀ·L⁻¹` needs the same
+/// triangular inversion).
+pub(crate) fn invert_block_lower(
     cluster: &Cluster,
     kernels: &dyn BlockKernels,
     l: &BlockMatrix,

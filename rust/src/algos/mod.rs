@@ -4,20 +4,25 @@
 //! [`InversionAlgorithm`] registry new schemes plug into.
 //!
 //! Dispatch goes through a name-keyed [`AlgorithmRegistry`] (default
-//! entries: `spin`, `lu`). Both built-ins express each recursion level as
-//! a lazy [`crate::plan::MatExpr`] plan and lower it through
-//! [`crate::plan::PlanExec`]; an algorithm can additionally expose its
-//! level plan for `explain` via [`InversionAlgorithm::plan`].
+//! entries: `spin`, `lu`, `newton`, `cholesky` — the latter two from the
+//! [`iterative`] subsystem). Every built-in expresses its distributed
+//! arithmetic as lazy [`crate::plan::MatExpr`] plans and lowers them
+//! through [`crate::plan::PlanExec`]; an algorithm can additionally
+//! expose its level plan for `explain` via [`InversionAlgorithm::plan`],
+//! and iterative schemes (`newton`) report their residual trajectory
+//! through [`crate::cluster::ConvergenceReport`].
 //!
 //! The deprecated closed `Algorithm` enum and the `spin_inverse` /
 //! `lu_inverse_distributed` free-function shims were removed in PR 3
 //! after their scheduled two-PR deprecation window — the registry is the
 //! only dispatch path.
 
+pub mod iterative;
 mod lu;
 mod registry;
 mod serial;
 mod spin;
 
+pub use iterative::{CholeskyAlgorithm, NewtonAlgorithm};
 pub use registry::{AlgorithmRegistry, InversionAlgorithm, LuAlgorithm, SpinAlgorithm};
 pub use serial::{lu_inverse_serial, strassen_inverse_serial};

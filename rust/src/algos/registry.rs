@@ -49,6 +49,20 @@ pub trait InversionAlgorithm: Send + Sync {
         let _ = a;
         Ok(None)
     }
+
+    /// Whether this scheme iterates to a tolerance. Iterative schemes
+    /// honor `JobConfig::{tolerance, max_iters}` and record convergence
+    /// metrics; exact schemes reject those knobs at submit.
+    fn iterative(&self) -> bool {
+        false
+    }
+
+    /// For iterative schemes: a one-line convergence-loop annotation
+    /// appended to `spin explain` output (the rendered plan is one
+    /// iteration of the loop).
+    fn convergence_note(&self) -> Option<String> {
+        None
+    }
 }
 
 /// The paper's SPIN recursion (Algorithm 2).
@@ -119,13 +133,18 @@ impl AlgorithmRegistry {
         AlgorithmRegistry::default()
     }
 
-    /// Registry pre-loaded with the built-in schemes: `spin` and `lu`.
+    /// Registry pre-loaded with the built-in schemes: `spin`, `lu`,
+    /// `newton`, and `cholesky`.
     pub fn with_defaults() -> Self {
         let mut r = AlgorithmRegistry::new();
         r.register(Arc::new(SpinAlgorithm))
             .expect("empty registry accepts spin");
         r.register(Arc::new(LuAlgorithm))
             .expect("fresh registry accepts lu");
+        r.register(Arc::new(super::iterative::NewtonAlgorithm))
+            .expect("fresh registry accepts newton");
+        r.register(Arc::new(super::iterative::CholeskyAlgorithm))
+            .expect("fresh registry accepts cholesky");
         r
     }
 
@@ -183,11 +202,24 @@ mod tests {
     use crate::runtime::NativeBackend;
 
     #[test]
-    fn defaults_contain_spin_and_lu() {
+    fn defaults_contain_all_builtin_schemes() {
         let r = AlgorithmRegistry::with_defaults();
-        assert_eq!(r.names(), vec!["lu".to_string(), "spin".to_string()]);
+        assert_eq!(
+            r.names(),
+            vec![
+                "cholesky".to_string(),
+                "lu".to_string(),
+                "newton".to_string(),
+                "spin".to_string()
+            ]
+        );
         assert!(r.contains("spin"));
-        assert!(!r.contains("newton"));
+        assert!(!r.contains("qr"));
+        // Only newton iterates; the exact schemes reject tolerance knobs.
+        assert!(r.get("newton").unwrap().iterative());
+        for exact in ["spin", "lu", "cholesky"] {
+            assert!(!r.get(exact).unwrap().iterative(), "{exact}");
+        }
     }
 
     #[test]
@@ -200,9 +232,12 @@ mod tests {
     #[test]
     fn unknown_name_lists_available() {
         let r = AlgorithmRegistry::with_defaults();
-        let err = r.get("cholesky").unwrap_err();
+        let err = r.get("qr").unwrap_err();
         let msg = err.to_string();
-        assert!(msg.contains("cholesky") && msg.contains("lu|spin"), "{msg}");
+        assert!(
+            msg.contains("qr") && msg.contains("cholesky|lu|newton|spin"),
+            "{msg}"
+        );
     }
 
     #[test]

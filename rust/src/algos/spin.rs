@@ -120,9 +120,12 @@ fn inverse_rec(
         // ---- else-part: one Strassen level as a plan.
         let plan = level_plan(&MatExpr::source(a.clone()))?;
         let exec = PlanExec::new(cluster, kernels);
-        exec.eval_with(&plan, &|_algo: &str, m: &BlockMatrix| {
-            inverse_rec(cluster, kernels, m, job)
-        })?
+        exec.eval_with(
+            &plan,
+            &|_algo: &str, _opts: &crate::plan::InvertOpts, m: &BlockMatrix| {
+                inverse_rec(cluster, kernels, m, job)
+            },
+        )?
     };
 
     if let Some(level) = &ckpt {

@@ -76,6 +76,14 @@ impl Args {
         Ok(out)
     }
 
+    /// Re-insert a `--name value` pair. Used to route a `--set` key owned
+    /// by another config domain (e.g. `--set tolerance=…` is per-job, not
+    /// cluster topology) to the flag that domain actually reads.
+    pub fn push(&mut self, name: &str, value: &str) {
+        self.tokens.push(Some(name.to_string()));
+        self.tokens.push(Some(value.to_string()));
+    }
+
     /// Error if any tokens were not consumed (catches typos).
     pub fn finish(self) -> Result<()> {
         let leftovers: Vec<String> = self.tokens.into_iter().flatten().collect();

@@ -95,7 +95,10 @@ pub fn usage() -> String {
      \x20 info     show cluster config and artifact status\n\
      \n\
      COMMON FLAGS:\n\
-     \x20 --n N --block-size S --algo NAME (any registered algorithm; built-in: spin|lu)\n\
+     \x20 --n N --block-size S --algo NAME (any registered algorithm;\n\
+     \x20 built-in: spin|lu|newton|cholesky)\n\
+     \x20 --set tolerance=T --set max_iters=K (iterative schemes: stop once\n\
+     \x20 the residual ≤ T or after K passes; see docs/ALGORITHMS.md)\n\
      \x20 --backend native|xla\n\
      \x20 --generator diag-dominant|spd --seed N --fuse-leaf-2x2\n\
      \x20 --residual-check --set key=value (cluster overrides, repeatable)\n\
@@ -114,7 +117,15 @@ fn cluster_config(args: &mut Args) -> Result<ClusterConfig> {
         cfg.apply_override(&format!("backend={backend}"))?;
     }
     for kv in args.flag_values("--set")? {
-        cfg.apply_override(&kv)?;
+        // Iterative-scheme knobs are per-job parameters, not cluster
+        // topology: `--set tolerance=1e-8` / `--set max_iters=20` route to
+        // the job override path (commands without a job config reject them
+        // as unrecognized).
+        if matches!(kv.split_once('='), Some(("tolerance" | "max_iters", _))) {
+            args.push("--job", &kv);
+        } else {
+            cfg.apply_override(&kv)?;
+        }
     }
     Ok(cfg)
 }
@@ -218,7 +229,17 @@ fn cmd_invert(mut args: Args) -> Result<()> {
         .build()?;
     // Fail before the banner on an unknown name (the registry's error
     // already lists what is registered).
-    session.registry().get(&algo)?;
+    let scheme = session.registry().get(&algo)?;
+    // Iterative knobs on an exact algorithm would be silently ignored —
+    // reject them like the service does.
+    let dflt = JobConfig::new(job.n, job.block_size);
+    if !scheme.iterative() && (job.tolerance != dflt.tolerance || job.max_iters != dflt.max_iters)
+    {
+        return Err(SpinError::config(format!(
+            "`tolerance`/`max_iters` apply only to iterative algorithms, \
+             but `{algo}` is exact"
+        )));
+    }
 
     println!(
         "inverting {}x{} (b = {}, block {}x{}) with {} on {} executors × {} cores [{} backend]",
@@ -422,9 +443,14 @@ fn cmd_bench(mut args: Args) -> Result<()> {
                 let handle = probe.submit(JobSpec::invert(spec))?;
                 handle.submit_driver_blocks()
             };
-            for algo in ["spin", "lu"] {
+            for algo in ["spin", "lu", "newton", "cholesky"] {
                 let mut job = JobConfig::new(n, n / b);
                 job.seed = seed ^ (n as u64) ^ b as u64;
+                // Cholesky requires a symmetric positive-definite input;
+                // the exact schemes and Newton run the default family.
+                if algo == "cholesky" {
+                    job.generator = GeneratorKind::Spd;
+                }
                 let r = experiments::run_inversion(&cfg, &job, algo)?;
                 println!(
                     "bench {algo:<4} n={n:<4} b={b}: virtual {}  shuffled {}  \
@@ -847,7 +873,7 @@ fn serve_http(
 /// Deterministic schema + perf gate for `spin bench`: the measured output
 /// must keep the committed baseline's shape, and — where the baseline
 /// carries runs — must not regress the deterministic dataflow counters
-/// (shuffle exchanges, driver collects). Timing magnitudes are
+/// (shuffle exchanges, shuffle bytes, driver collects). Timing magnitudes are
 /// intentionally NOT compared (host-dependent); measured timing fields
 /// (`wall_clock_ms`) gate on schema presence only — every gated row must
 /// carry a nonzero measurement, never a particular value.
@@ -908,7 +934,12 @@ fn check_bench_schema(baseline: &Json, measured: &Json) -> Result<()> {
             {
                 continue;
             }
-            for counter in ["shuffle_stages", "driver_collects", "submit_driver_blocks"] {
+            for counter in [
+                "shuffle_stages",
+                "driver_collects",
+                "submit_driver_blocks",
+                "total_shuffle_bytes",
+            ] {
                 let bv = brun.get(counter).and_then(Json::as_f64);
                 let mv = mrun.get(counter).and_then(Json::as_f64);
                 if let (Some(bv), Some(mv)) = (bv, mv) {
@@ -1006,7 +1037,45 @@ mod tests {
 
     #[test]
     fn invert_rejects_unknown_algo_via_registry() {
+        assert_eq!(run(argv("invert --n 16 --block-size 4 --algo qr")), 1);
+    }
+
+    #[test]
+    fn invert_newton_with_set_tolerance() {
+        // `--set tolerance=…` routes to the job config, not the cluster
+        // topology, and the newton scheme honors it.
+        assert_eq!(
+            run(argv(
+                "invert --n 16 --block-size 4 --algo newton --set tolerance=1e-8 --set max_iters=50"
+            )),
+            0
+        );
+    }
+
+    #[test]
+    fn invert_cholesky_on_spd_input() {
+        assert_eq!(
+            run(argv(
+                "invert --n 16 --block-size 4 --algo cholesky --generator spd"
+            )),
+            0
+        );
+        // Cholesky on the (asymmetric) default family fails loudly.
         assert_eq!(run(argv("invert --n 16 --block-size 4 --algo cholesky")), 1);
+    }
+
+    #[test]
+    fn invert_rejects_iterative_knobs_on_exact_algos() {
+        assert_eq!(
+            run(argv("invert --n 16 --block-size 4 --set tolerance=1e-8")),
+            1
+        );
+        assert_eq!(
+            run(argv(
+                "invert --n 16 --block-size 4 --algo lu --set max_iters=5"
+            )),
+            1
+        );
     }
 
     #[test]

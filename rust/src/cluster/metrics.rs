@@ -148,6 +148,54 @@ impl ResilienceTotals {
     }
 }
 
+/// One iterative-solver run's convergence record (`newton`): the residual
+/// trajectory the driver measured, iteration by iteration. Recorded under
+/// the running job's scope, so per-job metrics and `/v1/metrics` report
+/// exactly the iterations *that job* paid for.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ConvergenceReport {
+    /// Scheme that iterated (`"newton"`).
+    pub algo: String,
+    /// Iterations executed (= `residuals.len()`).
+    pub iterations: usize,
+    /// Whether the run reached `tolerance` within `max_iters` (false =
+    /// the SLA bound cut it off; the best iterate was still returned).
+    pub converged: bool,
+    /// The tolerance the run stopped against.
+    pub tolerance: f64,
+    /// Residual after the last iteration (∞-norm of `I − A·Xₖ`).
+    pub final_residual: f64,
+    /// Residual after each iteration, in order.
+    pub residuals: Vec<f64>,
+}
+
+/// O(1) aggregate convergence counters — kept like [`ResilienceTotals`]:
+/// registry-lifetime totals survive scope releases, per-scope copies
+/// answer "what did this job iterate".
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct ConvergenceTotals {
+    /// Iterative runs recorded.
+    pub runs: usize,
+    /// Iterations across all runs.
+    pub iterations: usize,
+    /// Runs that reached tolerance within their iteration budget.
+    pub converged_runs: usize,
+}
+
+impl ConvergenceTotals {
+    /// Fold `other` into `self`.
+    pub fn add(&mut self, other: &ConvergenceTotals) {
+        self.runs += other.runs;
+        self.iterations += other.iterations;
+        self.converged_runs += other.converged_runs;
+    }
+
+    /// True when any counter is nonzero.
+    pub fn any(&self) -> bool {
+        *self != ConvergenceTotals::default()
+    }
+}
+
 /// What one logical plan node actually paid when it was lowered — stamped
 /// by [`crate::plan::PlanExec`] so `explain`'s predictions are checkable
 /// against measured behaviour.
@@ -208,6 +256,10 @@ struct ScopeRecords {
     totals: MetricsTotals,
     /// Recovery counters attributed to this scope (O(1), never windowed).
     resilience: ResilienceTotals,
+    /// Iterative-run convergence records attributed to this scope (one
+    /// per `newton` run; bounded by the scope's run count, released with
+    /// the scope).
+    convergence: Vec<ConvergenceReport>,
 }
 
 #[derive(Default)]
@@ -241,6 +293,8 @@ struct MetricsInner {
     pinned_bytes: u64,
     /// Registry-lifetime recovery counters (survive scope releases).
     resilience: ResilienceTotals,
+    /// Registry-lifetime convergence counters (survive scope releases).
+    convergence: ConvergenceTotals,
 }
 
 /// Drop oldest records (across scopes, by global sequence) until the
@@ -386,6 +440,39 @@ impl Metrics {
         plock(&self.inner).resilience
     }
 
+    /// Record one iterative run's convergence trajectory — the full
+    /// report under the current thread's scope, the O(1) counters both
+    /// there and registry-lifetime (mirrors [`record_resilience`]).
+    ///
+    /// [`record_resilience`]: Self::record_resilience
+    pub fn record_convergence(&self, report: ConvergenceReport) {
+        let scope = Metrics::current_scope();
+        let delta = ConvergenceTotals {
+            runs: 1,
+            iterations: report.iterations,
+            converged_runs: report.converged as usize,
+        };
+        let mut inner = plock(&self.inner);
+        inner.convergence.add(&delta);
+        inner.scopes.entry(scope).or_default().convergence.push(report);
+    }
+
+    /// Registry-lifetime convergence counters (never go backwards).
+    pub fn convergence_totals(&self) -> ConvergenceTotals {
+        plock(&self.inner).convergence
+    }
+
+    /// Convergence reports recorded under one scope (a released scope
+    /// reads as empty — take the job's snapshot before releasing).
+    pub fn convergence_for_scope(&self, scope: u64) -> Vec<ConvergenceReport> {
+        let inner = plock(&self.inner);
+        inner
+            .scopes
+            .get(&scope)
+            .map(|rec| rec.convergence.clone())
+            .unwrap_or_default()
+    }
+
     /// Recovery counters restricted to one scope (a released scope reads
     /// as zero — take the job's snapshot before releasing).
     pub fn resilience_for_scope(&self, scope: u64) -> ResilienceTotals {
@@ -482,6 +569,11 @@ impl Metrics {
             .flat_map(|rec| rec.plan_nodes.iter().cloned())
             .collect();
         plan_nodes.sort_by_key(|(seq, _)| *seq);
+        let convergence: Vec<ConvergenceReport> = inner
+            .scopes
+            .values()
+            .flat_map(|rec| rec.convergence.iter().cloned())
+            .collect();
         MetricsSnapshot {
             methods: inner.methods.clone(),
             stages: stages.into_iter().map(|(_, s)| s).collect(),
@@ -494,6 +586,8 @@ impl Metrics {
             released_stage_records: inner.released_stages,
             released_scopes: inner.released_scopes,
             resilience: inner.resilience,
+            convergence,
+            convergence_totals: inner.convergence,
         }
     }
 
@@ -516,6 +610,7 @@ impl Metrics {
         let mut plan_nodes = Vec::new();
         let mut driver_collects = 0;
         let mut resilience = ResilienceTotals::default();
+        let mut convergence = Vec::new();
         if let Some(rec) = inner.scopes.get(&scope) {
             for (_, stage) in &rec.stages {
                 accumulate(&mut methods, stage);
@@ -524,7 +619,19 @@ impl Metrics {
             plan_nodes = rec.plan_nodes.iter().map(|(_, p)| p.clone()).collect();
             driver_collects = rec.totals.driver_collects;
             resilience = rec.resilience;
+            convergence = rec.convergence.clone();
         }
+        let convergence_totals = convergence.iter().fold(
+            ConvergenceTotals::default(),
+            |mut acc, r| {
+                acc.add(&ConvergenceTotals {
+                    runs: 1,
+                    iterations: r.iterations,
+                    converged_runs: r.converged as usize,
+                });
+                acc
+            },
+        );
         MetricsSnapshot {
             methods,
             stages,
@@ -537,6 +644,8 @@ impl Metrics {
             released_stage_records: inner.released_stages,
             released_scopes: inner.released_scopes,
             resilience,
+            convergence,
+            convergence_totals,
         }
     }
 }
@@ -561,9 +670,23 @@ pub struct MetricsSnapshot {
     released_stage_records: usize,
     released_scopes: usize,
     resilience: ResilienceTotals,
+    convergence: Vec<ConvergenceReport>,
+    convergence_totals: ConvergenceTotals,
 }
 
 impl MetricsSnapshot {
+    /// Iterative-run convergence records in this window — every run for
+    /// [`Metrics::snapshot`], the scope's own for
+    /// [`Metrics::snapshot_scope`]. Empty when no iterative scheme ran.
+    pub fn convergence(&self) -> &[ConvergenceReport] {
+        &self.convergence
+    }
+
+    /// Aggregate convergence counters for this window.
+    pub fn convergence_totals(&self) -> &ConvergenceTotals {
+        &self.convergence_totals
+    }
+
     /// Recovery counters in this window — registry-lifetime for
     /// [`Metrics::snapshot`], the scope's own for
     /// [`Metrics::snapshot_scope`]. All-zero when fault injection is
@@ -669,7 +792,23 @@ impl MetricsSnapshot {
                 s.steals.to_string(),
             ]);
         }
-        t.render()
+        let mut out = t.render();
+        // Iterative runs append their convergence trajectories below the
+        // per-method table (absent entirely for exact-only windows).
+        for r in &self.convergence {
+            out.push_str(&format!(
+                "\nconvergence[{}]: {} iteration{} · {} · tolerance {:.1e} · final residual {:.3e}\n",
+                r.algo,
+                r.iterations,
+                if r.iterations == 1 { "" } else { "s" },
+                if r.converged { "converged" } else { "NOT converged (max_iters hit)" },
+                r.tolerance,
+                r.final_residual,
+            ));
+            let traj: Vec<String> = r.residuals.iter().map(|v| format!("{v:.3e}")).collect();
+            out.push_str(&format!("  residuals: {}\n", traj.join(" → ")));
+        }
+        out
     }
 
     pub fn to_json(&self) -> Json {

@@ -55,8 +55,8 @@ mod shuffle;
 pub use executor::WorkerPool;
 pub use faults::FaultPlan;
 pub use metrics::{
-    MethodStats, Metrics, MetricsScope, MetricsSnapshot, MetricsTotals, PlanNodeReport,
-    ResilienceTotals, StageReport,
+    ConvergenceReport, ConvergenceTotals, MethodStats, Metrics, MetricsScope, MetricsSnapshot,
+    MetricsTotals, PlanNodeReport, ResilienceTotals, StageReport,
 };
 pub use rdd::{Partitioner, Rdd};
 pub use scheduler::{list_schedule_makespan, VirtualClock};
@@ -211,6 +211,24 @@ impl Cluster {
     /// Recovery counters attributed to one job scope.
     pub fn resilience_for_scope(&self, scope: u64) -> ResilienceTotals {
         self.metrics.resilience_for_scope(scope)
+    }
+
+    /// Record one iterative run's convergence trajectory — attributed to
+    /// the calling thread's scope (the iterative schemes report through
+    /// this at the end of their driver loop).
+    pub fn record_convergence(&self, report: ConvergenceReport) {
+        self.metrics.record_convergence(report)
+    }
+
+    /// Cluster-lifetime convergence counters (all-zero when no iterative
+    /// scheme has run).
+    pub fn convergence_totals(&self) -> ConvergenceTotals {
+        self.metrics.convergence_totals()
+    }
+
+    /// Convergence reports attributed to one job scope.
+    pub fn convergence_for_scope(&self, scope: u64) -> Vec<ConvergenceReport> {
+        self.metrics.convergence_for_scope(scope)
     }
 
     // ---------- RDD creation ----------

@@ -762,6 +762,13 @@ pub struct JobConfig {
     pub fuse_leaf_2x2: bool,
     /// Verify ‖A·A⁻¹ − I‖∞ after inversion.
     pub residual_check: bool,
+    /// Convergence threshold for iterative schemes (`newton`): stop once
+    /// ‖I − A·Xₖ‖∞ ≤ tolerance. Ignored by the exact algorithms.
+    pub tolerance: f64,
+    /// Iteration budget for iterative schemes — the SLA bound: the best
+    /// iterate so far is returned (with `converged = false` in the
+    /// convergence metrics) once the budget is spent.
+    pub max_iters: usize,
 }
 
 impl JobConfig {
@@ -774,6 +781,8 @@ impl JobConfig {
             leaf: LeafMethod::Lu,
             fuse_leaf_2x2: false,
             residual_check: false,
+            tolerance: 1e-10,
+            max_iters: 64,
         }
     }
 
@@ -801,6 +810,15 @@ impl JobConfig {
                 self.block_size, self.n
             )));
         }
+        if !(self.tolerance > 0.0 && self.tolerance.is_finite()) {
+            return Err(SpinError::config(format!(
+                "tolerance must be a positive finite number, got {}",
+                self.tolerance
+            )));
+        }
+        if self.max_iters == 0 {
+            return Err(SpinError::config("max_iters must be at least 1"));
+        }
         Ok(())
     }
 
@@ -813,6 +831,8 @@ impl JobConfig {
             ("leaf", Json::str(self.leaf.name())),
             ("fuse_leaf_2x2", Json::Bool(self.fuse_leaf_2x2)),
             ("residual_check", Json::Bool(self.residual_check)),
+            ("tolerance", Json::num(self.tolerance)),
+            ("max_iters", Json::num(self.max_iters as f64)),
         ])
     }
 
@@ -853,6 +873,16 @@ impl JobConfig {
                 .as_bool()
                 .ok_or_else(|| SpinError::config("`residual_check` must be a bool"))?;
         }
+        if let Some(j) = v.get("tolerance") {
+            job.tolerance = j
+                .as_f64()
+                .ok_or_else(|| SpinError::config("`tolerance` must be a number"))?;
+        }
+        if let Some(j) = v.get("max_iters") {
+            job.max_iters = j
+                .as_usize()
+                .ok_or_else(|| SpinError::config("`max_iters` must be a positive integer"))?;
+        }
         job.validate()?;
         Ok(job)
     }
@@ -889,6 +919,16 @@ impl JobConfig {
                 self.residual_check = value
                     .parse()
                     .map_err(|_| SpinError::config("residual_check needs true|false"))?
+            }
+            "tolerance" => {
+                self.tolerance = value
+                    .parse()
+                    .map_err(|_| SpinError::config("tolerance needs a number"))?
+            }
+            "max_iters" => {
+                self.max_iters = value
+                    .parse()
+                    .map_err(|_| SpinError::config("max_iters needs an integer"))?
             }
             other => return Err(SpinError::config(format!("unknown job key `{other}`"))),
         }

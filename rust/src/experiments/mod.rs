@@ -172,7 +172,7 @@ mod tests {
     fn run_inversion_rejects_unknown_algorithm() {
         let cfg = ClusterConfig::local(2);
         let job = JobConfig::new(16, 4);
-        let err = run_inversion(&cfg, &job, "cholesky").unwrap_err();
+        let err = run_inversion(&cfg, &job, "qr").unwrap_err();
         assert!(err.to_string().contains("unknown algorithm"), "{err}");
     }
 }

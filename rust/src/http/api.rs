@@ -286,8 +286,45 @@ fn job_metrics(state: &ServerState, id: u64) -> Response {
                 Json::num(snapshot.driver_collects() as f64),
             ),
             ("resilience", resilience_json(snapshot.resilience())),
+            ("convergence", convergence_json(&snapshot)),
         ]),
     )
+}
+
+/// Convergence counters + per-run residual trajectories as one JSON
+/// object (per-job and service-wide). `reports` is empty when no
+/// iterative scheme ran in the window.
+fn convergence_json(snapshot: &crate::cluster::MetricsSnapshot) -> Json {
+    let totals = snapshot.convergence_totals();
+    Json::object(vec![
+        ("runs", Json::num(totals.runs as f64)),
+        ("iterations", Json::num(totals.iterations as f64)),
+        ("converged_runs", Json::num(totals.converged_runs as f64)),
+        (
+            "reports",
+            Json::Array(
+                snapshot
+                    .convergence()
+                    .iter()
+                    .map(|r| {
+                        Json::object(vec![
+                            ("algo", Json::str(r.algo.clone())),
+                            ("iterations", Json::num(r.iterations as f64)),
+                            ("converged", Json::Bool(r.converged)),
+                            ("tolerance", Json::Number(r.tolerance)),
+                            ("final_residual", Json::Number(r.final_residual)),
+                            (
+                                "residuals",
+                                Json::Array(
+                                    r.residuals.iter().map(|&v| Json::Number(v)).collect(),
+                                ),
+                            ),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+    ])
 }
 
 /// Recovery counters as one JSON object (per-job and service-wide).
@@ -356,6 +393,7 @@ fn global_metrics(state: &ServerState) -> Response {
             ("workers", Json::num(service.worker_count() as f64)),
             ("generation", Json::num(state.generation as f64)),
             ("resilience", resilience_json(m.resilience())),
+            ("convergence", convergence_json(&m)),
             (
                 "tenants",
                 Json::Array(

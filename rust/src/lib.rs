@@ -120,9 +120,18 @@
 //! an [`algos::AlgorithmRegistry`]) under a new name — the CLI's `--algo`
 //! flag and the experiment harness resolve through the same registry, and
 //! a scheme can expose its per-level plan for `explain` via the trait's
-//! `plan` hook. New plan rewrites are added as optimizer rules — see the
-//! rule contract in [`plan::optimizer`] — not as new `BlockMatrix`
-//! methods; PR 2's hand-fused Schur step is now just the fusion rule.
+//! `plan` hook. Four schemes ship built in: `spin` (default), `lu` (the
+//! paper's baseline), `newton` (Newton–Schulz iterative inversion with
+//! SLA early-stop — set `tolerance`/`max_iters` via the session builder,
+//! `--set tolerance=1e-8` on the CLI, or top-level `JobSpec` fields; the
+//! knobs are rejected for the exact schemes) and `cholesky`
+//! (block-recursive for SPD inputs, strictly fewer exchange stages than
+//! LU). Iterative runs report per-iteration residual trajectories
+//! through the metrics layer (`ConvergenceReport`, `/v1/metrics`); see
+//! `docs/ALGORITHMS.md`. New plan rewrites are added as optimizer
+//! rules — see the rule contract in [`plan::optimizer`] — not as new
+//! `BlockMatrix` methods; PR 2's hand-fused Schur step is now just the
+//! fusion rule.
 //!
 //! ## Layers
 //!

@@ -274,6 +274,58 @@ pub fn gauss_jordan_inverse(a: &Matrix) -> Result<Matrix> {
     aug.submatrix(0, n, n, n)
 }
 
+/// Cholesky factorization A = L·Lᵀ of a symmetric positive-definite
+/// matrix; returns the lower-triangular factor L.
+///
+/// §Perf: left-looking, column-oriented — column j is finished with one
+/// contiguous axpy per prior column (the `jki` form, same discipline as
+/// `eliminate_column`). A non-positive pivot means the symmetric input is
+/// not positive definite: the factorization *is* the SPD test, and the
+/// error names the failing pivot so block-level callers can surface it.
+pub fn cholesky_factor(a: &Matrix) -> Result<Matrix> {
+    if !a.is_square() {
+        return Err(SpinError::shape("cholesky needs a square matrix"));
+    }
+    let n = a.rows();
+    let mut l = Matrix::zeros(n, n);
+    // Copy the lower triangle; the upper is never read.
+    for j in 0..n {
+        for i in j..n {
+            l.set(i, j, a.get(i, j));
+        }
+    }
+    for j in 0..n {
+        // Fold prior columns into column j: l[j.., j] -= l[j, k]·l[j.., k].
+        for k in 0..j {
+            let ljk = l.get(j, k);
+            if ljk == 0.0 {
+                continue;
+            }
+            // Columns k and j are disjoint slices of the backing buffer.
+            let data = l.data_mut();
+            let (head, tail) = data.split_at_mut(j * n);
+            let ck = &head[k * n + j..k * n + n];
+            let cj = &mut tail[j..n];
+            for (cv, &kv) in cj.iter_mut().zip(ck) {
+                *cv -= kv * ljk;
+            }
+        }
+        let d = l.get(j, j);
+        if d <= 0.0 || !d.is_finite() {
+            return Err(SpinError::numerical(format!(
+                "matrix is not positive definite (pivot {d:.3e} at row {j})"
+            )));
+        }
+        let root = d.sqrt();
+        let cj = &mut l.col_mut(j)[j..n];
+        for v in cj.iter_mut() {
+            *v /= root;
+        }
+        l.set(j, j, root);
+    }
+    Ok(l)
+}
+
 /// Serial inversion dispatch used across the crate.
 pub fn inverse(a: &Matrix) -> Result<Matrix> {
     lu_inverse(a)
@@ -376,6 +428,55 @@ mod tests {
                     Ok(())
                 } else {
                     Err(format!("diff {d}"))
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn cholesky_reconstructs_spd() {
+        let mut rng = Rng::new(7);
+        for n in [1usize, 2, 5, 16, 33] {
+            let a = spd(n, &mut rng);
+            let l = cholesky_factor(&a).unwrap();
+            // L is lower triangular with positive diagonal.
+            for j in 0..n {
+                assert!(l.get(j, j) > 0.0, "n={n} diag {j}");
+                for i in 0..j {
+                    assert_eq!(l.get(i, j), 0.0, "n={n} upper ({i},{j})");
+                }
+            }
+            let llt = matmul(&l, &l.transpose());
+            assert!(llt.max_abs_diff(&a) < 1e-9, "n={n}");
+        }
+    }
+
+    #[test]
+    fn cholesky_rejects_non_spd() {
+        // Indefinite: symmetric but with a negative eigenvalue.
+        let a = Matrix::from_vec(2, 2, vec![1.0, 2.0, 2.0, 1.0]).unwrap();
+        let err = cholesky_factor(&a).unwrap_err().to_string();
+        assert!(err.contains("not positive definite"), "{err}");
+        // Non-square.
+        assert!(cholesky_factor(&Matrix::zeros(2, 3)).is_err());
+    }
+
+    #[test]
+    fn property_cholesky_solves_inversion() {
+        forall(
+            "‖A·(L⁻ᵀL⁻¹)−I‖ small for SPD A",
+            0xE3,
+            16,
+            |r| spd(2 + r.next_usize(40), r),
+            |a| {
+                let l = cholesky_factor(a).unwrap();
+                let li = lu_inverse(&l).unwrap();
+                let inv = matmul(&li.transpose(), &li);
+                let resid = inverse_residual(a, &inv);
+                if resid < 1e-10 {
+                    Ok(())
+                } else {
+                    Err(format!("residual {resid}"))
                 }
             },
         );

@@ -228,6 +228,35 @@ mod tests {
     }
 
     #[test]
+    fn property_spd_block_is_symmetric_pd_at_all_grids() {
+        use crate::linalg::cholesky_factor;
+        // Three sizes × two grids: the assembled per-block SPD family must
+        // be symmetric and positive definite at every geometry — the
+        // contract the `cholesky` scheme relies on. A successful Cholesky
+        // factorization is the PD certificate (it exists iff SPD).
+        for n in [16usize, 24, 32] {
+            for g in [2usize, 4] {
+                let bs = n / g;
+                let mut dense = Matrix::zeros(n, n);
+                for bi in 0..g {
+                    for bj in 0..g {
+                        dense
+                            .set_submatrix(bi * bs, bj * bs, &spd_block(n, bs, bi, bj, 11))
+                            .unwrap();
+                    }
+                }
+                assert!(
+                    dense.max_abs_diff(&dense.transpose()) < 1e-12,
+                    "n={n} g={g}: not symmetric"
+                );
+                let l = cholesky_factor(&dense)
+                    .unwrap_or_else(|e| panic!("n={n} g={g} not PD: {e}"));
+                assert!((0..n).all(|i| l.get(i, i) > 0.0));
+            }
+        }
+    }
+
+    #[test]
     fn block_streams_are_independent() {
         let mut a = block_stream(1, 0, 0);
         let mut b = block_stream(1, 0, 1);

@@ -225,6 +225,13 @@ impl Matrix {
         row_sums.into_iter().fold(0.0, f64::max)
     }
 
+    /// 1-norm: max absolute column sum.
+    pub fn one_norm(&self) -> f64 {
+        (0..self.cols)
+            .map(|j| self.col(j).iter().map(|v| v.abs()).sum::<f64>())
+            .fold(0.0, f64::max)
+    }
+
     pub fn fro_norm(&self) -> f64 {
         self.data.iter().map(|v| v * v).sum::<f64>().sqrt()
     }

@@ -12,8 +12,8 @@ mod multiply;
 mod triangular;
 
 pub use decomp::{
-    gauss_jordan_inverse, inverse, lu_decompose, lu_decompose_nopivot, lu_inverse, solve,
-    LuFactors,
+    cholesky_factor, gauss_jordan_inverse, inverse, lu_decompose, lu_decompose_nopivot,
+    lu_inverse, solve, LuFactors,
 };
 pub use generate::{
     block_stream, diag_dominant, diag_dominant_block, hilbert, random_invertible, spd, spd_block,

@@ -22,13 +22,13 @@ use crate::error::{Result, SpinError};
 use crate::runtime::BlockKernels;
 use crate::util::plock;
 
-use super::{CacheManager, ExprOp, MatExpr, Optimizer, OptimizerConfig};
+use super::{CacheManager, ExprOp, InvertOpts, MatExpr, Optimizer, OptimizerConfig};
 
 /// Resolver for [`ExprOp::Invert`] nodes: maps a scheme name plus a
 /// materialized operand to its inverse. The session layer resolves through
 /// its [`crate::algos::AlgorithmRegistry`]; SPIN's recursion passes its own
 /// level function.
-pub type InvertFn<'f> = dyn Fn(&str, &BlockMatrix) -> Result<BlockMatrix> + 'f;
+pub type InvertFn<'f> = dyn Fn(&str, &InvertOpts, &BlockMatrix) -> Result<BlockMatrix> + 'f;
 
 /// Evaluates optimized plans on one cluster + kernel backend.
 pub struct PlanExec<'a> {
@@ -80,7 +80,7 @@ impl<'a> PlanExec<'a> {
 
     /// Optimize + execute a plan that contains no `Invert` nodes.
     pub fn eval(&self, expr: &MatExpr) -> Result<BlockMatrix> {
-        self.eval_with(expr, &|algo: &str, _m: &BlockMatrix| {
+        self.eval_with(expr, &|algo: &str, _opts: &InvertOpts, _m: &BlockMatrix| {
             Err(SpinError::config(format!(
                 "plan contains an invert[{algo}] node but no inverter was supplied"
             )))
@@ -165,9 +165,9 @@ impl<'a> PlanExec<'a> {
                 self.measured(e, || Ok(vx.transpose(self.cluster)))?
             }
 
-            ExprOp::Invert { algo, child } => {
+            ExprOp::Invert { algo, opts, child } => {
                 let vc = self.exec_node(child, invert)?;
-                self.measured(e, || invert(algo, &vc))?
+                self.measured(e, || invert(algo, opts, &vc))?
             }
 
             ExprOp::Quadrant { child, which } => {

@@ -178,7 +178,18 @@ fn describe(op: &ExprOp, kids: &[usize]) -> String {
         ExprOp::Subtract(..) => format!("subtract {} {}", refs(0), refs(1)),
         ExprOp::Scale(_, s) => format!("scale {} × {s}", refs(0)),
         ExprOp::Transpose(..) => format!("transpose {}", refs(0)),
-        ExprOp::Invert { algo, .. } => format!("invert[{algo}] {}", refs(0)),
+        ExprOp::Invert { algo, opts, .. } => {
+            // Default opts keep the seed format so pinned golden plans stay
+            // stable; explicit iterative knobs render inline.
+            let mut tag = algo.clone();
+            if let Some(tol) = opts.tolerance {
+                tag.push_str(&format!(" tol={tol:e}"));
+            }
+            if let Some(iters) = opts.max_iters {
+                tag.push_str(&format!(" max_iters={iters}"));
+            }
+            format!("invert[{tag}] {}", refs(0))
+        }
         ExprOp::Quadrant { which, .. } => {
             format!("quadrant[{}] {}", which.label(), refs(0))
         }

@@ -194,6 +194,34 @@ impl SourceSpec {
     }
 }
 
+/// Per-`Invert`-node overrides for iterative schemes. A `None` field
+/// defers to the evaluating session's job defaults
+/// (`JobConfig::tolerance` / `JobConfig::max_iters`); exact schemes
+/// ignore both. Part of a node's structural identity: two inverts of the
+/// same child under different tolerances are different values, so the
+/// optimizer's CSE and the cross-job plan cache must not merge them.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct InvertOpts {
+    /// Convergence threshold override (`‖I − A·Xₖ‖∞ ≤ tolerance`).
+    pub tolerance: Option<f64>,
+    /// Iteration-budget (SLA) override.
+    pub max_iters: Option<usize>,
+}
+
+impl InvertOpts {
+    /// True when neither field overrides the session defaults.
+    pub fn is_default(&self) -> bool {
+        self.tolerance.is_none() && self.max_iters.is_none()
+    }
+
+    /// Structural identity key (`f64` is not `Hash`/`Eq`; tolerances are
+    /// compared bit-exactly, which is the right granularity for a cache
+    /// key — a differently-written equal float is a different request).
+    pub fn key(&self) -> (Option<u64>, Option<usize>) {
+        (self.tolerance.map(f64::to_bits), self.max_iters)
+    }
+}
+
 /// One logical operator in a matrix-expression plan.
 ///
 /// Every variant preserves the square `nblocks × nblocks` grid geometry
@@ -225,6 +253,10 @@ pub enum ExprOp {
         /// Scheme name resolved by the evaluating context (a registry
         /// entry at the session layer, the recursion itself inside SPIN).
         algo: String,
+        /// Per-node overrides for iterative schemes (tolerance /
+        /// iteration budget). `InvertOpts::default()` means "use the
+        /// evaluating session's job defaults".
+        opts: InvertOpts,
         child: MatExpr,
     },
     /// One quadrant of the half-grid split (the paper's `breakMat` + `xy`
@@ -387,9 +419,16 @@ impl MatExpr {
     /// C = A⁻¹ through the named scheme, resolved by the evaluator's
     /// [`InvertFn`] at materialization time.
     pub fn invert(&self, algo: &str) -> MatExpr {
+        self.invert_opts(algo, InvertOpts::default())
+    }
+
+    /// [`invert`](Self::invert) with per-node iterative-scheme overrides
+    /// (tolerance / iteration budget) riding the plan node.
+    pub fn invert_opts(&self, algo: &str, opts: InvertOpts) -> MatExpr {
         MatExpr::with_op(
             ExprOp::Invert {
                 algo: algo.to_string(),
+                opts,
                 child: self.clone(),
             },
             self.nblocks(),

@@ -114,7 +114,9 @@ enum StructKey {
     Subtract(u64, u64),
     Scale(u64, u64),
     Transpose(u64),
-    Invert(String, u64),
+    /// Scheme name, per-node iterative overrides (tolerance bits /
+    /// budget), child: different tolerances are different values.
+    Invert(String, (Option<u64>, Option<usize>), u64),
     Quadrant(u64, crate::blockmatrix::Quadrant),
     Arrange(u64, u64, u64, u64),
 }
@@ -132,7 +134,7 @@ fn key_with(op: &ExprOp, kids: &[u64]) -> StructKey {
         ExprOp::Subtract(..) => StructKey::Subtract(kids[0], kids[1]),
         ExprOp::Scale(_, s) => StructKey::Scale(kids[0], s.to_bits()),
         ExprOp::Transpose(..) => StructKey::Transpose(kids[0]),
-        ExprOp::Invert { algo, .. } => StructKey::Invert(algo.clone(), kids[0]),
+        ExprOp::Invert { algo, opts, .. } => StructKey::Invert(algo.clone(), opts.key(), kids[0]),
         ExprOp::Quadrant { which, .. } => StructKey::Quadrant(kids[0], *which),
         ExprOp::Arrange(..) => StructKey::Arrange(kids[0], kids[1], kids[2], kids[3]),
     }
@@ -380,10 +382,11 @@ impl Optimizer {
                 }
             }
 
-            ExprOp::Invert { algo, child } => {
+            ExprOp::Invert { algo, opts, child } => {
                 let cc = self.canon(child)?;
                 let algo = algo.clone();
-                self.intern(ExprOp::Invert { algo, child: cc }, nb, bs)
+                let opts = *opts;
+                self.intern(ExprOp::Invert { algo, opts, child: cc }, nb, bs)
             }
 
             ExprOp::Quadrant { child, which } => {

@@ -44,6 +44,13 @@ pub trait BlockKernels: Send + Sync {
     /// L⁻¹ for a lower-triangular leaf block (baseline's leaf).
     fn invert_lower(&self, a: &Matrix) -> Result<Matrix>;
 
+    /// Cholesky leaf factor A = L·Lᵀ for an SPD block (errors on a
+    /// non-positive pivot — the SPD test). Default composes the serial
+    /// kernel so every backend gets `cholesky` for free.
+    fn cholesky_factor(&self, a: &Matrix) -> Result<Matrix> {
+        linalg::cholesky_factor(a)
+    }
+
     /// U⁻¹ for an upper-triangular leaf block (baseline's leaf).
     fn invert_upper(&self, a: &Matrix) -> Result<Matrix>;
 

@@ -38,7 +38,7 @@ use std::path::PathBuf;
 use std::sync::{Mutex, Weak};
 
 use crate::error::Result;
-use crate::plan::{ExprNode, MatExpr, SourceSpec};
+use crate::plan::{ExprNode, InvertOpts, MatExpr, SourceSpec};
 use crate::util::plock;
 
 use super::spec::MatrixSpec;
@@ -63,6 +63,10 @@ enum PlanKey {
     },
     Invert {
         algo: String,
+        /// Iterative-solver knobs (`tolerance` bit-pattern, `max_iters`).
+        /// Part of the key: a job asking for a looser tolerance must NOT
+        /// adopt another tenant's tighter (different-valued) inverse.
+        opts: (Option<u64>, Option<usize>),
         child: u64,
     },
     Multiply {
@@ -168,14 +172,16 @@ impl PlanCache {
         self.intern(key, || MatExpr::lazy_source(source))
     }
 
-    /// Interned `child⁻¹` through the named scheme.
-    pub fn invert(&self, child: &MatExpr, algo: &str) -> Result<MatExpr> {
+    /// Interned `child⁻¹` through the named scheme, with the job's
+    /// iterative-solver knobs baked into both node and key.
+    pub fn invert(&self, child: &MatExpr, algo: &str, opts: InvertOpts) -> Result<MatExpr> {
         self.intern(
             PlanKey::Invert {
                 algo: algo.to_string(),
+                opts: opts.key(),
                 child: child.id(),
             },
-            || Ok(child.invert(algo)),
+            || Ok(child.invert_opts(algo, opts)),
         )
     }
 
@@ -231,10 +237,50 @@ mod tests {
         let cache = PlanCache::new();
         let a = cache.source(&MatrixSpec::new(16, 4).seeded(1)).unwrap();
         let b = cache.source(&MatrixSpec::new(16, 4).seeded(2)).unwrap();
-        let inv1 = cache.invert(&a, "spin").unwrap();
-        let inv2 = cache.invert(&a, "spin").unwrap();
+        let inv1 = cache.invert(&a, "spin", InvertOpts::default()).unwrap();
+        let inv2 = cache.invert(&a, "spin", InvertOpts::default()).unwrap();
         assert_eq!(inv1.id(), inv2.id());
-        assert_ne!(cache.invert(&a, "lu").unwrap().id(), inv1.id());
+        assert_ne!(
+            cache.invert(&a, "lu", InvertOpts::default()).unwrap().id(),
+            inv1.id()
+        );
+        // Iterative knobs are part of the identity: a looser-tolerance
+        // newton inverse is a different value, so a different node.
+        let strict = cache
+            .invert(
+                &a,
+                "newton",
+                InvertOpts {
+                    tolerance: Some(1e-10),
+                    max_iters: None,
+                },
+            )
+            .unwrap();
+        let loose = cache
+            .invert(
+                &a,
+                "newton",
+                InvertOpts {
+                    tolerance: Some(1e-4),
+                    max_iters: None,
+                },
+            )
+            .unwrap();
+        assert_ne!(strict.id(), loose.id());
+        assert_eq!(
+            cache
+                .invert(
+                    &a,
+                    "newton",
+                    InvertOpts {
+                        tolerance: Some(1e-10),
+                        max_iters: None,
+                    },
+                )
+                .unwrap()
+                .id(),
+            strict.id()
+        );
         let m1 = cache.multiply(&inv1, &b).unwrap();
         let m2 = cache.multiply(&inv2, &b).unwrap();
         assert_eq!(m1.id(), m2.id(), "solve tails built twice share");
@@ -281,7 +327,7 @@ mod tests {
         let spec = MatrixSpec::new(16, 4).seeded(9);
         {
             let a = cache.source(&spec).unwrap();
-            let _inv = cache.invert(&a, "spin").unwrap();
+            let _inv = cache.invert(&a, "spin", InvertOpts::default()).unwrap();
             assert_eq!(cache.stats().entries, 2);
         } // last handles drop: payloads free, entries purge
         assert_eq!(

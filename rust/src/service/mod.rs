@@ -463,7 +463,16 @@ impl ServiceInner {
             .algo
             .clone()
             .unwrap_or_else(|| self.session.default_algorithm().to_string());
-        self.session.registry().get(&algo)?;
+        let scheme = self.session.registry().get(&algo)?;
+        // Iterative knobs only make sense for iterative schemes; a spec
+        // that sets them for an exact algorithm is misconfigured, and the
+        // knobs would otherwise be silently ignored.
+        if (spec.tolerance.is_some() || spec.max_iters.is_some()) && !scheme.iterative() {
+            return Err(SpinError::config(format!(
+                "`tolerance`/`max_iters` apply only to iterative algorithms, \
+                 but `{algo}` is exact"
+            )));
+        }
         let (expr, residual_source) = self.build_plan(&spec, &algo)?;
         // Ids start at 1: scope 0 stays the ambient (non-job) scope.
         let id = match fixed_id {
@@ -607,15 +616,16 @@ impl ServiceInner {
     /// Lower a spec onto interned plan nodes (the cross-job sharing
     /// point: equal sub-structure → same `Arc`'d node).
     fn build_plan(&self, spec: &JobSpec, algo: &str) -> Result<(MatExpr, Option<MatExpr>)> {
+        let opts = spec.invert_opts();
         match &spec.kind {
             JobKind::Invert { matrix } => {
                 let src = self.plans.source(matrix)?;
-                Ok((self.plans.invert(&src, algo)?, Some(src)))
+                Ok((self.plans.invert(&src, algo, opts)?, Some(src)))
             }
             JobKind::Solve { matrix, rhs } => {
                 let a = self.plans.source(matrix)?;
                 let b = self.plans.source(rhs)?;
-                let inv = self.plans.invert(&a, algo)?;
+                let inv = self.plans.invert(&a, algo, opts)?;
                 Ok((self.plans.multiply(&inv, &b)?, None))
             }
             JobKind::Multiply { a, b } => {
@@ -627,7 +637,7 @@ impl ServiceInner {
                 let m = self.plans.source(matrix)?;
                 let mt = self.plans.transpose(&m)?;
                 let gram = self.plans.multiply(&mt, &m)?;
-                let gram_inv = self.plans.invert(&gram, algo)?;
+                let gram_inv = self.plans.invert(&gram, algo, opts)?;
                 Ok((self.plans.multiply(&gram_inv, &mt)?, Some(m)))
             }
         }

@@ -236,6 +236,12 @@ pub struct JobSpec {
     /// Inversion scheme for kinds that invert (`None` = the service
     /// session's default algorithm). Ignored by `Multiply`.
     pub algo: Option<String>,
+    /// Convergence threshold for iterative schemes. Submitting this for a
+    /// non-iterative algorithm is a config error.
+    pub tolerance: Option<f64>,
+    /// Iteration budget (SLA bound) for iterative schemes. Submitting
+    /// this for a non-iterative algorithm is a config error.
+    pub max_iters: Option<usize>,
     pub kind: JobKind,
 }
 
@@ -245,6 +251,8 @@ impl JobSpec {
             tenant: "default".to_string(),
             label: String::new(),
             algo: None,
+            tolerance: None,
+            max_iters: None,
             kind,
         }
     }
@@ -280,6 +288,26 @@ impl JobSpec {
         self
     }
 
+    /// Convergence threshold for iterative schemes (e.g. `newton`).
+    pub fn tolerance(mut self, tolerance: f64) -> Self {
+        self.tolerance = Some(tolerance);
+        self
+    }
+
+    /// Iteration budget (SLA bound) for iterative schemes.
+    pub fn max_iters(mut self, max_iters: usize) -> Self {
+        self.max_iters = Some(max_iters);
+        self
+    }
+
+    /// The plan-node knobs this spec's iterative fields lower to.
+    pub(crate) fn invert_opts(&self) -> crate::plan::InvertOpts {
+        crate::plan::InvertOpts {
+            tolerance: self.tolerance,
+            max_iters: self.max_iters,
+        }
+    }
+
     /// Every matrix this job reads.
     pub fn matrices(&self) -> Vec<&MatrixSpec> {
         match &self.kind {
@@ -297,6 +325,12 @@ impl JobSpec {
         ];
         if let Some(algo) = &self.algo {
             pairs.push(("algo", Json::str(algo.clone())));
+        }
+        if let Some(tol) = self.tolerance {
+            pairs.push(("tolerance", Json::num(tol)));
+        }
+        if let Some(iters) = self.max_iters {
+            pairs.push(("max_iters", Json::num(iters as f64)));
         }
         match &self.kind {
             JobKind::Invert { matrix } | JobKind::PseudoInverse { matrix } => {
@@ -322,9 +356,26 @@ impl JobSpec {
         // Strict per-kind key set: a typo like `matirx` or a field from
         // the wrong kind fails the submit instead of running defaults.
         let known: &[&str] = match kind {
-            "solve" => &["kind", "tenant", "label", "algo", "matrix", "rhs"],
+            "solve" => &[
+                "kind",
+                "tenant",
+                "label",
+                "algo",
+                "tolerance",
+                "max_iters",
+                "matrix",
+                "rhs",
+            ],
             "multiply" => &["kind", "tenant", "label", "algo", "a", "b"],
-            _ => &["kind", "tenant", "label", "algo", "matrix"],
+            _ => &[
+                "kind",
+                "tenant",
+                "label",
+                "algo",
+                "tolerance",
+                "max_iters",
+                "matrix",
+            ],
         };
         v.check_known_keys(&format!("job spec ({kind})"), known)?;
         let matrix = |key: &str| -> Result<MatrixSpec> { MatrixSpec::from_json(v.req(key)?) };
@@ -368,6 +419,21 @@ impl JobSpec {
                     .ok_or_else(|| SpinError::config("job `algo` must be a string"))?
                     .to_string(),
             );
+        }
+        if let Some(j) = v.get("tolerance") {
+            let tol = j
+                .as_f64()
+                .filter(|t| t.is_finite() && *t > 0.0)
+                .ok_or_else(|| {
+                    SpinError::config("job `tolerance` must be a positive finite number")
+                })?;
+            spec.tolerance = Some(tol);
+        }
+        if let Some(j) = v.get("max_iters") {
+            let iters = j.as_usize().filter(|&i| i >= 1).ok_or_else(|| {
+                SpinError::config("job `max_iters` must be a positive integer")
+            })?;
+            spec.max_iters = Some(iters);
         }
         Ok(spec)
     }
@@ -449,6 +515,10 @@ mod tests {
             JobSpec::solve(a.clone(), b.clone()).label("gls"),
             JobSpec::multiply(a.clone(), b.clone()),
             JobSpec::pseudo_inverse(a.clone()).tenant("bob"),
+            JobSpec::invert(a.clone())
+                .algorithm("newton")
+                .tolerance(1e-8)
+                .max_iters(20),
         ];
         for spec in &specs {
             let back = JobSpec::from_json(&spec.to_json()).unwrap();
@@ -505,5 +575,32 @@ mod tests {
         let doc = Json::object(vec![("job", Json::Array(vec![]))]);
         let err = JobSpec::parse_script(&doc).unwrap_err().to_string();
         assert!(err.contains("`job`"), "{err}");
+    }
+
+    #[test]
+    fn iterative_knobs_validate_at_parse() {
+        // Zero / negative / non-numeric tolerance and max_iters fail.
+        let mut j = JobSpec::invert(MatrixSpec::new(16, 4)).to_json();
+        if let Json::Object(map) = &mut j {
+            map.insert("tolerance".to_string(), Json::num(0.0));
+        }
+        assert!(JobSpec::from_json(&j).is_err());
+        if let Json::Object(map) = &mut j {
+            map.insert("tolerance".to_string(), Json::num(1e-8));
+            map.insert("max_iters".to_string(), Json::num(0.0));
+        }
+        assert!(JobSpec::from_json(&j).is_err());
+        if let Json::Object(map) = &mut j {
+            map.insert("max_iters".to_string(), Json::num(12.0));
+        }
+        let spec = JobSpec::from_json(&j).unwrap();
+        assert_eq!(spec.tolerance, Some(1e-8));
+        assert_eq!(spec.max_iters, Some(12));
+        // `multiply` never inverts, so the keys are rejected outright.
+        let mut m = JobSpec::multiply(MatrixSpec::new(16, 4), MatrixSpec::new(16, 4)).to_json();
+        if let Json::Object(map) = &mut m {
+            map.insert("tolerance".to_string(), Json::num(1e-8));
+        }
+        assert!(JobSpec::from_json(&m).is_err());
     }
 }

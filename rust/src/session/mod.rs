@@ -64,6 +64,8 @@ struct JobDefaults {
     leaf: LeafMethod,
     fuse_leaf_2x2: bool,
     residual_check: bool,
+    tolerance: f64,
+    max_iters: usize,
 }
 
 impl Default for JobDefaults {
@@ -76,6 +78,8 @@ impl Default for JobDefaults {
             leaf: j.leaf,
             fuse_leaf_2x2: j.fuse_leaf_2x2,
             residual_check: j.residual_check,
+            tolerance: j.tolerance,
+            max_iters: j.max_iters,
         }
     }
 }
@@ -180,6 +184,22 @@ impl SessionBuilder {
         self
     }
 
+    /// Convergence tolerance for iterative schemes (`newton`): stop once
+    /// ‖I − A·Xₖ‖∞ ≤ `tolerance`. Exact schemes ignore it.
+    pub fn tolerance(mut self, tolerance: f64) -> Self {
+        self.defaults.tolerance = tolerance;
+        self
+    }
+
+    /// Iteration budget for iterative schemes (`newton`). When the budget
+    /// is exhausted before the tolerance is met, the best iterate so far
+    /// is returned with `converged = false` in its
+    /// [`crate::cluster::ConvergenceReport`].
+    pub fn max_iters(mut self, max_iters: usize) -> Self {
+        self.defaults.max_iters = max_iters;
+        self
+    }
+
     /// Copy seed/generator/leaf/fusion/residual settings from an existing
     /// [`JobConfig`] (geometry still comes from each matrix handle).
     pub fn job_defaults(mut self, job: &JobConfig) -> Self {
@@ -189,6 +209,8 @@ impl SessionBuilder {
             leaf: job.leaf,
             fuse_leaf_2x2: job.fuse_leaf_2x2,
             residual_check: job.residual_check,
+            tolerance: job.tolerance,
+            max_iters: job.max_iters,
         };
         self
     }
@@ -371,11 +393,20 @@ impl SpinSession {
     pub(crate) fn materialize(&self, expr: &MatExpr) -> Result<BlockMatrix> {
         let exec =
             PlanExec::new(&self.cluster, self.kernels.as_ref()).with_lifecycle(&self.lifecycle);
-        exec.eval_with(expr, &|algo: &str, m: &BlockMatrix| {
-            let scheme = self.registry.get(algo)?;
-            let job = self.job_for(m.n(), m.block_size());
-            scheme.invert(&self.cluster, self.kernels.as_ref(), m, &job)
-        })
+        exec.eval_with(
+            expr,
+            &|algo: &str, opts: &crate::plan::InvertOpts, m: &BlockMatrix| {
+                let scheme = self.registry.get(algo)?;
+                let mut job = self.job_for(m.n(), m.block_size());
+                if let Some(tol) = opts.tolerance {
+                    job.tolerance = tol;
+                }
+                if let Some(iters) = opts.max_iters {
+                    job.max_iters = iters;
+                }
+                scheme.invert(&self.cluster, self.kernels.as_ref(), m, &job)
+            },
+        )
     }
 
     /// Canonical (optimizer-output) form of an expression — the node the
@@ -468,6 +499,14 @@ impl SpinSession {
         // Resident-bytes predictions use the real block size even though
         // the shape plan is built over unit blocks.
         out.push_str(&self.explain_expr_sized(&plan, Some(block_size))?);
+        // Iterative schemes render one iteration's plan; annotate the
+        // driver-side convergence loop wrapped around it.
+        if let Some(note) = scheme.convergence_note() {
+            out.push_str(&note);
+            if !note.ends_with('\n') {
+                out.push('\n');
+            }
+        }
         Ok(out)
     }
 
@@ -540,6 +579,8 @@ impl SpinSession {
         job.leaf = self.defaults.leaf;
         job.fuse_leaf_2x2 = self.defaults.fuse_leaf_2x2;
         job.residual_check = self.defaults.residual_check;
+        job.tolerance = self.defaults.tolerance;
+        job.max_iters = self.defaults.max_iters;
         job
     }
 }
@@ -559,7 +600,15 @@ mod tests {
         assert_eq!(session.backend_name(), "native");
         assert_eq!(session.config().total_cores(), 4);
         assert_eq!(session.default_algorithm(), "spin");
-        assert_eq!(session.algorithms(), vec!["lu".to_string(), "spin".to_string()]);
+        assert_eq!(
+            session.algorithms(),
+            vec![
+                "cholesky".to_string(),
+                "lu".to_string(),
+                "newton".to_string(),
+                "spin".to_string()
+            ]
+        );
     }
 
     #[test]
@@ -586,10 +635,14 @@ mod tests {
     #[test]
     fn unknown_default_algorithm_fails_at_build() {
         let err = SpinSession::builder()
-            .default_algorithm("newton")
+            .default_algorithm("qr")
             .build()
             .unwrap_err();
-        assert!(err.to_string().contains("newton"), "{err}");
+        assert!(err.to_string().contains("qr"), "{err}");
+        assert!(
+            err.to_string().contains("cholesky|lu|newton|spin"),
+            "unknown-algo errors list the registered names: {err}"
+        );
     }
 
     #[test]
@@ -600,7 +653,7 @@ mod tests {
         let lu = session.invert_with("lu", &a).unwrap();
         assert!(a.inverse_residual(&spin).unwrap() < 1e-10);
         assert!(a.inverse_residual(&lu).unwrap() < 1e-10);
-        assert!(session.invert_with("cholesky", &a).is_err());
+        assert!(session.invert_with("qr", &a).is_err());
     }
 
     #[test]
@@ -693,6 +746,37 @@ mod tests {
         assert!(lu.contains("invert[lu]"), "{lu}");
         // Bad geometry errors.
         assert!(session.explain_invert("spin", 64, 48).is_err());
+    }
+
+    #[test]
+    fn explain_renders_iterative_and_cholesky_plans() {
+        let session = SpinSession::local(2).unwrap();
+        // Newton renders one iteration's plan plus the convergence-loop
+        // annotation (the driver loop is not itself a plan node).
+        let newton = session.explain_invert("newton", 64, 16).unwrap();
+        assert!(newton.contains("convergence loop"), "{newton}");
+        assert!(newton.contains("tolerance"), "{newton}");
+        assert!(newton.contains("multiply"), "{newton}");
+        // Cholesky exposes its recursion level: two self-referential
+        // invert nodes, the L21 product, and the Schur subtraction.
+        let chol = session.explain_invert("cholesky", 64, 16).unwrap();
+        assert!(chol.contains("invert[cholesky]"), "{chol}");
+        assert!(chol.contains("subtract"), "{chol}");
+        // Exact schemes carry no convergence annotation.
+        assert!(!chol.contains("convergence loop"), "{chol}");
+    }
+
+    #[test]
+    fn builder_iterative_knobs_reach_job_for() {
+        let s = SpinSession::builder()
+            .cores(2)
+            .tolerance(1e-6)
+            .max_iters(9)
+            .build()
+            .unwrap();
+        let job = s.job_for(32, 8);
+        assert_eq!(job.tolerance, 1e-6);
+        assert_eq!(job.max_iters, 9);
     }
 
     #[test]

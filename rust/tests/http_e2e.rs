@@ -118,6 +118,53 @@ fn submit_over_raw_tcp_then_sse_to_terminal_with_residual() {
 }
 
 #[test]
+fn newton_job_reports_convergence_over_http() {
+    let service = SpinService::builder().workers(1).build().unwrap();
+    let server = bind(service);
+    let client = HttpClient::new(server.local_addr().to_string());
+
+    let spec = Json::parse(
+        r#"{"kind":"invert","tenant":"t","algo":"newton","tolerance":1e-8,"max_iters":60,"matrix":{"n":32,"block_size":8,"generator":"spd","seed":5}}"#,
+    )
+    .unwrap();
+    let (code, reply) = client.post("/v1/jobs", Some(&spec)).unwrap();
+    assert_eq!(code, 202, "{reply:?}");
+    let id = reply.req("id").unwrap().as_i64().unwrap() as u64;
+    let events = client.follow_events(&format!("/v1/jobs/{id}/events")).unwrap();
+    let last_phase = events
+        .iter()
+        .rev()
+        .find(|(name, _)| name == "phase")
+        .unwrap();
+    assert_eq!(last_phase.1.req("status").unwrap().as_str(), Some("completed"));
+
+    // Per-job metrics carry the run's residual trajectory.
+    let (code, m) = client.get(&format!("/v1/jobs/{id}/metrics")).unwrap();
+    assert_eq!(code, 200);
+    let conv = m.req("convergence").unwrap();
+    assert_eq!(conv.req("runs").unwrap().as_i64(), Some(1), "{conv:?}");
+    assert_eq!(conv.req("converged_runs").unwrap().as_i64(), Some(1));
+    let reports = conv.req("reports").unwrap().as_array().unwrap();
+    assert_eq!(reports.len(), 1);
+    let r = &reports[0];
+    assert_eq!(r.req("algo").unwrap().as_str(), Some("newton"));
+    assert_eq!(r.req("converged").unwrap().as_bool(), Some(true));
+    let iters = r.req("iterations").unwrap().as_i64().unwrap();
+    assert!((1..60).contains(&iters), "early stop expected, got {iters}");
+    let residuals = r.req("residuals").unwrap().as_array().unwrap();
+    assert_eq!(residuals.len() as i64, iters);
+    assert!(r.req("final_residual").unwrap().as_f64().unwrap() <= 1e-8);
+
+    // The service-wide view aggregates the same run.
+    let (code, g) = client.get("/v1/metrics").unwrap();
+    assert_eq!(code, 200);
+    let total = g.req("convergence").unwrap();
+    assert_eq!(total.req("runs").unwrap().as_i64(), Some(1), "{total:?}");
+    assert_eq!(total.req("converged_runs").unwrap().as_i64(), Some(1));
+    assert!(total.req("iterations").unwrap().as_i64().unwrap() >= 1);
+}
+
+#[test]
 fn strict_specs_and_routing_errors_over_http() {
     let service = SpinService::builder().workers(0).build().unwrap();
     let server = bind(service);
@@ -131,6 +178,33 @@ fn strict_specs_and_routing_errors_over_http() {
     let (code, body) = client.post("/v1/jobs", Some(&bad)).unwrap();
     assert_eq!(code, 400, "{body:?}");
     assert!(body.req("error").unwrap().as_str().unwrap().contains("matirx"));
+
+    // Unknown algorithm: 400, and the body lists what IS registered.
+    let bad_algo = Json::parse(
+        r#"{"kind":"invert","tenant":"t","algo":"qr","matrix":{"n":32,"block_size":8}}"#,
+    )
+    .unwrap();
+    let (code, body) = client.post("/v1/jobs", Some(&bad_algo)).unwrap();
+    assert_eq!(code, 400, "{body:?}");
+    let msg = body.req("error").unwrap().as_str().unwrap().to_string();
+    assert!(msg.contains("qr"), "{msg}");
+    assert!(msg.contains("cholesky|lu|newton|spin"), "{msg}");
+
+    // Iterative knobs on an exact algorithm: 400 naming the mismatch.
+    let exact_tol = Json::parse(
+        r#"{"kind":"invert","tenant":"t","algo":"spin","tolerance":1e-8,"matrix":{"n":32,"block_size":8}}"#,
+    )
+    .unwrap();
+    let (code, body) = client.post("/v1/jobs", Some(&exact_tol)).unwrap();
+    assert_eq!(code, 400, "{body:?}");
+    assert!(
+        body.req("error")
+            .unwrap()
+            .as_str()
+            .unwrap()
+            .contains("iterative"),
+        "{body:?}"
+    );
 
     // Malformed JSON, bad routes, wrong methods, unknown ids.
     let (line, _) = raw_request(&client_addr(&server), "POST", "/v1/jobs", "{nope");

@@ -802,6 +802,97 @@ fn lazy_and_eager_generation_bit_identical_property() {
     );
 }
 
+/// Acceptance (iterative subsystem, satellite): a lazy `spd` source under
+/// the `cholesky` scheme is bit-identical to its eager twin, and stays so
+/// after the LRU evictor drops intermediates — eviction means bit-exact
+/// recomputation, for iterative-subsystem values like any other.
+#[test]
+fn cholesky_lazy_spd_matches_eager_and_survives_eviction() {
+    let mut cfg = ClusterConfig::local(4);
+    // Budget = one 64×64 value: the source + inverse cannot both stay
+    // resident, so re-reads exercise the evict → regenerate path.
+    cfg.cache_budget_bytes = 64 * 64 * 8;
+    let session = SpinSession::builder()
+        .cluster_config(cfg)
+        .generator(GeneratorKind::Spd)
+        .build()
+        .unwrap();
+    let lazy = session.lazy_random_seeded(64, 16, 0xC0DE).unwrap();
+    let eager = session.random_seeded(64, 16, 0xC0DE).unwrap();
+    assert_eq!(
+        lazy.to_dense()
+            .unwrap()
+            .max_abs_diff(&eager.to_dense().unwrap()),
+        0.0,
+        "lazy and eager spd generation share one per-block function"
+    );
+    let inv_lazy = lazy.inverse_with("cholesky").unwrap();
+    let inv_eager = eager.inverse_with("cholesky").unwrap();
+    let first = inv_lazy.to_dense().unwrap();
+    assert_eq!(
+        first.max_abs_diff(&inv_eager.to_dense().unwrap()),
+        0.0,
+        "cholesky over a lazy source must equal the eager pipeline"
+    );
+    assert!(lazy.inverse_residual(&inv_lazy).unwrap() < 1e-10);
+    assert!(
+        session.metrics().cache_evictions() > 0,
+        "one-value budget must evict"
+    );
+    // Whatever the evictor dropped recomputes to the same bits.
+    let again = inv_lazy.to_dense().unwrap();
+    assert_eq!(first.max_abs_diff(&again), 0.0);
+}
+
+/// Acceptance (iterative subsystem, satellite): `newton` and `cholesky`
+/// are bit-identical at any executor width, and newton's convergence
+/// trajectory (iteration count) is executor-independent too — the
+/// driver-side loop reads the same residuals whichever lanes computed
+/// the blocks.
+#[test]
+fn iterative_schemes_bit_identical_across_exec_threads() {
+    let run = |threads: usize, algo: &str, generator: GeneratorKind| -> (Matrix, usize) {
+        let mut cfg = ClusterConfig::local(4);
+        cfg.exec_threads = threads;
+        let session = SpinSession::builder()
+            .cluster_config(cfg)
+            .generator(generator)
+            .build()
+            .unwrap();
+        let a = session.random_seeded(64, 16, 0xBEEF).unwrap();
+        let inv = a.inverse_with(algo).unwrap();
+        let dense = inv.to_dense().unwrap();
+        let iters = session
+            .metrics()
+            .convergence()
+            .iter()
+            .map(|r| r.iterations)
+            .sum();
+        (dense, iters)
+    };
+    for (algo, generator) in [
+        ("newton", GeneratorKind::DiagDominant),
+        ("cholesky", GeneratorKind::Spd),
+    ] {
+        let (seq, seq_iters) = run(1, algo, generator);
+        let (par, par_iters) = run(4, algo, generator);
+        for (i, (s, p)) in seq.data().iter().zip(par.data()).enumerate() {
+            assert_eq!(
+                s.to_bits(),
+                p.to_bits(),
+                "{algo}: element {i} differs between 1 and 4 exec lanes"
+            );
+        }
+        assert_eq!(
+            seq_iters, par_iters,
+            "{algo}: iteration counts must not depend on executor width"
+        );
+        if algo == "newton" {
+            assert!(seq_iters >= 1, "newton must record its trajectory");
+        }
+    }
+}
+
 /// Acceptance (store round-trip): ingest a generated matrix into a block
 /// store, serve it through `MatrixSpec::from_store`, invert, and check
 /// the residual — the full write → lazy-load → compute loop.
