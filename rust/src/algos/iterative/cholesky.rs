@@ -72,6 +72,10 @@ impl InversionAlgorithm for CholeskyAlgorithm {
         let zero = MatExpr::source(BlockMatrix::zeros(a11e.nblocks(), a11e.block_size())?);
         Ok(Some(MatExpr::arrange(&l11i, &zero, &l21, &l22)?))
     }
+
+    fn analysis_model(&self) -> Option<AlgoModel> {
+        Some(analysis_model())
+    }
 }
 
 /// Record checkpoint activity on this job's metric scope.
@@ -197,6 +201,55 @@ fn block_cholesky_compute(
     let zero = MatExpr::source(BlockMatrix::zeros(half, bs)?);
     let le = MatExpr::arrange(&MatExpr::source(l11), &zero, &l21e, &MatExpr::source(l22))?;
     exec.eval(&le)
+}
+
+// ---------------------------------------------------------------------------
+// Static analysis model
+// ---------------------------------------------------------------------------
+//
+// Unexecuted restatement of the eager recursion above for the plan
+// verifier: one factor recursion + one triangular inversion (shared
+// verbatim with the LU model) + one full-size product. Entry rounds
+// `C(b) + L(b) + 1` (C(g) = 2C(g/2) + L(g/2) + 2) reproduce the analytic
+// 10/30/78 exchange stages at b = 2/4/8.
+
+/// Entry: `A⁻¹ = L⁻ᵀ·L⁻¹` — factor, invert the lower triangle, multiply.
+pub(crate) fn model_entry(a: &MatExpr) -> Result<MatExpr> {
+    let l = a.invert("chol.factor");
+    let li = l.invert("tri.lower");
+    li.transpose().multiply(&li)
+}
+
+/// One `block_cholesky_compute` level: `L21 = A21·L11⁻ᵀ`, the symmetric
+/// Schur update `S = A22 − L21·L21ᵀ` (unfused `D − A·B` shape), two
+/// factor recursions and one triangular inversion.
+pub(crate) fn model_factor(a: &MatExpr) -> Result<MatExpr> {
+    let (a11, _a12, a21, a22) = a.split()?;
+    let l11 = a11.invert("chol.factor");
+    let l11i = l11.invert("tri.lower");
+    let l21 = a21.multiply(&l11i.transpose())?;
+    let s = a22.subtract(&l21.multiply(&l21.transpose())?)?;
+    let l22 = s.invert("chol.factor");
+    let zero = MatExpr::source(BlockMatrix::zeros(a11.nblocks(), a11.block_size())?);
+    MatExpr::arrange(&l11, &zero, &l21, &l22)
+}
+
+pub(crate) fn analysis_model() -> AlgoModel {
+    use crate::analysis::{AlgoModel, Procedure};
+    AlgoModel {
+        entry: "cholesky",
+        procedures: vec![
+            // The entry's final product is a plan multiply at any grid.
+            Procedure { name: "cholesky", min_grid: 1, build: model_entry },
+            Procedure { name: "chol.factor", min_grid: 2, build: model_factor },
+            Procedure {
+                name: "tri.lower",
+                min_grid: 2,
+                build: crate::algos::lu::model_tri_lower,
+            },
+        ],
+        iteration: None,
+    }
 }
 
 #[cfg(test)]

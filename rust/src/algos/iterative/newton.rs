@@ -76,14 +76,35 @@ impl InversionAlgorithm for NewtonAlgorithm {
     }
 
     fn plan(&self, a: &MatExpr) -> Result<Option<MatExpr>> {
-        // One iteration of the loop, as the convergence note explains.
-        // The seed's true scale factor 1/(‖A‖₁‖A‖∞) is data-dependent;
-        // 0.5 stands in so the scale node renders instead of folding.
-        let x0 = a.transpose().scale(0.5);
-        let two_i =
-            MatExpr::source(BlockMatrix::identity(a.n(), a.block_size())?).scale(2.0);
-        let m = two_i.subtract(&a.multiply(&x0)?)?;
-        Ok(Some(x0.multiply(&m)?))
+        pass_plan(a).map(Some)
+    }
+
+    fn analysis_model(&self) -> Option<AlgoModel> {
+        Some(analysis_model())
+    }
+}
+
+/// One iteration of the loop, as the convergence note explains: two
+/// distributed multiplies (`A·X` and `X·M`), everything else narrow. The
+/// seed's true scale factor 1/(‖A‖₁‖A‖∞) is data-dependent; 0.5 stands
+/// in so the scale node renders instead of folding.
+pub(crate) fn pass_plan(a: &MatExpr) -> Result<MatExpr> {
+    let x0 = a.transpose().scale(0.5);
+    let two_i = MatExpr::source(BlockMatrix::identity(a.n(), a.block_size())?).scale(2.0);
+    let m = two_i.subtract(&a.multiply(&x0)?)?;
+    x0.multiply(&m)
+}
+
+/// Static iteration model for the plan verifier: `max_iters` passes of
+/// [`pass_plan`], the final pass paying only the residual's `A·X` round
+/// (the root update is skipped once the budget or tolerance is reached) —
+/// the `2·(2·max_iters − 1)` exchange-stage ceiling the bench gates.
+pub(crate) fn analysis_model() -> AlgoModel {
+    use crate::analysis::{AlgoModel, IterationModel, Procedure};
+    AlgoModel {
+        entry: "newton",
+        procedures: vec![Procedure { name: "newton", min_grid: 1, build: pass_plan }],
+        iteration: Some(IterationModel { final_pass_drops_root: true }),
     }
 }
 
@@ -157,7 +178,9 @@ pub(crate) fn newton_inverse_impl(
         x = exec.eval(&xe.multiply(&me)?)?;
     }
 
-    let final_residual = *residuals.last().expect("max_iters >= 1");
+    // `max_iters >= 1` is validated at submit, so the loop always pushes
+    // at least one residual; the fallback is unreachable but panic-free.
+    let final_residual = residuals.last().copied().unwrap_or(f64::INFINITY);
     cluster.record_convergence(ConvergenceReport {
         algo: "newton".to_string(),
         iterations: residuals.len(),

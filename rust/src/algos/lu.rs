@@ -262,6 +262,82 @@ fn invert_block_upper(
     Ok(inv)
 }
 
+// ---------------------------------------------------------------------------
+// Static analysis model
+// ---------------------------------------------------------------------------
+//
+// The eager recursion above materializes per level, so an executed LU job
+// never contains an `invert[lu]` plan node to walk. These procedures
+// restate each level's dataflow as unexecuted plans — same multiplies,
+// subtracts, scales, and arranges — for the verifier to unfold
+// (`analysis::algo_cost`). The derived entry cost
+// `F(b) + 2·L(b) + 1` rounds (F(g) = 2F(g/2) + 2L(g/2) + 3,
+// L(g) = 2L(g/2) + 2) reproduces the analytic 16/52/140 exchange stages
+// at b = 2/4/8, cross-checked against `costmodel::lemma42`.
+
+/// Entry: factor once, invert both triangles, one full-size product.
+/// The shared `lu.factor` node mirrors `block_lu` running once for both
+/// triangular inversions.
+pub(crate) fn model_entry(a: &MatExpr) -> Result<MatExpr> {
+    let f = a.invert("lu.factor");
+    let li = f.invert("tri.lower");
+    let ui = f.invert("tri.upper");
+    ui.multiply(&li)
+}
+
+/// One `block_lu_compute` level: 3 half-grid multiplies + the unfused
+/// `A22 − L21·U12` Schur update (the `D − A·B` shape the fusion rule
+/// correctly leaves alone), two factor recursions and one triangular
+/// inversion of each kind.
+pub(crate) fn model_factor(a: &MatExpr) -> Result<MatExpr> {
+    let (a11, a12, a21, a22) = a.split()?;
+    let f11 = a11.invert("lu.factor");
+    let l11i = f11.invert("tri.lower");
+    let u11i = f11.invert("tri.upper");
+    let u12 = l11i.multiply(&a12)?; //           U12 = L11⁻¹·A12
+    let l21 = a21.multiply(&u11i)?; //           L21 = A21·U11⁻¹
+    let s = a22.subtract(&l21.multiply(&u12)?)?; // S = A22 − L21·U12
+    let sf = s.invert("lu.factor");
+    MatExpr::arrange(&f11, &u12, &l21, &sf)
+}
+
+/// One `invert_block_lower` level: two recursions + the two-multiply
+/// corner `−L22⁻¹·L21·L11⁻¹`. Shared verbatim with the Cholesky model.
+pub(crate) fn model_tri_lower(l: &MatExpr) -> Result<MatExpr> {
+    let (l11, _zero12, l21, l22) = l.split()?;
+    let li11 = l11.invert("tri.lower");
+    let li22 = l22.invert("tri.lower");
+    let c21 = li22.multiply(&l21)?.multiply(&li11)?.scale(-1.0);
+    let zero = MatExpr::source(BlockMatrix::zeros(l11.nblocks(), l11.block_size())?);
+    MatExpr::arrange(&li11, &zero, &c21, &li22)
+}
+
+/// One `invert_block_upper` level (mirror of [`model_tri_lower`]).
+pub(crate) fn model_tri_upper(u: &MatExpr) -> Result<MatExpr> {
+    let (u11, u12, _zero21, u22) = u.split()?;
+    let ui11 = u11.invert("tri.upper");
+    let ui22 = u22.invert("tri.upper");
+    let c12 = ui11.multiply(&u12)?.multiply(&ui22)?.scale(-1.0);
+    let zero = MatExpr::source(BlockMatrix::zeros(u11.nblocks(), u11.block_size())?);
+    MatExpr::arrange(&ui11, &c12, &zero, &ui22)
+}
+
+pub(crate) fn analysis_model() -> AlgoModel {
+    use crate::analysis::{AlgoModel, Procedure};
+    AlgoModel {
+        entry: "lu",
+        procedures: vec![
+            // The entry's final product runs as a plan multiply even on a
+            // 1×1 grid, so its floor is 1; the recursions leaf at grid 1.
+            Procedure { name: "lu", min_grid: 1, build: model_entry },
+            Procedure { name: "lu.factor", min_grid: 2, build: model_factor },
+            Procedure { name: "tri.lower", min_grid: 2, build: model_tri_lower },
+            Procedure { name: "tri.upper", min_grid: 2, build: model_tri_upper },
+        ],
+        iteration: None,
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

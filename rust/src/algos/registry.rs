@@ -63,6 +63,16 @@ pub trait InversionAlgorithm: Send + Sync {
     fn convergence_note(&self) -> Option<String> {
         None
     }
+
+    /// Static recursion model for the plan verifier (`spin lint`,
+    /// `verify_plans`, `GET /v1/jobs/:id/analysis`): the scheme's
+    /// per-level plans as unexecuted procedures, so the analyzer can
+    /// derive its full exchange-stage/shuffle-byte cost at any geometry
+    /// without running it. `None` (the default) means the scheme is
+    /// opaque to the analyzer — reported as unmodeled, never guessed at.
+    fn analysis_model(&self) -> Option<crate::analysis::AlgoModel> {
+        None
+    }
 }
 
 /// The paper's SPIN recursion (Algorithm 2).
@@ -93,6 +103,10 @@ impl InversionAlgorithm for SpinAlgorithm {
         }
         super::spin::level_plan(a).map(Some)
     }
+
+    fn analysis_model(&self) -> Option<crate::analysis::AlgoModel> {
+        Some(super::spin::analysis_model())
+    }
 }
 
 /// The block-recursive LU baseline (Liu et al. 2016).
@@ -116,6 +130,10 @@ impl InversionAlgorithm for LuAlgorithm {
     ) -> Result<BlockMatrix> {
         super::lu::lu_inverse_distributed_impl(cluster, kernels, a, job)
     }
+
+    fn analysis_model(&self) -> Option<crate::analysis::AlgoModel> {
+        Some(super::lu::analysis_model())
+    }
 }
 
 /// Name-keyed set of inversion algorithms.
@@ -135,6 +153,10 @@ impl AlgorithmRegistry {
 
     /// Registry pre-loaded with the built-in schemes: `spin`, `lu`,
     /// `newton`, and `cholesky`.
+    //
+    // expect is invariant-backed: registering four distinct built-in
+    // names into a fresh registry cannot collide.
+    #[allow(clippy::expect_used)]
     pub fn with_defaults() -> Self {
         let mut r = AlgorithmRegistry::new();
         r.register(Arc::new(SpinAlgorithm))

@@ -52,6 +52,22 @@ pub(crate) fn level_plan(a: &MatExpr) -> Result<MatExpr> {
     MatExpr::arrange(&c11, &c12, &c21, &c22)
 }
 
+/// Static recursion model for the plan verifier: the level plan *is* the
+/// recursion — both `invert[spin]` nodes (A11⁻¹ and the Schur complement)
+/// unfold through the same procedure one grid level down, bottoming out
+/// in the serial single-block leaf.
+pub(crate) fn analysis_model() -> crate::analysis::AlgoModel {
+    crate::analysis::AlgoModel {
+        entry: SPIN_RECURSE,
+        procedures: vec![crate::analysis::Procedure {
+            name: SPIN_RECURSE,
+            min_grid: 2,
+            build: level_plan,
+        }],
+        iteration: None,
+    }
+}
+
 /// SPIN (Algorithm 2) implementation entry — reached through
 /// [`crate::algos::SpinAlgorithm`] in the registry.
 ///

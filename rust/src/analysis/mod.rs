@@ -1,0 +1,556 @@
+//! Static plan verifier: prove the standing contracts on an optimized
+//! [`MatExpr`] DAG before (or without) running it.
+//!
+//! The bench gates and Table-3 reports assert *hand-maintained* analytic
+//! constants (SPIN 12/36/84, LU 16/52/140, Cholesky 10/30/78 exchange
+//! stages at b = 2/4/8; Newton's per-pass counts). This module *derives*
+//! those numbers from plan structure alone, with no execution, and proves
+//! the contracts every PR inherits (see `ROADMAP.md`):
+//!
+//! 1. **Geometry & partitioner propagation** ([`geometry_check`]) —
+//!    re-derive every node's `(nblocks, block_size)` bottom-up from its
+//!    children and flag any op that disagrees with its stamped geometry.
+//!    Under the one-block-per-partition invariant the grid partitioner is
+//!    a pure function of `nblocks`, so a clean geometry pass *is* the
+//!    proof that every op re-stamps a correct partitioner.
+//! 2. **Analytic cost accounting** ([`analyze_plan`], [`algo_cost`]) —
+//!    predicted exchange stages, multiply rounds, driver collects, and
+//!    shuffle-byte ceilings per node. Recursive `invert[name]` nodes are
+//!    unfolded through a per-algorithm [`AlgoModel`]: a set of plan-valued
+//!    procedures (one per recursion level / iteration pass) that the
+//!    analyzer instantiates at every grid size down to the serial leaves.
+//!    The derived totals are cross-checked against the closed forms in
+//!    [`crate::costmodel::analytic_multiply_rounds`].
+//! 3. **Rewrite soundness** ([`soundness::rewrite_soundness`]) — diff an
+//!    unoptimized plan against its optimized form and assert the applied
+//!    rules were value-preserving (equal semantic normal forms modulo the
+//!    documented rewrites), geometry-preserving, and cost-non-increasing
+//!    under the derived model.
+//! 4. **Lifecycle soundness** ([`soundness::lifecycle_soundness`]) —
+//!    every evictable node's recompute closure reaches only interned
+//!    sources (seeded generators / identified store paths) or values held
+//!    by the DAG itself, so eviction safety is provable rather than
+//!    sampled.
+//!
+//! Surfaces: `spin lint` (CLI, nonzero exit on violations),
+//! `spin explain --verify`, `GET /v1/jobs/:id/analysis` (HTTP), and the
+//! `verify_plans` debug mode in [`crate::plan::PlanExec`] that
+//! cross-checks these static predictions against measured `Metrics`
+//! counters after every plan node and fails the job on divergence. See
+//! `docs/ANALYSIS.md` for what is proved vs sampled.
+
+use std::collections::{HashMap, HashSet};
+
+use crate::blockmatrix::BlockMatrix;
+use crate::error::{Result, SpinError};
+use crate::plan::{predicted_exchanges, ExprOp, MatExpr, Optimizer, OptimizerConfig};
+use crate::ser::json::Json;
+
+mod soundness;
+
+pub use soundness::{lifecycle_soundness, rewrite_soundness, semantic_normal_form, LifecycleReport};
+
+// ---------------------------------------------------------------------------
+// Algorithm recursion models
+// ---------------------------------------------------------------------------
+
+/// Static recursion model of an inversion scheme: enough structure for the
+/// analyzer to unfold the scheme's *entire* distributed cost at any grid
+/// size without executing it. Returned by
+/// [`crate::algos::InversionAlgorithm::analysis_model`].
+#[derive(Clone)]
+pub struct AlgoModel {
+    /// Name of the procedure invoked on the full input.
+    pub entry: &'static str,
+    /// Every procedure the recursion can reach. A procedure builds one
+    /// level of its recursion as an unexecuted plan over a caller-supplied
+    /// source; nested `invert[name]` nodes reference other procedures (or
+    /// itself) one level down.
+    pub procedures: Vec<Procedure>,
+    /// `Some` for iterative schemes: the entry procedure models **one
+    /// pass**, and the total is `max_iters` passes (an SLA ceiling).
+    pub iteration: Option<IterationModel>,
+}
+
+/// One level (or pass) of a recursion, as a plan builder. The builder must
+/// mirror the real dataflow the scheme lowers through [`crate::plan::PlanExec`]
+/// — same multiplies, subtracts, scales, transposes, arranges — so the
+/// derived counts are exact, not estimates.
+#[derive(Clone, Copy)]
+pub struct Procedure {
+    /// Name matched against `invert[name]` nodes during unfolding.
+    pub name: &'static str,
+    /// Grids strictly below this run as serial driver leaves: zero
+    /// distributed stages, zero shuffle bytes.
+    pub min_grid: usize,
+    /// Build the level's plan over `a` (an unexecuted source of the
+    /// procedure's input geometry).
+    pub build: fn(&MatExpr) -> Result<MatExpr>,
+}
+
+/// Iteration shape of an iterative scheme's entry procedure.
+#[derive(Clone, Copy)]
+pub struct IterationModel {
+    /// The final pass computes the residual check but skips the root
+    /// update (`X_{k+1} = X_k·M_k`), so the last pass costs one root-node
+    /// round less — Newton's `2·(2·max_iters − 1)` stage ceiling.
+    pub final_pass_drops_root: bool,
+}
+
+// ---------------------------------------------------------------------------
+// Cost profiles
+// ---------------------------------------------------------------------------
+
+/// Derived distributed cost of a plan or recursion, all statically proved
+/// ceilings/equalities (see `docs/ANALYSIS.md` for which is which).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct CostProfile {
+    /// Exact count of exchange (shuffle) stages.
+    pub exchange_stages: usize,
+    /// Exact count of distributed multiply / multiply_sub rounds.
+    pub multiply_rounds: usize,
+    /// Upper bound on shuffle bytes moved between executors.
+    pub shuffle_bytes_ceiling: u64,
+    /// Exact count of driver collect stages (always 0 for plan nodes —
+    /// the partitioner-aware dataflow never collects).
+    pub driver_collects: usize,
+    /// True when the counts are an iteration-budget ceiling (the run may
+    /// early-stop below them), not an equality.
+    pub iterative_ceiling: bool,
+}
+
+impl CostProfile {
+    fn add(&mut self, other: &CostProfile) {
+        self.exchange_stages += other.exchange_stages;
+        self.multiply_rounds += other.multiply_rounds;
+        self.shuffle_bytes_ceiling += other.shuffle_bytes_ceiling;
+        self.driver_collects += other.driver_collects;
+        self.iterative_ceiling |= other.iterative_ceiling;
+    }
+
+    fn sub(&mut self, other: &CostProfile) {
+        self.exchange_stages -= other.exchange_stages;
+        self.multiply_rounds -= other.multiply_rounds;
+        self.shuffle_bytes_ceiling -= other.shuffle_bytes_ceiling;
+        self.driver_collects -= other.driver_collects;
+    }
+}
+
+/// Shuffle-byte ceiling for one plan node. A multiply (or fused
+/// multiply_sub) at grid `g` over an `m×m` value routes two exchanges —
+/// the A-stream and the B-stream — and each replicates every source block
+/// to at most `g` output buckets: `≤ g·8·m²` routed bytes per exchange,
+/// `2·8·g·m²` per node. Measured `shuffle_bytes` counts only the
+/// cross-executor subset of that routing, so the ceiling dominates it.
+/// Every other partitioner-aware op is narrow (zero shuffle bytes — the
+/// ceiling 0 makes the verifier *prove* narrowness); the legacy
+/// non-aware subtract cogroups both operands once.
+pub fn node_shuffle_bytes_ceiling(
+    op: &ExprOp,
+    nblocks: usize,
+    n: usize,
+    partitioner_aware: bool,
+) -> u64 {
+    let g = nblocks as u64;
+    let m = n as u64;
+    match op {
+        ExprOp::Multiply(..) | ExprOp::MultiplySub(..) => 2 * 8 * g * m * m,
+        ExprOp::Subtract(..) if !partitioner_aware => 2 * 8 * m * m,
+        _ => 0,
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Recursion unfolding
+// ---------------------------------------------------------------------------
+
+/// Derive the full distributed cost of `model` inverting an
+/// `nblocks × nblocks` grid of `block_size`-sized blocks, by instantiating
+/// each procedure's plan at every grid the recursion reaches and summing
+/// per-node costs under the session's optimizer config. `max_iters` is the
+/// iteration budget for iterative models (ignored otherwise).
+pub fn algo_cost(
+    model: &AlgoModel,
+    nblocks: usize,
+    block_size: usize,
+    config: OptimizerConfig,
+    partitioner_aware: bool,
+    max_iters: usize,
+) -> Result<CostProfile> {
+    let mut memo: HashMap<(&'static str, usize), CostProfile> = HashMap::new();
+    let per_entry = procedure_cost(
+        model,
+        model.entry,
+        nblocks,
+        block_size,
+        config,
+        partitioner_aware,
+        &mut memo,
+    )?;
+    let Some(iter) = model.iteration else {
+        return Ok(per_entry);
+    };
+    if max_iters == 0 {
+        return Err(SpinError::plan("iterative model needs max_iters >= 1"));
+    }
+    // One pass × the SLA budget; the final pass skips the root update.
+    let mut total = CostProfile::default();
+    for _ in 0..max_iters {
+        total.add(&per_entry);
+    }
+    if iter.final_pass_drops_root {
+        let root = build_optimized(lookup(model, model.entry)?, nblocks, config)?;
+        let mut root_own = CostProfile::default();
+        add_node_cost(&mut root_own, &root, block_size, partitioner_aware);
+        total.sub(&root_own);
+    }
+    total.iterative_ceiling = true;
+    Ok(total)
+}
+
+fn lookup<'m>(model: &'m AlgoModel, name: &str) -> Result<&'m Procedure> {
+    model.procedures.iter().find(|p| p.name == name).ok_or_else(|| {
+        SpinError::plan(format!(
+            "analysis model references procedure `{name}` but defines no model for it"
+        ))
+    })
+}
+
+/// Instantiate `proc` at `grid` over a unit-block placeholder source and
+/// optimize it exactly as the executor would — the analyzed plan is the
+/// executed plan.
+fn build_optimized(proc: &Procedure, grid: usize, config: OptimizerConfig) -> Result<MatExpr> {
+    let src = MatExpr::source(BlockMatrix::zeros(grid, 1)?);
+    let raw = (proc.build)(&src)?;
+    Optimizer::new(config).optimize(&raw)
+}
+
+fn add_node_cost(profile: &mut CostProfile, e: &MatExpr, block_size: usize, aware: bool) {
+    if let Some(stages) = predicted_exchanges(e.op(), aware) {
+        profile.exchange_stages += stages;
+    }
+    if matches!(e.op(), ExprOp::Multiply(..) | ExprOp::MultiplySub(..)) {
+        profile.multiply_rounds += 1;
+    }
+    profile.shuffle_bytes_ceiling +=
+        node_shuffle_bytes_ceiling(e.op(), e.nblocks(), e.nblocks() * block_size, aware);
+}
+
+fn procedure_cost(
+    model: &AlgoModel,
+    name: &str,
+    grid: usize,
+    block_size: usize,
+    config: OptimizerConfig,
+    aware: bool,
+    memo: &mut HashMap<(&'static str, usize), CostProfile>,
+) -> Result<CostProfile> {
+    let proc = lookup(model, name)?;
+    if let Some(p) = memo.get(&(proc.name, grid)) {
+        return Ok(*p);
+    }
+    if grid < proc.min_grid {
+        // Serial driver leaf: below the recursion floor the scheme
+        // inverts on a single block, distributing nothing.
+        memo.insert((proc.name, grid), CostProfile::default());
+        return Ok(CostProfile::default());
+    }
+    let root = build_optimized(proc, grid, config)?;
+    let mut profile = CostProfile::default();
+    let mut stack = vec![root];
+    let mut seen: HashSet<u64> = HashSet::new();
+    while let Some(e) = stack.pop() {
+        if !seen.insert(e.id()) {
+            continue;
+        }
+        if let ExprOp::Invert { algo, .. } = e.op() {
+            let sub = procedure_cost(model, algo, e.nblocks(), block_size, config, aware, memo)?;
+            profile.add(&sub);
+        } else {
+            add_node_cost(&mut profile, &e, block_size, aware);
+        }
+        stack.extend(e.children());
+    }
+    memo.insert((proc.name, grid), profile);
+    Ok(profile)
+}
+
+// ---------------------------------------------------------------------------
+// Whole-plan analysis
+// ---------------------------------------------------------------------------
+
+/// Everything the analyzer needs besides the plan itself.
+pub struct AnalysisContext<'a> {
+    /// Resolve an `invert[name]` node to its recursion model (`None` for
+    /// schemes that publish no model — reported, not a violation).
+    pub resolve: &'a dyn Fn(&str) -> Option<AlgoModel>,
+    /// The optimizer config the evaluating session would apply — the
+    /// analyzed plan must be the executed plan.
+    pub optimizer: OptimizerConfig,
+    pub partitioner_aware: bool,
+    /// Session-default iteration budget for iterative schemes; per-node
+    /// `InvertOpts::max_iters` overrides it.
+    pub default_max_iters: usize,
+}
+
+/// Per-node facts derived by [`analyze_plan`].
+#[derive(Debug, Clone)]
+pub struct NodeFact {
+    pub id: u64,
+    pub op: String,
+    pub nblocks: usize,
+    pub n: usize,
+    /// Exchange stages this node's own lowering pays (`None` for a
+    /// recursive invert — covered by `invert_profile`).
+    pub exchange_stages: Option<usize>,
+    pub shuffle_bytes_ceiling: u64,
+    /// Unfolded whole-recursion cost for resolved `invert` nodes.
+    pub invert_profile: Option<CostProfile>,
+}
+
+/// Result of statically analyzing one plan.
+#[derive(Debug, Clone, Default)]
+pub struct PlanAnalysis {
+    pub nodes: Vec<NodeFact>,
+    pub node_count: usize,
+    /// Whole-plan totals (plan nodes + unfolded recursions).
+    pub total: CostProfile,
+    /// True when the geometry/partitioner pass found no violation — the
+    /// one-block-per-partition invariant is proved for every node.
+    pub partitioner_proved: bool,
+    /// Invert nodes whose scheme publishes no [`AlgoModel`]: their cost is
+    /// not included in `total` (reported so callers can tell "proved 0"
+    /// from "unknown").
+    pub opaque_inverts: Vec<String>,
+    pub violations: Vec<String>,
+}
+
+impl PlanAnalysis {
+    pub fn ok(&self) -> bool {
+        self.violations.is_empty()
+    }
+}
+
+/// Re-derive every node's geometry bottom-up and return violations. An
+/// empty result proves geometry (and with it the grid-partitioner stamp)
+/// for the whole DAG.
+pub fn geometry_check(root: &MatExpr) -> Vec<String> {
+    let mut violations = Vec::new();
+    let mut seen: HashSet<u64> = HashSet::new();
+    let mut stack = vec![root.clone()];
+    while let Some(e) = stack.pop() {
+        if !seen.insert(e.id()) {
+            continue;
+        }
+        stack.extend(e.children());
+        let geom = |m: &MatExpr| (m.nblocks(), m.block_size());
+        let expected: std::result::Result<(usize, usize), String> = match e.op() {
+            ExprOp::Source(m) => Ok((m.nblocks(), m.block_size())),
+            ExprOp::LazySource(spec) => Ok((spec.nblocks(), spec.block_size())),
+            ExprOp::Multiply(a, b) | ExprOp::Subtract(a, b) => {
+                if geom(a) != geom(b) {
+                    Err(format!(
+                        "operand grids disagree: {}x{}@{} vs {}x{}@{}",
+                        a.nblocks(),
+                        a.nblocks(),
+                        a.block_size(),
+                        b.nblocks(),
+                        b.nblocks(),
+                        b.block_size()
+                    ))
+                } else {
+                    Ok(geom(a))
+                }
+            }
+            ExprOp::MultiplySub(a, b, d) => {
+                if geom(a) != geom(b) || geom(a) != geom(d) {
+                    Err("multiply_sub operands disagree on grid geometry".to_string())
+                } else {
+                    Ok(geom(a))
+                }
+            }
+            ExprOp::Scale(x, _) | ExprOp::Transpose(x) | ExprOp::Invert { child: x, .. } => {
+                Ok(geom(x))
+            }
+            ExprOp::Quadrant { child, .. } => {
+                if child.nblocks() < 2 || child.nblocks() % 2 != 0 {
+                    Err(format!(
+                        "quadrant of a non-splittable {}x{} grid",
+                        child.nblocks(),
+                        child.nblocks()
+                    ))
+                } else {
+                    Ok((child.nblocks() / 2, child.block_size()))
+                }
+            }
+            ExprOp::Arrange(a, b, c, d) => {
+                if geom(a) != geom(b) || geom(a) != geom(c) || geom(a) != geom(d) {
+                    Err("arrange quadrants disagree on grid geometry".to_string())
+                } else {
+                    Ok((a.nblocks() * 2, a.block_size()))
+                }
+            }
+        };
+        match expected {
+            Err(msg) => violations.push(format!("%{} {}: {}", e.id(), e.op().name(), msg)),
+            Ok(exp) if exp != (e.nblocks(), e.block_size()) => violations.push(format!(
+                "%{} {}: stamped {}x{} grid of {}-blocks, children derive {}x{} of {}-blocks \
+                 (partitioner stamp would be wrong)",
+                e.id(),
+                e.op().name(),
+                e.nblocks(),
+                e.nblocks(),
+                e.block_size(),
+                exp.0,
+                exp.0,
+                exp.1
+            )),
+            Ok(_) => {}
+        }
+    }
+    violations.sort();
+    violations
+}
+
+/// Statically analyze an (already optimized) plan: prove geometry, derive
+/// per-node and total cost, and unfold recursive inverts through their
+/// published models. Performs no execution.
+pub fn analyze_plan(root: &MatExpr, ctx: &AnalysisContext<'_>) -> Result<PlanAnalysis> {
+    let mut out = PlanAnalysis {
+        violations: geometry_check(root),
+        ..PlanAnalysis::default()
+    };
+    out.partitioner_proved = out.violations.is_empty();
+    let mut seen: HashSet<u64> = HashSet::new();
+    let mut stack = vec![root.clone()];
+    while let Some(e) = stack.pop() {
+        if !seen.insert(e.id()) {
+            continue;
+        }
+        stack.extend(e.children());
+        out.node_count += 1;
+        let mut fact = NodeFact {
+            id: e.id(),
+            op: e.op().name().to_string(),
+            nblocks: e.nblocks(),
+            n: e.n(),
+            exchange_stages: predicted_exchanges(e.op(), ctx.partitioner_aware),
+            shuffle_bytes_ceiling: node_shuffle_bytes_ceiling(
+                e.op(),
+                e.nblocks(),
+                e.n(),
+                ctx.partitioner_aware,
+            ),
+            invert_profile: None,
+        };
+        if let ExprOp::Invert { algo, opts, .. } = e.op() {
+            match (ctx.resolve)(algo) {
+                Some(model) => {
+                    let budget = opts.max_iters.unwrap_or(ctx.default_max_iters);
+                    let profile = algo_cost(
+                        &model,
+                        e.nblocks(),
+                        e.block_size(),
+                        ctx.optimizer,
+                        ctx.partitioner_aware,
+                        budget,
+                    )?;
+                    out.total.add(&profile);
+                    fact.invert_profile = Some(profile);
+                }
+                None => out.opaque_inverts.push(algo.clone()),
+            }
+        } else {
+            let mut own = CostProfile::default();
+            if let Some(stages) = fact.exchange_stages {
+                own.exchange_stages = stages;
+            }
+            if matches!(e.op(), ExprOp::Multiply(..) | ExprOp::MultiplySub(..)) {
+                own.multiply_rounds = 1;
+            }
+            own.shuffle_bytes_ceiling = fact.shuffle_bytes_ceiling;
+            out.total.add(&own);
+        }
+        out.nodes.push(fact);
+    }
+    out.nodes.sort_by_key(|f| f.id);
+    out.opaque_inverts.sort();
+    out.opaque_inverts.dedup();
+    Ok(out)
+}
+
+// ---------------------------------------------------------------------------
+// Session-level verdict (analysis + soundness, JSON-renderable)
+// ---------------------------------------------------------------------------
+
+/// The full verifier verdict on one plan: cost analysis of the optimized
+/// form, rewrite-soundness diff against the unoptimized form, and the
+/// lifecycle closure proof. Built by
+/// [`crate::session::SpinSession::analyze_expr`].
+#[derive(Debug, Clone)]
+pub struct PlanVerdict {
+    pub analysis: PlanAnalysis,
+    pub rewrite_violations: Vec<String>,
+    pub lifecycle: LifecycleReport,
+}
+
+impl PlanVerdict {
+    pub fn ok(&self) -> bool {
+        self.analysis.ok() && self.rewrite_violations.is_empty() && self.lifecycle.ok()
+    }
+
+    /// All violations across the three passes, for flat reporting.
+    pub fn violations(&self) -> Vec<String> {
+        let mut v = self.analysis.violations.clone();
+        v.extend(self.rewrite_violations.iter().cloned());
+        v.extend(self.lifecycle.violations.iter().cloned());
+        v
+    }
+
+    pub fn to_json(&self) -> Json {
+        let a = &self.analysis;
+        Json::object(vec![
+            ("ok", Json::Bool(self.ok())),
+            (
+                "predicted",
+                Json::object(vec![
+                    ("exchange_stages", Json::num(a.total.exchange_stages as f64)),
+                    ("multiply_rounds", Json::num(a.total.multiply_rounds as f64)),
+                    (
+                        "shuffle_bytes_ceiling",
+                        Json::num(a.total.shuffle_bytes_ceiling as f64),
+                    ),
+                    ("driver_collects", Json::num(a.total.driver_collects as f64)),
+                    ("iterative_ceiling", Json::Bool(a.total.iterative_ceiling)),
+                ]),
+            ),
+            ("node_count", Json::num(a.node_count as f64)),
+            ("partitioner_proved", Json::Bool(a.partitioner_proved)),
+            (
+                "opaque_inverts",
+                Json::Array(a.opaque_inverts.iter().map(|s| Json::str(s.clone())).collect()),
+            ),
+            (
+                "lifecycle",
+                Json::object(vec![
+                    ("evictable", Json::num(self.lifecycle.evictable as f64)),
+                    (
+                        "interned_leaves",
+                        Json::num(self.lifecycle.interned_leaves as f64),
+                    ),
+                    ("held_leaves", Json::num(self.lifecycle.held_leaves as f64)),
+                    (
+                        "notes",
+                        Json::Array(
+                            self.lifecycle.notes.iter().map(|s| Json::str(s.clone())).collect(),
+                        ),
+                    ),
+                ]),
+            ),
+            (
+                "violations",
+                Json::Array(self.violations().into_iter().map(Json::str).collect()),
+            ),
+        ])
+    }
+}

@@ -1,0 +1,260 @@
+//! Rewrite soundness and lifecycle soundness: the two contract proofs
+//! that diff plans rather than cost them.
+//!
+//! **Rewrite soundness** checks the optimizer rule contract
+//! (`plan/optimizer.rs`): every documented rewrite — multiply+subtract
+//! fusion, transpose pushdown, exact scalar folding, CSE — is
+//! value-preserving, geometry-preserving, and cost-non-increasing. The
+//! value check reduces both plans to a *semantic normal form* that is
+//! invariant under exactly those rewrites (and nothing else): transposes
+//! are distributed down to the leaves, `multiply_sub` is expanded to
+//! `sub(mul(..), ..)`, and scale chains collapse to one bit-exact factor.
+//! Equal normal forms ⇒ the optimized plan computes the same value; the
+//! check is deterministic, so it can never pass a plan the rules would
+//! reject.
+//!
+//! **Lifecycle soundness** proves the eviction contract: a value may be
+//! dropped only if its recompute closure reaches leaves that are either
+//! held by the DAG itself (`Source`) or interned by a deterministic spec
+//! (`LazySource`: seeded generator or identified store path). The walk
+//! matches `ExprOp` exhaustively, so a new operator cannot ship without
+//! being classified here.
+
+use std::collections::{HashMap, HashSet};
+use std::rc::Rc;
+
+use crate::plan::{predicted_exchanges, ExprOp, MatExpr};
+
+use super::node_shuffle_bytes_ceiling;
+
+// ---------------------------------------------------------------------------
+// Rewrite soundness
+// ---------------------------------------------------------------------------
+
+/// Reduce a plan to its semantic normal form: a string that is equal for
+/// two plans iff they compute the same value *modulo the documented
+/// optimizer rewrites*. Exposed for tests and debugging.
+pub fn semantic_normal_form(e: &MatExpr) -> String {
+    let mut memo = HashMap::new();
+    norm(e, false, &mut memo).to_string()
+}
+
+fn norm(e: &MatExpr, t: bool, memo: &mut HashMap<(u64, bool), Rc<str>>) -> Rc<str> {
+    if let Some(s) = memo.get(&(e.id(), t)) {
+        return Rc::clone(s);
+    }
+    let wrap = |s: String, t: bool| if t { format!("T({s})") } else { s };
+    let s: String = match e.op() {
+        // Sources are canonical by identity: the optimizer never rebuilds
+        // a leaf, so raw and optimized plans share the same leaf nodes.
+        ExprOp::Source(_) => wrap(format!("src#{}", e.id()), t),
+        ExprOp::LazySource(spec) => wrap(format!("lazy[{}]", spec.label()), t),
+        // (A·B)ᵀ = Bᵀ·Aᵀ — the transpose-pushdown rule.
+        ExprOp::Multiply(a, b) => {
+            if t {
+                format!("mul({},{})", norm(b, true, memo), norm(a, true, memo))
+            } else {
+                format!("mul({},{})", norm(a, false, memo), norm(b, false, memo))
+            }
+        }
+        // The fusion rule: multiply_sub(A,B,D) ≡ sub(mul(A,B), D).
+        ExprOp::MultiplySub(a, b, d) => {
+            let prod = if t {
+                format!("mul({},{})", norm(b, true, memo), norm(a, true, memo))
+            } else {
+                format!("mul({},{})", norm(a, false, memo), norm(b, false, memo))
+            };
+            format!("sub({prod},{})", norm(d, t, memo))
+        }
+        ExprOp::Subtract(a, b) => {
+            format!("sub({},{})", norm(a, t, memo), norm(b, t, memo))
+        }
+        // Collapse a scale chain to one factor. The folding rule only
+        // merges exact (±1) factors, so both sides accumulate the *same*
+        // chain in the same order — the products are bit-identical.
+        ExprOp::Scale(..) => {
+            let mut f = 1.0f64;
+            let mut cur = e.clone();
+            loop {
+                let next = match cur.op() {
+                    ExprOp::Scale(inner, s) => {
+                        f *= *s;
+                        inner.clone()
+                    }
+                    _ => break,
+                };
+                cur = next;
+            }
+            let body = norm(&cur, t, memo);
+            if f == 1.0 {
+                body.to_string()
+            } else {
+                format!("scale[{:016x}]({body})", f.to_bits())
+            }
+        }
+        ExprOp::Transpose(x) => norm(x, !t, memo).to_string(),
+        // No rule crosses an invert/quadrant/arrange boundary: keep them
+        // literal (transposed context wraps instead of distributing —
+        // symmetric on both sides, so determinism is preserved).
+        ExprOp::Invert { algo, opts, child } => wrap(
+            format!("inv[{algo}|{:?}]({})", opts.key(), norm(child, false, memo)),
+            t,
+        ),
+        ExprOp::Quadrant { child, which } => {
+            wrap(format!("q[{which:?}]({})", norm(child, false, memo)), t)
+        }
+        ExprOp::Arrange(a, b, c, d) => wrap(
+            format!(
+                "arr({},{},{},{})",
+                norm(a, false, memo),
+                norm(b, false, memo),
+                norm(c, false, memo),
+                norm(d, false, memo)
+            ),
+            t,
+        ),
+    };
+    let rc: Rc<str> = Rc::from(s);
+    memo.insert((e.id(), t), Rc::clone(&rc));
+    rc
+}
+
+fn plan_cost(root: &MatExpr, aware: bool) -> (usize, u64) {
+    let mut stages = 0usize;
+    let mut bytes = 0u64;
+    let mut seen: HashSet<u64> = HashSet::new();
+    let mut stack = vec![root.clone()];
+    while let Some(e) = stack.pop() {
+        if !seen.insert(e.id()) {
+            continue;
+        }
+        stack.extend(e.children());
+        // Inverts are opaque here: the value check guarantees the rewrite
+        // did not change *which* inversions run, so they cancel out.
+        stages += predicted_exchanges(e.op(), aware).unwrap_or(0);
+        bytes += node_shuffle_bytes_ceiling(e.op(), e.nblocks(), e.n(), aware);
+    }
+    (stages, bytes)
+}
+
+/// Diff an unoptimized plan against its optimized form and return every
+/// violated clause of the optimizer rule contract (empty = proved sound).
+pub fn rewrite_soundness(
+    raw: &MatExpr,
+    optimized: &MatExpr,
+    partitioner_aware: bool,
+) -> Vec<String> {
+    let mut violations = Vec::new();
+    // Value preservation.
+    let mut memo = HashMap::new();
+    let n_raw = norm(raw, false, &mut memo);
+    let n_opt = norm(optimized, false, &mut memo);
+    if n_raw != n_opt {
+        let prefix = |s: &str| s.chars().take(96).collect::<String>();
+        violations.push(format!(
+            "rewrite changed the computed value: normal forms diverge ({}... vs {}...)",
+            prefix(&n_raw),
+            prefix(&n_opt)
+        ));
+    }
+    // Geometry preservation: same root geometry, and the optimized DAG is
+    // internally consistent (the raw plan was validated at construction).
+    if (raw.nblocks(), raw.block_size()) != (optimized.nblocks(), optimized.block_size()) {
+        violations.push(format!(
+            "rewrite changed root geometry: {}x{}@{} -> {}x{}@{}",
+            raw.nblocks(),
+            raw.nblocks(),
+            raw.block_size(),
+            optimized.nblocks(),
+            optimized.nblocks(),
+            optimized.block_size()
+        ));
+    }
+    for v in super::geometry_check(optimized) {
+        violations.push(format!("optimized plan breaks geometry: {v}"));
+    }
+    // Cost non-increase under the derived model.
+    let (raw_stages, raw_bytes) = plan_cost(raw, partitioner_aware);
+    let (opt_stages, opt_bytes) = plan_cost(optimized, partitioner_aware);
+    if opt_stages > raw_stages {
+        violations.push(format!(
+            "rewrite increased exchange stages: {raw_stages} -> {opt_stages}"
+        ));
+    }
+    if opt_bytes > raw_bytes {
+        violations.push(format!(
+            "rewrite increased the shuffle-byte ceiling: {raw_bytes} -> {opt_bytes}"
+        ));
+    }
+    violations
+}
+
+// ---------------------------------------------------------------------------
+// Lifecycle soundness
+// ---------------------------------------------------------------------------
+
+/// Result of the eviction-safety closure proof.
+#[derive(Debug, Clone, Default)]
+pub struct LifecycleReport {
+    /// Unique nodes walked.
+    pub nodes: usize,
+    /// Operator nodes whose value the lifecycle manager may evict.
+    pub evictable: usize,
+    /// `LazySource` leaves interned by a deterministic spec.
+    pub interned_leaves: usize,
+    /// `Source` leaves whose value is held by the DAG itself.
+    pub held_leaves: usize,
+    /// Conditionally-sound cases worth surfacing (not violations): e.g. a
+    /// pre-id block store, whose identity is re-checked at materialization
+    /// rather than proved here.
+    pub notes: Vec<String>,
+    pub violations: Vec<String>,
+}
+
+impl LifecycleReport {
+    pub fn ok(&self) -> bool {
+        self.violations.is_empty()
+    }
+}
+
+/// Prove that every evictable node's recompute closure bottoms out in
+/// interned or held sources. The `ExprOp` match is exhaustive on purpose:
+/// adding an operator without classifying its recompute story is a
+/// compile error, not a silently-sampled gap.
+pub fn lifecycle_soundness(root: &MatExpr) -> LifecycleReport {
+    let mut report = LifecycleReport::default();
+    let mut seen: HashSet<u64> = HashSet::new();
+    let mut stack = vec![root.clone()];
+    while let Some(e) = stack.pop() {
+        if !seen.insert(e.id()) {
+            continue;
+        }
+        stack.extend(e.children());
+        report.nodes += 1;
+        match e.op() {
+            ExprOp::Source(_) => report.held_leaves += 1,
+            ExprOp::LazySource(spec) => {
+                report.interned_leaves += 1;
+                if let crate::plan::SourceSpec::Store { dir, store_id: None, .. } = spec {
+                    report.notes.push(format!(
+                        "store leaf {} has no recorded store_id (pre-id store): recompute \
+                         identity is re-checked at materialization, not proved statically",
+                        dir.display()
+                    ));
+                }
+            }
+            // Deterministic pure functions of their children: recomputable
+            // bit-identically whenever the children are.
+            ExprOp::Multiply(..)
+            | ExprOp::MultiplySub(..)
+            | ExprOp::Subtract(..)
+            | ExprOp::Scale(..)
+            | ExprOp::Transpose(..)
+            | ExprOp::Invert { .. }
+            | ExprOp::Quadrant { .. }
+            | ExprOp::Arrange(..) => report.evictable += 1,
+        }
+    }
+    report.notes.sort();
+    report
+}

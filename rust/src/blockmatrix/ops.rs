@@ -283,6 +283,11 @@ impl BlockMatrix {
     /// result is re-parallelized through the driver. Kept as the
     /// measurable "before" of the partitioner-aware dataflow and for
     /// ablation benches.
+    //
+    // expect is invariant-backed: the replicate-k exchange emits every
+    // (i, j, k) replica pair and the kernel contract returns a block for
+    // conforming shapes, both established before this hot path runs.
+    #[allow(clippy::expect_used)]
     pub fn multiply_replicated(
         &self,
         cluster: &Cluster,
@@ -351,6 +356,11 @@ impl BlockMatrix {
         self.binary_elementwise(cluster, kernels, other, method::SUBTRACT)
     }
 
+    //
+    // expect is invariant-backed: both operands are co-partitioned on the
+    // same grid (checked by the callers' shape guards), so every slot has
+    // exactly one block from each side and the kernel cannot reject them.
+    #[allow(clippy::expect_used)]
     fn binary_elementwise(
         &self,
         cluster: &Cluster,
@@ -422,6 +432,10 @@ impl BlockMatrix {
     /// Narrow: the shifted quadrants' one-block partitions slot 1-to-1
     /// into the full grid's partitions, so no element moves executors and
     /// the result carries the grid partitioner for the next level.
+    //
+    // expect is invariant-backed: the quadrant math covers every output
+    // grid slot exactly once.
+    #[allow(clippy::expect_used)]
     pub fn arrange(
         cluster: &Cluster,
         c11: BlockMatrix,
@@ -513,6 +527,11 @@ impl BlockMatrix {
 /// GEMM each pair, accumulate the k-sum in place (`matmul_acc` takes the
 /// accumulator by value — no per-term allocation), and optionally apply
 /// the fused Schur subtraction.
+//
+// expect is invariant-backed: the routed exchange delivers a B replica for
+// every (i, j, k) key it routed an A replica for, each output block has at
+// least one k-term, and the kernels accept conforming blocks.
+#[allow(clippy::expect_used)]
 fn join_products(
     kernels: &dyn BlockKernels,
     avs: Vec<RepEntry>,

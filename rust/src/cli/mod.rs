@@ -11,6 +11,8 @@
 //! spin exp     figure2|figure3|figure4|figure5|table3|all [--smoke|--full]
 //! spin bench   [--smoke] [--out BENCH_spin.json] [--seed N] [--schema-baseline FILE]
 //! spin explain [--n 256 --block-size 32] [--algo spin] [--set plan_optimizer=false]
+//!              [--verify]
+//! spin lint    [--algo NAME] [--n N --block-size S] [--spec JOBS.json]
 //! spin serve   --script JOBS.json | --store DIR [--workers N]
 //!              [--set cache_budget_bytes=N] [--set metrics_history=N]
 //! spin serve   --http ADDR [--store DIR] [--workers N]
@@ -58,6 +60,7 @@ fn dispatch(argv: Vec<String>) -> Result<()> {
         "exp" => cmd_exp(args),
         "bench" => cmd_bench(args),
         "explain" => cmd_explain(args),
+        "lint" => cmd_lint(args),
         "serve" => cmd_serve(args),
         "info" => cmd_info(args),
         "help" | "--help" | "-h" => {
@@ -84,7 +87,14 @@ pub fn usage() -> String {
      \x20 exp      run a paper experiment: figure2|figure3|figure4|figure5|table3|all\n\
      \x20 bench    invert the tracked size sweep, write BENCH_spin.json (perf trajectory)\n\
      \x20 explain  print an algorithm's optimized recursion-level plan (fusion, CSE caches,\n\
-     \x20          predicted shuffle stages per node, cache decisions + resident bytes)\n\
+     \x20          predicted shuffle stages per node, cache decisions + resident bytes);\n\
+     \x20          --verify appends the static plan verifier's verdict (exit 1 on violation)\n\
+     \x20 lint     statically prove the standing contracts on every optimized plan without\n\
+     \x20          running anything: geometry/partitioner propagation, rewrite + lifecycle\n\
+     \x20          soundness, and exact exchange-stage/shuffle-byte accounting cross-checked\n\
+     \x20          against the closed-form cost model (see docs/ANALYSIS.md); default corpus\n\
+     \x20          is every registered algorithm at n∈{64,128,256}, b∈{2,4,8}; --spec FILE\n\
+     \x20          lints a JobSpec script instead; exit 1 if any proof fails\n\
      \x20 serve    replay a JobSpec script ({\"jobs\": [...]}) through the multi-tenant\n\
      \x20          SpinService and print per-job reports (--script FILE, --workers N),\n\
      \x20          or expose the service over HTTP: --http ADDR [--store DIR] runs the\n\
@@ -503,28 +513,264 @@ fn cmd_bench(mut args: Args) -> Result<()> {
     doc.to_file(std::path::Path::new(&out))?;
     println!("wrote {out}");
     if let Some(bp) = schema_baseline {
-        check_bench_schema(&Json::from_file(std::path::Path::new(&bp))?, &doc)?;
+        let baseline = Json::from_file(std::path::Path::new(&bp))?;
+        check_bench_schema(&baseline, &doc)?;
+        print!("{}", report_bytes_gate_sources(&cfg, &baseline)?);
         println!("schema + deterministic-counter gate vs {bp}: OK");
     }
     Ok(())
+}
+
+/// Classify where each baseline row's `total_shuffle_bytes` gate comes
+/// from: `analyzer` when it equals the static plan verifier's exact
+/// routed-byte ceiling for that {algo, n, b} (the tight bound measured
+/// runs must stay under), `analytic` when it matches the legacy loose
+/// stages·8·b·n² bound, `custom` otherwise (a hand-tuned or
+/// measured-refresh value). Printed with the `--schema-baseline` gate so
+/// a baseline drifting away from the proved ceiling is visible in CI
+/// logs rather than silent.
+fn report_bytes_gate_sources(cfg: &ClusterConfig, baseline: &Json) -> Result<String> {
+    let session = SpinSession::builder().cluster_config(cfg.clone()).build()?;
+    let empty: [Json; 0] = [];
+    let runs = baseline.get("runs").and_then(Json::as_array).unwrap_or(&empty);
+    let (mut from_analyzer, mut from_analytic, mut custom) = (0usize, 0usize, 0usize);
+    let mut lines = String::new();
+    for run in runs {
+        let fields = (
+            run.get("algo").and_then(Json::as_str),
+            run.get("n").and_then(Json::as_i64),
+            run.get("b").and_then(Json::as_i64),
+            run.get("total_shuffle_bytes").and_then(Json::as_f64),
+            run.get("shuffle_stages").and_then(Json::as_f64),
+        );
+        let (Some(algo), Some(n), Some(b), Some(bytes), Some(stages)) = fields else {
+            continue;
+        };
+        let (n, b) = (n as usize, b as usize);
+        if b == 0 || n % b != 0 {
+            continue;
+        }
+        // Unknown algorithms (a baseline ahead of this binary) simply
+        // have no analyzer value and fall through to analytic/custom.
+        let exact = session
+            .analyze_invert(algo, n, n / b)
+            .ok()
+            .map(|v| v.analysis.total.shuffle_bytes_ceiling as f64);
+        let loose = stages * 8.0 * b as f64 * (n * n) as f64;
+        let source = if exact == Some(bytes) {
+            from_analyzer += 1;
+            "analyzer"
+        } else if bytes == loose {
+            from_analytic += 1;
+            "analytic"
+        } else {
+            custom += 1;
+            "custom"
+        };
+        lines.push_str(&format!("  {algo:<9} n={n:<4} b={b}: {source}\n"));
+    }
+    Ok(format!(
+        "bytes gate sources ({from_analyzer} analyzer, {from_analytic} analytic, \
+         {custom} custom):\n{lines}"
+    ))
 }
 
 /// `spin explain`: print the optimized plan of one recursion level of the
 /// chosen algorithm — which rewrites fired (the fused `multiply_sub`
 /// Schur step, CSE cache points) and the predicted shuffle stages per
 /// node. `--set plan_optimizer=false` shows the unoptimized plan.
+/// `--verify` appends the static plan verifier's full verdict for the
+/// same geometry and exits nonzero if any proof fails.
 fn cmd_explain(mut args: Args) -> Result<()> {
     let cfg = cluster_config(&mut args)?;
     let job = job_config(&mut args)?;
     let algo = args
         .flag_value("--algo")?
         .unwrap_or_else(|| "spin".to_string());
+    let verify = args.flag("--verify");
     args.finish()?;
     let session = SpinSession::builder()
         .cluster_config(cfg)
         .job_defaults(&job)
         .build()?;
     print!("{}", session.explain_invert(&algo, job.n, job.block_size)?);
+    if verify {
+        let verdict = session.analyze_invert(&algo, job.n, job.block_size)?;
+        println!("\nplan verifier:\n{}", verdict.to_json().pretty());
+        if !verdict.ok() {
+            return Err(SpinError::plan(format!(
+                "plan verification failed: {} violation(s)",
+                verdict.violations().len()
+            )));
+        }
+    }
+    Ok(())
+}
+
+/// Rendered outcome of a `spin lint` run (pure data so tests can gold
+/// the report text without capturing stdout).
+struct LintReport {
+    text: String,
+    plans: usize,
+    violations: usize,
+}
+
+/// Append one report line (plus violation detail lines) for a verified
+/// plan; returns the number of violations found. `expect_rounds` is the
+/// closed-form multiply-round count from `costmodel` — when present, the
+/// analyzer's structural count must reproduce it exactly, and the
+/// exchange-stage total must be twice it (each distributed multiply pays
+/// an A-stream and a B-stream exchange; nothing else shuffles).
+fn render_lint_line(
+    text: &mut String,
+    label: &str,
+    verdict: &crate::analysis::PlanVerdict,
+    expect_rounds: Option<usize>,
+) -> usize {
+    let total = verdict.analysis.total;
+    let mut vios = verdict.violations();
+    if let Some(want) = expect_rounds {
+        if total.multiply_rounds != want {
+            vios.push(format!(
+                "cost cross-check: analyzer counted {} multiply rounds, closed form says {want}",
+                total.multiply_rounds
+            ));
+        }
+        if total.exchange_stages != 2 * total.multiply_rounds {
+            vios.push(format!(
+                "cost cross-check: {} exchange stages != 2 x {} multiply rounds",
+                total.exchange_stages, total.multiply_rounds
+            ));
+        }
+    }
+    let ceil = if total.iterative_ceiling { "<=" } else { "" };
+    let status = if vios.is_empty() { "OK" } else { "FAIL" };
+    text.push_str(&format!(
+        "{label}: stages {ceil}{}  rounds {ceil}{}  bytes<={}  collects {}  nodes {}  [{status}]\n",
+        total.exchange_stages,
+        total.multiply_rounds,
+        total.shuffle_bytes_ceiling,
+        total.driver_collects,
+        verdict.analysis.node_count,
+    ));
+    for opaque in &verdict.analysis.opaque_inverts {
+        text.push_str(&format!(
+            "  note: opaque invert `{opaque}` (no analysis model; its interior is not counted)\n"
+        ));
+    }
+    for v in &vios {
+        text.push_str(&format!("  violation: {v}\n"));
+    }
+    vios.len()
+}
+
+/// Build the `spin lint` report: statically verify every plan in the
+/// corpus (no execution) and render one line per plan plus a summary.
+/// Default corpus: every registered algorithm at n ∈ {64, 128, 256},
+/// b ∈ {2, 4, 8}; `--algo`/`--n`/`--block-size` narrow it; `--spec FILE`
+/// lints each job of a JobSpec script through a zero-worker service
+/// instead (plans are built and proved, never run).
+fn lint_report(
+    cfg: &ClusterConfig,
+    algo: Option<&str>,
+    n: Option<usize>,
+    block_size: Option<usize>,
+    spec_path: Option<&str>,
+) -> Result<LintReport> {
+    let mut text = String::new();
+    let mut plans = 0usize;
+    let mut violations = 0usize;
+    if let Some(path) = spec_path {
+        let specs = JobSpec::parse_script(&Json::from_file(std::path::Path::new(path))?)?;
+        let probe = SpinService::builder()
+            .cluster_config(cfg.clone())
+            .workers(0)
+            .queue_capacity(specs.len().max(1))
+            .build()?;
+        for (i, spec) in specs.into_iter().enumerate() {
+            let label = if spec.label.is_empty() {
+                format!("job {i}")
+            } else {
+                format!("job {i} [{}]", spec.label)
+            };
+            let handle = probe.submit(spec)?;
+            let verdict = handle.analysis()?;
+            violations += render_lint_line(&mut text, &label, &verdict, None);
+            plans += 1;
+        }
+    } else {
+        let session = SpinSession::builder().cluster_config(cfg.clone()).build()?;
+        let algos: Vec<String> = match algo {
+            Some(a) => vec![a.to_string()],
+            None => session.algorithms(),
+        };
+        let geometries: Vec<(usize, usize)> = match n {
+            Some(n) => vec![(n, block_size.unwrap_or_else(|| (n / 4).max(1)))],
+            None => {
+                let mut g = Vec::new();
+                for n in [64usize, 128, 256] {
+                    for b in [2usize, 4, 8] {
+                        g.push((n, n / b));
+                    }
+                }
+                g
+            }
+        };
+        // The closed-form cross-check uses the same iteration budget the
+        // session defaults give `analyze_invert` (JobConfig default).
+        let max_iters = JobConfig::new(2, 1).max_iters;
+        for name in &algos {
+            for &(n, bs) in &geometries {
+                let verdict = session.analyze_invert(name, n, bs)?;
+                let b = n / bs;
+                let expect = costmodel::analytic_multiply_rounds(name, b, max_iters);
+                let label = format!("{name:<9} n={n:<4} b={b}");
+                violations += render_lint_line(&mut text, &label, &verdict, expect);
+                plans += 1;
+            }
+        }
+    }
+    text.push_str(&format!(
+        "plan lint: {plans} plan(s) verified, {violations} violation(s)\n"
+    ));
+    Ok(LintReport {
+        text,
+        plans,
+        violations,
+    })
+}
+
+/// `spin lint`: run the static plan verifier over a corpus of optimized
+/// plans and exit nonzero if any standing contract fails — geometry and
+/// partitioner propagation, rewrite soundness (raw vs optimized plan),
+/// recompute-lifecycle soundness, and the analytic cost accounting
+/// (exchange stages, multiply rounds, shuffle-byte ceilings) cross-checked
+/// against `costmodel::analytic_multiply_rounds`. Nothing executes: every
+/// number is derived from plan structure alone.
+fn cmd_lint(mut args: Args) -> Result<()> {
+    let cfg = cluster_config(&mut args)?;
+    let algo = args.flag_value("--algo")?;
+    let n = args
+        .flag_value("--n")?
+        .map(|v| v.parse::<usize>().map_err(|_| SpinError::config("--n needs an integer")))
+        .transpose()?;
+    let block_size = args
+        .flag_value("--block-size")?
+        .map(|v| {
+            v.parse::<usize>()
+                .map_err(|_| SpinError::config("--block-size needs an integer"))
+        })
+        .transpose()?;
+    let spec = args.flag_value("--spec")?;
+    args.finish()?;
+    let report = lint_report(&cfg, algo.as_deref(), n, block_size, spec.as_deref())?;
+    print!("{}", report.text);
+    if report.violations > 0 {
+        return Err(SpinError::plan(format!(
+            "plan lint failed: {} violation(s) across {} plan(s)",
+            report.violations, report.plans
+        )));
+    }
     Ok(())
 }
 
@@ -1308,6 +1554,120 @@ mod tests {
         let cmd = format!("serve --script {}", path.display());
         assert_eq!(run(argv(&cmd)), 1);
         let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn lint_corpus_proves_all_plans() {
+        // Every registered algorithm × the tracked geometry sweep passes
+        // the static verifier (geometry, rewrite soundness, lifecycle,
+        // and the closed-form cost cross-check) without executing.
+        assert_eq!(run(argv("lint")), 0);
+    }
+
+    #[test]
+    fn lint_report_is_golden_for_one_plan() {
+        let cfg = ClusterConfig::paper();
+        let report = lint_report(&cfg, Some("spin"), Some(64), Some(16), None).unwrap();
+        assert_eq!(report.plans, 1);
+        assert_eq!(report.violations, 0);
+        assert_eq!(
+            report.text,
+            "spin      n=64   b=4: stages 36  rounds 18  bytes<=245760  collects 0  \
+             nodes 2  [OK]\nplan lint: 1 plan(s) verified, 0 violation(s)\n"
+        );
+    }
+
+    #[test]
+    fn lint_newton_reports_iteration_ceiling() {
+        // Iterative schemes gate a budget ceiling, not an equality: the
+        // report marks stages/rounds with `<=` (4·max_iters − 2 = 254
+        // stages at the default budget of 64 passes).
+        let cfg = ClusterConfig::paper();
+        let report = lint_report(&cfg, Some("newton"), Some(64), Some(32), None).unwrap();
+        assert_eq!(report.violations, 0);
+        assert!(
+            report.text.contains("stages <=254  rounds <=127"),
+            "{}",
+            report.text
+        );
+    }
+
+    #[test]
+    fn lint_cli_narrows_and_rejects_bad_input() {
+        assert_eq!(run(argv("lint --algo spin --n 64 --block-size 16")), 0);
+        assert_eq!(run(argv("lint --algo qr --n 64 --block-size 16")), 1);
+        assert_eq!(run(argv("lint --n 64 --block-size 48")), 1);
+        assert_eq!(run(argv("lint --bogus")), 1);
+    }
+
+    #[test]
+    fn lint_spec_script_without_running() {
+        use crate::service::{JobSpec, MatrixSpec};
+        let a = MatrixSpec::new(32, 8).seeded(5);
+        let mut lu = JobSpec::invert(a.clone()).label("lu-inv");
+        lu.algo = Some("lu".to_string());
+        let doc = Json::object(vec![(
+            "jobs",
+            Json::Array(vec![JobSpec::invert(a).label("inv").to_json(), lu.to_json()]),
+        )]);
+        let path = write_script("spin_lint_spec", &doc);
+        let cmd = format!("lint --spec {}", path.display());
+        assert_eq!(run(argv(&cmd)), 0);
+        let _ = std::fs::remove_file(&path);
+        assert_eq!(run(argv("lint --spec /nonexistent/jobs.json")), 1);
+    }
+
+    #[test]
+    fn explain_verify_appends_verdict() {
+        assert_eq!(run(argv("explain --n 64 --block-size 16 --verify")), 0);
+        assert_eq!(
+            run(argv("explain --n 64 --block-size 16 --algo newton --verify")),
+            0
+        );
+    }
+
+    #[test]
+    fn bytes_gate_sources_classifies_baseline_rows() {
+        let cfg = ClusterConfig::paper();
+        let row = |bytes: f64| {
+            Json::object(vec![
+                ("algo", Json::str("spin")),
+                ("n", Json::num(64.0)),
+                ("b", Json::num(2.0)),
+                ("shuffle_stages", Json::num(12.0)),
+                ("total_shuffle_bytes", Json::num(bytes)),
+            ])
+        };
+        let baseline = Json::object(vec![(
+            "runs",
+            Json::Array(vec![
+                row(98304.0),  // the analyzer's exact routed-byte ceiling
+                row(786432.0), // the legacy loose stages·8·b·n² bound
+                row(123456.0), // anything else: hand-tuned
+            ]),
+        )]);
+        let report = report_bytes_gate_sources(&cfg, &baseline).unwrap();
+        assert!(
+            report.starts_with("bytes gate sources (1 analyzer, 1 analytic, 1 custom)"),
+            "{report}"
+        );
+    }
+
+    #[test]
+    fn committed_baseline_bytes_are_analyzer_exact() {
+        // Satellite guard: every committed `total_shuffle_bytes` gate in
+        // BENCH_spin.json is the analyzer's exact ceiling — nobody has to
+        // trust a hand-derived constant again.
+        let baseline = Json::from_file(std::path::Path::new(concat!(
+            env!("CARGO_MANIFEST_DIR"),
+            "/../BENCH_spin.json"
+        )))
+        .unwrap();
+        let report = report_bytes_gate_sources(&ClusterConfig::paper(), &baseline).unwrap();
+        assert!(
+            report.contains("(36 analyzer, 0 analytic, 0 custom)"),
+            "{report}"
+        );
     }
 
     #[test]

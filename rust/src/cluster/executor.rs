@@ -29,6 +29,12 @@ impl WorkerPool {
 
     /// Apply `f` to every task input, returning outputs (input order
     /// preserved) and measured per-task durations in seconds.
+    //
+    // unwrap/expect here are invariant-backed: the atomic index hands each
+    // slot to exactly one thread, nothing panics while a slot lock is held
+    // (the guard drops before `f` runs), and a panic inside `f` re-raises
+    // out of `thread::scope` before the joins below ever read the slots.
+    #[allow(clippy::unwrap_used, clippy::expect_used)]
     pub fn run_tasks<T: Send, U: Send>(
         &self,
         tasks: Vec<T>,

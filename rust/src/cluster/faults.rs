@@ -182,7 +182,7 @@ impl FaultPlan {
     /// identically at any `exec_threads`.
     pub fn apply_at(&self, stage: u64, measured: &[f64]) -> StageFaultOutcome {
         let mut sorted: Vec<f64> = measured.to_vec();
-        sorted.sort_by(|a, b| a.partial_cmp(b).expect("durations are finite"));
+        sorted.sort_by(|a, b| a.total_cmp(b));
         let median = if sorted.is_empty() {
             0.0
         } else {

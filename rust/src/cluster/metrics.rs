@@ -313,7 +313,7 @@ fn enforce_history(inner: &mut MetricsInner) {
             .filter_map(|(&scope, rec)| rec.stages.front().map(|(seq, _)| (*seq, scope)))
             .min();
         let Some((_, scope)) = oldest else { break };
-        let rec = inner.scopes.get_mut(&scope).expect("scope exists");
+        let Some(rec) = inner.scopes.get_mut(&scope) else { break };
         rec.stages.pop_front();
         inner.retained_stages -= 1;
         inner.released_stages += 1;
@@ -325,7 +325,7 @@ fn enforce_history(inner: &mut MetricsInner) {
             .filter_map(|(&scope, rec)| rec.plan_nodes.front().map(|(seq, _)| (*seq, scope)))
             .min();
         let Some((_, scope)) = oldest else { break };
-        let rec = inner.scopes.get_mut(&scope).expect("scope exists");
+        let Some(rec) = inner.scopes.get_mut(&scope) else { break };
         rec.plan_nodes.pop_front();
         inner.retained_plan_nodes -= 1;
     }
@@ -812,7 +812,7 @@ impl MetricsSnapshot {
     }
 
     pub fn to_json(&self) -> Json {
-        let methods: std::collections::BTreeMap<String, Json> = self
+        let methods: BTreeMap<String, Json> = self
             .methods
             .iter()
             .map(|(k, s)| {

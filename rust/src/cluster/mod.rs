@@ -67,6 +67,7 @@ use std::sync::{Arc, Mutex};
 
 use crate::config::ClusterConfig;
 use crate::exec::{ExecPool, StageExecStats};
+use crate::util::plock;
 
 /// A simulated Spark cluster: topology + task execution + virtual clock +
 /// metrics. One `Cluster` corresponds to one Spark application context.
@@ -137,13 +138,13 @@ impl Cluster {
 
     /// Current virtual wall-clock seconds consumed by this cluster.
     pub fn virtual_secs(&self) -> f64 {
-        self.vclock.lock().unwrap().now()
+        plock(&self.vclock).now()
     }
 
     /// Reset the virtual clock and metrics (new measurement window).
     pub fn reset(&self) {
-        self.vclock.lock().unwrap().reset();
-        *self.pending_shuffle.lock().unwrap() = 0.0;
+        plock(&self.vclock).reset();
+        *plock(&self.pending_shuffle) = 0.0;
         self.metrics.reset();
     }
 
@@ -502,11 +503,7 @@ impl Cluster {
         self.run_narrow(method, buckets, |part| {
             shuffle::group_pairs(part)
                 .into_iter()
-                .map(|(k, vals)| {
-                    let mut it = vals.into_iter();
-                    let first = it.next().expect("group is non-empty");
-                    (k, it.fold(first, &reduce))
-                })
+                .filter_map(|(k, vals)| vals.into_iter().reduce(&reduce).map(|v| (k, v)))
                 .collect()
         })
         .with_partitioner(target)
@@ -548,8 +545,8 @@ impl Cluster {
         }
         let makespan = list_schedule_makespan(&durations, self.slots());
         // Overlap any pending shuffle transfer with this stage's execution.
-        let pending = std::mem::take(&mut *self.pending_shuffle.lock().unwrap());
-        self.vclock.lock().unwrap().advance(makespan.max(pending));
+        let pending = std::mem::take(&mut *plock(&self.pending_shuffle));
+        plock(&self.vclock).advance(makespan.max(pending));
         self.metrics.record_stage(StageReport {
             method: method.to_string(),
             tasks: ntasks,
@@ -644,7 +641,7 @@ impl Cluster {
                 .network
                 .transfer_secs((moved_bytes / executors.max(1) as u64).max(1))
         };
-        *self.pending_shuffle.lock().unwrap() += secs;
+        *plock(&self.pending_shuffle) += secs;
         self.metrics.record_stage(StageReport {
             method: method.to_string(),
             tasks: 0,
@@ -683,7 +680,7 @@ impl Cluster {
                 input,
                 np,
                 executors,
-                |(k, _)| shuffle::hash_partition(k, np),
+                |(k, _)| hash_partition(k, np),
                 |(_, v)| v.size_bytes(),
             ),
             None => {
@@ -713,7 +710,7 @@ impl Cluster {
                 wall_ns += pool.sleep_parallel(&sleeps);
             }
         }
-        self.vclock.lock().unwrap().advance(dt);
+        plock(&self.vclock).advance(dt);
         self.metrics.record_stage(StageReport {
             method: method.to_string(),
             tasks: 1,

@@ -17,11 +17,12 @@ pub fn list_schedule_makespan(durations: &[f64], slots: usize) -> f64 {
     let mut slot_free = vec![0.0f64; slots.min(durations.len())];
     for &d in durations {
         // earliest-free slot
-        let (idx, _) = slot_free
+        let idx = slot_free
             .iter()
             .enumerate()
-            .min_by(|a, b| a.1.partial_cmp(b.1).unwrap())
-            .unwrap();
+            .min_by(|a, b| a.1.total_cmp(b.1))
+            .map(|(i, _)| i)
+            .unwrap_or(0);
         slot_free[idx] += d;
     }
     slot_free.into_iter().fold(0.0, f64::max)

@@ -254,9 +254,9 @@ pub fn group_pairs<K: Hash + Eq + Clone, V>(pairs: Vec<(K, V)>) -> Vec<(K, Vec<V
     }
     order
         .into_iter()
-        .map(|k| {
-            let vs = groups.remove(&k).unwrap();
-            (k, vs)
+        .filter_map(|k| {
+            let vs = groups.remove(&k)?;
+            Some((k, vs))
         })
         .collect()
 }

@@ -160,6 +160,15 @@ pub struct ClusterConfig {
     /// no transpose pushdown, no scalar folding, no CSE — which is the
     /// measurable "unfused plan" arm of the Table-3 comparison.
     pub plan_optimizer: bool,
+    /// Debug mode: cross-check the static plan verifier's predictions
+    /// (`spin::analysis`) against measured `Metrics` counters after every
+    /// plan node, failing the job on divergence — measured exchange
+    /// stages must equal the prediction, shuffle bytes must stay under
+    /// the derived ceiling, and the partitioner-aware dataflow must never
+    /// collect to the driver. Off by default (it brackets every node with
+    /// a metrics snapshot). CLI: `--set verify_plans=true`; env default:
+    /// `SPIN_VERIFY_PLANS`.
+    pub verify_plans: bool,
     /// Byte budget for memoized plan-node values (0 = unlimited). Above
     /// the budget, the session's LRU evictor drops least-recently-used
     /// unpinned values; evicted nodes recompute bit-identically on the
@@ -246,6 +255,17 @@ fn default_exec_threads() -> usize {
         .unwrap_or(1)
 }
 
+/// Default for the `verify_plans` debug mode: `SPIN_VERIFY_PLANS` set to
+/// `1` or `true` arms it fleet-wide (the CI plan-lint job does this), else
+/// off. Same contract as the other env-seeded defaults: an explicit
+/// `verify_plans` (builder, config file, `--set verify_plans=true`) wins.
+fn default_verify_plans() -> bool {
+    matches!(
+        std::env::var("SPIN_VERIFY_PLANS").as_deref(),
+        Ok("1") | Ok("true")
+    )
+}
+
 impl ClusterConfig {
     /// Single-node local "cluster" with `cores` slots — unit-test topology.
     pub fn local(cores: usize) -> Self {
@@ -264,6 +284,7 @@ impl ClusterConfig {
             virtual_time: true,
             partitioner_aware: true,
             plan_optimizer: true,
+            verify_plans: default_verify_plans(),
             cache_budget_bytes: 0,
             metrics_history: 0,
             fault_seed: None,
@@ -296,6 +317,7 @@ impl ClusterConfig {
             virtual_time: true,
             partitioner_aware: true,
             plan_optimizer: true,
+            verify_plans: default_verify_plans(),
             cache_budget_bytes: 0,
             metrics_history: 0,
             fault_seed: None,
@@ -375,6 +397,7 @@ impl ClusterConfig {
             ("virtual_time", Json::Bool(self.virtual_time)),
             ("partitioner_aware", Json::Bool(self.partitioner_aware)),
             ("plan_optimizer", Json::Bool(self.plan_optimizer)),
+            ("verify_plans", Json::Bool(self.verify_plans)),
             (
                 "cache_budget_bytes",
                 Json::num(self.cache_budget_bytes as f64),
@@ -470,6 +493,12 @@ impl ClusterConfig {
                     .as_bool()
                     .ok_or_else(|| SpinError::config("`plan_optimizer` must be a bool"))?,
             },
+            verify_plans: match v.get("verify_plans") {
+                None => base.verify_plans,
+                Some(j) => j
+                    .as_bool()
+                    .ok_or_else(|| SpinError::config("`verify_plans` must be a bool"))?,
+            },
             cache_budget_bytes: match v.get("cache_budget_bytes") {
                 None => base.cache_budget_bytes,
                 Some(j) => j.as_i64().and_then(|n| u64::try_from(n).ok()).ok_or_else(
@@ -549,6 +578,11 @@ impl ClusterConfig {
                 self.plan_optimizer = value
                     .parse::<bool>()
                     .map_err(|_| SpinError::config("plan_optimizer needs true|false"))?
+            }
+            "verify_plans" => {
+                self.verify_plans = value
+                    .parse::<bool>()
+                    .map_err(|_| SpinError::config("verify_plans needs true|false"))?
             }
             "cache_budget_bytes" => {
                 self.cache_budget_bytes = value.parse::<u64>().map_err(|_| {
@@ -973,6 +1007,7 @@ mod tests {
         c.exec_threads = 4;
         c.partitioner_aware = false;
         c.plan_optimizer = false;
+        c.verify_plans = true;
         c.cache_budget_bytes = 1 << 20;
         c.metrics_history = 500;
         c.fault_seed = Some(0xC0FFEE);
@@ -1057,6 +1092,9 @@ mod tests {
         assert_eq!(c.backend, BackendKind::Xla);
         c.apply_override("plan_optimizer=false").unwrap();
         assert!(!c.plan_optimizer);
+        c.apply_override("verify_plans=true").unwrap();
+        assert!(c.verify_plans);
+        assert!(c.apply_override("verify_plans=maybe").is_err());
         c.apply_override("cache_budget_bytes=65536").unwrap();
         assert_eq!(c.cache_budget_bytes, 65536);
         assert!(c.apply_override("cache_budget_bytes=lots").is_err());

@@ -97,6 +97,46 @@ pub(crate) fn pf(tasks: f64, cores: usize) -> f64 {
     tasks.min(cores as f64).max(1.0)
 }
 
+/// Closed-form distributed multiply-round counts per algorithm at grid
+/// `b` (each round = one multiply/multiply_sub node = 2 exchange stages),
+/// mirrored from the lemma recursion trees: Lemma 4.1's six half-grid
+/// products per SPIN level over two recursive calls (`S(g) = 2S(g/2) + 6`
+/// ⇒ `6·(b − 1)`), Lemma 4.2's three factor-level products plus two per
+/// triangular level plus the final full-size product, the Cholesky
+/// variant with one triangular inversion and a two-product factor level,
+/// and Newton's two products per pass less the skipped final update.
+///
+/// `max_iters` applies to `newton` only. `None` for unknown algorithms.
+/// The static plan verifier (`spin lint`) cross-checks the counts it
+/// derives from plan structure against these forms.
+pub fn analytic_multiply_rounds(algo: &str, b: usize, max_iters: usize) -> Option<usize> {
+    fn tri(b: usize) -> usize {
+        if b <= 1 {
+            return 0;
+        }
+        2 * tri(b / 2) + 2
+    }
+    fn lu_factor(b: usize) -> usize {
+        if b <= 1 {
+            return 0;
+        }
+        2 * lu_factor(b / 2) + 2 * tri(b / 2) + 3
+    }
+    fn chol_factor(b: usize) -> usize {
+        if b <= 1 {
+            return 0;
+        }
+        2 * chol_factor(b / 2) + tri(b / 2) + 2
+    }
+    match algo {
+        "spin" => Some(6 * b.saturating_sub(1)),
+        "lu" => Some(lu_factor(b) + 2 * tri(b) + 1),
+        "cholesky" => Some(chol_factor(b) + tri(b) + 1),
+        "newton" => Some(2 * max_iters.saturating_sub(1) + 1),
+        _ => None,
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

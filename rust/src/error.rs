@@ -29,6 +29,9 @@ pub enum SpinError {
 
     /// Scheduler / executor / shuffle failures in the cluster substrate.
     Cluster(String),
+
+    /// Static plan-verifier violations (`spin lint`, `verify_plans`).
+    Plan(String),
 }
 
 impl fmt::Display for SpinError {
@@ -44,6 +47,7 @@ impl fmt::Display for SpinError {
             SpinError::Artifact(msg) => write!(f, "artifact error: {msg}"),
             SpinError::Xla(msg) => write!(f, "xla error: {msg}"),
             SpinError::Cluster(msg) => write!(f, "cluster error: {msg}"),
+            SpinError::Plan(msg) => write!(f, "plan verification error: {msg}"),
         }
     }
 }
@@ -92,5 +96,9 @@ impl SpinError {
 
     pub fn cluster(msg: impl Into<String>) -> Self {
         SpinError::Cluster(msg.into())
+    }
+
+    pub fn plan(msg: impl Into<String>) -> Self {
+        SpinError::Plan(msg.into())
     }
 }

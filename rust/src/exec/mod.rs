@@ -186,6 +186,10 @@ pub struct ExecPool {
 impl ExecPool {
     /// Build a private pool with `threads` execution lanes
     /// (`threads − 1` dedicated workers; the submitter is the last lane).
+    //
+    // expect is confined to worker-thread spawning: the pool is built at
+    // process/cluster startup, where failing to spawn is unrecoverable.
+    #[allow(clippy::expect_used)]
     pub fn new(threads: usize) -> Arc<ExecPool> {
         let threads = threads.max(1);
         let shared = Arc::new(Shared {
@@ -236,6 +240,11 @@ impl ExecPool {
     /// per-task measured seconds in submission order. Blocks until every
     /// task has finished; if any task panicked, the first payload is
     /// re-thrown here (on the submitting thread) after the rest complete.
+    //
+    // expect is invariant-backed: the latch releases only after every
+    // task wrote its slot (or recorded a panic, which re-raises before
+    // the slots are read).
+    #[allow(clippy::expect_used)]
     pub fn run_stage<T: Send, U: Send>(
         &self,
         tasks: Vec<T>,

@@ -126,9 +126,9 @@ pub fn check_shape(rows: &[Figure3Row], require_u: bool) -> std::result::Result<
             let argmin = times
                 .iter()
                 .enumerate()
-                .min_by(|a, b| a.1.partial_cmp(b.1).unwrap())
-                .unwrap()
-                .0;
+                .min_by(|a, b| a.1.total_cmp(b.1))
+                .map(|(i, _)| i)
+                .unwrap_or(0);
             if argmin == times.len() - 1 {
                 return Err(format!(
                     "n={n}: no rising arm — min at the largest b ({times:?})"

@@ -174,9 +174,9 @@ pub fn check_shape(cols: &[Table3Column]) -> std::result::Result<(), String> {
         let argmin = totals
             .iter()
             .enumerate()
-            .min_by(|a, b| a.1.partial_cmp(b.1).unwrap())
-            .unwrap()
-            .0;
+            .min_by(|a, b| a.1.total_cmp(b.1))
+            .map(|(i, _)| i)
+            .unwrap_or(0);
         if argmin == 0 || argmin == totals.len() - 1 {
             return Err(format!("total not U-shaped: {totals:?}"));
         }

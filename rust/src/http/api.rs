@@ -35,6 +35,9 @@ pub(crate) fn route(state: &ServerState, request: &Request) -> Reply {
         ["v1", "jobs", id, "explain"] if method == "GET" => {
             plain(with_id(id, |id| explain(state, id)))
         }
+        ["v1", "jobs", id, "analysis"] if method == "GET" => {
+            plain(with_id(id, |id| analysis(state, id)))
+        }
         ["v1", "jobs", id, "metrics"] if method == "GET" => {
             plain(with_id(id, |id| job_metrics(state, id)))
         }
@@ -250,6 +253,53 @@ fn explain(state: &ServerState, id: u64) -> Response {
                 ("explain", Json::str(text)),
             ]),
         ),
+        Err(e) => Response::error(500, &e.to_string()),
+    }
+}
+
+/// Static-verifier verdict for a job's plan, plus — once the job has
+/// completed — its measured shuffle totals and whether they stayed within
+/// the prediction. Measured may legitimately run *under* the prediction
+/// (plan-cache sharing skips already-materialized subtrees; iterative
+/// schemes may converge early), so divergence means `measured > predicted`.
+fn analysis(state: &ServerState, id: u64) -> Response {
+    let Some(handle) = state.service.job(id) else {
+        return match state.recovered.get(&id) {
+            Some(_) => Response::error(404, &format!("job {id} finished before the last restart; its plan is not retained")),
+            None => Response::error(404, &format!("unknown job {id}")),
+        };
+    };
+    match handle.analysis() {
+        Ok(verdict) => {
+            let mut fields = vec![
+                ("id", Json::num(id as f64)),
+                ("analysis", verdict.to_json()),
+            ];
+            if let Some(outcome) = handle.outcome() {
+                let stages = outcome.metrics.total_shuffle_stages();
+                let bytes = outcome.metrics.total_shuffle_bytes();
+                let predicted = verdict.analysis.total;
+                fields.push((
+                    "measured",
+                    Json::object(vec![
+                        ("shuffle_stages", Json::num(stages as f64)),
+                        ("shuffle_bytes", Json::num(bytes as f64)),
+                        (
+                            "driver_collects",
+                            Json::num(outcome.metrics.driver_collects() as f64),
+                        ),
+                    ]),
+                ));
+                fields.push((
+                    "within_prediction",
+                    Json::Bool(
+                        stages <= predicted.exchange_stages
+                            && bytes <= predicted.shuffle_bytes_ceiling,
+                    ),
+                ));
+            }
+            Response::json(200, &Json::object(fields))
+        }
         Err(e) => Response::error(500, &e.to_string()),
     }
 }

@@ -113,8 +113,7 @@ impl HttpServer {
             let stop = Arc::clone(&stop);
             thread::Builder::new()
                 .name("spin-http-accept".to_string())
-                .spawn(move || accept_loop(listener, state, stop))
-                .expect("spawn http accept thread")
+                .spawn(move || accept_loop(listener, state, stop))?
         };
         Ok(HttpServer {
             addr,

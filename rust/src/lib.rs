@@ -133,6 +133,34 @@
 //! `BlockMatrix` methods; PR 2's hand-fused Schur step is now just the
 //! fusion rule.
 //!
+//! ## Static plan verification
+//!
+//! The [`analysis`] module proves a plan's standing contracts **before
+//! it runs**: geometry/partitioner propagation, rewrite and lifecycle
+//! soundness, and the exact distributed cost — stage and collect counts
+//! as equalities (iteration ceilings for `newton`), shuffle bytes as a
+//! proved upper bound. `spin lint` sweeps the whole corpus from the CLI
+//! (the CI `plan-lint` job gates on it), `spin explain --verify` checks
+//! one plan, and `--set verify_plans=true` arms a per-node runtime
+//! cross-check that fails any job diverging from the proof. In code:
+//!
+//! ```no_run
+//! fn main() -> spin::Result<()> {
+//!     let session = spin::SpinSession::local(4)?;
+//!     // No matrix exists and nothing executes — the verdict is a
+//!     // property of the optimized plan alone.
+//!     let verdict = session.analyze_invert("spin", 256, 64)?;
+//!     assert!(verdict.ok());
+//!     // b = 4 grid: 6(b−1) = 18 multiply rounds, 2 exchanges each.
+//!     assert_eq!(verdict.analysis.total.exchange_stages, 36);
+//!     println!("{}", verdict.to_json().pretty());
+//!     Ok(())
+//! }
+//! ```
+//!
+//! See `docs/ANALYSIS.md` for what is proved vs sampled and the derived
+//! cost model.
+//!
 //! ## Layers
 //!
 //! * **Layer 3 (this crate)** — the coordinator: a Spark-like dataflow
@@ -150,7 +178,17 @@
 //! Python never runs on the request path: after `make artifacts` the `spin`
 //! binary is self-contained.
 
+// Lint ratchet (CI runs clippy with `-D warnings`): non-test library code
+// must not panic through `unwrap`/`expect` — fallible paths return
+// `SpinError`, and lock access goes through the poison-tolerant
+// `util::plock`/`util::pwait` wrappers (the sanctioned allow site).
+// Invariant-backed exceptions carry a scoped `#[allow]` stating the
+// invariant at the use site. Tests keep their unwraps.
+#![cfg_attr(not(test), warn(clippy::unwrap_used, clippy::expect_used))]
+#![warn(unused_qualifications)]
+
 pub mod algos;
+pub mod analysis;
 pub mod blockmatrix;
 pub mod cli;
 pub mod cluster;

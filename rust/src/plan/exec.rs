@@ -231,7 +231,7 @@ impl<'a> PlanExec<'a> {
         let before = self.cluster.metrics_totals_current();
         let out = f()?;
         let after = self.cluster.metrics_totals_current();
-        self.cluster.record_plan_node(PlanNodeReport {
+        let report = PlanNodeReport {
             node: format!("%{}", e.id()),
             op: e.op().name().to_string(),
             stages: after.stages.saturating_sub(before.stages),
@@ -239,8 +239,65 @@ impl<'a> PlanExec<'a> {
             shuffle_bytes: after.shuffle_bytes.saturating_sub(before.shuffle_bytes),
             driver_collects: after.driver_collects.saturating_sub(before.driver_collects),
             cse_cached: e.is_cse_cached(),
-        });
+        };
+        // Record before verifying so a divergence failure still leaves the
+        // offending node's measured counters in the metrics registry.
+        let verify = {
+            let cfg = self.cluster.config();
+            cfg.verify_plans && cfg.partitioner_aware
+        };
+        if verify {
+            let check = self.verify_node(e, &report);
+            self.cluster.record_plan_node(report);
+            check?;
+        } else {
+            self.cluster.record_plan_node(report);
+        }
         Ok(out)
+    }
+
+    /// The `verify_plans` debug mode: compare this node's measured metric
+    /// deltas against the static verifier's predictions
+    /// ([`crate::plan::predicted_exchanges`],
+    /// [`crate::analysis::node_shuffle_bytes_ceiling`]) and fail the job
+    /// on divergence. `Invert` windows aggregate a whole nested recursion
+    /// whose own plan nodes are verified individually as they run, so
+    /// they are skipped here; whole-recursion totals are covered by the
+    /// analyzer's unfolded profiles and their tests.
+    fn verify_node(&self, e: &MatExpr, rep: &PlanNodeReport) -> Result<()> {
+        if matches!(e.op(), ExprOp::Invert { .. }) {
+            return Ok(());
+        }
+        let predicted = super::predicted_exchanges(e.op(), true).unwrap_or(0);
+        if rep.shuffle_stages != predicted {
+            return Err(SpinError::plan(format!(
+                "verify_plans: node %{} ({}) paid {} exchange stages, predicted {}",
+                e.id(),
+                e.op().name(),
+                rep.shuffle_stages,
+                predicted
+            )));
+        }
+        let ceiling = crate::analysis::node_shuffle_bytes_ceiling(e.op(), e.nblocks(), e.n(), true);
+        if rep.shuffle_bytes > ceiling {
+            return Err(SpinError::plan(format!(
+                "verify_plans: node %{} ({}) moved {} shuffle bytes, ceiling {}",
+                e.id(),
+                e.op().name(),
+                rep.shuffle_bytes,
+                ceiling
+            )));
+        }
+        if rep.driver_collects != 0 {
+            return Err(SpinError::plan(format!(
+                "verify_plans: node %{} ({}) collected to the driver {} times; the \
+                 partitioner-aware dataflow must never collect",
+                e.id(),
+                e.op().name(),
+                rep.driver_collects
+            )));
+        }
+        Ok(())
     }
 }
 

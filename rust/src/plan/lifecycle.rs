@@ -235,11 +235,12 @@ fn enforce(inner: &mut Inner) -> EvictionReport {
         match node {
             Some(node) => match node.value.try_lock() {
                 Ok(mut slot) => {
-                    let entry = inner.entries.remove(&id).expect("victim is tracked");
-                    inner.resident = inner.resident.saturating_sub(entry.bytes);
-                    if slot.take().is_some() {
-                        report.evicted += 1;
-                        report.bytes += entry.bytes;
+                    if let Some(entry) = inner.entries.remove(&id) {
+                        inner.resident = inner.resident.saturating_sub(entry.bytes);
+                        if slot.take().is_some() {
+                            report.evicted += 1;
+                            report.bytes += entry.bytes;
+                        }
                     }
                 }
                 // In use right now: keep it tracked, try another victim.
@@ -248,8 +249,9 @@ fn enforce(inner: &mut Inner) -> EvictionReport {
                 }
             },
             None => {
-                let entry = inner.entries.remove(&id).expect("victim is tracked");
-                inner.resident = inner.resident.saturating_sub(entry.bytes);
+                if let Some(entry) = inner.entries.remove(&id) {
+                    inner.resident = inner.resident.saturating_sub(entry.bytes);
+                }
             }
         }
     }

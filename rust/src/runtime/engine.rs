@@ -121,7 +121,11 @@ impl Engine {
         }
 
         let cache = self.cache.borrow();
-        let exe = cache.get(&(op.to_string(), block_size)).expect("just compiled");
+        let exe = cache.get(&(op.to_string(), block_size)).ok_or_else(|| {
+            SpinError::artifact(format!(
+                "kernel for `{op}` at block size {block_size} missing after compile"
+            ))
+        })?;
         let result = exe.execute::<xla::Literal>(&args)?[0][0].to_literal_sync()?;
         drop(cache);
 

@@ -55,7 +55,7 @@ pub fn read_matrix(path: &Path) -> Result<Matrix> {
     r.read_exact(&mut bytes)?;
     let data: Vec<f64> = bytes
         .chunks_exact(8)
-        .map(|c| f64::from_le_bytes(c.try_into().unwrap()))
+        .map(|c| f64::from_le_bytes([c[0], c[1], c[2], c[3], c[4], c[5], c[6], c[7]]))
         .collect();
     Matrix::from_vec(rows, cols, data)
 }

@@ -435,7 +435,8 @@ impl<'a> Parser<'a> {
                 self.bump();
             }
         }
-        let text = std::str::from_utf8(&self.bytes[start..self.pos]).unwrap();
+        // The scanned range is ASCII digits/sign/exponent by construction.
+        let text = std::str::from_utf8(&self.bytes[start..self.pos]).unwrap_or("");
         text.parse::<f64>()
             .map(Json::Number)
             .map_err(|_| self.err(format!("invalid number `{text}`")))

@@ -357,6 +357,15 @@ impl JobHandle {
         self.inner.session.explain_expr(&self.state.expr)
     }
 
+    /// Run the static plan verifier on this job's plan (no execution):
+    /// proved geometry, derived cost profile, rewrite- and
+    /// lifecycle-soundness — the engine behind
+    /// `GET /v1/jobs/:id/analysis`. Valid at any phase; the prediction is
+    /// a property of the plan, not of the run.
+    pub fn analysis(&self) -> Result<crate::analysis::PlanVerdict> {
+        self.inner.session.analyze_expr(&self.state.expr)
+    }
+
     /// Blocks of this job's plan that were materialized **on the driver**
     /// at submit. Always 0 for spec-described inputs — the lazy-leaf
     /// invariant `spin bench` measures and gates per run.
@@ -898,9 +907,8 @@ impl ServiceBuilder {
                 thread::Builder::new()
                     .name(format!("spin-service-{i}"))
                     .spawn(move || worker_loop(inner))
-                    .expect("spawn service worker thread")
             })
-            .collect();
+            .collect::<std::io::Result<Vec<_>>>()?;
         Ok(SpinService { inner, workers })
     }
 }
@@ -1062,7 +1070,7 @@ impl SpinService {
             if std::time::Instant::now() >= deadline {
                 return false;
             }
-            std::thread::sleep(std::time::Duration::from_millis(20));
+            thread::sleep(std::time::Duration::from_millis(20));
         }
     }
 

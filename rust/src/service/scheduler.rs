@@ -78,11 +78,13 @@ impl<T> FairShareQueue<T> {
                 self.rr.push_back(tenant);
                 continue;
             }
-            let queue = self
-                .queues
-                .get_mut(&tenant)
-                .expect("rr names a tenant with a queue");
-            let item = queue.pop_front().expect("rr names a non-empty queue");
+            let Some(queue) = self.queues.get_mut(&tenant) else {
+                continue;
+            };
+            let Some(item) = queue.pop_front() else {
+                self.queues.remove(&tenant);
+                continue;
+            };
             if queue.is_empty() {
                 self.queues.remove(&tenant);
             } else {
@@ -100,7 +102,7 @@ impl<T> FairShareQueue<T> {
     pub fn remove_where(&mut self, tenant: &str, pred: impl Fn(&T) -> bool) -> Option<T> {
         let queue = self.queues.get_mut(tenant)?;
         let pos = queue.iter().position(pred)?;
-        let item = queue.remove(pos).expect("position is in range");
+        let item = queue.remove(pos)?;
         if queue.is_empty() {
             self.queues.remove(tenant);
             self.rr.retain(|name| name != tenant);

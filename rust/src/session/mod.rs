@@ -44,6 +44,7 @@ pub use crate::algos::{AlgorithmRegistry, InversionAlgorithm};
 use std::path::PathBuf;
 use std::sync::Arc;
 
+use crate::analysis::{self, AlgoModel, AnalysisContext, PlanVerdict};
 use crate::blockmatrix::{Block, BlockMatrix};
 use crate::cluster::{Cluster, MetricsSnapshot};
 use crate::config::{BackendKind, ClusterConfig, GeneratorKind, JobConfig, LeafMethod};
@@ -327,7 +328,7 @@ impl SpinSession {
     /// [`crate::store::LocalDirStore`]), as a lazy handle: only
     /// `meta.json` is read here; block files are read per-partition on
     /// the workers at first materialization.
-    pub fn from_store(&self, dir: impl Into<std::path::PathBuf>) -> Result<DistMatrix<'_>> {
+    pub fn from_store(&self, dir: impl Into<PathBuf>) -> Result<DistMatrix<'_>> {
         Ok(self.wrap_expr(MatExpr::lazy_source(SourceSpec::from_dir(dir)?)?))
     }
 
@@ -508,6 +509,61 @@ impl SpinSession {
             }
         }
         Ok(out)
+    }
+
+    // ---------- static plan verification ----------
+
+    /// Run the static plan verifier (see [`crate::analysis`]) on an
+    /// expression without executing it: prove geometry/partitioner
+    /// propagation, derive the exchange-stage/shuffle-byte cost profile
+    /// (unfolding recursive `invert` nodes through the registry's
+    /// published [`AlgoModel`]s), diff the optimized plan against the raw
+    /// plan for rewrite soundness, and prove the eviction-closure
+    /// contract.
+    pub fn analyze_expr(&self, expr: &MatExpr) -> Result<PlanVerdict> {
+        let optimized = self.canonical(expr)?;
+        let aware = self.config().partitioner_aware;
+        let resolve = |name: &str| -> Option<AlgoModel> {
+            self.registry.get(name).ok().and_then(|s| s.analysis_model())
+        };
+        let ctx = AnalysisContext {
+            resolve: &resolve,
+            optimizer: self.optimizer_config(),
+            partitioner_aware: aware,
+            default_max_iters: self.defaults.max_iters,
+        };
+        let verdict = PlanVerdict {
+            analysis: analysis::analyze_plan(&optimized, &ctx)?,
+            rewrite_violations: analysis::rewrite_soundness(expr, &optimized, aware),
+            lifecycle: analysis::lifecycle_soundness(&optimized),
+        };
+        Ok(verdict)
+    }
+
+    /// [`analyze_expr`](Self::analyze_expr) for one named inversion at a
+    /// given geometry, without touching matrix data: the plan is built
+    /// over a lazily-generated source spec, so linting n = 65536 is as
+    /// cheap as linting n = 64. The engine behind `spin lint` and
+    /// `spin explain --verify`.
+    pub fn analyze_invert(
+        &self,
+        algorithm: &str,
+        n: usize,
+        block_size: usize,
+    ) -> Result<PlanVerdict> {
+        self.registry.get(algorithm)?; // fail fast on unknown names
+        if block_size == 0 || n == 0 || n % block_size != 0 {
+            return Err(SpinError::shape(format!(
+                "analyze: block size {block_size} does not divide n {n}"
+            )));
+        }
+        let src = MatExpr::lazy_source(SourceSpec::Generated {
+            n,
+            block_size,
+            seed: self.defaults.seed,
+            generator: self.defaults.generator,
+        })?;
+        self.analyze_expr(&src.invert(algorithm))
     }
 
     /// Register an extra inversion scheme after construction.

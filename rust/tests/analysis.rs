@@ -1,0 +1,181 @@
+//! Acceptance tests for the static plan verifier (`spin::analysis`).
+//!
+//! The analyzer's derived cost profiles are **contracts**, not estimates:
+//! exchange-stage and collect counts are equalities (ceilings for
+//! iterative schemes), shuffle bytes are proved upper bounds. Every test
+//! here holds a prediction made *before* execution against what a real
+//! run measured — across block sizes, executor widths, and deterministic
+//! fault injection, with the `verify_plans` per-node runtime cross-check
+//! armed the whole time.
+
+use spin::config::ClusterConfig;
+use spin::service::{JobSpec, MatrixSpec, SpinService};
+use spin::session::SpinSession;
+
+const N: usize = 128;
+
+/// A 4-slot local cluster with chaos on (panics, task errors,
+/// stragglers), a generous retry budget, and the `verify_plans` debug
+/// mode armed: every executed plan node fails its job if its measured
+/// stages/bytes/collects diverge from the static prediction.
+fn chaos_config(exec_threads: usize, fault_seed: u64) -> ClusterConfig {
+    let mut cfg = ClusterConfig::local(4);
+    cfg.exec_threads = exec_threads;
+    cfg.verify_plans = true;
+    cfg.fault_seed = Some(fault_seed);
+    cfg.fault_rate = 0.1;
+    cfg.task_retries = 5;
+    cfg
+}
+
+/// The tentpole property: analyzer-predicted stage counts equal measured
+/// `shuffle_stages` for every built-in scheme at n=128, bs ∈ {16, 32},
+/// exec_threads ∈ {1, 4}, under fault-injection chaos — retries and
+/// speculation re-run tasks, never stages, so recovery must not move the
+/// deterministic counters off the static prediction. Exact schemes are
+/// equalities; `newton` is an iteration-budget ceiling whose measured
+/// count must still satisfy the per-pass structure (4k − 2 stages for k
+/// recorded iterations). Byte totals must stay under the proved ceiling
+/// and driver collects must be exactly the predicted zero.
+#[test]
+fn predicted_costs_match_measured_runs_under_chaos() {
+    let mut total_retries = 0usize;
+    for exec_threads in [1usize, 4] {
+        for (geo, block_size) in [16usize, 32].into_iter().enumerate() {
+            let fault_seed = 0xA11A + (exec_threads * 10 + geo) as u64;
+            let service = SpinService::builder()
+                .cluster_config(chaos_config(exec_threads, fault_seed))
+                .workers(2)
+                .build()
+                .unwrap();
+            for algo in ["spin", "lu", "cholesky", "newton"] {
+                let matrix = if algo == "cholesky" {
+                    MatrixSpec::new(N, block_size).seeded(0x5EED).spd()
+                } else {
+                    MatrixSpec::new(N, block_size).seeded(0x5EED)
+                };
+                let handle = service
+                    .submit(JobSpec::invert(matrix).algorithm(algo).label(algo))
+                    .unwrap();
+
+                // The prediction is a property of the plan, not the run:
+                // taken here, before the job executes.
+                let verdict = handle.analysis().unwrap();
+                assert!(
+                    verdict.ok(),
+                    "{algo} bs={block_size}: verifier found violations: {:?}",
+                    verdict.violations()
+                );
+                let predicted = verdict.analysis.total;
+                assert_eq!(predicted.driver_collects, 0, "{algo}: plans never collect");
+
+                // `verify_plans` is armed: a per-node divergence anywhere
+                // in the recursion fails the job right here.
+                let out = handle.wait().unwrap_or_else(|e| {
+                    panic!("{algo} bs={block_size} threads={exec_threads}: {e}")
+                });
+                let label = format!("{algo} bs={block_size} threads={exec_threads}");
+                assert!(
+                    out.residual.unwrap() < 1e-6,
+                    "{label}: residual {:?}",
+                    out.residual
+                );
+
+                let stages = out.metrics.total_shuffle_stages();
+                if predicted.iterative_ceiling {
+                    assert!(
+                        stages <= predicted.exchange_stages,
+                        "{label}: measured {stages} stages above the {} ceiling",
+                        predicted.exchange_stages
+                    );
+                    // Each pass pays one A·X multiply plus (except the
+                    // last) one X·M update: 2 stages per multiply.
+                    let reports = out.metrics.convergence();
+                    assert_eq!(reports.len(), 1, "{label}: one convergence report");
+                    let iters = reports[0].iterations;
+                    assert_eq!(
+                        stages,
+                        4 * iters - 2,
+                        "{label}: {iters} iterations must pay exactly 4k-2 stages"
+                    );
+                } else {
+                    assert_eq!(
+                        stages, predicted.exchange_stages,
+                        "{label}: measured stages diverged from the proof"
+                    );
+                }
+                assert!(
+                    out.metrics.total_shuffle_bytes() <= predicted.shuffle_bytes_ceiling,
+                    "{label}: measured {} shuffle bytes above the proved ceiling {}",
+                    out.metrics.total_shuffle_bytes(),
+                    predicted.shuffle_bytes_ceiling
+                );
+                assert_eq!(out.metrics.driver_collects(), 0, "{label}: collect on the job path");
+            }
+            total_retries += service.metrics().resilience().retries;
+        }
+    }
+    // The chaos legs must actually have exercised recovery, or the
+    // "retries don't move the counters" half of the property is vacuous.
+    assert!(total_retries > 0, "fault injection never fired");
+}
+
+/// Golden stage/round table: the analyzer rederives the paper's closed
+/// forms from plan structure alone — spin 6(b−1) rounds, lu and cholesky
+/// their recurrences — at every grid the bench measures. These are the
+/// same numbers `docs/ALGORITHMS.md` cites and `BENCH_spin.json` gates.
+#[test]
+fn analyzer_reproduces_closed_form_stage_table() {
+    let session = SpinSession::local(4).unwrap();
+    let table: [(&str, [(usize, usize, usize); 3]); 3] = [
+        ("spin", [(2, 12, 6), (4, 36, 18), (8, 84, 42)]),
+        ("lu", [(2, 16, 8), (4, 52, 26), (8, 140, 70)]),
+        ("cholesky", [(2, 10, 5), (4, 30, 15), (8, 78, 39)]),
+    ];
+    for (algo, rows) in table {
+        for (b, stages, rounds) in rows {
+            let verdict = session.analyze_invert(algo, N, N / b).unwrap();
+            assert!(verdict.ok(), "{algo} b={b}: {:?}", verdict.violations());
+            let t = verdict.analysis.total;
+            assert_eq!(
+                (t.exchange_stages, t.multiply_rounds),
+                (stages, rounds),
+                "{algo} b={b}"
+            );
+            assert!(!t.iterative_ceiling, "{algo} is exact, not a ceiling");
+            assert_eq!(t.exchange_stages, 2 * t.multiply_rounds, "only multiplies shuffle");
+            assert_eq!(t.driver_collects, 0);
+            assert!(verdict.analysis.partitioner_proved, "{algo} b={b}");
+            assert!(verdict.analysis.opaque_inverts.is_empty(), "{algo} b={b}");
+        }
+    }
+    // Newton at the session's default budget (max_iters = 64): a
+    // 2·(2·64 − 1) = 254 exchange-stage SLA ceiling, flagged as such.
+    let verdict = session.analyze_invert("newton", N, 32).unwrap();
+    let t = verdict.analysis.total;
+    assert!(t.iterative_ceiling);
+    assert_eq!(t.exchange_stages, 4 * 64 - 2);
+    assert_eq!(t.multiply_rounds, 2 * 64 - 1);
+}
+
+/// Byte-ceiling goldens: the per-node bound `2·8·γ·m²` summed over the
+/// unfolded recursion collapses to `16·bs²·W(b)` with W the per-scheme
+/// cubic-weight recurrence — the exact values committed in
+/// `BENCH_spin.json`'s `total_shuffle_bytes` gate column.
+#[test]
+fn analyzer_byte_ceilings_match_committed_gate_values() {
+    let session = SpinSession::local(4).unwrap();
+    for (algo, bs, bytes) in [
+        ("spin", 16usize, 2_064_384u64),  // b=8: 16·256·504
+        ("spin", 32, 983_040),            // b=4: 16·1024·60
+        ("lu", 32, 2_260_992),            // b=4: 16·1024·138
+        ("cholesky", 32, 1_736_704),      // b=4: 16·1024·106
+    ] {
+        let verdict = session.analyze_invert(algo, N, bs).unwrap();
+        assert_eq!(
+            verdict.analysis.total.shuffle_bytes_ceiling,
+            bytes,
+            "{algo} bs={bs}"
+        );
+    }
+}
